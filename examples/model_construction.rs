@@ -1,0 +1,63 @@
+//! Model construction (paper §II-C): reproduce the FMA workflow.
+//!
+//! Benchmarks `vfmadd132pd mem,xmm,xmm` on the Zen and Skylake
+//! simulator substrates (latency, parallelism sweep, TP), probes port
+//! conflicts against vaddpd / vmulpd, deduces the port assignment, and
+//! prints the resulting database entry — exactly the §II-C narrative,
+//! mechanized.
+//!
+//! Run: `cargo run --release --example model_construction`
+
+use anyhow::Result;
+use osaca::builder::{default_probes, infer_entry};
+use osaca::ibench::{run_conflict, run_sweep, BenchSpec};
+use osaca::isa::InstructionForm;
+use osaca::mdb;
+
+fn main() -> Result<()> {
+    let form = InstructionForm::parse("vfmadd132pd-mem_xmm_xmm");
+    for arch in ["zen", "skl"] {
+        let machine = mdb::by_name(arch).unwrap();
+        println!("=== {} ===", machine.arch_name);
+
+        // §II-C parallelism sweep (the ibench output listing).
+        let sweep = run_sweep(&BenchSpec { form: form.clone() }, &machine)?;
+        print!("{}", sweep.render(machine.frequency_ghz));
+
+        // §II-B/C conflict probes.
+        for probe in ["vaddpd-xmm_xmm_xmm", "vmulpd-xmm_xmm_xmm"] {
+            let r = run_conflict(
+                &BenchSpec { form: form.clone() },
+                &BenchSpec::parse(probe),
+                &machine,
+            )?;
+            println!("{}:  {:.3} (clk cy)", r.label, r.cy_per_instr);
+        }
+
+        // Automated deduction -> database entry.
+        let probes = default_probes(&machine);
+        let inf = infer_entry(&form, &machine, &probes)?;
+        println!(
+            "deduced: lat {:.1} cy, rTP {:.2} cy/instr, conflicts {:?}",
+            inf.measured_latency, inf.measured_rtp, inf.conflicting_probes
+        );
+        let mut m2 = machine.clone();
+        m2.entries.clear();
+        m2.insert(inf.entry.clone());
+        for line in m2.serialize().lines().filter(|l| l.starts_with("entry")) {
+            println!("  {line}");
+        }
+        // Compare with the shipped (ground-truth) database entry.
+        if let Some(db) = machine.entries.get(&form) {
+            println!(
+                "  shipped entry: lat {} tp {} ({} µ-ops) — match: {}",
+                db.latency,
+                db.implied_rtp(),
+                db.uops.len(),
+                (db.implied_rtp() as f64 - inf.measured_rtp).abs() < 0.1
+            );
+        }
+        println!();
+    }
+    Ok(())
+}

@@ -1,0 +1,62 @@
+//! The π-benchmark study (paper §III-B): predictions vs measurement at
+//! -O1/-O2/-O3, the stall-counter investigation of the -O1 anomaly, and
+//! the critical-path extension that explains it.
+//!
+//! Run: `cargo run --release --example pi_study`
+
+use anyhow::Result;
+use osaca::analyzer::{analyze, critical_path};
+use osaca::benchlib::print_table;
+use osaca::coordinator::Coordinator;
+use osaca::mdb;
+use osaca::sim::{simulate, SimConfig};
+use osaca::workloads;
+
+fn main() -> Result<()> {
+    let coord = Coordinator::auto();
+    let mut rows = Vec::new();
+    let mut stall_rows = Vec::new();
+    for arch in ["skl", "zen"] {
+        let machine = mdb::by_name(arch).unwrap();
+        for flag in ["-O1", "-O2", "-O3"] {
+            let w = workloads::find("pi", arch, flag).unwrap();
+            let k = w.kernel();
+            let a = analyze(&k, &machine)?;
+            let b = coord.analyze_kernel(&k, &machine)?;
+            let cp = critical_path(&k, &machine)?;
+            let m = simulate(&k, &machine, SimConfig::default())?;
+            let u = w.unroll as f64;
+            rows.push(vec![
+                machine.arch_name.clone(),
+                flag.to_string(),
+                format!("{:.2}", b.baseline.cy_per_asm_iter as f64 / u),
+                format!("{:.2}", a.cy_per_asm_iter as f64 / u),
+                format!("{:.2}", cp.carried_per_iteration as f64 / u),
+                format!("{:.2}", m.cy_per_source_it(w.unroll)),
+            ]);
+            stall_rows.push(vec![
+                machine.arch_name.clone(),
+                flag.to_string(),
+                format!("{}", m.counters.issue_stall_cycles),
+                format!("{:.1}%", 100.0 * m.counters.issue_stall_cycles as f64 / m.window_cycles as f64),
+                format!("{}", m.counters.forwarded_loads),
+            ]);
+        }
+    }
+    print_table(
+        "pi benchmark (Table V + critical-path extension), cy per source iteration",
+        &["arch", "flag", "IACA-like", "OSACA", "crit-path bound", "measured"],
+        &rows,
+    );
+    print_table(
+        "stall counters (the §III-B investigation)",
+        &["arch", "flag", "issue-stall cy", "stall fraction", "forwarded loads"],
+        &stall_rows,
+    );
+    println!(
+        "\nNote how at -O1 the critical-path bound (store->load forwarding through\n\
+         the stack) explains the measured runtime that the pure throughput models\n\
+         miss — the paper's §IV-B motivation for latency analysis."
+    );
+    Ok(())
+}

@@ -1,0 +1,43 @@
+//! Quickstart: analyze the Schönauer triad for both architectures and
+//! compare against the simulated hardware — the paper's Fig. 4 flow.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use anyhow::Result;
+use osaca::analyzer::analyze;
+use osaca::coordinator::Coordinator;
+use osaca::mdb;
+use osaca::report::render_occupancy;
+use osaca::sim::{simulate, SimConfig};
+use osaca::workloads;
+
+fn main() -> Result<()> {
+    let coord = Coordinator::auto();
+    for arch in ["skl", "zen"] {
+        let machine = mdb::by_name(arch).unwrap();
+        let w = workloads::find("triad", arch, "-O3").unwrap();
+        let kernel = w.kernel();
+
+        println!("=== {} ({}) — {} ===\n", machine.arch_name, arch, w.name());
+
+        // 1. OSACA throughput analysis (Tables II / IV).
+        let a = analyze(&kernel, &machine)?;
+        println!("{}", render_occupancy(&a, &machine));
+
+        // 2. Balanced baseline through the AOT artifact (IACA-like).
+        let r = coord.analyze_kernel(&kernel, &machine)?;
+        println!(
+            "balanced baseline: {:.2} cy/asm-iter (uniform cross-check {:.2})",
+            r.baseline.cy_per_asm_iter, r.baseline.uniform_cy
+        );
+
+        // 3. "Measurement" on the simulator substrate.
+        let m = simulate(&kernel, &machine, SimConfig::default())?;
+        println!(
+            "simulated hardware: {:.2} cy/asm-iter = {:.2} cy per source iteration\n",
+            m.cycles_per_iteration,
+            m.cy_per_source_it(w.unroll)
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,59 @@
+"""AOT-lower the L2 model to HLO text for the rust PJRT runtime.
+
+HLO *text* is the interchange format, NOT a serialized HloModuleProto:
+jax >= 0.5 emits protos with 64-bit instruction ids that xla_extension
+0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser reassigns ids
+and round-trips cleanly. See /opt/xla-example/gen_hlo.py.
+
+Usage: python -m compile.aot --out ../artifacts/port_solver.hlo.txt
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .model import B, P, U, predict, predict_critpath
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower():
+    mask_spec = jax.ShapeDtypeStruct((B, U, P), jnp.float32)
+    cost_spec = jax.ShapeDtypeStruct((B, U), jnp.float32)
+    return jax.jit(predict).lower(mask_spec, cost_spec)
+
+
+def lower_critpath():
+    adj_spec = jax.ShapeDtypeStruct((B, U, U), jnp.float32)
+    lat_spec = jax.ShapeDtypeStruct((B, U), jnp.float32)
+    car_spec = jax.ShapeDtypeStruct((B, U, U), jnp.float32)
+    return jax.jit(predict_critpath).lower(adj_spec, lat_spec, car_spec)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts/port_solver.hlo.txt")
+    args = ap.parse_args()
+    text = to_hlo_text(lower())
+    with open(args.out, "w") as f:
+        f.write(text)
+    print(f"wrote {len(text)} chars to {args.out} (B={B}, U={U}, P={P})")
+    # Companion artifact: the critical-path solver, same directory.
+    crit_path = os.path.join(os.path.dirname(args.out), "critpath.hlo.txt")
+    text = to_hlo_text(lower_critpath())
+    with open(crit_path, "w") as f:
+        f.write(text)
+    print(f"wrote {len(text)} chars to {crit_path} (B={B}, U={U})")
+
+
+if __name__ == "__main__":
+    main()

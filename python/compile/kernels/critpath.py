@@ -1,0 +1,122 @@
+"""L1 Pallas kernel: batched critical-path solver (max-plus closure).
+
+Implements the latency-modeling extension (paper §IV-B future work) as
+a tensor program: given a batch of dependency graphs over the µ-ops of
+one loop iteration, compute
+
+  * the longest latency chain through one iteration, and
+  * the longest loop-carried cycle per iteration (the steady-state
+    lower bound that explains the paper's §III-B -O1 anomaly),
+
+via max-plus matrix squaring:
+
+  M = I ⊕ A           (A[u,v] = lat[v] if v depends on u, else -inf)
+  M^(2^k) by repeated squaring (U = 64 -> 6 squarings)
+  D = diag(lat) ⊗ M^U  (longest path i→v, inclusive of both endpoints)
+
+  intra[b]   = max_{i,v} D[i,v]
+  carried[b] = max over back-edges (w -> i of next iter) of D[i,w]
+
+Pallas notes: grid over B; one (U, U) tile (16 KiB f32) per program
+instance in VMEM; the squaring loop runs inside the kernel. The max-plus
+product is expressed as a broadcasted add + reduce (VPU work).
+interpret=True (CPU substrate).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG = -1.0e9
+N_SQUARINGS = 6  # 2^6 = 64 = U: covers all simple paths
+
+
+def _maxplus_square(m):
+    """One max-plus squaring: out[i,j] = max_k m[i,k] + m[k,j]."""
+    return jnp.max(m[:, :, None] + m[None, :, :], axis=1)
+
+
+def _critpath_kernel(adj_ref, lat_ref, carried_ref, intra_ref, bound_ref):
+    adj = adj_ref[...]  # (U, U) with NEG for no edge
+    lat = lat_ref[...]  # (U, 1)
+    carried = carried_ref[...]  # (U, U) 1.0 where back-edge i->w
+
+    u = adj.shape[0]
+    eye = jnp.where(jnp.eye(u, dtype=adj.dtype) > 0.0, 0.0, NEG)
+    m = jnp.maximum(eye, adj)
+
+    def body(_, m):
+        return _maxplus_square(m)
+
+    m = jax.lax.fori_loop(0, N_SQUARINGS, body, m)
+    # D[i, v] = lat[i] + path(i -> v); diag(lat) ⊗ m.
+    d = lat + m  # broadcast over rows: row i shifted by lat[i]
+    intra = jnp.max(d)
+    bound = jnp.max(jnp.where(carried > 0.0, d, NEG))
+    intra_ref[...] = jnp.maximum(intra, 0.0)[None]
+    bound_ref[...] = jnp.maximum(bound, 0.0)[None]
+
+
+def critpath_solver(adj, lat, carried):
+    """Batched critical-path solve.
+
+    Args:
+      adj: f32[B, U, U] — adj[b, u, v] = lat_v when µ-op v of batch b
+        depends on µ-op u (program order u < v), else NEG.
+      lat: f32[B, U] — per-µ-op latency (0 rows for padding).
+      carried: f32[B, U, U] — carried[b, i, w] = 1 when µ-op i of the
+        next iteration depends on µ-op w of the current one.
+
+    Returns:
+      (intra[B], carried_bound[B]) — longest chain through an iteration
+      and the loop-carried cycle bound (cycles/iteration); 0 when the
+      graph is empty.
+    """
+    b, u, _ = adj.shape
+    assert lat.shape == (b, u)
+    assert carried.shape == (b, u, u)
+    lat3 = lat[..., None]
+    out_shape = (
+        jax.ShapeDtypeStruct((b, 1), jnp.float32),
+        jax.ShapeDtypeStruct((b, 1), jnp.float32),
+    )
+    intra, bound = pl.pallas_call(
+        lambda a, l, c, i_ref, b_ref: _critpath_kernel(
+            _S(a), _S(l), _S(c), _S(i_ref), _S(b_ref)
+        ),
+        out_shape=out_shape,
+        grid=(b,),
+        in_specs=[
+            pl.BlockSpec((1, u, u), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, u, 1), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, u, u), lambda i: (i, 0, 0)),
+        ],
+        out_specs=(
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),
+        ),
+        interpret=True,
+    )(adj, lat3, carried)
+    return intra[:, 0], bound[:, 0]
+
+
+class _S:
+    """Ref adapter dropping the leading size-1 block dimension."""
+
+    def __init__(self, ref):
+        self._ref = ref
+
+    @property
+    def shape(self):
+        return self._ref.shape[1:]
+
+    def __getitem__(self, idx):
+        if idx is Ellipsis:
+            return self._ref[...][0]
+        raise NotImplementedError(idx)
+
+    def __setitem__(self, idx, val):
+        if idx is Ellipsis:
+            self._ref[...] = val[None]
+            return
+        raise NotImplementedError(idx)

@@ -1,0 +1,100 @@
+"""Pure-jnp oracle for the port-pressure solver (no pallas).
+
+Mirrors kernels/port_solver.py op-for-op; correctness contract enforced
+by python/tests/test_kernel.py (assert_allclose + hypothesis sweeps).
+Also provides an LP-exact min-max solve (scipy-free, via long-horizon
+multiplicative weights) used to bound the balanced heuristic's gap.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .port_solver import DEFAULT_ITERS, ETA
+
+
+def uniform_pressure(mask, cost):
+    """OSACA assumption-2 split: equal probability over admissible ports.
+
+    mask: f32[..., U, P], cost: f32[..., U] -> f32[..., P]
+    """
+    nports = jnp.sum(mask, axis=-1, keepdims=True)
+    w = mask / jnp.maximum(nports, 1.0)
+    return jnp.sum(w * cost[..., None], axis=-2)
+
+
+def balanced_pressure(mask, cost, iters: int = DEFAULT_ITERS):
+    """IACA-like multiplicative-weights balancing, reference semantics."""
+    nports = jnp.sum(mask, axis=-1, keepdims=True)
+    safe = jnp.maximum(nports, 1.0)
+    w = jnp.where(nports > 0.0, mask / safe, 0.0)
+    cost3 = cost[..., None]
+
+    def body(_, w):
+        press = jnp.sum(w * cost3, axis=-2, keepdims=True)
+        upd = w * jnp.exp(-ETA * press) * mask
+        norm = jnp.maximum(jnp.sum(upd, axis=-1, keepdims=True), 1e-30)
+        return jnp.where(nports > 0.0, upd / norm, 0.0)
+
+    w = jax.lax.fori_loop(0, iters, body, w)
+    return jnp.sum(w * cost3, axis=-2)
+
+
+def solve(mask, cost, iters: int = DEFAULT_ITERS):
+    """Full reference solve; same outputs as kernels.port_solver.port_solver."""
+    pu = uniform_pressure(mask, cost)
+    pb = balanced_pressure(mask, cost, iters)
+    return pu, pb, jnp.max(pu, axis=-1), jnp.max(pb, axis=-1)
+
+
+def critpath(adj, lat, carried):
+    """Reference longest-path / carried-bound via numpy DP.
+
+    Edges only point forward in index order (program order), so a single
+    topological sweep suffices. Mirrors kernels/critpath.py semantics.
+    """
+    import numpy as np
+
+    adj = np.asarray(adj, dtype=np.float64)
+    lat = np.asarray(lat, dtype=np.float64)
+    carried = np.asarray(carried, dtype=np.float64)
+    b, u, _ = adj.shape
+    NEG = -1.0e9
+    intra = np.zeros(b)
+    bound = np.zeros(b)
+    for k in range(b):
+        # d[i, v] = longest path value from i to v (inclusive).
+        d = np.full((u, u), NEG)
+        for i in range(u):
+            d[i, i] = lat[k, i]
+            for v in range(i + 1, u):
+                best = NEG
+                for w in range(i, v):
+                    if adj[k, w, v] > NEG / 2 and d[i, w] > NEG / 2:
+                        best = max(best, d[i, w] + lat[k, v])
+                d[i, v] = best
+        intra[k] = max(0.0, d.max())
+        m = np.where(carried[k] > 0, d, NEG)
+        bound[k] = max(0.0, m.max())
+    return intra, bound
+
+
+def lp_optimum(mask, cost, iters: int = 4000):
+    """Near-exact min-max pressure via long-horizon balancing (small eta).
+
+    Used only in tests as a ground-truth bound; not exported to HLO.
+    mask: f32[U, P], cost: f32[U] -> scalar optimal bottleneck.
+    """
+    import numpy as np
+
+    mask = np.asarray(mask, dtype=np.float64)
+    cost = np.asarray(cost, dtype=np.float64)
+    nports = mask.sum(axis=1, keepdims=True)
+    safe = np.maximum(nports, 1.0)
+    w = np.where(nports > 0, mask / safe, 0.0)
+    eta = 0.05
+    for _ in range(iters):
+        press = (w * cost[:, None]).sum(axis=0, keepdims=True)
+        upd = w * np.exp(-eta * press) * mask
+        norm = np.maximum(upd.sum(axis=1, keepdims=True), 1e-300)
+        w = np.where(nports > 0, upd / norm, 0.0)
+    return float((w * cost[:, None]).sum(axis=0).max())

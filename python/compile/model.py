@@ -1,0 +1,47 @@
+"""L2: the JAX compute graph for batched throughput prediction.
+
+Calls the L1 Pallas kernel (kernels.port_solver) so the whole analysis
+lowers into a single HLO module. Shapes are fixed at AOT time; the rust
+coordinator pads kernels into (B, U, P) slots:
+
+  B = 8   analysis requests per batch (coordinator batches to this)
+  U = 64  µ-ops per kernel (triad -O3 uses 10, π -O3 uses ~20)
+  P = 12  ports incl. divider pipes (SKL uses 9: P0..P7 + 0DV;
+          Zen uses 11: FP0..3, 4..7 int, 8/9 AGU+LD, 3DV)
+
+Outputs, concatenated as a 5-tuple:
+  press_uniform f32[B, P]  -- OSACA per-port cumulative occupation
+  press_balanced f32[B, P] -- IACA-like balanced occupation
+  tp_uniform f32[B]        -- bottleneck cy / asm iteration (OSACA)
+  tp_balanced f32[B]       -- bottleneck cy / asm iteration (IACA-like)
+  crit_lower f32[B]        -- sum-of-cost lower bound / widest port count
+                              (sanity channel the coordinator cross-checks)
+"""
+
+import jax.numpy as jnp
+
+from .kernels.critpath import critpath_solver
+from .kernels.port_solver import DEFAULT_ITERS, port_solver
+
+B, U, P = 8, 64, 12
+
+
+def predict(mask, cost):
+    """Batched prediction. mask f32[B,U,P], cost f32[B,U]."""
+    press_u, press_b, tp_u, tp_b = port_solver(mask, cost, iters=DEFAULT_ITERS)
+    # Work lower bound: total µ-op cycles spread over the union of all
+    # ports any µ-op may use (perfectly symmetric machine). Cheap
+    # cross-check channel for the coordinator's sanity asserts.
+    used_ports = jnp.max(mask, axis=1)  # (B, P)
+    width = jnp.maximum(jnp.sum(used_ports, axis=1), 1.0)  # (B,)
+    crit_lower = jnp.sum(cost, axis=1) / width
+    return press_u, press_b, tp_u, tp_b, crit_lower
+
+
+def predict_critpath(adj, lat, carried):
+    """Batched latency analysis (paper §IV-B future work): longest
+    intra-iteration chain and loop-carried cycle bound.
+
+    adj f32[B,U,U], lat f32[B,U], carried f32[B,U,U].
+    """
+    return critpath_solver(adj, lat, carried)

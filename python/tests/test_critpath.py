@@ -1,0 +1,91 @@
+"""Critical-path Pallas kernel vs numpy oracle."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile.kernels import ref
+from compile.kernels.critpath import critpath_solver, NEG
+
+
+def dag_case(rng, b, u, p_edge=0.25, p_carried=0.1):
+    """Random forward DAG with latencies + carried edges."""
+    lat = (rng.integers(1, 8, size=(b, u))).astype(np.float32)
+    adj = np.full((b, u, u), NEG, dtype=np.float32)
+    carried = np.zeros((b, u, u), dtype=np.float32)
+    for k in range(b):
+        for i in range(u):
+            for v in range(i + 1, u):
+                if rng.random() < p_edge:
+                    adj[k, i, v] = lat[k, v]
+        for i in range(u):
+            for w in range(i, u):
+                if rng.random() < p_carried:
+                    carried[k, i, w] = 1.0
+    return jnp.asarray(adj), jnp.asarray(lat), jnp.asarray(carried)
+
+
+def check(adj, lat, carried):
+    intra_k, bound_k = critpath_solver(adj, lat, carried)
+    intra_r, bound_r = ref.critpath(adj, lat, carried)
+    assert_allclose(np.asarray(intra_k), intra_r, rtol=1e-5, atol=1e-4)
+    assert_allclose(np.asarray(bound_k), bound_r, rtol=1e-5, atol=1e-4)
+
+
+def test_single_chain():
+    # 0 -> 1 -> 2 with lat 4 each: intra = 12; carried 2->0 cycle = 12.
+    u = 4
+    adj = np.full((1, u, u), NEG, dtype=np.float32)
+    lat = np.zeros((1, u), dtype=np.float32)
+    carried = np.zeros((1, u, u), dtype=np.float32)
+    lat[0, :3] = 4.0
+    adj[0, 0, 1] = 4.0
+    adj[0, 1, 2] = 4.0
+    carried[0, 0, 2] = 1.0
+    intra, bound = critpath_solver(jnp.asarray(adj), jnp.asarray(lat), jnp.asarray(carried))
+    assert float(intra[0]) == 12.0
+    assert float(bound[0]) == 12.0
+
+
+def test_self_loop_carried():
+    # Single µ-op chained to itself (vaddpd accumulator): bound = lat.
+    u = 2
+    adj = np.full((1, u, u), NEG, dtype=np.float32)
+    lat = np.zeros((1, u), dtype=np.float32)
+    carried = np.zeros((1, u, u), dtype=np.float32)
+    lat[0, 0] = 3.0
+    carried[0, 0, 0] = 1.0
+    intra, bound = critpath_solver(jnp.asarray(adj), jnp.asarray(lat), jnp.asarray(carried))
+    assert float(intra[0]) == 3.0
+    assert float(bound[0]) == 3.0
+
+
+def test_empty_graph_is_zero():
+    adj = jnp.full((2, 8, 8), NEG)
+    lat = jnp.zeros((2, 8))
+    carried = jnp.zeros((2, 8, 8))
+    intra, bound = critpath_solver(adj, lat, carried)
+    assert float(jnp.max(intra)) == 0.0
+    assert float(jnp.max(bound)) == 0.0
+
+
+def test_matches_oracle_fixed():
+    rng = np.random.default_rng(0)
+    check(*dag_case(rng, 4, 16))
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), u=st.integers(2, 24))
+def test_matches_oracle_hypothesis(seed, u):
+    rng = np.random.default_rng(seed)
+    check(*dag_case(rng, 2, u))
+
+
+def test_bound_never_exceeds_intra_for_forward_carried():
+    # Carried edges (i <= w) select sub-paths of the DAG, so the carried
+    # bound can never exceed the longest chain.
+    rng = np.random.default_rng(5)
+    adj, lat, carried = dag_case(rng, 4, 20)
+    intra, bound = critpath_solver(adj, lat, carried)
+    assert np.all(np.asarray(bound) <= np.asarray(intra) + 1e-4)

@@ -1,0 +1,123 @@
+//! Bench: the hot paths of each layer, for the performance pass
+//! (EXPERIMENTS.md §Perf).
+//!
+//! * L3 simulator: simulated Mcycles/s and µops/s on the heaviest
+//!   kernels;
+//! * L3 analyzer: kernels analyzed per second;
+//! * L1/L2 solver: batched artifact executions per second (PJRT) vs the
+//!   pure-rust reference;
+//! * coordinator: end-to-end requests per second under concurrency.
+//!
+//! Run: `cargo bench --bench hotpath`
+
+use std::sync::Arc;
+
+use osaca::analyzer::analyze;
+use osaca::baseline::encode;
+use osaca::benchlib::{bench, Stats};
+use osaca::coordinator::Coordinator;
+use osaca::mdb;
+use osaca::runtime::{solve_cpu, EncodedKernel, PortSolver, BATCH};
+use osaca::sim::{simulate, SimConfig};
+use osaca::workloads;
+
+fn main() {
+    let skl = mdb::skylake();
+    let zen = mdb::zen();
+
+    // ---- L3 simulator -------------------------------------------------
+    println!("--- L3 simulator ---");
+    for (arch, m) in [("skl", &skl), ("zen", &zen)] {
+        let w = workloads::find("pi", arch, "-O3").unwrap();
+        let k = w.kernel();
+        let cfg = SimConfig { iterations: 4000, warmup: 400 };
+        let mut total_cycles = 0u64;
+        let mut uops = 0u64;
+        let s = bench(&format!("sim/pi-o3/{arch}"), 2, 10, || {
+            let meas = simulate(&k, m, cfg).unwrap();
+            total_cycles = meas.total_cycles;
+            uops = meas.counters.uops_executed;
+        });
+        report_sim(&s, total_cycles, uops);
+    }
+    {
+        let w = workloads::find("triad", "skl", "-O3").unwrap();
+        let k = w.kernel();
+        let cfg = SimConfig { iterations: 4000, warmup: 400 };
+        let mut total_cycles = 0u64;
+        let mut uops = 0u64;
+        let s = bench("sim/triad-o3/skl", 2, 10, || {
+            let meas = simulate(&k, &skl, cfg).unwrap();
+            total_cycles = meas.total_cycles;
+            uops = meas.counters.uops_executed;
+        });
+        report_sim(&s, total_cycles, uops);
+    }
+
+    // ---- L3 analyzer ---------------------------------------------------
+    println!("--- L3 analyzer ---");
+    let kernels: Vec<_> = workloads::all().iter().map(|w| w.kernel()).collect();
+    let s = bench("analyze/all-workloads/skl", 3, 20, || {
+        for k in &kernels {
+            analyze(k, &skl).unwrap();
+        }
+    });
+    println!(
+        "{}  ({:.0} kernels/s)",
+        s.report(),
+        kernels.len() as f64 / s.median.as_secs_f64()
+    );
+
+    // ---- L1/L2 solver ---------------------------------------------------
+    println!("--- L1/L2 port solver ---");
+    let encs: Vec<EncodedKernel> = kernels.iter().map(|k| encode(k, &skl).unwrap()).collect();
+    let batch: Vec<EncodedKernel> = encs.iter().cycle().take(BATCH).cloned().collect();
+    let s = bench("solve/cpu-reference/batch8", 3, 20, || {
+        solve_cpu(&batch, 32);
+    });
+    println!("{}  ({:.0} kernels/s)", s.report(), BATCH as f64 / s.median.as_secs_f64());
+    match PortSolver::load_default() {
+        Ok(solver) => {
+            let s = bench("solve/pjrt-artifact/batch8", 3, 20, || {
+                solver.solve(&batch).unwrap();
+            });
+            println!("{}  ({:.0} kernels/s)", s.report(), BATCH as f64 / s.median.as_secs_f64());
+        }
+        Err(e) => println!("solve/pjrt-artifact: SKIPPED ({e})"),
+    }
+
+    // ---- coordinator ----------------------------------------------------
+    println!("--- coordinator ---");
+    let coord = Arc::new(Coordinator::auto());
+    let n = 128;
+    let s = bench("coordinator/end-to-end/128-reqs", 1, 8, || {
+        let mut handles = Vec::new();
+        for i in 0..n {
+            let coord = coord.clone();
+            handles.push(std::thread::spawn(move || {
+                let ws = workloads::all();
+                let w = ws[i % ws.len()];
+                let m = if i % 2 == 0 { mdb::skylake() } else { mdb::zen() };
+                coord.analyze_kernel(&w.kernel(), &m).unwrap();
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+    });
+    println!("{}  ({:.0} req/s)", s.report(), n as f64 / s.median.as_secs_f64());
+    println!(
+        "coordinator stats: {} batches, avg batch {:.2}",
+        coord.stats.batches.load(std::sync::atomic::Ordering::Relaxed),
+        coord.stats.avg_batch_size()
+    );
+}
+
+fn report_sim(s: &Stats, cycles: u64, uops: u64) {
+    println!(
+        "{}  ({:.1} Msim-cycles/s, {:.1} Muops/s)",
+        s.report(),
+        cycles as f64 / s.median.as_secs_f64() / 1e6,
+        uops as f64 / s.median.as_secs_f64() / 1e6
+    );
+}

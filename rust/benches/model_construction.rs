@@ -1,0 +1,55 @@
+//! Bench: the §II-A/§II-C model-construction pipeline — latency and
+//! throughput benchmarking plus conflict probing on the simulator
+//! substrate (the paper's ibench listings, regenerated).
+//!
+//! Run: `cargo bench --bench model_construction`
+
+use osaca::benchlib::{bench, print_table};
+use osaca::builder::{default_probes, infer_entry};
+use osaca::ibench::{run_conflict, run_sweep, BenchSpec};
+use osaca::isa::InstructionForm;
+use osaca::mdb;
+
+fn main() {
+    // §II-C listings for both machines.
+    for arch in ["zen", "skl"] {
+        let machine = mdb::by_name(arch).unwrap();
+        let spec = BenchSpec::parse("vfmadd132pd-mem_xmm_xmm");
+        let sweep = run_sweep(&spec, &machine).unwrap();
+        println!("--- {} ---", machine.arch_name);
+        print!("{}", sweep.render(machine.frequency_ghz));
+        for probe in ["vaddpd-xmm_xmm_xmm", "vmulpd-xmm_xmm_xmm"] {
+            let r = run_conflict(&spec, &BenchSpec::parse(probe), &machine).unwrap();
+            println!("{}:  {:.3} (clk cy)", r.label, r.cy_per_instr);
+        }
+        println!();
+    }
+
+    // §II-A vaddpd numbers as a table.
+    let mut rows = Vec::new();
+    for arch in ["skl", "zen"] {
+        let machine = mdb::by_name(arch).unwrap();
+        let spec = BenchSpec::parse("vaddpd-xmm_xmm_xmm");
+        let lat = osaca::ibench::measure_latency(&spec, &machine).unwrap();
+        let tp = osaca::ibench::measure_throughput(&spec, &machine).unwrap();
+        rows.push(vec![
+            machine.arch_name.clone(),
+            format!("{lat:.2}"),
+            format!("{tp:.3}"),
+        ]);
+    }
+    print_table("§II-A vaddpd (paper: lat 4/3 cy, rTP 0.5)", &["arch", "latency", "rTP"], &rows);
+
+    // Timings.
+    let zen = mdb::zen();
+    let probes = default_probes(&zen);
+    let form = InstructionForm::parse("vfmadd132pd-mem_xmm_xmm");
+    let s = bench("ibench/sweep (7 benchmarks on sim)", 1, 5, || {
+        run_sweep(&BenchSpec { form: form.clone() }, &zen).unwrap();
+    });
+    println!("{}", s.report());
+    let s = bench("builder/infer_entry (sweep + conflict probes)", 1, 5, || {
+        infer_entry(&form, &zen, &probes).unwrap();
+    });
+    println!("{}", s.report());
+}

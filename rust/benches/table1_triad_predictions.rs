@@ -1,0 +1,46 @@
+//! Bench: regenerate paper Table I (triad throughput analyses) and time
+//! the predictor paths that produce it.
+//!
+//! Run: `cargo bench --bench table1_triad_predictions`
+
+use osaca::analyzer::analyze;
+use osaca::benchlib::{bench, print_table, SAMPLES, WARMUP};
+use osaca::coordinator::Coordinator;
+use osaca::mdb;
+use osaca::report::experiments::{render_table1, table1};
+use osaca::workloads;
+
+fn main() {
+    let coord = Coordinator::auto();
+
+    // The table itself.
+    let rows = table1(&coord).expect("table1");
+    print_table(
+        "Table I: OSACA and IACA-like throughput analyses (cy per assembly iteration)",
+        &["compiled for", "flag", "unroll", "OSACA Zen", "OSACA SKL", "IACA-like SKL"],
+        &render_table1(&rows),
+    );
+
+    // Timings of the underlying predictor paths.
+    let skl = mdb::skylake();
+    let zen = mdb::zen();
+    let w = workloads::find("triad", "skl", "-O3").unwrap();
+    let k = w.kernel();
+
+    let s = bench("analyze/osaca/triad-skl-o3 (skl)", WARMUP, SAMPLES, || {
+        analyze(&k, &skl).unwrap();
+    });
+    println!("{}", s.report());
+    let s = bench("analyze/osaca/triad-skl-o3 (zen, 256-split)", WARMUP, SAMPLES, || {
+        analyze(&k, &zen).unwrap();
+    });
+    println!("{}", s.report());
+    let s = bench("predict/balanced-baseline (through coordinator)", WARMUP, SAMPLES, || {
+        coord.analyze_kernel(&k, &skl).unwrap();
+    });
+    println!("{}", s.report());
+    let s = bench("table1/full-regeneration", 1, 5, || {
+        table1(&coord).unwrap();
+    });
+    println!("{}", s.report());
+}

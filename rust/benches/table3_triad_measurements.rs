@@ -1,0 +1,56 @@
+//! Bench: regenerate paper Table III (triad measurements on the
+//! simulator substrate vs predictions) and time the simulator.
+//!
+//! Run: `cargo bench --bench table3_triad_measurements`
+
+use osaca::benchlib::{bench, print_table, SAMPLES, WARMUP};
+use osaca::coordinator::Coordinator;
+use osaca::mdb;
+use osaca::report::experiments::{render_table3, table3};
+use osaca::sim::{simulate, SimConfig};
+use osaca::workloads;
+
+fn main() {
+    let coord = Coordinator::auto();
+    let cfg = SimConfig::default();
+    let rows = table3(&coord, cfg).expect("table3");
+    print_table(
+        "Table III: triad measured (simulator @1.8 GHz) vs predictions",
+        &[
+            "executed on",
+            "compiled for",
+            "flag",
+            "unroll",
+            "MFLOP/s",
+            "Mit/s",
+            "measured cy/it",
+            "OSACA cy/it",
+            "IACA-like cy/it",
+        ],
+        &render_table3(&rows),
+    );
+
+    // Simulator throughput: simulated cycles per wall-second.
+    for (arch, family, flag) in
+        [("skl", "triad", "-O3"), ("zen", "triad", "-O3"), ("skl", "pi", "-O1")]
+    {
+        let w = workloads::find(family, arch, flag).unwrap();
+        let m = mdb::by_name(arch).unwrap();
+        let k = w.kernel();
+        let cfg = SimConfig { iterations: 2000, warmup: 200 };
+        let mut cycles = 0u64;
+        let s = bench(&format!("sim/{}-{}-{}", family, arch, flag), WARMUP, SAMPLES, || {
+            let m = simulate(&k, &m, cfg).unwrap();
+            cycles = m.total_cycles;
+        });
+        println!(
+            "{}  ({:.1} Msim-cycles/s)",
+            s.report(),
+            cycles as f64 / s.median.as_secs_f64() / 1e6
+        );
+    }
+    let s = bench("table3/full-regeneration", 1, 3, || {
+        table3(&coord, SimConfig { iterations: 400, warmup: 100 }).unwrap();
+    });
+    println!("{}", s.report());
+}

@@ -1,0 +1,51 @@
+//! Bench: regenerate paper Table V (π benchmark) together with the
+//! §III-B stall-counter investigation, and time the full comparison.
+//!
+//! Run: `cargo bench --bench table5_pi`
+
+use osaca::benchlib::{bench, print_table};
+use osaca::coordinator::Coordinator;
+use osaca::mdb;
+use osaca::report::experiments::{render_table5, table5};
+use osaca::sim::{simulate, SimConfig};
+use osaca::workloads;
+
+fn main() {
+    let coord = Coordinator::auto();
+    let cfg = SimConfig::default();
+    let rows = table5(&coord, cfg).expect("table5");
+    print_table(
+        "Table V: pi benchmark predictions vs measurement",
+        &["arch", "flag", "IACA-like", "OSACA", "measured cy/it", "stall cy"],
+        &render_table5(&rows),
+    );
+
+    // The §III-B counter factors (paper: 17x on SKL, 7x on Zen).
+    let mut counter_rows = Vec::new();
+    for arch in ["skl", "zen"] {
+        let m = mdb::by_name(arch).unwrap();
+        let stall = |flag: &str| {
+            let w = workloads::find("pi", arch, flag).unwrap();
+            let meas = simulate(&w.kernel(), &m, cfg).unwrap();
+            meas.counters.issue_stall_cycles as f64 / meas.window_cycles as f64
+        };
+        let s1 = stall("-O1");
+        let s2 = stall("-O2");
+        counter_rows.push(vec![
+            m.arch_name.clone(),
+            format!("{:.1}%", s1 * 100.0),
+            format!("{:.1}%", s2 * 100.0),
+            format!("{:.1}x", s1 / s2.max(1e-9)),
+        ]);
+    }
+    print_table(
+        "issue-stall fractions, -O1 vs -O2 (the §III-B investigation)",
+        &["arch", "-O1 stalls", "-O2 stalls", "factor"],
+        &counter_rows,
+    );
+
+    let s = bench("table5/full-regeneration", 1, 5, || {
+        table5(&coord, SimConfig { iterations: 400, warmup: 100 }).unwrap();
+    });
+    println!("{}", s.report());
+}

@@ -1,0 +1,284 @@
+//! Critical-path / loop-carried-dependency analysis.
+//!
+//! This implements the paper's §IV-B *future work* item ("support for
+//! critical path analysis, tracking dependencies between sources and
+//! destinations"): the longest latency chain through one iteration and
+//! the longest loop-carried cycle, which together bound the runtime from
+//! below when the throughput assumption (assumption 4) fails — exactly
+//! the -O1 π situation in §III-B.
+
+use anyhow::Result;
+
+use crate::asm::Kernel;
+use crate::mdb::MachineModel;
+use crate::sim::decode::{decode_kernel, DepSource};
+use crate::sim::SimUop;
+use crate::mdb::UopKind;
+
+/// Latency analysis result.
+#[derive(Debug, Clone)]
+pub struct CritPathReport {
+    /// Longest dependency chain through a single iteration (cycles).
+    pub intra_iteration: f32,
+    /// Longest loop-carried cycle per iteration (cycles/iteration) —
+    /// the steady-state lower bound from dependencies.
+    pub carried_per_iteration: f32,
+    /// Instruction indices on the carried cycle (empty if none).
+    pub carried_path: Vec<usize>,
+}
+
+/// µ-op latency as the critical-path model sees it: issue-to-result,
+/// with store-forwarded loads paying the forwarding penalty.
+fn uop_latency(u: &SimUop, machine: &MachineModel, forwarded: bool) -> f32 {
+    match u.kind {
+        UopKind::Load if forwarded => machine.params.store_forward_latency as f32,
+        _ => u.latency.max(1) as f32,
+    }
+}
+
+/// Compute the critical path of `kernel` under `machine`.
+///
+/// Uses the simulator's decoded dependency graph (including memory
+/// identities): longest path for the intra-iteration chain, and for the
+/// carried bound the maximum cycle mean over back-edges, computed by
+/// unrolling the recurrence twice (exact for single-back-edge cycles,
+/// a tight bound for the kernels we model).
+pub fn critical_path(kernel: &Kernel, machine: &MachineModel) -> Result<CritPathReport> {
+    let t = decode_kernel(kernel, machine)?;
+    let n = t.uops.len();
+
+    // Forwarding: a load aliases a store across iterations only when the
+    // address is *version-stable* — all address-register components are
+    // loop-invariant (e.g. `(%rsp)`). Addresses indexed by an in-loop
+    // counter (e.g. `(%rsi,%rax)` in daxpy) change every iteration and
+    // never produce a carried memory edge.
+    let stable = |u: &SimUop| -> bool {
+        u.mem_ident
+            .as_ref()
+            .map(|id| {
+                [&id.base, &id.index].into_iter().flatten().all(|(_, v)| {
+                    matches!(v, crate::sim::decode::DepVersion::Invariant)
+                })
+            })
+            .unwrap_or(false)
+    };
+    let forwarded: Vec<bool> = t
+        .uops
+        .iter()
+        .map(|u| {
+            u.kind == UopKind::Load
+                && stable(u)
+                && t.uops.iter().any(|s| {
+                    s.kind == UopKind::StoreData && stable(s) && s.mem_ident == u.mem_ident
+                })
+        })
+        .collect();
+
+    // Longest path within one iteration (DAG over Intra edges).
+    let mut dist = vec![0f32; n];
+    for i in 0..n {
+        let lat = uop_latency(&t.uops[i], machine, forwarded[i]);
+        let mut start = 0f32;
+        for d in &t.uops[i].deps {
+            if let DepSource::Intra(w) = d {
+                start = start.max(dist[*w]);
+            }
+        }
+        dist[i] = start + lat;
+    }
+    let intra = dist.iter().cloned().fold(0.0, f32::max);
+
+    // Loop-carried bound: for each back-edge (Carried dep w -> i, plus
+    // store->load forwarding across iterations), the cycle length is
+    // dist_from(w hits i) + ... ; we compute the max over simple cycles
+    // by relaxing a two-iteration unroll.
+    let mut best_cycle = 0f32;
+    let mut best_path: Vec<usize> = Vec::new();
+    for i in 0..n {
+        let mut sources: Vec<usize> = t.uops[i]
+            .deps
+            .iter()
+            .filter_map(|d| match d {
+                DepSource::Carried(w) => Some(*w),
+                _ => None,
+            })
+            .collect();
+        // Cross-iteration forwarding edge: load i <- store w (prev iter).
+        if forwarded[i] {
+            for (w, s) in t.uops.iter().enumerate() {
+                if s.kind == UopKind::StoreData && s.mem_ident == t.uops[i].mem_ident {
+                    sources.push(w);
+                }
+            }
+        }
+        for w in sources {
+            // Longest path from i to w within an iteration.
+            if let Some((len, path)) = longest_path(&t.uops, machine, &forwarded, i, w) {
+                if len > best_cycle {
+                    best_cycle = len;
+                    best_path = path.iter().map(|&u| t.uops[u].instr).collect();
+                    best_path.dedup();
+                }
+            }
+        }
+    }
+
+    Ok(CritPathReport {
+        intra_iteration: intra,
+        carried_per_iteration: best_cycle,
+        carried_path: best_path,
+    })
+}
+
+/// Encode a kernel's dependency graph for the batched critical-path
+/// artifact (python/compile/kernels/critpath.py): per-µ-op latencies,
+/// forward edges, carried back-edges (including version-stable
+/// store-to-load forwarding).
+pub fn encode_graph(
+    kernel: &Kernel,
+    machine: &MachineModel,
+) -> Result<crate::runtime::EncodedGraph> {
+    let t = decode_kernel(kernel, machine)?;
+    let n = t.uops.len();
+    if n > crate::runtime::MAX_UOPS {
+        anyhow::bail!("kernel exceeds {} µ-ops", crate::runtime::MAX_UOPS);
+    }
+    let stable = |u: &SimUop| -> bool {
+        u.mem_ident
+            .as_ref()
+            .map(|id| {
+                [&id.base, &id.index]
+                    .into_iter()
+                    .flatten()
+                    .all(|(_, v)| matches!(v, crate::sim::decode::DepVersion::Invariant))
+            })
+            .unwrap_or(false)
+    };
+    let forwarded: Vec<bool> = t
+        .uops
+        .iter()
+        .map(|u| {
+            u.kind == UopKind::Load
+                && stable(u)
+                && t.uops
+                    .iter()
+                    .any(|s| s.kind == UopKind::StoreData && stable(s) && s.mem_ident == u.mem_ident)
+        })
+        .collect();
+    let mut g = crate::runtime::EncodedGraph::empty();
+    for (i, u) in t.uops.iter().enumerate() {
+        g.set_latency(i, uop_latency(u, machine, forwarded[i]))?;
+    }
+    for (i, u) in t.uops.iter().enumerate() {
+        for d in &u.deps {
+            match d {
+                DepSource::Intra(w) => g.add_edge(*w, i)?,
+                DepSource::Carried(w) => g.add_carried(i, *w)?,
+                DepSource::Invariant => {}
+            }
+        }
+        if forwarded[i] {
+            for (w, s) in t.uops.iter().enumerate() {
+                if s.kind == UopKind::StoreData && s.mem_ident == u.mem_ident {
+                    g.add_carried(i, w)?;
+                }
+            }
+        }
+    }
+    Ok(g)
+}
+
+/// Batched critical-path analysis through the AOT artifact — the
+/// offline-sweep variant of `critical_path`.
+pub fn critical_path_batch(
+    kernels: &[&Kernel],
+    machine: &MachineModel,
+    solver: &crate::runtime::CritSolver,
+) -> Result<Vec<crate::runtime::CritOut>> {
+    let graphs: Vec<_> = kernels
+        .iter()
+        .map(|k| encode_graph(k, machine))
+        .collect::<Result<_>>()?;
+    solver.solve(&graphs)
+}
+
+/// Longest Intra-edge path from µ-op `from` to µ-op `to` (inclusive
+/// latencies), or `None` when unreachable.
+fn longest_path(
+    uops: &[SimUop],
+    machine: &MachineModel,
+    forwarded: &[bool],
+    from: usize,
+    to: usize,
+) -> Option<(f32, Vec<usize>)> {
+    let n = uops.len();
+    let mut dist = vec![f32::NEG_INFINITY; n];
+    let mut prev: Vec<Option<usize>> = vec![None; n];
+    dist[from] = uop_latency(&uops[from], machine, forwarded[from]);
+    for i in from + 1..n {
+        for d in &uops[i].deps {
+            if let DepSource::Intra(w) = d {
+                if dist[*w] > f32::NEG_INFINITY {
+                    let cand = dist[*w] + uop_latency(&uops[i], machine, forwarded[i]);
+                    if cand > dist[i] {
+                        dist[i] = cand;
+                        prev[i] = Some(*w);
+                    }
+                }
+            }
+        }
+    }
+    if to <= from {
+        // `to` must be downstream of `from` in program order for a
+        // cycle through the back-edge; identical index = self-loop.
+        if to == from {
+            return Some((dist[from], vec![from]));
+        }
+        return None;
+    }
+    if dist[to] == f32::NEG_INFINITY {
+        return None;
+    }
+    let mut path = vec![to];
+    let mut cur = to;
+    while let Some(p) = prev[cur] {
+        path.push(p);
+        cur = p;
+    }
+    path.reverse();
+    Some((dist[to], path))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::asm::extract_kernel;
+    use crate::mdb::{skylake, zen};
+
+    #[test]
+    fn add_chain_carried_latency() {
+        let src = "\n.L1:\nvaddpd %xmm1, %xmm0, %xmm0\ncmpl $1, %eax\njne .L1\n";
+        let r = critical_path(&extract_kernel("t", src).unwrap(), &skylake()).unwrap();
+        assert!((r.carried_per_iteration - 4.0).abs() < 1e-3, "{r:?}");
+        let rz = critical_path(&extract_kernel("t", src).unwrap(), &zen()).unwrap();
+        assert!((rz.carried_per_iteration - 3.0).abs() < 1e-3, "{rz:?}");
+    }
+
+    #[test]
+    fn pi_o1_memory_cycle() {
+        // store->load forwarding cycle: fwd + addsd + store-data.
+        let src = "\n.L2:\nvaddsd (%rsp), %xmm0, %xmm5\nvmovsd %xmm5, (%rsp)\naddl $1, %eax\ncmpl $100, %eax\njne .L2\n";
+        let r = critical_path(&extract_kernel("t", src).unwrap(), &skylake()).unwrap();
+        // 4 (fwd) + 4 (addsd) + 1 (store) = 9.
+        assert!((r.carried_per_iteration - 9.0).abs() < 1e-3, "{r:?}");
+    }
+
+    #[test]
+    fn throughput_kernel_has_tiny_carried_path() {
+        let src = "\n.L1:\nvaddpd %xmm3, %xmm0, %xmm0\nvaddpd %xmm4, %xmm1, %xmm1\naddl $1, %eax\ncmpl $100, %eax\njne .L1\n";
+        let r = critical_path(&extract_kernel("t", src).unwrap(), &skylake()).unwrap();
+        // Carried chains: each vaddpd on itself (4 cy), eax increment (1).
+        assert!((r.carried_per_iteration - 4.0).abs() < 1e-3, "{r:?}");
+        assert!(r.intra_iteration >= 4.0);
+    }
+}

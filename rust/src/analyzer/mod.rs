@@ -1,0 +1,21 @@
+//! The OSACA throughput analyzer (paper §III).
+//!
+//! Distributes each instruction's µ-ops over their admissible ports with
+//! *fixed uniform probabilities* (paper assumption 2), sums per-port
+//! occupation, and reports the bottleneck port's cycles per assembly
+//! iteration. Special cases, faithful to OSACA 0.2:
+//!
+//! * divider pseudo-pipes (`0DV`/`DV`) carry multi-cycle occupancy while
+//!   the issuing port frees after one cycle;
+//! * on Zen, one load instruction's AGU occupancy is hidden behind each
+//!   store (`hide_load_behind_store`, Table IV's parenthesized entries);
+//! * branch instructions carry no port occupancy (blank rows);
+//! * no zero-idiom shortcuts and no macro-fusion — the model
+//!   deliberately over-counts where real hardware takes shortcuts
+//!   (§III-B: 4.25 cy predicted vs 4.00 measured for π at -O2).
+
+pub mod critpath;
+pub mod throughput;
+
+pub use critpath::{critical_path, CritPathReport};
+pub use throughput::{analyze, Analysis, LineOccupancy};

@@ -1,0 +1,222 @@
+//! Uniform-probability port-occupancy analysis (the OSACA prediction).
+
+use anyhow::Result;
+
+use crate::asm::Kernel;
+use crate::mdb::{MachineModel, Provenance, UopKind};
+
+/// Per-line port occupancy (one row of Tables II/IV/VI/VII).
+#[derive(Debug, Clone)]
+pub struct LineOccupancy {
+    /// Kernel instruction index.
+    pub instr: usize,
+    /// Source text of the instruction.
+    pub text: String,
+    /// Occupancy per port (cycles/iteration).
+    pub occupancy: Vec<f32>,
+    /// Hidden occupancy per port (Zen hideable loads — rendered in
+    /// parentheses and excluded from the totals).
+    pub hidden: Vec<f32>,
+    /// Where the µ-ops came from (measured entry vs synthesized).
+    pub provenance: Provenance,
+}
+
+/// The analyzer's result for one kernel on one machine.
+#[derive(Debug, Clone)]
+pub struct Analysis {
+    pub machine: String,
+    pub kernel: String,
+    pub lines: Vec<LineOccupancy>,
+    /// Total per-port occupancy (the table footer).
+    pub totals: Vec<f32>,
+    /// Predicted reciprocal throughput: max over ports, cycles per
+    /// assembly iteration.
+    pub cy_per_asm_iter: f32,
+    /// Index of the bottleneck port.
+    pub bottleneck_port: usize,
+}
+
+impl Analysis {
+    /// Cycles per *source* iteration given the unroll factor.
+    pub fn cy_per_source_it(&self, unroll: usize) -> f32 {
+        self.cy_per_asm_iter / unroll as f32
+    }
+}
+
+/// Run the OSACA throughput analysis of `kernel` against `machine`.
+pub fn analyze(kernel: &Kernel, machine: &MachineModel) -> Result<Analysis> {
+    let np = machine.n_ports();
+    let mut lines: Vec<LineOccupancy> = Vec::with_capacity(kernel.instructions.len());
+
+    // The Zen AGU rule: one load instruction's Load-µ-op occupancy is
+    // hidden per store instruction, in program order (Table IV hides the
+    // first load).
+    let mut hideable = if machine.hide_load_behind_store {
+        kernel.n_stores().min(kernel.n_loads())
+    } else {
+        0
+    };
+
+    for (i, ins) in kernel.instructions.iter().enumerate() {
+        let mut occ = vec![0f32; np];
+        let mut hid = vec![0f32; np];
+        if ins.is_branch() {
+            // Branches carry no port occupancy in OSACA's model.
+            lines.push(LineOccupancy {
+                instr: i,
+                text: ins.to_string(),
+                occupancy: occ,
+                hidden: hid,
+                provenance: Provenance::Direct,
+            });
+            continue;
+        }
+        let resolved = machine.resolve(ins)?;
+        let hide_this = ins.is_load() && hideable > 0;
+        if hide_this {
+            hideable -= 1;
+        }
+        for u in &resolved.entry.uops {
+            let share = u.occupancy / u.ports.count().max(1) as f32;
+            let target = if hide_this && u.kind == UopKind::Load { &mut hid } else { &mut occ };
+            for p in u.ports.iter() {
+                target[p] += share;
+            }
+        }
+        lines.push(LineOccupancy {
+            instr: i,
+            text: ins.to_string(),
+            occupancy: occ,
+            hidden: hid,
+            provenance: resolved.provenance,
+        });
+    }
+
+    let mut totals = vec![0f32; np];
+    for l in &lines {
+        for (t, o) in totals.iter_mut().zip(l.occupancy.iter()) {
+            *t += o;
+        }
+    }
+    let (bottleneck_port, &max) = totals
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .expect("machine has ports");
+    Ok(Analysis {
+        machine: machine.name.clone(),
+        kernel: kernel.name.clone(),
+        lines,
+        totals,
+        cy_per_asm_iter: max,
+        bottleneck_port,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::asm::extract_kernel;
+    use crate::mdb::{skylake, zen};
+
+    /// Paper Table II: triad -O3 compiled for Skylake, analyzed for SKL.
+    const TRIAD_SKL_O3: &str = "\n.L10:\nvmovapd (%r15,%rax), %ymm0\nvmovapd (%r12,%rax), %ymm3\naddl $1, %ecx\nvfmadd132pd 0(%r13,%rax), %ymm3, %ymm0\nvmovapd %ymm0, (%r14,%rax)\naddq $32, %rax\ncmpl %ecx, %r10d\nja .L10\n";
+
+    /// Paper Table IV: triad -O3 compiled for Zen (xmm, 2x unroll).
+    const TRIAD_ZEN_O3: &str = "\n.L10:\nvmovaps 0(%r13,%rax), %xmm0\nvmovaps (%r15,%rax), %xmm3\nincl %esi\nvfmadd132pd (%r14,%rax), %xmm3, %xmm0\nvmovaps %xmm0, (%r12,%rax)\naddq $16, %rax\ncmpl %esi, %ebx\nja .L10\n";
+
+    fn approx(a: f32, b: f32) -> bool {
+        (a - b).abs() < 0.011
+    }
+
+    #[test]
+    fn table2_skl_triad_totals() {
+        let k = extract_kernel("triad", TRIAD_SKL_O3).unwrap();
+        let m = skylake();
+        let a = analyze(&k, &m).unwrap();
+        // Paper Table II footer: P0..P7 = 1.25 1.25 2.0 2.0 1.0 0.75 0.75 0.0
+        let want = [1.25, 1.25, 2.0, 2.0, 1.0, 0.75, 0.75, 0.0];
+        for (i, w) in want.iter().enumerate() {
+            let p = m.port_index(&format!("P{i}")).unwrap();
+            assert!(approx(a.totals[p], *w), "P{i}: {} want {}", a.totals[p], w);
+        }
+        assert!(approx(a.cy_per_asm_iter, 2.0));
+        assert!(approx(a.cy_per_source_it(4), 0.5));
+    }
+
+    #[test]
+    fn table2_fma_line() {
+        let k = extract_kernel("triad", TRIAD_SKL_O3).unwrap();
+        let m = skylake();
+        let a = analyze(&k, &m).unwrap();
+        let fma = &a.lines[3];
+        // 0.50 0.50 on P0/P1 + 0.50 0.50 on P2/P3 (Table II row 4).
+        for port in ["P0", "P1", "P2", "P3"] {
+            let p = m.port_index(port).unwrap();
+            assert!(approx(fma.occupancy[p], 0.5), "{port}: {}", fma.occupancy[p]);
+        }
+    }
+
+    #[test]
+    fn table4_zen_triad_totals() {
+        let k = extract_kernel("triad", TRIAD_ZEN_O3).unwrap();
+        let m = zen();
+        let a = analyze(&k, &m).unwrap();
+        // Paper Table IV footer: FP0..3 = 1.25 1.25 0.75 0.75,
+        // ALU0..3 = 0.75, AGU0/1 = 2.0.
+        let want: &[(&str, f32)] = &[
+            ("FP0", 1.25),
+            ("FP1", 1.25),
+            ("FP2", 0.75),
+            ("FP3", 0.75),
+            ("ALU0", 0.75),
+            ("ALU1", 0.75),
+            ("ALU2", 0.75),
+            ("ALU3", 0.75),
+            ("AGU0", 2.0),
+            ("AGU1", 2.0),
+        ];
+        for (port, w) in want {
+            let p = m.port_index(port).unwrap();
+            assert!(approx(a.totals[p], *w), "{port}: {} want {}", a.totals[p], w);
+        }
+        assert!(approx(a.cy_per_asm_iter, 2.0));
+    }
+
+    #[test]
+    fn table4_first_load_hidden() {
+        let k = extract_kernel("triad", TRIAD_ZEN_O3).unwrap();
+        let m = zen();
+        let a = analyze(&k, &m).unwrap();
+        let first_load = &a.lines[0];
+        let agu0 = m.port_index("AGU0").unwrap();
+        assert!(approx(first_load.hidden[agu0], 0.5), "{}", first_load.hidden[agu0]);
+        assert!(approx(first_load.occupancy[agu0], 0.0));
+        // Second load is NOT hidden.
+        let second = &a.lines[1];
+        assert!(approx(second.occupancy[agu0], 0.5));
+        assert!(approx(second.hidden[agu0], 0.0));
+    }
+
+    #[test]
+    fn branch_rows_are_blank() {
+        let k = extract_kernel("triad", TRIAD_SKL_O3).unwrap();
+        let a = analyze(&k, &skylake()).unwrap();
+        let ja = a.lines.last().unwrap();
+        assert!(ja.occupancy.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn zen_runs_skl_avx_code_at_4_cycles() {
+        // Paper Table I row 3: SKL -O3 code analyzed for Zen -> 4.00 cy.
+        let k = extract_kernel("triad", TRIAD_SKL_O3).unwrap();
+        let a = analyze(&k, &zen()).unwrap();
+        assert!(approx(a.cy_per_asm_iter, 4.0), "{}", a.cy_per_asm_iter);
+    }
+
+    #[test]
+    fn unknown_instruction_is_an_error() {
+        let k = extract_kernel("t", "\n.L1:\nfrobnicate %xmm0, %xmm1\nja .L1\n").unwrap();
+        assert!(analyze(&k, &skylake()).is_err());
+    }
+}

@@ -1,0 +1,151 @@
+//! Kernel extraction: the marked loop body that the analyzer and the
+//! simulator consume.
+
+use anyhow::{bail, Context, Result};
+
+use crate::isa::Instruction;
+
+use super::marker::find_marked_region;
+use super::parser::{parse_file, Line};
+
+/// An extracted loop kernel: the instruction sequence of one assembly
+/// iteration, in program order, plus the loop back-edge label (if any).
+#[derive(Debug, Clone)]
+pub struct Kernel {
+    pub name: String,
+    pub instructions: Vec<Instruction>,
+    /// Label the terminating branch jumps to (loop head), if present.
+    pub loop_label: Option<String>,
+}
+
+impl Kernel {
+    pub fn from_instructions(name: &str, instructions: Vec<Instruction>) -> Self {
+        let loop_label = instructions
+            .iter()
+            .rev()
+            .find(|i| i.is_branch())
+            .and_then(|i| match i.operands.first() {
+                Some(crate::isa::operand::Operand::Label(l)) => Some(l.clone()),
+                _ => None,
+            });
+        Kernel { name: name.to_string(), instructions, loop_label }
+    }
+
+    /// Number of instructions excluding the back-edge branch (µ-op counts
+    /// in the paper's tables include the branch line but it gets no port).
+    pub fn len(&self) -> usize {
+        self.instructions.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.instructions.is_empty()
+    }
+
+    /// Loads / stores in the kernel (for the Zen hideable-load rule).
+    pub fn n_loads(&self) -> usize {
+        self.instructions.iter().filter(|i| i.is_load()).count()
+    }
+
+    pub fn n_stores(&self) -> usize {
+        self.instructions.iter().filter(|i| i.is_store()).count()
+    }
+}
+
+/// Extract the marked kernel from assembly source text.
+///
+/// If IACA/OSACA markers are present, the marked region is used;
+/// otherwise, the body of the innermost label/backward-branch loop is
+/// extracted (convenience for unmarked fixtures), and if neither exists
+/// the whole file's instructions are taken.
+pub fn extract_kernel(name: &str, src: &str) -> Result<Kernel> {
+    let lines = parse_file(src).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let region = find_marked_region(&lines);
+    let body: Vec<Line> = match region {
+        Some(r) => lines[r.start..r.end].to_vec(),
+        None => innermost_loop(&lines)
+            .context("no IACA/OSACA markers and no label/backward-branch loop found")?,
+    };
+    let instructions: Vec<Instruction> = body
+        .iter()
+        .filter_map(|l| match l {
+            Line::Instruction(i) => Some(i.clone()),
+            _ => None,
+        })
+        .collect();
+    if instructions.is_empty() {
+        bail!("marked region of `{name}` contains no instructions");
+    }
+    Ok(Kernel::from_instructions(name, instructions))
+}
+
+/// Fallback: find `label: ... ; jcc label` with the smallest span.
+fn innermost_loop(lines: &[Line]) -> Option<Vec<Line>> {
+    use std::collections::HashMap;
+    let mut label_pos: HashMap<&str, usize> = HashMap::new();
+    let mut best: Option<(usize, usize)> = None;
+    for (i, l) in lines.iter().enumerate() {
+        match l {
+            Line::Label(name) => {
+                label_pos.insert(name.as_str(), i);
+            }
+            Line::Instruction(ins) if ins.is_branch() => {
+                if let Some(crate::isa::operand::Operand::Label(t)) = ins.operands.first() {
+                    if let Some(&head) = label_pos.get(t.as_str()) {
+                        let span = i - head;
+                        if best.map(|(s, _)| span < s).unwrap_or(true) {
+                            best = Some((span, head));
+                        }
+                    }
+                }
+            }
+            _ => {}
+        }
+    }
+    best.map(|(span, head)| lines[head..head + span + 1].to_vec())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const LOOP: &str = r#"
+main:
+xorl %eax, %eax
+.L10:
+vmovapd (%r15,%rax), %ymm0
+addq $32, %rax
+cmpq %rdx, %rax
+jne .L10
+ret
+"#;
+
+    #[test]
+    fn unmarked_innermost_loop() {
+        let k = extract_kernel("t", LOOP).unwrap();
+        assert_eq!(k.len(), 4);
+        assert_eq!(k.loop_label.as_deref(), Some(".L10"));
+    }
+
+    #[test]
+    fn marked_region_preferred() {
+        let src = format!(
+            "movl $111, %ebx\n.byte 100,103,144\naddl $1, %eax\nmovl $222, %ebx\n.byte 100,103,144\n{LOOP}"
+        );
+        let k = extract_kernel("t", &src).unwrap();
+        assert_eq!(k.len(), 1);
+        assert_eq!(k.instructions[0].mnemonic, "addl");
+    }
+
+    #[test]
+    fn load_store_counts() {
+        let src = "\n.L1:\nvmovapd (%rax), %ymm0\nvmovapd %ymm0, (%rbx)\nja .L1\n";
+        let k = extract_kernel("t", src).unwrap();
+        assert_eq!(k.n_loads(), 1);
+        assert_eq!(k.n_stores(), 1);
+    }
+
+    #[test]
+    fn empty_file_errors() {
+        assert!(extract_kernel("t", "\n\n").is_err());
+    }
+}

@@ -1,0 +1,132 @@
+//! IACA/OSACA kernel markers (paper §III).
+//!
+//! OSACA supports the same byte markers as IACA:
+//!
+//! ```asm
+//! movl $111, %ebx        # start marker
+//! .byte 100,103,144
+//! ...kernel...
+//! movl $222, %ebx        # end marker
+//! .byte 100,103,144
+//! ```
+//!
+//! The `.byte 100,103,144` sequence encodes `fs addr32 nop`, a no-op the
+//! processor executes but IACA's disassembler recognizes. We detect the
+//! `movl $111/$222, %ebx` + `.byte` pairs in parsed lines.
+
+use crate::isa::operand::Operand;
+
+use super::parser::Line;
+
+pub const START_MARKER_IMM: i64 = 111;
+pub const END_MARKER_IMM: i64 = 222;
+pub const MARKER_BYTES: &str = "100,103,144";
+
+/// Location of the marked region: indices into the parsed `Line` slice,
+/// exclusive of the marker instructions themselves.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MarkedRegion {
+    pub start: usize,
+    pub end: usize,
+}
+
+fn is_marker_mov(line: &Line, imm: i64) -> bool {
+    match line {
+        Line::Instruction(i) => {
+            i.mnemonic == "movl"
+                && i.operands.len() == 2
+                && i.operands[0] == Operand::Imm(imm)
+                && matches!(&i.operands[1], Operand::Reg(r) if r.name == "ebx")
+        }
+        _ => false,
+    }
+}
+
+fn is_marker_bytes(line: &Line) -> bool {
+    match line {
+        Line::Directive { name, args } => {
+            name == "byte" && args.replace(' ', "") == MARKER_BYTES
+        }
+        _ => false,
+    }
+}
+
+/// Find the IACA/OSACA-marked region. Returns `None` when either marker is
+/// missing or malformed (mov without the byte sequence).
+pub fn find_marked_region(lines: &[Line]) -> Option<MarkedRegion> {
+    let mut start = None;
+    let mut end = None;
+    let mut i = 0;
+    while i < lines.len() {
+        if is_marker_mov(&lines[i], START_MARKER_IMM) {
+            // The byte directive must follow (possibly after blank lines).
+            let mut j = i + 1;
+            while j < lines.len() && matches!(lines[j], Line::Empty) {
+                j += 1;
+            }
+            if j < lines.len() && is_marker_bytes(&lines[j]) {
+                start = Some(j + 1);
+                i = j + 1;
+                continue;
+            }
+        }
+        if is_marker_mov(&lines[i], END_MARKER_IMM) && start.is_some() && end.is_none() {
+            end = Some(i);
+        }
+        i += 1;
+    }
+    match (start, end) {
+        (Some(s), Some(e)) if e >= s => Some(MarkedRegion { start: s, end: e }),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::asm::parser::parse_file;
+
+    const MARKED: &str = r#"
+movl $111, %ebx
+.byte 100,103,144
+.L10:
+vmovapd (%r15,%rax), %ymm0
+ja .L10
+movl $222, %ebx
+.byte 100,103,144
+"#;
+
+    #[test]
+    fn finds_region() {
+        let lines = parse_file(MARKED).unwrap();
+        let r = find_marked_region(&lines).unwrap();
+        // Region spans label + 2 instructions.
+        let body = &lines[r.start..r.end];
+        let n_instr = body
+            .iter()
+            .filter(|l| matches!(l, Line::Instruction(_)))
+            .count();
+        assert_eq!(n_instr, 2);
+    }
+
+    #[test]
+    fn missing_end_marker_is_none() {
+        let src = "movl $111, %ebx\n.byte 100,103,144\naddl $1, %eax\n";
+        let lines = parse_file(src).unwrap();
+        assert!(find_marked_region(&lines).is_none());
+    }
+
+    #[test]
+    fn mov_without_bytes_is_not_a_marker() {
+        let src = "movl $111, %ebx\naddl $1, %eax\nmovl $222, %ebx\n.byte 100,103,144\n";
+        let lines = parse_file(src).unwrap();
+        assert!(find_marked_region(&lines).is_none());
+    }
+
+    #[test]
+    fn spaced_byte_args_accepted() {
+        let src = "movl $111, %ebx\n.byte 100, 103, 144\nnop\nmovl $222, %ebx\n.byte 100,103,144\n";
+        let lines = parse_file(src).unwrap();
+        assert!(find_marked_region(&lines).is_some());
+    }
+}

@@ -1,0 +1,9 @@
+//! Assembly-file handling: AT&T x86 parsing, IACA/OSACA marker detection,
+//! and marked-kernel extraction (paper §III, Fig. 4).
+
+pub mod kernel;
+pub mod marker;
+pub mod parser;
+
+pub use kernel::{extract_kernel, Kernel};
+pub use parser::{parse_file, parse_instruction, Line, ParseError};

@@ -1,0 +1,301 @@
+//! AT&T-syntax x86-64 assembly parser.
+//!
+//! Parses the GNU-as subset GCC emits for loop kernels: labels,
+//! directives, instructions with register/immediate/memory/label
+//! operands. IACA consumes compiled object files; OSACA parses the
+//! textual assembly directly (paper §III), which is what we do.
+
+use std::fmt;
+
+use crate::isa::operand::{MemRef, Operand};
+use crate::isa::register::parse_register;
+use crate::isa::Instruction;
+
+/// One logical line of an assembly file.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Line {
+    /// `.L10:` — local or global label.
+    Label(String),
+    /// `.align 16`, `.byte 100,103,144`, ... Directive args kept raw.
+    Directive { name: String, args: String },
+    Instruction(Instruction),
+    Empty,
+}
+
+/// Parse failure with line context.
+#[derive(Debug, Clone)]
+pub struct ParseError {
+    pub line: usize,
+    pub text: String,
+    pub message: String,
+}
+
+impl fmt::Display for ParseError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "line {}: {} (in `{}`)", self.line, self.message, self.text)
+    }
+}
+
+impl std::error::Error for ParseError {}
+
+fn err(line: usize, text: &str, message: impl Into<String>) -> ParseError {
+    ParseError { line, text: text.to_string(), message: message.into() }
+}
+
+/// Parse a whole assembly file into logical lines.
+pub fn parse_file(src: &str) -> Result<Vec<Line>, ParseError> {
+    src.lines()
+        .enumerate()
+        .map(|(i, l)| parse_line(l, i + 1))
+        .collect()
+}
+
+/// Parse one source line (1-based line number for diagnostics).
+pub fn parse_line(raw: &str, lineno: usize) -> Result<Line, ParseError> {
+    // Strip comments: `#` to end of line (GNU as x86), and `/* */` is not
+    // emitted by GCC so we ignore it.
+    let code = match raw.find('#') {
+        Some(idx) => &raw[..idx],
+        None => raw,
+    };
+    let code = code.trim();
+    if code.is_empty() {
+        return Ok(Line::Empty);
+    }
+    if let Some(label) = code.strip_suffix(':') {
+        // Labels may be followed by code on the same line in theory, but
+        // GCC never emits that; treat trailing content as an error.
+        if label.contains(char::is_whitespace) {
+            return Err(err(lineno, raw, "label with embedded whitespace"));
+        }
+        return Ok(Line::Label(label.to_string()));
+    }
+    if let Some(rest) = code.strip_prefix('.') {
+        let (name, args) = match rest.split_once(char::is_whitespace) {
+            Some((n, a)) => (n, a.trim()),
+            None => (rest, ""),
+        };
+        return Ok(Line::Directive { name: name.to_string(), args: args.to_string() });
+    }
+    parse_instruction(code, lineno).map(Line::Instruction)
+}
+
+/// Parse a single instruction like `vfmadd132pd 0(%r13,%rax), %ymm3, %ymm0`.
+pub fn parse_instruction(code: &str, lineno: usize) -> Result<Instruction, ParseError> {
+    let code = code.trim();
+    let (mnemonic, rest) = match code.split_once(char::is_whitespace) {
+        Some((m, r)) => (m, r.trim()),
+        None => (code, ""),
+    };
+    if mnemonic.is_empty() {
+        return Err(err(lineno, code, "empty instruction"));
+    }
+    // Strip instruction prefixes we don't model.
+    if matches!(mnemonic, "lock" | "rep" | "repz" | "repnz" | "notrack") {
+        return parse_instruction(rest, lineno);
+    }
+    let mnemonic = mnemonic.to_ascii_lowercase();
+    let operands = if rest.is_empty() {
+        Vec::new()
+    } else {
+        split_operands(rest)
+            .into_iter()
+            .map(|o| parse_operand(o.trim(), lineno, code))
+            .collect::<Result<Vec<_>, _>>()?
+    };
+    Ok(Instruction { mnemonic, operands, line: lineno, raw: code.to_string() })
+}
+
+/// Split an operand list on commas that are not inside parentheses
+/// (memory references contain commas: `(%r13,%rax,8)`).
+fn split_operands(s: &str) -> Vec<&str> {
+    let mut out = Vec::new();
+    let mut depth = 0usize;
+    let mut start = 0usize;
+    for (i, c) in s.char_indices() {
+        match c {
+            '(' => depth += 1,
+            ')' => depth = depth.saturating_sub(1),
+            ',' if depth == 0 => {
+                out.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    out.push(&s[start..]);
+    out
+}
+
+fn parse_operand(s: &str, lineno: usize, ctx: &str) -> Result<Operand, ParseError> {
+    if s.is_empty() {
+        return Err(err(lineno, ctx, "empty operand"));
+    }
+    // Immediate: $123, $-1, $0x1f
+    if let Some(imm) = s.strip_prefix('$') {
+        let v = parse_int(imm).ok_or_else(|| err(lineno, ctx, format!("bad immediate `{s}`")))?;
+        return Ok(Operand::Imm(v));
+    }
+    // Register: %rax (possibly with * indirect-call sigil which we reject)
+    if let Some(name) = s.strip_prefix('%') {
+        let r = parse_register(name)
+            .ok_or_else(|| err(lineno, ctx, format!("unknown register `%{name}`")))?;
+        return Ok(Operand::Reg(r));
+    }
+    // Memory reference: disp(base,index,scale), possibly with segment or
+    // rip-relative symbol.
+    if s.contains('(') {
+        return parse_memref(s, lineno, ctx).map(Operand::Mem);
+    }
+    // Bare integer = absolute address (rare) — treat as memory.
+    if let Some(v) = parse_int(s) {
+        return Ok(Operand::Mem(MemRef {
+            displacement: v,
+            base: None,
+            index: None,
+            scale: 1,
+            segment: None,
+            symbol: None,
+        }));
+    }
+    // Branch target label.
+    Ok(Operand::Label(s.to_string()))
+}
+
+fn parse_memref(s: &str, lineno: usize, ctx: &str) -> Result<MemRef, ParseError> {
+    let (mut pre, inner) = match (s.find('('), s.rfind(')')) {
+        (Some(a), Some(b)) if b > a => (&s[..a], &s[a + 1..b]),
+        _ => return Err(err(lineno, ctx, format!("malformed memory operand `{s}`"))),
+    };
+    // Segment override: %fs:disp(...)
+    let mut segment = None;
+    if let Some((seg, rest)) = pre.split_once(':') {
+        if let Some(name) = seg.strip_prefix('%') {
+            segment = parse_register(name);
+        }
+        pre = rest;
+    }
+    let pre = pre.trim();
+    let (displacement, symbol) = if pre.is_empty() {
+        (0, None)
+    } else if let Some(v) = parse_int(pre) {
+        (v, None)
+    } else {
+        // Symbolic displacement (rip-relative or absolute symbol).
+        (0, Some(pre.to_string()))
+    };
+    let parts: Vec<&str> = inner.split(',').map(str::trim).collect();
+    let reg_of = |p: &str| -> Result<Option<crate::isa::Register>, ParseError> {
+        if p.is_empty() {
+            return Ok(None);
+        }
+        let name = p
+            .strip_prefix('%')
+            .ok_or_else(|| err(lineno, ctx, format!("expected register in `{s}`")))?;
+        parse_register(name)
+            .map(Some)
+            .ok_or_else(|| err(lineno, ctx, format!("unknown register `{p}`")))
+    };
+    let base = reg_of(parts.first().copied().unwrap_or(""))?;
+    let index = reg_of(parts.get(1).copied().unwrap_or(""))?;
+    let scale = match parts.get(2) {
+        Some(p) if !p.is_empty() => parse_int(p)
+            .filter(|v| matches!(v, 1 | 2 | 4 | 8))
+            .ok_or_else(|| err(lineno, ctx, format!("bad scale in `{s}`")))? as u8,
+        _ => 1,
+    };
+    Ok(MemRef { displacement, base, index, scale, segment, symbol })
+}
+
+fn parse_int(s: &str) -> Option<i64> {
+    let s = s.trim();
+    let (neg, s) = match s.strip_prefix('-') {
+        Some(r) => (true, r),
+        None => (false, s),
+    };
+    let v = if let Some(hex) = s.strip_prefix("0x").or_else(|| s.strip_prefix("0X")) {
+        i64::from_str_radix(hex, 16).ok()?
+    } else {
+        s.parse::<i64>().ok()?
+    };
+    Some(if neg { -v } else { v })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_triad_fma() {
+        let i = parse_instruction("vfmadd132pd 0(%r13,%rax), %ymm3, %ymm0", 1).unwrap();
+        assert_eq!(i.mnemonic, "vfmadd132pd");
+        assert_eq!(i.operands.len(), 3);
+        let m = i.operands[0].mem().unwrap();
+        assert_eq!(m.displacement, 0);
+        assert_eq!(m.base.unwrap().name, "r13");
+        assert_eq!(m.index.unwrap().name, "rax");
+    }
+
+    #[test]
+    fn parses_scaled_memref() {
+        let i = parse_instruction("vmovsd -8(%rcx,%rax,8), %xmm0", 1).unwrap();
+        let m = i.operands[0].mem().unwrap();
+        assert_eq!(m.displacement, -8);
+        assert_eq!(m.scale, 8);
+    }
+
+    #[test]
+    fn parses_labels_and_directives() {
+        assert_eq!(parse_line(".L10:", 1).unwrap(), Line::Label(".L10".into()));
+        match parse_line(".byte 100,103,144", 1).unwrap() {
+            Line::Directive { name, args } => {
+                assert_eq!(name, "byte");
+                assert_eq!(args, "100,103,144");
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn strips_comments() {
+        assert_eq!(parse_line("  # just a comment", 3).unwrap(), Line::Empty);
+        match parse_line("addl $1, %eax # bump", 4).unwrap() {
+            Line::Instruction(i) => assert_eq!(i.operands.len(), 2),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn hex_and_negative_immediates() {
+        let i = parse_instruction("vextracti128 $0x1, %ymm2, %xmm1", 1).unwrap();
+        assert_eq!(i.operands[0], Operand::Imm(1));
+        let i = parse_instruction("addq $-32, %rax", 1).unwrap();
+        assert_eq!(i.operands[0], Operand::Imm(-32));
+    }
+
+    #[test]
+    fn unknown_register_errors() {
+        assert!(parse_instruction("addl $1, %exx", 1).is_err());
+    }
+
+    #[test]
+    fn branch_label_operand() {
+        let i = parse_instruction("jne .L2", 1).unwrap();
+        assert_eq!(i.operands[0], Operand::Label(".L2".into()));
+    }
+
+    #[test]
+    fn rip_relative_symbol() {
+        let i = parse_instruction("vmovsd .LC2(%rip), %xmm4", 1).unwrap();
+        let m = i.operands[0].mem().unwrap();
+        assert_eq!(m.symbol.as_deref(), Some(".LC2"));
+        assert_eq!(m.base.unwrap().name, "rip");
+    }
+
+    #[test]
+    fn whole_file_parses() {
+        let src = "\n.L10:\n\tvmovapd (%r15,%rax), %ymm0 # load\n\tja .L10\n";
+        let lines = parse_file(src).unwrap();
+        assert_eq!(lines.len(), 4);
+    }
+}

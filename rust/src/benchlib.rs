@@ -1,0 +1,123 @@
+//! Minimal criterion-style benchmark harness.
+//!
+//! The build environment is offline and criterion is not vendored, so
+//! `cargo bench` targets (`harness = false`) use this: warm-up, N timed
+//! samples, median/mean/stddev, and a one-line report comparable to
+//! criterion's. Also provides table-printing helpers used by the
+//! per-paper-table bench binaries.
+
+use std::time::{Duration, Instant};
+
+/// One benchmark statistic.
+#[derive(Debug, Clone)]
+pub struct Stats {
+    pub name: String,
+    pub samples: usize,
+    pub mean: Duration,
+    pub median: Duration,
+    pub stddev: Duration,
+    pub min: Duration,
+    pub max: Duration,
+}
+
+impl Stats {
+    pub fn report(&self) -> String {
+        format!(
+            "{:<44} time: [{:>11?} {:>11?} {:>11?}]  ±{:?} ({} samples)",
+            self.name, self.min, self.median, self.max, self.stddev, self.samples
+        )
+    }
+
+    /// Throughput helper: elements per second at the median.
+    pub fn per_sec(&self, elements: u64) -> f64 {
+        elements as f64 / self.median.as_secs_f64()
+    }
+}
+
+/// Run `f` repeatedly: warm-up for `warmup`, then collect `samples`
+/// timed runs. `f` should perform one complete unit of work.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, samples: usize, mut f: F) -> Stats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut times: Vec<Duration> = Vec::with_capacity(samples);
+    for _ in 0..samples {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed());
+    }
+    times.sort();
+    let median = times[times.len() / 2];
+    let total: Duration = times.iter().sum();
+    let mean = total / times.len() as u32;
+    let mean_s = mean.as_secs_f64();
+    let var = times
+        .iter()
+        .map(|t| {
+            let d = t.as_secs_f64() - mean_s;
+            d * d
+        })
+        .sum::<f64>()
+        / times.len() as f64;
+    let stddev = Duration::from_secs_f64(var.sqrt());
+    Stats {
+        name: name.to_string(),
+        samples,
+        mean,
+        median,
+        stddev,
+        min: times[0],
+        max: *times.last().unwrap(),
+    }
+}
+
+/// Default sample counts used by the bench binaries.
+pub const WARMUP: usize = 3;
+pub const SAMPLES: usize = 15;
+
+/// Print a markdown-ish table: header + rows of equal arity.
+pub fn print_table(title: &str, header: &[&str], rows: &[Vec<String>]) {
+    println!("\n== {title} ==");
+    let ncol = header.len();
+    let mut widths: Vec<usize> = header.iter().map(|h| h.len()).collect();
+    for r in rows {
+        for (i, c) in r.iter().enumerate().take(ncol) {
+            widths[i] = widths[i].max(c.len());
+        }
+    }
+    let fmt_row = |cells: Vec<String>| {
+        cells
+            .iter()
+            .enumerate()
+            .map(|(i, c)| format!("{:>w$}", c, w = widths[i.min(ncol - 1)]))
+            .collect::<Vec<_>>()
+            .join(" | ")
+    };
+    println!("{}", fmt_row(header.iter().map(|s| s.to_string()).collect()));
+    println!("{}", widths.iter().map(|w| "-".repeat(*w)).collect::<Vec<_>>().join("-|-"));
+    for r in rows {
+        println!("{}", fmt_row(r.clone()));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_collects_samples() {
+        let mut n = 0u64;
+        let s = bench("noop", 1, 5, || n += 1);
+        assert_eq!(s.samples, 5);
+        assert_eq!(n, 6);
+        assert!(s.min <= s.median && s.median <= s.max);
+    }
+
+    #[test]
+    fn per_sec_positive() {
+        let s = bench("sleepless", 0, 3, || {
+            std::hint::black_box(42);
+        });
+        assert!(s.per_sec(1000) > 0.0);
+    }
+}

@@ -1,0 +1,257 @@
+//! Analysis coordinator: the service layer.
+//!
+//! Batches concurrent analysis requests into the fixed-size slots of
+//! the AOT artifact (B = 8), the way a serving framework batches model
+//! requests: requests are queued to a dedicated solver thread, flushed
+//! either when a batch fills or when the oldest request exceeds the
+//! batching window, and executed in one PJRT call. The OSACA analysis
+//! and critical-path analysis run inline (they are pure rust and
+//! cheap); only the balanced-baseline solve goes through the batcher.
+//!
+//! tokio is not available in this offline build, so the implementation
+//! uses std::thread + mpsc; the public API is synchronous with
+//! oneshot-style replies.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, SyncSender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+use crate::analyzer::{analyze, critical_path, Analysis, CritPathReport};
+use crate::asm::{extract_kernel, Kernel};
+use crate::baseline::{encode, BaselinePrediction};
+use crate::mdb::{self, MachineModel};
+use crate::runtime::{solve_cpu, EncodedKernel, PortSolver, SolveOut, BATCH};
+
+/// A full analysis response.
+#[derive(Debug, Clone)]
+pub struct AnalysisResponse {
+    pub osaca: Analysis,
+    pub baseline: BaselinePrediction,
+    pub critpath: CritPathReport,
+}
+
+/// Service statistics (exposed for the perf pass and `serve` CLI).
+#[derive(Debug, Default)]
+pub struct ServiceStats {
+    pub requests: AtomicU64,
+    pub batches: AtomicU64,
+    pub batched_kernels: AtomicU64,
+    pub solve_micros: AtomicU64,
+}
+
+impl ServiceStats {
+    pub fn avg_batch_size(&self) -> f64 {
+        let b = self.batches.load(Ordering::Relaxed);
+        if b == 0 {
+            return 0.0;
+        }
+        self.batched_kernels.load(Ordering::Relaxed) as f64 / b as f64
+    }
+}
+
+enum SolverBackend {
+    /// AOT artifact through PJRT.
+    Artifact(PortSolver),
+    /// Pure-rust fallback (identical math; used when artifacts are not
+    /// built, and in unit tests).
+    Cpu,
+}
+
+struct Job {
+    enc: EncodedKernel,
+    reply: SyncSender<SolveOut>,
+}
+
+/// The coordinator service. Cloneable handles submit requests; one
+/// solver thread owns the PJRT executable.
+pub struct Coordinator {
+    tx: Option<SyncSender<Job>>,
+    worker: Option<JoinHandle<()>>,
+    pub stats: Arc<ServiceStats>,
+    /// Batching window: how long the solver thread waits for more
+    /// requests before flushing a partial batch.
+    pub window: Duration,
+}
+
+impl Coordinator {
+    /// Create a coordinator; the backend is constructed *inside* the
+    /// solver thread (the PJRT client is not `Send`).
+    fn new<F>(make_backend: F, window: Duration) -> Self
+    where
+        F: FnOnce() -> SolverBackend + Send + 'static,
+    {
+        let (tx, rx) = mpsc::sync_channel::<Job>(1024);
+        let stats = Arc::new(ServiceStats::default());
+        let wstats = stats.clone();
+        let worker = std::thread::Builder::new()
+            .name("osaca-solver".into())
+            .spawn(move || solver_loop(rx, make_backend(), wstats, window))
+            .expect("spawn solver thread");
+        Coordinator { tx: Some(tx), worker: Some(worker), stats, window }
+    }
+
+    /// Coordinator backed by the AOT artifact at the default location
+    /// (PJRT); errors surface on first use via the CPU fallback.
+    pub fn with_artifact() -> Self {
+        Self::new(
+            || match PortSolver::load_default() {
+                Ok(s) => SolverBackend::Artifact(s),
+                Err(e) => {
+                    eprintln!("artifact unavailable ({e}); using cpu solver");
+                    SolverBackend::Cpu
+                }
+            },
+            Duration::from_micros(200),
+        )
+    }
+
+    /// Coordinator backed by the pure-rust solver.
+    pub fn cpu_only() -> Self {
+        Self::new(|| SolverBackend::Cpu, Duration::from_micros(200))
+    }
+
+    /// Artifact if present, CPU solver otherwise.
+    pub fn auto() -> Self {
+        Self::with_artifact()
+    }
+
+    /// Analyze assembly source for `arch`: OSACA throughput analysis +
+    /// critical path inline, balanced baseline through the batcher.
+    pub fn analyze_source(&self, name: &str, src: &str, arch: &str) -> Result<AnalysisResponse> {
+        let machine =
+            mdb::by_name(arch).ok_or_else(|| anyhow!("unknown architecture `{arch}`"))?;
+        let kernel = extract_kernel(name, src)?;
+        self.analyze_kernel(&kernel, &machine)
+    }
+
+    /// Analyze an already-extracted kernel.
+    pub fn analyze_kernel(
+        &self,
+        kernel: &Kernel,
+        machine: &MachineModel,
+    ) -> Result<AnalysisResponse> {
+        self.stats.requests.fetch_add(1, Ordering::Relaxed);
+        let osaca = analyze(kernel, machine)?;
+        let critpath = critical_path(kernel, machine)?;
+        let enc = encode(kernel, machine)?;
+        let (rtx, rrx) = mpsc::sync_channel(1);
+        self.tx
+            .as_ref()
+            .expect("coordinator running")
+            .send(Job { enc, reply: rtx })
+            .map_err(|_| anyhow!("solver thread gone"))?;
+        let out = rrx
+            .recv_timeout(Duration::from_secs(30))
+            .map_err(|e| anyhow!("solver reply timeout: {e}"))?;
+        let baseline = BaselinePrediction {
+            cy_per_asm_iter: out.tp_balanced,
+            uniform_cy: out.tp_uniform,
+            port_pressure: out.press_balanced,
+        };
+        Ok(AnalysisResponse { osaca, baseline, critpath })
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        drop(self.tx.take());
+        if let Some(h) = self.worker.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn solver_loop(
+    rx: Receiver<Job>,
+    backend: SolverBackend,
+    stats: Arc<ServiceStats>,
+    window: Duration,
+) {
+    loop {
+        // Block for the first job of a batch.
+        let first = match rx.recv() {
+            Ok(j) => j,
+            Err(_) => return, // all senders dropped
+        };
+        let mut jobs = vec![first];
+        let deadline = Instant::now() + window;
+        while jobs.len() < BATCH {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(j) => jobs.push(j),
+                Err(RecvTimeoutError::Timeout) => break,
+                Err(RecvTimeoutError::Disconnected) => break,
+            }
+        }
+        let encs: Vec<EncodedKernel> = jobs.iter().map(|j| j.enc.clone()).collect();
+        let t0 = Instant::now();
+        let outs = match &backend {
+            SolverBackend::Artifact(s) => match s.solve(&encs) {
+                Ok(o) => o,
+                Err(e) => {
+                    eprintln!("artifact solve failed ({e}); falling back to cpu");
+                    solve_cpu(&encs, 32)
+                }
+            },
+            SolverBackend::Cpu => solve_cpu(&encs, 32),
+        };
+        stats.batches.fetch_add(1, Ordering::Relaxed);
+        stats.batched_kernels.fetch_add(jobs.len() as u64, Ordering::Relaxed);
+        stats
+            .solve_micros
+            .fetch_add(t0.elapsed().as_micros() as u64, Ordering::Relaxed);
+        for (job, out) in jobs.into_iter().zip(outs.into_iter()) {
+            let _ = job.reply.send(out);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads;
+
+    #[test]
+    fn cpu_coordinator_analyzes_triad() {
+        let c = Coordinator::cpu_only();
+        let w = workloads::find("triad", "skl", "-O3").unwrap();
+        let r = c.analyze_source(&w.name(), w.source, "skl").unwrap();
+        assert!((r.osaca.cy_per_asm_iter - 2.0).abs() < 0.01);
+        assert!(r.baseline.cy_per_asm_iter <= r.osaca.cy_per_asm_iter + 0.25);
+        assert_eq!(c.stats.requests.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn unknown_arch_is_error() {
+        let c = Coordinator::cpu_only();
+        assert!(c.analyze_source("x", ".L1:\naddl $1, %eax\njne .L1\n", "m1max").is_err());
+    }
+
+    #[test]
+    fn concurrent_requests_get_batched() {
+        let c = Arc::new(Coordinator::cpu_only());
+        let mut handles = Vec::new();
+        for _ in 0..16 {
+            let c = c.clone();
+            handles.push(std::thread::spawn(move || {
+                let w = workloads::find("pi", "skl", "-O2").unwrap();
+                c.analyze_source(&w.name(), w.source, "skl").unwrap().osaca.cy_per_asm_iter
+            }));
+        }
+        for h in handles {
+            let cy = h.join().unwrap();
+            assert!((cy - 4.25).abs() < 0.01, "{cy}");
+        }
+        assert_eq!(c.stats.requests.load(Ordering::Relaxed), 16);
+        // Batching must have coalesced at least some requests.
+        assert!(c.stats.batches.load(Ordering::Relaxed) <= 16);
+        assert!(c.stats.avg_batch_size() >= 1.0);
+    }
+}

@@ -1,0 +1,229 @@
+//! Benchmark-loop generation.
+//!
+//! Builds AT&T assembly source text for latency chains, parallelism
+//! sweeps and port-conflict probes, mirroring the loops shown in paper
+//! §II-A/§II-C. The generated text goes through the ordinary parser and
+//! kernel extraction, so benchmarks exercise exactly the same pipeline
+//! as user kernels.
+
+use anyhow::{bail, Result};
+
+use crate::isa::InstructionForm;
+
+/// What to benchmark: an instruction form, e.g.
+/// `vfmadd132pd-mem_xmm_xmm`.
+#[derive(Debug, Clone)]
+pub struct BenchSpec {
+    pub form: InstructionForm,
+}
+
+impl BenchSpec {
+    pub fn parse(s: &str) -> Self {
+        BenchSpec { form: InstructionForm::parse(s) }
+    }
+
+    fn sig_tokens(&self) -> Vec<&str> {
+        if self.form.sig.0.is_empty() {
+            Vec::new()
+        } else {
+            self.form.sig.0.split('_').collect()
+        }
+    }
+
+    /// Register spelling for an operand class and pool index.
+    ///
+    /// Pools (disjoint by construction so chains never tangle):
+    /// * vector: dests 0..=12 -> xmm/ymm 0..12, sources 13..=15;
+    /// * GP: dests 0..4 -> r8..r11, sources 13/14 -> r12/r13,
+    ///   probe-dests 16..21 -> esi/edi/ebp/r14/r15
+    ///   (rax/rbx are memory bases, ecx/edx the loop counter).
+    fn reg(&self, tok: &str, idx: usize) -> Result<String> {
+        let gp = |idx: usize| -> String {
+            const PROBE_POOL: [&str; 5] = ["rsi", "rdi", "rbp", "r14", "r15"];
+            if idx >= 16 {
+                PROBE_POOL[(idx - 16) % 5].to_string()
+            } else if idx >= 13 {
+                format!("r{}", 12 + (idx - 13) % 2)
+            } else {
+                format!("r{}", 8 + idx % 4)
+            }
+        };
+        let gp32 = |idx: usize| -> String {
+            const PROBE_POOL: [&str; 5] = ["esi", "edi", "ebp", "r14d", "r15d"];
+            if idx >= 16 {
+                PROBE_POOL[(idx - 16) % 5].to_string()
+            } else if idx >= 13 {
+                format!("r{}d", 12 + (idx - 13) % 2)
+            } else {
+                format!("r{}d", 8 + idx % 4)
+            }
+        };
+        Ok(match tok {
+            "xmm" => format!("%xmm{}", idx.min(15)),
+            "ymm" => format!("%ymm{}", idx.min(15)),
+            "r64" => format!("%{}", gp(idx)),
+            "r32" | "r" => format!("%{}", gp32(idx)),
+            other => bail!("cannot choose a register for operand class `{other}`"),
+        })
+    }
+
+    /// Render one instance of the instruction.
+    ///
+    /// * `dest_idx` — register index of the destination;
+    /// * `src_idx` — register index used for the *first* register source
+    ///   (the chained one in latency loops);
+    /// * `other_idx` — register index for remaining sources.
+    fn render(&self, dest_idx: usize, src_idx: usize, other_idx: usize) -> Result<String> {
+        let toks = self.sig_tokens();
+        if toks.is_empty() {
+            return Ok(self.form.mnemonic.clone());
+        }
+        let n = toks.len();
+        let mut ops: Vec<String> = Vec::with_capacity(n);
+        let mut first_reg_source = true;
+        for (i, tok) in toks.iter().enumerate() {
+            let is_dest = i + 1 == n;
+            let text = match *tok {
+                "mem" => {
+                    if is_dest {
+                        "(%rbx)".to_string() // store target, loop-invariant
+                    } else {
+                        "(%rax)".to_string() // load source, loop-invariant
+                    }
+                }
+                "imm" => "$1".to_string(),
+                "lbl" => bail!("cannot benchmark branch forms"),
+                cls => {
+                    if is_dest {
+                        self.reg(cls, dest_idx)?
+                    } else if first_reg_source {
+                        first_reg_source = false;
+                        self.reg(cls, src_idx)?
+                    } else {
+                        self.reg(cls, other_idx)?
+                    }
+                }
+            };
+            ops.push(text);
+        }
+        Ok(format!("{} {}", self.form.mnemonic, ops.join(", ")))
+    }
+}
+
+const LOOP_OVERHEAD: &str = "addl $1, %ecx\ncmpl %ecx, %edx\njne .Lbench\n";
+
+/// Latency benchmark: `unroll` chained copies (paper §II-A first listing:
+/// destination of each instruction is a source of the next).
+pub fn latency_loop(spec: &BenchSpec, unroll: usize) -> Result<String> {
+    let mut body = String::new();
+    for _ in 0..unroll {
+        // dest == chained source register 0.
+        body.push_str(&spec.render(0, 0, 6)?);
+        body.push('\n');
+    }
+    Ok(format!(".Lbench:\n{body}{LOOP_OVERHEAD}"))
+}
+
+/// Parallelism sweep: `chains` independent dependency chains, each
+/// `depth` instructions long (paper §II-A second listing: three chains,
+/// unrolled; §II-C sweeps 1..12 chains).
+pub fn parallel_loop(spec: &BenchSpec, chains: usize, depth: usize) -> Result<String> {
+    let mut body = String::new();
+    for _ in 0..depth {
+        for c in 0..chains {
+            body.push_str(&spec.render(c, c, 13)?);
+            body.push('\n');
+        }
+    }
+    Ok(format!(".Lbench:\n{body}{LOOP_OVERHEAD}"))
+}
+
+/// Fully independent throughput loop ("TP"): destinations rotate over a
+/// wide register range, sources are never written.
+pub fn throughput_loop(spec: &BenchSpec, width: usize) -> Result<String> {
+    let mut body = String::new();
+    for c in 0..width {
+        // dest rotates 0..width; sources fixed at 13/14 (never written).
+        body.push_str(&spec.render(c, 13, 14)?);
+        body.push('\n');
+    }
+    Ok(format!(".Lbench:\n{body}{LOOP_OVERHEAD}"))
+}
+
+/// Port-conflict probe (paper §II-B/§II-C): the TP loop of `a`
+/// interleaved with instances of `b`, all operands independent.
+///
+/// `a`'s destinations rotate over the full dest pool (so even forms
+/// that read their destination, like FMA, expose enough parallelism);
+/// `b` writes the dedicated probe pool (vector: xmm12; GP:
+/// esi/edi/ebp/r14/r15) and reads only never-written source registers.
+pub fn conflict_loop(a: &BenchSpec, b: &BenchSpec, width: usize) -> Result<String> {
+    let mut body = String::new();
+    for c in 0..width {
+        body.push_str(&a.render(c, c, 14)?);
+        body.push('\n');
+        body.push_str(&b.render(16 + c % 5, 13, 13)?);
+        body.push('\n');
+    }
+    Ok(format!(".Lbench:\n{body}{LOOP_OVERHEAD}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::asm::extract_kernel;
+
+    #[test]
+    fn latency_loop_chains_registers() {
+        let spec = BenchSpec::parse("vaddpd-xmm_xmm_xmm");
+        let src = latency_loop(&spec, 4).unwrap();
+        let k = extract_kernel("lat", &src).unwrap();
+        // 4 chained adds + 2 overhead instructions + branch.
+        assert_eq!(k.len(), 7);
+        // Every vaddpd writes xmm0 and reads xmm0.
+        for i in k.instructions.iter().filter(|i| i.mnemonic == "vaddpd") {
+            assert!(i.to_string().contains("%xmm0, %xmm6, %xmm0") || i.raw.contains("%xmm0"));
+        }
+    }
+
+    #[test]
+    fn parallel_loop_has_k_chains() {
+        let spec = BenchSpec::parse("vaddpd-xmm_xmm_xmm");
+        let src = parallel_loop(&spec, 5, 3).unwrap();
+        let k = extract_kernel("par", &src).unwrap();
+        let adds = k.instructions.iter().filter(|i| i.mnemonic == "vaddpd").count();
+        assert_eq!(adds, 15);
+    }
+
+    #[test]
+    fn mem_form_uses_memory_source() {
+        let spec = BenchSpec::parse("vfmadd132pd-mem_xmm_xmm");
+        let src = latency_loop(&spec, 1).unwrap();
+        assert!(src.contains("vfmadd132pd (%rax), %xmm0, %xmm0"));
+    }
+
+    #[test]
+    fn branch_forms_rejected() {
+        let spec = BenchSpec::parse("jne-lbl");
+        assert!(latency_loop(&spec, 1).is_err());
+    }
+
+    #[test]
+    fn conflict_loop_interleaves() {
+        let a = BenchSpec::parse("vfmadd132pd-mem_xmm_xmm");
+        let b = BenchSpec::parse("vmulpd-xmm_xmm_xmm");
+        let src = conflict_loop(&a, &b, 6).unwrap();
+        let k = extract_kernel("conf", &src).unwrap();
+        let fmas = k.instructions.iter().filter(|i| i.mnemonic == "vfmadd132pd").count();
+        let muls = k.instructions.iter().filter(|i| i.mnemonic == "vmulpd").count();
+        assert_eq!(fmas, 6);
+        assert_eq!(muls, 6);
+    }
+
+    #[test]
+    fn store_form_targets_memory() {
+        let spec = BenchSpec::parse("vmovapd-xmm_mem");
+        let src = throughput_loop(&spec, 4).unwrap();
+        assert!(src.contains("vmovapd %xmm13, (%rbx)"), "{src}");
+    }
+}

@@ -1,0 +1,23 @@
+//! ibench-style micro-benchmark generation and execution (paper §II-A/B,
+//! citing Hofmann's ibench [21]).
+//!
+//! Generates the three benchmark families of the paper and runs them on
+//! the simulator substrate:
+//!
+//! * **latency**: one dependency chain — destination of each instruction
+//!   feeds the next;
+//! * **throughput / parallelism sweep**: k independent chains for
+//!   k ∈ {1, 2, 4, 5, 8, 10, 12} plus a fully independent "TP" variant
+//!   (the paper's `vfmadd132pd-xmm_xmm_mem-{k}` output);
+//! * **port conflict** (§II-B): a throughput-bound loop of instruction A
+//!   interleaved with instruction B — if the combined reciprocal
+//!   throughput exceeds A's own, A and B share a port.
+
+pub mod gen;
+pub mod runner;
+
+pub use gen::{conflict_loop, latency_loop, parallel_loop, throughput_loop, BenchSpec};
+pub use runner::{
+    measure_latency, measure_throughput, run_bench, run_conflict, run_sweep, BenchResult,
+    SweepResult,
+};

@@ -1,0 +1,218 @@
+//! Run generated benchmarks on the simulator substrate and report
+//! per-instruction cycle counts, in the format of the paper's §II-C
+//! ibench output listings.
+
+use anyhow::Result;
+
+use crate::asm::extract_kernel;
+use crate::mdb::MachineModel;
+use crate::sim::{simulate, SimConfig};
+
+use super::gen::{conflict_loop, latency_loop, parallel_loop, throughput_loop, BenchSpec};
+
+/// One benchmark measurement.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    /// Benchmark label, e.g. `vfmadd132pd-mem_xmm_xmm-8`.
+    pub label: String,
+    /// Cycles per instruction of the benchmarked form.
+    pub cy_per_instr: f64,
+}
+
+/// Full parallelism sweep of one instruction form (paper §II-C listing).
+#[derive(Debug, Clone)]
+pub struct SweepResult {
+    pub form: String,
+    /// (chains, cy/instr) for each sweep point.
+    pub points: Vec<(usize, f64)>,
+    /// TP benchmark (fully independent).
+    pub tp: f64,
+    /// Latency (single chain, per chained instruction).
+    pub latency: f64,
+}
+
+impl SweepResult {
+    /// Render in the paper's ibench output format.
+    pub fn render(&self, freq_ghz: f64) -> String {
+        let mut out = format!("Using frequency {freq_ghz:.2}GHz.\n");
+        out.push_str(&format!(
+            "{}-1:  {:>7.3} (clk cy)\n",
+            self.form, self.latency
+        ));
+        for (k, cy) in &self.points {
+            out.push_str(&format!("{}-{}:  {:>7.3} (clk cy)\n", self.form, k, cy));
+        }
+        out.push_str(&format!("{}-TP:  {:>7.3} (clk cy)\n", self.form, self.tp));
+        out
+    }
+}
+
+fn sim_cy_per_instr(src: &str, machine: &MachineModel, n_instr: usize) -> Result<f64> {
+    let kernel = extract_kernel("bench", src)?;
+    let m = simulate(&kernel, machine, SimConfig { iterations: 400, warmup: 100 })?;
+    Ok(m.cycles_per_iteration / n_instr as f64)
+}
+
+/// Measure the latency of an instruction form (single chain).
+pub fn measure_latency(spec: &BenchSpec, machine: &MachineModel) -> Result<f64> {
+    let unroll = 4;
+    let src = latency_loop(spec, unroll)?;
+    sim_cy_per_instr(&src, machine, unroll)
+}
+
+/// Measure reciprocal throughput (fully independent TP loop).
+pub fn measure_throughput(spec: &BenchSpec, machine: &MachineModel) -> Result<f64> {
+    let width = 12;
+    let src = throughput_loop(spec, width)?;
+    sim_cy_per_instr(&src, machine, width)
+}
+
+/// Run one named benchmark variant.
+pub fn run_bench(spec: &BenchSpec, machine: &MachineModel, chains: usize) -> Result<BenchResult> {
+    let depth = (24 / chains).max(2);
+    let src = parallel_loop(spec, chains, depth)?;
+    let cy = sim_cy_per_instr(&src, machine, chains * depth)?;
+    Ok(BenchResult { label: format!("{}-{}", spec.form, chains), cy_per_instr: cy })
+}
+
+/// Write the generated benchmark family for one instruction form to
+/// `dir` as `.s` files (the layout of the paper's artifact repository):
+/// `<form>-lat.s`, `<form>-<k>.s` for each sweep point, `<form>-TP.s`.
+/// Returns the file paths written.
+pub fn emit_bench_files(
+    spec: &BenchSpec,
+    dir: &std::path::Path,
+) -> Result<Vec<std::path::PathBuf>> {
+    std::fs::create_dir_all(dir)?;
+    let mut written = Vec::new();
+    let base = spec.form.to_string().replace(['/', ' '], "_");
+    let mut emit = |suffix: &str, body: String| -> Result<()> {
+        let path = dir.join(format!("{base}-{suffix}.s"));
+        std::fs::write(&path, body)?;
+        written.push(path);
+        Ok(())
+    };
+    emit("lat", latency_loop(spec, 4)?)?;
+    for k in [2usize, 4, 5, 8, 10, 12] {
+        emit(&k.to_string(), parallel_loop(spec, k, (24 / k).max(2))?)?;
+    }
+    emit("TP", throughput_loop(spec, 12)?)?;
+    Ok(written)
+}
+
+/// The §II-C parallelism sweep: k ∈ {2,4,5,8,10,12} plus latency and TP.
+pub fn run_sweep(spec: &BenchSpec, machine: &MachineModel) -> Result<SweepResult> {
+    let latency = measure_latency(spec, machine)?;
+    let mut points = Vec::new();
+    for k in [2usize, 4, 5, 8, 10, 12] {
+        let r = run_bench(spec, machine, k)?;
+        points.push((k, r.cy_per_instr));
+    }
+    let tp = measure_throughput(spec, machine)?;
+    Ok(SweepResult { form: spec.form.to_string(), points, tp, latency })
+}
+
+/// Port-conflict probe: cy per A-instruction when interleaved 1:1 with B
+/// (paper §II-B). Compare against A's own TP to detect sharing.
+pub fn run_conflict(
+    a: &BenchSpec,
+    b: &BenchSpec,
+    machine: &MachineModel,
+) -> Result<BenchResult> {
+    // Width 10: enough chains that even a 5-cycle-latency FMA is
+    // throughput-bound (paper §II-C sweeps to 10-12 for the same reason).
+    let width = 10;
+    let src = conflict_loop(a, b, width)?;
+    let cy = sim_cy_per_instr(&src, machine, width)?;
+    Ok(BenchResult { label: format!("{}-TP-{}", a.form, b.form.mnemonic), cy_per_instr: cy })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mdb::{skylake, zen};
+
+    #[test]
+    fn vaddpd_latency_matches_paper() {
+        // §II-A: 4 cy on Skylake, 3 cy on Zen.
+        let spec = BenchSpec::parse("vaddpd-xmm_xmm_xmm");
+        let skl = measure_latency(&spec, &skylake()).unwrap();
+        assert!((skl - 4.0).abs() < 0.2, "{skl}");
+        let z = measure_latency(&spec, &zen()).unwrap();
+        assert!((z - 3.0).abs() < 0.2, "{z}");
+    }
+
+    #[test]
+    fn vaddpd_throughput_is_half_cycle() {
+        // §II-A: rTP 0.5 on both architectures (two ports).
+        let spec = BenchSpec::parse("vaddpd-xmm_xmm_xmm");
+        for m in [skylake(), zen()] {
+            let tp = measure_throughput(&spec, &m).unwrap();
+            assert!((tp - 0.5).abs() < 0.1, "{}: {tp}", m.name);
+        }
+    }
+
+    #[test]
+    fn fma_mem_sweep_matches_paper_zen() {
+        // §II-C Zen listing: lat 5, k=2 -> 2.5, k=5 -> ~1.0, TP -> 0.5.
+        let spec = BenchSpec::parse("vfmadd132pd-mem_xmm_xmm");
+        let sweep = run_sweep(&spec, &zen()).unwrap();
+        assert!((sweep.latency - 5.0).abs() < 0.3, "lat {}", sweep.latency);
+        let k2 = sweep.points.iter().find(|(k, _)| *k == 2).unwrap().1;
+        assert!((k2 - 2.5).abs() < 0.3, "k2 {k2}");
+        let k10 = sweep.points.iter().find(|(k, _)| *k == 10).unwrap().1;
+        assert!((k10 - 0.5).abs() < 0.15, "k10 {k10}");
+        assert!((sweep.tp - 0.5).abs() < 0.1, "tp {}", sweep.tp);
+    }
+
+    #[test]
+    fn conflict_detects_shared_fma_mul_on_zen() {
+        // §II-C: vmulpd cannot be hidden behind vfmadd132pd (both FP0/1:
+        // combined ~1.0 cy), vaddpd can (FP2/3: combined ~0.5 cy).
+        let fma = BenchSpec::parse("vfmadd132pd-mem_xmm_xmm");
+        let mul = BenchSpec::parse("vmulpd-xmm_xmm_xmm");
+        let add = BenchSpec::parse("vaddpd-xmm_xmm_xmm");
+        let zen_m = zen();
+        let with_mul = run_conflict(&fma, &mul, &zen_m).unwrap();
+        let with_add = run_conflict(&fma, &add, &zen_m).unwrap();
+        assert!(with_mul.cy_per_instr > 0.85, "mul {}", with_mul.cy_per_instr);
+        assert!(with_add.cy_per_instr < 0.7, "add {}", with_add.cy_per_instr);
+    }
+
+    #[test]
+    fn conflict_on_skl_shows_shared_ports_for_both() {
+        // §II-C Skylake: both vaddpd and vmulpd share P0/P1 with FMA ->
+        // both combined runs land at ~1.0 cy.
+        let fma = BenchSpec::parse("vfmadd132pd-mem_xmm_xmm");
+        let mul = BenchSpec::parse("vmulpd-xmm_xmm_xmm");
+        let add = BenchSpec::parse("vaddpd-xmm_xmm_xmm");
+        let skl = skylake();
+        let with_mul = run_conflict(&fma, &mul, &skl).unwrap();
+        let with_add = run_conflict(&fma, &add, &skl).unwrap();
+        assert!(with_mul.cy_per_instr > 0.85, "mul {}", with_mul.cy_per_instr);
+        assert!(with_add.cy_per_instr > 0.85, "add {}", with_add.cy_per_instr);
+    }
+
+    #[test]
+    fn emit_bench_files_roundtrip() {
+        let spec = BenchSpec::parse("vaddpd-xmm_xmm_xmm");
+        let dir = std::env::temp_dir().join(format!("osaca-ibench-{}", std::process::id()));
+        let files = emit_bench_files(&spec, &dir).unwrap();
+        assert_eq!(files.len(), 8); // lat + 6 sweep points + TP
+        // Every emitted file parses and simulates.
+        for f in &files {
+            let src = std::fs::read_to_string(f).unwrap();
+            let k = crate::asm::extract_kernel("emitted", &src).unwrap();
+            let m = simulate(&k, &skylake(), SimConfig { iterations: 50, warmup: 10 }).unwrap();
+            assert!(m.cycles_per_iteration > 0.0);
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn divider_rtp_measured() {
+        let spec = BenchSpec::parse("vdivsd-xmm_xmm_xmm");
+        let tp = measure_throughput(&spec, &skylake()).unwrap();
+        assert!((tp - 4.0).abs() < 0.3, "{tp}");
+    }
+}

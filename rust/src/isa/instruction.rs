@@ -1,0 +1,333 @@
+//! Instructions and instruction forms.
+//!
+//! The *instruction form* (paper §II, citing [20]) is the unit the machine
+//! model is keyed on: mnemonic plus operand-type signature, e.g.
+//! `vfmadd132pd mem_xmm_xmm`. Concrete registers and displacements are
+//! irrelevant to throughput; they matter only for dependency analysis.
+
+use std::fmt;
+
+use super::operand::Operand;
+use super::register::{flags, Register};
+
+/// One parsed assembly instruction (AT&T operand order: destination last).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Instruction {
+    pub mnemonic: String,
+    pub operands: Vec<Operand>,
+    /// Source line number (1-based) for diagnostics and report tables.
+    pub line: usize,
+    /// Raw source text, trimmed.
+    pub raw: String,
+}
+
+/// Canonical operand-type signature, e.g. `mem_xmm_xmm`.
+#[derive(Debug, Clone, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct OperandSig(pub String);
+
+impl fmt::Display for OperandSig {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+/// Instruction form = mnemonic + operand signature. Database key.
+#[derive(Debug, Clone, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct InstructionForm {
+    pub mnemonic: String,
+    pub sig: OperandSig,
+}
+
+impl fmt::Display for InstructionForm {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if self.sig.0.is_empty() {
+            write!(f, "{}", self.mnemonic)
+        } else {
+            write!(f, "{}-{}", self.mnemonic, self.sig)
+        }
+    }
+}
+
+impl InstructionForm {
+    pub fn new(mnemonic: &str, sig: &str) -> Self {
+        InstructionForm { mnemonic: mnemonic.to_string(), sig: OperandSig(sig.to_string()) }
+    }
+
+    /// Parse `mnemonic-sig` (the database spelling, e.g.
+    /// `vfmadd132pd-mem_xmm_xmm`).
+    pub fn parse(s: &str) -> Self {
+        match s.split_once('-') {
+            Some((m, sig)) => InstructionForm::new(m, sig),
+            None => InstructionForm::new(s, ""),
+        }
+    }
+}
+
+impl Instruction {
+    /// The instruction form of this instruction.
+    pub fn form(&self) -> InstructionForm {
+        let sig = self
+            .operands
+            .iter()
+            .map(|o| o.sig())
+            .collect::<Vec<_>>()
+            .join("_");
+        InstructionForm { mnemonic: self.mnemonic.clone(), sig: OperandSig(sig) }
+    }
+
+    /// Does any operand reference memory?
+    pub fn has_mem_operand(&self) -> bool {
+        self.operands.iter().any(|o| o.is_mem())
+    }
+
+    /// Memory operand, if present (x86 allows at most one real one in the
+    /// instruction subset we model; `movs`-style string ops are out of
+    /// scope).
+    pub fn mem_operand(&self) -> Option<&super::operand::MemRef> {
+        self.operands.iter().find_map(|o| o.mem())
+    }
+
+    /// In AT&T syntax the last operand is the destination for almost all
+    /// instructions we model. Compares/tests/branches have no register
+    /// destination.
+    pub fn dest(&self) -> Option<&Operand> {
+        if self.is_branch() || self.is_compare() || self.mnemonic == "nop" {
+            return None;
+        }
+        self.operands.last()
+    }
+
+    /// Registers written by this instruction (architectural view).
+    pub fn writes(&self) -> Vec<Register> {
+        let mut out = Vec::new();
+        if let Some(Operand::Reg(r)) = self.dest() {
+            out.push(*r);
+        }
+        if self.writes_flags() {
+            out.push(flags());
+        }
+        out
+    }
+
+    /// Registers read by this instruction, including address registers of
+    /// memory operands and the implicit FLAGS read of conditional jumps.
+    pub fn reads(&self) -> Vec<Register> {
+        let mut out = Vec::new();
+        let n = self.operands.len();
+        for (i, op) in self.operands.iter().enumerate() {
+            match op {
+                Operand::Reg(r) => {
+                    let is_dest = self.dest().is_some() && i + 1 == n;
+                    // Destination-only writes: plain moves replace the
+                    // destination; read-modify-write ops (add, fma, ...)
+                    // read it too.
+                    if !is_dest || self.reads_dest() {
+                        out.push(*r);
+                    }
+                }
+                Operand::Mem(m) => out.extend(m.address_registers()),
+                _ => {}
+            }
+        }
+        if self.is_cond_branch() {
+            out.push(flags());
+        }
+        out
+    }
+
+    /// Write-only destination (moves, loads, converts with full-width
+    /// writes) vs read-modify-write (adds, fma with 3 operands reads all).
+    fn reads_dest(&self) -> bool {
+        // VEX 3-operand forms never read the destination, except FMA which
+        // reads all three. Legacy 2-operand arithmetic reads both; the
+        // mov family (mov, movl, movaps, movupd, movdqa, movz/movs
+        // extensions) and lea replace the destination outright.
+        if self.mnemonic.starts_with("vfmadd")
+            || self.mnemonic.starts_with("vfmsub")
+            || self.mnemonic.starts_with("vfnmadd")
+        {
+            return true;
+        }
+        if self.mnemonic.starts_with('v') {
+            return false;
+        }
+        if self.mnemonic.starts_with("mov") || self.mnemonic.starts_with("lea") {
+            return false;
+        }
+        // Converts write the full register.
+        !self.mnemonic.starts_with("cvt")
+    }
+
+    pub fn is_branch(&self) -> bool {
+        self.mnemonic.starts_with('j') || self.mnemonic == "loop"
+    }
+
+    pub fn is_cond_branch(&self) -> bool {
+        self.is_branch() && self.mnemonic != "jmp"
+    }
+
+    pub fn is_compare(&self) -> bool {
+        matches!(
+            self.mnemonic.trim_end_matches(['b', 'w', 'l', 'q']),
+            "cmp" | "test" | "comis" | "ucomis"
+        ) || self.mnemonic.starts_with("cmp")
+            || self.mnemonic.starts_with("test")
+    }
+
+    /// Does the instruction set FLAGS? (Arithmetic + compares; moves and
+    /// SSE/AVX data ops do not.)
+    pub fn writes_flags(&self) -> bool {
+        if self.mnemonic.starts_with('v') {
+            return false;
+        }
+        let m = self.mnemonic.trim_end_matches(['b', 'w', 'l', 'q']);
+        matches!(
+            m,
+            "add" | "sub" | "and" | "or" | "xor" | "inc" | "dec" | "cmp" | "test" | "neg"
+                | "shl" | "shr" | "sar" | "imul"
+        )
+    }
+
+    /// Is this a store (memory destination)?
+    pub fn is_store(&self) -> bool {
+        matches!(self.dest(), Some(Operand::Mem(_)))
+    }
+
+    /// Is this a load (memory source that is not the destination)?
+    pub fn is_load(&self) -> bool {
+        let n = self.operands.len();
+        self.operands
+            .iter()
+            .enumerate()
+            .any(|(i, o)| o.is_mem() && !(i + 1 == n && self.dest().map(|d| d.is_mem()).unwrap_or(false)))
+    }
+
+    /// Zeroing idiom (`vxorpd %x, %x, %x`, `xorl %eax, %eax`): real cores
+    /// resolve these at rename without consuming an execution port. The
+    /// analyzer (like OSACA 0.2) does NOT know this; the simulator does —
+    /// exactly the §III-B discrepancy for the -O2 π kernel.
+    pub fn is_zero_idiom(&self) -> bool {
+        let m = &self.mnemonic;
+        let is_xor = m.starts_with("xor")
+            || m.starts_with("vxor")
+            || m.starts_with("pxor")
+            || m.starts_with("vpxor");
+        if !is_xor {
+            return false;
+        }
+        match self.operands.as_slice() {
+            [Operand::Reg(a), Operand::Reg(b)] => a == b,
+            [Operand::Reg(a), Operand::Reg(b), Operand::Reg(c)] => a == b && b == c,
+            _ => false,
+        }
+    }
+
+    /// Register-to-register move eligible for move elimination at rename.
+    pub fn is_reg_move(&self) -> bool {
+        let m = self.mnemonic.trim_end_matches(['b', 'w', 'l', 'q']);
+        let movish = matches!(m, "mov")
+            || self.mnemonic.starts_with("vmovap")
+            || self.mnemonic.starts_with("vmovup")
+            || self.mnemonic.starts_with("vmovdqa")
+            || self.mnemonic.starts_with("vmovdqu")
+            || self.mnemonic.starts_with("movap")
+            || self.mnemonic.starts_with("movup")
+            || self.mnemonic.starts_with("movdqa");
+        movish
+            && self.operands.len() == 2
+            && self.operands.iter().all(|o| matches!(o, Operand::Reg(_)))
+    }
+
+    /// Widest vector operand width in bits (0 for scalar-int only).
+    pub fn vector_width(&self) -> u32 {
+        self.operands
+            .iter()
+            .filter_map(|o| o.reg())
+            .map(|r| match r.class {
+                super::register::RegisterClass::Xmm => 128,
+                super::register::RegisterClass::Ymm => 256,
+                super::register::RegisterClass::Zmm => 512,
+                _ => 0,
+            })
+            .max()
+            .unwrap_or(0)
+    }
+}
+
+impl fmt::Display for Instruction {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.mnemonic)?;
+        for (i, op) in self.operands.iter().enumerate() {
+            write!(f, "{}{}", if i == 0 { " " } else { ", " }, op)?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::asm::parser::parse_instruction;
+
+    fn ins(s: &str) -> Instruction {
+        parse_instruction(s, 1).expect(s)
+    }
+
+    #[test]
+    fn form_signature() {
+        let i = ins("vfmadd132pd 0(%r13,%rax), %ymm3, %ymm0");
+        assert_eq!(i.form().to_string(), "vfmadd132pd-mem_ymm_ymm");
+    }
+
+    #[test]
+    fn load_store_classification() {
+        assert!(ins("vmovapd (%r15,%rax), %ymm0").is_load());
+        assert!(!ins("vmovapd (%r15,%rax), %ymm0").is_store());
+        assert!(ins("vmovapd %ymm0, (%r14,%rax)").is_store());
+        assert!(!ins("vmovapd %ymm0, (%r14,%rax)").is_load());
+        assert!(ins("vaddsd (%rsp), %xmm0, %xmm5").is_load());
+    }
+
+    #[test]
+    fn zero_idiom() {
+        assert!(ins("vxorpd %xmm0, %xmm0, %xmm0").is_zero_idiom());
+        assert!(!ins("vxorpd %xmm1, %xmm0, %xmm0").is_zero_idiom());
+        assert!(ins("xorl %eax, %eax").is_zero_idiom());
+    }
+
+    #[test]
+    fn fma_reads_all_operands() {
+        let i = ins("vfmadd132pd %ymm0, %ymm5, %ymm0");
+        let reads = i.reads();
+        assert_eq!(reads.len(), 3);
+    }
+
+    #[test]
+    fn vex_move_does_not_read_dest() {
+        let i = ins("vmovapd %ymm1, %ymm0");
+        assert_eq!(i.reads().len(), 1);
+        assert!(i.is_reg_move());
+    }
+
+    #[test]
+    fn cond_branch_reads_flags() {
+        let i = ins("ja .L10");
+        assert!(i.is_cond_branch());
+        assert!(i.reads().iter().any(|r| r.name == "flags"));
+    }
+
+    #[test]
+    fn cmp_writes_flags_only() {
+        let i = ins("cmpl %ecx, %r10d");
+        assert!(i.writes_flags());
+        assert!(i.dest().is_none());
+        assert_eq!(i.writes().len(), 1); // flags only
+    }
+
+    #[test]
+    fn vector_width_detection() {
+        assert_eq!(ins("vaddpd %ymm1, %ymm0, %ymm0").vector_width(), 256);
+        assert_eq!(ins("vaddpd %xmm1, %xmm0, %xmm0").vector_width(), 128);
+        assert_eq!(ins("addl $1, %eax").vector_width(), 0);
+    }
+}

@@ -1,0 +1,11 @@
+//! Instruction-set abstractions: registers, operands, instructions and
+//! *instruction forms* (mnemonic + operand-type signature, the unit of the
+//! machine-model database — see paper §II).
+
+pub mod instruction;
+pub mod operand;
+pub mod register;
+
+pub use instruction::{Instruction, InstructionForm, OperandSig};
+pub use operand::{MemRef, Operand};
+pub use register::{Register, RegisterClass, RegisterFile};

@@ -1,0 +1,149 @@
+//! Operands of AT&T-syntax x86 instructions.
+
+use std::fmt;
+
+use super::register::Register;
+
+/// A memory reference `disp(base, index, scale)` (AT&T syntax), with all
+/// components optional. OSACA distinguishes addressing components (paper
+//  §II) even though the current throughput model treats all addressing
+/// modes as equal; the simulator uses them for dependency tracking and
+/// the analyzer uses "simple address" detection for the SKL port-7 AGU.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct MemRef {
+    pub displacement: i64,
+    pub base: Option<Register>,
+    pub index: Option<Register>,
+    pub scale: u8,
+    /// Segment override (`%fs:...`), parsed but unused by the models.
+    pub segment: Option<Register>,
+    /// rip-relative (`sym(%rip)`) references keep the symbol for display.
+    pub symbol: Option<String>,
+}
+
+impl MemRef {
+    /// "Simple" addresses (base + displacement, no index) may use the
+    /// dedicated store-AGU on port 7 of Skylake (paper §I-B).
+    pub fn is_simple(&self) -> bool {
+        self.index.is_none()
+    }
+
+    /// Registers read to form the effective address.
+    pub fn address_registers(&self) -> impl Iterator<Item = Register> + '_ {
+        self.base.into_iter().chain(self.index)
+    }
+}
+
+impl fmt::Display for MemRef {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if let Some(sym) = &self.symbol {
+            write!(f, "{sym}")?;
+        } else if self.displacement != 0 {
+            write!(f, "{}", self.displacement)?;
+        }
+        if self.base.is_some() || self.index.is_some() {
+            write!(f, "(")?;
+            if let Some(b) = self.base {
+                write!(f, "{b}")?;
+            }
+            if let Some(i) = self.index {
+                write!(f, ",{i}")?;
+                if self.scale != 1 {
+                    write!(f, ",{}", self.scale)?;
+                }
+            }
+            write!(f, ")")?;
+        }
+        Ok(())
+    }
+}
+
+/// A single instruction operand.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub enum Operand {
+    Reg(Register),
+    Imm(i64),
+    Mem(MemRef),
+    /// Branch target label.
+    Label(String),
+}
+
+impl Operand {
+    pub fn is_mem(&self) -> bool {
+        matches!(self, Operand::Mem(_))
+    }
+
+    pub fn reg(&self) -> Option<Register> {
+        match self {
+            Operand::Reg(r) => Some(*r),
+            _ => None,
+        }
+    }
+
+    pub fn mem(&self) -> Option<&MemRef> {
+        match self {
+            Operand::Mem(m) => Some(m),
+            _ => None,
+        }
+    }
+
+    /// Signature component for instruction-form matching (paper: operand
+    /// *types*, not concrete registers: `mem`, `imm`, `r64`, `xmm`, ...).
+    pub fn sig(&self) -> String {
+        match self {
+            Operand::Reg(r) => r.class.sig().to_string(),
+            Operand::Imm(_) => "imm".to_string(),
+            Operand::Mem(_) => "mem".to_string(),
+            Operand::Label(_) => "lbl".to_string(),
+        }
+    }
+}
+
+impl fmt::Display for Operand {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Operand::Reg(r) => write!(f, "{r}"),
+            Operand::Imm(v) => write!(f, "${v}"),
+            Operand::Mem(m) => write!(f, "{m}"),
+            Operand::Label(l) => write!(f, "{l}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::register::parse_register;
+
+    fn mem(base: &str, index: Option<&str>, scale: u8, disp: i64) -> MemRef {
+        MemRef {
+            displacement: disp,
+            base: Some(parse_register(base).unwrap()),
+            index: index.map(|i| parse_register(i).unwrap()),
+            scale,
+            segment: None,
+            symbol: None,
+        }
+    }
+
+    #[test]
+    fn simple_address_detection() {
+        assert!(mem("rsp", None, 1, 8).is_simple());
+        assert!(!mem("r13", Some("rax"), 1, 0).is_simple());
+    }
+
+    #[test]
+    fn display_roundtrip_shape() {
+        let m = mem("r13", Some("rax"), 8, 16);
+        assert_eq!(m.to_string(), "16(%r13,%rax,8)");
+        let m2 = mem("rsp", None, 1, 0);
+        assert_eq!(m2.to_string(), "(%rsp)");
+    }
+
+    #[test]
+    fn operand_sigs() {
+        assert_eq!(Operand::Imm(3).sig(), "imm");
+        assert_eq!(Operand::Reg(parse_register("ymm2").unwrap()).sig(), "ymm");
+        assert_eq!(Operand::Mem(mem("rax", None, 1, 0)).sig(), "mem");
+    }
+}

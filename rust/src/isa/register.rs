@@ -1,0 +1,267 @@
+//! x86-64 register names and classes.
+//!
+//! Registers are the unit of dependency tracking in the simulator and of
+//! operand-type classification in the analyzer. We canonicalize aliased
+//! GP registers (`%eax` and `%rax` both map to the `rax` slot) so that a
+//! 32-bit write is seen by a 64-bit read, matching x86 renaming rules
+//! closely enough for throughput analysis.
+
+use std::fmt;
+
+/// Architectural register class. Determines the operand-type letter used
+/// in instruction-form signatures (`r32`, `r64`, `xmm`, `ymm`, ...).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum RegisterClass {
+    /// 8-bit GP (al, r10b, ...)
+    Gp8,
+    /// 16-bit GP
+    Gp16,
+    /// 32-bit GP (eax, r10d, ...)
+    Gp32,
+    /// 64-bit GP (rax, r10, ...)
+    Gp64,
+    /// 128-bit SSE/AVX register
+    Xmm,
+    /// 256-bit AVX register
+    Ymm,
+    /// 512-bit AVX-512 register (parsed, unsupported by both models)
+    Zmm,
+    /// AVX-512 mask register
+    Mask,
+    /// Instruction pointer (rip-relative addressing)
+    Rip,
+    /// FLAGS register (implicit operand of cmp/test/jcc and arithmetic)
+    Flags,
+}
+
+impl RegisterClass {
+    /// Width in bits of a register of this class.
+    pub fn bits(self) -> u32 {
+        match self {
+            RegisterClass::Gp8 => 8,
+            RegisterClass::Gp16 => 16,
+            RegisterClass::Gp32 => 32,
+            RegisterClass::Gp64 => 64,
+            RegisterClass::Xmm => 128,
+            RegisterClass::Ymm => 256,
+            RegisterClass::Zmm => 512,
+            RegisterClass::Mask => 64,
+            RegisterClass::Rip => 64,
+            RegisterClass::Flags => 64,
+        }
+    }
+
+    /// Signature letter used in instruction forms (paper §II: "instruction
+    /// form" = mnemonic + operand types).
+    pub fn sig(self) -> &'static str {
+        match self {
+            RegisterClass::Gp8 => "r8",
+            RegisterClass::Gp16 => "r16",
+            RegisterClass::Gp32 => "r32",
+            RegisterClass::Gp64 => "r64",
+            RegisterClass::Xmm => "xmm",
+            RegisterClass::Ymm => "ymm",
+            RegisterClass::Zmm => "zmm",
+            RegisterClass::Mask => "k",
+            RegisterClass::Rip => "rip",
+            RegisterClass::Flags => "flags",
+        }
+    }
+}
+
+/// A parsed architectural register: class + canonical slot index.
+///
+/// Slot indices: GP registers share slots 0..16 across widths (rax==eax),
+/// vector registers share slots 0..32 across xmm/ymm/zmm. This gives the
+/// simulator a single rename namespace per family.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Register {
+    pub class: RegisterClass,
+    pub slot: u8,
+    /// Original spelling without the `%` sigil, for diagnostics.
+    pub name: &'static str,
+}
+
+/// Dependency-tracking family: registers that alias each other share one.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum RegisterFile {
+    Gp(u8),
+    Vec(u8),
+    Mask(u8),
+    Rip,
+    Flags,
+}
+
+impl Register {
+    /// The rename-file slot this register occupies.
+    pub fn file(&self) -> RegisterFile {
+        match self.class {
+            RegisterClass::Gp8 | RegisterClass::Gp16 | RegisterClass::Gp32 | RegisterClass::Gp64 => {
+                RegisterFile::Gp(self.slot)
+            }
+            RegisterClass::Xmm | RegisterClass::Ymm | RegisterClass::Zmm => RegisterFile::Vec(self.slot),
+            RegisterClass::Mask => RegisterFile::Mask(self.slot),
+            RegisterClass::Rip => RegisterFile::Rip,
+            RegisterClass::Flags => RegisterFile::Flags,
+        }
+    }
+}
+
+impl fmt::Display for Register {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "%{}", self.name)
+    }
+}
+
+const GP64: [&str; 16] = [
+    "rax", "rbx", "rcx", "rdx", "rsi", "rdi", "rbp", "rsp", "r8", "r9", "r10", "r11", "r12",
+    "r13", "r14", "r15",
+];
+const GP32: [&str; 16] = [
+    "eax", "ebx", "ecx", "edx", "esi", "edi", "ebp", "esp", "r8d", "r9d", "r10d", "r11d", "r12d",
+    "r13d", "r14d", "r15d",
+];
+const GP16: [&str; 16] = [
+    "ax", "bx", "cx", "dx", "si", "di", "bp", "sp", "r8w", "r9w", "r10w", "r11w", "r12w", "r13w",
+    "r14w", "r15w",
+];
+const GP8: [&str; 20] = [
+    "al", "bl", "cl", "dl", "sil", "dil", "bpl", "spl", "r8b", "r9b", "r10b", "r11b", "r12b",
+    "r13b", "r14b", "r15b", "ah", "bh", "ch", "dh",
+];
+
+/// Parse a register name (without the `%` sigil). Returns `None` for
+/// unknown names so the assembly parser can produce a real error.
+pub fn parse_register(name: &str) -> Option<Register> {
+    let lower = name.to_ascii_lowercase();
+    let n = lower.as_str();
+    if let Some(i) = GP64.iter().position(|&r| r == n) {
+        return Some(Register { class: RegisterClass::Gp64, slot: i as u8, name: GP64[i] });
+    }
+    if let Some(i) = GP32.iter().position(|&r| r == n) {
+        return Some(Register { class: RegisterClass::Gp32, slot: i as u8, name: GP32[i] });
+    }
+    if let Some(i) = GP16.iter().position(|&r| r == n) {
+        return Some(Register { class: RegisterClass::Gp16, slot: i as u8, name: GP16[i] });
+    }
+    if let Some(i) = GP8.iter().position(|&r| r == n) {
+        // ah/bh/ch/dh alias slots 0..4 like their low counterparts.
+        let slot = if i >= 16 { (i - 16) as u8 } else { i as u8 };
+        return Some(Register { class: RegisterClass::Gp8, slot, name: GP8[i] });
+    }
+    if n == "rip" {
+        return Some(Register { class: RegisterClass::Rip, slot: 0, name: "rip" });
+    }
+    for (prefix, class) in [
+        ("xmm", RegisterClass::Xmm),
+        ("ymm", RegisterClass::Ymm),
+        ("zmm", RegisterClass::Zmm),
+    ] {
+        if let Some(rest) = n.strip_prefix(prefix) {
+            if let Ok(idx) = rest.parse::<u8>() {
+                if idx < 32 {
+                    // Leak-free static naming: reuse canonical tables.
+                    return Some(Register { class, slot: idx, name: vec_name(class, idx) });
+                }
+            }
+        }
+    }
+    if let Some(rest) = n.strip_prefix('k') {
+        if let Ok(idx) = rest.parse::<u8>() {
+            if idx < 8 {
+                return Some(Register { class: RegisterClass::Mask, slot: idx, name: mask_name(idx) });
+            }
+        }
+    }
+    None
+}
+
+fn vec_name(class: RegisterClass, idx: u8) -> &'static str {
+    let prefix = match class {
+        RegisterClass::Xmm => "xmm",
+        RegisterClass::Ymm => "ymm",
+        RegisterClass::Zmm => "zmm",
+        _ => unreachable!(),
+    };
+    static_name(prefix, idx)
+}
+
+fn mask_name(idx: u8) -> &'static str {
+    static_name("k", idx)
+}
+
+/// Canonical static names for numbered registers. Covers xmm/ymm/zmm 0..32
+/// and k0..8 without leaking.
+pub(crate) fn static_name(prefix: &str, idx: u8) -> &'static str {
+    macro_rules! table {
+        ($p:literal) => {{
+            const T: [&str; 32] = [
+                concat!($p, "0"), concat!($p, "1"), concat!($p, "2"), concat!($p, "3"),
+                concat!($p, "4"), concat!($p, "5"), concat!($p, "6"), concat!($p, "7"),
+                concat!($p, "8"), concat!($p, "9"), concat!($p, "10"), concat!($p, "11"),
+                concat!($p, "12"), concat!($p, "13"), concat!($p, "14"), concat!($p, "15"),
+                concat!($p, "16"), concat!($p, "17"), concat!($p, "18"), concat!($p, "19"),
+                concat!($p, "20"), concat!($p, "21"), concat!($p, "22"), concat!($p, "23"),
+                concat!($p, "24"), concat!($p, "25"), concat!($p, "26"), concat!($p, "27"),
+                concat!($p, "28"), concat!($p, "29"), concat!($p, "30"), concat!($p, "31"),
+            ];
+            T[idx as usize]
+        }};
+    }
+    match prefix {
+        "xmm" => table!("xmm"),
+        "ymm" => table!("ymm"),
+        "zmm" => table!("zmm"),
+        "k" => table!("k"),
+        _ => unreachable!("static_name prefix {prefix}"),
+    }
+}
+
+/// The FLAGS pseudo-register (implicit dep of compares and branches).
+pub fn flags() -> Register {
+    Register { class: RegisterClass::Flags, slot: 0, name: "flags" }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gp_aliasing_shares_slots() {
+        let rax = parse_register("rax").unwrap();
+        let eax = parse_register("eax").unwrap();
+        assert_eq!(rax.file(), eax.file());
+        assert_ne!(rax.class, eax.class);
+    }
+
+    #[test]
+    fn vector_widths_share_slots() {
+        let x = parse_register("xmm5").unwrap();
+        let y = parse_register("ymm5").unwrap();
+        assert_eq!(x.file(), y.file());
+        assert_eq!(x.class.bits(), 128);
+        assert_eq!(y.class.bits(), 256);
+    }
+
+    #[test]
+    fn unknown_register_is_none() {
+        assert!(parse_register("xmm99").is_none());
+        assert!(parse_register("foo").is_none());
+    }
+
+    #[test]
+    fn high_byte_regs_alias_low() {
+        let ah = parse_register("ah").unwrap();
+        let al = parse_register("al").unwrap();
+        assert_eq!(ah.file(), al.file());
+    }
+
+    #[test]
+    fn all_gp64_roundtrip() {
+        for n in GP64 {
+            let r = parse_register(n).unwrap();
+            assert_eq!(r.class, RegisterClass::Gp64);
+            assert_eq!(r.name, n);
+        }
+    }
+}

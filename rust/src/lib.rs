@@ -1,0 +1,33 @@
+//! # osaca-rs
+//!
+//! Reproduction of *Automated Instruction Stream Throughput Prediction for
+//! Intel and AMD Microarchitectures* (OSACA, PMBS 2018) as a three-layer
+//! rust + JAX + Pallas system.
+//!
+//! Layers:
+//! * **L3 (this crate)** — assembly parsing, machine-model database,
+//!   out-of-order core *simulator* (the measurement substrate standing in
+//!   for real Skylake/Zen silicon), ibench-style benchmark generation,
+//!   semi-automatic model construction, the OSACA throughput analyzer, an
+//!   IACA-like balanced baseline, and a batching analysis coordinator.
+//! * **L2/L1 (python/, build-time only)** — the batched port-pressure
+//!   solver (uniform + iteratively balanced) as a JAX model wrapping a
+//!   Pallas kernel, AOT-lowered to `artifacts/port_solver.hlo.txt` and
+//!   executed from rust via PJRT (`runtime`).
+//!
+//! See DESIGN.md for the full system inventory and experiment index.
+
+pub mod analyzer;
+pub mod asm;
+pub mod baseline;
+pub mod benchlib;
+pub mod builder;
+pub mod coordinator;
+pub mod ibench;
+pub mod isa;
+pub mod mdb;
+pub mod proplite;
+pub mod report;
+pub mod runtime;
+pub mod sim;
+pub mod workloads;

@@ -1,0 +1,398 @@
+//! osaca CLI — the L3 coordinator binary.
+//!
+//! Subcommands:
+//!   analyze <file.s> --arch skl|zen [--baseline] [--critpath]
+//!   simulate <file.s> --arch skl|zen [--iterations N]
+//!   ibench --instr <form> --arch skl|zen [--conflict <form>]
+//!   build-model --instr <form> --arch skl|zen
+//!   validate-model --arch skl|zen
+//!   compare <file.s> --arch skl|zen [--unroll N]
+//!   tables [--table1] [--table3] [--table5] [--all]
+//!   figures
+//!   serve [--requests N]   (demo load through the batching coordinator)
+//!
+//! Hand-rolled argument parsing: clap is not vendored in this offline
+//! build environment.
+
+use std::collections::HashMap;
+use std::process::ExitCode;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use osaca::analyzer::{analyze, critical_path};
+use osaca::benchlib::print_table;
+use osaca::builder::{default_probes, infer_entry, validate_model};
+use osaca::coordinator::Coordinator;
+use osaca::ibench::{run_conflict, run_sweep, BenchSpec};
+use osaca::isa::InstructionForm;
+use osaca::mdb;
+use osaca::report::experiments::{
+    render_table1, render_table3, render_table5, table1, table3, table5,
+};
+use osaca::report::{render_occupancy, render_port_diagram};
+use osaca::sim::{simulate, SimConfig};
+use osaca::{asm, workloads};
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match run(&args) {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+/// Split `args` into positional arguments and `--key [value]` options.
+fn parse_opts(args: &[String]) -> (Vec<&str>, HashMap<&str, &str>) {
+    let mut pos = Vec::new();
+    let mut opts = HashMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        let a = args[i].as_str();
+        if let Some(key) = a.strip_prefix("--") {
+            let val = if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                i += 1;
+                args[i].as_str()
+            } else {
+                "true"
+            };
+            opts.insert(key, val);
+        } else {
+            pos.push(a);
+        }
+        i += 1;
+    }
+    (pos, opts)
+}
+
+fn machine_opt(opts: &HashMap<&str, &str>) -> Result<mdb::MachineModel> {
+    let arch = opts.get("arch").copied().unwrap_or("skl");
+    mdb::by_name(arch).ok_or_else(|| anyhow!("unknown architecture `{arch}` (skl|zen)"))
+}
+
+fn load_kernel(path: &str) -> Result<asm::Kernel> {
+    let src = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+    asm::extract_kernel(path, &src)
+}
+
+fn run(args: &[String]) -> Result<()> {
+    let Some(cmd) = args.first() else {
+        print_usage();
+        return Ok(());
+    };
+    let rest = &args[1..];
+    let (pos, opts) = parse_opts(rest);
+    match cmd.as_str() {
+        "analyze" => {
+            let path = pos.first().ok_or_else(|| anyhow!("usage: analyze <file.s> --arch skl|zen [--model file.mdb] [--learn]"))?;
+            // --model loads a (possibly partial) user model file; --arch
+            // still selects the hardware substrate for --learn.
+            let hardware = machine_opt(&opts)?;
+            let mut machine = match opts.get("model") {
+                Some(p) => osaca::mdb::MachineModel::parse(
+                    &std::fs::read_to_string(p).with_context(|| format!("reading {p}"))?,
+                )?,
+                None => hardware.clone(),
+            };
+            let kernel = load_kernel(path)?;
+            if opts.contains_key("learn") {
+                // §III: benchmark unknown forms automatically on the
+                // hardware substrate.
+                let learned = osaca::builder::learn_missing(&kernel, &mut machine, &hardware)?;
+                for inf in &learned {
+                    println!(
+                        "learned {}: lat {:.1} cy, rTP {:.2} cy/instr (probes: {:?})",
+                        inf.entry.form, inf.measured_latency, inf.measured_rtp,
+                        inf.conflicting_probes
+                    );
+                }
+            }
+            let a = analyze(&kernel, &machine)?;
+            println!("{}", render_occupancy(&a, &machine));
+            if opts.contains_key("critpath") {
+                let cp = critical_path(&kernel, &machine)?;
+                println!(
+                    "Critical path: {:.2} cy intra-iteration, {:.2} cy/it loop-carried bound",
+                    cp.intra_iteration, cp.carried_per_iteration
+                );
+            }
+            if opts.contains_key("baseline") {
+                let coord = Coordinator::auto();
+                let r = coord.analyze_kernel(&kernel, &machine)?;
+                println!(
+                    "Balanced (IACA-like) baseline: {:.2} cy / assembly iteration",
+                    r.baseline.cy_per_asm_iter
+                );
+            }
+        }
+        "simulate" => {
+            let path = pos.first().ok_or_else(|| anyhow!("usage: simulate <file.s> --arch skl|zen"))?;
+            let machine = machine_opt(&opts)?;
+            let iterations: usize =
+                opts.get("iterations").map(|v| v.parse()).transpose()?.unwrap_or(1000);
+            let kernel = load_kernel(path)?;
+            let m = simulate(&kernel, &machine, SimConfig { iterations, warmup: iterations / 5 })?;
+            println!(
+                "{}: {:.3} cy / assembly iteration over {} measured iterations",
+                machine.name, m.cycles_per_iteration, m.iterations
+            );
+            println!(
+                "counters: issue-stall {} / {} cy ({:.1}%), dispatch-stall {}, µops {} ({} forwarded loads)",
+                m.counters.issue_stall_cycles,
+                m.window_cycles,
+                100.0 * m.counters.issue_stall_cycles as f64 / m.window_cycles as f64,
+                m.counters.dispatch_stall_cycles,
+                m.counters.uops_executed,
+                m.counters.forwarded_loads,
+            );
+            let busy: Vec<String> = machine
+                .ports
+                .iter()
+                .zip(m.port_busy.iter())
+                .map(|(p, b)| format!("{p}:{:.2}", *b as f64 / m.iterations as f64))
+                .collect();
+            println!("port busy cy/iter: {}", busy.join(" "));
+        }
+        "ibench" => {
+            let machine = machine_opt(&opts)?;
+            let instr = opts
+                .get("instr")
+                .ok_or_else(|| anyhow!("usage: ibench --instr vaddpd-xmm_xmm_xmm --arch skl"))?;
+            let spec = BenchSpec::parse(instr);
+            if let Some(dir) = opts.get("emit") {
+                let files =
+                    osaca::ibench::runner::emit_bench_files(&spec, std::path::Path::new(dir))?;
+                for f in &files {
+                    println!("wrote {}", f.display());
+                }
+                return Ok(());
+            }
+            if let Some(other) = opts.get("conflict") {
+                let b = BenchSpec::parse(other);
+                let r = run_conflict(&spec, &b, &machine)?;
+                println!("Using frequency {:.2}GHz.", machine.frequency_ghz);
+                println!("{}:  {:.3} (clk cy)", r.label, r.cy_per_instr);
+            } else {
+                let sweep = run_sweep(&spec, &machine)?;
+                print!("{}", sweep.render(machine.frequency_ghz));
+            }
+        }
+        "build-model" => {
+            let machine = machine_opt(&opts)?;
+            let instr = opts
+                .get("instr")
+                .ok_or_else(|| anyhow!("usage: build-model --instr <form> --arch skl"))?;
+            let form = InstructionForm::parse(instr);
+            let probes = default_probes(&machine);
+            let inf = infer_entry(&form, &machine, &probes)?;
+            println!(
+                "measured: latency {:.2} cy, rTP {:.3} cy/instr",
+                inf.measured_latency, inf.measured_rtp
+            );
+            println!("conflicting probes: {:?}", inf.conflicting_probes);
+            let mut m2 = machine.clone();
+            m2.entries.clear();
+            m2.insert(inf.entry.clone());
+            let line = m2
+                .serialize()
+                .lines()
+                .find(|l| l.starts_with("entry"))
+                .unwrap_or_default()
+                .to_string();
+            println!("database entry: {line}");
+        }
+        "validate-model" => {
+            let machine = machine_opt(&opts)?;
+            let forms: Vec<InstructionForm> = [
+                "vaddpd-xmm_xmm_xmm",
+                "vmulpd-xmm_xmm_xmm",
+                "vfmadd132pd-xmm_xmm_xmm",
+                "vfmadd132pd-mem_xmm_xmm",
+                "vdivsd-xmm_xmm_xmm",
+                "vpaddd-xmm_xmm_xmm",
+                "add-imm_r",
+            ]
+            .iter()
+            .map(|s| InstructionForm::parse(s))
+            .collect();
+            let rows = validate_model(&machine, &forms)?;
+            let table: Vec<Vec<String>> = rows
+                .iter()
+                .map(|r| {
+                    vec![
+                        r.form.clone(),
+                        format!("{:.2}", r.db_latency),
+                        format!("{:.2}", r.inferred_latency),
+                        format!("{:.2}", r.db_rtp),
+                        format!("{:.2}", r.inferred_rtp),
+                        format!("{}", r.ports_match),
+                        if r.ok() { "OK".into() } else { "MISMATCH".into() },
+                    ]
+                })
+                .collect();
+            print_table(
+                &format!("model validation ({})", machine.name),
+                &["form", "db lat", "meas lat", "db rTP", "meas rTP", "ports", "verdict"],
+                &table,
+            );
+        }
+        "compare" => {
+            let path = pos.first().ok_or_else(|| anyhow!("usage: compare <file.s> --arch skl|zen"))?;
+            let machine = machine_opt(&opts)?;
+            let unroll: usize = opts.get("unroll").map(|v| v.parse()).transpose()?.unwrap_or(1);
+            let kernel = load_kernel(path)?;
+            let coord = Coordinator::auto();
+            let r = coord.analyze_kernel(&kernel, &machine)?;
+            let m = simulate(&kernel, &machine, SimConfig::default())?;
+            print_table(
+                &format!("{} on {}", kernel.name, machine.name),
+                &["predictor", "cy/asm-iter", "cy/src-it"],
+                &[
+                    vec![
+                        "OSACA (uniform ports)".into(),
+                        format!("{:.2}", r.osaca.cy_per_asm_iter),
+                        format!("{:.2}", r.osaca.cy_per_asm_iter / unroll as f32),
+                    ],
+                    vec![
+                        "balanced baseline (PJRT artifact)".into(),
+                        format!("{:.2}", r.baseline.cy_per_asm_iter),
+                        format!("{:.2}", r.baseline.cy_per_asm_iter / unroll as f32),
+                    ],
+                    vec![
+                        "critical-path bound".into(),
+                        format!("{:.2}", r.critpath.carried_per_iteration),
+                        format!("{:.2}", r.critpath.carried_per_iteration / unroll as f32),
+                    ],
+                    vec![
+                        "simulated hardware".into(),
+                        format!("{:.2}", m.cycles_per_iteration),
+                        format!("{:.2}", m.cy_per_source_it(unroll)),
+                    ],
+                ],
+            );
+        }
+        "tables" => {
+            let coord = Coordinator::auto();
+            let all = opts.contains_key("all") || opts.is_empty();
+            let cfg = SimConfig::default();
+            if all || opts.contains_key("table1") {
+                let rows = table1(&coord)?;
+                print_table(
+                    "Table I: triad throughput analyses (cy per assembly iteration)",
+                    &["compiled for", "flag", "unroll", "OSACA Zen", "OSACA SKL", "IACA-like SKL"],
+                    &render_table1(&rows),
+                );
+            }
+            if all || opts.contains_key("table3") {
+                let rows = table3(&coord, cfg)?;
+                print_table(
+                    "Table III: triad measured (simulator @1.8GHz) vs predictions",
+                    &[
+                        "executed on",
+                        "compiled for",
+                        "flag",
+                        "unroll",
+                        "MFLOP/s",
+                        "Mit/s",
+                        "measured cy/it",
+                        "OSACA cy/it",
+                        "IACA-like cy/it",
+                    ],
+                    &render_table3(&rows),
+                );
+            }
+            if all || opts.contains_key("table5") {
+                let rows = table5(&coord, cfg)?;
+                print_table(
+                    "Table V: pi benchmark predictions vs measurement",
+                    &["arch", "flag", "IACA-like", "OSACA", "measured cy/it", "stall cy"],
+                    &render_table5(&rows),
+                );
+            }
+        }
+        "figures" => {
+            for arch in ["skl", "zen"] {
+                let m = mdb::by_name(arch).unwrap();
+                println!("{}", render_port_diagram(&m));
+            }
+        }
+        "serve" => {
+            let n: usize = opts.get("requests").map(|v| v.parse()).transpose()?.unwrap_or(64);
+            serve_demo(n)?;
+        }
+        "list-workloads" => {
+            for w in workloads::all() {
+                println!(
+                    "{:<16} compiled-for={:<4} unroll={} flops/it={}",
+                    w.name(),
+                    w.compiled_for,
+                    w.unroll,
+                    w.flops_per_it
+                );
+            }
+        }
+        other => {
+            print_usage();
+            bail!("unknown command `{other}`");
+        }
+    }
+    Ok(())
+}
+
+/// Drive the batching coordinator with concurrent requests and report
+/// service statistics (the serving-framework face of the repo).
+fn serve_demo(n: usize) -> Result<()> {
+    use std::sync::Arc;
+    let coord = Arc::new(Coordinator::auto());
+    let t0 = std::time::Instant::now();
+    let mut handles = Vec::new();
+    for i in 0..n {
+        let coord = coord.clone();
+        handles.push(std::thread::spawn(move || -> Result<f32> {
+            let ws = workloads::all();
+            let w = ws[i % ws.len()];
+            let arch = if i % 2 == 0 { "skl" } else { "zen" };
+            let machine = mdb::by_name(arch).unwrap();
+            let r = coord.analyze_kernel(&w.kernel(), &machine)?;
+            Ok(r.baseline.cy_per_asm_iter)
+        }));
+    }
+    for h in handles {
+        h.join().map_err(|_| anyhow!("worker panicked"))??;
+    }
+    let dt = t0.elapsed();
+    let stats = &coord.stats;
+    println!(
+        "served {n} analysis requests in {dt:?} ({:.0} req/s)",
+        n as f64 / dt.as_secs_f64()
+    );
+    println!(
+        "batches: {} (avg size {:.2}), solver time {} µs total",
+        stats.batches.load(std::sync::atomic::Ordering::Relaxed),
+        stats.avg_batch_size(),
+        stats.solve_micros.load(std::sync::atomic::Ordering::Relaxed),
+    );
+    Ok(())
+}
+
+fn print_usage() {
+    println!(
+        "osaca — instruction-stream throughput prediction (OSACA reproduction)
+
+usage: osaca <command> [options]
+
+commands:
+  analyze <file.s> --arch skl|zen [--baseline] [--critpath]
+  simulate <file.s> --arch skl|zen [--iterations N]
+  ibench --instr <form> --arch skl|zen [--conflict <form>]
+  build-model --instr <form> --arch skl|zen
+  validate-model --arch skl|zen
+  compare <file.s> --arch skl|zen [--unroll N]
+  tables [--table1|--table3|--table5|--all]
+  figures
+  serve [--requests N]
+  list-workloads"
+    );
+}

@@ -1,0 +1,154 @@
+//! Database entries: instruction forms and their µ-op decomposition.
+
+use crate::isa::InstructionForm;
+
+use super::port::PortMask;
+
+/// µ-op role. Drives dependency wiring in the simulator and the
+/// hideable-load / divider special cases in the analyzer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum UopKind {
+    /// Regular execution µ-op; produces the register result.
+    Compute,
+    /// Load µ-op: address generation + L1 access; feeds the compute µ-op.
+    Load,
+    /// Store-data µ-op.
+    StoreData,
+    /// Store address-generation µ-op.
+    StoreAgu,
+    /// Divider-pipe occupancy µ-op (SKL `0DV`, Zen `DV`): blocks the
+    /// divider for `occupancy` cycles while the issuing port frees after
+    /// one (paper §I-B).
+    Divider,
+}
+
+impl UopKind {
+    pub fn code(self) -> &'static str {
+        match self {
+            UopKind::Compute => "c",
+            UopKind::Load => "ld",
+            UopKind::StoreData => "st",
+            UopKind::StoreAgu => "agu",
+            UopKind::Divider => "dv",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        Some(match s {
+            "c" => UopKind::Compute,
+            "ld" => UopKind::Load,
+            "st" => UopKind::StoreData,
+            "agu" => UopKind::StoreAgu,
+            "dv" => UopKind::Divider,
+            _ => return None,
+        })
+    }
+}
+
+/// One µ-op of an instruction form.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Uop {
+    pub kind: UopKind,
+    /// Ports that can execute this µ-op.
+    pub ports: PortMask,
+    /// Cycles the chosen port is occupied (1.0 for pipelined µ-ops,
+    /// >1 for divider pipes).
+    pub occupancy: f32,
+}
+
+/// A database entry for one instruction form.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FormEntry {
+    pub form: InstructionForm,
+    /// Register-chain latency in cycles (paper §II-A latency benchmark).
+    pub latency: f32,
+    /// Documented reciprocal throughput in cy/instr — the benchmark
+    /// value; the analyzer recomputes pressure from the µ-ops, this field
+    /// is the cross-check the builder validates against.
+    pub throughput: f32,
+    pub uops: Vec<Uop>,
+}
+
+impl FormEntry {
+    /// Reciprocal throughput implied by the µ-op decomposition alone
+    /// (single-instruction-kind loop): the most-pressured port when the
+    /// form runs back-to-back.
+    pub fn implied_rtp(&self) -> f32 {
+        let mut pressure = [0f32; 16];
+        for u in &self.uops {
+            let share = u.occupancy / u.ports.count().max(1) as f32;
+            for p in u.ports.iter() {
+                pressure[p] += share;
+            }
+        }
+        pressure.iter().cloned().fold(0.0, f32::max)
+    }
+
+    /// Total µ-op count (fused-domain approximation).
+    pub fn n_uops(&self) -> usize {
+        self.uops.len()
+    }
+}
+
+/// How a lookup was satisfied; surfaces in reports so users can tell
+/// measured entries from synthesized ones.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Provenance {
+    /// Exact database hit.
+    Direct,
+    /// Memory-operand form synthesized from the register form + load/store
+    /// µ-ops (paper: unknown forms would trigger benchmark generation; we
+    /// synthesize *and* flag, and ibench can then confirm).
+    SynthesizedMem,
+    /// 256-bit form synthesized from the 128-bit form by µ-op doubling
+    /// (Zen AVX splitting, paper §III-A).
+    SynthesizedSplit,
+    /// Size-suffixed scalar mnemonic normalized (addl -> add).
+    SynthesizedSuffix,
+}
+
+/// Resolved µ-ops for a concrete instruction, with provenance.
+#[derive(Debug, Clone)]
+pub struct ResolvedUops {
+    pub entry: FormEntry,
+    pub provenance: Provenance,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn uop(kind: UopKind, ports: &[usize], occ: f32) -> Uop {
+        Uop { kind, ports: PortMask::from_ports(ports), occupancy: occ }
+    }
+
+    #[test]
+    fn implied_rtp_two_ports() {
+        let e = FormEntry {
+            form: InstructionForm::new("vaddpd", "xmm_xmm_xmm"),
+            latency: 4.0,
+            throughput: 0.5,
+            uops: vec![uop(UopKind::Compute, &[0, 1], 1.0)],
+        };
+        assert!((e.implied_rtp() - 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn implied_rtp_divider_dominates() {
+        let e = FormEntry {
+            form: InstructionForm::new("vdivsd", "xmm_xmm_xmm"),
+            latency: 13.0,
+            throughput: 4.0,
+            uops: vec![uop(UopKind::Compute, &[0], 1.0), uop(UopKind::Divider, &[8], 4.0)],
+        };
+        assert!((e.implied_rtp() - 4.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn uop_kind_roundtrip() {
+        for k in [UopKind::Compute, UopKind::Load, UopKind::StoreData, UopKind::StoreAgu, UopKind::Divider] {
+            assert_eq!(UopKind::parse(k.code()), Some(k));
+        }
+        assert_eq!(UopKind::parse("x"), None);
+    }
+}

@@ -1,0 +1,334 @@
+//! `.mdb` text format: parse and serialize machine models.
+//!
+//! Line-oriented; `#` starts a comment. Grammar (one stanza per file):
+//!
+//! ```text
+//! arch skl "Intel Skylake"
+//! freq 1.8
+//! ports P0 P1 P2 P3 P4 P5 P6 P7 0DV
+//! loadports P2 P3
+//! storedataports P4
+//! storeaguports P2 P3
+//! storeagusimpleports P2 P3 P7
+//! flags  hide_load_behind_store avx256_split
+//! simflags zero_idiom_elim macro_fusion move_elim
+//! param rob 224
+//! ...
+//! entry vaddpd-xmm_xmm_xmm lat=4 tp=0.5 uops=c@1:P0|P1
+//! entry vdivsd-xmm_xmm_xmm lat=13 tp=4 uops=c@1:P0,dv@4:0DV
+//! ```
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::isa::InstructionForm;
+
+use super::entry::{FormEntry, Uop, UopKind};
+use super::machine::{CoreParams, MachineModel};
+use super::port::PortMask;
+
+impl MachineModel {
+    /// Parse a machine model from `.mdb` text.
+    pub fn parse(src: &str) -> Result<MachineModel> {
+        let mut name = None;
+        let mut arch_name = String::new();
+        let mut ports: Vec<String> = Vec::new();
+        let mut frequency_ghz = 1.8f64;
+        let mut flags: Vec<String> = Vec::new();
+        let mut simflags: Vec<String> = Vec::new();
+        let mut params = CoreParams::default();
+        let mut load_ports = PortMask::EMPTY;
+        let mut store_data_ports = PortMask::EMPTY;
+        let mut store_agu_ports = PortMask::EMPTY;
+        let mut store_agu_simple_ports = PortMask::EMPTY;
+        let mut entry_lines: Vec<(usize, String)> = Vec::new();
+
+        for (lineno, raw) in src.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            let (key, rest) = line.split_once(char::is_whitespace).unwrap_or((line, ""));
+            let rest = rest.trim();
+            match key {
+                "arch" => {
+                    let (short, pretty) = rest.split_once(char::is_whitespace).unwrap_or((rest, ""));
+                    name = Some(short.to_string());
+                    arch_name = pretty.trim_matches('"').to_string();
+                }
+                "freq" => frequency_ghz = rest.parse().context("bad freq")?,
+                "ports" => ports = rest.split_whitespace().map(str::to_string).collect(),
+                "loadports" | "storedataports" | "storeaguports" | "storeagusimpleports" => {
+                    let mask = parse_port_list(&ports, rest)
+                        .with_context(|| format!("line {}: {key}", lineno + 1))?;
+                    match key {
+                        "loadports" => load_ports = mask,
+                        "storedataports" => store_data_ports = mask,
+                        "storeaguports" => store_agu_ports = mask,
+                        _ => store_agu_simple_ports = mask,
+                    }
+                }
+                "flags" => flags.extend(rest.split_whitespace().map(str::to_string)),
+                "simflags" => simflags.extend(rest.split_whitespace().map(str::to_string)),
+                "param" => {
+                    let (p, v) = rest
+                        .split_once(char::is_whitespace)
+                        .ok_or_else(|| anyhow!("line {}: param needs value", lineno + 1))?;
+                    let v = v.trim();
+                    match p {
+                        "rob" => params.rob_size = v.parse()?,
+                        "sched" => params.scheduler_size = v.parse()?,
+                        "rename_width" => params.rename_width = v.parse()?,
+                        "retire_width" => params.retire_width = v.parse()?,
+                        "load_latency" => params.load_latency = v.parse()?,
+                        "store_forward_latency" => params.store_forward_latency = v.parse()?,
+                        "sim_divider_scale" => params.sim_divider_scale = v.parse()?,
+                        other => bail!("line {}: unknown param `{other}`", lineno + 1),
+                    }
+                }
+                "entry" => entry_lines.push((lineno + 1, rest.to_string())),
+                other => bail!("line {}: unknown directive `{other}`", lineno + 1),
+            }
+        }
+
+        let name = name.ok_or_else(|| anyhow!("missing `arch` line"))?;
+        if ports.is_empty() {
+            bail!("missing `ports` line");
+        }
+        if ports.len() > 16 {
+            bail!("at most 16 ports supported, got {}", ports.len());
+        }
+        let mut model = MachineModel {
+            name,
+            arch_name,
+            ports,
+            frequency_ghz,
+            avx256_split: flags.iter().any(|f| f == "avx256_split"),
+            hide_load_behind_store: flags.iter().any(|f| f == "hide_load_behind_store"),
+            sim_zero_idiom_elim: simflags.iter().any(|f| f == "zero_idiom_elim"),
+            sim_macro_fusion: simflags.iter().any(|f| f == "macro_fusion"),
+            sim_move_elim: simflags.iter().any(|f| f == "move_elim"),
+            sim_store_data_free: simflags.iter().any(|f| f == "store_data_free"),
+            load_ports,
+            store_data_ports,
+            store_agu_ports,
+            store_agu_simple_ports,
+            params,
+            entries: Default::default(),
+        };
+        for (lineno, line) in entry_lines {
+            let entry = parse_entry(&model, &line).with_context(|| format!("entry line {lineno}"))?;
+            model.insert(entry);
+        }
+        Ok(model)
+    }
+
+    /// Serialize back to `.mdb` text (builder output).
+    pub fn serialize(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!("arch {} \"{}\"\n", self.name, self.arch_name));
+        out.push_str(&format!("freq {}\n", self.frequency_ghz));
+        out.push_str(&format!("ports {}\n", self.ports.join(" ")));
+        let plist = |m: PortMask| {
+            m.iter().map(|i| self.ports[i].clone()).collect::<Vec<_>>().join(" ")
+        };
+        out.push_str(&format!("loadports {}\n", plist(self.load_ports)));
+        out.push_str(&format!("storedataports {}\n", plist(self.store_data_ports)));
+        out.push_str(&format!("storeaguports {}\n", plist(self.store_agu_ports)));
+        if !self.store_agu_simple_ports.is_empty() {
+            out.push_str(&format!("storeagusimpleports {}\n", plist(self.store_agu_simple_ports)));
+        }
+        let mut flags = Vec::new();
+        if self.avx256_split {
+            flags.push("avx256_split");
+        }
+        if self.hide_load_behind_store {
+            flags.push("hide_load_behind_store");
+        }
+        if !flags.is_empty() {
+            out.push_str(&format!("flags {}\n", flags.join(" ")));
+        }
+        let mut simflags = Vec::new();
+        if self.sim_zero_idiom_elim {
+            simflags.push("zero_idiom_elim");
+        }
+        if self.sim_macro_fusion {
+            simflags.push("macro_fusion");
+        }
+        if self.sim_move_elim {
+            simflags.push("move_elim");
+        }
+        if self.sim_store_data_free {
+            simflags.push("store_data_free");
+        }
+        if !simflags.is_empty() {
+            out.push_str(&format!("simflags {}\n", simflags.join(" ")));
+        }
+        let p = &self.params;
+        out.push_str(&format!("param rob {}\n", p.rob_size));
+        out.push_str(&format!("param sched {}\n", p.scheduler_size));
+        out.push_str(&format!("param rename_width {}\n", p.rename_width));
+        out.push_str(&format!("param retire_width {}\n", p.retire_width));
+        out.push_str(&format!("param load_latency {}\n", p.load_latency));
+        out.push_str(&format!("param store_forward_latency {}\n", p.store_forward_latency));
+        if (p.sim_divider_scale - 1.0).abs() > 1e-6 {
+            out.push_str(&format!("param sim_divider_scale {}\n", p.sim_divider_scale));
+        }
+        let mut forms: Vec<_> = self.entries.values().collect();
+        forms.sort_by(|a, b| a.form.cmp(&b.form));
+        for e in forms {
+            let uops = e
+                .uops
+                .iter()
+                .map(|u| {
+                    format!(
+                        "{}@{}:{}",
+                        u.kind.code(),
+                        trim_float(u.occupancy),
+                        u.ports.iter().map(|i| self.ports[i].clone()).collect::<Vec<_>>().join("|")
+                    )
+                })
+                .collect::<Vec<_>>()
+                .join(",");
+            if uops.is_empty() {
+                // Port-free entries (branches).
+                out.push_str(&format!(
+                    "entry {} lat={} tp={}\n",
+                    e.form,
+                    trim_float(e.latency),
+                    trim_float(e.throughput)
+                ));
+            } else {
+                out.push_str(&format!(
+                    "entry {} lat={} tp={} uops={}\n",
+                    e.form,
+                    trim_float(e.latency),
+                    trim_float(e.throughput),
+                    uops
+                ));
+            }
+        }
+        out
+    }
+}
+
+fn trim_float(v: f32) -> String {
+    if (v - v.round()).abs() < 1e-6 {
+        format!("{}", v.round() as i64)
+    } else {
+        format!("{v}")
+    }
+}
+
+fn parse_port_list(ports: &[String], s: &str) -> Result<PortMask> {
+    let mut mask = PortMask::EMPTY;
+    for name in s.split(['|', ' ']).filter(|p| !p.is_empty()) {
+        let idx = ports
+            .iter()
+            .position(|p| p.eq_ignore_ascii_case(name))
+            .ok_or_else(|| anyhow!("unknown port `{name}`"))?;
+        mask = mask.union(PortMask::single(idx));
+    }
+    Ok(mask)
+}
+
+fn parse_entry(model: &MachineModel, line: &str) -> Result<FormEntry> {
+    let mut parts = line.split_whitespace();
+    let form = InstructionForm::parse(parts.next().ok_or_else(|| anyhow!("empty entry"))?);
+    let mut latency = 0f32;
+    let mut throughput = 0f32;
+    let mut uops = Vec::new();
+    for kv in parts {
+        let (k, v) = kv.split_once('=').ok_or_else(|| anyhow!("bad field `{kv}`"))?;
+        match k {
+            "lat" => latency = v.parse().context("lat")?,
+            "tp" => throughput = v.parse().context("tp")?,
+            "uops" => {
+                for u in v.split(',') {
+                    let (kind_occ, port_s) =
+                        u.split_once(':').ok_or_else(|| anyhow!("bad uop `{u}`"))?;
+                    let (kind_s, occ_s) =
+                        kind_occ.split_once('@').ok_or_else(|| anyhow!("bad uop `{u}`"))?;
+                    let kind = UopKind::parse(kind_s).ok_or_else(|| anyhow!("bad kind `{kind_s}`"))?;
+                    let occupancy: f32 = occ_s.parse().context("occupancy")?;
+                    let ports = parse_port_list(&model.ports, port_s)?;
+                    if ports.is_empty() {
+                        bail!("uop `{u}` has empty port set");
+                    }
+                    uops.push(Uop { kind, ports, occupancy });
+                }
+            }
+            other => bail!("unknown entry field `{other}`"),
+        }
+    }
+    if uops.is_empty() && !form.mnemonic.starts_with('j') {
+        bail!("entry `{form}` has no uops (only branches may)");
+    }
+    Ok(FormEntry { form, latency, throughput, uops })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const MINI: &str = r#"
+arch test "Test Arch"
+freq 2.0
+ports P0 P1 LD 0DV
+loadports LD
+storedataports P1
+storeaguports LD
+param rob 100
+param load_latency 3
+entry vaddpd-xmm_xmm_xmm lat=4 tp=0.5 uops=c@1:P0|P1
+entry vdivsd-xmm_xmm_xmm lat=13 tp=4 uops=c@1:P0,dv@4:0DV
+"#;
+
+    #[test]
+    fn parse_minimal() {
+        let m = MachineModel::parse(MINI).unwrap();
+        assert_eq!(m.name, "test");
+        assert_eq!(m.arch_name, "Test Arch");
+        assert_eq!(m.frequency_ghz, 2.0);
+        assert_eq!(m.ports, vec!["P0", "P1", "LD", "0DV"]);
+        assert_eq!(m.params.rob_size, 100);
+        assert_eq!(m.params.load_latency, 3);
+        assert_eq!(m.entries.len(), 2);
+        let div = m.entries.get(&InstructionForm::new("vdivsd", "xmm_xmm_xmm")).unwrap();
+        assert_eq!(div.uops.len(), 2);
+        assert_eq!(div.uops[1].occupancy, 4.0);
+    }
+
+    #[test]
+    fn roundtrip() {
+        let m = MachineModel::parse(MINI).unwrap();
+        let text = m.serialize();
+        let m2 = MachineModel::parse(&text).unwrap();
+        assert_eq!(m.entries.len(), m2.entries.len());
+        assert_eq!(m.ports, m2.ports);
+        assert_eq!(m.params.load_latency, m2.params.load_latency);
+        for (form, e) in &m.entries {
+            let e2 = &m2.entries[form];
+            assert_eq!(e.uops, e2.uops, "{form}");
+            assert_eq!(e.latency, e2.latency);
+        }
+    }
+
+    #[test]
+    fn unknown_port_errors() {
+        let bad = MINI.replace("uops=c@1:P0|P1", "uops=c@1:P9");
+        assert!(MachineModel::parse(&bad).is_err());
+    }
+
+    #[test]
+    fn unknown_directive_errors() {
+        assert!(MachineModel::parse("arch a \"A\"\nports P0\nbogus 1\n").is_err());
+    }
+
+    #[test]
+    fn builtin_serialize_roundtrip() {
+        for m in [super::super::skylake(), super::super::zen()] {
+            let m2 = MachineModel::parse(&m.serialize()).unwrap();
+            assert_eq!(m.entries.len(), m2.entries.len(), "{}", m.name);
+        }
+    }
+}

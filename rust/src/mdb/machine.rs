@@ -1,0 +1,347 @@
+//! The machine model: ports, parameters, entries, and form resolution.
+
+use std::collections::HashMap;
+
+use anyhow::{anyhow, Result};
+
+use crate::isa::{Instruction, InstructionForm};
+
+use super::entry::{FormEntry, Provenance, ResolvedUops, Uop, UopKind};
+use super::port::PortMask;
+
+/// Microarchitectural parameters consumed by the simulator substrate.
+/// Documented values for SKL/Zen; see data/*.mdb.
+#[derive(Debug, Clone)]
+pub struct CoreParams {
+    /// Reorder-buffer entries (in-flight µ-ops).
+    pub rob_size: usize,
+    /// Scheduler/reservation-station entries.
+    pub scheduler_size: usize,
+    /// µ-ops renamed/allocated per cycle (pipeline width).
+    pub rename_width: usize,
+    /// µ-ops retired per cycle.
+    pub retire_width: usize,
+    /// L1 load-to-use latency (all loads hit L1 — paper assumption 1).
+    pub load_latency: u32,
+    /// Store-to-load forwarding latency: the penalty a load pays when its
+    /// address matches an in-flight/recent store. This is what blows up
+    /// the -O1 π kernel (paper §III-B).
+    pub store_forward_latency: u32,
+    /// Simulator-only scale on divider occupancy: models the not-fully-
+    /// pipelined real divider that the analytic model's fixed occupancy
+    /// underestimates (paper observes Zen ~20% slower than predicted).
+    pub sim_divider_scale: f32,
+}
+
+impl Default for CoreParams {
+    fn default() -> Self {
+        CoreParams {
+            rob_size: 224,
+            scheduler_size: 97,
+            rename_width: 4,
+            retire_width: 4,
+            load_latency: 4,
+            store_forward_latency: 5,
+            sim_divider_scale: 1.0,
+        }
+    }
+}
+
+/// A full machine model (one per microarchitecture).
+#[derive(Debug, Clone)]
+pub struct MachineModel {
+    /// Short name used on the CLI (`skl`, `zen`).
+    pub name: String,
+    /// Human-readable name ("Intel Skylake").
+    pub arch_name: String,
+    /// Port display names, index = port id used in masks.
+    pub ports: Vec<String>,
+    /// Clock frequency used to convert cycles <-> time (paper: 1.8 GHz).
+    pub frequency_ghz: f64,
+    /// Zen executes 256-bit AVX as two 128-bit µ-op pairs (paper §III-A).
+    pub avx256_split: bool,
+    /// Zen AGU sharing: one load µ-op can hide behind each store's AGU
+    /// slot in the analyzer's pressure accounting (paper Table IV).
+    pub hide_load_behind_store: bool,
+    /// Simulator: eliminate zeroing idioms at rename (real cores do; the
+    /// analyzer deliberately does not — §III-B discrepancy).
+    pub sim_zero_idiom_elim: bool,
+    /// Simulator: cmp/test + jcc macro-fusion.
+    pub sim_macro_fusion: bool,
+    /// Simulator: reg-reg move elimination at rename.
+    pub sim_move_elim: bool,
+    /// Simulator: store-data µ-ops go to the store queue, not an
+    /// execution port (Zen LS pipes — see data/zen.mdb header). The
+    /// analyzer still charges them per the paper's Table IV convention.
+    pub sim_store_data_free: bool,
+    /// Ports that execute load µ-ops (used for mem-form synthesis).
+    pub load_ports: PortMask,
+    /// Ports for store-data µ-ops.
+    pub store_data_ports: PortMask,
+    /// Ports for store-AGU µ-ops with *indexed* addressing.
+    pub store_agu_ports: PortMask,
+    /// Ports for store-AGU µ-ops with *simple* addressing (SKL port 7).
+    pub store_agu_simple_ports: PortMask,
+    pub params: CoreParams,
+    pub entries: HashMap<InstructionForm, FormEntry>,
+}
+
+impl MachineModel {
+    pub fn port_index(&self, name: &str) -> Option<usize> {
+        self.ports.iter().position(|p| p.eq_ignore_ascii_case(name))
+    }
+
+    pub fn n_ports(&self) -> usize {
+        self.ports.len()
+    }
+
+    /// Divider pseudo-ports (named `*DV*`), excluded from issue-width
+    /// accounting in the simulator.
+    pub fn divider_ports(&self) -> PortMask {
+        let mut m = PortMask::EMPTY;
+        for (i, p) in self.ports.iter().enumerate() {
+            if p.contains("DV") {
+                m = m.union(PortMask::single(i));
+            }
+        }
+        m
+    }
+
+    pub fn insert(&mut self, entry: FormEntry) {
+        self.entries.insert(entry.form.clone(), entry);
+    }
+
+    /// Resolve the µ-ops for a concrete instruction, applying the
+    /// synthesis fallbacks in order:
+    /// 1. direct hit;
+    /// 2. size-suffix normalization for scalar-int mnemonics
+    ///    (`addl $1,%eax` -> `add-imm_r32` via `add-imm_r`);
+    /// 3. 256-bit from 128-bit by µ-op doubling (when `avx256_split`);
+    /// 4. memory form from register form + load/store µ-ops.
+    ///
+    /// Branches resolve to a zero-µ-op pseudo-entry when fused.
+    pub fn resolve(&self, ins: &Instruction) -> Result<ResolvedUops> {
+        let form = ins.form();
+        if let Some(e) = self.entries.get(&form) {
+            return Ok(ResolvedUops { entry: e.clone(), provenance: Provenance::Direct });
+        }
+        // 2. scalar-int suffix normalization.
+        if let Some(e) = self.suffix_normalized(&form) {
+            return Ok(ResolvedUops { entry: e, provenance: Provenance::SynthesizedSuffix });
+        }
+        // 3. ymm from xmm when the architecture splits 256-bit ops.
+        if self.avx256_split && form.sig.0.contains("ymm") {
+            let xmm_form = InstructionForm {
+                mnemonic: form.mnemonic.clone(),
+                sig: crate::isa::OperandSig(form.sig.0.replace("ymm", "xmm")),
+            };
+            if let Ok(base) = self.resolve_form_only(&xmm_form) {
+                let mut uops = base.uops.clone();
+                uops.extend(base.uops.iter().cloned());
+                let entry = FormEntry {
+                    form: form.clone(),
+                    latency: base.latency, // halves execute independently
+                    throughput: base.throughput * 2.0,
+                    uops,
+                };
+                return Ok(ResolvedUops { entry, provenance: Provenance::SynthesizedSplit });
+            }
+        }
+        // 4. memory-form synthesis from the register form.
+        if form.sig.0.contains("mem") {
+            if let Some(resolved) = self.synthesize_mem(ins, &form)? {
+                return Ok(resolved);
+            }
+        }
+        Err(anyhow!(
+            "no database entry for instruction form `{form}` (line {}: `{}`) on {}",
+            ins.line,
+            ins.raw,
+            self.name
+        ))
+    }
+
+    /// Resolve an abstract form with suffix + split fallbacks but without
+    /// an instruction context (used by split synthesis internally).
+    fn resolve_form_only(&self, form: &InstructionForm) -> Result<FormEntry> {
+        if let Some(e) = self.entries.get(form) {
+            return Ok(e.clone());
+        }
+        self.suffix_normalized(form)
+            .ok_or_else(|| anyhow!("no entry for `{form}`"))
+    }
+
+    fn suffix_normalized(&self, form: &InstructionForm) -> Option<FormEntry> {
+        const SUFFIXES: [char; 4] = ['b', 'w', 'l', 'q'];
+        let m = &form.mnemonic;
+        if m.len() < 3 || m.starts_with('v') {
+            return None;
+        }
+        // Generalize GP width in the signature: r32/r64/r16/r8 -> r.
+        let gsig = form
+            .sig
+            .0
+            .replace("r64", "r")
+            .replace("r32", "r")
+            .replace("r16", "r")
+            .replace("r8", "r");
+        // Try the mnemonic as-is first (covers unsuffixed spellings like
+        // `add $1, %esi`), then with the AT&T size suffix stripped
+        // (`addl` -> `add`).
+        let key = InstructionForm::new(m, &gsig);
+        if let Some(e) = self.entries.get(&key) {
+            return Some(FormEntry { form: form.clone(), ..e.clone() });
+        }
+        let last = m.chars().last()?;
+        if !SUFFIXES.contains(&last) {
+            return None;
+        }
+        let stem = &m[..m.len() - 1];
+        let key = InstructionForm::new(stem, &gsig);
+        self.entries.get(&key).map(|e| FormEntry { form: form.clone(), ..e.clone() })
+    }
+
+    fn synthesize_mem(
+        &self,
+        ins: &Instruction,
+        form: &InstructionForm,
+    ) -> Result<Option<ResolvedUops>> {
+        // Replace `mem` with the width class of the widest register
+        // operand (reg form), then append load / store µ-ops.
+        let reg_sig = match ins.vector_width() {
+            256 => form.sig.0.replace("mem", "ymm"),
+            128 => form.sig.0.replace("mem", "xmm"),
+            _ => {
+                // Scalar int: mem -> matching GP class of dest.
+                let cls = ins
+                    .operands
+                    .iter()
+                    .filter_map(|o| o.reg())
+                    .map(|r| r.class.sig())
+                    .next()
+                    .unwrap_or("r64");
+                form.sig.0.replace("mem", cls)
+            }
+        };
+        let reg_form = InstructionForm::new(&form.mnemonic, &reg_sig);
+        let base = match self.resolve_form_only(&reg_form) {
+            Ok(e) => e,
+            Err(_) if self.avx256_split && ins.vector_width() == 256 => {
+                // Splitting architectures may only carry the 128-bit
+                // register form; the doubling below restores the width.
+                let xmm_form =
+                    InstructionForm::new(&form.mnemonic, &reg_sig.replace("ymm", "xmm"));
+                match self.resolve_form_only(&xmm_form) {
+                    Ok(e) => e,
+                    Err(_) => return Ok(None),
+                }
+            }
+            Err(_) => return Ok(None),
+        };
+        let mut uops = base.uops.clone();
+        // Latency stays the register-chain latency (paper §II-C: the
+        // latency benchmark chains through registers; the load path is
+        // modeled by the load µ-op itself in the simulator).
+        let latency = base.latency;
+        let mut provenance = Provenance::SynthesizedMem;
+        if ins.is_store() {
+            let agu = if ins.mem_operand().map(|m| m.is_simple()).unwrap_or(false)
+                && !self.store_agu_simple_ports.is_empty()
+            {
+                self.store_agu_simple_ports
+            } else {
+                self.store_agu_ports
+            };
+            uops.push(Uop { kind: UopKind::StoreData, ports: self.store_data_ports, occupancy: 1.0 });
+            uops.push(Uop { kind: UopKind::StoreAgu, ports: agu, occupancy: 1.0 });
+        } else {
+            uops.push(Uop { kind: UopKind::Load, ports: self.load_ports, occupancy: 1.0 });
+        }
+        // A synthesized split of a mem form doubles afterwards via
+        // resolve(); here we only handle the direct case.
+        if self.avx256_split && ins.vector_width() == 256 {
+            let doubled: Vec<Uop> = uops.iter().chain(uops.iter()).cloned().collect();
+            uops = doubled;
+            provenance = Provenance::SynthesizedSplit;
+        }
+        let entry = FormEntry { form: form.clone(), latency, throughput: 0.0, uops };
+        Ok(Some(ResolvedUops { entry, provenance }))
+    }
+
+    /// All forms currently in the database, sorted (for reports/dumps).
+    pub fn forms(&self) -> Vec<&InstructionForm> {
+        let mut v: Vec<_> = self.entries.keys().collect();
+        v.sort();
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{skylake, zen};
+    use super::*;
+    use crate::asm::parser::parse_instruction;
+    use crate::mdb::entry::Provenance;
+
+    fn ins(s: &str) -> Instruction {
+        parse_instruction(s, 1).unwrap()
+    }
+
+    #[test]
+    fn direct_resolution() {
+        let skl = skylake();
+        let r = skl.resolve(&ins("vaddpd %xmm1, %xmm2, %xmm3")).unwrap();
+        assert_eq!(r.provenance, Provenance::Direct);
+        assert!((r.entry.implied_rtp() - 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn suffix_normalization() {
+        let skl = skylake();
+        let r = skl.resolve(&ins("addl $1, %ecx")).unwrap();
+        assert_eq!(r.provenance, Provenance::SynthesizedSuffix);
+        assert_eq!(r.entry.uops.len(), 1);
+        assert_eq!(r.entry.uops[0].ports.count(), 4); // P0156
+    }
+
+    #[test]
+    fn zen_splits_ymm() {
+        let z = zen();
+        let r = z.resolve(&ins("vaddpd %ymm1, %ymm2, %ymm3")).unwrap();
+        assert_eq!(r.provenance, Provenance::SynthesizedSplit);
+        // xmm form has 1 µ-op -> ymm has 2.
+        assert_eq!(r.entry.uops.len(), 2);
+    }
+
+    #[test]
+    fn skl_does_not_split_ymm() {
+        let skl = skylake();
+        let r = skl.resolve(&ins("vaddpd %ymm1, %ymm2, %ymm3")).unwrap();
+        assert_eq!(r.provenance, Provenance::Direct);
+        assert_eq!(r.entry.uops.len(), 1);
+    }
+
+    #[test]
+    fn mem_synthesis_adds_load() {
+        let skl = skylake();
+        // vsubpd mem form is not in the DB; synthesized from reg form.
+        let r = skl.resolve(&ins("vsubpd (%rax), %xmm1, %xmm2")).unwrap();
+        assert_eq!(r.provenance, Provenance::SynthesizedMem);
+        assert!(r.entry.uops.iter().any(|u| u.kind == UopKind::Load));
+        let reg = skl.resolve(&ins("vsubpd %xmm0, %xmm1, %xmm2")).unwrap();
+        assert_eq!(r.entry.uops.len(), reg.entry.uops.len() + 1);
+        assert_eq!(r.entry.latency, reg.entry.latency);
+    }
+
+    #[test]
+    fn unknown_form_errors() {
+        let skl = skylake();
+        assert!(skl.resolve(&ins("frobnicate %xmm0, %xmm1")).is_err());
+    }
+
+    #[test]
+    fn divider_ports_detected() {
+        assert_eq!(skylake().divider_ports().count(), 1);
+        assert_eq!(zen().divider_ports().count(), 1);
+    }
+}

@@ -1,0 +1,99 @@
+//! Machine-model database (paper §II).
+//!
+//! A machine model is: a set of ports (including divider pseudo-ports
+//! like Skylake's `0DV`), per-instruction-form entries (latency,
+//! reciprocal throughput, µ-op decomposition with admissible-port sets),
+//! plus architecture parameters used by the simulator substrate (ROB and
+//! scheduler sizes, load latency, store-forward latency, ...).
+//!
+//! Models ship as `.mdb` text files embedded in the binary
+//! (`data/skl.mdb`, `data/zen.mdb`) and can be written/extended by the
+//! model builder (paper §II-C workflow).
+
+pub mod entry;
+pub mod format;
+pub mod machine;
+pub mod port;
+
+pub use entry::{FormEntry, Provenance, ResolvedUops, Uop, UopKind};
+pub use machine::MachineModel;
+pub use port::PortMask;
+
+/// Built-in Intel Skylake model (Fig. 2), compiled from the paper's
+/// tables and Agner Fog-style documentation values.
+pub fn skylake() -> MachineModel {
+    MachineModel::parse(include_str!("data/skl.mdb")).expect("embedded skl.mdb is valid")
+}
+
+/// Built-in AMD Zen model (Fig. 3).
+pub fn zen() -> MachineModel {
+    MachineModel::parse(include_str!("data/zen.mdb")).expect("embedded zen.mdb is valid")
+}
+
+/// Built-in Intel Haswell model — implements the paper's §IV-B
+/// future-work item: addressing-mode-aware store AGUs (port 7).
+pub fn haswell() -> MachineModel {
+    MachineModel::parse(include_str!("data/hsw.mdb")).expect("embedded hsw.mdb is valid")
+}
+
+/// Look up a built-in model by CLI name (`skl`, `zen`, `hsw`).
+pub fn by_name(name: &str) -> Option<MachineModel> {
+    match name.to_ascii_lowercase().as_str() {
+        "skl" | "skylake" => Some(skylake()),
+        "zen" | "znver1" => Some(zen()),
+        "hsw" | "haswell" => Some(haswell()),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builtin_models_parse() {
+        let skl = skylake();
+        assert_eq!(skl.name, "skl");
+        assert_eq!(skl.ports.len(), 9); // P0..P7 + 0DV
+        let zen = zen();
+        assert_eq!(zen.name, "zen");
+        assert_eq!(zen.ports.len(), 11); // FP0..3, ALU0..3, AGU0..1, DV
+        assert!(zen.avx256_split);
+        assert!(!skl.avx256_split);
+    }
+
+    #[test]
+    fn by_name_lookup() {
+        assert!(by_name("skl").is_some());
+        assert!(by_name("SKYLAKE").is_some());
+        assert!(by_name("zen").is_some());
+        assert!(by_name("hsw").is_some());
+        assert!(by_name("cascadelake").is_none());
+    }
+
+    #[test]
+    fn haswell_stores_are_addressing_mode_aware() {
+        use crate::asm::parser::parse_instruction;
+        let hsw = haswell();
+        // Simple address: AGU may use the dedicated port 7.
+        let simple = parse_instruction("vmovapd %ymm0, 32(%rdi)", 1).unwrap();
+        let r = hsw.resolve(&simple).unwrap();
+        let agu = r.entry.uops.iter().find(|u| u.kind == UopKind::StoreAgu).unwrap();
+        assert!(agu.ports.contains(hsw.port_index("P7").unwrap()));
+        assert_eq!(agu.ports.count(), 3); // P2|P3|P7
+        // Indexed address: port 7 cannot generate it.
+        let indexed = parse_instruction("vmovapd %ymm0, (%rdi,%rax,8)", 1).unwrap();
+        let r = hsw.resolve(&indexed).unwrap();
+        let agu = r.entry.uops.iter().find(|u| u.kind == UopKind::StoreAgu).unwrap();
+        assert!(!agu.ports.contains(hsw.port_index("P7").unwrap()));
+        assert_eq!(agu.ports.count(), 2); // P2|P3
+    }
+
+    #[test]
+    fn haswell_add_is_port1_bound() {
+        use crate::isa::InstructionForm;
+        let hsw = haswell();
+        let e = &hsw.entries[&InstructionForm::new("vaddpd", "xmm_xmm_xmm")];
+        assert!((e.implied_rtp() - 1.0).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,87 @@
+//! Port sets as bitmasks. Machine models have at most 16 ports (SKL uses
+//! 9 incl. the divider pseudo-port, Zen 11).
+
+use std::fmt;
+
+/// A set of ports a µ-op may be scheduled to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub struct PortMask(pub u16);
+
+impl PortMask {
+    pub const EMPTY: PortMask = PortMask(0);
+
+    pub fn single(port: usize) -> Self {
+        debug_assert!(port < 16);
+        PortMask(1 << port)
+    }
+
+    pub fn from_ports(ports: &[usize]) -> Self {
+        let mut m = 0u16;
+        for &p in ports {
+            debug_assert!(p < 16);
+            m |= 1 << p;
+        }
+        PortMask(m)
+    }
+
+    pub fn contains(self, port: usize) -> bool {
+        self.0 & (1 << port) != 0
+    }
+
+    pub fn count(self) -> u32 {
+        self.0.count_ones()
+    }
+
+    pub fn is_empty(self) -> bool {
+        self.0 == 0
+    }
+
+    pub fn union(self, other: PortMask) -> PortMask {
+        PortMask(self.0 | other.0)
+    }
+
+    pub fn intersects(self, other: PortMask) -> bool {
+        self.0 & other.0 != 0
+    }
+
+    /// Iterate over the port indices in the set, ascending.
+    pub fn iter(self) -> impl Iterator<Item = usize> {
+        (0..16).filter(move |&p| self.contains(p))
+    }
+}
+
+impl fmt::Display for PortMask {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let ports: Vec<String> = self.iter().map(|p| p.to_string()).collect();
+        write!(f, "{{{}}}", ports.join(","))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn basic_ops() {
+        let m = PortMask::from_ports(&[0, 1, 5, 6]);
+        assert_eq!(m.count(), 4);
+        assert!(m.contains(5));
+        assert!(!m.contains(2));
+        assert_eq!(m.iter().collect::<Vec<_>>(), vec![0, 1, 5, 6]);
+    }
+
+    #[test]
+    fn union_and_intersect() {
+        let a = PortMask::from_ports(&[2, 3]);
+        let b = PortMask::from_ports(&[3, 7]);
+        assert!(a.intersects(b));
+        assert_eq!(a.union(b).count(), 3);
+        assert!(!a.intersects(PortMask::single(4)));
+    }
+
+    #[test]
+    fn display() {
+        assert_eq!(PortMask::from_ports(&[2, 3]).to_string(), "{2,3}");
+        assert_eq!(PortMask::EMPTY.to_string(), "{}");
+    }
+}

@@ -1,0 +1,296 @@
+//! Experiment drivers regenerating the paper's Tables I, III and V.
+//!
+//! Each function returns structured rows; the CLI and the bench
+//! binaries render them. "Measured" values come from the simulator
+//! substrate at the paper's fixed 1.8 GHz (see DESIGN.md §2).
+
+use anyhow::Result;
+
+use crate::analyzer::analyze;
+use crate::coordinator::Coordinator;
+use crate::mdb;
+use crate::sim::{simulate, SimConfig};
+use crate::workloads::{self, Workload};
+
+/// Row of Table I: triad predictions per compile variant.
+#[derive(Debug, Clone)]
+pub struct Table1Row {
+    pub compiled_for: &'static str,
+    pub flag: &'static str,
+    pub unroll: usize,
+    pub osaca_zen: f32,
+    pub osaca_skl: f32,
+    /// IACA-like baseline, Skylake only (IACA does not support Zen).
+    pub iaca_skl: f32,
+}
+
+/// Regenerate Table I (OSACA/IACA throughput analyses of the triad).
+pub fn table1(coord: &Coordinator) -> Result<Vec<Table1Row>> {
+    let skl = mdb::skylake();
+    let zen = mdb::zen();
+    let mut rows = Vec::new();
+    for target in ["skl", "zen"] {
+        for flag in ["-O1", "-O2", "-O3"] {
+            let w = workloads::find("triad", target, flag).expect("triad fixture");
+            let k = w.kernel();
+            let osaca_zen = analyze(&k, &zen)?.cy_per_asm_iter;
+            let osaca_skl = analyze(&k, &skl)?.cy_per_asm_iter;
+            let iaca_skl = coord.analyze_kernel(&k, &skl)?.baseline.cy_per_asm_iter;
+            rows.push(Table1Row {
+                compiled_for: target,
+                flag: w.flag,
+                unroll: w.unroll,
+                osaca_zen,
+                osaca_skl,
+                iaca_skl,
+            });
+        }
+    }
+    Ok(rows)
+}
+
+/// Row of Table III: measured triad performance vs predictions.
+#[derive(Debug, Clone)]
+pub struct Table3Row {
+    pub executed_on: &'static str,
+    pub compiled_for: &'static str,
+    pub flag: &'static str,
+    pub unroll: usize,
+    pub mflops: f64,
+    pub mits: f64,
+    pub measured_cy_it: f64,
+    pub osaca_cy_it: f32,
+    /// `None` on Zen (IACA is Intel-only).
+    pub iaca_cy_it: Option<f32>,
+}
+
+/// Regenerate Table III: run every triad variant on both simulated
+/// machines and compare with OSACA / baseline predictions.
+pub fn table3(coord: &Coordinator, cfg: SimConfig) -> Result<Vec<Table3Row>> {
+    let mut rows = Vec::new();
+    for exec_arch in ["zen", "skl"] {
+        let machine = mdb::by_name(exec_arch).unwrap();
+        for target in ["zen", "skl"] {
+            for flag in ["-O1", "-O2", "-O3"] {
+                let w: &Workload = workloads::find("triad", target, flag).expect("fixture");
+                let k = w.kernel();
+                let m = simulate(&k, &machine, cfg)?;
+                let cy_it = m.cy_per_source_it(w.unroll);
+                let mits = machine.frequency_ghz * 1e3 / cy_it; // Mit/s
+                let mflops = mits * w.flops_per_it as f64;
+                let osaca = analyze(&k, &machine)?.cy_per_asm_iter / w.unroll as f32;
+                let iaca = if exec_arch == "skl" {
+                    Some(
+                        coord.analyze_kernel(&k, &machine)?.baseline.cy_per_asm_iter
+                            / w.unroll as f32,
+                    )
+                } else {
+                    None
+                };
+                rows.push(Table3Row {
+                    executed_on: machine_label(exec_arch),
+                    compiled_for: machine_label(target),
+                    flag: w.flag,
+                    unroll: w.unroll,
+                    mflops,
+                    mits,
+                    measured_cy_it: cy_it,
+                    osaca_cy_it: osaca,
+                    iaca_cy_it: iaca,
+                });
+            }
+        }
+    }
+    Ok(rows)
+}
+
+/// Row of Table V: π benchmark predictions and measurements.
+#[derive(Debug, Clone)]
+pub struct Table5Row {
+    pub arch: &'static str,
+    pub flag: &'static str,
+    pub iaca_cy_it: Option<f32>,
+    pub osaca_cy_it: f32,
+    pub measured_cy_it: f64,
+    /// Issue-stall fraction in the measured window (the §III-B counter
+    /// discussion: -O1 stalls ~17x more than -O2 on SKL).
+    pub stall_fraction: f64,
+}
+
+/// Regenerate Table V (π benchmark; analyze and run only on the arch
+/// compiled for, as in the paper).
+pub fn table5(coord: &Coordinator, cfg: SimConfig) -> Result<Vec<Table5Row>> {
+    let mut rows = Vec::new();
+    for arch in ["skl", "zen"] {
+        let machine = mdb::by_name(arch).unwrap();
+        for flag in ["-O1", "-O2", "-O3"] {
+            let w = workloads::find("pi", arch, flag).expect("pi fixture");
+            let k = w.kernel();
+            let m = simulate(&k, &machine, cfg)?;
+            let osaca = analyze(&k, &machine)?.cy_per_asm_iter / w.unroll as f32;
+            let iaca = if arch == "skl" {
+                Some(coord.analyze_kernel(&k, &machine)?.baseline.cy_per_asm_iter / w.unroll as f32)
+            } else {
+                None
+            };
+            rows.push(Table5Row {
+                arch: machine_label(arch),
+                flag: w.flag,
+                iaca_cy_it: iaca,
+                osaca_cy_it: osaca,
+                measured_cy_it: m.cy_per_source_it(w.unroll),
+                stall_fraction: m.counters.issue_stall_cycles as f64 / m.window_cycles as f64,
+            });
+        }
+    }
+    Ok(rows)
+}
+
+fn machine_label(arch: &str) -> &'static str {
+    match arch {
+        "skl" => "Skylake",
+        "zen" => "Zen",
+        _ => "?",
+    }
+}
+
+/// Format helpers shared by CLI and benches.
+pub fn render_table1(rows: &[Table1Row]) -> Vec<Vec<String>> {
+    rows.iter()
+        .map(|r| {
+            vec![
+                machine_label(r.compiled_for).to_string(),
+                r.flag.to_string(),
+                format!("{}", r.unroll),
+                format!("{:.2}", r.osaca_zen),
+                format!("{:.2}", r.osaca_skl),
+                format!("{:.2}", r.iaca_skl),
+            ]
+        })
+        .collect()
+}
+
+pub fn render_table3(rows: &[Table3Row]) -> Vec<Vec<String>> {
+    rows.iter()
+        .map(|r| {
+            vec![
+                r.executed_on.to_string(),
+                r.compiled_for.to_string(),
+                r.flag.to_string(),
+                format!("{}x", r.unroll),
+                format!("{:.0}", r.mflops),
+                format!("{:.0}", r.mits),
+                format!("{:.2}", r.measured_cy_it),
+                format!("{:.2}", r.osaca_cy_it),
+                r.iaca_cy_it.map(|v| format!("{v:.2}")).unwrap_or_else(|| "-".into()),
+            ]
+        })
+        .collect()
+}
+
+pub fn render_table5(rows: &[Table5Row]) -> Vec<Vec<String>> {
+    rows.iter()
+        .map(|r| {
+            vec![
+                r.arch.to_string(),
+                r.flag.to_string(),
+                r.iaca_cy_it.map(|v| format!("{v:.2}")).unwrap_or_else(|| "-".into()),
+                format!("{:.2}", r.osaca_cy_it),
+                format!("{:.2}", r.measured_cy_it),
+                format!("{:.1}%", r.stall_fraction * 100.0),
+            ]
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick_cfg() -> SimConfig {
+        SimConfig { iterations: 300, warmup: 80 }
+    }
+
+    #[test]
+    fn table1_shape_matches_paper() {
+        let coord = Coordinator::cpu_only();
+        let rows = table1(&coord).unwrap();
+        assert_eq!(rows.len(), 6);
+        // All OSACA SKL predictions are 2.00 (paper Table I column 5).
+        for r in &rows {
+            assert!((r.osaca_skl - 2.0).abs() < 0.01, "{r:?}");
+        }
+        // SKL -O3 (ymm) analyzed for Zen costs 4.00; all other Zen
+        // entries are 2.00.
+        for r in &rows {
+            let want = if r.flag == "-O3" && r.compiled_for == "skl" { 4.0 } else { 2.0 };
+            assert!((r.osaca_zen - want).abs() < 0.01, "{r:?}");
+        }
+    }
+
+    #[test]
+    fn table3_shape_matches_paper() {
+        let coord = Coordinator::cpu_only();
+        let rows = table3(&coord, quick_cfg()).unwrap();
+        assert_eq!(rows.len(), 12);
+        for r in &rows {
+            // Measured cy/it within 15% of the OSACA prediction except
+            // where the paper also deviates (all triad rows agree).
+            let ratio = r.measured_cy_it / r.osaca_cy_it as f64;
+            assert!(
+                (0.85..1.35).contains(&ratio),
+                "{} {} {}: measured {:.2} vs osaca {:.2}",
+                r.executed_on,
+                r.compiled_for,
+                r.flag,
+                r.measured_cy_it,
+                r.osaca_cy_it
+            );
+        }
+        // The paper's headline cross-run effect: SKL-compiled -O3 code
+        // runs at ~1 cy/it on Zen but ~0.5 cy/it on SKL.
+        let zen_run = rows
+            .iter()
+            .find(|r| r.executed_on == "Zen" && r.compiled_for == "Skylake" && r.flag == "-O3")
+            .unwrap();
+        let skl_run = rows
+            .iter()
+            .find(|r| r.executed_on == "Skylake" && r.compiled_for == "Skylake" && r.flag == "-O3")
+            .unwrap();
+        assert!(zen_run.measured_cy_it > 1.7 * skl_run.measured_cy_it, "{zen_run:?} {skl_run:?}");
+    }
+
+    #[test]
+    fn table5_shape_matches_paper() {
+        let coord = Coordinator::cpu_only();
+        let rows = table5(&coord, quick_cfg()).unwrap();
+        assert_eq!(rows.len(), 6);
+        let get = |arch: &str, flag: &str| {
+            rows.iter().find(|r| r.arch == arch && r.flag == flag).unwrap()
+        };
+        // -O1: measurement blows past the prediction on both archs
+        // (store-forwarding chain; paper: 9.02 vs 4.75 and 11.48 vs 4).
+        let skl_o1 = get("Skylake", "-O1");
+        assert!(skl_o1.measured_cy_it > 1.7 * skl_o1.osaca_cy_it as f64, "{skl_o1:?}");
+        assert!((skl_o1.measured_cy_it - 9.0).abs() < 0.8, "{skl_o1:?}");
+        let zen_o1 = get("Zen", "-O1");
+        assert!((zen_o1.measured_cy_it - 11.0).abs() < 1.0, "{zen_o1:?}");
+        // -O2 SKL: OSACA over-predicts (4.25 vs 4.00 measured).
+        let skl_o2 = get("Skylake", "-O2");
+        assert!((skl_o2.osaca_cy_it - 4.25).abs() < 0.01, "{skl_o2:?}");
+        assert!((skl_o2.measured_cy_it - 4.0).abs() < 0.2, "{skl_o2:?}");
+        assert!((skl_o2.iaca_cy_it.unwrap() - 4.0).abs() < 0.1, "{skl_o2:?}");
+        // -O2 Zen: ~20% slower than the 4.00 prediction (divider).
+        let zen_o2 = get("Zen", "-O2");
+        assert!((zen_o2.osaca_cy_it - 4.0).abs() < 0.01, "{zen_o2:?}");
+        assert!(zen_o2.measured_cy_it > 4.5 && zen_o2.measured_cy_it < 5.5, "{zen_o2:?}");
+        // -O3: divider-bound 2.0, measured slightly above; Zen worse.
+        let skl_o3 = get("Skylake", "-O3");
+        assert!((skl_o3.osaca_cy_it - 2.0).abs() < 0.01, "{skl_o3:?}");
+        assert!((skl_o3.measured_cy_it - 2.0).abs() < 0.15, "{skl_o3:?}");
+        let zen_o3 = get("Zen", "-O3");
+        assert!(zen_o3.measured_cy_it > 2.2 && zen_o3.measured_cy_it < 2.8, "{zen_o3:?}");
+        // §III-B stall counters: -O1 stalls far more than -O2 on SKL.
+        assert!(skl_o1.stall_fraction > 4.0 * skl_o2.stall_fraction.max(0.01), "{rows:?}");
+    }
+}

@@ -1,0 +1,166 @@
+//! Report rendering: the paper's tables and port-model figures.
+
+pub mod experiments;
+
+use crate::analyzer::Analysis;
+use crate::mdb::{MachineModel, Provenance};
+
+/// Render a per-line occupancy table in the layout of paper Tables
+/// II/IV/VI/VII: one column per port, hidden (hideable-load) occupancy
+/// in parentheses, totals in the footer, bottleneck marked.
+pub fn render_occupancy(analysis: &Analysis, machine: &MachineModel) -> String {
+    let np = machine.n_ports();
+    let mut out = String::new();
+    let header: Vec<String> = machine.ports.iter().map(|p| format!("{p:>6}")).collect();
+    out.push_str(&format!("{} | Assembly Instructions\n", header.join(" ")));
+    out.push_str(&format!("{}\n", "-".repeat(7 * np + 24)));
+    for line in &analysis.lines {
+        let mut cells = String::new();
+        for p in 0..np {
+            let occ = line.occupancy[p];
+            let hid = line.hidden[p];
+            let cell = if hid > 0.0005 {
+                format!("({hid:.2})")
+            } else if occ > 0.0005 {
+                format!("{occ:.2}")
+            } else {
+                String::new()
+            };
+            cells.push_str(&format!("{cell:>6} "));
+        }
+        let prov = match line.provenance {
+            Provenance::Direct => "",
+            Provenance::SynthesizedMem => " [mem-synth]",
+            Provenance::SynthesizedSplit => " [256-split]",
+            Provenance::SynthesizedSuffix => "",
+        };
+        out.push_str(&format!("{cells}| {}{prov}\n", line.text));
+    }
+    out.push_str(&format!("{}\n", "-".repeat(7 * np + 24)));
+    let mut totals = String::new();
+    for p in 0..np {
+        totals.push_str(&format!("{:>6.2} ", analysis.totals[p]));
+    }
+    out.push_str(&format!("{totals}|\n"));
+    out.push_str(&format!(
+        "Throughput bottleneck: port {} ({}) -> {:.2} cy / assembly iteration\n",
+        analysis.bottleneck_port, machine.ports[analysis.bottleneck_port], analysis.cy_per_asm_iter
+    ));
+    out
+}
+
+/// ASCII port-model diagram (Figs. 1-3): scheduler feeding ports, each
+/// port listing the µ-op classes that the database maps to it.
+pub fn render_port_diagram(machine: &MachineModel) -> String {
+    let np = machine.n_ports();
+    // Collect representative functional units per port from the DB.
+    let mut units: Vec<Vec<&'static str>> = vec![Vec::new(); np];
+    let tag_of = |m: &str| -> Option<&'static str> {
+        Some(match () {
+            _ if m.starts_with("vdiv") || m.starts_with("vsqrt") => "DIV",
+            _ if m.starts_with("vfmadd") || m.starts_with("vfnmadd") => "FMA",
+            _ if m.starts_with("vmul") => "FP MUL",
+            _ if m.starts_with("vadd") || m.starts_with("vsub") => "FP ADD",
+            _ if m.starts_with("vcvt") => "CVT",
+            _ if m.starts_with("vextract") || m.starts_with("vshuf") || m.starts_with("vunpck") => {
+                "SHUF"
+            }
+            _ if m.starts_with("vpadd") || m.starts_with("vpsub") => "VEC INT",
+            _ if m == "add" || m == "sub" || m == "inc" || m == "cmp" => "ALU",
+            _ if m == "shl" || m == "shr" || m == "sar" => "SHIFT",
+            _ if m == "imul" => "INT MUL",
+            _ if m == "lea" => "LEA",
+            _ => return None,
+        })
+    };
+    for e in machine.entries.values() {
+        if let Some(tag) = tag_of(&e.form.mnemonic) {
+            for u in &e.uops {
+                if u.kind == crate::mdb::UopKind::Compute || u.kind == crate::mdb::UopKind::Divider
+                {
+                    for p in u.ports.iter() {
+                        if !units[p].contains(&tag) {
+                            units[p].push(tag);
+                        }
+                    }
+                }
+            }
+        }
+    }
+    for (p, name) in machine.ports.iter().enumerate() {
+        let n = name.to_ascii_uppercase();
+        if machine.load_ports.contains(p) {
+            units[p].insert(0, "LOAD/AGU");
+        }
+        if machine.store_data_ports.contains(p) && !n.contains("AGU") {
+            units[p].insert(0, "STORE");
+        }
+        if machine.store_agu_ports.contains(p) && !machine.load_ports.contains(p) {
+            units[p].insert(0, "AGU");
+        }
+    }
+
+    let mut out = String::new();
+    out.push_str(&format!(
+        "{} ({}) @ {:.1} GHz — out-of-order port model\n",
+        machine.arch_name, machine.name, machine.frequency_ghz
+    ));
+    out.push_str(&format!(
+        "ROB {} µops | scheduler {} | rename {}/cy | retire {}/cy\n",
+        machine.params.rob_size,
+        machine.params.scheduler_size,
+        machine.params.rename_width,
+        machine.params.retire_width
+    ));
+    out.push_str("                 ┌───────────────────────────┐\n");
+    out.push_str("                 │   out-of-order scheduler  │\n");
+    out.push_str("                 └─┬───┬───┬───┬───┬───┬───┬─┘\n");
+    for (p, name) in machine.ports.iter().enumerate() {
+        let mut tags = units[p].clone();
+        tags.sort();
+        tags.dedup();
+        out.push_str(&format!("  port {name:<5} -> {}\n", tags.join(", ")));
+    }
+    if machine.avx256_split {
+        out.push_str("  (256-bit AVX executes as two 128-bit halves)\n");
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analyzer::analyze;
+    use crate::mdb::{skylake, zen};
+    use crate::workloads;
+
+    #[test]
+    fn occupancy_table_contains_footer_and_bottleneck() {
+        let w = workloads::find("triad", "skl", "-O3").unwrap();
+        let m = skylake();
+        let a = analyze(&w.kernel(), &m).unwrap();
+        let s = render_occupancy(&a, &m);
+        assert!(s.contains("Throughput bottleneck"));
+        assert!(s.contains("2.00 cy"));
+        assert!(s.contains("vfmadd132pd"));
+    }
+
+    #[test]
+    fn zen_table_shows_hidden_loads_in_parens() {
+        let w = workloads::find("triad", "zen", "-O3").unwrap();
+        let m = zen();
+        let a = analyze(&w.kernel(), &m).unwrap();
+        let s = render_occupancy(&a, &m);
+        assert!(s.contains("(0.50)"), "{s}");
+    }
+
+    #[test]
+    fn port_diagram_mentions_units() {
+        let d = render_port_diagram(&skylake());
+        assert!(d.contains("FMA"));
+        assert!(d.contains("DIV"));
+        assert!(d.contains("LOAD"));
+        let dz = render_port_diagram(&zen());
+        assert!(dz.contains("256-bit"));
+    }
+}

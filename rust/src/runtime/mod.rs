@@ -1,0 +1,409 @@
+//! PJRT runtime: load and execute the AOT-compiled L2/L1 artifact.
+//!
+//! `artifacts/port_solver.hlo.txt` is produced once at build time by
+//! `python/compile/aot.py` (jax + pallas, lowered to HLO *text* — see
+//! that file for why text, not a serialized proto). This module loads
+//! it, compiles it on the PJRT CPU client, and exposes a typed batch
+//! interface. Python never runs on this path.
+
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+/// Fixed artifact shapes — must match python/compile/model.py.
+pub const BATCH: usize = 8;
+pub const MAX_UOPS: usize = 64;
+pub const MAX_PORTS: usize = 12;
+
+/// A kernel encoded for the solver: admissible-port mask and cycle cost
+/// per µ-op row (padded with zeros to MAX_UOPS).
+#[derive(Debug, Clone, Default)]
+pub struct EncodedKernel {
+    /// Row-major [MAX_UOPS][MAX_PORTS].
+    pub mask: Vec<f32>,
+    /// [MAX_UOPS].
+    pub cost: Vec<f32>,
+}
+
+impl EncodedKernel {
+    pub fn empty() -> Self {
+        EncodedKernel {
+            mask: vec![0.0; MAX_UOPS * MAX_PORTS],
+            cost: vec![0.0; MAX_UOPS],
+        }
+    }
+
+    /// Add one µ-op row. Errors when the kernel exceeds MAX_UOPS.
+    pub fn push_uop(&mut self, row: usize, ports: &[usize], cost: f32) -> Result<()> {
+        if row >= MAX_UOPS {
+            bail!("kernel exceeds {MAX_UOPS} µ-ops");
+        }
+        for &p in ports {
+            if p >= MAX_PORTS {
+                bail!("port index {p} exceeds artifact width {MAX_PORTS}");
+            }
+            self.mask[row * MAX_PORTS + p] = 1.0;
+        }
+        self.cost[row] = cost;
+        Ok(())
+    }
+}
+
+/// Solver outputs for one kernel.
+#[derive(Debug, Clone)]
+pub struct SolveOut {
+    /// Per-port cumulative pressure, uniform (OSACA) scheduling.
+    pub press_uniform: Vec<f32>,
+    /// Per-port pressure after iterative balancing (IACA-like).
+    pub press_balanced: Vec<f32>,
+    /// Bottleneck cycles/iteration under uniform scheduling.
+    pub tp_uniform: f32,
+    /// Bottleneck cycles/iteration under balanced scheduling.
+    pub tp_balanced: f32,
+    /// Work lower bound (sanity channel).
+    pub crit_lower: f32,
+}
+
+/// The loaded artifact: a compiled PJRT executable.
+pub struct PortSolver {
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl PortSolver {
+    /// Default artifact location relative to the repo root.
+    pub const DEFAULT_PATH: &'static str = "artifacts/port_solver.hlo.txt";
+
+    /// Load + compile the artifact on the PJRT CPU client.
+    pub fn load(path: &Path) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().map_err(wrap_xla)?;
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .map_err(wrap_xla)
+            .with_context(|| format!("loading HLO text from {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp).map_err(wrap_xla)?;
+        Ok(PortSolver { exe })
+    }
+
+    /// Load from the default path, searching upward from the current
+    /// directory (tests and benches run from different cwds).
+    pub fn load_default() -> Result<Self> {
+        let mut dir = std::env::current_dir()?;
+        loop {
+            let cand = dir.join(Self::DEFAULT_PATH);
+            if cand.exists() {
+                return Self::load(&cand);
+            }
+            if !dir.pop() {
+                bail!(
+                    "artifact {} not found (run `make artifacts` first)",
+                    Self::DEFAULT_PATH
+                );
+            }
+        }
+    }
+
+    /// Solve a batch of up to BATCH kernels in one artifact execution.
+    pub fn solve(&self, kernels: &[EncodedKernel]) -> Result<Vec<SolveOut>> {
+        if kernels.len() > BATCH {
+            bail!("batch of {} exceeds artifact batch size {BATCH}", kernels.len());
+        }
+        let mut mask = Vec::with_capacity(BATCH * MAX_UOPS * MAX_PORTS);
+        let mut cost = Vec::with_capacity(BATCH * MAX_UOPS);
+        for k in kernels {
+            debug_assert_eq!(k.mask.len(), MAX_UOPS * MAX_PORTS);
+            debug_assert_eq!(k.cost.len(), MAX_UOPS);
+            mask.extend_from_slice(&k.mask);
+            cost.extend_from_slice(&k.cost);
+        }
+        // Pad the batch.
+        mask.resize(BATCH * MAX_UOPS * MAX_PORTS, 0.0);
+        cost.resize(BATCH * MAX_UOPS, 0.0);
+
+        let mask_lit = xla::Literal::vec1(&mask)
+            .reshape(&[BATCH as i64, MAX_UOPS as i64, MAX_PORTS as i64])
+            .map_err(wrap_xla)?;
+        let cost_lit = xla::Literal::vec1(&cost)
+            .reshape(&[BATCH as i64, MAX_UOPS as i64])
+            .map_err(wrap_xla)?;
+        let result = self.exe.execute::<xla::Literal>(&[mask_lit, cost_lit]).map_err(wrap_xla)?;
+        let tuple = result[0][0].to_literal_sync().map_err(wrap_xla)?;
+        let parts = tuple.to_tuple().map_err(wrap_xla)?;
+        if parts.len() != 5 {
+            bail!("artifact returned {}-tuple, expected 5", parts.len());
+        }
+        let press_u = parts[0].to_vec::<f32>().map_err(wrap_xla)?;
+        let press_b = parts[1].to_vec::<f32>().map_err(wrap_xla)?;
+        let tp_u = parts[2].to_vec::<f32>().map_err(wrap_xla)?;
+        let tp_b = parts[3].to_vec::<f32>().map_err(wrap_xla)?;
+        let lower = parts[4].to_vec::<f32>().map_err(wrap_xla)?;
+
+        Ok((0..kernels.len())
+            .map(|i| SolveOut {
+                press_uniform: press_u[i * MAX_PORTS..(i + 1) * MAX_PORTS].to_vec(),
+                press_balanced: press_b[i * MAX_PORTS..(i + 1) * MAX_PORTS].to_vec(),
+                tp_uniform: tp_u[i],
+                tp_balanced: tp_b[i],
+                crit_lower: lower[i],
+            })
+            .collect())
+    }
+}
+
+fn wrap_xla(e: xla::Error) -> anyhow::Error {
+    anyhow!("xla: {e}")
+}
+
+/// "No edge" sentinel in the adjacency encoding (max-plus -infinity).
+/// Keep in sync with python/compile/kernels/critpath.py.
+pub const NEG: f32 = -1.0e9;
+
+/// A dependency graph encoded for the critical-path artifact.
+#[derive(Debug, Clone)]
+pub struct EncodedGraph {
+    /// Row-major [MAX_UOPS][MAX_UOPS]; adj[u][v] = lat_v on edge, NEG
+    /// otherwise.
+    pub adj: Vec<f32>,
+    /// [MAX_UOPS] per-µ-op latency.
+    pub lat: Vec<f32>,
+    /// Row-major [MAX_UOPS][MAX_UOPS]; 1.0 on back-edges (i -> w of the
+    /// previous iteration).
+    pub carried: Vec<f32>,
+}
+
+impl EncodedGraph {
+    pub fn empty() -> Self {
+        EncodedGraph {
+            adj: vec![NEG; MAX_UOPS * MAX_UOPS],
+            lat: vec![0.0; MAX_UOPS],
+            carried: vec![0.0; MAX_UOPS * MAX_UOPS],
+        }
+    }
+
+    pub fn set_latency(&mut self, u: usize, lat: f32) -> Result<()> {
+        if u >= MAX_UOPS {
+            bail!("µ-op index {u} exceeds {MAX_UOPS}");
+        }
+        self.lat[u] = lat;
+        Ok(())
+    }
+
+    /// Edge: µ-op `v` depends on µ-op `u` (program order u < v).
+    pub fn add_edge(&mut self, u: usize, v: usize) -> Result<()> {
+        if u >= MAX_UOPS || v >= MAX_UOPS {
+            bail!("edge ({u},{v}) exceeds {MAX_UOPS}");
+        }
+        self.adj[u * MAX_UOPS + v] = self.lat[v];
+        Ok(())
+    }
+
+    /// Back-edge: µ-op `i` of the next iteration depends on `w`.
+    pub fn add_carried(&mut self, i: usize, w: usize) -> Result<()> {
+        if i >= MAX_UOPS || w >= MAX_UOPS {
+            bail!("carried edge ({i},{w}) exceeds {MAX_UOPS}");
+        }
+        self.carried[i * MAX_UOPS + w] = 1.0;
+        Ok(())
+    }
+}
+
+/// Critical-path results for one graph.
+#[derive(Debug, Clone, Copy)]
+pub struct CritOut {
+    /// Longest latency chain through one iteration.
+    pub intra: f32,
+    /// Loop-carried cycle bound, cycles per iteration.
+    pub carried_bound: f32,
+}
+
+/// The critical-path artifact (see python/compile/kernels/critpath.py).
+pub struct CritSolver {
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl CritSolver {
+    pub const DEFAULT_PATH: &'static str = "artifacts/critpath.hlo.txt";
+
+    pub fn load(path: &Path) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().map_err(wrap_xla)?;
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .map_err(wrap_xla)
+            .with_context(|| format!("loading HLO text from {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp).map_err(wrap_xla)?;
+        Ok(CritSolver { exe })
+    }
+
+    pub fn load_default() -> Result<Self> {
+        let mut dir = std::env::current_dir()?;
+        loop {
+            let cand = dir.join(Self::DEFAULT_PATH);
+            if cand.exists() {
+                return Self::load(&cand);
+            }
+            if !dir.pop() {
+                bail!("artifact {} not found (run `make artifacts`)", Self::DEFAULT_PATH);
+            }
+        }
+    }
+
+    /// Solve a batch of up to BATCH graphs in one execution.
+    pub fn solve(&self, graphs: &[EncodedGraph]) -> Result<Vec<CritOut>> {
+        if graphs.len() > BATCH {
+            bail!("batch of {} exceeds artifact batch size {BATCH}", graphs.len());
+        }
+        let mut adj = Vec::with_capacity(BATCH * MAX_UOPS * MAX_UOPS);
+        let mut lat = Vec::with_capacity(BATCH * MAX_UOPS);
+        let mut carried = Vec::with_capacity(BATCH * MAX_UOPS * MAX_UOPS);
+        for g in graphs {
+            adj.extend_from_slice(&g.adj);
+            lat.extend_from_slice(&g.lat);
+            carried.extend_from_slice(&g.carried);
+        }
+        adj.resize(BATCH * MAX_UOPS * MAX_UOPS, NEG);
+        lat.resize(BATCH * MAX_UOPS, 0.0);
+        carried.resize(BATCH * MAX_UOPS * MAX_UOPS, 0.0);
+        let dims3 = [BATCH as i64, MAX_UOPS as i64, MAX_UOPS as i64];
+        let adj_lit = xla::Literal::vec1(&adj).reshape(&dims3).map_err(wrap_xla)?;
+        let lat_lit = xla::Literal::vec1(&lat)
+            .reshape(&[BATCH as i64, MAX_UOPS as i64])
+            .map_err(wrap_xla)?;
+        let car_lit = xla::Literal::vec1(&carried).reshape(&dims3).map_err(wrap_xla)?;
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&[adj_lit, lat_lit, car_lit])
+            .map_err(wrap_xla)?;
+        let tuple = result[0][0].to_literal_sync().map_err(wrap_xla)?;
+        let parts = tuple.to_tuple().map_err(wrap_xla)?;
+        if parts.len() != 2 {
+            bail!("critpath artifact returned {}-tuple, expected 2", parts.len());
+        }
+        let intra = parts[0].to_vec::<f32>().map_err(wrap_xla)?;
+        let bound = parts[1].to_vec::<f32>().map_err(wrap_xla)?;
+        Ok((0..graphs.len())
+            .map(|i| CritOut { intra: intra[i], carried_bound: bound[i] })
+            .collect())
+    }
+}
+
+/// Pure-rust reference of the solver math (mirrors
+/// python/compile/kernels/ref.py). Used as the no-artifact fallback and
+/// to cross-check the PJRT path in integration tests.
+pub fn solve_cpu(kernels: &[EncodedKernel], iters: usize) -> Vec<SolveOut> {
+    const ETA: f32 = 0.35; // keep in sync with python DEFAULT/ETA
+    kernels
+        .iter()
+        .map(|k| {
+            let u = MAX_UOPS;
+            let p = MAX_PORTS;
+            let nports: Vec<f32> =
+                (0..u).map(|r| k.mask[r * p..(r + 1) * p].iter().sum()).collect();
+            // Uniform split.
+            let mut press_u = vec![0f32; p];
+            for r in 0..u {
+                if nports[r] > 0.0 {
+                    let share = k.cost[r] / nports[r];
+                    for j in 0..p {
+                        press_u[j] += k.mask[r * p + j] * share;
+                    }
+                }
+            }
+            // Balanced (multiplicative weights).
+            let mut w = vec![0f32; u * p];
+            for r in 0..u {
+                if nports[r] > 0.0 {
+                    for j in 0..p {
+                        w[r * p + j] = k.mask[r * p + j] / nports[r];
+                    }
+                }
+            }
+            let mut press_b = vec![0f32; p];
+            for _ in 0..iters {
+                press_b.iter_mut().for_each(|x| *x = 0.0);
+                for r in 0..u {
+                    for j in 0..p {
+                        press_b[j] += w[r * p + j] * k.cost[r];
+                    }
+                }
+                for r in 0..u {
+                    if nports[r] == 0.0 {
+                        continue;
+                    }
+                    let mut norm = 0f32;
+                    for j in 0..p {
+                        let upd = w[r * p + j] * (-ETA * press_b[j]).exp() * k.mask[r * p + j];
+                        w[r * p + j] = upd;
+                        norm += upd;
+                    }
+                    let norm = norm.max(1e-30);
+                    for j in 0..p {
+                        w[r * p + j] /= norm;
+                    }
+                }
+            }
+            press_b.iter_mut().for_each(|x| *x = 0.0);
+            for r in 0..u {
+                for j in 0..p {
+                    press_b[j] += w[r * p + j] * k.cost[r];
+                }
+            }
+            let tp_u = press_u.iter().cloned().fold(0.0, f32::max);
+            let tp_b = press_b.iter().cloned().fold(0.0, f32::max);
+            let used: f32 = (0..p)
+                .map(|j| (0..u).map(|r| k.mask[r * p + j]).fold(0.0, f32::max))
+                .sum();
+            let total: f32 = k.cost.iter().sum();
+            SolveOut {
+                press_uniform: press_u,
+                press_balanced: press_b,
+                tp_uniform: tp_u,
+                tp_balanced: tp_b,
+                crit_lower: total / used.max(1.0),
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn encoded_kernel_bounds() {
+        let mut k = EncodedKernel::empty();
+        assert!(k.push_uop(0, &[0, 1], 1.0).is_ok());
+        assert!(k.push_uop(MAX_UOPS, &[0], 1.0).is_err());
+        assert!(k.push_uop(1, &[MAX_PORTS], 1.0).is_err());
+    }
+
+    #[test]
+    fn cpu_solver_uniform_two_ports() {
+        let mut k = EncodedKernel::empty();
+        k.push_uop(0, &[0, 1], 1.0).unwrap();
+        let out = solve_cpu(&[k], 32);
+        assert!((out[0].press_uniform[0] - 0.5).abs() < 1e-6);
+        assert!((out[0].tp_uniform - 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn cpu_solver_balanced_resolves_asymmetry() {
+        // add {0,1} + mul {0}: uniform 1.5, balanced -> ~1.0.
+        let mut k = EncodedKernel::empty();
+        k.push_uop(0, &[0, 1], 1.0).unwrap();
+        k.push_uop(1, &[0], 1.0).unwrap();
+        let out = solve_cpu(&[k], 32);
+        assert!((out[0].tp_uniform - 1.5).abs() < 1e-6);
+        assert!(out[0].tp_balanced < 1.1, "{}", out[0].tp_balanced);
+    }
+
+    #[test]
+    fn cpu_solver_mass_conserved() {
+        let mut k = EncodedKernel::empty();
+        k.push_uop(0, &[0, 1, 2], 1.5).unwrap();
+        k.push_uop(1, &[3], 2.0).unwrap();
+        let out = solve_cpu(&[k], 32);
+        let total_u: f32 = out[0].press_uniform.iter().sum();
+        let total_b: f32 = out[0].press_balanced.iter().sum();
+        assert!((total_u - 3.5).abs() < 1e-5);
+        assert!((total_b - 3.5).abs() < 1e-4);
+    }
+}

@@ -1,0 +1,514 @@
+//! The cycle-level out-of-order core loop.
+//!
+//! Replays the decoded iteration template N times through a
+//! rename/dispatch → schedule → execute → retire pipeline and reports
+//! steady-state cycles per assembly iteration plus hardware-style event
+//! counters.
+
+use std::collections::{HashMap, VecDeque};
+
+use anyhow::Result;
+
+use crate::asm::Kernel;
+use crate::isa::register::RegisterFile;
+use crate::mdb::{MachineModel, UopKind};
+
+use super::decode::{decode_kernel, DecodedIter, DepSource, DepVersion, MemIdent};
+use super::trace::Counters;
+
+/// Simulation run parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct SimConfig {
+    /// Measured iterations (after warm-up).
+    pub iterations: usize,
+    /// Warm-up iterations excluded from the measurement.
+    pub warmup: usize,
+}
+
+impl Default for SimConfig {
+    fn default() -> Self {
+        SimConfig { iterations: 1000, warmup: 200 }
+    }
+}
+
+/// Result of a simulation run — the "hardware measurement".
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    /// Steady-state cycles per assembly-loop iteration.
+    pub cycles_per_iteration: f64,
+    pub iterations: usize,
+    pub total_cycles: u64,
+    pub counters: Counters,
+    /// Busy cycles per port over the measured window.
+    pub port_busy: Vec<u64>,
+    /// Cycles in the measured window.
+    pub window_cycles: u64,
+}
+
+impl Measurement {
+    /// Performance in (source-code) iterations per second, given the
+    /// machine frequency and the unroll factor of the assembly loop.
+    pub fn iterations_per_sec(&self, freq_ghz: f64, unroll: usize) -> f64 {
+        freq_ghz * 1e9 / self.cycles_per_iteration * unroll as f64
+    }
+
+    /// Cycles per *source* iteration for a given unroll factor.
+    pub fn cy_per_source_it(&self, unroll: usize) -> f64 {
+        self.cycles_per_iteration / unroll as f64
+    }
+}
+
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+struct MemKey {
+    base: Option<(RegisterFile, u64)>,
+    index: Option<(RegisterFile, u64)>,
+    scale: u8,
+    displacement: i64,
+    symbol: Option<String>,
+}
+
+fn instantiate(ident: &MemIdent, iter: u64, uops_per_iter: u64) -> MemKey {
+    let ver = |v: DepVersion| -> u64 {
+        match v {
+            DepVersion::Invariant => u64::MAX,
+            DepVersion::Iter(w) => iter * uops_per_iter + w as u64,
+            DepVersion::CarriedIter(w) => {
+                if iter == 0 {
+                    u64::MAX - 1
+                } else {
+                    (iter - 1) * uops_per_iter + w as u64
+                }
+            }
+        }
+    };
+    MemKey {
+        base: ident.base.map(|(f, v)| (f, ver(v))),
+        index: ident.index.map(|(f, v)| (f, ver(v))),
+        scale: ident.scale,
+        displacement: ident.displacement,
+        symbol: ident.symbol.clone(),
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum UopState {
+    Waiting,
+    /// Issued; result available at the stored cycle.
+    Done(u64),
+}
+
+#[derive(Debug, Clone)]
+struct InFlight {
+    /// Index into the iteration template.
+    tidx: usize,
+    iter: u64,
+    state: UopState,
+    /// Forwarding source (global store id), resolved at dispatch.
+    fwd_store: Option<u64>,
+}
+
+/// Simulate `cfg.warmup + cfg.iterations` iterations of the kernel.
+pub fn simulate(kernel: &Kernel, machine: &MachineModel, cfg: SimConfig) -> Result<Measurement> {
+    let template = decode_kernel(kernel, machine)?;
+    Ok(run(&template, machine, cfg))
+}
+
+/// Run a pre-decoded template (used by ibench to avoid re-decoding).
+pub fn run(template: &DecodedIter, machine: &MachineModel, cfg: SimConfig) -> Measurement {
+    let nuops = template.uops.len();
+    let total_iters = (cfg.warmup + cfg.iterations) as u64;
+    let uops_per_iter = nuops as u64;
+    let n_ports = machine.n_ports();
+    let rob_size = machine.params.rob_size;
+    let sched_size = machine.params.scheduler_size;
+    let rename_width = machine.params.rename_width;
+    let retire_width = machine.params.retire_width;
+    let fwd_lat = machine.params.store_forward_latency as u64;
+    let load_lat = machine.params.load_latency as u64;
+
+    // Slot structure for frontend/retire bandwidth: ranges of µ-ops that
+    // share a fused rename slot, plus eliminated-but-renamed slots that
+    // consume dispatch bandwidth without entering the ROB.
+    let mut slot_ranges: Vec<(usize, usize)> = Vec::new();
+    for (i, u) in template.uops.iter().enumerate() {
+        if u.new_slot {
+            slot_ranges.push((i, i + 1));
+        } else if let Some(last) = slot_ranges.last_mut() {
+            last.1 = i + 1;
+        }
+    }
+    let empty_slots = template.slots.saturating_sub(slot_ranges.len());
+
+    let mut rob: VecDeque<InFlight> = VecDeque::with_capacity(rob_size + nuops);
+    // Un-issued µ-ops (global id, wake-up hint) in dispatch order — the
+    // scheduler. The hint is the earliest cycle the µ-op could possibly
+    // issue (dep completion / port free time), so sleeping µ-ops are
+    // skipped with one comparison.
+    let mut waiting: Vec<(u64, u64)> = Vec::with_capacity(sched_size + nuops);
+    let mut rob_head_gid: u64 = 0; // global id of rob.front()
+    let mut next_gid: u64 = 0; // next µ-op to dispatch (global)
+    let mut sched_occupancy: usize = 0;
+    let mut port_free_at: Vec<u64> = vec![0; n_ports];
+    let mut port_busy: Vec<u64> = vec![0; n_ports];
+    let mut last_store: HashMap<MemKey, u64> = HashMap::new();
+    let mut store_done: HashMap<u64, u64> = HashMap::new();
+    let mut counters = Counters::default();
+
+    // Dispatch cursor in slot units.
+    let mut disp_iter: u64 = 0;
+    let mut disp_slot: usize = 0; // 0..empty_slots+slot_ranges.len()
+    let total_slots = empty_slots + slot_ranges.len();
+
+    // Retire cursor.
+    let mut ret_iter: u64 = 0;
+    let mut ret_slot: usize = 0;
+    let mut retired_iters: u64 = 0;
+
+    // Measurement window.
+    let mut window_start_cycle: Option<u64> = None;
+    let mut window_start_counters = Counters::default();
+    let mut window_start_ports: Vec<u64> = vec![0; n_ports];
+
+    let mut cycle: u64 = 0;
+    let max_cycles: u64 = 1_000_000_000; // hard safety stop
+
+    let done_of = |rob: &VecDeque<InFlight>, rob_head_gid: u64, gid: u64| -> Option<u64> {
+        if gid < rob_head_gid {
+            return Some(0); // retired long ago
+        }
+        match rob.get((gid - rob_head_gid) as usize) {
+            Some(f) => match f.state {
+                UopState::Done(c) => Some(c),
+                UopState::Waiting => None,
+            },
+            None => None, // not yet dispatched
+        }
+    };
+
+    while retired_iters < total_iters && cycle < max_cycles {
+        // ---------------- retire ------------------------------------
+        let mut retired_slots = 0;
+        while retired_slots < retire_width && ret_iter < total_iters {
+            if ret_slot < empty_slots {
+                // Eliminated slot: retires for free once reached.
+                ret_slot += 1;
+                retired_slots += 1;
+                continue;
+            }
+            let (s, e) = slot_ranges[ret_slot - empty_slots];
+            let first_gid = ret_iter * uops_per_iter + s as u64;
+            if first_gid < rob_head_gid {
+                // already popped (shouldn't happen) — advance
+                ret_slot += 1;
+                continue;
+            }
+            let all_done = (s..e).all(|t| {
+                let gid = ret_iter * uops_per_iter + t as u64;
+                matches!(done_of(&rob, rob_head_gid, gid), Some(c) if c <= cycle)
+            });
+            if !all_done {
+                break;
+            }
+            // Pop the slot's µ-ops from the ROB front.
+            for _ in s..e {
+                rob.pop_front();
+                rob_head_gid += 1;
+            }
+            ret_slot += 1;
+            retired_slots += 1;
+            if ret_slot == total_slots {
+                ret_slot = 0;
+                ret_iter += 1;
+                retired_iters += 1;
+                if retired_iters == cfg.warmup as u64 {
+                    window_start_cycle = Some(cycle);
+                    window_start_counters = counters.clone();
+                    window_start_ports = port_busy.clone();
+                }
+            }
+        }
+
+        // ---------------- issue / execute ---------------------------
+        let mut issued_any = false;
+        // Oldest-first over the scheduler contents. `waiting` holds the
+        // global ids of un-issued µ-ops in dispatch (= age) order, so
+        // the scan is O(scheduler occupancy), not O(ROB).
+        waiting.retain_mut(|(gid, wake)| {
+            if *wake > cycle {
+                return true; // sleeping on a known future event
+            }
+            let gid = *gid;
+            let i = (gid - rob_head_gid) as usize;
+            debug_assert_eq!(rob[i].state, UopState::Waiting);
+            let tu = &template.uops[rob[i].tidx];
+            // Dependencies ready?
+            let iter = rob[i].iter;
+            let mut ready = true;
+            for d in &tu.deps {
+                let dep_gid = match d {
+                    DepSource::Intra(w) => iter * uops_per_iter + *w as u64,
+                    DepSource::Carried(w) => {
+                        if iter == 0 {
+                            continue;
+                        }
+                        (iter - 1) * uops_per_iter + *w as u64
+                    }
+                    DepSource::Invariant => continue,
+                };
+                match done_of(&rob, rob_head_gid, dep_gid) {
+                    Some(c) if c <= cycle => {}
+                    Some(c) => {
+                        // Dep issued; completion cycle is known — sleep.
+                        *wake = c;
+                        ready = false;
+                        break;
+                    }
+                    None => {
+                        ready = false;
+                        break;
+                    }
+                }
+            }
+            if !ready {
+                return true; // stay in the scheduler
+            }
+            // Forwarding store must have produced its data.
+            let mut fwd_done: Option<u64> = None;
+            if let Some(sid) = rob[i].fwd_store {
+                match store_done
+                    .get(&sid)
+                    .copied()
+                    .or_else(|| done_of(&rob, rob_head_gid, sid))
+                {
+                    Some(c) if c <= cycle => fwd_done = Some(c),
+                    Some(c) => {
+                        *wake = c;
+                        return true;
+                    }
+                    None => return true, // store not yet issued
+                }
+            }
+            // Port available? occupancy 0 → no port needed.
+            let done_cycle = if tu.occupancy == 0 {
+                cycle + tu.latency.max(1) as u64
+            } else {
+                // Spread symmetric choices: rotate the starting port.
+                // (Bitmask walk — no allocation on this path.)
+                let mut chosen: Option<usize> = None;
+                let nports = tu.ports.count() as usize;
+                let off = (gid as usize) % nports;
+                let mut seen = 0usize;
+                let mut wrapped: Option<usize> = None;
+                for p in 0..16usize {
+                    if !tu.ports.contains(p) {
+                        continue;
+                    }
+                    if port_free_at[p] <= cycle {
+                        if seen >= off {
+                            chosen = Some(p);
+                            break;
+                        } else if wrapped.is_none() {
+                            wrapped = Some(p);
+                        }
+                    }
+                    seen += 1;
+                }
+                let chosen = chosen.or(wrapped);
+                let Some(p) = chosen else { return true };
+                port_free_at[p] = cycle + tu.occupancy as u64;
+                port_busy[p] += tu.occupancy as u64;
+                let mut dc = cycle + tu.latency.max(1) as u64;
+                if tu.kind == UopKind::Load {
+                    let base = cycle + load_lat;
+                    dc = match fwd_done {
+                        Some(sc) => base.max(sc + fwd_lat),
+                        None => base,
+                    };
+                }
+                dc
+            };
+            rob[i].state = UopState::Done(done_cycle);
+            sched_occupancy -= 1;
+            counters.uops_executed += 1;
+            issued_any = true;
+            if tu.kind == UopKind::StoreData {
+                store_done.insert(gid, done_cycle);
+            }
+            false // issued: leave the scheduler
+        });
+        if !issued_any && !rob.is_empty() {
+            counters.issue_stall_cycles += 1;
+        }
+
+        // ---------------- dispatch / rename --------------------------
+        let mut dispatched = 0;
+        while dispatched < rename_width && disp_iter < total_iters {
+            if disp_slot < empty_slots {
+                disp_slot += 1;
+                dispatched += 1;
+                continue;
+            }
+            let (s, e) = slot_ranges[disp_slot - empty_slots];
+            let n_new = e - s;
+            if rob.len() + n_new > rob_size || sched_occupancy + n_new > sched_size {
+                counters.dispatch_stall_cycles += 1;
+                break;
+            }
+            for t in s..e {
+                let tu = &template.uops[t];
+                let mut fwd_store = None;
+                if tu.kind == UopKind::Load {
+                    if let Some(ident) = &tu.mem_ident {
+                        let key = instantiate(ident, disp_iter, uops_per_iter);
+                        if let Some(&sid) = last_store.get(&key) {
+                            fwd_store = Some(sid);
+                            counters.forwarded_loads += 1;
+                        }
+                    }
+                } else if tu.kind == UopKind::StoreData {
+                    if let Some(ident) = &tu.mem_ident {
+                        let key = instantiate(ident, disp_iter, uops_per_iter);
+                        last_store.insert(key, next_gid);
+                    }
+                }
+                rob.push_back(InFlight {
+                    tidx: t,
+                    iter: disp_iter,
+                    state: UopState::Waiting,
+                    fwd_store,
+                });
+                waiting.push((next_gid, 0));
+                next_gid += 1;
+                sched_occupancy += 1;
+            }
+            counters.uops_dispatched += n_new as u64;
+            disp_slot += 1;
+            dispatched += 1;
+            if disp_slot == total_slots {
+                disp_slot = 0;
+                disp_iter += 1;
+                // Trim the store bookkeeping occasionally.
+                if disp_iter % 64 == 0 && store_done.len() > 1024 {
+                    let min_keep = rob_head_gid.saturating_sub(uops_per_iter * 8);
+                    store_done.retain(|gid, _| *gid >= min_keep);
+                    last_store.retain(|_, gid| *gid >= min_keep);
+                }
+            }
+        }
+
+        cycle += 1;
+    }
+
+    let wstart = window_start_cycle.unwrap_or(0);
+    let window_cycles = cycle.saturating_sub(wstart).max(1);
+    let measured_iters = cfg.iterations.max(1);
+    let mut wcounters = counters.clone();
+    wcounters.subtract(&window_start_counters);
+    let wports: Vec<u64> = port_busy
+        .iter()
+        .zip(window_start_ports.iter())
+        .map(|(a, b)| a - b)
+        .collect();
+    Measurement {
+        cycles_per_iteration: window_cycles as f64 / measured_iters as f64,
+        iterations: measured_iters,
+        total_cycles: cycle,
+        counters: wcounters,
+        port_busy: wports,
+        window_cycles,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::asm::extract_kernel;
+    use crate::mdb::{skylake, zen};
+
+    fn measure(src: &str, m: &MachineModel) -> Measurement {
+        let k = extract_kernel("t", src).unwrap();
+        simulate(&k, m, SimConfig { iterations: 500, warmup: 100 }).unwrap()
+    }
+
+    #[test]
+    fn single_add_chain_is_latency_bound() {
+        // One loop-carried vaddpd chain: 4 cy/iter on SKL, 3 on Zen.
+        let src = "\n.L1:\nvaddpd %xmm1, %xmm0, %xmm0\ncmpl $1, %eax\njne .L1\n";
+        let skl = measure(src, &skylake());
+        assert!((skl.cycles_per_iteration - 4.0).abs() < 0.2, "{}", skl.cycles_per_iteration);
+        let zen_m = measure(src, &zen());
+        assert!((zen_m.cycles_per_iteration - 3.0).abs() < 0.2, "{}", zen_m.cycles_per_iteration);
+    }
+
+    #[test]
+    fn independent_adds_are_throughput_bound() {
+        // Twelve parallel chains on 2 ports: port bound 6 cy/iter beats
+        // the 4 cy chain latency — the §II-A TP benchmark shape.
+        let body: String = (0..12)
+            .map(|i| format!("vaddpd %xmm{}, %xmm{}, %xmm{}\n", 12 + i % 3, i, i))
+            .collect();
+        let src = format!("\n.L1:\n{body}cmpl $1, %eax\njne .L1\n");
+        let m = measure(&src, &skylake());
+        assert!((m.cycles_per_iteration - 6.0).abs() < 0.4, "{}", m.cycles_per_iteration);
+    }
+
+    #[test]
+    fn three_chains_are_latency_bound() {
+        // Only three chains: the 4-cycle dependency chain dominates the
+        // 1.5-cycle port bound.
+        let src = "\n.L1:\nvaddpd %xmm3, %xmm0, %xmm0\nvaddpd %xmm4, %xmm1, %xmm1\nvaddpd %xmm5, %xmm2, %xmm2\ncmpl $1, %eax\njne .L1\n";
+        let m = measure(src, &skylake());
+        assert!((m.cycles_per_iteration - 4.0).abs() < 0.3, "{}", m.cycles_per_iteration);
+    }
+
+    #[test]
+    fn divider_pipe_gates_throughput() {
+        // Independent divides: DV occupancy 4 -> 4 cy/iter on SKL.
+        let src = "\n.L1:\nvdivsd %xmm1, %xmm2, %xmm0\ncmpl $1, %eax\njne .L1\n";
+        let m = measure(src, &skylake());
+        assert!((m.cycles_per_iteration - 4.0).abs() < 0.3, "{}", m.cycles_per_iteration);
+        // Zen: scaled divider (5 cy).
+        let mz = measure(src, &zen());
+        assert!((mz.cycles_per_iteration - 5.0).abs() < 0.3, "{}", mz.cycles_per_iteration);
+    }
+
+    #[test]
+    fn store_forward_chain_matches_o1_anomaly() {
+        // The §III-B pattern: sum updated through the stack.
+        let src = "\n.L2:\nvaddsd (%rsp), %xmm0, %xmm5\nvmovsd %xmm5, (%rsp)\naddl $1, %eax\ncmpl $100, %eax\njne .L2\n";
+        let m = measure(src, &skylake());
+        // fwd(4) + addsd(4) + store(1) = 9 cy/iter.
+        assert!((m.cycles_per_iteration - 9.0).abs() < 0.5, "{}", m.cycles_per_iteration);
+        assert!(m.counters.forwarded_loads > 0);
+    }
+
+    #[test]
+    fn unrelated_store_does_not_forward() {
+        let src = "\n.L2:\nvaddsd (%rsp), %xmm0, %xmm5\nvmovsd %xmm5, 8(%rsp)\naddl $1, %eax\ncmpl $100, %eax\njne .L2\n";
+        let m = measure(src, &skylake());
+        assert!(m.cycles_per_iteration < 2.5, "{}", m.cycles_per_iteration);
+    }
+
+    #[test]
+    fn load_bound_triad_hits_two_cycles() {
+        // Triad -O2-style scalar: 3 loads + 1 store on 2 AGU-capable
+        // ports -> 2 cy/iter on SKL.
+        let src = "\n.L3:\nvmovsd (%rcx,%rax,8), %xmm0\nvmulsd (%rdx,%rax,8), %xmm0, %xmm0\nvaddsd (%rsi,%rax,8), %xmm0, %xmm0\nvmovsd %xmm0, (%rdi,%rax,8)\naddq $1, %rax\ncmpq %rbp, %rax\njne .L3\n";
+        let m = measure(src, &skylake());
+        assert!((m.cycles_per_iteration - 2.0).abs() < 0.3, "{}", m.cycles_per_iteration);
+    }
+
+    #[test]
+    fn stall_counter_high_for_dependency_chain() {
+        let chain = "\n.L2:\nvaddsd (%rsp), %xmm0, %xmm5\nvmovsd %xmm5, (%rsp)\naddl $1, %eax\ncmpl $100, %eax\njne .L2\n";
+        let tp_body: String = (0..12)
+            .map(|i| format!("vaddpd %xmm{}, %xmm{}, %xmm{}\n", 12 + i % 3, i, i))
+            .collect();
+        let tp = format!("\n.L2:\n{tp_body}addl $1, %eax\ncmpl $100, %eax\njne .L2\n");
+        let a = measure(chain, &skylake());
+        let b = measure(&tp, &skylake());
+        let ra = a.counters.issue_stall_cycles as f64 / a.window_cycles as f64;
+        let rb = b.counters.issue_stall_cycles as f64 / b.window_cycles as f64;
+        assert!(ra > 4.0 * rb.max(0.01), "stall ratios {ra} vs {rb}");
+    }
+}

@@ -1,0 +1,445 @@
+//! Decode a kernel into simulator µ-ops with dependency wiring.
+//!
+//! One `DecodedIter` describes one assembly iteration of the loop body;
+//! the core replays it N times, renaming registers and memory versions
+//! per iteration.
+
+use anyhow::Result;
+
+use crate::asm::Kernel;
+use crate::isa::register::RegisterFile;
+use crate::mdb::{MachineModel, PortMask, UopKind};
+
+/// A dependency source, relative to the decoded iteration template.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DepSource {
+    /// µ-op `idx` of the same iteration.
+    Intra(usize),
+    /// µ-op `idx` of the previous iteration (loop-carried).
+    Carried(usize),
+    /// Value produced before the loop (loop-invariant) — always ready.
+    Invariant,
+}
+
+/// One µ-op template.
+#[derive(Debug, Clone)]
+pub struct SimUop {
+    /// Index of the source instruction within the kernel.
+    pub instr: usize,
+    pub kind: UopKind,
+    pub ports: PortMask,
+    /// Cycles the chosen port stays busy (divider scaled by
+    /// `sim_divider_scale`). 0 for store-data µ-ops under
+    /// `store_data_free` (they still occupy a ROB slot).
+    pub occupancy: u32,
+    /// Completion latency once issued (result available `latency` cycles
+    /// after issue).
+    pub latency: u32,
+    /// Dependencies that must complete before issue.
+    pub deps: Vec<DepSource>,
+    /// Memory-address identity for store-to-load forwarding: two memory
+    /// µ-ops alias iff their identities match in the same renaming
+    /// generation. `None` for non-memory µ-ops.
+    pub mem_ident: Option<MemIdent>,
+    /// True when this µ-op starts a new fused rename slot (micro-fusion:
+    /// load+compute and store-data+AGU pairs share a slot).
+    pub new_slot: bool,
+}
+
+/// Symbolic memory identity: (address-register versions, disp, scale).
+/// Versions are expressed as dependency sources so the identity is only
+/// equal when the address registers hold the *same* value generation —
+/// `(%rsp)` matches across iterations, `(%rcx,%rax,8)` does not once
+/// `%rax` is updated in the loop.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct MemIdent {
+    pub base: Option<(RegisterFile, DepVersion)>,
+    pub index: Option<(RegisterFile, DepVersion)>,
+    pub scale: u8,
+    pub displacement: i64,
+    pub symbol: Option<String>,
+}
+
+/// Version of an address register relative to the iteration template.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DepVersion {
+    /// Never written inside the loop: same value every iteration.
+    Invariant,
+    /// Defined by µ-op `idx` of the current iteration.
+    Iter(usize),
+    /// Defined by µ-op `idx` of the *previous* iteration (address read
+    /// before the in-loop update, e.g. `(%rdi,%rax)` before `addq`).
+    CarriedIter(usize),
+}
+
+/// A fully decoded loop iteration.
+#[derive(Debug, Clone)]
+pub struct DecodedIter {
+    pub uops: Vec<SimUop>,
+    /// Fused rename slots per iteration (frontend bandwidth unit).
+    pub slots: usize,
+    /// Instructions eliminated at rename (zero idioms, moves, fused
+    /// branches) — they consume no scheduler entry.
+    pub eliminated: usize,
+}
+
+/// Decode the kernel against the machine model.
+pub fn decode_kernel(kernel: &Kernel, machine: &MachineModel) -> Result<DecodedIter> {
+    // Track, per register file, who last wrote it: absent = loop-
+    // invariant, Uop(idx) = µ-op of this iteration, Zeroed = reset by an
+    // eliminated zeroing idiom (a *known constant*, NOT carried — this
+    // is exactly what the compiler-emitted vxorpd before vcvtsi2sd is
+    // for). After the first pass, reads-before-first-write become
+    // carried deps from the end-of-iteration producer.
+    use std::collections::HashMap;
+    #[derive(Clone, Copy, PartialEq)]
+    enum Writer {
+        Uop(usize),
+        Zeroed,
+    }
+    let mut writer: HashMap<RegisterFile, Writer> = HashMap::new();
+    // Move-elimination aliases: dest file -> source file chain.
+    let mut alias: HashMap<RegisterFile, RegisterFile> = HashMap::new();
+
+    let mut uops: Vec<SimUop> = Vec::new();
+    let mut pending_reads: Vec<(usize, RegisterFile)> = Vec::new(); // (uop, file) unresolved at decode time
+    let mut slots = 0usize;
+    let mut eliminated = 0usize;
+
+    let resolve =
+        |alias: &HashMap<RegisterFile, RegisterFile>, mut f: RegisterFile| -> RegisterFile {
+            let mut hops = 0;
+            while let Some(&next) = alias.get(&f) {
+                f = next;
+                hops += 1;
+                if hops > 16 {
+                    break; // cyclic alias chains can't happen, but be safe
+                }
+            }
+            f
+        };
+
+    for (i, ins) in kernel.instructions.iter().enumerate() {
+        // ---- rename-stage eliminations ------------------------------
+        if ins.is_zero_idiom() && machine.sim_zero_idiom_elim {
+            // Dest becomes a known zero; no µ-op, no dependency.
+            for w in ins.writes() {
+                let f = w.file();
+                alias.remove(&f);
+                writer.insert(f, Writer::Zeroed);
+            }
+            eliminated += 1;
+            slots += 1; // still decoded/renamed
+            continue;
+        }
+        if ins.is_reg_move() && machine.sim_move_elim {
+            let src = ins.operands[0].reg().map(|r| r.file());
+            let dst = ins.operands[1].reg().map(|r| r.file());
+            if let (Some(s), Some(d)) = (src, dst) {
+                let s = resolve(&alias, s);
+                alias.insert(d, s);
+                // Dest now tracks source's writer.
+                match writer.get(&s).copied() {
+                    Some(w) => {
+                        writer.insert(d, w);
+                    }
+                    None => {
+                        writer.remove(&d);
+                    }
+                }
+                eliminated += 1;
+                slots += 1;
+                continue;
+            }
+        }
+        if ins.is_branch() && machine.sim_macro_fusion {
+            // Fused with the preceding cmp/test µ-op: no extra µ-op.
+            // (All modeled kernels end in cmp+jcc; an unfused branch
+            // would be a Compute µ-op on the branch ports.)
+            eliminated += 1;
+            continue;
+        }
+
+        let resolved = machine.resolve(ins)?;
+        if resolved.entry.uops.is_empty() {
+            // Port-free entry (branch without fusion flag).
+            eliminated += 1;
+            continue;
+        }
+
+        // ---- source dependencies ------------------------------------
+        let mem = ins.mem_operand();
+        let addr_files: Vec<RegisterFile> = mem
+            .map(|m| m.address_registers().map(|r| r.file()).collect())
+            .unwrap_or_default();
+        let data_files: Vec<RegisterFile> = ins
+            .reads()
+            .into_iter()
+            .map(|r| resolve(&alias, r.file()))
+            .filter(|f| !addr_files.contains(f))
+            .collect();
+        let addr_files: Vec<RegisterFile> =
+            addr_files.into_iter().map(|f| resolve(&alias, f)).collect();
+
+        let dep_of = |writer: &HashMap<RegisterFile, Writer>,
+                      pending: &mut Vec<(usize, RegisterFile)>,
+                      uop_idx: usize,
+                      f: RegisterFile|
+         -> DepSource {
+            match writer.get(&f) {
+                Some(Writer::Uop(w)) => DepSource::Intra(*w),
+                // Zeroed: a known constant, never a dependency.
+                Some(Writer::Zeroed) => DepSource::Invariant,
+                None => {
+                    // Not yet written this iteration: may be loop-carried;
+                    // fix up after the full pass.
+                    pending.push((uop_idx, f));
+                    DepSource::Invariant
+                }
+            }
+        };
+
+        let version_of = |writer: &HashMap<RegisterFile, Writer>, f: RegisterFile| match writer
+            .get(&f)
+        {
+            Some(Writer::Uop(w)) => DepVersion::Iter(*w),
+            // Zeroed address registers hold the same value (0) in every
+            // iteration — invariant for aliasing purposes.
+            Some(Writer::Zeroed) => DepVersion::Invariant,
+            None => DepVersion::Invariant,
+        };
+        let ident = mem.map(|m| MemIdent {
+            base: m.base.map(|r| {
+                let f = resolve(&alias, r.file());
+                (f, version_of(&writer, f))
+            }),
+            index: m.index.map(|r| {
+                let f = resolve(&alias, r.file());
+                (f, version_of(&writer, f))
+            }),
+            scale: m.scale,
+            displacement: m.displacement,
+            symbol: m.symbol.clone(),
+        });
+
+        // ---- emit µ-ops ----------------------------------------------
+        // Kind-sort so that intra-instruction dependencies (load feeds
+        // compute) always point backwards — index order stays
+        // topological, which the critical-path analysis relies on.
+        let mut entry_uops = resolved.entry.uops.clone();
+        entry_uops.sort_by_key(|u| match u.kind {
+            UopKind::Load => 0,
+            UopKind::Compute => 1,
+            UopKind::Divider => 2,
+            UopKind::StoreData => 3,
+            UopKind::StoreAgu => 4,
+        });
+        let first_uop = uops.len();
+        let mut load_uop: Option<usize> = None;
+        let is_div_scaled = machine.params.sim_divider_scale;
+        for u in &entry_uops {
+            let idx = uops.len();
+            let mut deps: Vec<DepSource> = Vec::new();
+            let (occupancy, latency) = match u.kind {
+                UopKind::Load => {
+                    for &f in &addr_files {
+                        let d = dep_of(&writer, &mut pending_reads, idx, f);
+                        deps.push(d);
+                    }
+                    (u.occupancy.round() as u32, machine.params.load_latency)
+                }
+                UopKind::StoreAgu => {
+                    for &f in &addr_files {
+                        let d = dep_of(&writer, &mut pending_reads, idx, f);
+                        deps.push(d);
+                    }
+                    (u.occupancy.round() as u32, 1)
+                }
+                UopKind::StoreData => {
+                    for &f in &data_files {
+                        let d = dep_of(&writer, &mut pending_reads, idx, f);
+                        deps.push(d);
+                    }
+                    let occ = if machine.sim_store_data_free {
+                        0
+                    } else {
+                        u.occupancy.round() as u32
+                    };
+                    (occ, 1)
+                }
+                UopKind::Compute => {
+                    for &f in &data_files {
+                        let d = dep_of(&writer, &mut pending_reads, idx, f);
+                        deps.push(d);
+                    }
+                    if let Some(l) = load_uop {
+                        deps.push(DepSource::Intra(l));
+                    }
+                    (u.occupancy.round() as u32, resolved.entry.latency.max(1.0).round() as u32)
+                }
+                UopKind::Divider => {
+                    // Divider occupancy gates throughput; it has no data
+                    // consumers of its own (the compute µ-op carries the
+                    // result). Scaled by the measured-vs-documented factor.
+                    ((u.occupancy * is_div_scaled).round() as u32, 1)
+                }
+            };
+            let mem_ident = match u.kind {
+                UopKind::Load | UopKind::StoreData => ident.clone(),
+                _ => None,
+            };
+            // Micro-fusion: the first µ-op of an instruction opens a
+            // rename slot; load+compute / data+agu pairs share it.
+            let new_slot = idx == first_uop;
+            if new_slot {
+                slots += 1;
+            }
+            if u.kind == UopKind::Load {
+                load_uop = Some(idx);
+            }
+            uops.push(SimUop {
+                instr: i,
+                kind: u.kind,
+                ports: u.ports,
+                occupancy,
+                latency,
+                deps,
+                mem_ident,
+                new_slot,
+            });
+        }
+
+        // ---- register writes -----------------------------------------
+        // The result-producing µ-op is the last Compute (or the Load for
+        // pure-load instructions).
+        let producer = uops[first_uop..]
+            .iter()
+            .rposition(|u| u.kind == UopKind::Compute)
+            .map(|off| first_uop + off)
+            .or_else(|| {
+                uops[first_uop..]
+                    .iter()
+                    .rposition(|u| u.kind == UopKind::Load)
+                    .map(|off| first_uop + off)
+            });
+        if let Some(p) = producer {
+            for w in ins.writes() {
+                let f = w.file();
+                alias.remove(&f);
+                writer.insert(f, Writer::Uop(p));
+            }
+        }
+    }
+
+    // ---- loop-carried fix-up -----------------------------------------
+    // Reads that found no writer yet: if the register IS written later in
+    // the iteration (by a real µ-op — zeroing idioms leave a constant),
+    // the value comes from the previous iteration.
+    for (uop_idx, f) in pending_reads {
+        if let Some(Writer::Uop(w)) = writer.get(&f) {
+            if let Some(slot) = uops[uop_idx]
+                .deps
+                .iter_mut()
+                .find(|d| **d == DepSource::Invariant)
+            {
+                *slot = DepSource::Carried(*w);
+            }
+        }
+    }
+    // Memory-identity fix-up: an address register read before its in-loop
+    // update carries the *previous* iteration's value — without this,
+    // `a[i] += x`-style kernels would falsely alias across iterations.
+    for u in &mut uops {
+        if let Some(ident) = &mut u.mem_ident {
+            for comp in [&mut ident.base, &mut ident.index].into_iter().flatten() {
+                if comp.1 == DepVersion::Invariant {
+                    if let Some(Writer::Uop(w)) = writer.get(&comp.0) {
+                        comp.1 = DepVersion::CarriedIter(*w);
+                    }
+                }
+            }
+        }
+    }
+
+    Ok(DecodedIter { uops, slots, eliminated })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::asm::extract_kernel;
+    use crate::mdb::{skylake, zen};
+
+    fn kernel(src: &str) -> Kernel {
+        extract_kernel("t", src).unwrap()
+    }
+
+    #[test]
+    fn triad_skl_uop_count() {
+        let k = kernel(
+            "\n.L10:\nvmovapd (%r15,%rax), %ymm0\nvmovapd (%r12,%rax), %ymm3\naddl $1, %ecx\nvfmadd132pd 0(%r13,%rax), %ymm3, %ymm0\nvmovapd %ymm0, (%r14,%rax)\naddq $32, %rax\ncmpl %ecx, %r10d\nja .L10\n",
+        );
+        let d = decode_kernel(&k, &skylake()).unwrap();
+        // ld, ld, alu, (c+ld), (st+agu), alu, alu = 9 µ-ops; ja fused.
+        assert_eq!(d.uops.len(), 9);
+        // Slots: 7 instructions get slots (branch fused into cmp's... the
+        // branch is eliminated pre-decode so 7 slots).
+        assert_eq!(d.slots, 7);
+        assert_eq!(d.eliminated, 1);
+    }
+
+    #[test]
+    fn loop_carried_dependency_detected() {
+        // addq %rax, %rax chains iteration to iteration.
+        let k = kernel("\n.L1:\naddq %rax, %rax\ncmpq %rdx, %rax\njne .L1\n");
+        let d = decode_kernel(&k, &skylake()).unwrap();
+        let add = &d.uops[0];
+        assert!(add.deps.iter().any(|d| matches!(d, DepSource::Carried(0))));
+    }
+
+    #[test]
+    fn zero_idiom_eliminated() {
+        let k = kernel("\n.L1:\nvxorpd %xmm0, %xmm0, %xmm0\nvaddsd %xmm0, %xmm1, %xmm1\ncmpq %rdx, %rax\njne .L1\n");
+        let d = decode_kernel(&k, &skylake()).unwrap();
+        // vxorpd gone; vaddsd must NOT depend on it (invariant zero).
+        assert_eq!(d.eliminated, 2); // xor + fused jne
+        let add = &d.uops[0];
+        assert!(add.deps.iter().all(|dp| !matches!(dp, DepSource::Intra(_))));
+    }
+
+    #[test]
+    fn store_forward_identity_matches_rsp() {
+        // store (%rsp) then load (%rsp): same identity (rsp invariant).
+        let k = kernel("\n.L2:\nvaddsd (%rsp), %xmm0, %xmm5\nvmovsd %xmm5, (%rsp)\ncmpl $100, %eax\njne .L2\n");
+        let d = decode_kernel(&k, &skylake()).unwrap();
+        let load_ident = d.uops.iter().find(|u| u.kind == UopKind::Load).unwrap().mem_ident.clone();
+        let store_ident = d.uops.iter().find(|u| u.kind == UopKind::StoreData).unwrap().mem_ident.clone();
+        assert_eq!(load_ident, store_ident);
+        assert!(load_ident.is_some());
+    }
+
+    #[test]
+    fn zen_store_data_free() {
+        let k = kernel("\n.L1:\nvmovaps %xmm0, (%r12,%rax)\naddq $16, %rax\ncmpl %esi, %ebx\nja .L1\n");
+        let d = decode_kernel(&k, &zen()).unwrap();
+        let st = d.uops.iter().find(|u| u.kind == UopKind::StoreData).unwrap();
+        assert_eq!(st.occupancy, 0);
+    }
+
+    #[test]
+    fn zen_divider_scaled() {
+        let k = kernel("\n.L1:\nvdivsd %xmm0, %xmm1, %xmm2\ncmpl $1, %eax\njne .L1\n");
+        let d = decode_kernel(&k, &zen()).unwrap();
+        let dv = d.uops.iter().find(|u| u.kind == UopKind::Divider).unwrap();
+        assert_eq!(dv.occupancy, 5); // 4 * 1.25
+    }
+
+    #[test]
+    fn move_elimination_breaks_dependency() {
+        let k = kernel("\n.L1:\nvmovapd %ymm1, %ymm0\nvaddpd %ymm0, %ymm2, %ymm2\ncmpq %rdx, %rax\njne .L1\n");
+        let d = decode_kernel(&k, &skylake()).unwrap();
+        // mov eliminated; vaddpd reads ymm0 -> aliases ymm1 (invariant).
+        assert_eq!(d.eliminated, 2);
+        assert_eq!(d.uops.len(), 2); // vaddpd + cmp
+    }
+}

@@ -1,0 +1,27 @@
+//! Out-of-order core simulator — the measurement substrate.
+//!
+//! Stands in for the paper's Skylake i7-6700HQ and Zen EPYC 7451 test
+//! machines (see DESIGN.md §2 for the substitution rationale). It is a
+//! cycle-level port-model simulator, not an RTL model: fetch/rename →
+//! dispatch → port scheduling → execute → retire, with
+//!
+//! * register renaming with zero-idiom elimination and move elimination,
+//! * cmp/test + jcc macro-fusion,
+//! * per-port pipelined execution, non-pipelined divider pipes,
+//! * dependency-carrying memory (store-to-load forwarding with latency —
+//!   the mechanism behind the paper's §III-B `-O1` anomaly),
+//! * finite ROB / scheduler, bounded rename and retire width,
+//! * event counters mirroring the hardware events the paper quotes
+//!   (`UOPS_EXECUTED_STALL_CYCLES` etc.).
+//!
+//! The same machine files drive both this simulator ("the hardware") and
+//! the analyzer ("the model"); deliberate differences — what real silicon
+//! does that the analytic model does not know — are marked `sim_*` in the
+//! machine file.
+
+pub mod core;
+pub mod decode;
+pub mod trace;
+
+pub use core::{simulate, Measurement, SimConfig};
+pub use decode::{decode_kernel, DecodedIter, SimUop};

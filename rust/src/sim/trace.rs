@@ -1,0 +1,56 @@
+//! Event counters mirroring the hardware events used in the paper
+//! (§III-B quotes `UOPS_EXECUTED_STALL_CYCLES` on Skylake and
+//! `DYN_TOKENS_DISP_STALL_CYCLES_*` on Zen).
+
+/// Simulator event counters, accumulated over the run.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct Counters {
+    /// Cycles in which no µ-op issued although work was in flight —
+    /// the analog of `UOPS_EXECUTED_STALL_CYCLES`.
+    pub issue_stall_cycles: u64,
+    /// Cycles in which rename/dispatch was blocked on ROB/scheduler
+    /// capacity — the analog of Zen's token-stall events.
+    pub dispatch_stall_cycles: u64,
+    pub uops_executed: u64,
+    pub uops_dispatched: u64,
+    /// Loads that hit store-to-load forwarding.
+    pub forwarded_loads: u64,
+}
+
+impl Counters {
+    /// Subtract a snapshot (for windowed measurement).
+    pub fn subtract(&mut self, start: &Counters) {
+        self.issue_stall_cycles -= start.issue_stall_cycles;
+        self.dispatch_stall_cycles -= start.dispatch_stall_cycles;
+        self.uops_executed -= start.uops_executed;
+        self.uops_dispatched -= start.uops_dispatched;
+        self.forwarded_loads -= start.forwarded_loads;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn subtract_window() {
+        let mut c = Counters {
+            issue_stall_cycles: 10,
+            dispatch_stall_cycles: 4,
+            uops_executed: 100,
+            uops_dispatched: 110,
+            forwarded_loads: 7,
+        };
+        let start = Counters {
+            issue_stall_cycles: 3,
+            dispatch_stall_cycles: 1,
+            uops_executed: 40,
+            uops_dispatched: 45,
+            forwarded_loads: 2,
+        };
+        c.subtract(&start);
+        assert_eq!(c.issue_stall_cycles, 7);
+        assert_eq!(c.uops_executed, 60);
+        assert_eq!(c.forwarded_loads, 5);
+    }
+}

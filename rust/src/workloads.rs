@@ -1,0 +1,190 @@
+//! Embedded workload fixtures — the paper's validation kernels
+//! (transcribed from its listings; see workloads/*/*.s) plus extra
+//! kernels exercising other bottleneck classes.
+
+use crate::asm::{extract_kernel, Kernel};
+
+/// One fixture: a compiled kernel variant.
+#[derive(Debug, Clone, Copy)]
+pub struct Workload {
+    /// Benchmark family (`triad`, `pi`, ...).
+    pub family: &'static str,
+    /// Which architecture the code was "compiled for" (`skl`, `zen`,
+    /// or `any` when identical code is produced for both).
+    pub compiled_for: &'static str,
+    /// Optimization flag (`-O1`, `-O2`, `-O3`).
+    pub flag: &'static str,
+    /// Assembly-loop unroll factor relative to source iterations.
+    pub unroll: usize,
+    /// FLOP per source iteration (for the MFLOP/s columns).
+    pub flops_per_it: usize,
+    pub source: &'static str,
+}
+
+impl Workload {
+    pub fn name(&self) -> String {
+        format!("{}-{}-{}", self.family, self.compiled_for, self.flag.trim_start_matches('-'))
+    }
+
+    pub fn kernel(&self) -> Kernel {
+        extract_kernel(&self.name(), self.source).expect("embedded fixture parses")
+    }
+
+    /// Does this fixture represent code compiled for `arch`?
+    pub fn is_for(&self, arch: &str) -> bool {
+        self.compiled_for == "any" || self.compiled_for == arch
+    }
+}
+
+/// The triad fixtures (Tables I-IV): -O1/-O2 are scalar and identical
+/// for both compile targets; -O3 differs (ymm 4x for SKL, xmm 2x Zen).
+pub const TRIAD: &[Workload] = &[
+    Workload {
+        family: "triad",
+        compiled_for: "any",
+        flag: "-O1",
+        unroll: 1,
+        flops_per_it: 2,
+        source: include_str!("../../workloads/triad/o1.s"),
+    },
+    Workload {
+        family: "triad",
+        compiled_for: "any",
+        flag: "-O2",
+        unroll: 1,
+        flops_per_it: 2,
+        source: include_str!("../../workloads/triad/o2.s"),
+    },
+    Workload {
+        family: "triad",
+        compiled_for: "skl",
+        flag: "-O3",
+        unroll: 4,
+        flops_per_it: 2,
+        source: include_str!("../../workloads/triad/skl_o3.s"),
+    },
+    Workload {
+        family: "triad",
+        compiled_for: "zen",
+        flag: "-O3",
+        unroll: 2,
+        flops_per_it: 2,
+        source: include_str!("../../workloads/triad/zen_o3.s"),
+    },
+];
+
+/// The π fixtures (Tables V-VII). The -O3 kernel covers 8 source
+/// iterations per assembly iteration (ymm x 2-way unroll).
+pub const PI: &[Workload] = &[
+    Workload {
+        family: "pi",
+        compiled_for: "any",
+        flag: "-O1",
+        unroll: 1,
+        flops_per_it: 5,
+        source: include_str!("../../workloads/pi/o1.s"),
+    },
+    Workload {
+        family: "pi",
+        compiled_for: "any",
+        flag: "-O2",
+        unroll: 1,
+        flops_per_it: 5,
+        source: include_str!("../../workloads/pi/o2.s"),
+    },
+    Workload {
+        family: "pi",
+        compiled_for: "any",
+        flag: "-O3",
+        unroll: 8,
+        flops_per_it: 5,
+        source: include_str!("../../workloads/pi/o3.s"),
+    },
+];
+
+/// Additional kernels beyond the paper's two validation cases.
+pub const EXTRA: &[Workload] = &[
+    Workload {
+        family: "sum",
+        compiled_for: "any",
+        flag: "-O2",
+        unroll: 1,
+        flops_per_it: 1,
+        source: include_str!("../../workloads/extra/sum_reduction.s"),
+    },
+    Workload {
+        family: "daxpy",
+        compiled_for: "any",
+        flag: "-O3",
+        unroll: 4,
+        flops_per_it: 2,
+        source: include_str!("../../workloads/extra/daxpy.s"),
+    },
+    Workload {
+        family: "copy",
+        compiled_for: "any",
+        flag: "-O3",
+        unroll: 8,
+        flops_per_it: 0,
+        source: include_str!("../../workloads/extra/stream_copy.s"),
+    },
+    Workload {
+        family: "dot",
+        compiled_for: "any",
+        flag: "-O3",
+        unroll: 8,
+        flops_per_it: 2,
+        source: include_str!("../../workloads/extra/dot_product.s"),
+    },
+    Workload {
+        family: "triad-sse",
+        compiled_for: "any",
+        flag: "-O3",
+        unroll: 2,
+        flops_per_it: 2,
+        source: include_str!("../../workloads/extra/triad_sse.s"),
+    },
+];
+
+/// All fixtures.
+pub fn all() -> Vec<&'static Workload> {
+    TRIAD.iter().chain(PI.iter()).chain(EXTRA.iter()).collect()
+}
+
+/// Find a fixture by `family`, target arch, and flag.
+pub fn find(family: &str, arch: &str, flag: &str) -> Option<&'static Workload> {
+    all()
+        .into_iter()
+        .find(|w| w.family == family && w.flag == flag && w.is_for(arch))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_fixtures_parse_and_have_markers() {
+        for w in all() {
+            let k = w.kernel();
+            assert!(!k.is_empty(), "{}", w.name());
+            assert!(k.loop_label.is_some(), "{}", w.name());
+        }
+    }
+
+    #[test]
+    fn find_selects_arch_specific_o3() {
+        let skl = find("triad", "skl", "-O3").unwrap();
+        assert_eq!(skl.unroll, 4);
+        let zen = find("triad", "zen", "-O3").unwrap();
+        assert_eq!(zen.unroll, 2);
+        let o1 = find("triad", "zen", "-O1").unwrap();
+        assert_eq!(o1.compiled_for, "any");
+    }
+
+    #[test]
+    fn pi_o3_has_two_divides() {
+        let k = find("pi", "skl", "-O3").unwrap().kernel();
+        let divs = k.instructions.iter().filter(|i| i.mnemonic == "vdivpd").count();
+        assert_eq!(divs, 2);
+    }
+}

@@ -1,0 +1,80 @@
+//! Integration: parse every shipped workload fixture end-to-end and
+//! check structural properties of the extracted kernels.
+
+use osaca::asm::{extract_kernel, parse_file, Line};
+use osaca::isa::Operand;
+use osaca::workloads;
+
+#[test]
+fn every_fixture_parses_line_by_line() {
+    for w in workloads::all() {
+        let lines = parse_file(w.source).unwrap_or_else(|e| panic!("{}: {e}", w.name()));
+        let n_instr = lines.iter().filter(|l| matches!(l, Line::Instruction(_))).count();
+        assert!(n_instr >= 5, "{}: only {n_instr} instructions", w.name());
+    }
+}
+
+#[test]
+fn marked_regions_exclude_markers() {
+    for w in workloads::all() {
+        let k = w.kernel();
+        for i in &k.instructions {
+            assert_ne!(i.mnemonic, "movl", "{}: marker leaked into kernel: {}", w.name(), i.raw);
+        }
+    }
+}
+
+#[test]
+fn triad_o3_skl_matches_paper_listing() {
+    let k = workloads::find("triad", "skl", "-O3").unwrap().kernel();
+    let mnemonics: Vec<&str> = k.instructions.iter().map(|i| i.mnemonic.as_str()).collect();
+    assert_eq!(
+        mnemonics,
+        ["vmovapd", "vmovapd", "addl", "vfmadd132pd", "vmovapd", "addq", "cmpl", "ja"]
+    );
+    // The FMA reads memory with base+index addressing.
+    let fma = &k.instructions[3];
+    let mem = fma.mem_operand().unwrap();
+    assert!(!mem.is_simple());
+    assert_eq!(fma.form().to_string(), "vfmadd132pd-mem_ymm_ymm");
+}
+
+#[test]
+fn pi_o1_has_stack_roundtrip() {
+    let k = workloads::find("pi", "skl", "-O1").unwrap().kernel();
+    let load = k
+        .instructions
+        .iter()
+        .find(|i| i.is_load() && i.mnemonic == "vaddsd")
+        .expect("stack load");
+    let store = k.instructions.iter().find(|i| i.is_store()).expect("stack store");
+    let lm = load.mem_operand().unwrap();
+    let sm = store.mem_operand().unwrap();
+    assert_eq!(lm.base.unwrap().name, "rsp");
+    assert_eq!(sm.base.unwrap().name, "rsp");
+    assert_eq!(lm.displacement, sm.displacement);
+}
+
+#[test]
+fn operand_roundtrip_display() {
+    let k = workloads::find("triad", "zen", "-O3").unwrap().kernel();
+    for i in &k.instructions {
+        // Display form must re-parse to the same instruction form.
+        let text = i.to_string();
+        let re = osaca::asm::parse_instruction(&text, i.line).unwrap();
+        assert_eq!(re.form(), i.form(), "{text}");
+    }
+}
+
+#[test]
+fn branch_targets_resolve_to_loop_head() {
+    for w in workloads::all() {
+        let k = w.kernel();
+        let last = k.instructions.last().unwrap();
+        assert!(last.is_branch(), "{}", w.name());
+        match last.operands.first() {
+            Some(Operand::Label(l)) => assert_eq!(Some(l), k.loop_label.as_ref()),
+            other => panic!("{}: branch operand {other:?}", w.name()),
+        }
+    }
+}

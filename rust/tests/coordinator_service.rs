@@ -1,0 +1,87 @@
+//! Integration: the batching coordinator under concurrent load.
+
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+
+use osaca::coordinator::Coordinator;
+use osaca::mdb;
+use osaca::workloads;
+
+#[test]
+fn coordinator_serves_all_workloads_on_both_arches() {
+    let coord = Coordinator::auto();
+    for arch in ["skl", "zen"] {
+        let machine = mdb::by_name(arch).unwrap();
+        for w in workloads::all() {
+            let r = coord.analyze_kernel(&w.kernel(), &machine).unwrap();
+            assert!(r.osaca.cy_per_asm_iter > 0.0, "{} {}", arch, w.name());
+            assert!(
+                r.baseline.cy_per_asm_iter <= r.osaca.cy_per_asm_iter + 0.3,
+                "{} {}: baseline {} osaca {}",
+                arch,
+                w.name(),
+                r.baseline.cy_per_asm_iter,
+                r.osaca.cy_per_asm_iter
+            );
+        }
+    }
+}
+
+#[test]
+fn heavy_concurrency_is_correct_and_batches() {
+    let coord = Arc::new(Coordinator::auto());
+    let n = 64;
+    let mut handles = Vec::new();
+    for i in 0..n {
+        let coord = coord.clone();
+        handles.push(std::thread::spawn(move || {
+            let w = workloads::find("triad", "skl", "-O3").unwrap();
+            let m = mdb::skylake();
+            let r = coord.analyze_kernel(&w.kernel(), &m).unwrap();
+            // Every request gets the same right answer regardless of
+            // which batch slot it landed in.
+            assert!((r.osaca.cy_per_asm_iter - 2.0).abs() < 0.01, "req {i}");
+            r.baseline.cy_per_asm_iter
+        }));
+    }
+    let mut preds = Vec::new();
+    for h in handles {
+        preds.push(h.join().unwrap());
+    }
+    let first = preds[0];
+    assert!(preds.iter().all(|p| (p - first).abs() < 1e-5));
+    assert_eq!(coord.stats.requests.load(Ordering::Relaxed), n as u64);
+    let batches = coord.stats.batches.load(Ordering::Relaxed);
+    assert!(batches >= 1 && batches <= n as u64);
+}
+
+#[test]
+fn mixed_arch_batching_keeps_results_separate() {
+    let coord = Arc::new(Coordinator::auto());
+    let mut handles = Vec::new();
+    for i in 0..32 {
+        let coord = coord.clone();
+        handles.push(std::thread::spawn(move || -> (usize, f32) {
+            let w = workloads::find("triad", "skl", "-O3").unwrap();
+            let arch = if i % 2 == 0 { "skl" } else { "zen" };
+            let m = mdb::by_name(arch).unwrap();
+            let r = coord.analyze_kernel(&w.kernel(), &m).unwrap();
+            (i, r.osaca.cy_per_asm_iter)
+        }));
+    }
+    for h in handles {
+        let (i, cy) = h.join().unwrap();
+        let want = if i % 2 == 0 { 2.0 } else { 4.0 };
+        assert!((cy - want).abs() < 0.01, "req {i}: {cy}");
+    }
+}
+
+#[test]
+fn analyze_source_end_to_end() {
+    let coord = Coordinator::cpu_only();
+    let w = workloads::find("pi", "skl", "-O1").unwrap();
+    let r = coord.analyze_source(&w.name(), w.source, "skl").unwrap();
+    assert!((r.osaca.cy_per_asm_iter - 4.75).abs() < 0.01);
+    // Critical path flags the store-forwarding chain.
+    assert!(r.critpath.carried_per_iteration > 8.0, "{:?}", r.critpath);
+}

@@ -1,0 +1,99 @@
+//! Integration: the §II model-construction methodology end-to-end —
+//! benchmark on the simulator, infer entries, compare with the shipped
+//! databases.
+
+use osaca::builder::{default_probes, infer_entry, validate_model};
+use osaca::ibench::{measure_latency, measure_throughput, BenchSpec};
+use osaca::isa::InstructionForm;
+use osaca::mdb::{skylake, zen, PortMask, UopKind};
+
+/// §II-A: vaddpd latency 4 cy on SKL / 3 cy on Zen; rTP 0.5 on both.
+#[test]
+fn section2a_vaddpd() {
+    let spec = BenchSpec::parse("vaddpd-xmm_xmm_xmm");
+    assert!((measure_latency(&spec, &skylake()).unwrap() - 4.0).abs() < 0.2);
+    assert!((measure_latency(&spec, &zen()).unwrap() - 3.0).abs() < 0.2);
+    for m in [skylake(), zen()] {
+        assert!((measure_throughput(&spec, &m).unwrap() - 0.5).abs() < 0.1, "{}", m.name);
+    }
+}
+
+/// §II-C on Zen: FMA-mem latency 5, rTP 0.5, ports FP0/FP1 + loads.
+#[test]
+fn section2c_fma_zen() {
+    let z = zen();
+    let probes = default_probes(&z);
+    let form = InstructionForm::parse("vfmadd132pd-mem_xmm_xmm");
+    let inf = infer_entry(&form, &z, &probes).unwrap();
+    assert!((inf.measured_latency - 5.0).abs() < 0.3, "{}", inf.measured_latency);
+    assert!((inf.measured_rtp - 0.5).abs() < 0.1, "{}", inf.measured_rtp);
+    let c = inf.entry.uops.iter().find(|u| u.kind == UopKind::Compute).unwrap();
+    assert_eq!(c.ports, PortMask::from_ports(&[0, 1]), "FP0|FP1");
+    assert!(inf.entry.uops.iter().any(|u| u.kind == UopKind::Load));
+}
+
+/// §II-C on Skylake: same benchmarks, FMA on P0/P1.
+#[test]
+fn section2c_fma_skl() {
+    let m = skylake();
+    let probes = default_probes(&m);
+    let form = InstructionForm::parse("vfmadd132pd-mem_xmm_xmm");
+    let inf = infer_entry(&form, &m, &probes).unwrap();
+    assert!((inf.measured_latency - 4.0).abs() < 0.3, "{}", inf.measured_latency);
+    assert!((inf.measured_rtp - 0.5).abs() < 0.1, "{}", inf.measured_rtp);
+    let c = inf.entry.uops.iter().find(|u| u.kind == UopKind::Compute).unwrap();
+    assert!(c.ports.contains(0) && c.ports.contains(1), "{:?}", c.ports);
+}
+
+/// Divider throughput measured through the DV pipe on both machines.
+/// Note Zen measures ~5 cy (the sim_divider_scale imperfection the
+/// §III-B discussion attributes to the real machine) while the DB says
+/// 4 — the same model-vs-hardware gap the paper reports.
+#[test]
+fn divider_inference() {
+    let spec = BenchSpec::parse("vdivsd-xmm_xmm_xmm");
+    let skl_tp = measure_throughput(&spec, &skylake()).unwrap();
+    assert!((skl_tp - 4.0).abs() < 0.3, "{skl_tp}");
+    let zen_tp = measure_throughput(&spec, &zen()).unwrap();
+    assert!((zen_tp - 5.0).abs() < 0.4, "{zen_tp}");
+}
+
+/// Re-derive a representative slice of both databases and verify.
+#[test]
+fn validate_shipped_models() {
+    let forms: Vec<InstructionForm> = [
+        "vaddpd-xmm_xmm_xmm",
+        "vmulpd-xmm_xmm_xmm",
+        "vfmadd132pd-xmm_xmm_xmm",
+        "vfmadd132pd-mem_xmm_xmm",
+        "vpaddd-xmm_xmm_xmm",
+        "add-imm_r",
+        // NOTE: pure-load forms (vmovaps-mem_xmm) are excluded: their
+        // latency needs pointer-chasing benchmarks (the dest cannot feed
+        // a fixed address), a limitation shared with the paper's ibench.
+        "vaddsd-mem_xmm_xmm",
+    ]
+    .iter()
+    .map(|s| InstructionForm::parse(s))
+    .collect();
+    for machine in [skylake(), zen()] {
+        let rows = validate_model(&machine, &forms).unwrap();
+        assert!(!rows.is_empty());
+        for r in &rows {
+            assert!(r.ok(), "{}: {r:?}", machine.name);
+        }
+    }
+}
+
+/// Latency benchmarks agree with the DB latency field for FP math.
+#[test]
+fn latency_sweep_against_db() {
+    for machine in [skylake(), zen()] {
+        for f in ["vaddpd-xmm_xmm_xmm", "vmulpd-xmm_xmm_xmm", "vfmadd132pd-xmm_xmm_xmm"] {
+            let form = InstructionForm::parse(f);
+            let db = machine.entries.get(&form).unwrap().latency as f64;
+            let meas = measure_latency(&BenchSpec { form }, &machine).unwrap();
+            assert!((meas - db).abs() < 0.3, "{} {f}: {meas} vs {db}", machine.name);
+        }
+    }
+}

@@ -1,0 +1,159 @@
+//! Property tests on coordinator/analyzer/simulator invariants, using
+//! the in-repo seeded generator (proptest is not vendored offline).
+
+use osaca::analyzer::analyze;
+use osaca::asm::extract_kernel;
+use osaca::mdb::{skylake, zen, MachineModel};
+use osaca::proplite::{for_cases, Rng};
+use osaca::runtime::{solve_cpu, EncodedKernel, MAX_PORTS, MAX_UOPS};
+use osaca::sim::{simulate, SimConfig};
+
+/// Generate a random—but valid—loop kernel from the forms both DBs know.
+fn random_kernel(rng: &mut Rng) -> String {
+    const POOL: &[&str] = &[
+        "vaddpd %xmm{a}, %xmm{b}, %xmm{c}",
+        "vmulpd %xmm{a}, %xmm{b}, %xmm{c}",
+        "vfmadd132pd %xmm{a}, %xmm{b}, %xmm{c}",
+        "vaddsd %xmm{a}, %xmm{b}, %xmm{c}",
+        "vmovaps (%r8,%rax), %xmm{c}",
+        "vmovaps %xmm{a}, (%r9,%rax)",
+        "vpaddd %xmm{a}, %xmm{b}, %xmm{c}",
+        "vdivsd %xmm{a}, %xmm{b}, %xmm{c}",
+        "addl $1, %esi",
+        "vxorpd %xmm{z}, %xmm{z}, %xmm{z}",
+    ];
+    let n = rng.range(1, 12);
+    let mut body = String::new();
+    for _ in 0..n {
+        let t = *rng.pick(POOL);
+        let line = t
+            .replace("{a}", &format!("{}", rng.range(0, 15)))
+            .replace("{b}", &format!("{}", rng.range(0, 15)))
+            .replace("{c}", &format!("{}", rng.range(0, 15)))
+            .replace("{z}", &format!("{}", rng.range(0, 15)));
+        body.push_str(&line);
+        body.push('\n');
+    }
+    format!(".L0:\n{body}addq $16, %rax\ncmpq %rdx, %rax\njne .L0\n")
+}
+
+fn machines() -> [MachineModel; 2] {
+    [skylake(), zen()]
+}
+
+#[test]
+fn prop_analysis_total_is_max_of_ports() {
+    for_cases(40, |rng| {
+        let src = random_kernel(rng);
+        for m in machines() {
+            let k = extract_kernel("p", &src).unwrap();
+            let a = analyze(&k, &m).unwrap();
+            let max = a.totals.iter().cloned().fold(0.0f32, f32::max);
+            assert!((a.cy_per_asm_iter - max).abs() < 1e-5);
+            assert!(a.totals.iter().all(|&t| t >= 0.0));
+            // Totals equal the per-line sums.
+            for p in 0..m.n_ports() {
+                let s: f32 = a.lines.iter().map(|l| l.occupancy[p]).sum();
+                assert!((s - a.totals[p]).abs() < 1e-4);
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_simulation_never_beats_port_bound() {
+    // The simulator (imperfect scheduling, finite resources) can never
+    // be faster than the analyzer's idealized throughput bound... except
+    // where the hardware knows shortcuts the model does not (zero
+    // idioms, fused compares) — so compare against the shortcut-aware
+    // encoding instead (the baseline's uniform number).
+    for_cases(25, |rng| {
+        let src = random_kernel(rng);
+        for m in machines() {
+            let k = extract_kernel("p", &src).unwrap();
+            let cpu = osaca::baseline::predict_cpu(&k, &m).unwrap();
+            let meas = simulate(&k, &m, SimConfig { iterations: 200, warmup: 60 }).unwrap();
+            // Hidden loads (Zen) make the analyzer slightly optimistic;
+            // allow a small epsilon.
+            assert!(
+                meas.cycles_per_iteration >= cpu.cy_per_asm_iter as f64 * 0.92 - 0.1,
+                "{}: measured {} < balanced bound {}\n{src}",
+                m.name,
+                meas.cycles_per_iteration,
+                cpu.cy_per_asm_iter
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_solver_mass_conservation_and_order() {
+    for_cases(60, |rng| {
+        let mut enc = EncodedKernel::empty();
+        let rows = rng.range(1, MAX_UOPS.min(24));
+        let mut total = 0f32;
+        for r in 0..rows {
+            let nports = rng.range(1, 4);
+            let mut ports = Vec::new();
+            for _ in 0..nports {
+                ports.push(rng.range(0, MAX_PORTS - 1));
+            }
+            ports.dedup();
+            let cost = rng.f32() * 4.0;
+            enc.push_uop(r, &ports, cost).unwrap();
+            total += cost;
+        }
+        let out = &solve_cpu(&[enc], 32)[0];
+        let su: f32 = out.press_uniform.iter().sum();
+        let sb: f32 = out.press_balanced.iter().sum();
+        assert!((su - total).abs() < 1e-3, "{su} vs {total}");
+        assert!((sb - total).abs() < 1e-2, "{sb} vs {total}");
+        // Balancing can only help the bottleneck.
+        assert!(out.tp_balanced <= out.tp_uniform + 1e-3);
+        // Lower bound sanity channel.
+        assert!(out.crit_lower <= out.tp_balanced + 1e-3);
+    });
+}
+
+#[test]
+fn prop_mdb_roundtrip_arbitrary_subsets() {
+    for_cases(20, |rng| {
+        for mut m in machines() {
+            // Drop a random subset of entries, serialize, reparse.
+            let forms: Vec<_> = m.entries.keys().cloned().collect();
+            for f in forms {
+                if rng.chance(0.5) {
+                    m.entries.remove(&f);
+                }
+            }
+            let text = m.serialize();
+            let m2 = MachineModel::parse(&text).unwrap();
+            assert_eq!(m.entries.len(), m2.entries.len());
+            for (f, e) in &m.entries {
+                assert_eq!(e.uops, m2.entries[f].uops, "{f}");
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_simulator_monotone_in_kernel_growth() {
+    // Appending an instruction that writes NO register (a pure store to
+    // a fresh stream) never makes the loop faster. (Inserting a
+    // register-writing op CAN legitimately speed the loop up by
+    // breaking a loop-carried chain — that is not a bug.)
+    for_cases(15, |rng| {
+        let base = random_kernel(rng);
+        let k1 = extract_kernel("p", &base).unwrap();
+        let grown = base.replace(
+            "addq $16, %rax",
+            "vmovaps %xmm0, (%r10,%rax)\naddq $16, %rax",
+        );
+        let k2 = extract_kernel("p", &grown).unwrap();
+        let m = skylake();
+        let cfg = SimConfig { iterations: 150, warmup: 50 };
+        let a = simulate(&k1, &m, cfg).unwrap().cycles_per_iteration;
+        let b = simulate(&k2, &m, cfg).unwrap().cycles_per_iteration;
+        assert!(b + 1e-6 >= a * 0.98, "{a} -> {b}\n{base}");
+    });
+}

@@ -1,0 +1,152 @@
+//! Integration: the AOT artifact (JAX/Pallas → HLO text → PJRT) against
+//! the pure-rust reference solver. Requires `make artifacts`; tests
+//! skip with a notice when the artifact has not been built.
+
+use osaca::baseline::{encode, predict, predict_batch, predict_cpu};
+use osaca::mdb::{skylake, zen};
+use osaca::runtime::{solve_cpu, EncodedKernel, PortSolver, BATCH};
+use osaca::workloads;
+
+fn solver() -> Option<PortSolver> {
+    match PortSolver::load_default() {
+        Ok(s) => Some(s),
+        Err(e) => {
+            eprintln!("SKIP: {e}");
+            None
+        }
+    }
+}
+
+#[test]
+fn artifact_matches_cpu_solver_on_workloads() {
+    let Some(s) = solver() else { return };
+    let m = skylake();
+    for w in workloads::all() {
+        let k = w.kernel();
+        let enc = encode(&k, &m).unwrap();
+        let pjrt = s.solve(&[enc.clone()]).unwrap();
+        let cpu = solve_cpu(&[enc], 32);
+        assert!(
+            (pjrt[0].tp_uniform - cpu[0].tp_uniform).abs() < 1e-4,
+            "{}: uniform {} vs {}",
+            w.name(),
+            pjrt[0].tp_uniform,
+            cpu[0].tp_uniform
+        );
+        assert!(
+            (pjrt[0].tp_balanced - cpu[0].tp_balanced).abs() < 1e-3,
+            "{}: balanced {} vs {}",
+            w.name(),
+            pjrt[0].tp_balanced,
+            cpu[0].tp_balanced
+        );
+        for (a, b) in pjrt[0].press_uniform.iter().zip(cpu[0].press_uniform.iter()) {
+            assert!((a - b).abs() < 1e-4);
+        }
+    }
+}
+
+#[test]
+fn artifact_batch_solves_full_batch() {
+    let Some(s) = solver() else { return };
+    let m = zen();
+    let kernels: Vec<_> = workloads::all().iter().map(|w| w.kernel()).collect();
+    let refs: Vec<&_> = kernels.iter().take(BATCH).collect();
+    let preds = predict_batch(&refs, &m, &s).unwrap();
+    assert_eq!(preds.len(), refs.len());
+    for (w, p) in workloads::all().iter().zip(preds.iter()) {
+        let cpu = predict_cpu(&w.kernel(), &m).unwrap();
+        assert!(
+            (p.cy_per_asm_iter - cpu.cy_per_asm_iter).abs() < 1e-3,
+            "{}: {} vs {}",
+            w.name(),
+            p.cy_per_asm_iter,
+            cpu.cy_per_asm_iter
+        );
+    }
+}
+
+#[test]
+fn artifact_pi_o2_prediction() {
+    let Some(s) = solver() else { return };
+    let m = skylake();
+    let w = workloads::find("pi", "skl", "-O2").unwrap();
+    let p = predict(&w.kernel(), &m, &s).unwrap();
+    // The IACA-like 4.00 cy of §III-B through the real PJRT path.
+    assert!((p.cy_per_asm_iter - 4.0).abs() < 0.1, "{}", p.cy_per_asm_iter);
+}
+
+#[test]
+fn critpath_artifact_matches_rust_analyzer() {
+    use osaca::analyzer::critpath::{critical_path_batch, encode_graph};
+    use osaca::analyzer::critical_path;
+    use osaca::runtime::CritSolver;
+    let solver = match CritSolver::load_default() {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("SKIP: {e}");
+            return;
+        }
+    };
+    for machine in [skylake(), zen()] {
+        let kernels: Vec<_> = workloads::all().iter().map(|w| w.kernel()).collect();
+        for chunk in kernels.chunks(BATCH) {
+            let refs: Vec<&_> = chunk.iter().collect();
+            let batch = critical_path_batch(&refs, &machine, &solver).unwrap();
+            for (k, out) in chunk.iter().zip(batch.iter()) {
+                let exact = critical_path(k, &machine).unwrap();
+                assert!(
+                    (out.carried_bound - exact.carried_per_iteration).abs() < 1e-2,
+                    "{} {}: artifact {} vs analyzer {}",
+                    machine.name,
+                    k.name,
+                    out.carried_bound,
+                    exact.carried_per_iteration
+                );
+                assert!(
+                    (out.intra - exact.intra_iteration).abs() < 1e-2,
+                    "{} {}: intra {} vs {}",
+                    machine.name,
+                    k.name,
+                    out.intra,
+                    exact.intra_iteration
+                );
+                // Sanity: the encoder produces a graph (non-trivial lat).
+                let g = encode_graph(k, &machine).unwrap();
+                assert!(g.lat.iter().any(|&l| l > 0.0));
+            }
+        }
+    }
+}
+
+#[test]
+fn critpath_artifact_pi_o1_bound() {
+    use osaca::analyzer::critpath::critical_path_batch;
+    use osaca::runtime::CritSolver;
+    let solver = match CritSolver::load_default() {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("SKIP: {e}");
+            return;
+        }
+    };
+    let w = workloads::find("pi", "skl", "-O1").unwrap();
+    let k = w.kernel();
+    let out = critical_path_batch(&[&k], &skylake(), &solver).unwrap();
+    // The §III-B anomaly: 9 cy/it store-forwarding chain, via PJRT.
+    assert!((out[0].carried_bound - 9.0).abs() < 0.05, "{}", out[0].carried_bound);
+}
+
+#[test]
+fn oversize_batch_is_rejected() {
+    let Some(s) = solver() else { return };
+    let encs: Vec<EncodedKernel> = (0..BATCH + 1).map(|_| EncodedKernel::empty()).collect();
+    assert!(s.solve(&encs).is_err());
+}
+
+#[test]
+fn empty_batch_is_fine() {
+    let Some(s) = solver() else { return };
+    let out = s.solve(&[]).unwrap();
+    assert!(out.is_empty());
+}

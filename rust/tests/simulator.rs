@@ -1,0 +1,167 @@
+//! Integration: the simulator substrate reproduces the paper's
+//! *measured* columns (Tables III and V) and the §III-B counter story.
+
+use osaca::mdb::{by_name, skylake, zen};
+use osaca::sim::{simulate, SimConfig};
+use osaca::workloads;
+
+fn cfg() -> SimConfig {
+    SimConfig { iterations: 600, warmup: 150 }
+}
+
+fn measure(family: &str, arch: &str, flag: &str) -> osaca::sim::Measurement {
+    let w = workloads::find(family, arch, flag).unwrap();
+    let m = by_name(arch).unwrap();
+    simulate(&w.kernel(), &m, cfg()).unwrap()
+}
+
+/// Table III row 12: triad -O3 on Skylake: ~0.5 cy/it (paper: 0.53).
+#[test]
+fn triad_o3_skl_native() {
+    let m = measure("triad", "skl", "-O3");
+    let cy_it = m.cy_per_source_it(4);
+    assert!((0.48..0.58).contains(&cy_it), "{cy_it}");
+}
+
+/// Table III row 9: SKL AVX2 code on Zen: ~1.0 cy/it (paper: 1.01),
+/// i.e. 2x the native Skylake result — the AVX-splitting effect.
+#[test]
+fn triad_o3_skl_code_on_zen() {
+    let w = workloads::find("triad", "skl", "-O3").unwrap();
+    let m = simulate(&w.kernel(), &zen(), cfg()).unwrap();
+    let cy_it = m.cy_per_source_it(4);
+    assert!((0.95..1.15).contains(&cy_it), "{cy_it}");
+}
+
+/// Table III row 3: Zen native -O3: ~1.0 cy/it (paper: 1.02).
+#[test]
+fn triad_o3_zen_native() {
+    let m = measure("triad", "zen", "-O3");
+    let cy_it = m.cy_per_source_it(2);
+    assert!((0.95..1.15).contains(&cy_it), "{cy_it}");
+}
+
+/// Table III row 6: Zen xmm code on Skylake: ~1.0 cy/it (paper: 1.03).
+#[test]
+fn triad_o3_zen_code_on_skl() {
+    let w = workloads::find("triad", "zen", "-O3").unwrap();
+    let m = simulate(&w.kernel(), &skylake(), cfg()).unwrap();
+    let cy_it = m.cy_per_source_it(2);
+    assert!((0.95..1.15).contains(&cy_it), "{cy_it}");
+}
+
+/// Table III scalar rows: ~2 cy/it on both machines.
+#[test]
+fn triad_scalar_rows() {
+    for arch in ["skl", "zen"] {
+        for flag in ["-O1", "-O2"] {
+            let m = measure("triad", arch, flag);
+            let cy_it = m.cy_per_source_it(1);
+            assert!((1.9..2.3).contains(&cy_it), "{arch} {flag}: {cy_it}");
+        }
+    }
+}
+
+/// Table V measured column, Skylake: 9.02 / 4.00 / 2.06.
+#[test]
+fn pi_skl_measured() {
+    let o1 = measure("pi", "skl", "-O1").cy_per_source_it(1);
+    assert!((8.3..9.7).contains(&o1), "{o1}");
+    let o2 = measure("pi", "skl", "-O2").cy_per_source_it(1);
+    assert!((3.8..4.3).contains(&o2), "{o2}");
+    let o3 = measure("pi", "skl", "-O3").cy_per_source_it(8);
+    assert!((1.9..2.2).contains(&o3), "{o3}");
+}
+
+/// Table V measured column, Zen: 11.48 / 4.96 / 2.44.
+#[test]
+fn pi_zen_measured() {
+    let o1 = measure("pi", "zen", "-O1").cy_per_source_it(1);
+    assert!((10.2..12.3).contains(&o1), "{o1}");
+    let o2 = measure("pi", "zen", "-O2").cy_per_source_it(1);
+    assert!((4.5..5.4).contains(&o2), "{o2}");
+    let o3 = measure("pi", "zen", "-O3").cy_per_source_it(8);
+    assert!((2.2..2.8).contains(&o3), "{o3}");
+}
+
+/// §III-B: the -O1 π kernel shows far more issue-stall cycles than
+/// -O2 on Skylake (paper: 17x); forwarding is the cause. On Zen the
+/// 5-cycle divider period leaves ports idle at -O2 as well, so our
+/// substrate shows the effect in the *forwarded-loads* counter rather
+/// than a large issue-stall factor (the paper reads a different event,
+/// the retire-token stall, there).
+#[test]
+fn pi_o1_stall_counters() {
+    for arch in ["skl", "zen"] {
+        let o1 = measure("pi", arch, "-O1");
+        let o2 = measure("pi", arch, "-O2");
+        assert!(o1.counters.forwarded_loads > 0, "{arch}");
+        assert_eq!(o2.counters.forwarded_loads, 0, "{arch}");
+        let f1 = o1.counters.issue_stall_cycles as f64 / o1.window_cycles as f64;
+        let f2 = o2.counters.issue_stall_cycles as f64 / o2.window_cycles as f64;
+        if arch == "skl" {
+            assert!(f1 > 3.0 * f2.max(0.02), "{arch}: {f1} vs {f2}");
+        } else {
+            assert!(f1 > 0.8 * f2, "{arch}: {f1} vs {f2}");
+        }
+    }
+}
+
+/// Extra workloads behave per their design notes.
+#[test]
+fn extra_workloads_bottlenecks() {
+    // sum reduction: latency-bound at FP-add latency (4 SKL / 3 Zen).
+    let skl = simulate(
+        &workloads::find("sum", "skl", "-O2").unwrap().kernel(),
+        &skylake(),
+        cfg(),
+    )
+    .unwrap();
+    assert!((3.8..4.4).contains(&skl.cycles_per_iteration), "{}", skl.cycles_per_iteration);
+    let z = simulate(
+        &workloads::find("sum", "zen", "-O2").unwrap().kernel(),
+        &zen(),
+        cfg(),
+    )
+    .unwrap();
+    assert!((2.8..3.4).contains(&z.cycles_per_iteration), "{}", z.cycles_per_iteration);
+
+    // daxpy in-place: no false cross-iteration forwarding.
+    let d = simulate(
+        &workloads::find("daxpy", "skl", "-O3").unwrap().kernel(),
+        &skylake(),
+        cfg(),
+    )
+    .unwrap();
+    assert_eq!(d.counters.forwarded_loads, 0);
+    assert!(d.cycles_per_iteration < 3.0, "{}", d.cycles_per_iteration);
+}
+
+/// Legacy-SSE triad (2-operand forms): same 2 cy/asm-iter load bound on
+/// both machines, and the analyzer agrees (exercises the non-VEX DB
+/// entries and the mov-family dest semantics).
+#[test]
+fn sse_triad_two_cycles() {
+    use osaca::analyzer::analyze;
+    let w = workloads::find("triad-sse", "skl", "-O3").unwrap();
+    for m in [skylake(), zen()] {
+        let a = analyze(&w.kernel(), &m).unwrap();
+        assert!((a.cy_per_asm_iter - 2.0).abs() < 0.01, "{}: {}", m.name, a.cy_per_asm_iter);
+        let meas = simulate(&w.kernel(), &m, cfg()).unwrap();
+        assert!(
+            (meas.cycles_per_iteration - 2.0).abs() < 0.25,
+            "{}: {}",
+            m.name,
+            meas.cycles_per_iteration
+        );
+    }
+}
+
+/// Determinism: same kernel, same config, same result.
+#[test]
+fn simulation_is_deterministic() {
+    let a = measure("pi", "skl", "-O2");
+    let b = measure("pi", "skl", "-O2");
+    assert_eq!(a.cycles_per_iteration, b.cycles_per_iteration);
+    assert_eq!(a.counters, b.counters);
+}
