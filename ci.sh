@@ -1,0 +1,23 @@
+#!/usr/bin/env bash
+# CI entry point: tier-1 verification plus style and lint gates.
+#
+# Usage: ./ci.sh [--quick]
+#   --quick  skip fmt/clippy (tier-1 only)
+set -euo pipefail
+cd "$(dirname "$0")"
+
+echo "== tier-1: build =="
+cargo build --release
+
+echo "== tier-1: tests =="
+cargo test -q
+
+if [[ "${1:-}" != "--quick" ]]; then
+    echo "== style: rustfmt =="
+    cargo fmt --check
+
+    echo "== lint: clippy =="
+    cargo clippy --all-targets -- -D warnings
+fi
+
+echo "CI OK"

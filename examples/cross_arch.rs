@@ -5,14 +5,14 @@
 //! Run: `cargo run --release --example cross_arch`
 
 use anyhow::Result;
+use osaca::api::Engine;
 use osaca::benchlib::print_table;
-use osaca::coordinator::Coordinator;
 use osaca::report::experiments::{render_table3, table3};
 use osaca::sim::SimConfig;
 
 fn main() -> Result<()> {
-    let coord = Coordinator::auto();
-    let rows = table3(&coord, SimConfig::default())?;
+    let engine = Engine::new();
+    let rows = table3(engine.coordinator(), SimConfig::default())?;
     print_table(
         "Table III: Schönauer triad, measured (simulator @1.8 GHz) vs predicted",
         &[

@@ -4,20 +4,21 @@
 //! simulator substrates (latency, parallelism sweep, TP), probes port
 //! conflicts against vaddpd / vmulpd, deduces the port assignment, and
 //! prints the resulting database entry — exactly the §II-C narrative,
-//! mechanized.
+//! mechanized. Machine models come from the engine's shared registry.
 //!
 //! Run: `cargo run --release --example model_construction`
 
-use anyhow::Result;
+use anyhow::{anyhow, Result};
+use osaca::api::Engine;
 use osaca::builder::{default_probes, infer_entry};
 use osaca::ibench::{run_conflict, run_sweep, BenchSpec};
 use osaca::isa::InstructionForm;
-use osaca::mdb;
 
 fn main() -> Result<()> {
+    let engine = Engine::new();
     let form = InstructionForm::parse("vfmadd132pd-mem_xmm_xmm");
     for arch in ["zen", "skl"] {
-        let machine = mdb::by_name(arch).unwrap();
+        let machine = engine.machine(arch).map_err(|e| anyhow!("{e}"))?;
         println!("=== {} ===", machine.arch_name);
 
         // §II-C parallelism sweep (the ibench output listing).
@@ -41,7 +42,7 @@ fn main() -> Result<()> {
             "deduced: lat {:.1} cy, rTP {:.2} cy/instr, conflicts {:?}",
             inf.measured_latency, inf.measured_rtp, inf.conflicting_probes
         );
-        let mut m2 = machine.clone();
+        let mut m2 = machine.as_ref().clone();
         m2.entries.clear();
         m2.insert(inf.entry.clone());
         for line in m2.serialize().lines().filter(|l| l.starts_with("entry")) {

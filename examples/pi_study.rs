@@ -5,40 +5,46 @@
 //! Run: `cargo run --release --example pi_study`
 
 use anyhow::Result;
-use osaca::analyzer::{analyze, critical_path};
+use osaca::api::{Engine, Passes};
 use osaca::benchlib::print_table;
-use osaca::coordinator::Coordinator;
-use osaca::mdb;
-use osaca::sim::{simulate, SimConfig};
 use osaca::workloads;
 
 fn main() -> Result<()> {
-    let coord = Coordinator::auto();
+    let engine = Engine::new();
     let mut rows = Vec::new();
     let mut stall_rows = Vec::new();
     for arch in ["skl", "zen"] {
-        let machine = mdb::by_name(arch).unwrap();
         for flag in ["-O1", "-O2", "-O3"] {
             let w = workloads::find("pi", arch, flag).unwrap();
-            let k = w.kernel();
-            let a = analyze(&k, &machine)?;
-            let b = coord.analyze_kernel(&k, &machine)?;
-            let cp = critical_path(&k, &machine)?;
-            let m = simulate(&k, &machine, SimConfig::default())?;
+            // One request runs all four passes over the kernel.
+            let r = engine.analyze(
+                &Engine::request(&w.name())
+                    .arch(arch)
+                    .source(w.source)
+                    .passes(Passes::ALL)
+                    .unroll(w.unroll),
+            )?;
+            let a = r.throughput.as_ref().expect("throughput pass");
+            let b = r.baseline.as_ref().expect("baseline pass");
+            let cp = r.critpath.as_ref().expect("critpath pass");
+            let m = r.simulation.as_ref().expect("simulate pass");
             let u = w.unroll as f64;
             rows.push(vec![
-                machine.arch_name.clone(),
+                r.machine.arch_name.clone(),
                 flag.to_string(),
-                format!("{:.2}", b.baseline.cy_per_asm_iter as f64 / u),
+                format!("{:.2}", b.cy_per_asm_iter as f64 / u),
                 format!("{:.2}", a.cy_per_asm_iter as f64 / u),
                 format!("{:.2}", cp.carried_per_iteration as f64 / u),
                 format!("{:.2}", m.cy_per_source_it(w.unroll)),
             ]);
             stall_rows.push(vec![
-                machine.arch_name.clone(),
+                r.machine.arch_name.clone(),
                 flag.to_string(),
                 format!("{}", m.counters.issue_stall_cycles),
-                format!("{:.1}%", 100.0 * m.counters.issue_stall_cycles as f64 / m.window_cycles as f64),
+                format!(
+                    "{:.1}%",
+                    100.0 * m.counters.issue_stall_cycles as f64 / m.window_cycles as f64
+                ),
                 format!("{}", m.counters.forwarded_loads),
             ]);
         }

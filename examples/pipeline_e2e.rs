@@ -4,9 +4,9 @@
 //!    undocumented machine, rebuild database entries for its core
 //!    instruction forms via ibench + conflict probing (§II), and verify
 //!    them against the shipped model.
-//! 2. *Analysis service*: start the batching coordinator (PJRT artifact
-//!    if built) and push every workload x architecture through it
-//!    concurrently, serving-framework style.
+//! 2. *Analysis service*: submit every workload x architecture as ONE
+//!    batch through `Engine::analyze_batch` — the requests map directly
+//!    onto the solver's B=8 artifact slots, serving-framework style.
 //! 3. *Validation*: simulate every workload on both machines and report
 //!    prediction vs measurement — the paper's full evaluation, plus the
 //!    extra kernels.
@@ -16,25 +16,22 @@
 //! Run: `cargo run --release --example pipeline_e2e`
 
 use std::sync::atomic::Ordering;
-use std::sync::Arc;
 use std::time::Instant;
 
-use anyhow::Result;
-use osaca::analyzer::{analyze, critical_path};
+use anyhow::{anyhow, Result};
+use osaca::api::{Engine, Passes};
 use osaca::benchlib::print_table;
 use osaca::builder::{default_probes, infer_entry, validate_model};
-use osaca::coordinator::Coordinator;
 use osaca::isa::InstructionForm;
-use osaca::mdb;
-use osaca::sim::{simulate, SimConfig};
 use osaca::workloads;
 
 fn main() -> Result<()> {
     let t0 = Instant::now();
+    let engine = Engine::new();
 
     // ---- phase 1: model construction ------------------------------
     println!("[1/3] model construction on the 'undocumented' Zen substrate");
-    let zen = mdb::zen();
+    let zen = engine.machine("zen").map_err(|e| anyhow!("{e}"))?;
     let probes = default_probes(&zen);
     let forms = [
         "vaddpd-xmm_xmm_xmm",
@@ -67,50 +64,58 @@ fn main() -> Result<()> {
     let ok = validation.iter().filter(|r| r.ok()).count();
     println!("validation: {ok}/{} entries re-derived within tolerance", validation.len());
 
-    // ---- phase 2: concurrent analysis service ----------------------
-    println!("\n[2/3] batched analysis service (PJRT artifact if built)");
-    let coord = Arc::new(Coordinator::auto());
-    let reqs = 96;
-    let t1 = Instant::now();
-    let mut handles = Vec::new();
-    for i in 0..reqs {
-        let coord = coord.clone();
-        handles.push(std::thread::spawn(move || -> Result<()> {
-            let ws = workloads::all();
+    // ---- phase 2: batched analysis service ------------------------
+    println!("\n[2/3] batch submission through Engine::analyze_batch");
+    let ws = workloads::all();
+    let n_reqs = 96;
+    let reqs: Vec<_> = (0..n_reqs)
+        .map(|i| {
             let w = ws[i % ws.len()];
             let arch = if i % 2 == 0 { "skl" } else { "zen" };
-            let machine = mdb::by_name(arch).unwrap();
-            let r = coord.analyze_kernel(&w.kernel(), &machine)?;
-            // Balanced prediction never exceeds the uniform one.
-            assert!(r.baseline.cy_per_asm_iter <= r.baseline.uniform_cy + 1e-3);
-            Ok(())
-        }));
-    }
-    for h in handles {
-        h.join().expect("worker")?;
-    }
+            Engine::request(&w.name())
+                .arch(arch)
+                .source(w.source)
+                .passes(Passes::ANALYTIC)
+                .unroll(w.unroll)
+        })
+        .collect();
+    let t1 = Instant::now();
+    let results = engine.analyze_batch(&reqs);
     let dt = t1.elapsed();
+    for r in &results {
+        let report = r.as_ref().map_err(|e| anyhow!("batch request failed: {e}"))?;
+        let t = report.throughput.as_ref().expect("throughput pass");
+        let b = report.baseline.as_ref().expect("baseline pass");
+        // Balanced prediction never exceeds the uniform one.
+        assert!(b.cy_per_asm_iter <= t.cy_per_asm_iter + 1e-3);
+    }
+    let stats = engine.stats();
     println!(
-        "served {reqs} requests in {dt:?} ({:.0} req/s), {} batches, avg batch {:.2}",
-        reqs as f64 / dt.as_secs_f64(),
-        coord.stats.batches.load(Ordering::Relaxed),
-        coord.stats.avg_batch_size(),
+        "served {n_reqs} requests in {dt:?} ({:.0} req/s), {} solver batches, avg batch {:.2}",
+        n_reqs as f64 / dt.as_secs_f64(),
+        stats.batches.load(Ordering::Relaxed),
+        stats.avg_batch_size(),
     );
 
-    // ---- phase 3: full prediction-vs-measurement sweep --------------
+    // ---- phase 3: full prediction-vs-measurement sweep -------------
     println!("\n[3/3] prediction vs simulated measurement, all workloads x machines");
     let mut rows = Vec::new();
     let mut worst: f64 = 1.0;
     for arch in ["skl", "zen"] {
-        let machine = mdb::by_name(arch).unwrap();
         for w in workloads::all() {
             if !w.is_for(arch) && w.family != "triad" {
                 continue;
             }
-            let k = w.kernel();
-            let a = analyze(&k, &machine)?;
-            let cp = critical_path(&k, &machine)?;
-            let m = simulate(&k, &machine, SimConfig::default())?;
+            let report = engine.analyze(
+                &Engine::request(&w.name())
+                    .arch(arch)
+                    .source(w.source)
+                    .passes(Passes::THROUGHPUT | Passes::CRITPATH | Passes::SIMULATE)
+                    .unroll(w.unroll),
+            ).map_err(|e| anyhow!("{e}"))?;
+            let a = report.throughput.as_ref().expect("throughput pass");
+            let cp = report.critpath.as_ref().expect("critpath pass");
+            let m = report.simulation.as_ref().expect("simulate pass");
             let pred = a.cy_per_asm_iter.max(cp.carried_per_iteration);
             let ratio = m.cycles_per_iteration / pred as f64;
             // Track accuracy of the combined (throughput + critical
@@ -119,7 +124,7 @@ fn main() -> Result<()> {
                 worst = worst.max(ratio.max(1.0 / ratio));
             }
             rows.push(vec![
-                machine.name.clone(),
+                report.arch.clone(),
                 w.name(),
                 format!("{:.2}", a.cy_per_asm_iter),
                 format!("{:.2}", cp.carried_per_iteration),

@@ -1,38 +1,36 @@
 //! Quickstart: analyze the Schönauer triad for both architectures and
-//! compare against the simulated hardware — the paper's Fig. 4 flow.
+//! compare against the simulated hardware — the paper's Fig. 4 flow,
+//! driven entirely through the `osaca::api` session layer.
 //!
 //! Run: `cargo run --release --example quickstart`
 
 use anyhow::Result;
-use osaca::analyzer::analyze;
-use osaca::coordinator::Coordinator;
-use osaca::mdb;
-use osaca::report::render_occupancy;
-use osaca::sim::{simulate, SimConfig};
+use osaca::api::{Engine, Passes};
 use osaca::workloads;
 
 fn main() -> Result<()> {
-    let coord = Coordinator::auto();
+    let engine = Engine::new();
     for arch in ["skl", "zen"] {
-        let machine = mdb::by_name(arch).unwrap();
         let w = workloads::find("triad", arch, "-O3").unwrap();
-        let kernel = w.kernel();
 
-        println!("=== {} ({}) — {} ===\n", machine.arch_name, arch, w.name());
+        // One request, every pass: OSACA throughput analysis (Tables
+        // II/IV), the balanced IACA-like baseline through the batching
+        // solver, and a "measurement" on the simulator substrate.
+        let report = engine.analyze(
+            &Engine::request(&w.name())
+                .arch(arch)
+                .source(w.source)
+                .passes(Passes::THROUGHPUT | Passes::BASELINE | Passes::SIMULATE)
+                .unroll(w.unroll),
+        )?;
 
-        // 1. OSACA throughput analysis (Tables II / IV).
-        let a = analyze(&kernel, &machine)?;
-        println!("{}", render_occupancy(&a, &machine));
-
-        // 2. Balanced baseline through the AOT artifact (IACA-like).
-        let r = coord.analyze_kernel(&kernel, &machine)?;
+        print!("{}", report.to_text());
+        let b = report.baseline.as_ref().expect("baseline pass");
         println!(
             "balanced baseline: {:.2} cy/asm-iter (uniform cross-check {:.2})",
-            r.baseline.cy_per_asm_iter, r.baseline.uniform_cy
+            b.cy_per_asm_iter, b.uniform_cy
         );
-
-        // 3. "Measurement" on the simulator substrate.
-        let m = simulate(&kernel, &machine, SimConfig::default())?;
+        let m = report.simulation.as_ref().expect("simulate pass");
         println!(
             "simulated hardware: {:.2} cy/asm-iter = {:.2} cy per source iteration\n",
             m.cycles_per_iteration,

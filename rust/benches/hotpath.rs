@@ -25,6 +25,23 @@ fn main() {
     let skl = mdb::skylake();
     let zen = mdb::zen();
 
+    // ---- machine-model registry ---------------------------------------
+    // Built-in models are parsed once per process and served from the
+    // Arc cache; assert that a million lookups do not re-parse.
+    println!("--- mdb registry ---");
+    let parses_before = mdb::builtin_parse_count();
+    let s = bench("mdb/by_name_shared/1e6-lookups", 2, 10, || {
+        for _ in 0..1_000_000 {
+            std::hint::black_box(mdb::by_name_shared("skl"));
+        }
+    });
+    println!("{}  ({:.0} lookups/s)", s.report(), 1e6 / s.median.as_secs_f64());
+    assert_eq!(
+        mdb::builtin_parse_count(),
+        parses_before,
+        "cached machine-model lookups must not re-parse the embedded .mdb text"
+    );
+
     // ---- L3 simulator -------------------------------------------------
     println!("--- L3 simulator ---");
     for (arch, m) in [("skl", &skl), ("zen", &zen)] {
@@ -110,6 +127,33 @@ fn main() {
         "coordinator stats: {} batches, avg batch {:.2}",
         coord.stats.batches.load(std::sync::atomic::Ordering::Relaxed),
         coord.stats.avg_batch_size()
+    );
+
+    // ---- api batch path -------------------------------------------------
+    // The Engine::analyze_batch fast path: one submission, direct B=8
+    // slot mapping, no per-request reply channels.
+    use osaca::api::{Engine, Passes};
+    let engine = Engine::cpu_only();
+    let ws = workloads::all();
+    let reqs: Vec<_> = (0..n)
+        .map(|i| {
+            let w = ws[i % ws.len()];
+            Engine::request(&w.name())
+                .arch(if i % 2 == 0 { "skl" } else { "zen" })
+                .source(w.source)
+                .passes(Passes::ANALYTIC)
+                .unroll(w.unroll)
+        })
+        .collect();
+    let s = bench("api/analyze_batch/128-reqs", 1, 8, || {
+        let results = engine.analyze_batch(&reqs);
+        assert!(results.iter().all(|r| r.is_ok()));
+    });
+    println!("{}  ({:.0} req/s)", s.report(), n as f64 / s.median.as_secs_f64());
+    println!(
+        "engine stats: {} batches, avg batch {:.2}",
+        engine.stats().batches.load(std::sync::atomic::Ordering::Relaxed),
+        engine.stats().avg_batch_size()
     );
 }
 

@@ -1,0 +1,136 @@
+//! Structured errors at the public API boundary.
+//!
+//! Everything below `api` keeps using `anyhow` internally; the `api`
+//! layer converts failures into [`OsacaError`] so callers can match on
+//! causes (unknown architecture, parse failure at a line, unresolved
+//! instruction form, solver timeout, ...) instead of grepping strings.
+
+use std::fmt;
+use std::time::Duration;
+
+use crate::coordinator::SubmitError;
+
+/// A structured failure from the `osaca::api` layer.
+#[derive(Debug)]
+pub enum OsacaError {
+    /// The requested architecture is not registered. `available` lists
+    /// every built-in and user-registered model name.
+    UnknownArch { requested: String, available: Vec<String> },
+    /// Assembly source failed to parse or contained no kernel.
+    ParseError { name: String, line: Option<usize>, message: String },
+    /// A `.mdb` machine-model text failed to parse.
+    MalformedModel { line: Option<usize>, message: String },
+    /// An instruction form has no database entry and could not be
+    /// synthesized.
+    UnresolvedForm { form: String, line: usize, arch: String },
+    /// The request carried neither source text nor a kernel.
+    EmptyRequest { name: String },
+    /// The kernel does not fit the solver artifact's µ-op budget.
+    KernelTooLarge { max: usize, message: String },
+    /// The solver thread did not reply within the configured timeout.
+    SolverTimeout { waited: Duration },
+    /// The coordinator service is shut down.
+    ServiceUnavailable { message: String },
+    /// Anything else (internal invariant failures).
+    Internal { message: String },
+}
+
+impl fmt::Display for OsacaError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            OsacaError::UnknownArch { requested, available } => write!(
+                f,
+                "unknown architecture `{requested}` (available: {})",
+                available.join(", ")
+            ),
+            OsacaError::ParseError { name, line: Some(line), message } => {
+                write!(f, "parse error in `{name}` at line {line}: {message}")
+            }
+            OsacaError::ParseError { name, line: None, message } => {
+                write!(f, "parse error in `{name}`: {message}")
+            }
+            OsacaError::MalformedModel { line: Some(line), message } => {
+                write!(f, "malformed machine model at line {line}: {message}")
+            }
+            OsacaError::MalformedModel { line: None, message } => {
+                write!(f, "malformed machine model: {message}")
+            }
+            OsacaError::UnresolvedForm { form, line, arch } => write!(
+                f,
+                "no {arch} database entry for instruction form `{form}` (line {line}); \
+                 run with --learn or add the entry"
+            ),
+            OsacaError::EmptyRequest { name } => {
+                write!(f, "request `{name}` has neither source text nor a kernel")
+            }
+            OsacaError::KernelTooLarge { max, message } => {
+                write!(f, "kernel exceeds the solver budget of {max} µ-ops: {message}")
+            }
+            OsacaError::SolverTimeout { waited } => {
+                write!(f, "solver did not reply within {waited:?}")
+            }
+            OsacaError::ServiceUnavailable { message } => {
+                write!(f, "analysis service unavailable: {message}")
+            }
+            OsacaError::Internal { message } => write!(f, "internal error: {message}"),
+        }
+    }
+}
+
+impl std::error::Error for OsacaError {}
+
+impl From<SubmitError> for OsacaError {
+    fn from(e: SubmitError) -> Self {
+        match e {
+            SubmitError::Timeout { waited } => OsacaError::SolverTimeout { waited },
+            SubmitError::Closed => {
+                OsacaError::ServiceUnavailable { message: "solver thread gone".into() }
+            }
+        }
+    }
+}
+
+/// Extract the first `line N` mention from an error chain — the parse
+/// layers annotate failures with `line {n}` context.
+pub(crate) fn find_line(message: &str) -> Option<usize> {
+    let mut rest = message;
+    while let Some(pos) = rest.find("line ") {
+        let digits: String = rest[pos + 5..].chars().take_while(|c| c.is_ascii_digit()).collect();
+        if !digits.is_empty() {
+            return digits.parse().ok();
+        }
+        rest = &rest[pos + 5..];
+    }
+    None
+}
+
+/// Classify a kernel-preparation failure from the lower layers.
+pub(crate) fn parse_failure(name: &str, err: &anyhow::Error) -> OsacaError {
+    let message = format!("{err:#}");
+    OsacaError::ParseError { name: name.to_string(), line: find_line(&message), message }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn line_extraction() {
+        assert_eq!(find_line("entry line 12: bad uop"), Some(12));
+        assert_eq!(find_line("line 3: unknown directive `bogus`"), Some(3));
+        assert_eq!(find_line("no line info"), None);
+        assert_eq!(find_line("line x then line 7: ok"), Some(7));
+    }
+
+    #[test]
+    fn unknown_arch_lists_available() {
+        let e = OsacaError::UnknownArch {
+            requested: "m1max".into(),
+            available: vec!["hsw".into(), "skl".into(), "zen".into()],
+        };
+        let msg = e.to_string();
+        assert!(msg.contains("m1max"));
+        assert!(msg.contains("skl"));
+        assert!(msg.contains("zen"));
+    }
+}

@@ -1,0 +1,441 @@
+//! The public analysis-session layer — the crate's front door.
+//!
+//! The paper's workflow is one pipeline (parse kernel → resolve against
+//! a machine model → run throughput / critical-path / baseline
+//! analyses), and this module exposes it as one API instead of five
+//! disconnected entry points:
+//!
+//! ```ignore
+//! use osaca::api::{Engine, Passes};
+//!
+//! let engine = Engine::new();
+//! let report = engine.analyze(
+//!     &Engine::request("triad")
+//!         .arch("skl")
+//!         .source(src)
+//!         .passes(Passes::THROUGHPUT | Passes::CRITPATH | Passes::BASELINE)
+//!         .unroll(4),
+//! )?;
+//! println!("{}", report.to_text());
+//! ```
+//!
+//! * [`Engine`] owns the shared machine-model registry (`Arc`-cached
+//!   built-ins plus user-registered `.mdb` models) and the lazily
+//!   started batching [`Coordinator`];
+//! * [`AnalysisRequest`] is a builder: name, arch/machine,
+//!   source/kernel, composable [`Passes`], unroll, sim parameters;
+//! * [`Engine::analyze_batch`] maps a whole request slice directly
+//!   onto the solver's B=8 batch slots (`ceil(n/8)` artifact
+//!   executions — see `ServiceStats::batches`);
+//! * [`AnalysisReport`] carries one optional section per pass with
+//!   text/JSON rendering;
+//! * [`OsacaError`] makes failures matchable (unknown arch with the
+//!   available list, parse errors with line numbers, unresolved forms,
+//!   solver timeouts) instead of stringly-typed.
+//!
+//! The pre-existing free functions (`analyzer::analyze`,
+//! `baseline::predict_cpu`, `Coordinator::analyze_source`, ...) remain
+//! as thin compatibility shims.
+
+mod error;
+mod report;
+mod request;
+
+use std::collections::HashMap;
+use std::sync::atomic::Ordering;
+use std::sync::{Arc, OnceLock, RwLock};
+use std::time::Duration;
+
+use crate::analyzer::{analyze, critical_path};
+use crate::asm::{extract_kernel, Kernel};
+use crate::baseline::{encode, to_prediction};
+use crate::coordinator::{Coordinator, CoordinatorConfig, ServiceStats, SubmitError};
+use crate::mdb::{self, MachineModel};
+use crate::runtime::{EncodedKernel, MAX_UOPS};
+use crate::sim::simulate;
+
+pub use crate::coordinator::Backend;
+pub use error::OsacaError;
+pub use report::AnalysisReport;
+pub use request::{AnalysisRequest, Passes};
+
+/// Engine tunables (forwarded to the underlying [`Coordinator`]).
+#[derive(Debug, Clone, Copy)]
+pub struct EngineConfig {
+    pub backend: Backend,
+    /// Batching window of the single-request path.
+    pub batch_window: Duration,
+    /// Reply timeout for solver submissions.
+    pub reply_timeout: Duration,
+    /// Submission queue depth.
+    pub queue_depth: usize,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        let c = CoordinatorConfig::default();
+        EngineConfig {
+            backend: c.backend,
+            batch_window: c.window,
+            reply_timeout: c.reply_timeout,
+            queue_depth: c.queue_depth,
+        }
+    }
+}
+
+/// Fluent constructor for a configured [`Engine`].
+#[derive(Debug, Default)]
+pub struct EngineBuilder {
+    cfg: EngineConfig,
+}
+
+impl EngineBuilder {
+    /// Select the solver backend (default: artifact if present, CPU
+    /// reference otherwise).
+    pub fn backend(mut self, backend: Backend) -> Self {
+        self.cfg.backend = backend;
+        self
+    }
+
+    /// Set the single-path batching window.
+    pub fn batch_window(mut self, window: Duration) -> Self {
+        self.cfg.batch_window = window;
+        self
+    }
+
+    /// Set the solver reply timeout.
+    pub fn reply_timeout(mut self, timeout: Duration) -> Self {
+        self.cfg.reply_timeout = timeout;
+        self
+    }
+
+    /// Set the submission queue depth.
+    pub fn queue_depth(mut self, depth: usize) -> Self {
+        self.cfg.queue_depth = depth;
+        self
+    }
+
+    pub fn build(self) -> Engine {
+        Engine { config: self.cfg, models: RwLock::new(HashMap::new()), coord: OnceLock::new() }
+    }
+}
+
+/// The analysis engine: machine-model registry + batching service.
+///
+/// Cheap to share (`Arc<Engine>`); the solver thread starts lazily on
+/// the first request that needs the baseline pass.
+pub struct Engine {
+    config: EngineConfig,
+    /// User-registered models, keyed by lower-cased name. Built-ins
+    /// come from the process-wide `mdb` cache.
+    models: RwLock<HashMap<String, Arc<MachineModel>>>,
+    coord: OnceLock<Coordinator>,
+}
+
+impl Default for Engine {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Engine {
+    /// Engine with default configuration (auto backend).
+    pub fn new() -> Self {
+        Engine::builder().build()
+    }
+
+    /// Engine pinned to the pure-rust solver (deterministic; used by
+    /// tests and examples that must not depend on the artifact).
+    pub fn cpu_only() -> Self {
+        Engine::builder().backend(Backend::Cpu).build()
+    }
+
+    pub fn builder() -> EngineBuilder {
+        EngineBuilder::default()
+    }
+
+    /// Start building an [`AnalysisRequest`]:
+    /// `Engine::request("triad").arch("skl").source(src)`.
+    pub fn request(name: &str) -> AnalysisRequest {
+        AnalysisRequest::new(name)
+    }
+
+    /// The underlying batching coordinator (started on first use).
+    pub fn coordinator(&self) -> &Coordinator {
+        self.coord.get_or_init(|| {
+            Coordinator::with_config(CoordinatorConfig {
+                backend: self.config.backend,
+                window: self.config.batch_window,
+                reply_timeout: self.config.reply_timeout,
+                queue_depth: self.config.queue_depth,
+            })
+        })
+    }
+
+    /// Service statistics of the coordinator.
+    pub fn stats(&self) -> &ServiceStats {
+        &self.coordinator().stats
+    }
+
+    /// Shared handle to a machine model: user-registered models first,
+    /// then the cached built-ins (`skl`, `zen`, `hsw` + aliases).
+    pub fn machine(&self, arch: &str) -> Result<Arc<MachineModel>, OsacaError> {
+        let key = arch.to_ascii_lowercase();
+        if let Some(m) = self.models.read().expect("model registry").get(&key) {
+            return Ok(m.clone());
+        }
+        mdb::by_name_shared(&key).ok_or_else(|| OsacaError::UnknownArch {
+            requested: arch.to_string(),
+            available: self.available_arches(),
+        })
+    }
+
+    /// Every architecture [`Engine::machine`] can resolve.
+    pub fn available_arches(&self) -> Vec<String> {
+        let mut v: Vec<String> =
+            mdb::builtin_names().iter().map(|s| s.to_string()).collect();
+        v.extend(self.models.read().expect("model registry").keys().cloned());
+        v.sort();
+        v.dedup();
+        v
+    }
+
+    /// Parse `.mdb` text and register the model under its `arch` name.
+    pub fn register_model_text(&self, text: &str) -> Result<Arc<MachineModel>, OsacaError> {
+        let model = MachineModel::parse(text).map_err(|e| {
+            let message = format!("{e:#}");
+            OsacaError::MalformedModel { line: error::find_line(&message), message }
+        })?;
+        Ok(self.register_machine(model))
+    }
+
+    /// Register an in-memory model under its `name`.
+    pub fn register_machine(&self, model: MachineModel) -> Arc<MachineModel> {
+        let arc = Arc::new(model);
+        self.models
+            .write()
+            .expect("model registry")
+            .insert(arc.name.to_ascii_lowercase(), arc.clone());
+        arc
+    }
+
+    /// Resolve the request's machine + kernel and pre-validate that
+    /// every non-branch instruction resolves against the model, so
+    /// pass execution cannot fail with a stringly error.
+    fn prepare(&self, req: &AnalysisRequest) -> Result<(Arc<MachineModel>, Kernel), OsacaError> {
+        let machine = match &req.machine {
+            Some(m) => m.clone(),
+            None => self.machine(&req.arch)?,
+        };
+        let kernel = match (&req.kernel, &req.source) {
+            (Some(k), _) => k.clone(),
+            (None, Some(src)) => extract_kernel(&req.name, src)
+                .map_err(|e| error::parse_failure(&req.name, &e))?,
+            (None, None) => return Err(OsacaError::EmptyRequest { name: req.name.clone() }),
+        };
+        if !req.passes.is_empty() {
+            for ins in &kernel.instructions {
+                if ins.is_branch() {
+                    continue;
+                }
+                if machine.resolve(ins).is_err() {
+                    return Err(OsacaError::UnresolvedForm {
+                        form: ins.form().to_string(),
+                        line: ins.line,
+                        arch: machine.name.clone(),
+                    });
+                }
+            }
+        }
+        Ok((machine, kernel))
+    }
+
+    /// Run the in-process passes (everything except the baseline,
+    /// which goes through the batching solver).
+    fn run_inline(
+        &self,
+        req: &AnalysisRequest,
+        machine: &Arc<MachineModel>,
+        kernel: &Kernel,
+    ) -> Result<AnalysisReport, OsacaError> {
+        let mut report = AnalysisReport {
+            name: req.name.clone(),
+            arch: machine.name.clone(),
+            machine: machine.clone(),
+            unroll: req.unroll,
+            throughput: None,
+            critpath: None,
+            baseline: None,
+            simulation: None,
+        };
+        if req.passes.contains(Passes::THROUGHPUT) {
+            report.throughput = Some(analyze(kernel, machine).map_err(internal)?);
+        }
+        if req.passes.contains(Passes::CRITPATH) {
+            report.critpath = Some(critical_path(kernel, machine).map_err(internal)?);
+        }
+        if req.passes.contains(Passes::SIMULATE) {
+            report.simulation = Some(simulate(kernel, machine, req.sim).map_err(internal)?);
+        }
+        Ok(report)
+    }
+
+    fn encode_for_solver(
+        &self,
+        kernel: &Kernel,
+        machine: &MachineModel,
+    ) -> Result<EncodedKernel, OsacaError> {
+        encode(kernel, machine).map_err(|e| {
+            let message = format!("{e:#}");
+            // `EncodedKernel::push_uop` reports the µ-op budget as
+            // "kernel exceeds {MAX_UOPS} µ-ops"; other encode failures
+            // (e.g. port-width overflow of a user model) stay Internal.
+            if message.contains("µ-ops") && message.contains("exceeds") {
+                OsacaError::KernelTooLarge { max: MAX_UOPS, message }
+            } else {
+                OsacaError::Internal { message }
+            }
+        })
+    }
+
+    /// Run one request through its selected passes.
+    pub fn analyze(&self, req: &AnalysisRequest) -> Result<AnalysisReport, OsacaError> {
+        let (machine, kernel) = self.prepare(req)?;
+        let mut report = self.run_inline(req, &machine, &kernel)?;
+        if req.passes.contains(Passes::BASELINE) {
+            let enc = self.encode_for_solver(&kernel, &machine)?;
+            let coord = self.coordinator();
+            coord.stats.requests.fetch_add(1, Ordering::Relaxed);
+            let out = coord.solve_one(enc)?;
+            report.baseline = Some(to_prediction(&out));
+        }
+        Ok(report)
+    }
+
+    /// Run many requests, mapping every baseline solve of the batch
+    /// directly onto consecutive B=8 solver slots (`ceil(n/8)` artifact
+    /// executions instead of one windowed reply channel per request).
+    /// Per-request failures do not abort the rest of the batch.
+    pub fn analyze_batch(
+        &self,
+        reqs: &[AnalysisRequest],
+    ) -> Vec<Result<AnalysisReport, OsacaError>> {
+        let mut results: Vec<Result<AnalysisReport, OsacaError>> = Vec::with_capacity(reqs.len());
+        let mut baseline_idx: Vec<usize> = Vec::new();
+        let mut baseline_encs: Vec<EncodedKernel> = Vec::new();
+        for (i, req) in reqs.iter().enumerate() {
+            let outcome = self.prepare(req).and_then(|(machine, kernel)| {
+                let report = self.run_inline(req, &machine, &kernel)?;
+                let enc = if req.passes.contains(Passes::BASELINE) {
+                    Some(self.encode_for_solver(&kernel, &machine)?)
+                } else {
+                    None
+                };
+                Ok((report, enc))
+            });
+            match outcome {
+                Ok((report, enc)) => {
+                    if let Some(enc) = enc {
+                        baseline_idx.push(i);
+                        baseline_encs.push(enc);
+                    }
+                    results.push(Ok(report));
+                }
+                Err(e) => results.push(Err(e)),
+            }
+        }
+        if baseline_idx.is_empty() {
+            return results;
+        }
+        let coord = self.coordinator();
+        coord.stats.requests.fetch_add(baseline_idx.len() as u64, Ordering::Relaxed);
+        match coord.solve_batch(baseline_encs) {
+            Ok(outs) => {
+                for (i, out) in baseline_idx.into_iter().zip(outs.iter()) {
+                    if let Ok(report) = &mut results[i] {
+                        report.baseline = Some(to_prediction(out));
+                    }
+                }
+            }
+            Err(e) => {
+                for i in baseline_idx {
+                    results[i] = Err(match &e {
+                        SubmitError::Timeout { waited } => {
+                            OsacaError::SolverTimeout { waited: *waited }
+                        }
+                        SubmitError::Closed => OsacaError::ServiceUnavailable {
+                            message: "solver thread gone".into(),
+                        },
+                    });
+                }
+            }
+        }
+        results
+    }
+}
+
+fn internal(e: anyhow::Error) -> OsacaError {
+    OsacaError::Internal { message: format!("{e:#}") }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads;
+
+    #[test]
+    fn request_flows_through_all_analytic_passes() {
+        let engine = Engine::cpu_only();
+        let w = workloads::find("triad", "skl", "-O3").unwrap();
+        let req = Engine::request(&w.name())
+            .arch("skl")
+            .source(w.source)
+            .passes(Passes::ANALYTIC)
+            .unroll(w.unroll);
+        let report = engine.analyze(&req).unwrap();
+        let t = report.throughput.as_ref().unwrap();
+        assert!((t.cy_per_asm_iter - 2.0).abs() < 0.01);
+        assert!(report.critpath.is_some());
+        let b = report.baseline.as_ref().unwrap();
+        assert!(b.cy_per_asm_iter <= t.cy_per_asm_iter + 0.25);
+        assert!((report.predicted_cy_per_source_it().unwrap() - 0.5).abs() < 0.01);
+        let json = report.to_json();
+        assert!(json.contains("\"throughput\""));
+        assert!(json.contains("\"baseline\""));
+    }
+
+    #[test]
+    fn unknown_arch_error_lists_builtins() {
+        let engine = Engine::cpu_only();
+        let req = Engine::request("x").arch("m1max").source(".L1:\naddl $1, %eax\njne .L1\n");
+        match engine.analyze(&req) {
+            Err(OsacaError::UnknownArch { requested, available }) => {
+                assert_eq!(requested, "m1max");
+                assert!(available.contains(&"skl".to_string()));
+                assert!(available.contains(&"zen".to_string()));
+                assert!(available.contains(&"hsw".to_string()));
+            }
+            other => panic!("expected UnknownArch, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn empty_request_is_structured() {
+        let engine = Engine::cpu_only();
+        match engine.analyze(&Engine::request("void")) {
+            Err(OsacaError::EmptyRequest { name }) => assert_eq!(name, "void"),
+            other => panic!("expected EmptyRequest, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn registered_model_is_resolvable() {
+        let engine = Engine::cpu_only();
+        let text = "arch toy \"Toy\"\nports P0 LD\nloadports LD\n\
+                    entry vaddpd-xmm_xmm_xmm lat=2 tp=1 uops=c@1:P0\n";
+        let m = engine.register_model_text(text).unwrap();
+        assert_eq!(m.name, "toy");
+        assert!(engine.machine("toy").is_ok());
+        assert!(engine.available_arches().contains(&"toy".to_string()));
+    }
+}

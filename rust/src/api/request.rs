@@ -1,0 +1,184 @@
+//! Analysis requests: which kernel, which machine, which passes.
+
+use std::ops::{BitOr, BitOrAssign};
+use std::sync::Arc;
+
+use crate::asm::Kernel;
+use crate::mdb::MachineModel;
+use crate::sim::SimConfig;
+
+/// The composable analysis passes an [`super::Engine`] can run over a
+/// kernel. Combine with `|`:
+///
+/// ```ignore
+/// Passes::THROUGHPUT | Passes::CRITPATH | Passes::BASELINE
+/// ```
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Passes(u8);
+
+impl Passes {
+    /// No passes (the request only validates the kernel).
+    pub const NONE: Passes = Passes(0);
+    /// OSACA uniform-split port-occupancy throughput analysis.
+    pub const THROUGHPUT: Passes = Passes(1);
+    /// Critical-path / loop-carried latency bound.
+    pub const CRITPATH: Passes = Passes(1 << 1);
+    /// IACA-like balanced baseline through the batching solver.
+    pub const BASELINE: Passes = Passes(1 << 2);
+    /// Cycle-level simulation on the hardware-substrate model.
+    pub const SIMULATE: Passes = Passes(1 << 3);
+    /// The three analytic passes (default for new requests).
+    pub const ANALYTIC: Passes = Passes(0b0111);
+    /// Everything, including the (slower) simulation.
+    pub const ALL: Passes = Passes(0b1111);
+
+    /// Does `self` include every pass in `other`?
+    pub fn contains(self, other: Passes) -> bool {
+        self.0 & other.0 == other.0
+    }
+
+    /// Does `self` include at least one pass of `other`?
+    pub fn intersects(self, other: Passes) -> bool {
+        self.0 & other.0 != 0
+    }
+
+    pub fn is_empty(self) -> bool {
+        self.0 == 0
+    }
+}
+
+impl BitOr for Passes {
+    type Output = Passes;
+    fn bitor(self, rhs: Passes) -> Passes {
+        Passes(self.0 | rhs.0)
+    }
+}
+
+impl BitOrAssign for Passes {
+    fn bitor_assign(&mut self, rhs: Passes) {
+        self.0 |= rhs.0;
+    }
+}
+
+/// A buildable analysis request. Construct with
+/// [`super::Engine::request`] and chain setters:
+///
+/// ```ignore
+/// let req = Engine::request("triad")
+///     .arch("skl")
+///     .source(src)
+///     .passes(Passes::THROUGHPUT | Passes::CRITPATH | Passes::BASELINE)
+///     .unroll(4);
+/// let report = engine.analyze(&req)?;
+/// ```
+#[derive(Debug, Clone)]
+pub struct AnalysisRequest {
+    /// Request / kernel name (diagnostics and report headers).
+    pub name: String,
+    /// Architecture name resolved through the engine registry
+    /// (ignored when [`AnalysisRequest::machine`] supplies a model).
+    pub arch: String,
+    /// Explicit machine model, overriding `arch`.
+    pub machine: Option<Arc<MachineModel>>,
+    /// Assembly source text (parsed + kernel-extracted by the engine).
+    pub source: Option<String>,
+    /// Pre-extracted kernel, overriding `source`.
+    pub kernel: Option<Kernel>,
+    /// Which passes to run.
+    pub passes: Passes,
+    /// Assembly-loop unroll factor (cycles-per-source-iteration
+    /// conversions in the report).
+    pub unroll: usize,
+    /// Simulation parameters for [`Passes::SIMULATE`].
+    pub sim: SimConfig,
+}
+
+impl AnalysisRequest {
+    pub fn new(name: &str) -> Self {
+        AnalysisRequest {
+            name: name.to_string(),
+            arch: "skl".to_string(),
+            machine: None,
+            source: None,
+            kernel: None,
+            passes: Passes::ANALYTIC,
+            unroll: 1,
+            sim: SimConfig::default(),
+        }
+    }
+
+    /// Select a registered architecture by name (`skl`, `zen`, `hsw`,
+    /// or a model registered on the engine).
+    pub fn arch(mut self, arch: &str) -> Self {
+        self.arch = arch.to_string();
+        self
+    }
+
+    /// Use an explicit machine model (e.g. a user-supplied `.mdb`),
+    /// bypassing the registry.
+    pub fn machine(mut self, machine: Arc<MachineModel>) -> Self {
+        self.machine = Some(machine);
+        self
+    }
+
+    /// Provide assembly source text.
+    pub fn source(mut self, src: impl Into<String>) -> Self {
+        self.source = Some(src.into());
+        self
+    }
+
+    /// Provide an already-extracted kernel.
+    pub fn kernel(mut self, kernel: Kernel) -> Self {
+        self.kernel = Some(kernel);
+        self
+    }
+
+    /// Select the passes to run (default: [`Passes::ANALYTIC`]).
+    pub fn passes(mut self, passes: Passes) -> Self {
+        self.passes = passes;
+        self
+    }
+
+    /// Set the unroll factor (default 1).
+    pub fn unroll(mut self, unroll: usize) -> Self {
+        self.unroll = unroll.max(1);
+        self
+    }
+
+    /// Set simulation parameters for [`Passes::SIMULATE`].
+    pub fn sim_config(mut self, cfg: SimConfig) -> Self {
+        self.sim = cfg;
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_compose() {
+        let p = Passes::THROUGHPUT | Passes::BASELINE;
+        assert!(p.contains(Passes::THROUGHPUT));
+        assert!(!p.contains(Passes::CRITPATH));
+        assert!(p.intersects(Passes::BASELINE | Passes::SIMULATE));
+        assert!(Passes::ALL.contains(Passes::ANALYTIC));
+        assert!(Passes::NONE.is_empty());
+        let mut q = Passes::NONE;
+        q |= Passes::SIMULATE;
+        assert!(q.contains(Passes::SIMULATE));
+    }
+
+    #[test]
+    fn builder_chains() {
+        let req = AnalysisRequest::new("triad")
+            .arch("zen")
+            .source(".L1:\naddl $1, %eax\njne .L1\n")
+            .passes(Passes::THROUGHPUT)
+            .unroll(4);
+        assert_eq!(req.arch, "zen");
+        assert_eq!(req.unroll, 4);
+        assert!(req.source.is_some());
+        assert_eq!(req.passes, Passes::THROUGHPUT);
+    }
+}

@@ -65,6 +65,14 @@ pub fn encode(kernel: &Kernel, machine: &MachineModel) -> Result<EncodedKernel> 
             if hide_this && u.kind == crate::mdb::UopKind::Load {
                 continue;
             }
+            // Zen's store-data µ-op drains through the store queue, not
+            // an execution pipe (`store_data_free`); the shortcut-aware
+            // baseline mirrors the hardware and charges no port for it,
+            // while OSACA's analyzer keeps the paper's Table IV
+            // convention of counting it.
+            if machine.sim_store_data_free && u.kind == crate::mdb::UopKind::StoreData {
+                continue;
+            }
             let ports: Vec<usize> = u.ports.iter().collect();
             enc.push_uop(row, &ports, u.occupancy)?;
             row += 1;
@@ -73,7 +81,9 @@ pub fn encode(kernel: &Kernel, machine: &MachineModel) -> Result<EncodedKernel> 
     Ok(enc)
 }
 
-fn to_prediction(out: &SolveOut) -> BaselinePrediction {
+/// Convert one solver output into the baseline's prediction shape
+/// (shared with the coordinator and the `api` layer).
+pub fn to_prediction(out: &SolveOut) -> BaselinePrediction {
     BaselinePrediction {
         cy_per_asm_iter: out.tp_balanced,
         uniform_cy: out.tp_uniform,

@@ -2,19 +2,28 @@
 //!
 //! Batches concurrent analysis requests into the fixed-size slots of
 //! the AOT artifact (B = 8), the way a serving framework batches model
-//! requests: requests are queued to a dedicated solver thread, flushed
-//! either when a batch fills or when the oldest request exceeds the
-//! batching window, and executed in one PJRT call. The OSACA analysis
-//! and critical-path analysis run inline (they are pure rust and
-//! cheap); only the balanced-baseline solve goes through the batcher.
+//! requests. Two submission paths share one solver thread:
+//!
+//! * **single** ([`Coordinator::solve_one`]): the request is queued and
+//!   the solver thread coalesces it with whatever else arrives inside
+//!   the batching window — the latency-oriented interactive path;
+//! * **batch** ([`Coordinator::solve_batch`]): a whole vector of
+//!   encoded kernels is mapped directly onto consecutive B=8 artifact
+//!   slots with no window wait and one reply channel for the entire
+//!   submission — the throughput-oriented path behind
+//!   `api::Engine::analyze_batch`.
+//!
+//! Reply channels are pooled and reused across requests; the reply
+//! timeout and batching window are configurable through
+//! [`CoordinatorConfig`] (surfaced on `api::Engine::builder`).
 //!
 //! tokio is not available in this offline build, so the implementation
-//! uses std::thread + mpsc; the public API is synchronous with
-//! oneshot-style replies.
+//! uses std::thread + mpsc; the public API is synchronous.
 
+use std::fmt;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{self, Receiver, RecvTimeoutError, SyncSender};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -26,7 +35,8 @@ use crate::baseline::{encode, BaselinePrediction};
 use crate::mdb::{self, MachineModel};
 use crate::runtime::{solve_cpu, EncodedKernel, PortSolver, SolveOut, BATCH};
 
-/// A full analysis response.
+/// A full analysis response (legacy shim shape; the `api` layer returns
+/// the richer `AnalysisReport`).
 #[derive(Debug, Clone)]
 pub struct AnalysisResponse {
     pub osaca: Analysis,
@@ -34,7 +44,8 @@ pub struct AnalysisResponse {
     pub critpath: CritPathReport,
 }
 
-/// Service statistics (exposed for the perf pass and `serve` CLI).
+/// Service statistics (exposed for the perf pass, `serve` CLI, and the
+/// api layer's batch-splitting tests).
 #[derive(Debug, Default)]
 pub struct ServiceStats {
     pub requests: AtomicU64,
@@ -53,6 +64,62 @@ impl ServiceStats {
     }
 }
 
+/// Which solver implementation the worker thread constructs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Backend {
+    /// PJRT artifact if loadable, CPU reference otherwise.
+    Auto,
+    /// Pure-rust reference solver.
+    Cpu,
+}
+
+/// Tunables for the coordinator service.
+#[derive(Debug, Clone, Copy)]
+pub struct CoordinatorConfig {
+    pub backend: Backend,
+    /// Batching window: how long the solver thread waits for more
+    /// single-path requests before flushing a partial batch.
+    pub window: Duration,
+    /// How long a submitter waits for its reply before giving up.
+    pub reply_timeout: Duration,
+    /// Depth of the submission queue.
+    pub queue_depth: usize,
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> Self {
+        CoordinatorConfig {
+            backend: Backend::Auto,
+            window: Duration::from_micros(200),
+            reply_timeout: Duration::from_secs(30),
+            queue_depth: 1024,
+        }
+    }
+}
+
+/// Submission failure, structured so the api layer can map it onto
+/// `OsacaError` without string matching.
+#[derive(Debug)]
+pub enum SubmitError {
+    /// The solver did not reply within the configured timeout.
+    Timeout { waited: Duration },
+    /// The solver thread is gone (coordinator shut down).
+    Closed,
+}
+
+impl fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            SubmitError::Timeout { waited } => {
+                write!(f, "solver reply timeout after {waited:?}")
+            }
+            SubmitError::Closed => write!(f, "solver thread gone"),
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
+
 enum SolverBackend {
     /// AOT artifact through PJRT.
     Artifact(PortSolver),
@@ -66,52 +133,79 @@ struct Job {
     reply: SyncSender<SolveOut>,
 }
 
-/// The coordinator service. Cloneable handles submit requests; one
-/// solver thread owns the PJRT executable.
+struct BatchJob {
+    encs: Vec<EncodedKernel>,
+    reply: SyncSender<Vec<SolveOut>>,
+}
+
+enum Msg {
+    One(Job),
+    Many(BatchJob),
+}
+
+type SinglePool = Mutex<Vec<(SyncSender<SolveOut>, Receiver<SolveOut>)>>;
+type BatchPool = Mutex<Vec<(SyncSender<Vec<SolveOut>>, Receiver<Vec<SolveOut>>)>>;
+
+/// How many idle reply channels each pool retains.
+const POOL_CAP: usize = 64;
+
+/// The coordinator service. Shareable (`Arc<Coordinator>`) handles
+/// submit requests; one solver thread owns the PJRT executable.
 pub struct Coordinator {
-    tx: Option<SyncSender<Job>>,
+    tx: Option<SyncSender<Msg>>,
     worker: Option<JoinHandle<()>>,
     pub stats: Arc<ServiceStats>,
-    /// Batching window: how long the solver thread waits for more
-    /// requests before flushing a partial batch.
+    /// Batching window (see [`CoordinatorConfig::window`]).
     pub window: Duration,
+    /// Reply timeout (see [`CoordinatorConfig::reply_timeout`]).
+    pub reply_timeout: Duration,
+    single_pool: SinglePool,
+    batch_pool: BatchPool,
 }
 
 impl Coordinator {
-    /// Create a coordinator; the backend is constructed *inside* the
-    /// solver thread (the PJRT client is not `Send`).
-    fn new<F>(make_backend: F, window: Duration) -> Self
-    where
-        F: FnOnce() -> SolverBackend + Send + 'static,
-    {
-        let (tx, rx) = mpsc::sync_channel::<Job>(1024);
-        let stats = Arc::new(ServiceStats::default());
-        let wstats = stats.clone();
-        let worker = std::thread::Builder::new()
-            .name("osaca-solver".into())
-            .spawn(move || solver_loop(rx, make_backend(), wstats, window))
-            .expect("spawn solver thread");
-        Coordinator { tx: Some(tx), worker: Some(worker), stats, window }
-    }
-
-    /// Coordinator backed by the AOT artifact at the default location
-    /// (PJRT); errors surface on first use via the CPU fallback.
-    pub fn with_artifact() -> Self {
-        Self::new(
-            || match PortSolver::load_default() {
+    /// Create a coordinator with explicit tunables; the backend is
+    /// constructed *inside* the solver thread (the PJRT client is not
+    /// `Send`).
+    pub fn with_config(cfg: CoordinatorConfig) -> Self {
+        let make_backend = move || match cfg.backend {
+            Backend::Cpu => SolverBackend::Cpu,
+            Backend::Auto => match PortSolver::load_default() {
                 Ok(s) => SolverBackend::Artifact(s),
                 Err(e) => {
                     eprintln!("artifact unavailable ({e}); using cpu solver");
                     SolverBackend::Cpu
                 }
             },
-            Duration::from_micros(200),
-        )
+        };
+        let (tx, rx) = mpsc::sync_channel::<Msg>(cfg.queue_depth.max(1));
+        let stats = Arc::new(ServiceStats::default());
+        let wstats = stats.clone();
+        let window = cfg.window;
+        let worker = std::thread::Builder::new()
+            .name("osaca-solver".into())
+            .spawn(move || solver_loop(rx, make_backend(), wstats, window))
+            .expect("spawn solver thread");
+        Coordinator {
+            tx: Some(tx),
+            worker: Some(worker),
+            stats,
+            window,
+            reply_timeout: cfg.reply_timeout,
+            single_pool: Mutex::new(Vec::new()),
+            batch_pool: Mutex::new(Vec::new()),
+        }
+    }
+
+    /// Coordinator backed by the AOT artifact at the default location
+    /// (PJRT); errors surface at startup via the CPU fallback.
+    pub fn with_artifact() -> Self {
+        Self::with_config(CoordinatorConfig::default())
     }
 
     /// Coordinator backed by the pure-rust solver.
     pub fn cpu_only() -> Self {
-        Self::new(|| SolverBackend::Cpu, Duration::from_micros(200))
+        Self::with_config(CoordinatorConfig { backend: Backend::Cpu, ..Default::default() })
     }
 
     /// Artifact if present, CPU solver otherwise.
@@ -119,16 +213,86 @@ impl Coordinator {
         Self::with_artifact()
     }
 
+    /// Solve one encoded kernel through the windowed batching path.
+    pub fn solve_one(&self, enc: EncodedKernel) -> Result<SolveOut, SubmitError> {
+        let (rtx, rrx) = self
+            .single_pool
+            .lock()
+            .expect("single pool lock")
+            .pop()
+            .unwrap_or_else(|| mpsc::sync_channel(1));
+        self.tx
+            .as_ref()
+            .expect("coordinator running")
+            .send(Msg::One(Job { enc, reply: rtx.clone() }))
+            .map_err(|_| SubmitError::Closed)?;
+        match rrx.recv_timeout(self.reply_timeout) {
+            Ok(out) => {
+                // Channel is drained: safe to reuse.
+                let mut pool = self.single_pool.lock().expect("single pool lock");
+                if pool.len() < POOL_CAP {
+                    pool.push((rtx, rrx));
+                }
+                Ok(out)
+            }
+            Err(RecvTimeoutError::Timeout) => {
+                // The reply may still arrive later; the channel is
+                // stale and must not go back to the pool.
+                Err(SubmitError::Timeout { waited: self.reply_timeout })
+            }
+            Err(RecvTimeoutError::Disconnected) => Err(SubmitError::Closed),
+        }
+    }
+
+    /// Solve a whole submission in one message: the solver thread maps
+    /// the kernels directly onto consecutive B=8 artifact slots (no
+    /// batching-window wait, `ceil(n/8)` solver executions, one pooled
+    /// reply channel). Returns outputs in submission order.
+    pub fn solve_batch(&self, encs: Vec<EncodedKernel>) -> Result<Vec<SolveOut>, SubmitError> {
+        if encs.is_empty() {
+            return Ok(Vec::new());
+        }
+        let chunks = encs.len().div_ceil(BATCH) as u32;
+        let (rtx, rrx) = self
+            .batch_pool
+            .lock()
+            .expect("batch pool lock")
+            .pop()
+            .unwrap_or_else(|| mpsc::sync_channel(1));
+        self.tx
+            .as_ref()
+            .expect("coordinator running")
+            .send(Msg::Many(BatchJob { encs, reply: rtx.clone() }))
+            .map_err(|_| SubmitError::Closed)?;
+        let timeout = self.reply_timeout.saturating_mul(chunks);
+        match rrx.recv_timeout(timeout) {
+            Ok(outs) => {
+                let mut pool = self.batch_pool.lock().expect("batch pool lock");
+                if pool.len() < POOL_CAP {
+                    pool.push((rtx, rrx));
+                }
+                Ok(outs)
+            }
+            Err(RecvTimeoutError::Timeout) => Err(SubmitError::Timeout { waited: timeout }),
+            Err(RecvTimeoutError::Disconnected) => Err(SubmitError::Closed),
+        }
+    }
+
     /// Analyze assembly source for `arch`: OSACA throughput analysis +
     /// critical path inline, balanced baseline through the batcher.
+    ///
+    /// Legacy shim — prefer `api::Engine::analyze`, which returns
+    /// structured errors and composable passes.
     pub fn analyze_source(&self, name: &str, src: &str, arch: &str) -> Result<AnalysisResponse> {
         let machine =
-            mdb::by_name(arch).ok_or_else(|| anyhow!("unknown architecture `{arch}`"))?;
+            mdb::by_name_shared(arch).ok_or_else(|| anyhow!("unknown architecture `{arch}`"))?;
         let kernel = extract_kernel(name, src)?;
         self.analyze_kernel(&kernel, &machine)
     }
 
     /// Analyze an already-extracted kernel.
+    ///
+    /// Legacy shim — prefer `api::Engine::analyze`.
     pub fn analyze_kernel(
         &self,
         kernel: &Kernel,
@@ -138,20 +302,8 @@ impl Coordinator {
         let osaca = analyze(kernel, machine)?;
         let critpath = critical_path(kernel, machine)?;
         let enc = encode(kernel, machine)?;
-        let (rtx, rrx) = mpsc::sync_channel(1);
-        self.tx
-            .as_ref()
-            .expect("coordinator running")
-            .send(Job { enc, reply: rtx })
-            .map_err(|_| anyhow!("solver thread gone"))?;
-        let out = rrx
-            .recv_timeout(Duration::from_secs(30))
-            .map_err(|e| anyhow!("solver reply timeout: {e}"))?;
-        let baseline = BaselinePrediction {
-            cy_per_asm_iter: out.tp_balanced,
-            uniform_cy: out.tp_uniform,
-            port_pressure: out.press_balanced,
-        };
+        let out = self.solve_one(enc).map_err(|e| anyhow!("{e}"))?;
+        let baseline = crate::baseline::to_prediction(&out);
         Ok(AnalysisResponse { osaca, baseline, critpath })
     }
 }
@@ -165,50 +317,83 @@ impl Drop for Coordinator {
     }
 }
 
+fn run_backend(backend: &SolverBackend, encs: &[EncodedKernel]) -> Vec<SolveOut> {
+    match backend {
+        SolverBackend::Artifact(s) => match s.solve(encs) {
+            Ok(o) => o,
+            Err(e) => {
+                eprintln!("artifact solve failed ({e}); falling back to cpu");
+                solve_cpu(encs, 32)
+            }
+        },
+        SolverBackend::Cpu => solve_cpu(encs, 32),
+    }
+}
+
 fn solver_loop(
-    rx: Receiver<Job>,
+    rx: Receiver<Msg>,
     backend: SolverBackend,
     stats: Arc<ServiceStats>,
     window: Duration,
 ) {
+    // A batch message that arrived while a single-path window was being
+    // filled; handled before blocking on the queue again.
+    let mut pending: Option<Msg> = None;
     loop {
-        // Block for the first job of a batch.
-        let first = match rx.recv() {
-            Ok(j) => j,
-            Err(_) => return, // all senders dropped
-        };
-        let mut jobs = vec![first];
-        let deadline = Instant::now() + window;
-        while jobs.len() < BATCH {
-            let now = Instant::now();
-            if now >= deadline {
-                break;
-            }
-            match rx.recv_timeout(deadline - now) {
-                Ok(j) => jobs.push(j),
-                Err(RecvTimeoutError::Timeout) => break,
-                Err(RecvTimeoutError::Disconnected) => break,
-            }
-        }
-        let encs: Vec<EncodedKernel> = jobs.iter().map(|j| j.enc.clone()).collect();
-        let t0 = Instant::now();
-        let outs = match &backend {
-            SolverBackend::Artifact(s) => match s.solve(&encs) {
-                Ok(o) => o,
-                Err(e) => {
-                    eprintln!("artifact solve failed ({e}); falling back to cpu");
-                    solve_cpu(&encs, 32)
-                }
+        let first = match pending.take() {
+            Some(m) => m,
+            None => match rx.recv() {
+                Ok(m) => m,
+                Err(_) => return, // all senders dropped
             },
-            SolverBackend::Cpu => solve_cpu(&encs, 32),
         };
-        stats.batches.fetch_add(1, Ordering::Relaxed);
-        stats.batched_kernels.fetch_add(jobs.len() as u64, Ordering::Relaxed);
-        stats
-            .solve_micros
-            .fetch_add(t0.elapsed().as_micros() as u64, Ordering::Relaxed);
-        for (job, out) in jobs.into_iter().zip(outs.into_iter()) {
-            let _ = job.reply.send(out);
+        match first {
+            Msg::Many(bj) => {
+                // Direct slot mapping: ceil(n/8) solver executions,
+                // no window wait.
+                let mut outs = Vec::with_capacity(bj.encs.len());
+                for chunk in bj.encs.chunks(BATCH) {
+                    let t0 = Instant::now();
+                    let res = run_backend(&backend, chunk);
+                    stats.batches.fetch_add(1, Ordering::Relaxed);
+                    stats.batched_kernels.fetch_add(chunk.len() as u64, Ordering::Relaxed);
+                    stats
+                        .solve_micros
+                        .fetch_add(t0.elapsed().as_micros() as u64, Ordering::Relaxed);
+                    outs.extend(res);
+                }
+                let _ = bj.reply.send(outs);
+            }
+            Msg::One(first_job) => {
+                let mut jobs = vec![first_job];
+                let deadline = Instant::now() + window;
+                while jobs.len() < BATCH {
+                    let now = Instant::now();
+                    if now >= deadline {
+                        break;
+                    }
+                    match rx.recv_timeout(deadline - now) {
+                        Ok(Msg::One(j)) => jobs.push(j),
+                        Ok(m @ Msg::Many(_)) => {
+                            pending = Some(m);
+                            break;
+                        }
+                        Err(RecvTimeoutError::Timeout) => break,
+                        Err(RecvTimeoutError::Disconnected) => break,
+                    }
+                }
+                let encs: Vec<EncodedKernel> = jobs.iter().map(|j| j.enc.clone()).collect();
+                let t0 = Instant::now();
+                let outs = run_backend(&backend, &encs);
+                stats.batches.fetch_add(1, Ordering::Relaxed);
+                stats.batched_kernels.fetch_add(jobs.len() as u64, Ordering::Relaxed);
+                stats
+                    .solve_micros
+                    .fetch_add(t0.elapsed().as_micros() as u64, Ordering::Relaxed);
+                for (job, out) in jobs.into_iter().zip(outs.into_iter()) {
+                    let _ = job.reply.send(out);
+                }
+            }
         }
     }
 }
@@ -253,5 +438,51 @@ mod tests {
         // Batching must have coalesced at least some requests.
         assert!(c.stats.batches.load(Ordering::Relaxed) <= 16);
         assert!(c.stats.avg_batch_size() >= 1.0);
+    }
+
+    #[test]
+    fn batch_submission_maps_onto_solver_slots() {
+        let c = Coordinator::cpu_only();
+        let w = workloads::find("triad", "skl", "-O3").unwrap();
+        let machine = mdb::skylake();
+        let enc = encode(&w.kernel(), &machine).unwrap();
+        let outs = c.solve_batch(vec![enc; 20]).unwrap();
+        assert_eq!(outs.len(), 20);
+        // 20 kernels -> ceil(20/8) = 3 solver executions.
+        assert_eq!(c.stats.batches.load(Ordering::Relaxed), 3);
+        assert_eq!(c.stats.batched_kernels.load(Ordering::Relaxed), 20);
+        let first = outs[0].tp_balanced;
+        assert!(outs.iter().all(|o| (o.tp_balanced - first).abs() < 1e-6));
+    }
+
+    #[test]
+    fn reply_channels_are_pooled() {
+        let c = Coordinator::cpu_only();
+        let w = workloads::find("triad", "skl", "-O3").unwrap();
+        let machine = mdb::skylake();
+        let enc = encode(&w.kernel(), &machine).unwrap();
+        for _ in 0..4 {
+            c.solve_one(enc.clone()).unwrap();
+        }
+        assert_eq!(c.single_pool.lock().unwrap().len(), 1);
+        for _ in 0..3 {
+            c.solve_batch(vec![enc.clone(); 2]).unwrap();
+        }
+        assert_eq!(c.batch_pool.lock().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn reply_timeout_is_configurable() {
+        let c = Coordinator::with_config(CoordinatorConfig {
+            backend: Backend::Cpu,
+            reply_timeout: Duration::from_millis(250),
+            ..Default::default()
+        });
+        assert_eq!(c.reply_timeout, Duration::from_millis(250));
+        // Normal requests still complete well within it.
+        let w = workloads::find("pi", "skl", "-O3").unwrap();
+        let machine = mdb::skylake();
+        let enc = encode(&w.kernel(), &machine).unwrap();
+        assert!(c.solve_one(enc).is_ok());
     }
 }

@@ -13,11 +13,16 @@
 //! * **L2/L1 (python/, build-time only)** — the batched port-pressure
 //!   solver (uniform + iteratively balanced) as a JAX model wrapping a
 //!   Pallas kernel, AOT-lowered to `artifacts/port_solver.hlo.txt` and
-//!   executed from rust via PJRT (`runtime`).
+//!   executed from rust via PJRT (`runtime`, behind the `pjrt` feature).
+//!
+//! **Entry point:** [`api::Engine`] is the public front door — request
+//! builder, composable passes, batch submission, structured errors. The
+//! per-module free functions remain as compatibility shims.
 //!
 //! See DESIGN.md for the full system inventory and experiment index.
 
 pub mod analyzer;
+pub mod api;
 pub mod asm;
 pub mod baseline;
 pub mod benchlib;

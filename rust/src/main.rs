@@ -1,7 +1,11 @@
 //! osaca CLI — the L3 coordinator binary.
 //!
+//! Every subcommand goes through the `osaca::api::Engine` session
+//! layer: one machine-model registry, one batching coordinator, one
+//! request/report shape, structured errors.
+//!
 //! Subcommands:
-//!   analyze <file.s> --arch skl|zen [--baseline] [--critpath]
+//!   analyze <file.s> --arch skl|zen|hsw [--baseline] [--critpath] [--json]
 //!   simulate <file.s> --arch skl|zen [--iterations N]
 //!   ibench --instr <form> --arch skl|zen [--conflict <form>]
 //!   build-model --instr <form> --arch skl|zen
@@ -9,28 +13,29 @@
 //!   compare <file.s> --arch skl|zen [--unroll N]
 //!   tables [--table1] [--table3] [--table5] [--all]
 //!   figures
-//!   serve [--requests N]   (demo load through the batching coordinator)
+//!   serve [--requests N]   (batch submission through the coordinator)
+//!   list-workloads
 //!
 //! Hand-rolled argument parsing: clap is not vendored in this offline
 //! build environment.
 
 use std::collections::HashMap;
 use std::process::ExitCode;
+use std::sync::Arc;
 
 use anyhow::{anyhow, bail, Context, Result};
 
-use osaca::analyzer::{analyze, critical_path};
+use osaca::api::{Engine, Passes};
 use osaca::benchlib::print_table;
 use osaca::builder::{default_probes, infer_entry, validate_model};
-use osaca::coordinator::Coordinator;
 use osaca::ibench::{run_conflict, run_sweep, BenchSpec};
 use osaca::isa::InstructionForm;
-use osaca::mdb;
+use osaca::mdb::MachineModel;
 use osaca::report::experiments::{
     render_table1, render_table3, render_table5, table1, table3, table5,
 };
-use osaca::report::{render_occupancy, render_port_diagram};
-use osaca::sim::{simulate, SimConfig};
+use osaca::report::render_port_diagram;
+use osaca::sim::SimConfig;
 use osaca::{asm, workloads};
 
 fn main() -> ExitCode {
@@ -67,9 +72,9 @@ fn parse_opts(args: &[String]) -> (Vec<&str>, HashMap<&str, &str>) {
     (pos, opts)
 }
 
-fn machine_opt(opts: &HashMap<&str, &str>) -> Result<mdb::MachineModel> {
+fn machine_opt(engine: &Engine, opts: &HashMap<&str, &str>) -> Result<Arc<MachineModel>> {
     let arch = opts.get("arch").copied().unwrap_or("skl");
-    mdb::by_name(arch).ok_or_else(|| anyhow!("unknown architecture `{arch}` (skl|zen)"))
+    engine.machine(arch).map_err(|e| anyhow!("{e}"))
 }
 
 fn load_kernel(path: &str) -> Result<asm::Kernel> {
@@ -84,56 +89,73 @@ fn run(args: &[String]) -> Result<()> {
     };
     let rest = &args[1..];
     let (pos, opts) = parse_opts(rest);
+    let engine = Engine::new();
     match cmd.as_str() {
         "analyze" => {
-            let path = pos.first().ok_or_else(|| anyhow!("usage: analyze <file.s> --arch skl|zen [--model file.mdb] [--learn]"))?;
+            let path = pos.first().ok_or_else(|| {
+                anyhow!("usage: analyze <file.s> --arch skl|zen [--model file.mdb] [--learn] [--baseline] [--critpath] [--json]")
+            })?;
             // --model loads a (possibly partial) user model file; --arch
             // still selects the hardware substrate for --learn.
-            let hardware = machine_opt(&opts)?;
-            let mut machine = match opts.get("model") {
-                Some(p) => osaca::mdb::MachineModel::parse(
-                    &std::fs::read_to_string(p).with_context(|| format!("reading {p}"))?,
-                )?,
+            let hardware = machine_opt(&engine, &opts)?;
+            let machine: Arc<MachineModel> = match opts.get("model") {
+                Some(p) => engine
+                    .register_model_text(
+                        &std::fs::read_to_string(p).with_context(|| format!("reading {p}"))?,
+                    )
+                    .map_err(|e| anyhow!("{e}"))?,
                 None => hardware.clone(),
             };
             let kernel = load_kernel(path)?;
-            if opts.contains_key("learn") {
+            let machine = if opts.contains_key("learn") {
                 // §III: benchmark unknown forms automatically on the
-                // hardware substrate.
-                let learned = osaca::builder::learn_missing(&kernel, &mut machine, &hardware)?;
+                // hardware substrate and register the extended model.
+                let mut learned_model = machine.as_ref().clone();
+                let learned =
+                    osaca::builder::learn_missing(&kernel, &mut learned_model, &hardware)?;
                 for inf in &learned {
                     println!(
                         "learned {}: lat {:.1} cy, rTP {:.2} cy/instr (probes: {:?})",
-                        inf.entry.form, inf.measured_latency, inf.measured_rtp,
+                        inf.entry.form,
+                        inf.measured_latency,
+                        inf.measured_rtp,
                         inf.conflicting_probes
                     );
                 }
-            }
-            let a = analyze(&kernel, &machine)?;
-            println!("{}", render_occupancy(&a, &machine));
+                engine.register_machine(learned_model)
+            } else {
+                machine
+            };
+            let mut passes = Passes::THROUGHPUT;
             if opts.contains_key("critpath") {
-                let cp = critical_path(&kernel, &machine)?;
-                println!(
-                    "Critical path: {:.2} cy intra-iteration, {:.2} cy/it loop-carried bound",
-                    cp.intra_iteration, cp.carried_per_iteration
-                );
+                passes |= Passes::CRITPATH;
             }
             if opts.contains_key("baseline") {
-                let coord = Coordinator::auto();
-                let r = coord.analyze_kernel(&kernel, &machine)?;
-                println!(
-                    "Balanced (IACA-like) baseline: {:.2} cy / assembly iteration",
-                    r.baseline.cy_per_asm_iter
-                );
+                passes |= Passes::BASELINE;
+            }
+            let req =
+                Engine::request(path).machine(machine).kernel(kernel).passes(passes);
+            let report = engine.analyze(&req).map_err(|e| anyhow!("{e}"))?;
+            if opts.contains_key("json") {
+                println!("{}", report.to_json());
+            } else {
+                print!("{}", report.to_text());
             }
         }
         "simulate" => {
-            let path = pos.first().ok_or_else(|| anyhow!("usage: simulate <file.s> --arch skl|zen"))?;
-            let machine = machine_opt(&opts)?;
+            let path = pos
+                .first()
+                .ok_or_else(|| anyhow!("usage: simulate <file.s> --arch skl|zen"))?;
+            let machine = machine_opt(&engine, &opts)?;
             let iterations: usize =
                 opts.get("iterations").map(|v| v.parse()).transpose()?.unwrap_or(1000);
-            let kernel = load_kernel(path)?;
-            let m = simulate(&kernel, &machine, SimConfig { iterations, warmup: iterations / 5 })?;
+            let req = Engine::request(path)
+                .machine(machine.clone())
+                .kernel(load_kernel(path)?)
+                .passes(Passes::SIMULATE)
+                .sim_config(SimConfig { iterations, warmup: iterations / 5 });
+            let report = engine.analyze(&req).map_err(|e| anyhow!("{e}"))?;
+            let m = report.simulation.as_ref().expect("simulation pass ran");
             println!(
                 "{}: {:.3} cy / assembly iteration over {} measured iterations",
                 machine.name, m.cycles_per_iteration, m.iterations
@@ -156,7 +178,7 @@ fn run(args: &[String]) -> Result<()> {
             println!("port busy cy/iter: {}", busy.join(" "));
         }
         "ibench" => {
-            let machine = machine_opt(&opts)?;
+            let machine = machine_opt(&engine, &opts)?;
             let instr = opts
                 .get("instr")
                 .ok_or_else(|| anyhow!("usage: ibench --instr vaddpd-xmm_xmm_xmm --arch skl"))?;
@@ -180,7 +202,7 @@ fn run(args: &[String]) -> Result<()> {
             }
         }
         "build-model" => {
-            let machine = machine_opt(&opts)?;
+            let machine = machine_opt(&engine, &opts)?;
             let instr = opts
                 .get("instr")
                 .ok_or_else(|| anyhow!("usage: build-model --instr <form> --arch skl"))?;
@@ -192,7 +214,7 @@ fn run(args: &[String]) -> Result<()> {
                 inf.measured_latency, inf.measured_rtp
             );
             println!("conflicting probes: {:?}", inf.conflicting_probes);
-            let mut m2 = machine.clone();
+            let mut m2 = machine.as_ref().clone();
             m2.entries.clear();
             m2.insert(inf.entry.clone());
             let line = m2
@@ -204,7 +226,7 @@ fn run(args: &[String]) -> Result<()> {
             println!("database entry: {line}");
         }
         "validate-model" => {
-            let machine = machine_opt(&opts)?;
+            let machine = machine_opt(&engine, &opts)?;
             let forms: Vec<InstructionForm> = [
                 "vaddpd-xmm_xmm_xmm",
                 "vmulpd-xmm_xmm_xmm",
@@ -239,31 +261,38 @@ fn run(args: &[String]) -> Result<()> {
             );
         }
         "compare" => {
-            let path = pos.first().ok_or_else(|| anyhow!("usage: compare <file.s> --arch skl|zen"))?;
-            let machine = machine_opt(&opts)?;
+            let path =
+                pos.first().ok_or_else(|| anyhow!("usage: compare <file.s> --arch skl|zen"))?;
+            let machine = machine_opt(&engine, &opts)?;
             let unroll: usize = opts.get("unroll").map(|v| v.parse()).transpose()?.unwrap_or(1);
-            let kernel = load_kernel(path)?;
-            let coord = Coordinator::auto();
-            let r = coord.analyze_kernel(&kernel, &machine)?;
-            let m = simulate(&kernel, &machine, SimConfig::default())?;
+            let req = Engine::request(path)
+                .machine(machine.clone())
+                .kernel(load_kernel(path)?)
+                .passes(Passes::ALL)
+                .unroll(unroll);
+            let r = engine.analyze(&req).map_err(|e| anyhow!("{e}"))?;
+            let osaca = r.throughput.as_ref().expect("throughput pass");
+            let baseline = r.baseline.as_ref().expect("baseline pass");
+            let critpath = r.critpath.as_ref().expect("critpath pass");
+            let m = r.simulation.as_ref().expect("simulate pass");
             print_table(
-                &format!("{} on {}", kernel.name, machine.name),
+                &format!("{path} on {}", machine.name),
                 &["predictor", "cy/asm-iter", "cy/src-it"],
                 &[
                     vec![
                         "OSACA (uniform ports)".into(),
-                        format!("{:.2}", r.osaca.cy_per_asm_iter),
-                        format!("{:.2}", r.osaca.cy_per_asm_iter / unroll as f32),
+                        format!("{:.2}", osaca.cy_per_asm_iter),
+                        format!("{:.2}", osaca.cy_per_asm_iter / unroll as f32),
                     ],
                     vec![
-                        "balanced baseline (PJRT artifact)".into(),
-                        format!("{:.2}", r.baseline.cy_per_asm_iter),
-                        format!("{:.2}", r.baseline.cy_per_asm_iter / unroll as f32),
+                        "balanced baseline (batched solver)".into(),
+                        format!("{:.2}", baseline.cy_per_asm_iter),
+                        format!("{:.2}", baseline.cy_per_asm_iter / unroll as f32),
                     ],
                     vec![
                         "critical-path bound".into(),
-                        format!("{:.2}", r.critpath.carried_per_iteration),
-                        format!("{:.2}", r.critpath.carried_per_iteration / unroll as f32),
+                        format!("{:.2}", critpath.carried_per_iteration),
+                        format!("{:.2}", critpath.carried_per_iteration / unroll as f32),
                     ],
                     vec![
                         "simulated hardware".into(),
@@ -274,11 +303,11 @@ fn run(args: &[String]) -> Result<()> {
             );
         }
         "tables" => {
-            let coord = Coordinator::auto();
+            let coord = engine.coordinator();
             let all = opts.contains_key("all") || opts.is_empty();
             let cfg = SimConfig::default();
             if all || opts.contains_key("table1") {
-                let rows = table1(&coord)?;
+                let rows = table1(coord)?;
                 print_table(
                     "Table I: triad throughput analyses (cy per assembly iteration)",
                     &["compiled for", "flag", "unroll", "OSACA Zen", "OSACA SKL", "IACA-like SKL"],
@@ -286,7 +315,7 @@ fn run(args: &[String]) -> Result<()> {
                 );
             }
             if all || opts.contains_key("table3") {
-                let rows = table3(&coord, cfg)?;
+                let rows = table3(coord, cfg)?;
                 print_table(
                     "Table III: triad measured (simulator @1.8GHz) vs predictions",
                     &[
@@ -304,7 +333,7 @@ fn run(args: &[String]) -> Result<()> {
                 );
             }
             if all || opts.contains_key("table5") {
-                let rows = table5(&coord, cfg)?;
+                let rows = table5(coord, cfg)?;
                 print_table(
                     "Table V: pi benchmark predictions vs measurement",
                     &["arch", "flag", "IACA-like", "OSACA", "measured cy/it", "stall cy"],
@@ -314,13 +343,13 @@ fn run(args: &[String]) -> Result<()> {
         }
         "figures" => {
             for arch in ["skl", "zen"] {
-                let m = mdb::by_name(arch).unwrap();
+                let m = engine.machine(arch).map_err(|e| anyhow!("{e}"))?;
                 println!("{}", render_port_diagram(&m));
             }
         }
         "serve" => {
             let n: usize = opts.get("requests").map(|v| v.parse()).transpose()?.unwrap_or(64);
-            serve_demo(n)?;
+            serve_demo(&engine, n)?;
         }
         "list-workloads" => {
             for w in workloads::all() {
@@ -341,29 +370,30 @@ fn run(args: &[String]) -> Result<()> {
     Ok(())
 }
 
-/// Drive the batching coordinator with concurrent requests and report
-/// service statistics (the serving-framework face of the repo).
-fn serve_demo(n: usize) -> Result<()> {
-    use std::sync::Arc;
-    let coord = Arc::new(Coordinator::auto());
-    let t0 = std::time::Instant::now();
-    let mut handles = Vec::new();
-    for i in 0..n {
-        let coord = coord.clone();
-        handles.push(std::thread::spawn(move || -> Result<f32> {
-            let ws = workloads::all();
+/// Drive the coordinator's true batch path with a request mix and
+/// report service statistics (the serving-framework face of the repo).
+fn serve_demo(engine: &Engine, n: usize) -> Result<()> {
+    let ws = workloads::all();
+    let reqs: Vec<_> = (0..n)
+        .map(|i| {
             let w = ws[i % ws.len()];
             let arch = if i % 2 == 0 { "skl" } else { "zen" };
-            let machine = mdb::by_name(arch).unwrap();
-            let r = coord.analyze_kernel(&w.kernel(), &machine)?;
-            Ok(r.baseline.cy_per_asm_iter)
-        }));
-    }
-    for h in handles {
-        h.join().map_err(|_| anyhow!("worker panicked"))??;
-    }
+            Engine::request(&w.name())
+                .arch(arch)
+                .source(w.source)
+                .passes(Passes::ANALYTIC)
+                .unroll(w.unroll)
+        })
+        .collect();
+    let t0 = std::time::Instant::now();
+    let results = engine.analyze_batch(&reqs);
     let dt = t0.elapsed();
-    let stats = &coord.stats;
+    for r in &results {
+        if let Err(e) = r {
+            bail!("batch request failed: {e}");
+        }
+    }
+    let stats = engine.stats();
     println!(
         "served {n} analysis requests in {dt:?} ({:.0} req/s)",
         n as f64 / dt.as_secs_f64()
@@ -384,7 +414,7 @@ fn print_usage() {
 usage: osaca <command> [options]
 
 commands:
-  analyze <file.s> --arch skl|zen [--baseline] [--critpath]
+  analyze <file.s> --arch skl|zen|hsw [--baseline] [--critpath] [--json]
   simulate <file.s> --arch skl|zen [--iterations N]
   ibench --instr <form> --arch skl|zen [--conflict <form>]
   build-model --instr <form> --arch skl|zen

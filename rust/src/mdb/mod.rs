@@ -7,43 +7,103 @@
 //! scheduler sizes, load latency, store-forward latency, ...).
 //!
 //! Models ship as `.mdb` text files embedded in the binary
-//! (`data/skl.mdb`, `data/zen.mdb`) and can be written/extended by the
-//! model builder (paper §II-C workflow).
+//! (`data/skl.mdb`, `data/zen.mdb`, `data/hsw.mdb`) and can be
+//! written/extended by the model builder (paper §II-C workflow).
+//!
+//! Built-in models are parsed **once** per process and shared as
+//! `Arc<MachineModel>` (the registry behind `osaca::api::Engine`); the
+//! by-value accessors below are compatibility shims that clone the
+//! cached model instead of re-parsing the embedded text.
 
 pub mod entry;
 pub mod format;
 pub mod machine;
 pub mod port;
 
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, OnceLock};
+
 pub use entry::{FormEntry, Provenance, ResolvedUops, Uop, UopKind};
 pub use machine::MachineModel;
 pub use port::PortMask;
 
-/// Built-in Intel Skylake model (Fig. 2), compiled from the paper's
-/// tables and Agner Fog-style documentation values.
-pub fn skylake() -> MachineModel {
-    MachineModel::parse(include_str!("data/skl.mdb")).expect("embedded skl.mdb is valid")
+/// Number of times an embedded `.mdb` text has actually been parsed.
+/// At most one per built-in model per process — asserted by tests and
+/// the hotpath bench so a regression back to parse-per-call is caught.
+static BUILTIN_PARSES: AtomicUsize = AtomicUsize::new(0);
+
+/// How many embedded-model parses have happened so far (diagnostics).
+pub fn builtin_parse_count() -> usize {
+    BUILTIN_PARSES.load(Ordering::Relaxed)
 }
 
-/// Built-in AMD Zen model (Fig. 3).
+fn parse_builtin(text: &str, which: &str) -> Arc<MachineModel> {
+    BUILTIN_PARSES.fetch_add(1, Ordering::Relaxed);
+    match MachineModel::parse(text) {
+        Ok(m) => Arc::new(m),
+        Err(e) => panic!("embedded {which}.mdb is valid: {e:#}"),
+    }
+}
+
+fn skl_shared() -> &'static Arc<MachineModel> {
+    static M: OnceLock<Arc<MachineModel>> = OnceLock::new();
+    M.get_or_init(|| parse_builtin(include_str!("data/skl.mdb"), "skl"))
+}
+
+fn zen_shared() -> &'static Arc<MachineModel> {
+    static M: OnceLock<Arc<MachineModel>> = OnceLock::new();
+    M.get_or_init(|| parse_builtin(include_str!("data/zen.mdb"), "zen"))
+}
+
+fn hsw_shared() -> &'static Arc<MachineModel> {
+    static M: OnceLock<Arc<MachineModel>> = OnceLock::new();
+    M.get_or_init(|| parse_builtin(include_str!("data/hsw.mdb"), "hsw"))
+}
+
+/// Canonical CLI names of the built-in models.
+pub fn builtin_names() -> &'static [&'static str] {
+    &["hsw", "skl", "zen"]
+}
+
+/// Shared handle to a built-in model by CLI name (`skl`, `zen`, `hsw`
+/// plus the long aliases). This is the lookup the `api::Engine`
+/// registry uses: no parsing, no copying.
+pub fn by_name_shared(name: &str) -> Option<Arc<MachineModel>> {
+    match name.to_ascii_lowercase().as_str() {
+        "skl" | "skylake" => Some(skl_shared().clone()),
+        "zen" | "znver1" => Some(zen_shared().clone()),
+        "hsw" | "haswell" => Some(hsw_shared().clone()),
+        _ => None,
+    }
+}
+
+/// Built-in Intel Skylake model (Fig. 2), compiled from the paper's
+/// tables and Agner Fog-style documentation values.
+///
+/// Compatibility shim: clones the cached model. Prefer
+/// [`by_name_shared`] (or `api::Engine::machine`) for an `Arc` handle.
+pub fn skylake() -> MachineModel {
+    skl_shared().as_ref().clone()
+}
+
+/// Built-in AMD Zen model (Fig. 3). Compatibility shim; see [`skylake`].
 pub fn zen() -> MachineModel {
-    MachineModel::parse(include_str!("data/zen.mdb")).expect("embedded zen.mdb is valid")
+    zen_shared().as_ref().clone()
 }
 
 /// Built-in Intel Haswell model — implements the paper's §IV-B
 /// future-work item: addressing-mode-aware store AGUs (port 7).
+/// Compatibility shim; see [`skylake`].
 pub fn haswell() -> MachineModel {
-    MachineModel::parse(include_str!("data/hsw.mdb")).expect("embedded hsw.mdb is valid")
+    hsw_shared().as_ref().clone()
 }
 
 /// Look up a built-in model by CLI name (`skl`, `zen`, `hsw`).
+///
+/// Compatibility shim returning an owned clone; prefer
+/// [`by_name_shared`].
 pub fn by_name(name: &str) -> Option<MachineModel> {
-    match name.to_ascii_lowercase().as_str() {
-        "skl" | "skylake" => Some(skylake()),
-        "zen" | "znver1" => Some(zen()),
-        "hsw" | "haswell" => Some(haswell()),
-        _ => None,
-    }
+    by_name_shared(name).map(|m| m.as_ref().clone())
 }
 
 #[cfg(test)]
@@ -69,6 +129,26 @@ mod tests {
         assert!(by_name("zen").is_some());
         assert!(by_name("hsw").is_some());
         assert!(by_name("cascadelake").is_none());
+    }
+
+    #[test]
+    fn builtin_models_are_cached_not_reparsed() {
+        // Warm all three caches, then hammer every accessor: the parse
+        // counter must not move.
+        let a = by_name_shared("skl").unwrap();
+        let _ = by_name_shared("zen").unwrap();
+        let _ = by_name_shared("hsw").unwrap();
+        let parses = builtin_parse_count();
+        assert!(parses >= 3);
+        for _ in 0..100 {
+            let b = by_name_shared("skylake").unwrap();
+            assert!(Arc::ptr_eq(&a, &b));
+            let _ = skylake();
+            let _ = zen();
+            let _ = haswell();
+            let _ = by_name("zen");
+        }
+        assert_eq!(builtin_parse_count(), parses);
     }
 
     #[test]

@@ -5,10 +5,15 @@
 //! that file for why text, not a serialized proto). This module loads
 //! it, compiles it on the PJRT CPU client, and exposes a typed batch
 //! interface. Python never runs on this path.
+//!
+//! The PJRT execution path needs the `xla` bindings, which are not
+//! vendored in the offline build environment — it is gated behind the
+//! `pjrt` cargo feature. Without the feature, [`PortSolver`] and
+//! [`CritSolver`] are stubs whose loaders report the artifact as
+//! unavailable, and every caller falls back to the pure-rust reference
+//! solver ([`solve_cpu`]), which computes identical math.
 
-use std::path::Path;
-
-use anyhow::{anyhow, bail, Context, Result};
+use anyhow::{bail, Result};
 
 /// Fixed artifact shapes — must match python/compile/model.py.
 pub const BATCH: usize = 8;
@@ -62,95 +67,6 @@ pub struct SolveOut {
     pub tp_balanced: f32,
     /// Work lower bound (sanity channel).
     pub crit_lower: f32,
-}
-
-/// The loaded artifact: a compiled PJRT executable.
-pub struct PortSolver {
-    exe: xla::PjRtLoadedExecutable,
-}
-
-impl PortSolver {
-    /// Default artifact location relative to the repo root.
-    pub const DEFAULT_PATH: &'static str = "artifacts/port_solver.hlo.txt";
-
-    /// Load + compile the artifact on the PJRT CPU client.
-    pub fn load(path: &Path) -> Result<Self> {
-        let client = xla::PjRtClient::cpu().map_err(wrap_xla)?;
-        let proto = xla::HloModuleProto::from_text_file(path)
-            .map_err(wrap_xla)
-            .with_context(|| format!("loading HLO text from {}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = client.compile(&comp).map_err(wrap_xla)?;
-        Ok(PortSolver { exe })
-    }
-
-    /// Load from the default path, searching upward from the current
-    /// directory (tests and benches run from different cwds).
-    pub fn load_default() -> Result<Self> {
-        let mut dir = std::env::current_dir()?;
-        loop {
-            let cand = dir.join(Self::DEFAULT_PATH);
-            if cand.exists() {
-                return Self::load(&cand);
-            }
-            if !dir.pop() {
-                bail!(
-                    "artifact {} not found (run `make artifacts` first)",
-                    Self::DEFAULT_PATH
-                );
-            }
-        }
-    }
-
-    /// Solve a batch of up to BATCH kernels in one artifact execution.
-    pub fn solve(&self, kernels: &[EncodedKernel]) -> Result<Vec<SolveOut>> {
-        if kernels.len() > BATCH {
-            bail!("batch of {} exceeds artifact batch size {BATCH}", kernels.len());
-        }
-        let mut mask = Vec::with_capacity(BATCH * MAX_UOPS * MAX_PORTS);
-        let mut cost = Vec::with_capacity(BATCH * MAX_UOPS);
-        for k in kernels {
-            debug_assert_eq!(k.mask.len(), MAX_UOPS * MAX_PORTS);
-            debug_assert_eq!(k.cost.len(), MAX_UOPS);
-            mask.extend_from_slice(&k.mask);
-            cost.extend_from_slice(&k.cost);
-        }
-        // Pad the batch.
-        mask.resize(BATCH * MAX_UOPS * MAX_PORTS, 0.0);
-        cost.resize(BATCH * MAX_UOPS, 0.0);
-
-        let mask_lit = xla::Literal::vec1(&mask)
-            .reshape(&[BATCH as i64, MAX_UOPS as i64, MAX_PORTS as i64])
-            .map_err(wrap_xla)?;
-        let cost_lit = xla::Literal::vec1(&cost)
-            .reshape(&[BATCH as i64, MAX_UOPS as i64])
-            .map_err(wrap_xla)?;
-        let result = self.exe.execute::<xla::Literal>(&[mask_lit, cost_lit]).map_err(wrap_xla)?;
-        let tuple = result[0][0].to_literal_sync().map_err(wrap_xla)?;
-        let parts = tuple.to_tuple().map_err(wrap_xla)?;
-        if parts.len() != 5 {
-            bail!("artifact returned {}-tuple, expected 5", parts.len());
-        }
-        let press_u = parts[0].to_vec::<f32>().map_err(wrap_xla)?;
-        let press_b = parts[1].to_vec::<f32>().map_err(wrap_xla)?;
-        let tp_u = parts[2].to_vec::<f32>().map_err(wrap_xla)?;
-        let tp_b = parts[3].to_vec::<f32>().map_err(wrap_xla)?;
-        let lower = parts[4].to_vec::<f32>().map_err(wrap_xla)?;
-
-        Ok((0..kernels.len())
-            .map(|i| SolveOut {
-                press_uniform: press_u[i * MAX_PORTS..(i + 1) * MAX_PORTS].to_vec(),
-                press_balanced: press_b[i * MAX_PORTS..(i + 1) * MAX_PORTS].to_vec(),
-                tp_uniform: tp_u[i],
-                tp_balanced: tp_b[i],
-                crit_lower: lower[i],
-            })
-            .collect())
-    }
-}
-
-fn wrap_xla(e: xla::Error) -> anyhow::Error {
-    anyhow!("xla: {e}")
 }
 
 /// "No edge" sentinel in the adjacency encoding (max-plus -infinity).
@@ -215,75 +131,241 @@ pub struct CritOut {
     pub carried_bound: f32,
 }
 
-/// The critical-path artifact (see python/compile/kernels/critpath.py).
-pub struct CritSolver {
-    exe: xla::PjRtLoadedExecutable,
+#[cfg(feature = "pjrt")]
+mod pjrt_impl {
+    //! The real PJRT-backed solvers (feature `pjrt`; requires the
+    //! `xla` bindings to be added as a dependency).
+
+    use std::path::Path;
+
+    use anyhow::{anyhow, bail, Context, Result};
+
+    use super::{CritOut, EncodedGraph, EncodedKernel, SolveOut, BATCH, MAX_PORTS, MAX_UOPS, NEG};
+
+    /// The loaded artifact: a compiled PJRT executable.
+    pub struct PortSolver {
+        exe: xla::PjRtLoadedExecutable,
+    }
+
+    impl PortSolver {
+        /// Default artifact location relative to the repo root.
+        pub const DEFAULT_PATH: &'static str = "artifacts/port_solver.hlo.txt";
+
+        /// Load + compile the artifact on the PJRT CPU client.
+        pub fn load(path: &Path) -> Result<Self> {
+            let client = xla::PjRtClient::cpu().map_err(wrap_xla)?;
+            let proto = xla::HloModuleProto::from_text_file(path)
+                .map_err(wrap_xla)
+                .with_context(|| format!("loading HLO text from {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client.compile(&comp).map_err(wrap_xla)?;
+            Ok(PortSolver { exe })
+        }
+
+        /// Load from the default path, searching upward from the current
+        /// directory (tests and benches run from different cwds).
+        pub fn load_default() -> Result<Self> {
+            let mut dir = std::env::current_dir()?;
+            loop {
+                let cand = dir.join(Self::DEFAULT_PATH);
+                if cand.exists() {
+                    return Self::load(&cand);
+                }
+                if !dir.pop() {
+                    bail!(
+                        "artifact {} not found (run `make artifacts` first)",
+                        Self::DEFAULT_PATH
+                    );
+                }
+            }
+        }
+
+        /// Solve a batch of up to BATCH kernels in one artifact execution.
+        pub fn solve(&self, kernels: &[EncodedKernel]) -> Result<Vec<SolveOut>> {
+            if kernels.len() > BATCH {
+                bail!("batch of {} exceeds artifact batch size {BATCH}", kernels.len());
+            }
+            let mut mask = Vec::with_capacity(BATCH * MAX_UOPS * MAX_PORTS);
+            let mut cost = Vec::with_capacity(BATCH * MAX_UOPS);
+            for k in kernels {
+                debug_assert_eq!(k.mask.len(), MAX_UOPS * MAX_PORTS);
+                debug_assert_eq!(k.cost.len(), MAX_UOPS);
+                mask.extend_from_slice(&k.mask);
+                cost.extend_from_slice(&k.cost);
+            }
+            // Pad the batch.
+            mask.resize(BATCH * MAX_UOPS * MAX_PORTS, 0.0);
+            cost.resize(BATCH * MAX_UOPS, 0.0);
+
+            let mask_lit = xla::Literal::vec1(&mask)
+                .reshape(&[BATCH as i64, MAX_UOPS as i64, MAX_PORTS as i64])
+                .map_err(wrap_xla)?;
+            let cost_lit = xla::Literal::vec1(&cost)
+                .reshape(&[BATCH as i64, MAX_UOPS as i64])
+                .map_err(wrap_xla)?;
+            let result =
+                self.exe.execute::<xla::Literal>(&[mask_lit, cost_lit]).map_err(wrap_xla)?;
+            let tuple = result[0][0].to_literal_sync().map_err(wrap_xla)?;
+            let parts = tuple.to_tuple().map_err(wrap_xla)?;
+            if parts.len() != 5 {
+                bail!("artifact returned {}-tuple, expected 5", parts.len());
+            }
+            let press_u = parts[0].to_vec::<f32>().map_err(wrap_xla)?;
+            let press_b = parts[1].to_vec::<f32>().map_err(wrap_xla)?;
+            let tp_u = parts[2].to_vec::<f32>().map_err(wrap_xla)?;
+            let tp_b = parts[3].to_vec::<f32>().map_err(wrap_xla)?;
+            let lower = parts[4].to_vec::<f32>().map_err(wrap_xla)?;
+
+            Ok((0..kernels.len())
+                .map(|i| SolveOut {
+                    press_uniform: press_u[i * MAX_PORTS..(i + 1) * MAX_PORTS].to_vec(),
+                    press_balanced: press_b[i * MAX_PORTS..(i + 1) * MAX_PORTS].to_vec(),
+                    tp_uniform: tp_u[i],
+                    tp_balanced: tp_b[i],
+                    crit_lower: lower[i],
+                })
+                .collect())
+        }
+    }
+
+    fn wrap_xla(e: xla::Error) -> anyhow::Error {
+        anyhow!("xla: {e}")
+    }
+
+    /// The critical-path artifact (see python/compile/kernels/critpath.py).
+    pub struct CritSolver {
+        exe: xla::PjRtLoadedExecutable,
+    }
+
+    impl CritSolver {
+        pub const DEFAULT_PATH: &'static str = "artifacts/critpath.hlo.txt";
+
+        pub fn load(path: &Path) -> Result<Self> {
+            let client = xla::PjRtClient::cpu().map_err(wrap_xla)?;
+            let proto = xla::HloModuleProto::from_text_file(path)
+                .map_err(wrap_xla)
+                .with_context(|| format!("loading HLO text from {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client.compile(&comp).map_err(wrap_xla)?;
+            Ok(CritSolver { exe })
+        }
+
+        pub fn load_default() -> Result<Self> {
+            let mut dir = std::env::current_dir()?;
+            loop {
+                let cand = dir.join(Self::DEFAULT_PATH);
+                if cand.exists() {
+                    return Self::load(&cand);
+                }
+                if !dir.pop() {
+                    bail!("artifact {} not found (run `make artifacts`)", Self::DEFAULT_PATH);
+                }
+            }
+        }
+
+        /// Solve a batch of up to BATCH graphs in one execution.
+        pub fn solve(&self, graphs: &[EncodedGraph]) -> Result<Vec<CritOut>> {
+            if graphs.len() > BATCH {
+                bail!("batch of {} exceeds artifact batch size {BATCH}", graphs.len());
+            }
+            let mut adj = Vec::with_capacity(BATCH * MAX_UOPS * MAX_UOPS);
+            let mut lat = Vec::with_capacity(BATCH * MAX_UOPS);
+            let mut carried = Vec::with_capacity(BATCH * MAX_UOPS * MAX_UOPS);
+            for g in graphs {
+                adj.extend_from_slice(&g.adj);
+                lat.extend_from_slice(&g.lat);
+                carried.extend_from_slice(&g.carried);
+            }
+            adj.resize(BATCH * MAX_UOPS * MAX_UOPS, NEG);
+            lat.resize(BATCH * MAX_UOPS, 0.0);
+            carried.resize(BATCH * MAX_UOPS * MAX_UOPS, 0.0);
+            let dims3 = [BATCH as i64, MAX_UOPS as i64, MAX_UOPS as i64];
+            let adj_lit = xla::Literal::vec1(&adj).reshape(&dims3).map_err(wrap_xla)?;
+            let lat_lit = xla::Literal::vec1(&lat)
+                .reshape(&[BATCH as i64, MAX_UOPS as i64])
+                .map_err(wrap_xla)?;
+            let car_lit = xla::Literal::vec1(&carried).reshape(&dims3).map_err(wrap_xla)?;
+            let result = self
+                .exe
+                .execute::<xla::Literal>(&[adj_lit, lat_lit, car_lit])
+                .map_err(wrap_xla)?;
+            let tuple = result[0][0].to_literal_sync().map_err(wrap_xla)?;
+            let parts = tuple.to_tuple().map_err(wrap_xla)?;
+            if parts.len() != 2 {
+                bail!("critpath artifact returned {}-tuple, expected 2", parts.len());
+            }
+            let intra = parts[0].to_vec::<f32>().map_err(wrap_xla)?;
+            let bound = parts[1].to_vec::<f32>().map_err(wrap_xla)?;
+            Ok((0..graphs.len())
+                .map(|i| CritOut { intra: intra[i], carried_bound: bound[i] })
+                .collect())
+        }
+    }
 }
 
-impl CritSolver {
-    pub const DEFAULT_PATH: &'static str = "artifacts/critpath.hlo.txt";
+#[cfg(not(feature = "pjrt"))]
+mod pjrt_impl {
+    //! Stub solvers for builds without the `pjrt` feature. The loaders
+    //! fail with a clear message; callers (coordinator, CLI, tests)
+    //! treat that exactly like a missing artifact and fall back to
+    //! [`super::solve_cpu`].
 
-    pub fn load(path: &Path) -> Result<Self> {
-        let client = xla::PjRtClient::cpu().map_err(wrap_xla)?;
-        let proto = xla::HloModuleProto::from_text_file(path)
-            .map_err(wrap_xla)
-            .with_context(|| format!("loading HLO text from {}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = client.compile(&comp).map_err(wrap_xla)?;
-        Ok(CritSolver { exe })
+    use std::path::Path;
+
+    use anyhow::{bail, Result};
+
+    use super::{CritOut, EncodedGraph, EncodedKernel, SolveOut, BATCH};
+
+    /// Stub port solver (built without the `pjrt` feature).
+    pub struct PortSolver {
+        _private: (),
     }
 
-    pub fn load_default() -> Result<Self> {
-        let mut dir = std::env::current_dir()?;
-        loop {
-            let cand = dir.join(Self::DEFAULT_PATH);
-            if cand.exists() {
-                return Self::load(&cand);
+    impl PortSolver {
+        pub const DEFAULT_PATH: &'static str = "artifacts/port_solver.hlo.txt";
+
+        pub fn load(_path: &Path) -> Result<Self> {
+            bail!("built without the `pjrt` feature; PJRT artifact execution is unavailable")
+        }
+
+        pub fn load_default() -> Result<Self> {
+            bail!("built without the `pjrt` feature; using the cpu reference solver")
+        }
+
+        pub fn solve(&self, kernels: &[EncodedKernel]) -> Result<Vec<SolveOut>> {
+            if kernels.len() > BATCH {
+                bail!("batch of {} exceeds artifact batch size {BATCH}", kernels.len());
             }
-            if !dir.pop() {
-                bail!("artifact {} not found (run `make artifacts`)", Self::DEFAULT_PATH);
-            }
+            unreachable!("stub PortSolver cannot be constructed")
         }
     }
 
-    /// Solve a batch of up to BATCH graphs in one execution.
-    pub fn solve(&self, graphs: &[EncodedGraph]) -> Result<Vec<CritOut>> {
-        if graphs.len() > BATCH {
-            bail!("batch of {} exceeds artifact batch size {BATCH}", graphs.len());
+    /// Stub critical-path solver (built without the `pjrt` feature).
+    pub struct CritSolver {
+        _private: (),
+    }
+
+    impl CritSolver {
+        pub const DEFAULT_PATH: &'static str = "artifacts/critpath.hlo.txt";
+
+        pub fn load(_path: &Path) -> Result<Self> {
+            bail!("built without the `pjrt` feature; PJRT artifact execution is unavailable")
         }
-        let mut adj = Vec::with_capacity(BATCH * MAX_UOPS * MAX_UOPS);
-        let mut lat = Vec::with_capacity(BATCH * MAX_UOPS);
-        let mut carried = Vec::with_capacity(BATCH * MAX_UOPS * MAX_UOPS);
-        for g in graphs {
-            adj.extend_from_slice(&g.adj);
-            lat.extend_from_slice(&g.lat);
-            carried.extend_from_slice(&g.carried);
+
+        pub fn load_default() -> Result<Self> {
+            bail!("built without the `pjrt` feature; using the cpu reference analysis")
         }
-        adj.resize(BATCH * MAX_UOPS * MAX_UOPS, NEG);
-        lat.resize(BATCH * MAX_UOPS, 0.0);
-        carried.resize(BATCH * MAX_UOPS * MAX_UOPS, 0.0);
-        let dims3 = [BATCH as i64, MAX_UOPS as i64, MAX_UOPS as i64];
-        let adj_lit = xla::Literal::vec1(&adj).reshape(&dims3).map_err(wrap_xla)?;
-        let lat_lit = xla::Literal::vec1(&lat)
-            .reshape(&[BATCH as i64, MAX_UOPS as i64])
-            .map_err(wrap_xla)?;
-        let car_lit = xla::Literal::vec1(&carried).reshape(&dims3).map_err(wrap_xla)?;
-        let result = self
-            .exe
-            .execute::<xla::Literal>(&[adj_lit, lat_lit, car_lit])
-            .map_err(wrap_xla)?;
-        let tuple = result[0][0].to_literal_sync().map_err(wrap_xla)?;
-        let parts = tuple.to_tuple().map_err(wrap_xla)?;
-        if parts.len() != 2 {
-            bail!("critpath artifact returned {}-tuple, expected 2", parts.len());
+
+        pub fn solve(&self, graphs: &[EncodedGraph]) -> Result<Vec<CritOut>> {
+            if graphs.len() > BATCH {
+                bail!("batch of {} exceeds artifact batch size {BATCH}", graphs.len());
+            }
+            unreachable!("stub CritSolver cannot be constructed")
         }
-        let intra = parts[0].to_vec::<f32>().map_err(wrap_xla)?;
-        let bound = parts[1].to_vec::<f32>().map_err(wrap_xla)?;
-        Ok((0..graphs.len())
-            .map(|i| CritOut { intra: intra[i], carried_bound: bound[i] })
-            .collect())
     }
 }
+
+pub use pjrt_impl::{CritSolver, PortSolver};
 
 /// Pure-rust reference of the solver math (mirrors
 /// python/compile/kernels/ref.py). Used as the no-artifact fallback and
@@ -405,5 +487,15 @@ mod tests {
         let total_b: f32 = out[0].press_balanced.iter().sum();
         assert!((total_u - 3.5).abs() < 1e-5);
         assert!((total_b - 3.5).abs() < 1e-4);
+    }
+
+    #[test]
+    fn stub_or_real_solver_reports_consistently() {
+        // Without the artifact (or without the `pjrt` feature), loading
+        // fails with an error message rather than panicking.
+        if let Err(e) = PortSolver::load_default() {
+            let msg = format!("{e:#}");
+            assert!(!msg.is_empty());
+        }
     }
 }

@@ -1,0 +1,187 @@
+//! Integration: the `osaca::api` analysis-session layer — request
+//! builder, composable passes, true batch submission, structured
+//! errors.
+
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::Duration;
+
+use osaca::api::{AnalysisRequest, Backend, Engine, OsacaError, Passes};
+use osaca::workloads;
+
+fn triad_request(engine_arch: &str) -> AnalysisRequest {
+    let w = workloads::find("triad", engine_arch, "-O3").unwrap();
+    Engine::request(&w.name())
+        .arch(engine_arch)
+        .source(w.source)
+        .passes(Passes::ANALYTIC)
+        .unroll(w.unroll)
+}
+
+#[test]
+fn batch_of_16_maps_onto_solver_slots() {
+    // Acceptance criterion: 16 requests on the CPU backend complete
+    // with at most 4 solver batches (direct B=8 slot mapping gives 2).
+    let engine = Engine::cpu_only();
+    let reqs: Vec<AnalysisRequest> =
+        (0..16).map(|i| triad_request(if i % 2 == 0 { "skl" } else { "zen" })).collect();
+    let results = engine.analyze_batch(&reqs);
+    assert_eq!(results.len(), 16);
+    for (i, r) in results.iter().enumerate() {
+        let report = r.as_ref().unwrap_or_else(|e| panic!("request {i}: {e}"));
+        // Both native triads are load-bound at 2.0 cy/asm-iter.
+        let t = report.throughput.as_ref().unwrap();
+        assert!((t.cy_per_asm_iter - 2.0).abs() < 0.01, "request {i}: {}", t.cy_per_asm_iter);
+        assert!(report.baseline.is_some(), "request {i} lost its baseline");
+    }
+    let stats = engine.stats();
+    assert_eq!(stats.requests.load(Ordering::Relaxed), 16);
+    let batches = stats.batches.load(Ordering::Relaxed);
+    assert!(batches <= 4, "expected <=4 solver batches for 16 requests, got {batches}");
+    assert_eq!(stats.batched_kernels.load(Ordering::Relaxed), 16);
+    assert!(stats.avg_batch_size() >= 4.0, "{}", stats.avg_batch_size());
+}
+
+#[test]
+fn batch_failures_are_per_request() {
+    let engine = Engine::cpu_only();
+    let good = triad_request("skl");
+    let bad_arch = triad_request("skl").arch("cortex-m4");
+    let bad_source = Engine::request("broken").arch("skl").source(".L1:\nfrobnicate %xmm0, %xmm1\njne .L1\n");
+    let results = engine.analyze_batch(&[good, bad_arch, bad_source]);
+    assert!(results[0].is_ok());
+    match &results[1] {
+        Err(OsacaError::UnknownArch { requested, available }) => {
+            assert_eq!(requested, "cortex-m4");
+            assert!(available.iter().any(|a| a == "skl"));
+        }
+        other => panic!("expected UnknownArch, got {other:?}"),
+    }
+    match &results[2] {
+        Err(OsacaError::UnresolvedForm { form, line, arch }) => {
+            assert!(form.starts_with("frobnicate"), "{form}");
+            assert_eq!(*line, 2);
+            assert_eq!(arch, "skl");
+        }
+        other => panic!("expected UnresolvedForm, got {other:?}"),
+    }
+}
+
+#[test]
+fn unknown_arch_error_message_lists_alternatives() {
+    let engine = Engine::cpu_only();
+    let err = engine.machine("m1max").unwrap_err();
+    let msg = err.to_string();
+    for arch in ["hsw", "skl", "zen"] {
+        assert!(msg.contains(arch), "`{msg}` should list `{arch}`");
+    }
+}
+
+#[test]
+fn malformed_model_reports_offending_line() {
+    let engine = Engine::cpu_only();
+    // Line 3 carries an unknown directive.
+    let text = "arch bad \"Bad\"\nports P0\nbogus directive here\n";
+    match engine.register_model_text(text) {
+        Err(OsacaError::MalformedModel { line, message }) => {
+            assert_eq!(line, Some(3), "{message}");
+            assert!(message.contains("line 3"), "{message}");
+        }
+        other => panic!("expected MalformedModel, got {other:?}"),
+    }
+    // A malformed entry reports its line too.
+    let text = "arch bad2 \"Bad2\"\nports P0\nentry vaddpd-xmm_xmm_xmm lat=1 tp=1 uops=c@1:P9\n";
+    match engine.register_model_text(text) {
+        Err(OsacaError::MalformedModel { line, .. }) => assert_eq!(line, Some(3)),
+        other => panic!("expected MalformedModel, got {other:?}"),
+    }
+}
+
+#[test]
+fn passes_are_composable_per_request() {
+    let engine = Engine::cpu_only();
+    let w = workloads::find("pi", "skl", "-O1").unwrap();
+    let base = Engine::request(&w.name()).arch("skl").source(w.source);
+
+    let only_tp = engine.analyze(&base.clone().passes(Passes::THROUGHPUT)).unwrap();
+    assert!(only_tp.throughput.is_some());
+    assert!(only_tp.critpath.is_none());
+    assert!(only_tp.baseline.is_none());
+    assert!(only_tp.simulation.is_none());
+
+    let tp_cp = engine
+        .analyze(&base.clone().passes(Passes::THROUGHPUT | Passes::CRITPATH))
+        .unwrap();
+    let t = tp_cp.throughput.as_ref().unwrap();
+    let c = tp_cp.critpath.as_ref().unwrap();
+    assert!((t.cy_per_asm_iter - 4.75).abs() < 0.01);
+    // The store-forward chain dominates the throughput bound.
+    assert!(c.carried_per_iteration > 8.0);
+    assert!(
+        (tp_cp.predicted_cy_per_asm_iter().unwrap() - c.carried_per_iteration).abs() < 1e-6
+    );
+}
+
+#[test]
+fn report_renders_text_and_json() {
+    let engine = Engine::cpu_only();
+    let report = engine.analyze(&triad_request("skl")).unwrap();
+    let text = report.to_text();
+    assert!(text.contains("Throughput bottleneck"));
+    assert!(text.contains("Balanced (IACA-like) baseline"));
+    let json = report.to_json();
+    assert!(json.contains("\"name\":"));
+    assert!(json.contains("\"throughput\":"));
+    assert!(json.contains("\"critpath\":"));
+    assert!(json.contains("\"baseline\":"));
+    assert!(!json.contains("\"simulation\":"));
+}
+
+#[test]
+fn engine_is_shareable_across_threads() {
+    let engine = Arc::new(Engine::cpu_only());
+    let mut handles = Vec::new();
+    for i in 0..8 {
+        let engine = engine.clone();
+        handles.push(std::thread::spawn(move || {
+            let arch = if i % 2 == 0 { "skl" } else { "zen" };
+            let report = engine.analyze(&triad_request(arch)).unwrap();
+            report.throughput.unwrap().cy_per_asm_iter
+        }));
+    }
+    for h in handles {
+        let cy = h.join().unwrap();
+        assert!((cy - 2.0).abs() < 0.01, "{cy}");
+    }
+    assert_eq!(engine.stats().requests.load(Ordering::Relaxed), 8);
+}
+
+#[test]
+fn builder_exposes_service_tunables() {
+    let engine = Engine::builder()
+        .backend(Backend::Cpu)
+        .reply_timeout(Duration::from_millis(500))
+        .batch_window(Duration::from_micros(50))
+        .queue_depth(64)
+        .build();
+    assert_eq!(engine.coordinator().reply_timeout, Duration::from_millis(500));
+    assert_eq!(engine.coordinator().window, Duration::from_micros(50));
+    // And the engine still serves requests with those settings.
+    assert!(engine.analyze(&triad_request("skl")).is_ok());
+}
+
+#[test]
+fn legacy_shims_agree_with_engine() {
+    use osaca::coordinator::Coordinator;
+    let engine = Engine::cpu_only();
+    let coord = Coordinator::cpu_only();
+    let w = workloads::find("pi", "skl", "-O2").unwrap();
+    let legacy = coord.analyze_source(&w.name(), w.source, "skl").unwrap();
+    let report = engine
+        .analyze(&Engine::request(&w.name()).arch("skl").source(w.source).passes(Passes::ANALYTIC))
+        .unwrap();
+    let t = report.throughput.as_ref().unwrap();
+    let b = report.baseline.as_ref().unwrap();
+    assert!((legacy.osaca.cy_per_asm_iter - t.cy_per_asm_iter).abs() < 1e-6);
+    assert!((legacy.baseline.cy_per_asm_iter - b.cy_per_asm_iter).abs() < 1e-5);
+}

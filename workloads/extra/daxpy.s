@@ -1,0 +1,12 @@
+# daxpy y[i] = a*x[i] + y[i], 256-bit in-place update: the fma folds
+# the x load, the y store targets the address the load just read —
+# same-iteration, so no cross-iteration forwarding is triggered.
+	xorq	%rax, %rax
+	xorq	%rbp, %rbp
+.L50:
+	vmovapd	(%rsi,%rax), %ymm1
+	vfmadd231pd	(%rdi,%rax), %ymm0, %ymm1
+	vmovapd	%ymm1, (%rsi,%rax)
+	addq	$32, %rax
+	cmpq	%rbp, %rax
+	jne	.L50

@@ -1,0 +1,13 @@
+# Dot product s += a[i]*b[i], 256-bit, 2x unrolled with two
+# accumulators (8 source iterations per assembly iteration).
+	vxorpd	%xmm0, %xmm0, %xmm0
+	vxorpd	%xmm1, %xmm1, %xmm1
+	xorq	%rax, %rax
+.L30:
+	vmovapd	(%rsi,%rax), %ymm2
+	vfmadd231pd	(%rdi,%rax), %ymm2, %ymm0
+	vmovapd	32(%rsi,%rax), %ymm3
+	vfmadd231pd	32(%rdi,%rax), %ymm3, %ymm1
+	addq	$64, %rax
+	cmpq	%rbp, %rax
+	jne	.L30

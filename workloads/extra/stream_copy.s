@@ -1,0 +1,12 @@
+# STREAM copy b[i] = a[i], 256-bit, 2x unrolled (8 doubles per
+# assembly iteration): pure load/store pressure, zero FLOPs.
+	xorq	%rax, %rax
+	xorq	%rbp, %rbp
+.L40:
+	vmovapd	(%rsi,%rax), %ymm0
+	vmovapd	%ymm0, (%rdi,%rax)
+	vmovapd	32(%rsi,%rax), %ymm1
+	vmovapd	%ymm1, 32(%rdi,%rax)
+	addq	$64, %rax
+	cmpq	%rbp, %rax
+	jne	.L40

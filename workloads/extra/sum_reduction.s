@@ -1,0 +1,11 @@
+# Scalar sum reduction s += a[i]: a single loop-carried FP-add chain,
+# the latency-bound counterpoint to the throughput-bound kernels
+# (4 cy/iter on Skylake, 3 on Zen — the FP add latency).
+	vxorpd	%xmm0, %xmm0, %xmm0
+	xorl	%eax, %eax
+	xorq	%rbp, %rbp
+.L60:
+	vaddsd	(%rsi,%rax,8), %xmm0, %xmm0
+	addq	$1, %rax
+	cmpq	%rbp, %rax
+	jne	.L60

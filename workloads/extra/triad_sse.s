@@ -1,0 +1,14 @@
+# Legacy-SSE Schoenauer triad (pre-VEX two-operand forms), 128-bit,
+# 2 source iterations per assembly iteration. Exercises the non-VEX
+# database entries and read-modify-write destination semantics.
+	xorq	%rax, %rax
+	xorq	%rbp, %rbp
+.L20:
+	movaps	(%rcx,%rax), %xmm0
+	movaps	(%rdx,%rax), %xmm1
+	mulpd	%xmm1, %xmm0
+	addpd	(%rsi,%rax), %xmm0
+	movaps	%xmm0, (%rdi,%rax)
+	addq	$16, %rax
+	cmpq	%rbp, %rax
+	jne	.L20

@@ -1,0 +1,18 @@
+# pi integration sum += 4/(1+x*x), x = (i+0.5)*delta, gcc -O1 style:
+# the running sum lives on the stack, so every iteration round-trips
+# through a store-to-load forward (the paper's §III-B anomaly).
+# Identical code is produced for both compile targets.
+	xorl	%eax, %eax
+.L4:
+	pxor	%xmm0, %xmm0
+	vcvtsi2sd	%eax, %xmm0, %xmm0
+	vaddsd	%xmm4, %xmm0, %xmm0
+	vmulsd	%xmm5, %xmm0, %xmm0
+	vmulsd	%xmm0, %xmm0, %xmm3
+	vaddsd	%xmm6, %xmm3, %xmm3
+	vdivsd	%xmm3, %xmm7, %xmm3
+	vaddsd	8(%rsp), %xmm3, %xmm1
+	vmovsd	%xmm1, 8(%rsp)
+	addl	$1, %eax
+	cmpl	%edx, %eax
+	jne	.L4

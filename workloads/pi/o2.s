@@ -1,0 +1,18 @@
+# pi integration, gcc -O2 style: sum and i stay in registers, FMA
+# contracts 1 + x*x, and the compiler emits the pxor zeroing idiom to
+# break the cvtsi2sd false dependency plus a cmp+jne pair that
+# macro-fuses on real hardware — the two "shortcuts" OSACA charges but
+# IACA and the silicon do not (paper Table VII: 4.25 vs 4.00).
+# Identical code is produced for both compile targets.
+	xorl	%eax, %eax
+.L5:
+	pxor	%xmm0, %xmm0
+	vcvtsi2sd	%eax, %xmm0, %xmm0
+	vaddsd	%xmm4, %xmm0, %xmm0
+	vmulsd	%xmm5, %xmm0, %xmm0
+	vfmadd132sd	%xmm0, %xmm6, %xmm0
+	vdivsd	%xmm0, %xmm7, %xmm0
+	vaddsd	%xmm0, %xmm2, %xmm2
+	addl	$1, %eax
+	cmpl	%edx, %eax
+	jne	.L5

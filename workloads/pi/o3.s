@@ -1,0 +1,24 @@
+# pi integration, gcc -O3 style: 4-wide vectorized (int32 counter
+# vector converted to double) and 2-way unrolled with two accumulators
+# -> 8 source iterations per assembly iteration. Bound by the two
+# 256-bit divides on the divider pipe (paper Table VI: 0DV = 16).
+# Identical code is produced for both compile targets.
+	xorl	%eax, %eax
+.L6:
+	vcvtdq2pd	%xmm6, %ymm0
+	vpaddd	%xmm7, %xmm6, %xmm6
+	vfmadd132pd	%ymm8, %ymm9, %ymm0
+	vmulpd	%ymm0, %ymm0, %ymm1
+	vaddpd	%ymm10, %ymm1, %ymm1
+	vdivpd	%ymm1, %ymm11, %ymm1
+	vaddpd	%ymm1, %ymm2, %ymm2
+	vcvtdq2pd	%xmm6, %ymm3
+	vpaddd	%xmm7, %xmm6, %xmm6
+	vfmadd132pd	%ymm8, %ymm9, %ymm3
+	vmulpd	%ymm3, %ymm3, %ymm4
+	vaddpd	%ymm10, %ymm4, %ymm4
+	vdivpd	%ymm4, %ymm12, %ymm4
+	vaddpd	%ymm4, %ymm5, %ymm5
+	addl	$1, %eax
+	cmpl	%edx, %eax
+	jne	.L6

@@ -1,0 +1,13 @@
+# Schoenauer triad a[i] = b[i] + c[i] * d[i], gcc -O1 style:
+# scalar SSE, separate loads for c[i] and d[i], common index in %rax.
+# Identical code is produced for both compile targets.
+	xorl	%eax, %eax
+.L3:
+	vmovsd	(%rcx,%rax,8), %xmm0
+	vmovsd	(%rdx,%rax,8), %xmm1
+	vmulsd	%xmm1, %xmm0, %xmm0
+	vaddsd	(%rsi,%rax,8), %xmm0, %xmm0
+	vmovsd	%xmm0, (%rdi,%rax,8)
+	addq	$1, %rax
+	cmpq	%rbp, %rax
+	jne	.L3

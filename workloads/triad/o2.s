@@ -1,0 +1,12 @@
+# Schoenauer triad a[i] = b[i] + c[i] * d[i], gcc -O2 style:
+# scalar SSE with memory-operand arithmetic (mulsd/addsd fold the
+# loads). Identical code is produced for both compile targets.
+	xorl	%eax, %eax
+.L3:
+	vmovsd	(%rcx,%rax,8), %xmm0
+	vmulsd	(%rdx,%rax,8), %xmm0, %xmm0
+	vaddsd	(%rsi,%rax,8), %xmm0, %xmm0
+	vmovsd	%xmm0, (%rdi,%rax,8)
+	addq	$1, %rax
+	cmpq	%rbp, %rax
+	jne	.L3

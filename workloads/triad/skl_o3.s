@@ -1,0 +1,13 @@
+# Schoenauer triad, gcc -O3 -march=skylake: 256-bit AVX2 + FMA,
+# 4 source iterations per assembly iteration (paper Table II listing).
+	xorl	%ecx, %ecx
+	xorq	%rax, %rax
+.L10:
+	vmovapd	(%r15,%rax), %ymm0
+	vmovapd	(%r12,%rax), %ymm3
+	addl	$1, %ecx
+	vfmadd132pd	0(%r13,%rax), %ymm3, %ymm0
+	vmovapd	%ymm0, (%r14,%rax)
+	addq	$32, %rax
+	cmpl	%ecx, %r10d
+	ja	.L10

@@ -1,0 +1,13 @@
+# Schoenauer triad, gcc -O3 -march=znver1: 128-bit SSE/AVX + FMA,
+# 2 source iterations per assembly iteration (paper Table IV listing).
+	xorl	%esi, %esi
+	xorq	%rax, %rax
+.L10:
+	vmovaps	0(%r13,%rax), %xmm0
+	vmovaps	(%r15,%rax), %xmm3
+	incl	%esi
+	vfmadd132pd	(%r14,%rax), %xmm3, %xmm0
+	vmovaps	%xmm0, (%r12,%rax)
+	addq	$16, %rax
+	cmpl	%esi, %ebx
+	ja	.L10
