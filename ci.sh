@@ -1,10 +1,21 @@
 #!/usr/bin/env bash
-# CI entry point: tier-1 verification plus style and lint gates.
+# CI entry point: tier-1 verification plus style, lint and perf gates.
 #
-# Usage: ./ci.sh [--quick]
-#   --quick  skip fmt/clippy (tier-1 only)
+# Usage: ./ci.sh [--quick|--bench-smoke]
+#   --quick        tier-1 only (skip fmt/clippy and the bench smoke run)
+#   --bench-smoke  only the shrunken hot-path bench (perf smoke gate)
 set -euo pipefail
 cd "$(dirname "$0")"
+
+bench_smoke() {
+    echo "== perf: hotpath bench (smoke) =="
+    OSACA_BENCH_SMOKE=1 cargo bench --bench hotpath
+}
+
+if [[ "${1:-}" == "--bench-smoke" ]]; then
+    bench_smoke
+    exit 0
+fi
 
 echo "== tier-1: build =="
 cargo build --release
@@ -17,7 +28,15 @@ if [[ "${1:-}" != "--quick" ]]; then
     cargo fmt --check
 
     echo "== lint: clippy =="
-    cargo clippy --all-targets -- -D warnings
+    cargo clippy --all-targets -- -W clippy::perf -D warnings
+
+    # Hot-path regressions fail loudly at the invariant level: the smoke
+    # bench asserts the cached-model and warm-resolution counters while
+    # exercising the simulator, solver and api batch paths end to end.
+    # Absolute throughput is compared manually against the committed
+    # BENCH_hotpath.json baseline (regenerate with a full
+    # `cargo bench --bench hotpath` and commit the diff).
+    bench_smoke
 fi
 
 echo "CI OK"

@@ -1,12 +1,20 @@
 //! Bench: the hot paths of each layer, for the performance pass
 //! (EXPERIMENTS.md §Perf).
 //!
+//! * mdb: cached registry lookups, cold vs warm form resolution
+//!   (`FormIndex`);
 //! * L3 simulator: simulated Mcycles/s and µops/s on the heaviest
-//!   kernels;
-//! * L3 analyzer: kernels analyzed per second;
+//!   kernels, plus `DecodedKernel` reuse and 1-iteration latency;
+//! * L3 analyzer: kernels analyzed per second (warm path);
 //! * L1/L2 solver: batched artifact executions per second (PJRT) vs the
 //!   pure-rust reference;
-//! * coordinator: end-to-end requests per second under concurrency.
+//! * coordinator / api: end-to-end requests per second, serial vs the
+//!   pooled batch path.
+//!
+//! Results are also written as machine-readable JSON
+//! (`BENCH_hotpath.json`, override with `OSACA_BENCH_JSON`) so the perf
+//! trajectory is tracked across PRs. `OSACA_BENCH_SMOKE=1` shrinks the
+//! iteration counts for the `./ci.sh --bench-smoke` gate.
 //!
 //! Run: `cargo bench --bench hotpath`
 
@@ -14,32 +22,110 @@ use std::sync::Arc;
 
 use osaca::analyzer::analyze;
 use osaca::baseline::encode;
-use osaca::benchlib::{bench, Stats};
+use osaca::benchlib::{bench, BenchJson, Stats};
 use osaca::coordinator::Coordinator;
 use osaca::mdb;
 use osaca::runtime::{solve_cpu, EncodedKernel, PortSolver, BATCH};
-use osaca::sim::{simulate, SimConfig};
+use osaca::sim::{run_decoded, simulate, DecodedKernel, SimConfig};
 use osaca::workloads;
 
+/// Per-layer repetition counts, shrunken under `OSACA_BENCH_SMOKE`.
+struct Scale {
+    lookups: usize,
+    sim_cfg: SimConfig,
+    n_reqs: usize,
+    warm_small: usize,
+    samp_small: usize,
+    warm_big: usize,
+    samp_big: usize,
+}
+
+fn scale() -> Scale {
+    if std::env::var("OSACA_BENCH_SMOKE").is_ok() {
+        Scale {
+            lookups: 10_000,
+            sim_cfg: SimConfig { iterations: 200, warmup: 40 },
+            n_reqs: 32,
+            warm_small: 1,
+            samp_small: 3,
+            warm_big: 1,
+            samp_big: 2,
+        }
+    } else {
+        Scale {
+            lookups: 1_000_000,
+            sim_cfg: SimConfig { iterations: 4000, warmup: 400 },
+            n_reqs: 128,
+            warm_small: 2,
+            samp_small: 10,
+            warm_big: 1,
+            samp_big: 8,
+        }
+    }
+}
+
 fn main() {
-    let skl = mdb::skylake();
-    let zen = mdb::zen();
+    let sc = scale();
+    let mut json = BenchJson::new();
+    let skl = mdb::by_name_shared("skl").unwrap();
+    let zen = mdb::by_name_shared("zen").unwrap();
 
     // ---- machine-model registry ---------------------------------------
     // Built-in models are parsed once per process and served from the
-    // Arc cache; assert that a million lookups do not re-parse.
+    // Arc cache; assert that a pile of lookups does not re-parse.
     println!("--- mdb registry ---");
     let parses_before = mdb::builtin_parse_count();
-    let s = bench("mdb/by_name_shared/1e6-lookups", 2, 10, || {
-        for _ in 0..1_000_000 {
+    let s = bench("mdb/by_name_shared/lookups", 2, 10, || {
+        for _ in 0..sc.lookups {
             std::hint::black_box(mdb::by_name_shared("skl"));
         }
     });
-    println!("{}  ({:.0} lookups/s)", s.report(), 1e6 / s.median.as_secs_f64());
+    let lookup_rate = sc.lookups as f64 / s.median.as_secs_f64();
+    println!("{}  ({:.0} lookups/s)", s.report(), lookup_rate);
+    json.record(&s, &[("lookups_per_s", lookup_rate)]);
     assert_eq!(
         mdb::builtin_parse_count(),
         parses_before,
         "cached machine-model lookups must not re-parse the embedded .mdb text"
+    );
+
+    // ---- form resolution: cold vs warm --------------------------------
+    // Cold = a fresh per-model FormIndex every run (every synthesized
+    // form is re-derived); warm = the shared cached model (every resolve
+    // is an interned cache hit).
+    println!("--- mdb form resolution ---");
+    let kernels: Vec<_> = workloads::all().iter().map(|w| w.kernel()).collect();
+    let n_resolves: usize = kernels
+        .iter()
+        .map(|k| k.instructions.iter().filter(|i| !i.is_branch()).count())
+        .sum();
+    let resolve_all = |m: &mdb::MachineModel| {
+        for k in &kernels {
+            for ins in k.instructions.iter().filter(|i| !i.is_branch()) {
+                std::hint::black_box(m.resolve(ins).unwrap());
+            }
+        }
+    };
+    let s = bench("resolve/cold/skl", sc.warm_small, sc.samp_small, || {
+        let fresh = mdb::skylake(); // clone => fresh resolution cache
+        resolve_all(&fresh);
+    });
+    let cold_rate = n_resolves as f64 / s.median.as_secs_f64();
+    println!("{}  ({:.0} resolutions/s)", s.report(), cold_rate);
+    json.record(&s, &[("resolutions_per_s", cold_rate)]);
+
+    resolve_all(&skl); // warm the shared cache explicitly
+    let misses_before = skl.resolution_miss_count();
+    let s = bench("resolve/warm/skl", sc.warm_small, sc.samp_small, || {
+        resolve_all(&skl);
+    });
+    let warm_rate = n_resolves as f64 / s.median.as_secs_f64();
+    println!("{}  ({:.0} resolutions/s)", s.report(), warm_rate);
+    json.record(&s, &[("resolutions_per_s", warm_rate)]);
+    assert_eq!(
+        skl.resolution_miss_count(),
+        misses_before,
+        "warm resolution must perform zero fresh syntheses"
     );
 
     // ---- L3 simulator -------------------------------------------------
@@ -47,43 +133,61 @@ fn main() {
     for (arch, m) in [("skl", &skl), ("zen", &zen)] {
         let w = workloads::find("pi", arch, "-O3").unwrap();
         let k = w.kernel();
-        let cfg = SimConfig { iterations: 4000, warmup: 400 };
         let mut total_cycles = 0u64;
         let mut uops = 0u64;
-        let s = bench(&format!("sim/pi-o3/{arch}"), 2, 10, || {
-            let meas = simulate(&k, m, cfg).unwrap();
+        let s = bench(&format!("sim/pi-o3/{arch}"), sc.warm_small, sc.samp_small, || {
+            let meas = simulate(&k, m, sc.sim_cfg).unwrap();
             total_cycles = meas.total_cycles;
             uops = meas.counters.uops_executed;
         });
-        report_sim(&s, total_cycles, uops);
+        report_sim(&s, total_cycles, uops, &mut json);
     }
     {
         let w = workloads::find("triad", "skl", "-O3").unwrap();
         let k = w.kernel();
-        let cfg = SimConfig { iterations: 4000, warmup: 400 };
         let mut total_cycles = 0u64;
         let mut uops = 0u64;
-        let s = bench("sim/triad-o3/skl", 2, 10, || {
-            let meas = simulate(&k, &skl, cfg).unwrap();
+        let s = bench("sim/triad-o3/skl", sc.warm_small, sc.samp_small, || {
+            let meas = simulate(&k, &skl, sc.sim_cfg).unwrap();
             total_cycles = meas.total_cycles;
             uops = meas.counters.uops_executed;
         });
-        report_sim(&s, total_cycles, uops);
+        report_sim(&s, total_cycles, uops, &mut json);
+    }
+    {
+        // DecodedKernel reuse: decode once, run many times.
+        let w = workloads::find("pi", "skl", "-O3").unwrap();
+        let k = w.kernel();
+        let dk = DecodedKernel::new(&k, &skl).unwrap();
+        let mut total_cycles = 0u64;
+        let mut uops = 0u64;
+        let s = bench("sim/pi-o3-reuse/skl", sc.warm_small, sc.samp_small, || {
+            let meas = run_decoded(&dk, &skl, sc.sim_cfg);
+            total_cycles = meas.total_cycles;
+            uops = meas.counters.uops_executed;
+        });
+        report_sim(&s, total_cycles, uops, &mut json);
+        // Single-iteration latency: what one interactive SIMULATE pass
+        // costs once decode is amortized away.
+        let one = SimConfig { iterations: 1, warmup: 0 };
+        let s = bench("sim/pi-o3-1iter/skl", sc.warm_small, sc.samp_small, || {
+            std::hint::black_box(run_decoded(&dk, &skl, one));
+        });
+        let rate = 1.0 / s.median.as_secs_f64();
+        println!("{}  ({:.0} runs/s)", s.report(), rate);
+        json.record(&s, &[("runs_per_s", rate)]);
     }
 
     // ---- L3 analyzer ---------------------------------------------------
     println!("--- L3 analyzer ---");
-    let kernels: Vec<_> = workloads::all().iter().map(|w| w.kernel()).collect();
     let s = bench("analyze/all-workloads/skl", 3, 20, || {
         for k in &kernels {
             analyze(k, &skl).unwrap();
         }
     });
-    println!(
-        "{}  ({:.0} kernels/s)",
-        s.report(),
-        kernels.len() as f64 / s.median.as_secs_f64()
-    );
+    let analyze_rate = kernels.len() as f64 / s.median.as_secs_f64();
+    println!("{}  ({:.0} kernels/s)", s.report(), analyze_rate);
+    json.record(&s, &[("kernels_per_s", analyze_rate)]);
 
     // ---- L1/L2 solver ---------------------------------------------------
     println!("--- L1/L2 port solver ---");
@@ -92,13 +196,17 @@ fn main() {
     let s = bench("solve/cpu-reference/batch8", 3, 20, || {
         solve_cpu(&batch, 32);
     });
-    println!("{}  ({:.0} kernels/s)", s.report(), BATCH as f64 / s.median.as_secs_f64());
+    let rate = BATCH as f64 / s.median.as_secs_f64();
+    println!("{}  ({:.0} kernels/s)", s.report(), rate);
+    json.record(&s, &[("kernels_per_s", rate)]);
     match PortSolver::load_default() {
         Ok(solver) => {
             let s = bench("solve/pjrt-artifact/batch8", 3, 20, || {
                 solver.solve(&batch).unwrap();
             });
-            println!("{}  ({:.0} kernels/s)", s.report(), BATCH as f64 / s.median.as_secs_f64());
+            let rate = BATCH as f64 / s.median.as_secs_f64();
+            println!("{}  ({:.0} kernels/s)", s.report(), rate);
+            json.record(&s, &[("kernels_per_s", rate)]);
         }
         Err(e) => println!("solve/pjrt-artifact: SKIPPED ({e})"),
     }
@@ -106,8 +214,8 @@ fn main() {
     // ---- coordinator ----------------------------------------------------
     println!("--- coordinator ---");
     let coord = Arc::new(Coordinator::auto());
-    let n = 128;
-    let s = bench("coordinator/end-to-end/128-reqs", 1, 8, || {
+    let n = sc.n_reqs;
+    let s = bench(&format!("coordinator/end-to-end/{n}-reqs"), sc.warm_big, sc.samp_big, || {
         let mut handles = Vec::new();
         for i in 0..n {
             let coord = coord.clone();
@@ -122,7 +230,9 @@ fn main() {
             h.join().unwrap();
         }
     });
-    println!("{}  ({:.0} req/s)", s.report(), n as f64 / s.median.as_secs_f64());
+    let rate = n as f64 / s.median.as_secs_f64();
+    println!("{}  ({:.0} req/s)", s.report(), rate);
+    json.record(&s, &[("req_per_s", rate)]);
     println!(
         "coordinator stats: {} batches, avg batch {:.2}",
         coord.stats.batches.load(std::sync::atomic::Ordering::Relaxed),
@@ -130,8 +240,9 @@ fn main() {
     );
 
     // ---- api batch path -------------------------------------------------
-    // The Engine::analyze_batch fast path: one submission, direct B=8
-    // slot mapping, no per-request reply channels.
+    // Serial analyze() loop vs the pooled analyze_batch fast path (one
+    // submission, direct B=8 slot mapping, scoped worker pool for the
+    // analytic passes).
     use osaca::api::{Engine, Passes};
     let engine = Engine::cpu_only();
     let ws = workloads::all();
@@ -145,23 +256,39 @@ fn main() {
                 .unroll(w.unroll)
         })
         .collect();
-    let s = bench("api/analyze_batch/128-reqs", 1, 8, || {
+    let s = bench(&format!("api/analyze_serial/{n}-reqs"), sc.warm_big, sc.samp_big, || {
+        for req in &reqs {
+            engine.analyze(req).unwrap();
+        }
+    });
+    let rate = n as f64 / s.median.as_secs_f64();
+    println!("{}  ({:.0} req/s)", s.report(), rate);
+    json.record(&s, &[("req_per_s", rate)]);
+    let s = bench(&format!("api/analyze_batch/{n}-reqs"), sc.warm_big, sc.samp_big, || {
         let results = engine.analyze_batch(&reqs);
         assert!(results.iter().all(|r| r.is_ok()));
     });
-    println!("{}  ({:.0} req/s)", s.report(), n as f64 / s.median.as_secs_f64());
+    let rate = n as f64 / s.median.as_secs_f64();
+    println!("{}  ({:.0} req/s)", s.report(), rate);
+    json.record(&s, &[("req_per_s", rate)]);
     println!(
         "engine stats: {} batches, avg batch {:.2}",
         engine.stats().batches.load(std::sync::atomic::Ordering::Relaxed),
         engine.stats().avg_batch_size()
     );
+
+    // ---- machine-readable results ---------------------------------------
+    let path =
+        std::env::var("OSACA_BENCH_JSON").unwrap_or_else(|_| "BENCH_hotpath.json".to_string());
+    match json.write(&path) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
 }
 
-fn report_sim(s: &Stats, cycles: u64, uops: u64) {
-    println!(
-        "{}  ({:.1} Msim-cycles/s, {:.1} Muops/s)",
-        s.report(),
-        cycles as f64 / s.median.as_secs_f64() / 1e6,
-        uops as f64 / s.median.as_secs_f64() / 1e6
-    );
+fn report_sim(s: &Stats, cycles: u64, uops: u64, json: &mut BenchJson) {
+    let mcy = cycles as f64 / s.median.as_secs_f64() / 1e6;
+    let mu = uops as f64 / s.median.as_secs_f64() / 1e6;
+    println!("{}  ({:.1} Msim-cycles/s, {:.1} Muops/s)", s.report(), mcy, mu);
+    json.record(s, &[("msim_cycles_per_s", mcy), ("muops_per_s", mu)]);
 }

@@ -11,9 +11,9 @@ use anyhow::Result;
 
 use crate::asm::Kernel;
 use crate::mdb::MachineModel;
-use crate::sim::decode::{decode_kernel, DepSource};
-use crate::sim::SimUop;
 use crate::mdb::UopKind;
+use crate::sim::decode::{decode_kernel, DepSource};
+use crate::sim::{DecodedIter, SimUop};
 
 /// Latency analysis result.
 #[derive(Debug, Clone)]
@@ -45,6 +45,13 @@ fn uop_latency(u: &SimUop, machine: &MachineModel, forwarded: bool) -> f32 {
 /// a tight bound for the kernels we model).
 pub fn critical_path(kernel: &Kernel, machine: &MachineModel) -> Result<CritPathReport> {
     let t = decode_kernel(kernel, machine)?;
+    Ok(critical_path_decoded(&t, machine))
+}
+
+/// [`critical_path`] over an already-decoded iteration template, so the
+/// api layer can share one decode between the critical-path pass and
+/// the simulator (`DecodedKernel`).
+pub fn critical_path_decoded(t: &DecodedIter, machine: &MachineModel) -> CritPathReport {
     let n = t.uops.len();
 
     // Forwarding: a load aliases a store across iterations only when the
@@ -123,11 +130,11 @@ pub fn critical_path(kernel: &Kernel, machine: &MachineModel) -> Result<CritPath
         }
     }
 
-    Ok(CritPathReport {
+    CritPathReport {
         intra_iteration: intra,
         carried_per_iteration: best_cycle,
         carried_path: best_path,
-    })
+    }
 }
 
 /// Encode a kernel's dependency graph for the batched critical-path

@@ -17,5 +17,5 @@
 pub mod critpath;
 pub mod throughput;
 
-pub use critpath::{critical_path, CritPathReport};
+pub use critpath::{critical_path, critical_path_decoded, CritPathReport};
 pub use throughput::{analyze, Analysis, LineOccupancy};

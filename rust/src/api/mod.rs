@@ -42,17 +42,23 @@ mod report;
 mod request;
 
 use std::collections::HashMap;
-use std::sync::atomic::Ordering;
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, OnceLock, RwLock};
 use std::time::Duration;
 
-use crate::analyzer::{analyze, critical_path};
+use crate::analyzer::{analyze, critical_path_decoded};
 use crate::asm::{extract_kernel, Kernel};
 use crate::baseline::{encode, to_prediction};
 use crate::coordinator::{Coordinator, CoordinatorConfig, ServiceStats, SubmitError};
 use crate::mdb::{self, MachineModel};
 use crate::runtime::{EncodedKernel, MAX_UOPS};
-use crate::sim::simulate;
+use crate::sim::{run_decoded, DecodedKernel};
+
+/// Upper bound on the scoped worker pool that runs the in-process
+/// analytic passes of [`Engine::analyze_batch`]. Small on purpose: the
+/// passes are short and allocation-light, so a handful of workers
+/// saturates the win while keeping thread startup cost negligible.
+const ANALYTIC_POOL_MAX: usize = 8;
 
 pub use crate::coordinator::Backend;
 pub use error::OsacaError;
@@ -268,14 +274,24 @@ impl Engine {
             baseline: None,
             simulation: None,
         };
+        // Decode once: the critical-path pass and the simulator consume
+        // the same dependency-wired template, so parse+resolve+decode
+        // work happens once per request, not once per pass.
+        let decoded = if req.passes.intersects(Passes::CRITPATH | Passes::SIMULATE) {
+            Some(DecodedKernel::new(kernel, machine).map_err(internal)?)
+        } else {
+            None
+        };
         if req.passes.contains(Passes::THROUGHPUT) {
             report.throughput = Some(analyze(kernel, machine).map_err(internal)?);
         }
-        if req.passes.contains(Passes::CRITPATH) {
-            report.critpath = Some(critical_path(kernel, machine).map_err(internal)?);
-        }
-        if req.passes.contains(Passes::SIMULATE) {
-            report.simulation = Some(simulate(kernel, machine, req.sim).map_err(internal)?);
+        if let Some(dk) = &decoded {
+            if req.passes.contains(Passes::CRITPATH) {
+                report.critpath = Some(critical_path_decoded(&dk.iter, machine));
+            }
+            if req.passes.contains(Passes::SIMULATE) {
+                report.simulation = Some(run_decoded(dk, machine, req.sim));
+            }
         }
         Ok(report)
     }
@@ -312,10 +328,76 @@ impl Engine {
         Ok(report)
     }
 
-    /// Run many requests, mapping every baseline solve of the batch
+    /// One request's in-process work: preparation, analytic passes, and
+    /// the solver encoding. The solver submission itself stays with the
+    /// caller so a batch's baselines map onto B=8 slots together.
+    fn analytic_one(
+        &self,
+        req: &AnalysisRequest,
+    ) -> Result<(AnalysisReport, Option<EncodedKernel>), OsacaError> {
+        let (machine, kernel) = self.prepare(req)?;
+        let report = self.run_inline(req, &machine, &kernel)?;
+        let enc = if req.passes.contains(Passes::BASELINE) {
+            Some(self.encode_for_solver(&kernel, &machine)?)
+        } else {
+            None
+        };
+        Ok((report, enc))
+    }
+
+    /// Fan the per-request analytic work out over a small scoped worker
+    /// pool (std threads, no executor). Workers pull request indices
+    /// from a shared cursor and report `(index, outcome)` pairs, so the
+    /// returned vector is in request order regardless of completion
+    /// order and per-request failures stay in their slot.
+    #[allow(clippy::type_complexity)]
+    fn run_analytic_pooled(
+        &self,
+        reqs: &[AnalysisRequest],
+    ) -> Vec<Result<(AnalysisReport, Option<EncodedKernel>), OsacaError>> {
+        let workers = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1)
+            .min(ANALYTIC_POOL_MAX)
+            .min(reqs.len());
+        if workers <= 1 {
+            return reqs.iter().map(|r| self.analytic_one(r)).collect();
+        }
+        let next = AtomicUsize::new(0);
+        let mut slots: Vec<Option<Result<(AnalysisReport, Option<EncodedKernel>), OsacaError>>> =
+            Vec::with_capacity(reqs.len());
+        slots.resize_with(reqs.len(), || None);
+        std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..workers)
+                .map(|_| {
+                    scope.spawn(|| {
+                        let mut out = Vec::new();
+                        loop {
+                            let i = next.fetch_add(1, Ordering::Relaxed);
+                            if i >= reqs.len() {
+                                break;
+                            }
+                            out.push((i, self.analytic_one(&reqs[i])));
+                        }
+                        out
+                    })
+                })
+                .collect();
+            for h in handles {
+                for (i, outcome) in h.join().expect("analytic worker panicked") {
+                    slots[i] = Some(outcome);
+                }
+            }
+        });
+        slots.into_iter().map(|s| s.expect("every request analyzed")).collect()
+    }
+
+    /// Run many requests: the in-process analytic passes run on the
+    /// scoped worker pool, then every baseline solve of the batch maps
     /// directly onto consecutive B=8 solver slots (`ceil(n/8)` artifact
     /// executions instead of one windowed reply channel per request).
-    /// Per-request failures do not abort the rest of the batch.
+    /// Results come back in request order; per-request failures do not
+    /// abort the rest of the batch.
     pub fn analyze_batch(
         &self,
         reqs: &[AnalysisRequest],
@@ -323,16 +405,7 @@ impl Engine {
         let mut results: Vec<Result<AnalysisReport, OsacaError>> = Vec::with_capacity(reqs.len());
         let mut baseline_idx: Vec<usize> = Vec::new();
         let mut baseline_encs: Vec<EncodedKernel> = Vec::new();
-        for (i, req) in reqs.iter().enumerate() {
-            let outcome = self.prepare(req).and_then(|(machine, kernel)| {
-                let report = self.run_inline(req, &machine, &kernel)?;
-                let enc = if req.passes.contains(Passes::BASELINE) {
-                    Some(self.encode_for_solver(&kernel, &machine)?)
-                } else {
-                    None
-                };
-                Ok((report, enc))
-            });
+        for (i, outcome) in self.run_analytic_pooled(reqs).into_iter().enumerate() {
             match outcome {
                 Ok((report, enc)) => {
                     if let Some(enc) = enc {

@@ -60,10 +60,15 @@ impl Kernel {
 pub fn extract_kernel(name: &str, src: &str) -> Result<Kernel> {
     let lines = parse_file(src).map_err(|e| anyhow::anyhow!("{e}"))?;
     let region = find_marked_region(&lines);
-    let body: Vec<Line> = match region {
-        Some(r) => lines[r.start..r.end].to_vec(),
-        None => innermost_loop(&lines)
-            .context("no IACA/OSACA markers and no label/backward-branch loop found")?,
+    // Borrow the body slice instead of cloning the lines; only the
+    // instructions are copied into the kernel.
+    let body: &[Line] = match region {
+        Some(r) => &lines[r.start..r.end],
+        None => {
+            let (head, end) = innermost_loop(&lines)
+                .context("no IACA/OSACA markers and no label/backward-branch loop found")?;
+            &lines[head..end]
+        }
     };
     let instructions: Vec<Instruction> = body
         .iter()
@@ -78,8 +83,9 @@ pub fn extract_kernel(name: &str, src: &str) -> Result<Kernel> {
     Ok(Kernel::from_instructions(name, instructions))
 }
 
-/// Fallback: find `label: ... ; jcc label` with the smallest span.
-fn innermost_loop(lines: &[Line]) -> Option<Vec<Line>> {
+/// Fallback: the `[head, end)` line range of the smallest
+/// `label: ... ; jcc label` loop.
+fn innermost_loop(lines: &[Line]) -> Option<(usize, usize)> {
     use std::collections::HashMap;
     let mut label_pos: HashMap<&str, usize> = HashMap::new();
     let mut best: Option<(usize, usize)> = None;
@@ -101,7 +107,7 @@ fn innermost_loop(lines: &[Line]) -> Option<Vec<Line>> {
             _ => {}
         }
     }
-    best.map(|(span, head)| lines[head..head + span + 1].to_vec())
+    best.map(|(span, head)| (head, head + span + 1))
 }
 
 #[cfg(test)]

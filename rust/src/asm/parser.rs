@@ -94,7 +94,13 @@ pub fn parse_instruction(code: &str, lineno: usize) -> Result<Instruction, Parse
     if matches!(mnemonic, "lock" | "rep" | "repz" | "repnz" | "notrack") {
         return parse_instruction(rest, lineno);
     }
-    let mnemonic = mnemonic.to_ascii_lowercase();
+    // GCC emits lower-case mnemonics; only pay for a case-fold when the
+    // source actually needs one.
+    let mnemonic = if mnemonic.bytes().any(|b| b.is_ascii_uppercase()) {
+        mnemonic.to_ascii_lowercase()
+    } else {
+        mnemonic.to_string()
+    };
     let operands = if rest.is_empty() {
         Vec::new()
     } else {
@@ -103,7 +109,7 @@ pub fn parse_instruction(code: &str, lineno: usize) -> Result<Instruction, Parse
             .map(|o| parse_operand(o.trim(), lineno, code))
             .collect::<Result<Vec<_>, _>>()?
     };
-    Ok(Instruction { mnemonic, operands, line: lineno, raw: code.to_string() })
+    Ok(Instruction { mnemonic, operands, line: lineno })
 }
 
 /// Split an operand list on commas that are not inside parentheses

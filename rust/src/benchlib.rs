@@ -18,6 +18,10 @@ pub struct Stats {
     pub stddev: Duration,
     pub min: Duration,
     pub max: Duration,
+    /// 10th-percentile sample (fast tail).
+    pub p10: Duration,
+    /// 90th-percentile sample (slow tail).
+    pub p90: Duration,
 }
 
 impl Stats {
@@ -60,6 +64,7 @@ pub fn bench<F: FnMut()>(name: &str, warmup: usize, samples: usize, mut f: F) ->
         .sum::<f64>()
         / times.len() as f64;
     let stddev = Duration::from_secs_f64(var.sqrt());
+    let percentile = |q: usize| times[(times.len() * q / 100).min(times.len() - 1)];
     Stats {
         name: name.to_string(),
         samples,
@@ -68,12 +73,74 @@ pub fn bench<F: FnMut()>(name: &str, warmup: usize, samples: usize, mut f: F) ->
         stddev,
         min: times[0],
         max: *times.last().unwrap(),
+        p10: percentile(10),
+        p90: percentile(90),
     }
 }
 
 /// Default sample counts used by the bench binaries.
 pub const WARMUP: usize = 3;
 pub const SAMPLES: usize = 15;
+
+/// Machine-readable benchmark results: accumulates `Stats` rows (plus
+/// derived rates like kernels/s) and serializes them as JSON, so the
+/// repo's perf trajectory can be tracked across PRs
+/// (`BENCH_hotpath.json`). Hand-rolled serialization — no serde in the
+/// offline build; names and rate keys must not contain `"` or `\`.
+#[derive(Debug, Default)]
+pub struct BenchJson {
+    rows: Vec<String>,
+}
+
+impl BenchJson {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one benchmark result with named derived rates
+    /// (e.g. `[("kernels_per_s", 1.2e6)]`). Names and keys are escaped
+    /// and non-finite rates become `null`, so the output always parses.
+    pub fn record(&mut self, s: &Stats, rates: &[(&str, f64)]) {
+        fn esc(s: &str) -> String {
+            s.replace('\\', "\\\\").replace('"', "\\\"")
+        }
+        fn num(v: f64) -> String {
+            if v.is_finite() {
+                format!("{v:.3}")
+            } else {
+                "null".to_string()
+            }
+        }
+        let rates_json = rates
+            .iter()
+            .map(|(k, v)| format!("\"{}\": {}", esc(k), num(*v)))
+            .collect::<Vec<_>>()
+            .join(", ");
+        self.rows.push(format!(
+            "    \"{}\": {{\"median_ns\": {}, \"p10_ns\": {}, \"p90_ns\": {}, \
+             \"mean_ns\": {}, \"samples\": {}, \"rates\": {{{}}}}}",
+            esc(&s.name),
+            s.median.as_nanos(),
+            s.p10.as_nanos(),
+            s.p90.as_nanos(),
+            s.mean.as_nanos(),
+            s.samples,
+            rates_json
+        ));
+    }
+
+    pub fn to_json(&self) -> String {
+        format!(
+            "{{\n  \"schema\": \"osaca-hotpath-bench-v1\",\n  \"results\": {{\n{}\n  }}\n}}\n",
+            self.rows.join(",\n")
+        )
+    }
+
+    /// Write the accumulated results to `path`.
+    pub fn write(&self, path: &str) -> std::io::Result<()> {
+        std::fs::write(path, self.to_json())
+    }
+}
 
 /// Print a markdown-ish table: header + rows of equal arity.
 pub fn print_table(title: &str, header: &[&str], rows: &[Vec<String>]) {
@@ -119,5 +186,45 @@ mod tests {
             std::hint::black_box(42);
         });
         assert!(s.per_sec(1000) > 0.0);
+    }
+
+    #[test]
+    fn percentiles_are_ordered() {
+        let s = bench("ordered", 0, 10, || {
+            std::hint::black_box(1 + 1);
+        });
+        assert!(s.min <= s.p10);
+        assert!(s.p10 <= s.median);
+        assert!(s.median <= s.p90);
+        assert!(s.p90 <= s.max);
+    }
+
+    #[test]
+    fn bench_json_shape() {
+        let s = bench("group/case", 0, 3, || {
+            std::hint::black_box(42);
+        });
+        let mut j = BenchJson::new();
+        j.record(&s, &[("kernels_per_s", 123.456)]);
+        let text = j.to_json();
+        assert!(text.contains("\"schema\": \"osaca-hotpath-bench-v1\""));
+        assert!(text.contains("\"group/case\""));
+        assert!(text.contains("\"median_ns\""));
+        assert!(text.contains("\"p10_ns\""));
+        assert!(text.contains("\"p90_ns\""));
+        assert!(text.contains("\"kernels_per_s\": 123.456"));
+    }
+
+    #[test]
+    fn bench_json_stays_parseable_on_hostile_input() {
+        let mut s = bench("quo\"te\\name", 0, 3, || {
+            std::hint::black_box(42);
+        });
+        s.median = Duration::ZERO; // forces a non-finite derived rate
+        let mut j = BenchJson::new();
+        j.record(&s, &[("rate", 1.0 / s.median.as_secs_f64())]);
+        let text = j.to_json();
+        assert!(text.contains("quo\\\"te\\\\name"));
+        assert!(text.contains("\"rate\": null"));
     }
 }

@@ -11,14 +11,19 @@ use super::operand::Operand;
 use super::register::{flags, Register};
 
 /// One parsed assembly instruction (AT&T operand order: destination last).
+///
+/// The raw source text is **not** stored: kernels clone instructions
+/// freely (extraction, requests, decode templates), and a per-
+/// instruction `String` of the source line doubled every clone's
+/// allocation count for a field only diagnostics want. `line` indexes
+/// into the kernel source for that, and `Display` reconstructs a
+/// canonical spelling.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Instruction {
     pub mnemonic: String,
     pub operands: Vec<Operand>,
     /// Source line number (1-based) for diagnostics and report tables.
     pub line: usize,
-    /// Raw source text, trimmed.
-    pub raw: String,
 }
 
 /// Canonical operand-type signature, e.g. `mem_xmm_xmm`.

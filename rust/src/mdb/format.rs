@@ -114,11 +114,15 @@ impl MachineModel {
             store_agu_simple_ports,
             params,
             entries: Default::default(),
+            index: Default::default(),
         };
         for (lineno, line) in entry_lines {
             let entry = parse_entry(&model, &line).with_context(|| format!("entry line {lineno}"))?;
             model.insert(entry);
         }
+        // Pre-resolve and intern every database form now, so the model
+        // comes up with a warm direct tier (see `mdb::index`).
+        model.prime_resolution_index();
         Ok(model)
     }
 

@@ -1,0 +1,99 @@
+//! Per-machine form-resolution cache — the `FormIndex`.
+//!
+//! `MachineModel::resolve` is the hottest query in the system: every
+//! analyzer pass, every simulator decode and every baseline encode
+//! resolves each kernel instruction against the model, and at serving
+//! scale the same forms are resolved millions of times (uops.info treats
+//! its form database the same way — a precompiled artifact queried, not
+//! recomputed). The index has two tiers:
+//!
+//! * **direct** — every database form, pre-resolved and interned behind
+//!   `Arc<ResolvedUops>` when the model is built (or lazily on the first
+//!   resolve after a mutation). A direct hit is one hash lookup and one
+//!   atomic refcount bump; no µ-op vectors are cloned.
+//! * **synth** — memoized synthesis results (suffix normalization,
+//!   mem-form synthesis, 256-bit splitting). The instruction form fully
+//!   determines the synthesized entry except for one bit of context:
+//!   whether a store's address is *simple* (dedicated simple-store AGU
+//!   ports, e.g. Haswell port 7), so the tier is keyed by
+//!   `(form, simple_addr)` as two form-keyed maps.
+//!
+//! Fresh (non-cached) syntheses bump both the per-model and the
+//! process-wide miss counters (`MachineModel::resolution_miss_count`,
+//! `mdb::resolution_miss_count`) so tests and benches can assert that
+//! repeated analyses of a kernel perform zero new resolutions.
+//!
+//! The index lives behind `Arc` inside `MachineModel`; cloning a model
+//! starts a **fresh** index (clones may be mutated — builder workflows
+//! strip and re-learn entries), and `MachineModel::insert` replaces the
+//! index wholesale. Mutating `MachineModel::entries` directly after
+//! resolution has begun on the same instance is not supported.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, OnceLock, RwLock};
+
+use crate::isa::InstructionForm;
+
+use super::entry::ResolvedUops;
+
+#[derive(Debug, Default)]
+pub(crate) struct FormIndex {
+    /// Interned direct resolutions, one per database form.
+    direct: OnceLock<HashMap<InstructionForm, Arc<ResolvedUops>>>,
+    /// Memoized synthesized resolutions; `[0]` = regular context,
+    /// `[1]` = simple-address store context.
+    synth: [RwLock<HashMap<InstructionForm, Arc<ResolvedUops>>>; 2],
+    /// Fresh syntheses performed through this index.
+    misses: AtomicUsize,
+}
+
+impl FormIndex {
+    /// The direct tier, built on first use from the model's entries.
+    pub(crate) fn direct_or_init<F>(
+        &self,
+        init: F,
+    ) -> &HashMap<InstructionForm, Arc<ResolvedUops>>
+    where
+        F: FnOnce() -> HashMap<InstructionForm, Arc<ResolvedUops>>,
+    {
+        self.direct.get_or_init(init)
+    }
+
+    pub(crate) fn synth_get(
+        &self,
+        form: &InstructionForm,
+        simple_addr: bool,
+    ) -> Option<Arc<ResolvedUops>> {
+        self.synth[simple_addr as usize]
+            .read()
+            .expect("form index poisoned")
+            .get(form)
+            .cloned()
+    }
+
+    /// Intern a freshly synthesized resolution. Under a concurrent race
+    /// the first insertion wins (both threads synthesized identical
+    /// values — synthesis is a pure function of the key).
+    pub(crate) fn synth_insert(
+        &self,
+        form: InstructionForm,
+        simple_addr: bool,
+        resolved: ResolvedUops,
+    ) -> Arc<ResolvedUops> {
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        super::note_resolution_miss();
+        let arc = Arc::new(resolved);
+        self.synth[simple_addr as usize]
+            .write()
+            .expect("form index poisoned")
+            .entry(form)
+            .or_insert(arc)
+            .clone()
+    }
+
+    /// Fresh syntheses performed through this index instance.
+    pub(crate) fn miss_count(&self) -> usize {
+        self.misses.load(Ordering::Relaxed)
+    }
+}

@@ -1,12 +1,14 @@
 //! The machine model: ports, parameters, entries, and form resolution.
 
 use std::collections::HashMap;
+use std::sync::Arc;
 
 use anyhow::{anyhow, Result};
 
 use crate::isa::{Instruction, InstructionForm};
 
 use super::entry::{FormEntry, Provenance, ResolvedUops, Uop, UopKind};
+use super::index::FormIndex;
 use super::port::PortMask;
 
 /// Microarchitectural parameters consumed by the simulator substrate.
@@ -48,7 +50,7 @@ impl Default for CoreParams {
 }
 
 /// A full machine model (one per microarchitecture).
-#[derive(Debug, Clone)]
+#[derive(Debug)]
 pub struct MachineModel {
     /// Short name used on the CLI (`skl`, `zen`).
     pub name: String,
@@ -84,6 +86,36 @@ pub struct MachineModel {
     pub store_agu_simple_ports: PortMask,
     pub params: CoreParams,
     pub entries: HashMap<InstructionForm, FormEntry>,
+    /// Per-machine form-resolution cache (see `mdb::index`). Replaced
+    /// wholesale by [`MachineModel::insert`]; fresh on every clone.
+    pub(crate) index: Arc<FormIndex>,
+}
+
+impl Clone for MachineModel {
+    /// Clones start with a **fresh** resolution cache: a clone may be
+    /// mutated (builder workflows strip and re-learn entries), and a
+    /// shared cache would serve stale resolutions afterwards.
+    fn clone(&self) -> Self {
+        MachineModel {
+            name: self.name.clone(),
+            arch_name: self.arch_name.clone(),
+            ports: self.ports.clone(),
+            frequency_ghz: self.frequency_ghz,
+            avx256_split: self.avx256_split,
+            hide_load_behind_store: self.hide_load_behind_store,
+            sim_zero_idiom_elim: self.sim_zero_idiom_elim,
+            sim_macro_fusion: self.sim_macro_fusion,
+            sim_move_elim: self.sim_move_elim,
+            sim_store_data_free: self.sim_store_data_free,
+            load_ports: self.load_ports,
+            store_data_ports: self.store_data_ports,
+            store_agu_ports: self.store_agu_ports,
+            store_agu_simple_ports: self.store_agu_simple_ports,
+            params: self.params.clone(),
+            entries: self.entries.clone(),
+            index: Arc::new(FormIndex::default()),
+        }
+    }
 }
 
 impl MachineModel {
@@ -109,24 +141,68 @@ impl MachineModel {
 
     pub fn insert(&mut self, entry: FormEntry) {
         self.entries.insert(entry.form.clone(), entry);
+        // The entry set changed: drop the resolution cache. It rebuilds
+        // lazily on the next resolve (or via `prime_resolution_index`).
+        self.index = Arc::new(FormIndex::default());
+    }
+
+    /// Build the direct tier of the resolution cache now instead of on
+    /// the first resolve. Called at `.mdb` parse time so built-in models
+    /// come up with every database form pre-resolved and interned.
+    pub fn prime_resolution_index(&self) {
+        let _ = self.direct_index();
+    }
+
+    /// Fresh (non-cached) syntheses this model instance has performed.
+    /// Flat across repeated analyses of the same kernel — asserted by
+    /// `tests/perf_caches.rs` and the hotpath bench.
+    pub fn resolution_miss_count(&self) -> usize {
+        self.index.miss_count()
+    }
+
+    fn direct_index(&self) -> &HashMap<InstructionForm, Arc<ResolvedUops>> {
+        self.index.direct_or_init(|| {
+            self.entries
+                .iter()
+                .map(|(f, e)| {
+                    let r = ResolvedUops { entry: e.clone(), provenance: Provenance::Direct };
+                    (f.clone(), Arc::new(r))
+                })
+                .collect()
+        })
     }
 
     /// Resolve the µ-ops for a concrete instruction, applying the
     /// synthesis fallbacks in order:
-    /// 1. direct hit;
+    /// 1. direct hit (pre-resolved, interned — no clone);
     /// 2. size-suffix normalization for scalar-int mnemonics
     ///    (`addl $1,%eax` -> `add-imm_r32` via `add-imm_r`);
     /// 3. 256-bit from 128-bit by µ-op doubling (when `avx256_split`);
     /// 4. memory form from register form + load/store µ-ops.
     ///
     /// Branches resolve to a zero-µ-op pseudo-entry when fused.
-    pub fn resolve(&self, ins: &Instruction) -> Result<ResolvedUops> {
+    ///
+    /// Synthesized resolutions (2-4) are memoized per
+    /// `(form, simple-address)` — the only instruction context beyond
+    /// the form that affects synthesis — so repeated resolution of the
+    /// same kernel is a lock-light cache hit.
+    pub fn resolve(&self, ins: &Instruction) -> Result<Arc<ResolvedUops>> {
         let form = ins.form();
-        if let Some(e) = self.entries.get(&form) {
-            return Ok(ResolvedUops { entry: e.clone(), provenance: Provenance::Direct });
+        if let Some(r) = self.direct_index().get(&form) {
+            return Ok(Arc::clone(r));
         }
+        let simple_addr = ins.mem_operand().map(|m| m.is_simple()).unwrap_or(false);
+        if let Some(r) = self.index.synth_get(&form, simple_addr) {
+            return Ok(r);
+        }
+        let fresh = self.resolve_fresh(ins, &form)?;
+        Ok(self.index.synth_insert(form, simple_addr, fresh))
+    }
+
+    /// The uncached synthesis fallbacks (steps 2-4 of [`resolve`]).
+    fn resolve_fresh(&self, ins: &Instruction, form: &InstructionForm) -> Result<ResolvedUops> {
         // 2. scalar-int suffix normalization.
-        if let Some(e) = self.suffix_normalized(&form) {
+        if let Some(e) = self.suffix_normalized(form) {
             return Ok(ResolvedUops { entry: e, provenance: Provenance::SynthesizedSuffix });
         }
         // 3. ymm from xmm when the architecture splits 256-bit ops.
@@ -149,14 +225,13 @@ impl MachineModel {
         }
         // 4. memory-form synthesis from the register form.
         if form.sig.0.contains("mem") {
-            if let Some(resolved) = self.synthesize_mem(ins, &form)? {
+            if let Some(resolved) = self.synthesize_mem(ins, form)? {
                 return Ok(resolved);
             }
         }
         Err(anyhow!(
-            "no database entry for instruction form `{form}` (line {}: `{}`) on {}",
+            "no database entry for instruction form `{form}` (line {}: `{ins}`) on {}",
             ins.line,
-            ins.raw,
             self.name
         ))
     }
@@ -343,5 +418,59 @@ mod tests {
     fn divider_ports_detected() {
         assert_eq!(skylake().divider_ports().count(), 1);
         assert_eq!(zen().divider_ports().count(), 1);
+    }
+
+    #[test]
+    fn synthesized_resolutions_are_interned() {
+        let skl = skylake();
+        // vsubpd mem form is synthesized; two instructions with the same
+        // form share one interned resolution and cost one miss total.
+        let a = skl.resolve(&ins("vsubpd (%rax), %xmm1, %xmm2")).unwrap();
+        let misses = skl.resolution_miss_count();
+        assert!(misses >= 1);
+        let b = skl.resolve(&ins("vsubpd 8(%rbx), %xmm5, %xmm6")).unwrap();
+        assert!(std::sync::Arc::ptr_eq(&a, &b));
+        assert_eq!(skl.resolution_miss_count(), misses);
+        // Direct hits are interned at index build time, never misses.
+        let c = skl.resolve(&ins("vaddpd %xmm1, %xmm2, %xmm3")).unwrap();
+        let d = skl.resolve(&ins("vaddpd %xmm4, %xmm5, %xmm6")).unwrap();
+        assert!(std::sync::Arc::ptr_eq(&c, &d));
+        assert_eq!(skl.resolution_miss_count(), misses);
+    }
+
+    #[test]
+    fn simple_and_indexed_stores_cache_separately() {
+        use super::super::haswell;
+        // On Haswell the store AGU port set depends on the addressing
+        // mode, so the two contexts must not share a cache slot.
+        let hsw = haswell();
+        let simple = hsw.resolve(&ins("vmovapd %ymm0, 32(%rdi)")).unwrap();
+        let indexed = hsw.resolve(&ins("vmovapd %ymm0, (%rdi,%rax,8)")).unwrap();
+        let agu_of = |r: &ResolvedUops| {
+            r.entry.uops.iter().find(|u| u.kind == UopKind::StoreAgu).unwrap().ports
+        };
+        assert_ne!(agu_of(&simple), agu_of(&indexed));
+        // And the cached re-resolve returns the same interned entries.
+        let simple2 = hsw.resolve(&ins("vmovapd %ymm1, 64(%rsi)")).unwrap();
+        assert!(std::sync::Arc::ptr_eq(&simple, &simple2));
+    }
+
+    #[test]
+    fn insert_invalidates_resolution_cache() {
+        let mut m = skylake();
+        assert!(m.resolve(&ins("frobnicate %xmm0, %xmm1")).is_err());
+        let entry = FormEntry {
+            form: InstructionForm::new("frobnicate", "xmm_xmm"),
+            latency: 2.0,
+            throughput: 1.0,
+            uops: vec![Uop {
+                kind: UopKind::Compute,
+                ports: PortMask::single(0),
+                occupancy: 1.0,
+            }],
+        };
+        m.insert(entry);
+        let r = m.resolve(&ins("frobnicate %xmm0, %xmm1")).unwrap();
+        assert_eq!(r.provenance, Provenance::Direct);
     }
 }

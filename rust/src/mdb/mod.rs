@@ -17,6 +17,7 @@
 
 pub mod entry;
 pub mod format;
+pub(crate) mod index;
 pub mod machine;
 pub mod port;
 
@@ -35,6 +36,22 @@ static BUILTIN_PARSES: AtomicUsize = AtomicUsize::new(0);
 /// How many embedded-model parses have happened so far (diagnostics).
 pub fn builtin_parse_count() -> usize {
     BUILTIN_PARSES.load(Ordering::Relaxed)
+}
+
+/// Process-wide count of *fresh* form resolutions — synthesis work that
+/// was not served from a `FormIndex` cache. In the spirit of
+/// [`builtin_parse_count`]: flat across repeated analyses of the same
+/// kernels, so tests and `benches/hotpath.rs` can assert the warm path
+/// performs zero new resolutions. (Per-model instance counts are on
+/// [`MachineModel::resolution_miss_count`].)
+pub fn resolution_miss_count() -> usize {
+    RESOLUTION_MISSES.load(Ordering::Relaxed)
+}
+
+static RESOLUTION_MISSES: AtomicUsize = AtomicUsize::new(0);
+
+pub(crate) fn note_resolution_miss() {
+    RESOLUTION_MISSES.fetch_add(1, Ordering::Relaxed);
 }
 
 fn parse_builtin(text: &str, which: &str) -> Arc<MachineModel> {

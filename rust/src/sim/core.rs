@@ -4,6 +4,15 @@
 //! rename/dispatch → schedule → execute → retire pipeline and reports
 //! steady-state cycles per assembly iteration plus hardware-style event
 //! counters.
+//!
+//! The clock is **event-skipping**: on cycles where nothing retired,
+//! issued or dispatched, the machine state is frozen except for time,
+//! so the loop jumps directly to the next known event (a µ-op
+//! completing, a port freeing, a scheduler wake hint) instead of
+//! stepping `cycle += 1` through dead cycles. Stall counters are
+//! accounted for the skipped span exactly as the strict loop would
+//! have, so results are bit-identical (see DESIGN.md §Perf for why the
+//! skip cannot change retire/dispatch ordering).
 
 use std::collections::{HashMap, VecDeque};
 
@@ -13,7 +22,7 @@ use crate::asm::Kernel;
 use crate::isa::register::RegisterFile;
 use crate::mdb::{MachineModel, UopKind};
 
-use super::decode::{decode_kernel, DecodedIter, DepSource, DepVersion, MemIdent};
+use super::decode::{slot_structure, DecodedIter, DecodedKernel, DepSource, DepVersion, MemIdent};
 use super::trace::Counters;
 
 /// Simulation run parameters.
@@ -90,11 +99,31 @@ fn instantiate(ident: &MemIdent, iter: u64, uops_per_iter: u64) -> MemKey {
     }
 }
 
-#[derive(Debug, Clone, Copy, PartialEq)]
-enum UopState {
-    Waiting,
-    /// Issued; result available at the stored cycle.
-    Done(u64),
+/// Ring sentinel: the µ-op is dispatched but has no completion cycle
+/// yet (not issued).
+const NOT_DONE: u64 = u64::MAX;
+
+/// Completion cycle of a µ-op by global id, against the done-cycle
+/// ring. Retired µ-ops (gid below the ROB head) completed long ago;
+/// gids at or past the dispatch cursor have no entry yet.
+#[inline]
+fn done_at(
+    done: &[u64],
+    ring_mask: usize,
+    rob_head_gid: u64,
+    next_gid: u64,
+    gid: u64,
+) -> Option<u64> {
+    if gid < rob_head_gid {
+        return Some(0); // retired long ago
+    }
+    if gid >= next_gid {
+        return None; // not yet dispatched
+    }
+    match done[(gid as usize) & ring_mask] {
+        NOT_DONE => None,
+        c => Some(c),
+    }
 }
 
 #[derive(Debug, Clone)]
@@ -102,19 +131,37 @@ struct InFlight {
     /// Index into the iteration template.
     tidx: usize,
     iter: u64,
-    state: UopState,
     /// Forwarding source (global store id), resolved at dispatch.
     fwd_store: Option<u64>,
 }
 
 /// Simulate `cfg.warmup + cfg.iterations` iterations of the kernel.
 pub fn simulate(kernel: &Kernel, machine: &MachineModel, cfg: SimConfig) -> Result<Measurement> {
-    let template = decode_kernel(kernel, machine)?;
-    Ok(run(&template, machine, cfg))
+    let template = DecodedKernel::new(kernel, machine)?;
+    Ok(run_decoded(&template, machine, cfg))
 }
 
-/// Run a pre-decoded template (used by ibench to avoid re-decoding).
+/// Run a pre-decoded iteration template. Computes the slot structure on
+/// every call; hot paths that re-simulate the same kernel should build
+/// a [`DecodedKernel`] once and use [`run_decoded`].
 pub fn run(template: &DecodedIter, machine: &MachineModel, cfg: SimConfig) -> Measurement {
+    let (slot_ranges, empty_slots) = slot_structure(template);
+    run_core(template, &slot_ranges, empty_slots, machine, cfg)
+}
+
+/// Run a prebuilt [`DecodedKernel`]: no per-call decode or slot-range
+/// work. Bit-identical to [`simulate`] on the same kernel.
+pub fn run_decoded(dk: &DecodedKernel, machine: &MachineModel, cfg: SimConfig) -> Measurement {
+    run_core(&dk.iter, &dk.slot_ranges, dk.empty_slots, machine, cfg)
+}
+
+fn run_core(
+    template: &DecodedIter,
+    slot_ranges: &[(usize, usize)],
+    empty_slots: usize,
+    machine: &MachineModel,
+    cfg: SimConfig,
+) -> Measurement {
     let nuops = template.uops.len();
     let total_iters = (cfg.warmup + cfg.iterations) as u64;
     let uops_per_iter = nuops as u64;
@@ -126,25 +173,18 @@ pub fn run(template: &DecodedIter, machine: &MachineModel, cfg: SimConfig) -> Me
     let fwd_lat = machine.params.store_forward_latency as u64;
     let load_lat = machine.params.load_latency as u64;
 
-    // Slot structure for frontend/retire bandwidth: ranges of µ-ops that
-    // share a fused rename slot, plus eliminated-but-renamed slots that
-    // consume dispatch bandwidth without entering the ROB.
-    let mut slot_ranges: Vec<(usize, usize)> = Vec::new();
-    for (i, u) in template.uops.iter().enumerate() {
-        if u.new_slot {
-            slot_ranges.push((i, i + 1));
-        } else if let Some(last) = slot_ranges.last_mut() {
-            last.1 = i + 1;
-        }
-    }
-    let empty_slots = template.slots.saturating_sub(slot_ranges.len());
-
     let mut rob: VecDeque<InFlight> = VecDeque::with_capacity(rob_size + nuops);
     // Un-issued µ-ops (global id, wake-up hint) in dispatch order — the
     // scheduler. The hint is the earliest cycle the µ-op could possibly
     // issue (dep completion / port free time), so sleeping µ-ops are
     // skipped with one comparison.
     let mut waiting: Vec<(u64, u64)> = Vec::with_capacity(sched_size + nuops);
+    // Done-cycle ring indexed by gid: completion cycle of every
+    // in-flight µ-op, NOT_DONE before issue. In-flight count is bounded
+    // by the ROB, so `gid & ring_mask` never collides.
+    let ring_cap = (rob_size + nuops + 1).next_power_of_two();
+    let ring_mask = ring_cap - 1;
+    let mut done: Vec<u64> = vec![NOT_DONE; ring_cap];
     let mut rob_head_gid: u64 = 0; // global id of rob.front()
     let mut next_gid: u64 = 0; // next µ-op to dispatch (global)
     let mut sched_occupancy: usize = 0;
@@ -172,19 +212,6 @@ pub fn run(template: &DecodedIter, machine: &MachineModel, cfg: SimConfig) -> Me
     let mut cycle: u64 = 0;
     let max_cycles: u64 = 1_000_000_000; // hard safety stop
 
-    let done_of = |rob: &VecDeque<InFlight>, rob_head_gid: u64, gid: u64| -> Option<u64> {
-        if gid < rob_head_gid {
-            return Some(0); // retired long ago
-        }
-        match rob.get((gid - rob_head_gid) as usize) {
-            Some(f) => match f.state {
-                UopState::Done(c) => Some(c),
-                UopState::Waiting => None,
-            },
-            None => None, // not yet dispatched
-        }
-    };
-
     while retired_iters < total_iters && cycle < max_cycles {
         // ---------------- retire ------------------------------------
         let mut retired_slots = 0;
@@ -196,15 +223,21 @@ pub fn run(template: &DecodedIter, machine: &MachineModel, cfg: SimConfig) -> Me
                 continue;
             }
             let (s, e) = slot_ranges[ret_slot - empty_slots];
-            let first_gid = ret_iter * uops_per_iter + s as u64;
-            if first_gid < rob_head_gid {
-                // already popped (shouldn't happen) — advance
-                ret_slot += 1;
-                continue;
-            }
+            // Invariant: retirement is gid-indexed — slots pop from the
+            // ROB front exactly once, in order, so the slot's first
+            // µ-op is always the current head. (An older revision
+            // silently advanced `ret_slot` when this was violated.)
+            debug_assert_eq!(
+                ret_iter * uops_per_iter + s as u64,
+                rob_head_gid,
+                "retire cursor desynced from ROB head"
+            );
             let all_done = (s..e).all(|t| {
                 let gid = ret_iter * uops_per_iter + t as u64;
-                matches!(done_of(&rob, rob_head_gid, gid), Some(c) if c <= cycle)
+                matches!(
+                    done_at(&done, ring_mask, rob_head_gid, next_gid, gid),
+                    Some(c) if c <= cycle
+                )
             });
             if !all_done {
                 break;
@@ -239,7 +272,7 @@ pub fn run(template: &DecodedIter, machine: &MachineModel, cfg: SimConfig) -> Me
             }
             let gid = *gid;
             let i = (gid - rob_head_gid) as usize;
-            debug_assert_eq!(rob[i].state, UopState::Waiting);
+            debug_assert_eq!(done[(gid as usize) & ring_mask], NOT_DONE);
             let tu = &template.uops[rob[i].tidx];
             // Dependencies ready?
             let iter = rob[i].iter;
@@ -255,7 +288,7 @@ pub fn run(template: &DecodedIter, machine: &MachineModel, cfg: SimConfig) -> Me
                     }
                     DepSource::Invariant => continue,
                 };
-                match done_of(&rob, rob_head_gid, dep_gid) {
+                match done_at(&done, ring_mask, rob_head_gid, next_gid, dep_gid) {
                     Some(c) if c <= cycle => {}
                     Some(c) => {
                         // Dep issued; completion cycle is known — sleep.
@@ -278,7 +311,7 @@ pub fn run(template: &DecodedIter, machine: &MachineModel, cfg: SimConfig) -> Me
                 match store_done
                     .get(&sid)
                     .copied()
-                    .or_else(|| done_of(&rob, rob_head_gid, sid))
+                    .or_else(|| done_at(&done, ring_mask, rob_head_gid, next_gid, sid))
                 {
                     Some(c) if c <= cycle => fwd_done = Some(c),
                     Some(c) => {
@@ -327,7 +360,7 @@ pub fn run(template: &DecodedIter, machine: &MachineModel, cfg: SimConfig) -> Me
                 }
                 dc
             };
-            rob[i].state = UopState::Done(done_cycle);
+            done[(gid as usize) & ring_mask] = done_cycle;
             sched_occupancy -= 1;
             counters.uops_executed += 1;
             issued_any = true;
@@ -342,6 +375,7 @@ pub fn run(template: &DecodedIter, machine: &MachineModel, cfg: SimConfig) -> Me
 
         // ---------------- dispatch / rename --------------------------
         let mut dispatched = 0;
+        let mut dispatch_blocked = false;
         while dispatched < rename_width && disp_iter < total_iters {
             if disp_slot < empty_slots {
                 disp_slot += 1;
@@ -352,6 +386,7 @@ pub fn run(template: &DecodedIter, machine: &MachineModel, cfg: SimConfig) -> Me
             let n_new = e - s;
             if rob.len() + n_new > rob_size || sched_occupancy + n_new > sched_size {
                 counters.dispatch_stall_cycles += 1;
+                dispatch_blocked = true;
                 break;
             }
             for t in s..e {
@@ -371,12 +406,8 @@ pub fn run(template: &DecodedIter, machine: &MachineModel, cfg: SimConfig) -> Me
                         last_store.insert(key, next_gid);
                     }
                 }
-                rob.push_back(InFlight {
-                    tidx: t,
-                    iter: disp_iter,
-                    state: UopState::Waiting,
-                    fwd_store,
-                });
+                rob.push_back(InFlight { tidx: t, iter: disp_iter, fwd_store });
+                done[(next_gid as usize) & ring_mask] = NOT_DONE;
                 waiting.push((next_gid, 0));
                 next_gid += 1;
                 sched_occupancy += 1;
@@ -393,6 +424,48 @@ pub fn run(template: &DecodedIter, machine: &MachineModel, cfg: SimConfig) -> Me
                     store_done.retain(|gid, _| *gid >= min_keep);
                     last_store.retain(|_, gid| *gid >= min_keep);
                 }
+            }
+        }
+
+        // ---------------- clock / event skip ------------------------
+        // When the cycle retired nothing, issued nothing and dispatched
+        // nothing, the machine is frozen except for the clock: retire
+        // waits on completion cycles ≥ the next event, every scheduler
+        // entry waits on an unissued dep, a completion, a forwarding
+        // store or a busy port, and dispatch is capacity-blocked (or
+        // drained). Jump just before the earliest such event; the
+        // per-cycle stall counters are the only observable effect of
+        // the skipped span, and they accrue exactly as the strict loop
+        // would have — so retire/dispatch ordering and all Measurement
+        // fields stay bit-identical.
+        if retired_slots == 0 && !issued_any && dispatched == 0 {
+            let mut next_event = u64::MAX;
+            for &(_, wake) in &waiting {
+                if wake > cycle && wake < next_event {
+                    next_event = wake;
+                }
+            }
+            for gid in rob_head_gid..next_gid {
+                let d = done[(gid as usize) & ring_mask];
+                if d != NOT_DONE && d > cycle && d < next_event {
+                    next_event = d;
+                }
+            }
+            for &free in &port_free_at {
+                if free > cycle && free < next_event {
+                    next_event = free;
+                }
+            }
+            let target = next_event.min(max_cycles);
+            if target > cycle + 1 {
+                let skipped = target - cycle - 1;
+                if !rob.is_empty() {
+                    counters.issue_stall_cycles += skipped;
+                }
+                if dispatch_blocked {
+                    counters.dispatch_stall_cycles += skipped;
+                }
+                cycle = target - 1;
             }
         }
 
@@ -510,5 +583,23 @@ mod tests {
         let ra = a.counters.issue_stall_cycles as f64 / a.window_cycles as f64;
         let rb = b.counters.issue_stall_cycles as f64 / b.window_cycles as f64;
         assert!(ra > 4.0 * rb.max(0.01), "stall ratios {ra} vs {rb}");
+    }
+
+    #[test]
+    fn run_and_run_decoded_agree() {
+        // The compat shim (per-call slot structure) and the prebuilt
+        // DecodedKernel path must produce identical measurements.
+        let src = "\n.L1:\nvdivsd %xmm1, %xmm2, %xmm0\nvaddpd %xmm3, %xmm4, %xmm4\ncmpl $1, %eax\njne .L1\n";
+        let k = extract_kernel("t", src).unwrap();
+        let m = skylake();
+        let cfg = SimConfig { iterations: 200, warmup: 40 };
+        let template = super::super::decode::decode_kernel(&k, &m).unwrap();
+        let a = run(&template, &m, cfg);
+        let dk = DecodedKernel::from_iter(template);
+        let b = run_decoded(&dk, &m, cfg);
+        assert_eq!(a.total_cycles, b.total_cycles);
+        assert_eq!(a.window_cycles, b.window_cycles);
+        assert_eq!(a.counters, b.counters);
+        assert_eq!(a.port_busy, b.port_busy);
     }
 }

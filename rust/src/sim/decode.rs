@@ -4,6 +4,8 @@
 //! the core replays it N times, renaming registers and memory versions
 //! per iteration.
 
+use std::sync::Arc;
+
 use anyhow::Result;
 
 use crate::asm::Kernel;
@@ -81,6 +83,60 @@ pub struct DecodedIter {
     /// Instructions eliminated at rename (zero idioms, moves, fused
     /// branches) — they consume no scheduler entry.
     pub eliminated: usize,
+}
+
+/// A reusable decode artifact: the µ-op template of one iteration plus
+/// the slot structure the core loop consumes, built **once** per
+/// (kernel, machine) and shared across `simulate` calls and iteration
+/// counts. Cloning is cheap (the template is behind `Arc`), so a
+/// `DecodedKernel` can be handed to several simulation runs — the
+/// results are bit-identical to decoding fresh every time
+/// (`tests/perf_caches.rs` asserts this).
+#[derive(Debug, Clone)]
+pub struct DecodedKernel {
+    /// The decoded iteration template (µ-ops, dep edges).
+    pub iter: Arc<DecodedIter>,
+    /// Ranges of template µ-ops sharing one fused rename slot
+    /// (micro-fusion: load+compute, store-data+AGU).
+    pub slot_ranges: Vec<(usize, usize)>,
+    /// Slots eliminated at rename: they consume dispatch and retire
+    /// bandwidth but never enter the ROB.
+    pub empty_slots: usize,
+}
+
+impl DecodedKernel {
+    /// Decode `kernel` against `machine` and precompute the slot
+    /// structure.
+    pub fn new(kernel: &Kernel, machine: &MachineModel) -> Result<Self> {
+        Ok(Self::from_iter(decode_kernel(kernel, machine)?))
+    }
+
+    /// Wrap an already-decoded iteration template.
+    pub fn from_iter(iter: DecodedIter) -> Self {
+        let (slot_ranges, empty_slots) = slot_structure(&iter);
+        DecodedKernel { iter: Arc::new(iter), slot_ranges, empty_slots }
+    }
+
+    /// Total rename/retire slots per iteration.
+    pub fn total_slots(&self) -> usize {
+        self.empty_slots + self.slot_ranges.len()
+    }
+}
+
+/// Slot structure for frontend/retire bandwidth: ranges of µ-ops that
+/// share a fused rename slot, plus eliminated-but-renamed slots that
+/// consume dispatch bandwidth without entering the ROB.
+pub(crate) fn slot_structure(iter: &DecodedIter) -> (Vec<(usize, usize)>, usize) {
+    let mut slot_ranges: Vec<(usize, usize)> = Vec::new();
+    for (i, u) in iter.uops.iter().enumerate() {
+        if u.new_slot {
+            slot_ranges.push((i, i + 1));
+        } else if let Some(last) = slot_ranges.last_mut() {
+            last.1 = i + 1;
+        }
+    }
+    let empty_slots = iter.slots.saturating_sub(slot_ranges.len());
+    (slot_ranges, empty_slots)
 }
 
 /// Decode the kernel against the machine model.

@@ -19,7 +19,7 @@ fn marked_regions_exclude_markers() {
     for w in workloads::all() {
         let k = w.kernel();
         for i in &k.instructions {
-            assert_ne!(i.mnemonic, "movl", "{}: marker leaked into kernel: {}", w.name(), i.raw);
+            assert_ne!(i.mnemonic, "movl", "{}: marker leaked into kernel: {i}", w.name());
         }
     }
 }

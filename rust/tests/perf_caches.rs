@@ -1,0 +1,170 @@
+//! Tests for the zero-realloc pipeline caches (PR 2):
+//!
+//! * `FormIndex`: repeated `analyze`/`simulate`/`encode` of the same
+//!   kernel performs zero fresh form resolutions after the first pass;
+//! * `DecodedKernel` reuse produces bit-identical `Measurement`s to
+//!   fresh decodes on every workload and both architectures;
+//! * the pooled `Engine::analyze_batch` returns results in request
+//!   order with per-slot errors preserved.
+
+use osaca::analyzer::{analyze, critical_path};
+use osaca::api::{Engine, OsacaError, Passes};
+use osaca::baseline::encode;
+use osaca::mdb;
+use osaca::sim::{run_decoded, simulate, DecodedKernel, SimConfig};
+use osaca::workloads;
+
+#[test]
+fn repeated_analysis_performs_no_fresh_resolutions() {
+    // A private model instance => a private miss counter, immune to
+    // other tests in this binary warming the shared registry model.
+    let m = mdb::skylake();
+    let cfg = SimConfig { iterations: 60, warmup: 15 };
+    for w in workloads::all() {
+        let k = w.kernel();
+        // First pass over each entry point warms the caches.
+        analyze(&k, &m).unwrap();
+        simulate(&k, &m, cfg).unwrap();
+        encode(&k, &m).unwrap();
+        critical_path(&k, &m).unwrap();
+        let misses = m.resolution_miss_count();
+        // Every further pass must be served entirely from the cache.
+        for _ in 0..3 {
+            analyze(&k, &m).unwrap();
+            simulate(&k, &m, cfg).unwrap();
+            encode(&k, &m).unwrap();
+            critical_path(&k, &m).unwrap();
+        }
+        assert_eq!(
+            m.resolution_miss_count(),
+            misses,
+            "{}: repeated analysis re-synthesized a form",
+            w.name()
+        );
+    }
+    // The process-wide counter exists and has seen this work.
+    assert!(mdb::resolution_miss_count() >= m.resolution_miss_count());
+}
+
+#[test]
+fn decoded_kernel_reuse_is_bit_identical() {
+    let cfg = SimConfig { iterations: 150, warmup: 40 };
+    for arch in ["skl", "zen"] {
+        let m = mdb::by_name_shared(arch).unwrap();
+        for w in workloads::all() {
+            let k = w.kernel();
+            let fresh = simulate(&k, &m, cfg).unwrap();
+            let dk = DecodedKernel::new(&k, &m).unwrap();
+            for round in 0..3 {
+                let reused = run_decoded(&dk, &m, cfg);
+                let tag = format!("{}/{arch} round {round}", w.name());
+                assert_eq!(fresh.total_cycles, reused.total_cycles, "{tag}");
+                assert_eq!(fresh.window_cycles, reused.window_cycles, "{tag}");
+                assert_eq!(fresh.iterations, reused.iterations, "{tag}");
+                assert_eq!(fresh.counters, reused.counters, "{tag}");
+                assert_eq!(fresh.port_busy, reused.port_busy, "{tag}");
+                assert_eq!(
+                    fresh.cycles_per_iteration.to_bits(),
+                    reused.cycles_per_iteration.to_bits(),
+                    "{tag}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn decoded_kernel_clone_shares_template() {
+    let m = mdb::by_name_shared("skl").unwrap();
+    let k = workloads::find("pi", "skl", "-O3").unwrap().kernel();
+    let dk = DecodedKernel::new(&k, &m).unwrap();
+    let dk2 = dk.clone();
+    assert!(std::sync::Arc::ptr_eq(&dk.iter, &dk2.iter));
+    assert_eq!(dk.total_slots(), dk2.total_slots());
+}
+
+#[test]
+fn pooled_batch_preserves_order_and_per_slot_errors() {
+    let engine = Engine::cpu_only();
+    let ws = workloads::all();
+    let good_src = ws[0].source;
+    let mut reqs = Vec::new();
+    for i in 0..24usize {
+        let req = if i % 5 == 3 {
+            // Unresolvable form: fails pre-validation in its slot.
+            Engine::request(&format!("bad-{i}"))
+                .arch("skl")
+                .source("\n.L1:\nfrobnicate %xmm0, %xmm1\njne .L1\n")
+        } else if i % 7 == 4 {
+            // Unknown architecture: fails model lookup in its slot.
+            Engine::request(&format!("noarch-{i}")).arch("m1max").source(good_src)
+        } else {
+            let w = ws[i % ws.len()];
+            Engine::request(&format!("req-{i}"))
+                .arch(if i % 2 == 0 { "skl" } else { "zen" })
+                .source(w.source)
+                .passes(Passes::ANALYTIC)
+                .unroll(w.unroll)
+        };
+        reqs.push(req);
+    }
+    let results = engine.analyze_batch(&reqs);
+    assert_eq!(results.len(), reqs.len());
+    for (i, r) in results.iter().enumerate() {
+        if i % 5 == 3 {
+            match r {
+                Err(OsacaError::UnresolvedForm { form, arch, .. }) => {
+                    assert!(form.contains("frobnicate"), "slot {i}: {form}");
+                    assert_eq!(arch, "skl");
+                }
+                other => panic!("slot {i}: expected UnresolvedForm, got {other:?}"),
+            }
+        } else if i % 7 == 4 {
+            match r {
+                Err(OsacaError::UnknownArch { requested, .. }) => {
+                    assert_eq!(requested, "m1max", "slot {i}");
+                }
+                other => panic!("slot {i}: expected UnknownArch, got {other:?}"),
+            }
+        } else {
+            let rep = r.as_ref().unwrap_or_else(|e| panic!("slot {i}: {e}"));
+            // Order is preserved: the report carries its request's name.
+            assert_eq!(rep.name, format!("req-{i}"));
+            assert!(rep.throughput.is_some(), "slot {i}");
+            assert!(rep.critpath.is_some(), "slot {i}");
+            assert!(rep.baseline.is_some(), "slot {i}");
+        }
+    }
+}
+
+#[test]
+fn pooled_batch_matches_serial_analyze() {
+    // The worker pool must not change any numbers: batch results equal
+    // one-at-a-time analyze() results.
+    let engine = Engine::cpu_only();
+    let reqs: Vec<_> = workloads::all()
+        .iter()
+        .map(|w| {
+            Engine::request(&w.name())
+                .arch("skl")
+                .source(w.source)
+                .passes(Passes::THROUGHPUT | Passes::CRITPATH)
+                .unroll(w.unroll)
+        })
+        .collect();
+    let batch = engine.analyze_batch(&reqs);
+    for (req, b) in reqs.iter().zip(batch) {
+        let serial = engine.analyze(req).unwrap();
+        let b = b.unwrap();
+        let (st, bt) = (serial.throughput.unwrap(), b.throughput.unwrap());
+        assert_eq!(st.cy_per_asm_iter.to_bits(), bt.cy_per_asm_iter.to_bits(), "{}", req.name);
+        assert_eq!(st.bottleneck_port, bt.bottleneck_port, "{}", req.name);
+        let (sc, bc) = (serial.critpath.unwrap(), b.critpath.unwrap());
+        assert_eq!(
+            sc.carried_per_iteration.to_bits(),
+            bc.carried_per_iteration.to_bits(),
+            "{}",
+            req.name
+        );
+    }
+}
