@@ -24,6 +24,13 @@ echo "== tier-1: tests =="
 cargo test -q
 
 if [[ "${1:-}" != "--quick" ]]; then
+    # Release-mode tests: debug_assert!-guarded invariants (simulator
+    # scheduling, decode wiring) must not mask different release-build
+    # behavior — the retire-cursor invariant in sim/core.rs is
+    # release-checked for exactly this reason.
+    echo "== tier-1: tests (release) =="
+    cargo test -q --release
+
     echo "== style: rustfmt =="
     cargo fmt --check
 

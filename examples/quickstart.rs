@@ -1,6 +1,9 @@
-//! Quickstart: analyze the Schönauer triad for both architectures and
-//! compare against the simulated hardware — the paper's Fig. 4 flow,
-//! driven entirely through the `osaca::api` session layer.
+//! Quickstart: analyze the Schönauer triad for x86 (Skylake, Zen) and
+//! AArch64 (ThunderX2) and compare against the simulated hardware —
+//! the paper's Fig. 4 flow plus its "generalize to new architectures"
+//! outlook, driven entirely through the `osaca::api` session layer
+//! (the `tx2` arch flips the frontend to the AArch64 syntax
+//! automatically).
 //!
 //! Run: `cargo run --release --example quickstart`
 
@@ -10,8 +13,8 @@ use osaca::workloads;
 
 fn main() -> Result<()> {
     let engine = Engine::new();
-    for arch in ["skl", "zen"] {
-        let w = workloads::find("triad", arch, "-O3").unwrap();
+    for (arch, flag) in [("skl", "-O3"), ("zen", "-O3"), ("tx2", "-O2")] {
+        let w = workloads::find("triad", arch, flag).unwrap();
 
         // One request, every pass: OSACA throughput analysis (Tables
         // II/IV), the balanced IACA-like baseline through the batching

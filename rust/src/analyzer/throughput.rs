@@ -60,8 +60,11 @@ pub fn analyze(kernel: &Kernel, machine: &MachineModel) -> Result<Analysis> {
     for (i, ins) in kernel.instructions.iter().enumerate() {
         let mut occ = vec![0f32; np];
         let mut hid = vec![0f32; np];
-        if ins.is_branch() {
-            // Branches carry no port occupancy in OSACA's model.
+        if ins.is_fusible_branch() {
+            // Fusible branches (x86 jcc, AArch64 b.<cond>) carry no
+            // port occupancy in OSACA's model. AArch64
+            // compare-and-branch forms execute a real µ-op and are
+            // charged below, matching `sim::decode`.
             lines.push(LineOccupancy {
                 instr: i,
                 text: ins.to_string(),

@@ -23,6 +23,9 @@ pub enum OsacaError {
     /// An instruction form has no database entry and could not be
     /// synthesized.
     UnresolvedForm { form: String, line: usize, arch: String },
+    /// The kernel's instruction-set architecture does not match the
+    /// machine model's (e.g. an x86 kernel against the `tx2` model).
+    IsaMismatch { kernel_isa: &'static str, model_isa: &'static str, arch: String },
     /// The request carried neither source text nor a kernel.
     EmptyRequest { name: String },
     /// The kernel does not fit the solver artifact's µ-op budget.
@@ -59,6 +62,11 @@ impl fmt::Display for OsacaError {
                 f,
                 "no {arch} database entry for instruction form `{form}` (line {line}); \
                  run with --learn or add the entry"
+            ),
+            OsacaError::IsaMismatch { kernel_isa, model_isa, arch } => write!(
+                f,
+                "ISA mismatch: {kernel_isa} kernel cannot be analyzed against the \
+                 {model_isa} model `{arch}`"
             ),
             OsacaError::EmptyRequest { name } => {
                 write!(f, "request `{name}` has neither source text nor a kernel")

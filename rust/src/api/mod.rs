@@ -47,7 +47,7 @@ use std::sync::{Arc, OnceLock, RwLock};
 use std::time::Duration;
 
 use crate::analyzer::{analyze, critical_path_decoded};
-use crate::asm::{extract_kernel, Kernel};
+use crate::asm::{extract_kernel_isa, Kernel};
 use crate::baseline::{encode, to_prediction};
 use crate::coordinator::{Coordinator, CoordinatorConfig, ServiceStats, SubmitError};
 use crate::mdb::{self, MachineModel};
@@ -227,21 +227,44 @@ impl Engine {
 
     /// Resolve the request's machine + kernel and pre-validate that
     /// every non-branch instruction resolves against the model, so
-    /// pass execution cannot fail with a stringly error.
+    /// pass execution cannot fail with a stringly error. Source text
+    /// is parsed with the request's ISA override if set, otherwise the
+    /// machine model's ISA — the kernel and model ISAs must agree.
     fn prepare(&self, req: &AnalysisRequest) -> Result<(Arc<MachineModel>, Kernel), OsacaError> {
         let machine = match &req.machine {
             Some(m) => m.clone(),
             None => self.machine(&req.arch)?,
         };
+        let isa = req.isa.unwrap_or(machine.isa);
+        // A forced syntax that disagrees with the model is decidable
+        // before parsing: fail fast with the structured error instead
+        // of parsing the source under a grammar that cannot match.
+        if isa != machine.isa {
+            return Err(OsacaError::IsaMismatch {
+                kernel_isa: isa.name(),
+                model_isa: machine.isa.name(),
+                arch: machine.name.clone(),
+            });
+        }
         let kernel = match (&req.kernel, &req.source) {
             (Some(k), _) => k.clone(),
-            (None, Some(src)) => extract_kernel(&req.name, src)
+            (None, Some(src)) => extract_kernel_isa(&req.name, src, isa)
                 .map_err(|e| error::parse_failure(&req.name, &e))?,
             (None, None) => return Err(OsacaError::EmptyRequest { name: req.name.clone() }),
         };
+        if kernel.isa != machine.isa {
+            return Err(OsacaError::IsaMismatch {
+                kernel_isa: kernel.isa.name(),
+                model_isa: machine.isa.name(),
+                arch: machine.name.clone(),
+            });
+        }
         if !req.passes.is_empty() {
             for ins in &kernel.instructions {
-                if ins.is_branch() {
+                // Branches that macro-fuse away are never resolved;
+                // AArch64 compare-and-branch forms execute a real µ-op
+                // and must pre-validate like any other instruction.
+                if ins.is_fusible_branch() {
                     continue;
                 }
                 if machine.resolve(ins).is_err() {

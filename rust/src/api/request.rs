@@ -4,6 +4,7 @@ use std::ops::{BitOr, BitOrAssign};
 use std::sync::Arc;
 
 use crate::asm::Kernel;
+use crate::isa::Isa;
 use crate::mdb::MachineModel;
 use crate::sim::SimConfig;
 
@@ -84,6 +85,15 @@ pub struct AnalysisRequest {
     pub source: Option<String>,
     /// Pre-extracted kernel, overriding `source`.
     pub kernel: Option<Kernel>,
+    /// Assertion of the syntax `source` is written in. `None` (the
+    /// default) parses with the resolved machine model's ISA, so
+    /// `.arch("tx2")` parses AArch64 without further ceremony.
+    /// `Some(isa)` that disagrees with the model's ISA fails fast with
+    /// a structured [`super::OsacaError::IsaMismatch`] — before any
+    /// parsing — instead of mis-parsing the source under the wrong
+    /// grammar; it never reinterprets the source for a
+    /// different-ISA model.
+    pub isa: Option<Isa>,
     /// Which passes to run.
     pub passes: Passes,
     /// Assembly-loop unroll factor (cycles-per-source-iteration
@@ -101,6 +111,7 @@ impl AnalysisRequest {
             machine: None,
             source: None,
             kernel: None,
+            isa: None,
             passes: Passes::ANALYTIC,
             unroll: 1,
             sim: SimConfig::default(),
@@ -130,6 +141,14 @@ impl AnalysisRequest {
     /// Provide an already-extracted kernel.
     pub fn kernel(mut self, kernel: Kernel) -> Self {
         self.kernel = Some(kernel);
+        self
+    }
+
+    /// Assert the syntax `source` is written in (default: the machine
+    /// model's ISA). A disagreement with the model's ISA fails the
+    /// request with [`super::OsacaError::IsaMismatch`].
+    pub fn isa(mut self, isa: Isa) -> Self {
+        self.isa = Some(isa);
         self
     }
 

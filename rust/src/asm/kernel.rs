@@ -3,10 +3,10 @@
 
 use anyhow::{bail, Context, Result};
 
-use crate::isa::Instruction;
+use crate::isa::{Instruction, Isa};
 
 use super::marker::find_marked_region;
-use super::parser::{parse_file, Line};
+use super::parser::{parse_file_isa, Line};
 
 /// An extracted loop kernel: the instruction sequence of one assembly
 /// iteration, in program order, plus the loop back-edge label (if any).
@@ -16,6 +16,9 @@ pub struct Kernel {
     pub instructions: Vec<Instruction>,
     /// Label the terminating branch jumps to (loop head), if present.
     pub loop_label: Option<String>,
+    /// ISA of the kernel's instructions (derived from them; kernels
+    /// never mix ISAs).
+    pub isa: Isa,
 }
 
 impl Kernel {
@@ -24,11 +27,9 @@ impl Kernel {
             .iter()
             .rev()
             .find(|i| i.is_branch())
-            .and_then(|i| match i.operands.first() {
-                Some(crate::isa::operand::Operand::Label(l)) => Some(l.clone()),
-                _ => None,
-            });
-        Kernel { name: name.to_string(), instructions, loop_label }
+            .and_then(|i| branch_target(i).cloned());
+        let isa = instructions.first().map(|i| i.isa).unwrap_or_default();
+        Kernel { name: name.to_string(), instructions, loop_label, isa }
     }
 
     /// Number of instructions excluding the back-edge branch (µ-op counts
@@ -51,14 +52,20 @@ impl Kernel {
     }
 }
 
-/// Extract the marked kernel from assembly source text.
+/// Extract the marked kernel from AT&T x86 assembly source text.
 ///
 /// If IACA/OSACA markers are present, the marked region is used;
 /// otherwise, the body of the innermost label/backward-branch loop is
 /// extracted (convenience for unmarked fixtures), and if neither exists
 /// the whole file's instructions are taken.
 pub fn extract_kernel(name: &str, src: &str) -> Result<Kernel> {
-    let lines = parse_file(src).map_err(|e| anyhow::anyhow!("{e}"))?;
+    extract_kernel_isa(name, src, Isa::X86)
+}
+
+/// [`extract_kernel`] under an explicit ISA syntax (markers, loop
+/// detection and instruction classification all follow the ISA).
+pub fn extract_kernel_isa(name: &str, src: &str, isa: Isa) -> Result<Kernel> {
+    let lines = parse_file_isa(src, isa).map_err(|e| anyhow::anyhow!("{e}"))?;
     let region = find_marked_region(&lines);
     // Borrow the body slice instead of cloning the lines; only the
     // instructions are copied into the kernel.
@@ -83,6 +90,17 @@ pub fn extract_kernel(name: &str, src: &str) -> Result<Kernel> {
     Ok(Kernel::from_instructions(name, instructions))
 }
 
+/// The label operand of a branch. x86 jcc/jmp carry it as the only
+/// operand; AArch64 compare-and-branch forms (`cbnz x5, .L4`,
+/// `tbz x3, #2, .L4`) carry it last, after the tested register — so
+/// scan from the back.
+fn branch_target(ins: &Instruction) -> Option<&String> {
+    ins.operands.iter().rev().find_map(|o| match o {
+        crate::isa::operand::Operand::Label(l) => Some(l),
+        _ => None,
+    })
+}
+
 /// Fallback: the `[head, end)` line range of the smallest
 /// `label: ... ; jcc label` loop.
 fn innermost_loop(lines: &[Line]) -> Option<(usize, usize)> {
@@ -95,7 +113,7 @@ fn innermost_loop(lines: &[Line]) -> Option<(usize, usize)> {
                 label_pos.insert(name.as_str(), i);
             }
             Line::Instruction(ins) if ins.is_branch() => {
-                if let Some(crate::isa::operand::Operand::Label(t)) = ins.operands.first() {
+                if let Some(t) = branch_target(ins) {
                     if let Some(&head) = label_pos.get(t.as_str()) {
                         let span = i - head;
                         if best.map(|(s, _)| span < s).unwrap_or(true) {
@@ -153,5 +171,28 @@ ret
     #[test]
     fn empty_file_errors() {
         assert!(extract_kernel("t", "\n\n").is_err());
+    }
+
+    #[test]
+    fn aarch64_unmarked_innermost_loop() {
+        use crate::isa::Isa;
+        let src = "\nmain:\nmov x4, #0\n.L4:\nldr q0, [x7, x4]\nadd x4, x4, #16\nsubs x5, x5, #2\nb.ne .L4\nret\n";
+        let k = extract_kernel_isa("t", src, Isa::AArch64).unwrap();
+        assert_eq!(k.len(), 4);
+        assert_eq!(k.loop_label.as_deref(), Some(".L4"));
+        assert_eq!(k.isa, Isa::AArch64);
+        assert_eq!(k.n_loads(), 1);
+    }
+
+    #[test]
+    fn aarch64_cbnz_loop_target_is_last_operand() {
+        // Compare-and-branch back-edges carry the label after the
+        // tested register; both loop detection and loop_label must
+        // still find it.
+        use crate::isa::Isa;
+        let src = "\n.L4:\nldr q0, [x7, x4]\nadd x4, x4, #16\nsub x5, x5, #2\ncbnz x5, .L4\n";
+        let k = extract_kernel_isa("t", src, Isa::AArch64).unwrap();
+        assert_eq!(k.len(), 4);
+        assert_eq!(k.loop_label.as_deref(), Some(".L4"));
     }
 }

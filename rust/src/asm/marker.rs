@@ -1,6 +1,6 @@
 //! IACA/OSACA kernel markers (paper §III).
 //!
-//! OSACA supports the same byte markers as IACA:
+//! OSACA supports the same byte markers as IACA on x86:
 //!
 //! ```asm
 //! movl $111, %ebx        # start marker
@@ -11,16 +11,21 @@
 //! ```
 //!
 //! The `.byte 100,103,144` sequence encodes `fs addr32 nop`, a no-op the
-//! processor executes but IACA's disassembler recognizes. We detect the
-//! `movl $111/$222, %ebx` + `.byte` pairs in parsed lines.
+//! processor executes but IACA's disassembler recognizes. On AArch64 the
+//! marker is `mov x1, #111` / `mov x1, #222` followed by
+//! `.byte 213,3,32,31` (a `nop` encoding), matching OSACA's ARM support.
+//! We detect the mov + `.byte` pairs in parsed lines; the mov shape is
+//! keyed by the instruction's own ISA.
 
 use crate::isa::operand::Operand;
+use crate::isa::Isa;
 
 use super::parser::Line;
 
 pub const START_MARKER_IMM: i64 = 111;
 pub const END_MARKER_IMM: i64 = 222;
 pub const MARKER_BYTES: &str = "100,103,144";
+pub const AARCH64_MARKER_BYTES: &str = "213,3,32,31";
 
 /// Location of the marked region: indices into the parsed `Line` slice,
 /// exclusive of the marker instructions themselves.
@@ -32,12 +37,20 @@ pub struct MarkedRegion {
 
 fn is_marker_mov(line: &Line, imm: i64) -> bool {
     match line {
-        Line::Instruction(i) => {
-            i.mnemonic == "movl"
-                && i.operands.len() == 2
-                && i.operands[0] == Operand::Imm(imm)
-                && matches!(&i.operands[1], Operand::Reg(r) if r.name == "ebx")
-        }
+        Line::Instruction(i) => match i.isa {
+            Isa::X86 => {
+                i.mnemonic == "movl"
+                    && i.operands.len() == 2
+                    && i.operands[0] == Operand::Imm(imm)
+                    && matches!(&i.operands[1], Operand::Reg(r) if r.name == "ebx")
+            }
+            Isa::AArch64 => {
+                i.mnemonic == "mov"
+                    && i.operands.len() == 2
+                    && matches!(&i.operands[0], Operand::Reg(r) if r.name == "x1")
+                    && i.operands[1] == Operand::Imm(imm)
+            }
+        },
         _ => false,
     }
 }
@@ -45,7 +58,8 @@ fn is_marker_mov(line: &Line, imm: i64) -> bool {
 fn is_marker_bytes(line: &Line) -> bool {
     match line {
         Line::Directive { name, args } => {
-            name == "byte" && args.replace(' ', "") == MARKER_BYTES
+            let compact = args.replace(' ', "");
+            name == "byte" && (compact == MARKER_BYTES || compact == AARCH64_MARKER_BYTES)
         }
         _ => false,
     }
@@ -128,5 +142,19 @@ movl $222, %ebx
         let src = "movl $111, %ebx\n.byte 100, 103, 144\nnop\nmovl $222, %ebx\n.byte 100,103,144\n";
         let lines = parse_file(src).unwrap();
         assert!(find_marked_region(&lines).is_some());
+    }
+
+    #[test]
+    fn aarch64_markers_found() {
+        use crate::asm::parser::parse_file_isa;
+        use crate::isa::Isa;
+        let src = "mov x1, #111\n.byte 213,3,32,31\n.L4:\nldr q0, [x7, x4]\nb.ne .L4\nmov x1, #222\n.byte 213,3,32,31\n";
+        let lines = parse_file_isa(src, Isa::AArch64).unwrap();
+        let r = find_marked_region(&lines).unwrap();
+        let n_instr = lines[r.start..r.end]
+            .iter()
+            .filter(|l| matches!(l, Line::Instruction(_)))
+            .count();
+        assert_eq!(n_instr, 2);
     }
 }

@@ -1,9 +1,14 @@
-//! Assembly-file handling: AT&T x86 parsing, IACA/OSACA marker detection,
-//! and marked-kernel extraction (paper §III, Fig. 4).
+//! Assembly-file handling: AT&T x86 and AArch64 parsing behind the
+//! [`syntax::IsaSyntax`] trait, IACA/OSACA marker detection, and
+//! marked-kernel extraction (paper §III, Fig. 4).
 
 pub mod kernel;
 pub mod marker;
 pub mod parser;
+pub mod syntax;
 
-pub use kernel::{extract_kernel, Kernel};
-pub use parser::{parse_file, parse_instruction, Line, ParseError};
+pub use kernel::{extract_kernel, extract_kernel_isa, Kernel};
+pub use parser::{
+    parse_file, parse_file_isa, parse_instruction, parse_instruction_isa, Line, ParseError,
+};
+pub use syntax::{syntax_for, AArch64Syntax, AttSyntax, IsaSyntax};

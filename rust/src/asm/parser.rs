@@ -1,15 +1,24 @@
-//! AT&T-syntax x86-64 assembly parser.
+//! Assembly parsing: the ISA-shared line grammar plus the AT&T x86-64
+//! instruction syntax.
 //!
-//! Parses the GNU-as subset GCC emits for loop kernels: labels,
+//! Parses the GNU-as subset compilers emit for loop kernels: labels,
 //! directives, instructions with register/immediate/memory/label
 //! operands. IACA consumes compiled object files; OSACA parses the
 //! textual assembly directly (paper §III), which is what we do.
+//!
+//! Labels, directives and blank lines are common to every supported
+//! ISA; everything instruction-shaped is delegated to the
+//! [`super::syntax::IsaSyntax`] implementation selected by the `Isa`
+//! argument of the `*_isa` entry points. The unsuffixed functions keep
+//! their historical AT&T x86 behavior.
 
 use std::fmt;
 
 use crate::isa::operand::{MemRef, Operand};
 use crate::isa::register::parse_register;
-use crate::isa::Instruction;
+use crate::isa::{Instruction, Isa};
+
+use super::syntax::syntax_for;
 
 /// One logical line of an assembly file.
 #[derive(Debug, Clone, PartialEq)]
@@ -42,29 +51,36 @@ fn err(line: usize, text: &str, message: impl Into<String>) -> ParseError {
     ParseError { line, text: text.to_string(), message: message.into() }
 }
 
-/// Parse a whole assembly file into logical lines.
+/// Parse a whole assembly file into logical lines (AT&T x86).
 pub fn parse_file(src: &str) -> Result<Vec<Line>, ParseError> {
+    parse_file_isa(src, Isa::X86)
+}
+
+/// Parse a whole assembly file into logical lines under `isa`'s syntax.
+pub fn parse_file_isa(src: &str, isa: Isa) -> Result<Vec<Line>, ParseError> {
     src.lines()
         .enumerate()
-        .map(|(i, l)| parse_line(l, i + 1))
+        .map(|(i, l)| parse_line_isa(l, i + 1, isa))
         .collect()
 }
 
-/// Parse one source line (1-based line number for diagnostics).
+/// Parse one source line (1-based line number for diagnostics; AT&T x86).
 pub fn parse_line(raw: &str, lineno: usize) -> Result<Line, ParseError> {
-    // Strip comments: `#` to end of line (GNU as x86), and `/* */` is not
-    // emitted by GCC so we ignore it.
-    let code = match raw.find('#') {
-        Some(idx) => &raw[..idx],
-        None => raw,
-    };
-    let code = code.trim();
+    parse_line_isa(raw, lineno, Isa::X86)
+}
+
+/// Parse one source line under `isa`'s syntax. Labels, directives and
+/// blank lines are ISA-shared; instructions go through the ISA's
+/// [`super::syntax::IsaSyntax`].
+pub fn parse_line_isa(raw: &str, lineno: usize, isa: Isa) -> Result<Line, ParseError> {
+    let syntax = syntax_for(isa);
+    let code = syntax.strip_comment(raw).trim();
     if code.is_empty() {
         return Ok(Line::Empty);
     }
     if let Some(label) = code.strip_suffix(':') {
         // Labels may be followed by code on the same line in theory, but
-        // GCC never emits that; treat trailing content as an error.
+        // compilers never emit that; treat trailing content as an error.
         if label.contains(char::is_whitespace) {
             return Err(err(lineno, raw, "label with embedded whitespace"));
         }
@@ -77,51 +93,83 @@ pub fn parse_line(raw: &str, lineno: usize) -> Result<Line, ParseError> {
         };
         return Ok(Line::Directive { name: name.to_string(), args: args.to_string() });
     }
-    parse_instruction(code, lineno).map(Line::Instruction)
+    syntax.parse_instruction(code, lineno).map(Line::Instruction)
 }
 
-/// Parse a single instruction like `vfmadd132pd 0(%r13,%rax), %ymm3, %ymm0`.
+/// Parse a single AT&T x86 instruction like
+/// `vfmadd132pd 0(%r13,%rax), %ymm3, %ymm0`.
 pub fn parse_instruction(code: &str, lineno: usize) -> Result<Instruction, ParseError> {
-    let code = code.trim();
-    let (mnemonic, rest) = match code.split_once(char::is_whitespace) {
-        Some((m, r)) => (m, r.trim()),
-        None => (code, ""),
-    };
-    if mnemonic.is_empty() {
-        return Err(err(lineno, code, "empty instruction"));
-    }
-    // Strip instruction prefixes we don't model.
-    if matches!(mnemonic, "lock" | "rep" | "repz" | "repnz" | "notrack") {
-        return parse_instruction(rest, lineno);
-    }
-    // GCC emits lower-case mnemonics; only pay for a case-fold when the
-    // source actually needs one.
-    let mnemonic = if mnemonic.bytes().any(|b| b.is_ascii_uppercase()) {
-        mnemonic.to_ascii_lowercase()
-    } else {
-        mnemonic.to_string()
-    };
-    let operands = if rest.is_empty() {
-        Vec::new()
-    } else {
-        split_operands(rest)
-            .into_iter()
-            .map(|o| parse_operand(o.trim(), lineno, code))
-            .collect::<Result<Vec<_>, _>>()?
-    };
-    Ok(Instruction { mnemonic, operands, line: lineno })
+    parse_instruction_att(code, lineno)
 }
 
-/// Split an operand list on commas that are not inside parentheses
-/// (memory references contain commas: `(%r13,%rax,8)`).
-fn split_operands(s: &str) -> Vec<&str> {
+/// Parse a single instruction under `isa`'s syntax.
+pub fn parse_instruction_isa(
+    code: &str,
+    lineno: usize,
+    isa: Isa,
+) -> Result<Instruction, ParseError> {
+    syntax_for(isa).parse_instruction(code, lineno)
+}
+
+/// The AT&T x86 instruction grammar (the `AttSyntax` implementation).
+pub(crate) fn parse_instruction_att(
+    code: &str,
+    lineno: usize,
+) -> Result<Instruction, ParseError> {
+    let mut code = code.trim();
+    // Instruction prefixes we don't model are kept for display fidelity
+    // but stripped from the mnemonic.
+    let mut prefix: Option<String> = None;
+    loop {
+        let (mnemonic, rest) = match code.split_once(char::is_whitespace) {
+            Some((m, r)) => (m, r.trim()),
+            None => (code, ""),
+        };
+        if mnemonic.is_empty() {
+            return Err(err(lineno, code, "empty instruction"));
+        }
+        if matches!(mnemonic, "lock" | "rep" | "repz" | "repnz" | "notrack") {
+            match &mut prefix {
+                Some(p) => {
+                    p.push(' ');
+                    p.push_str(mnemonic);
+                }
+                None => prefix = Some(mnemonic.to_string()),
+            }
+            code = rest;
+            continue;
+        }
+        // GCC emits lower-case mnemonics; only pay for a case-fold when
+        // the source actually needs one.
+        let mnemonic = if mnemonic.bytes().any(|b| b.is_ascii_uppercase()) {
+            mnemonic.to_ascii_lowercase()
+        } else {
+            mnemonic.to_string()
+        };
+        let operands = if rest.is_empty() {
+            Vec::new()
+        } else {
+            split_operands(rest)
+                .into_iter()
+                .map(|o| parse_operand(o.trim(), lineno, code))
+                .collect::<Result<Vec<_>, _>>()?
+        };
+        return Ok(Instruction { mnemonic, operands, line: lineno, isa: Isa::X86, prefix });
+    }
+}
+
+/// Split an operand list on commas that are not inside the given
+/// grouping delimiters — x86 memory references carry commas inside
+/// parentheses (`(%r13,%rax,8)`), AArch64 inside brackets
+/// (`[x7, x4, lsl #3]`).
+pub(crate) fn split_operands_delim(s: &str, open: char, close: char) -> Vec<&str> {
     let mut out = Vec::new();
     let mut depth = 0usize;
     let mut start = 0usize;
     for (i, c) in s.char_indices() {
         match c {
-            '(' => depth += 1,
-            ')' => depth = depth.saturating_sub(1),
+            c if c == open => depth += 1,
+            c if c == close => depth = depth.saturating_sub(1),
             ',' if depth == 0 => {
                 out.push(&s[start..i]);
                 start = i + 1;
@@ -133,6 +181,10 @@ fn split_operands(s: &str) -> Vec<&str> {
     out
 }
 
+fn split_operands(s: &str) -> Vec<&str> {
+    split_operands_delim(s, '(', ')')
+}
+
 fn parse_operand(s: &str, lineno: usize, ctx: &str) -> Result<Operand, ParseError> {
     if s.is_empty() {
         return Err(err(lineno, ctx, "empty operand"));
@@ -142,16 +194,18 @@ fn parse_operand(s: &str, lineno: usize, ctx: &str) -> Result<Operand, ParseErro
         let v = parse_int(imm).ok_or_else(|| err(lineno, ctx, format!("bad immediate `{s}`")))?;
         return Ok(Operand::Imm(v));
     }
+    // Memory reference: disp(base,index,scale), possibly with segment
+    // override (`%fs:16(%rax)`) or rip-relative symbol. Checked before
+    // the bare-register branch so segment-prefixed operands (which also
+    // start with `%`) parse as memory.
+    if s.contains('(') {
+        return parse_memref(s, lineno, ctx).map(Operand::Mem);
+    }
     // Register: %rax (possibly with * indirect-call sigil which we reject)
     if let Some(name) = s.strip_prefix('%') {
         let r = parse_register(name)
             .ok_or_else(|| err(lineno, ctx, format!("unknown register `%{name}`")))?;
         return Ok(Operand::Reg(r));
-    }
-    // Memory reference: disp(base,index,scale), possibly with segment or
-    // rip-relative symbol.
-    if s.contains('(') {
-        return parse_memref(s, lineno, ctx).map(Operand::Mem);
     }
     // Bare integer = absolute address (rare) — treat as memory.
     if let Some(v) = parse_int(s) {
@@ -177,7 +231,10 @@ fn parse_memref(s: &str, lineno: usize, ctx: &str) -> Result<MemRef, ParseError>
     let mut segment = None;
     if let Some((seg, rest)) = pre.split_once(':') {
         if let Some(name) = seg.strip_prefix('%') {
-            segment = parse_register(name);
+            segment = Some(
+                parse_register(name)
+                    .ok_or_else(|| err(lineno, ctx, format!("unknown segment `%{name}`")))?,
+            );
         }
         pre = rest;
     }
@@ -213,7 +270,7 @@ fn parse_memref(s: &str, lineno: usize, ctx: &str) -> Result<MemRef, ParseError>
     Ok(MemRef { displacement, base, index, scale, segment, symbol })
 }
 
-fn parse_int(s: &str) -> Option<i64> {
+pub(crate) fn parse_int(s: &str) -> Option<i64> {
     let s = s.trim();
     let (neg, s) = match s.strip_prefix('-') {
         Some(r) => (true, r),
@@ -303,5 +360,40 @@ mod tests {
         let src = "\n.L10:\n\tvmovapd (%r15,%rax), %ymm0 # load\n\tja .L10\n";
         let lines = parse_file(src).unwrap();
         assert_eq!(lines.len(), 4);
+    }
+
+    #[test]
+    fn prefixes_preserved_for_display() {
+        let i = parse_instruction("lock addl $1, (%rax)", 1).unwrap();
+        assert_eq!(i.mnemonic, "addl");
+        assert_eq!(i.prefix.as_deref(), Some("lock"));
+        assert_eq!(i.to_string(), "lock addl $1, (%rax)");
+        let re = parse_instruction(&i.to_string(), 1).unwrap();
+        assert_eq!(re, i);
+    }
+
+    #[test]
+    fn segment_override_roundtrips() {
+        let i = parse_instruction("movq %fs:16(%rax), %rbx", 1).unwrap();
+        let m = i.operands[0].mem().unwrap();
+        assert_eq!(m.segment.unwrap().name, "fs");
+        assert_eq!(i.to_string(), "movq %fs:16(%rax), %rbx");
+        let re = parse_instruction(&i.to_string(), 1).unwrap();
+        assert_eq!(re, i);
+    }
+
+    #[test]
+    fn aarch64_file_parses_via_isa_entry_point() {
+        use crate::isa::Isa;
+        let src = "\n.L4:\n\tldr q0, [x7, x4] // load\n\tb.ne .L4\n";
+        let lines = parse_file_isa(src, Isa::AArch64).unwrap();
+        assert_eq!(lines.len(), 4);
+        match &lines[2] {
+            Line::Instruction(i) => {
+                assert_eq!(i.mnemonic, "ldr");
+                assert_eq!(i.isa, Isa::AArch64);
+            }
+            other => panic!("{other:?}"),
+        }
     }
 }

@@ -1,0 +1,448 @@
+//! Per-ISA assembly syntax: the [`IsaSyntax`] trait and its AT&T x86
+//! ([`AttSyntax`]) and ARMv8 A64 ([`AArch64Syntax`]) implementations.
+//!
+//! The line-level grammar (labels, `.`-directives, blank lines) is
+//! shared across ISAs and lives in [`super::parser`]; what differs per
+//! ISA — comment markers, mnemonic prefixes, operand splitting, operand
+//! and memory-reference shapes, register names — is behind this trait.
+//! Adding a backend is a syntax impl plus a `.mdb` machine model:
+//! nothing in the analyzer, simulator or api layers is ISA-specific
+//! (DESIGN.md §7).
+
+use crate::isa::operand::{MemRef, Operand};
+use crate::isa::register::parse_aarch64_register;
+use crate::isa::{Instruction, Isa};
+
+use super::parser::{parse_instruction_att, parse_int, split_operands_delim, ParseError};
+
+/// The syntax of one instruction-set architecture: how to strip
+/// comments and how to parse one instruction statement.
+pub trait IsaSyntax: Sync {
+    /// The ISA this syntax parses.
+    fn isa(&self) -> Isa;
+
+    /// Strip the line comment (if any) from a raw source line.
+    fn strip_comment<'a>(&self, line: &'a str) -> &'a str;
+
+    /// Parse a single instruction statement (labels and directives are
+    /// handled by the shared line parser).
+    fn parse_instruction(&self, code: &str, lineno: usize) -> Result<Instruction, ParseError>;
+}
+
+/// The syntax implementation for an ISA.
+pub fn syntax_for(isa: Isa) -> &'static dyn IsaSyntax {
+    match isa {
+        Isa::X86 => &AttSyntax,
+        Isa::AArch64 => &AArch64Syntax,
+    }
+}
+
+/// AT&T-syntax x86-64 (`%rax`, `$imm`, `disp(base,index,scale)`).
+pub struct AttSyntax;
+
+impl IsaSyntax for AttSyntax {
+    fn isa(&self) -> Isa {
+        Isa::X86
+    }
+
+    fn strip_comment<'a>(&self, line: &'a str) -> &'a str {
+        // `#` to end of line (GNU as x86); `/* */` is not emitted by GCC
+        // so we ignore it.
+        match line.find('#') {
+            Some(idx) => &line[..idx],
+            None => line,
+        }
+    }
+
+    fn parse_instruction(&self, code: &str, lineno: usize) -> Result<Instruction, ParseError> {
+        parse_instruction_att(code, lineno)
+    }
+}
+
+/// ARMv8 AArch64 GNU-as syntax (`x0`, `#imm`, `[base, index, lsl #s]`).
+pub struct AArch64Syntax;
+
+impl IsaSyntax for AArch64Syntax {
+    fn isa(&self) -> Isa {
+        Isa::AArch64
+    }
+
+    fn strip_comment<'a>(&self, line: &'a str) -> &'a str {
+        // `//` to end of line. `#` starts immediates on AArch64 and MUST
+        // NOT be treated as a comment marker (the classic porting trap
+        // when generalizing an x86 parser).
+        match line.find("//") {
+            Some(idx) => &line[..idx],
+            None => line,
+        }
+    }
+
+    fn parse_instruction(&self, code: &str, lineno: usize) -> Result<Instruction, ParseError> {
+        parse_instruction_a64(code, lineno)
+    }
+}
+
+fn err(line: usize, text: &str, message: impl Into<String>) -> ParseError {
+    ParseError { line, text: text.to_string(), message: message.into() }
+}
+
+/// Parse one A64 instruction like `fmla v0.2d, v1.2d, v2.2d` or
+/// `ldr q0, [x7, x4]`.
+pub(crate) fn parse_instruction_a64(
+    code: &str,
+    lineno: usize,
+) -> Result<Instruction, ParseError> {
+    let code = code.trim();
+    let (mnemonic, rest) = match code.split_once(char::is_whitespace) {
+        Some((m, r)) => (m, r.trim()),
+        None => (code, ""),
+    };
+    if mnemonic.is_empty() {
+        return Err(err(lineno, code, "empty instruction"));
+    }
+    let mnemonic = if mnemonic.bytes().any(|b| b.is_ascii_uppercase()) {
+        mnemonic.to_ascii_lowercase()
+    } else {
+        mnemonic.to_string()
+    };
+    // Multi-register transfers write (or read) more than one data
+    // register; the single-destination model would silently drop the
+    // second register's write — reject them like writeback forms until
+    // they are modeled.
+    if matches!(
+        mnemonic.as_str(),
+        "ldp" | "stp" | "ldnp" | "stnp" | "ld1" | "ld2" | "ld3" | "ld4" | "st1" | "st2"
+            | "st3" | "st4"
+    ) {
+        return Err(err(lineno, code, format!("multi-register form `{mnemonic}` not supported")));
+    }
+    let operands = if rest.is_empty() {
+        Vec::new()
+    } else {
+        split_operands_delim(rest, '[', ']')
+            .into_iter()
+            .map(|o| parse_operand_a64(o.trim(), lineno, code))
+            .collect::<Result<Vec<_>, _>>()?
+    };
+    // Post-index writeback (`ldr x0, [x1], #8`) splits into a memory
+    // operand followed by an immediate; like pre-index it mutates the
+    // base register, which the dependency model does not represent —
+    // reject it rather than silently dropping the base-register write.
+    if (mnemonic.starts_with("ld") || mnemonic.starts_with("st"))
+        && operands
+            .iter()
+            .position(|o| o.is_mem())
+            .is_some_and(|i| i + 1 != operands.len())
+    {
+        return Err(err(lineno, code, "post-index writeback not supported"));
+    }
+    Ok(Instruction { mnemonic, operands, line: lineno, isa: Isa::AArch64, prefix: None })
+}
+
+fn parse_operand_a64(s: &str, lineno: usize, ctx: &str) -> Result<Operand, ParseError> {
+    if s.is_empty() {
+        return Err(err(lineno, ctx, "empty operand"));
+    }
+    // Immediate: #16, #-8, #0x1f.
+    if let Some(imm) = s.strip_prefix('#') {
+        let v = parse_int(imm).ok_or_else(|| err(lineno, ctx, format!("bad immediate `{s}`")))?;
+        return Ok(Operand::Imm(v));
+    }
+    // Memory reference: [base], [base, #disp], [base, index{, lsl #s}].
+    if s.starts_with('[') {
+        return parse_memref_a64(s, lineno, ctx).map(Operand::Mem);
+    }
+    if let Some(r) = parse_aarch64_register(s) {
+        return Ok(Operand::Reg(r));
+    }
+    // GAS accepts bare immediates without the `#` sigil.
+    if let Some(v) = parse_int(s) {
+        return Ok(Operand::Imm(v));
+    }
+    // Shifted/extended data operands (`add x2, x1, x3, lsl #3`) are not
+    // modeled — reject them at the source line like the memref extends,
+    // instead of surfacing later as a bogus `...-lbl` database miss.
+    let head = s.split([' ', '\t', '#']).next().unwrap_or(s);
+    if matches!(
+        head,
+        "lsl" | "lsr" | "asr" | "ror" | "sxtb" | "sxth" | "sxtw" | "sxtx" | "uxtb" | "uxth"
+            | "uxtw" | "uxtx"
+    ) {
+        return Err(err(lineno, ctx, format!("shifted/extended operand `{s}` not supported")));
+    }
+    // Register-shaped tokens that failed to parse (`x31`, `d33`,
+    // `v0.3d`, unsupported `h0`/`b1` scalar views) are typos or
+    // unmodeled names, not labels — error at the source line instead
+    // of surfacing later as a bogus `...-lbl` database miss. The whole
+    // tail must be numeric (plus an optional `.arr` part) so labels
+    // that merely start with a register letter (`x2_loop`) still parse.
+    let looks_like_register = matches!(
+        s.chars().next(),
+        Some('x' | 'w' | 'q' | 'd' | 's' | 'v' | 'h' | 'b')
+    ) && {
+        // Letter + digits, with any dotted tail: unsupported
+        // arrangements and lane references (`v2.d[0]`) error here too,
+        // instead of parsing as labels.
+        let num = match s[1..].split_once('.') {
+            Some((n, _)) => n,
+            None => &s[1..],
+        };
+        !num.is_empty() && num.bytes().all(|b| b.is_ascii_digit())
+    };
+    if looks_like_register {
+        return Err(err(lineno, ctx, format!("unknown register `{s}`")));
+    }
+    // Branch target label.
+    Ok(Operand::Label(s.to_string()))
+}
+
+fn parse_memref_a64(s: &str, lineno: usize, ctx: &str) -> Result<MemRef, ParseError> {
+    if s.ends_with('!') {
+        return Err(err(lineno, ctx, format!("pre-index writeback not supported in `{s}`")));
+    }
+    let inner = s
+        .strip_prefix('[')
+        .and_then(|r| r.strip_suffix(']'))
+        .ok_or_else(|| err(lineno, ctx, format!("malformed memory operand `{s}`")))?;
+    let parts: Vec<&str> = inner.split(',').map(str::trim).collect();
+    let base_name = parts
+        .first()
+        .copied()
+        .filter(|p| !p.is_empty())
+        .ok_or_else(|| err(lineno, ctx, format!("memory operand `{s}` has no base")))?;
+    let base = parse_aarch64_register(base_name)
+        .ok_or_else(|| err(lineno, ctx, format!("unknown register `{base_name}`")))?;
+    let mut mem = MemRef {
+        displacement: 0,
+        base: Some(base),
+        index: None,
+        scale: 1,
+        segment: None,
+        symbol: None,
+    };
+    if parts.len() == 1 {
+        return Ok(mem);
+    }
+    let second = parts[1];
+    if let Some(imm) = second.strip_prefix('#').map_or_else(|| parse_int(second), parse_int) {
+        // [base, #disp] — no further components allowed.
+        if parts.len() > 2 {
+            return Err(err(lineno, ctx, format!("malformed memory operand `{s}`")));
+        }
+        mem.displacement = imm;
+        return Ok(mem);
+    }
+    let index = parse_aarch64_register(second)
+        .ok_or_else(|| err(lineno, ctx, format!("unknown register `{second}`")))?;
+    mem.index = Some(index);
+    match parts.get(2) {
+        None => {}
+        Some(ext) => {
+            // Only `lsl #shift` extends are modeled (enough for the
+            // GCC-emitted array-indexing idioms).
+            let shift = ext
+                .strip_prefix("lsl")
+                .map(str::trim)
+                .and_then(|r| r.strip_prefix('#'))
+                .and_then(parse_int)
+                .filter(|v| (0..=4).contains(v))
+                .ok_or_else(|| err(lineno, ctx, format!("unsupported extend `{ext}` in `{s}`")))?;
+            mem.scale = 1u8 << (shift as u32);
+        }
+    }
+    if parts.len() > 3 {
+        return Err(err(lineno, ctx, format!("malformed memory operand `{s}`")));
+    }
+    Ok(mem)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::RegisterClass;
+
+    fn ins(s: &str) -> Instruction {
+        parse_instruction_a64(s, 1).expect(s)
+    }
+
+    #[test]
+    fn parses_fmla() {
+        let i = ins("fmla v0.2d, v1.2d, v2.2d");
+        assert_eq!(i.mnemonic, "fmla");
+        assert_eq!(i.operands.len(), 3);
+        assert_eq!(i.form().to_string(), "fmla-q_q_q");
+        assert_eq!(i.isa, Isa::AArch64);
+    }
+
+    #[test]
+    fn parses_load_with_index() {
+        let i = ins("ldr q0, [x7, x4]");
+        let m = i.operands[1].mem().unwrap();
+        assert_eq!(m.base.unwrap().name, "x7");
+        assert_eq!(m.index.unwrap().name, "x4");
+        assert_eq!(m.scale, 1);
+        assert!(i.is_load());
+        assert!(!i.is_store());
+    }
+
+    #[test]
+    fn parses_scaled_index_and_displacement() {
+        let i = ins("ldr d0, [x2, x5, lsl #3]");
+        let m = i.operands[1].mem().unwrap();
+        assert_eq!(m.scale, 8);
+        let i = ins("str x0, [sp, #16]");
+        let m = i.operands[1].mem().unwrap();
+        assert_eq!(m.displacement, 16);
+        assert_eq!(m.base.unwrap().name, "sp");
+        assert!(i.is_store());
+        assert!(!i.is_load());
+    }
+
+    #[test]
+    fn store_dest_is_memory_and_data_is_read() {
+        let i = ins("str q0, [x9, x4]");
+        assert!(matches!(i.dest(), Some(Operand::Mem(_))));
+        let reads = i.reads();
+        assert!(reads.iter().any(|r| r.name == "q0"));
+        assert!(reads.iter().any(|r| r.name == "x9"));
+        assert!(reads.iter().any(|r| r.name == "x4"));
+        assert!(i.writes().is_empty());
+    }
+
+    #[test]
+    fn dest_first_semantics() {
+        let i = ins("fadd d0, d1, d2");
+        assert_eq!(i.writes().len(), 1);
+        assert_eq!(i.writes()[0].name, "d0");
+        // fadd does not read its destination...
+        assert_eq!(i.reads().len(), 2);
+        // ...but fmla does.
+        let i = ins("fmla v0.2d, v1.2d, v2.2d");
+        assert_eq!(i.reads().len(), 3);
+    }
+
+    #[test]
+    fn immediates_and_flags() {
+        let i = ins("add x4, x4, #16");
+        assert_eq!(i.operands[2], Operand::Imm(16));
+        assert!(!i.writes_flags());
+        let i = ins("subs x5, x5, #2");
+        assert!(i.writes_flags());
+        assert_eq!(i.form().to_string(), "subs-x_x_imm");
+        let i = ins("cmp w4, w5");
+        assert!(i.is_compare());
+        assert!(i.dest().is_none());
+    }
+
+    #[test]
+    fn cond_branch_reads_flags() {
+        let i = ins("b.ne .L4");
+        assert!(i.is_branch());
+        assert!(i.is_cond_branch());
+        assert!(i.reads().iter().any(|r| r.name == "flags"));
+        assert_eq!(i.operands[0], Operand::Label(".L4".into()));
+        let i = ins("cbnz x3, .L4");
+        assert!(i.is_branch());
+        // cbnz reads its register, not the flags.
+        assert!(i.reads().iter().any(|r| r.name == "x3"));
+        assert!(!i.reads().iter().any(|r| r.name == "flags"));
+    }
+
+    #[test]
+    fn zero_register_writes_discarded() {
+        let i = ins("subs xzr, x5, #2");
+        assert!(i.writes().iter().all(|r| r.name == "flags"));
+    }
+
+    #[test]
+    fn zero_idiom_and_moves() {
+        assert!(ins("movi v0.2d, #0").is_zero_idiom());
+        assert!(!ins("movi v0.2d, #1").is_zero_idiom());
+        assert!(ins("eor v1.16b, v1.16b, v1.16b").is_zero_idiom());
+        assert!(!ins("eor v1.16b, v1.16b, v2.16b").is_zero_idiom());
+        assert!(ins("mov x0, x1").is_reg_move());
+        assert!(ins("fmov d0, d1").is_reg_move());
+        assert!(!ins("mov x0, #7").is_reg_move());
+    }
+
+    #[test]
+    fn scvtf_reads_gp_writes_fp() {
+        let i = ins("scvtf d0, w4");
+        assert_eq!(i.form().to_string(), "scvtf-d_w");
+        assert_eq!(i.reads().len(), 1);
+        assert_eq!(i.reads()[0].class, RegisterClass::AGp32);
+        assert_eq!(i.writes()[0].class, RegisterClass::AFp64);
+    }
+
+    #[test]
+    fn writeback_and_bad_extends_error() {
+        assert!(parse_instruction_a64("ldr x0, [x1, #8]!", 1).is_err());
+        // Post-index writeback mutates the base register: rejected, not
+        // silently modeled without the write.
+        assert!(parse_instruction_a64("ldr x0, [x1], #8", 1).is_err());
+        assert!(parse_instruction_a64("str q0, [x1], #16", 1).is_err());
+        assert!(parse_instruction_a64("ldr x0, [x1, w2, sxtw #3]", 1).is_err());
+        assert!(parse_instruction_a64("ldr x0, [zz9]", 1).is_err());
+    }
+
+    #[test]
+    fn shifted_register_operands_rejected() {
+        assert!(parse_instruction_a64("add x2, x1, x3, lsl #3", 1).is_err());
+        assert!(parse_instruction_a64("add x2, x1, w3, sxtw", 1).is_err());
+    }
+
+    #[test]
+    fn multi_register_forms_rejected() {
+        // Pair/structure transfers have a second data register the
+        // single-dest model would silently drop.
+        assert!(parse_instruction_a64("ldp x0, x1, [x2]", 1).is_err());
+        assert!(parse_instruction_a64("stp x0, x1, [sp, #16]", 1).is_err());
+        assert!(parse_instruction_a64("ld1 {v0.2d}, [x0]", 1).is_err());
+    }
+
+    #[test]
+    fn register_shaped_typos_error_not_label() {
+        assert!(parse_instruction_a64("fadd d0, d1, d33", 1).is_err());
+        assert!(parse_instruction_a64("add x31, x0, #1", 1).is_err());
+        assert!(parse_instruction_a64("fadd v0.3d, v1.3d, v2.3d", 1).is_err());
+        assert!(parse_instruction_a64("ldr h0, [x0]", 1).is_err());
+        // Lane references are register-shaped too: error, not label.
+        assert!(parse_instruction_a64("fmla v0.2d, v1.2d, v2.d[0]", 1).is_err());
+        // Real labels still parse — including ones that merely start
+        // with a register letter.
+        let i = parse_instruction_a64("b.ne .L4", 1).unwrap();
+        assert_eq!(i.operands[0], Operand::Label(".L4".into()));
+        let i = parse_instruction_a64("cbnz x5, x2_loop", 1).unwrap();
+        assert_eq!(i.operands[1], Operand::Label("x2_loop".into()));
+        // The frame-pointer alias is a real register.
+        let i = parse_instruction_a64("add fp, sp, #16", 1).unwrap();
+        assert_eq!(i.form().to_string(), "add-x_x_imm");
+    }
+
+    #[test]
+    fn comment_stripping_keeps_immediates() {
+        let syn = AArch64Syntax;
+        assert_eq!(syn.strip_comment("add x4, x4, #16 // bump"), "add x4, x4, #16 ");
+        assert_eq!(syn.strip_comment("add x4, x4, #16"), "add x4, x4, #16");
+    }
+
+    #[test]
+    fn display_roundtrip() {
+        for src in [
+            "ldr q0, [x7, x4]",
+            "ldr d0, [x2, x5, lsl #3]",
+            "str x0, [sp, #16]",
+            "fmla v0.2d, v1.2d, v2.2d",
+            "add x4, x4, #16",
+            "subs x5, x5, #2",
+            "b.ne .L4",
+            "scvtf d0, w4",
+            "ldr x0, [x1]",
+        ] {
+            let i = ins(src);
+            assert_eq!(i.to_string(), src);
+            let re = parse_instruction_a64(&i.to_string(), 1).unwrap();
+            assert_eq!(re, i, "{src}");
+        }
+    }
+}

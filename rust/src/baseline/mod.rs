@@ -44,7 +44,11 @@ pub fn encode(kernel: &Kernel, machine: &MachineModel) -> Result<EncodedKernel> 
         0
     };
     for (i, ins) in kernel.instructions.iter().enumerate() {
-        if ins.is_branch() || ins.is_zero_idiom() {
+        // Fusible branches and zero idioms take the IACA shortcut;
+        // AArch64 compare-and-branch forms execute a real µ-op and are
+        // encoded like any other instruction (matching the analyzer
+        // and `sim::decode`).
+        if ins.is_fusible_branch() || ins.is_zero_idiom() {
             continue;
         }
         // cmp/test immediately followed by a conditional branch fuses and

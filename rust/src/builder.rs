@@ -108,6 +108,15 @@ pub fn infer_entry(
     machine: &MachineModel,
     probes: &[BenchSpec],
 ) -> Result<Inference> {
+    if machine.isa != crate::isa::Isa::X86 {
+        // ibench emits AT&T x86 loops; benchmarking non-x86 models
+        // needs an ISA-aware generator (ROADMAP item).
+        bail!(
+            "model construction is x86-only for now: `{}` is a {} model",
+            machine.name,
+            machine.isa
+        );
+    }
     let spec = BenchSpec { form: form.clone() };
     let measured_latency = latency_of(&spec, machine)?;
     let (rtp, busy_large) = tp_profile(&spec, machine, WIDTH_LARGE)?;

@@ -30,7 +30,7 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, Result};
 
 use crate::analyzer::{analyze, critical_path, Analysis, CritPathReport};
-use crate::asm::{extract_kernel, Kernel};
+use crate::asm::{extract_kernel_isa, Kernel};
 use crate::baseline::{encode, BaselinePrediction};
 use crate::mdb::{self, MachineModel};
 use crate::runtime::{solve_cpu, EncodedKernel, PortSolver, SolveOut, BATCH};
@@ -286,7 +286,7 @@ impl Coordinator {
     pub fn analyze_source(&self, name: &str, src: &str, arch: &str) -> Result<AnalysisResponse> {
         let machine =
             mdb::by_name_shared(arch).ok_or_else(|| anyhow!("unknown architecture `{arch}`"))?;
-        let kernel = extract_kernel(name, src)?;
+        let kernel = extract_kernel_isa(name, src, machine.isa)?;
         self.analyze_kernel(&kernel, &machine)
     }
 

@@ -7,10 +7,14 @@
 
 use std::fmt;
 
-use super::operand::Operand;
+use super::operand::{fmt_operand_aarch64, Operand};
 use super::register::{flags, Register};
+use super::Isa;
 
-/// One parsed assembly instruction (AT&T operand order: destination last).
+/// One parsed assembly instruction. Operand order follows the source
+/// syntax: destination **last** for AT&T x86, destination **first** for
+/// AArch64 — the accessors below (`dest`, `reads`, `writes`, ...)
+/// dispatch on [`Instruction::isa`] so every consumer stays ISA-neutral.
 ///
 /// The raw source text is **not** stored: kernels clone instructions
 /// freely (extraction, requests, decode templates), and a per-
@@ -24,6 +28,11 @@ pub struct Instruction {
     pub operands: Vec<Operand>,
     /// Source line number (1-based) for diagnostics and report tables.
     pub line: usize,
+    /// Syntax/semantics the instruction was parsed under.
+    pub isa: Isa,
+    /// Unmodeled instruction prefixes (x86 `lock`, `rep`, ...), kept so
+    /// `Display` can reconstruct the source line faithfully.
+    pub prefix: Option<String>,
 }
 
 /// Canonical operand-type signature, e.g. `mem_xmm_xmm`.
@@ -92,21 +101,33 @@ impl Instruction {
         self.operands.iter().find_map(|o| o.mem())
     }
 
-    /// In AT&T syntax the last operand is the destination for almost all
-    /// instructions we model. Compares/tests/branches have no register
-    /// destination.
+    /// The destination operand. AT&T x86: the **last** operand (compares,
+    /// tests and branches have none). AArch64: the **first** operand,
+    /// except stores (`st*`), whose destination is the memory operand.
     pub fn dest(&self) -> Option<&Operand> {
         if self.is_branch() || self.is_compare() || self.mnemonic == "nop" {
             return None;
         }
-        self.operands.last()
+        match self.isa {
+            Isa::X86 => self.operands.last(),
+            Isa::AArch64 => {
+                if self.mnemonic.starts_with("st") {
+                    self.operands.iter().find(|o| o.is_mem())
+                } else {
+                    self.operands.first()
+                }
+            }
+        }
     }
 
     /// Registers written by this instruction (architectural view).
+    /// AArch64 zero-register writes (`xzr`/`wzr`) are discarded.
     pub fn writes(&self) -> Vec<Register> {
         let mut out = Vec::new();
         if let Some(Operand::Reg(r)) = self.dest() {
-            out.push(*r);
+            if !matches!(r.name, "xzr" | "wzr") {
+                out.push(*r);
+            }
         }
         if self.writes_flags() {
             out.push(flags());
@@ -115,82 +136,162 @@ impl Instruction {
     }
 
     /// Registers read by this instruction, including address registers of
-    /// memory operands and the implicit FLAGS read of conditional jumps.
+    /// memory operands and the implicit flags read of conditional
+    /// branches (x86 jcc, AArch64 `b.<cond>`).
     pub fn reads(&self) -> Vec<Register> {
         let mut out = Vec::new();
-        let n = self.operands.len();
-        for (i, op) in self.operands.iter().enumerate() {
-            match op {
-                Operand::Reg(r) => {
-                    let is_dest = self.dest().is_some() && i + 1 == n;
-                    // Destination-only writes: plain moves replace the
-                    // destination; read-modify-write ops (add, fma, ...)
-                    // read it too.
-                    if !is_dest || self.reads_dest() {
-                        out.push(*r);
+        match self.isa {
+            Isa::X86 => {
+                let n = self.operands.len();
+                for (i, op) in self.operands.iter().enumerate() {
+                    match op {
+                        Operand::Reg(r) => {
+                            let is_dest = self.dest().is_some() && i + 1 == n;
+                            // Destination-only writes: plain moves replace
+                            // the destination; read-modify-write ops (add,
+                            // fma, ...) read it too.
+                            if !is_dest || self.reads_dest() {
+                                out.push(*r);
+                            }
+                        }
+                        Operand::Mem(m) => out.extend(m.address_registers()),
+                        _ => {}
                     }
                 }
-                Operand::Mem(m) => out.extend(m.address_registers()),
-                _ => {}
+                if self.is_cond_branch() {
+                    out.push(flags());
+                }
             }
-        }
-        if self.is_cond_branch() {
-            out.push(flags());
+            Isa::AArch64 => {
+                // Destination-first; the first operand is only read by
+                // accumulating forms (fmla family). Store data registers
+                // (operand 0 of `st*`) are always read — the store's
+                // destination is the memory operand.
+                let dest_is_reg0 = !self.is_branch()
+                    && !self.is_compare()
+                    && !self.mnemonic.starts_with("st")
+                    && matches!(self.operands.first(), Some(Operand::Reg(_)));
+                for (i, op) in self.operands.iter().enumerate() {
+                    match op {
+                        Operand::Reg(r) => {
+                            if i == 0 && dest_is_reg0 && !self.reads_dest() {
+                                continue;
+                            }
+                            out.push(*r);
+                        }
+                        Operand::Mem(m) => out.extend(m.address_registers()),
+                        _ => {}
+                    }
+                }
+                if self.mnemonic.starts_with("b.") {
+                    out.push(flags());
+                }
+            }
         }
         out
     }
 
     /// Write-only destination (moves, loads, converts with full-width
-    /// writes) vs read-modify-write (adds, fma with 3 operands reads all).
+    /// writes) vs read-modify-write (x86 legacy 2-operand arithmetic and
+    /// FMA; AArch64 accumulating multiplies).
     fn reads_dest(&self) -> bool {
-        // VEX 3-operand forms never read the destination, except FMA which
-        // reads all three. Legacy 2-operand arithmetic reads both; the
-        // mov family (mov, movl, movaps, movupd, movdqa, movz/movs
-        // extensions) and lea replace the destination outright.
-        if self.mnemonic.starts_with("vfmadd")
-            || self.mnemonic.starts_with("vfmsub")
-            || self.mnemonic.starts_with("vfnmadd")
-        {
-            return true;
+        match self.isa {
+            Isa::X86 => {
+                // VEX 3-operand forms never read the destination, except
+                // FMA which reads all three. Legacy 2-operand arithmetic
+                // reads both; the mov family (mov, movl, movaps, movupd,
+                // movdqa, movz/movs extensions) and lea replace the
+                // destination outright.
+                if self.mnemonic.starts_with("vfmadd")
+                    || self.mnemonic.starts_with("vfmsub")
+                    || self.mnemonic.starts_with("vfnmadd")
+                {
+                    return true;
+                }
+                if self.mnemonic.starts_with('v') {
+                    return false;
+                }
+                if self.mnemonic.starts_with("mov") || self.mnemonic.starts_with("lea") {
+                    return false;
+                }
+                // Converts write the full register.
+                !self.mnemonic.starts_with("cvt")
+            }
+            Isa::AArch64 => {
+                // Accumulating vector multiplies read the destination;
+                // 4-operand fmadd carries its addend explicitly and does
+                // not.
+                self.mnemonic.starts_with("fmla")
+                    || self.mnemonic.starts_with("fmls")
+                    || matches!(self.mnemonic.as_str(), "mla" | "mls")
+            }
         }
-        if self.mnemonic.starts_with('v') {
-            return false;
-        }
-        if self.mnemonic.starts_with("mov") || self.mnemonic.starts_with("lea") {
-            return false;
-        }
-        // Converts write the full register.
-        !self.mnemonic.starts_with("cvt")
     }
 
     pub fn is_branch(&self) -> bool {
-        self.mnemonic.starts_with('j') || self.mnemonic == "loop"
+        self.isa.is_branch_mnemonic(&self.mnemonic)
     }
 
     pub fn is_cond_branch(&self) -> bool {
-        self.is_branch() && self.mnemonic != "jmp"
+        self.is_branch() && !matches!(self.mnemonic.as_str(), "jmp" | "b")
+    }
+
+    /// Branches that macro-fuse with a flag-setting predecessor (and
+    /// are therefore never resolved against the machine database):
+    /// every x86 jcc/jmp, and AArch64 `b`/`b.<cond>`. AArch64
+    /// compare-and-branch forms (cbz/cbnz/tbz/tbnz) carry their own
+    /// register read and resolve/execute like other instructions —
+    /// `api::Engine::prepare` and `sim::decode` share this predicate.
+    pub fn is_fusible_branch(&self) -> bool {
+        self.is_branch()
+            && match self.isa {
+                Isa::X86 => true,
+                Isa::AArch64 => self.mnemonic == "b" || self.mnemonic.starts_with("b."),
+            }
     }
 
     pub fn is_compare(&self) -> bool {
-        matches!(
-            self.mnemonic.trim_end_matches(['b', 'w', 'l', 'q']),
-            "cmp" | "test" | "comis" | "ucomis"
-        ) || self.mnemonic.starts_with("cmp")
-            || self.mnemonic.starts_with("test")
+        match self.isa {
+            Isa::X86 => {
+                matches!(
+                    self.mnemonic.trim_end_matches(['b', 'w', 'l', 'q']),
+                    "cmp" | "test" | "comis" | "ucomis"
+                ) || self.mnemonic.starts_with("cmp")
+                    || self.mnemonic.starts_with("test")
+            }
+            Isa::AArch64 => {
+                matches!(self.mnemonic.as_str(), "cmp" | "cmn" | "tst" | "fcmp" | "fcmpe" | "ccmp")
+            }
+        }
     }
 
-    /// Does the instruction set FLAGS? (Arithmetic + compares; moves and
-    /// SSE/AVX data ops do not.)
+    /// Does the instruction set the flags register? (x86: arithmetic +
+    /// compares; AArch64: compares + the `s`-suffixed arithmetic forms.)
     pub fn writes_flags(&self) -> bool {
-        if self.mnemonic.starts_with('v') {
-            return false;
+        match self.isa {
+            Isa::X86 => {
+                if self.mnemonic.starts_with('v') {
+                    return false;
+                }
+                // Match the spelled mnemonic first, then with ONE AT&T
+                // size suffix stripped — `trim_end_matches` would eat
+                // the trailing letter of `shl`/`imul` themselves and
+                // misclassify them as not setting FLAGS.
+                let flagged = |m: &str| {
+                    matches!(
+                        m,
+                        "add" | "sub" | "and" | "or" | "xor" | "inc" | "dec" | "cmp" | "test"
+                            | "neg" | "shl" | "shr" | "sar" | "imul"
+                    )
+                };
+                let m = self.mnemonic.as_str();
+                flagged(m) || m.strip_suffix(['b', 'w', 'l', 'q']).is_some_and(flagged)
+            }
+            Isa::AArch64 => {
+                self.is_compare()
+                    || matches!(self.mnemonic.as_str(), "subs" | "adds" | "ands" | "bics" | "negs")
+            }
         }
-        let m = self.mnemonic.trim_end_matches(['b', 'w', 'l', 'q']);
-        matches!(
-            m,
-            "add" | "sub" | "and" | "or" | "xor" | "inc" | "dec" | "cmp" | "test" | "neg"
-                | "shl" | "shr" | "sar" | "imul"
-        )
     }
 
     /// Is this a store (memory destination)?
@@ -200,47 +301,93 @@ impl Instruction {
 
     /// Is this a load (memory source that is not the destination)?
     pub fn is_load(&self) -> bool {
-        let n = self.operands.len();
-        self.operands
-            .iter()
-            .enumerate()
-            .any(|(i, o)| o.is_mem() && !(i + 1 == n && self.dest().map(|d| d.is_mem()).unwrap_or(false)))
+        match self.isa {
+            Isa::X86 => {
+                let n = self.operands.len();
+                self.operands.iter().enumerate().any(|(i, o)| {
+                    o.is_mem()
+                        && !(i + 1 == n && self.dest().map(|d| d.is_mem()).unwrap_or(false))
+                })
+            }
+            Isa::AArch64 => self.mnemonic.starts_with("ld") && self.has_mem_operand(),
+        }
     }
 
-    /// Zeroing idiom (`vxorpd %x, %x, %x`, `xorl %eax, %eax`): real cores
-    /// resolve these at rename without consuming an execution port. The
-    /// analyzer (like OSACA 0.2) does NOT know this; the simulator does —
-    /// exactly the §III-B discrepancy for the -O2 π kernel.
+    /// Zeroing idiom (`vxorpd %x, %x, %x`, `xorl %eax, %eax`; AArch64
+    /// `movi v0.2d, #0` / `eor v,v,v`): real cores resolve these at
+    /// rename without consuming an execution port. The analyzer (like
+    /// OSACA 0.2) does NOT know this; the simulator does — exactly the
+    /// §III-B discrepancy for the -O2 π kernel.
     pub fn is_zero_idiom(&self) -> bool {
         let m = &self.mnemonic;
-        let is_xor = m.starts_with("xor")
-            || m.starts_with("vxor")
-            || m.starts_with("pxor")
-            || m.starts_with("vpxor");
-        if !is_xor {
-            return false;
-        }
-        match self.operands.as_slice() {
-            [Operand::Reg(a), Operand::Reg(b)] => a == b,
-            [Operand::Reg(a), Operand::Reg(b), Operand::Reg(c)] => a == b && b == c,
-            _ => false,
+        match self.isa {
+            Isa::X86 => {
+                let is_xor = m.starts_with("xor")
+                    || m.starts_with("vxor")
+                    || m.starts_with("pxor")
+                    || m.starts_with("vpxor");
+                if !is_xor {
+                    return false;
+                }
+                match self.operands.as_slice() {
+                    [Operand::Reg(a), Operand::Reg(b)] => a == b,
+                    [Operand::Reg(a), Operand::Reg(b), Operand::Reg(c)] => a == b && b == c,
+                    _ => false,
+                }
+            }
+            Isa::AArch64 => {
+                if m == "movi" {
+                    return matches!(self.operands.as_slice(), [Operand::Reg(_), Operand::Imm(0)]);
+                }
+                if m == "eor" {
+                    return matches!(
+                        self.operands.as_slice(),
+                        [Operand::Reg(a), Operand::Reg(b), Operand::Reg(c)] if a == b && b == c
+                    );
+                }
+                false
+            }
         }
     }
 
     /// Register-to-register move eligible for move elimination at rename.
     pub fn is_reg_move(&self) -> bool {
-        let m = self.mnemonic.trim_end_matches(['b', 'w', 'l', 'q']);
-        let movish = matches!(m, "mov")
-            || self.mnemonic.starts_with("vmovap")
-            || self.mnemonic.starts_with("vmovup")
-            || self.mnemonic.starts_with("vmovdqa")
-            || self.mnemonic.starts_with("vmovdqu")
-            || self.mnemonic.starts_with("movap")
-            || self.mnemonic.starts_with("movup")
-            || self.mnemonic.starts_with("movdqa");
-        movish
-            && self.operands.len() == 2
-            && self.operands.iter().all(|o| matches!(o, Operand::Reg(_)))
+        let movish = match self.isa {
+            Isa::X86 => {
+                let m = self.mnemonic.trim_end_matches(['b', 'w', 'l', 'q']);
+                matches!(m, "mov")
+                    || self.mnemonic.starts_with("vmovap")
+                    || self.mnemonic.starts_with("vmovup")
+                    || self.mnemonic.starts_with("vmovdqa")
+                    || self.mnemonic.starts_with("vmovdqu")
+                    || self.mnemonic.starts_with("movap")
+                    || self.mnemonic.starts_with("movup")
+                    || self.mnemonic.starts_with("movdqa")
+            }
+            Isa::AArch64 => matches!(self.mnemonic.as_str(), "mov" | "fmov"),
+        };
+        if !(movish && self.operands.len() == 2) {
+            return false;
+        }
+        match (&self.operands[0], &self.operands[1]) {
+            (Operand::Reg(a), Operand::Reg(b)) => match self.isa {
+                Isa::X86 => true,
+                // GP<->FP transfers (`fmov d0, x1`) cross register
+                // files and cannot be eliminated at rename — real
+                // cores pay a multi-cycle transfer for them.
+                Isa::AArch64 => matches!(
+                    (a.file(), b.file()),
+                    (
+                        super::register::RegisterFile::Gp(_),
+                        super::register::RegisterFile::Gp(_)
+                    ) | (
+                        super::register::RegisterFile::Vec(_),
+                        super::register::RegisterFile::Vec(_)
+                    )
+                ),
+            },
+            _ => false,
+        }
     }
 
     /// Widest vector operand width in bits (0 for scalar-int only).
@@ -252,6 +399,7 @@ impl Instruction {
                 super::register::RegisterClass::Xmm => 128,
                 super::register::RegisterClass::Ymm => 256,
                 super::register::RegisterClass::Zmm => 512,
+                super::register::RegisterClass::AVec => 128,
                 _ => 0,
             })
             .max()
@@ -260,10 +408,20 @@ impl Instruction {
 }
 
 impl fmt::Display for Instruction {
+    /// Reconstruct a canonical source spelling in the instruction's own
+    /// syntax; `tests/display_roundtrip.rs` pins parse→display→parse
+    /// fidelity over every shipped fixture.
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if let Some(p) = &self.prefix {
+            write!(f, "{p} ")?;
+        }
         write!(f, "{}", self.mnemonic)?;
         for (i, op) in self.operands.iter().enumerate() {
-            write!(f, "{}{}", if i == 0 { " " } else { ", " }, op)?;
+            write!(f, "{}", if i == 0 { " " } else { ", " })?;
+            match self.isa {
+                Isa::X86 => write!(f, "{op}")?,
+                Isa::AArch64 => fmt_operand_aarch64(op, f)?,
+            }
         }
         Ok(())
     }
@@ -327,6 +485,16 @@ mod tests {
         assert!(i.writes_flags());
         assert!(i.dest().is_none());
         assert_eq!(i.writes().len(), 1); // flags only
+    }
+
+    #[test]
+    fn shift_and_imul_write_flags() {
+        // Regression: `trim_end_matches` used to eat the trailing
+        // letter of `shl`/`imul` themselves, so none of these matched.
+        for src in ["shll $2, %eax", "shl $2, %eax", "imull %ebx, %eax", "imul %rbx, %rax"] {
+            assert!(ins(src).writes_flags(), "{src}");
+        }
+        assert!(!ins("movl $1, %eax").writes_flags());
     }
 
     #[test]

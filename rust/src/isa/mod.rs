@@ -1,6 +1,13 @@
 //! Instruction-set abstractions: registers, operands, instructions and
 //! *instruction forms* (mnemonic + operand-type signature, the unit of the
 //! machine-model database — see paper §II).
+//!
+//! Everything in this module is ISA-tagged: an [`Instruction`] carries the
+//! [`Isa`] it was parsed as, and the classification methods (operand
+//! order, branch/compare detection, flag semantics) dispatch on it. The
+//! parsing side of an ISA lives in `asm::syntax` ([`crate::asm`]).
+
+use std::fmt;
 
 pub mod instruction;
 pub mod operand;
@@ -9,3 +16,82 @@ pub mod register;
 pub use instruction::{Instruction, InstructionForm, OperandSig};
 pub use operand::{MemRef, Operand};
 pub use register::{Register, RegisterClass, RegisterFile};
+
+/// The instruction-set architecture of a parsed instruction, kernel or
+/// machine model. `X86` means AT&T-syntax x86-64 (the paper's target);
+/// `AArch64` is the ARMv8 A64 syntax (the OSACA follow-up paper's second
+/// backend, used by the `tx2` ThunderX2 model).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum Isa {
+    /// AT&T-syntax x86-64 (`%rax`, `$imm`, `disp(base,index,scale)`,
+    /// destination-last).
+    #[default]
+    X86,
+    /// ARMv8 AArch64 (`x0`, `#imm`, `[base, index, lsl #s]`,
+    /// destination-first).
+    AArch64,
+}
+
+impl Isa {
+    /// Canonical lower-case name (the `.mdb` `isa` directive spelling).
+    pub fn name(self) -> &'static str {
+        match self {
+            Isa::X86 => "x86",
+            Isa::AArch64 => "aarch64",
+        }
+    }
+
+    /// Parse an ISA name (accepts the common aliases).
+    pub fn parse(s: &str) -> Option<Isa> {
+        match s.to_ascii_lowercase().as_str() {
+            "x86" | "x86_64" | "x86-64" | "att" => Some(Isa::X86),
+            "aarch64" | "arm64" | "armv8" => Some(Isa::AArch64),
+            _ => None,
+        }
+    }
+
+    /// Is `m` a branch mnemonic under this ISA? Single source of truth
+    /// for [`Instruction::is_branch`] and the `.mdb` parser's
+    /// "only branches may have zero µ-ops" rule.
+    pub fn is_branch_mnemonic(self, m: &str) -> bool {
+        match self {
+            Isa::X86 => m.starts_with('j') || m == "loop",
+            Isa::AArch64 => {
+                m == "b" || m.starts_with("b.") || matches!(m, "cbz" | "cbnz" | "tbz" | "tbnz")
+            }
+        }
+    }
+}
+
+impl fmt::Display for Isa {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.name())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn isa_names_roundtrip() {
+        for isa in [Isa::X86, Isa::AArch64] {
+            assert_eq!(Isa::parse(isa.name()), Some(isa));
+        }
+        assert_eq!(Isa::parse("arm64"), Some(Isa::AArch64));
+        assert_eq!(Isa::parse("riscv"), None);
+        assert_eq!(Isa::default(), Isa::X86);
+    }
+
+    #[test]
+    fn branch_mnemonics_per_isa() {
+        assert!(Isa::X86.is_branch_mnemonic("jne"));
+        assert!(Isa::X86.is_branch_mnemonic("jmp"));
+        assert!(!Isa::X86.is_branch_mnemonic("b.ne"));
+        assert!(Isa::AArch64.is_branch_mnemonic("b"));
+        assert!(Isa::AArch64.is_branch_mnemonic("b.ne"));
+        assert!(Isa::AArch64.is_branch_mnemonic("cbnz"));
+        assert!(!Isa::AArch64.is_branch_mnemonic("bl"));
+        assert!(!Isa::AArch64.is_branch_mnemonic("jne"));
+    }
+}

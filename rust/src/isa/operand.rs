@@ -35,7 +35,12 @@ impl MemRef {
 }
 
 impl fmt::Display for MemRef {
+    /// AT&T-syntax rendering (`disp(base,index,scale)`); AArch64
+    /// instructions render through [`fmt_operand_aarch64`] instead.
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if let Some(seg) = self.segment {
+            write!(f, "{seg}:")?;
+        }
         if let Some(sym) = &self.symbol {
             write!(f, "{sym}")?;
         } else if self.displacement != 0 {
@@ -100,6 +105,8 @@ impl Operand {
 }
 
 impl fmt::Display for Operand {
+    /// AT&T-syntax rendering; AArch64 instructions render through
+    /// [`fmt_operand_aarch64`] instead.
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         match self {
             Operand::Reg(r) => write!(f, "{r}"),
@@ -107,6 +114,37 @@ impl fmt::Display for Operand {
             Operand::Mem(m) => write!(f, "{m}"),
             Operand::Label(l) => write!(f, "{l}"),
         }
+    }
+}
+
+impl MemRef {
+    /// AArch64 rendering: `[base]`, `[base, #disp]`,
+    /// `[base, index{, lsl #shift}]`.
+    pub(crate) fn fmt_aarch64(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "[")?;
+        if let Some(b) = self.base {
+            write!(f, "{}", b.name)?;
+        }
+        if let Some(i) = self.index {
+            write!(f, ", {}", i.name)?;
+            if self.scale != 1 {
+                write!(f, ", lsl #{}", self.scale.trailing_zeros())?;
+            }
+        } else if self.displacement != 0 {
+            write!(f, ", #{}", self.displacement)?;
+        }
+        write!(f, "]")
+    }
+}
+
+/// AArch64 operand rendering (no `%`/`$` sigils; `#` immediates;
+/// bracketed memory references).
+pub(crate) fn fmt_operand_aarch64(op: &Operand, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+    match op {
+        Operand::Reg(r) => write!(f, "{}", r.name),
+        Operand::Imm(v) => write!(f, "#{v}"),
+        Operand::Mem(m) => m.fmt_aarch64(f),
+        Operand::Label(l) => write!(f, "{l}"),
     }
 }
 

@@ -1,15 +1,17 @@
-//! x86-64 register names and classes.
+//! Register names and classes — x86-64 and AArch64.
 //!
 //! Registers are the unit of dependency tracking in the simulator and of
 //! operand-type classification in the analyzer. We canonicalize aliased
-//! GP registers (`%eax` and `%rax` both map to the `rax` slot) so that a
-//! 32-bit write is seen by a 64-bit read, matching x86 renaming rules
-//! closely enough for throughput analysis.
+//! registers (`%eax`/`%rax` map to the `rax` slot; `w5`/`x5` to the `x5`
+//! slot; `s0`/`d0`/`v0.2d`/`q0` to the `v0` slot) so that a narrow write
+//! is seen by a wide read, matching renaming rules closely enough for
+//! throughput analysis.
 
 use std::fmt;
 
 /// Architectural register class. Determines the operand-type letter used
-/// in instruction-form signatures (`r32`, `r64`, `xmm`, `ymm`, ...).
+/// in instruction-form signatures (`r32`, `r64`, `xmm`, `ymm`, ... on
+/// x86; `w`, `x`, `s`, `d`, `q` on AArch64).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub enum RegisterClass {
     /// 8-bit GP (al, r10b, ...)
@@ -30,8 +32,22 @@ pub enum RegisterClass {
     Mask,
     /// Instruction pointer (rip-relative addressing)
     Rip,
-    /// FLAGS register (implicit operand of cmp/test/jcc and arithmetic)
+    /// FLAGS register (x86) / NZCV (AArch64) — implicit operand of
+    /// compares, flag-setting arithmetic and conditional branches.
     Flags,
+    /// x86 segment register (`%fs`, `%gs`, ...), kept for display
+    /// fidelity of segment overrides; never a dependency in our kernels.
+    Seg,
+    /// AArch64 32-bit GP view (w0..w30, wsp, wzr).
+    AGp32,
+    /// AArch64 64-bit GP (x0..x30, sp, lr, xzr).
+    AGp64,
+    /// AArch64 32-bit FP scalar view (s0..s31).
+    AFp32,
+    /// AArch64 64-bit FP scalar view (d0..d31).
+    AFp64,
+    /// AArch64 128-bit SIMD vector (v0..v31 with arrangement, q0..q31).
+    AVec,
 }
 
 impl RegisterClass {
@@ -48,6 +64,12 @@ impl RegisterClass {
             RegisterClass::Mask => 64,
             RegisterClass::Rip => 64,
             RegisterClass::Flags => 64,
+            RegisterClass::Seg => 16,
+            RegisterClass::AGp32 => 32,
+            RegisterClass::AGp64 => 64,
+            RegisterClass::AFp32 => 32,
+            RegisterClass::AFp64 => 64,
+            RegisterClass::AVec => 128,
         }
     }
 
@@ -65,6 +87,12 @@ impl RegisterClass {
             RegisterClass::Mask => "k",
             RegisterClass::Rip => "rip",
             RegisterClass::Flags => "flags",
+            RegisterClass::Seg => "seg",
+            RegisterClass::AGp32 => "w",
+            RegisterClass::AGp64 => "x",
+            RegisterClass::AFp32 => "s",
+            RegisterClass::AFp64 => "d",
+            RegisterClass::AVec => "q",
         }
     }
 }
@@ -83,6 +111,8 @@ pub struct Register {
 }
 
 /// Dependency-tracking family: registers that alias each other share one.
+/// Kernels never mix ISAs, so the x86 and AArch64 GP/vector namespaces
+/// can safely share the `Gp`/`Vec` variants.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum RegisterFile {
     Gp(u8),
@@ -90,19 +120,29 @@ pub enum RegisterFile {
     Mask(u8),
     Rip,
     Flags,
+    Seg(u8),
 }
 
 impl Register {
     /// The rename-file slot this register occupies.
     pub fn file(&self) -> RegisterFile {
         match self.class {
-            RegisterClass::Gp8 | RegisterClass::Gp16 | RegisterClass::Gp32 | RegisterClass::Gp64 => {
-                RegisterFile::Gp(self.slot)
-            }
-            RegisterClass::Xmm | RegisterClass::Ymm | RegisterClass::Zmm => RegisterFile::Vec(self.slot),
+            RegisterClass::Gp8
+            | RegisterClass::Gp16
+            | RegisterClass::Gp32
+            | RegisterClass::Gp64
+            | RegisterClass::AGp32
+            | RegisterClass::AGp64 => RegisterFile::Gp(self.slot),
+            RegisterClass::Xmm
+            | RegisterClass::Ymm
+            | RegisterClass::Zmm
+            | RegisterClass::AFp32
+            | RegisterClass::AFp64
+            | RegisterClass::AVec => RegisterFile::Vec(self.slot),
             RegisterClass::Mask => RegisterFile::Mask(self.slot),
             RegisterClass::Rip => RegisterFile::Rip,
             RegisterClass::Flags => RegisterFile::Flags,
+            RegisterClass::Seg => RegisterFile::Seg(self.slot),
         }
     }
 }
@@ -129,9 +169,10 @@ const GP8: [&str; 20] = [
     "al", "bl", "cl", "dl", "sil", "dil", "bpl", "spl", "r8b", "r9b", "r10b", "r11b", "r12b",
     "r13b", "r14b", "r15b", "ah", "bh", "ch", "dh",
 ];
+const SEG: [&str; 6] = ["es", "cs", "ss", "ds", "fs", "gs"];
 
-/// Parse a register name (without the `%` sigil). Returns `None` for
-/// unknown names so the assembly parser can produce a real error.
+/// Parse an x86 register name (without the `%` sigil). Returns `None`
+/// for unknown names so the assembly parser can produce a real error.
 pub fn parse_register(name: &str) -> Option<Register> {
     let lower = name.to_ascii_lowercase();
     let n = lower.as_str();
@@ -173,7 +214,67 @@ pub fn parse_register(name: &str) -> Option<Register> {
             }
         }
     }
+    if let Some(i) = SEG.iter().position(|&r| r == n) {
+        return Some(Register { class: RegisterClass::Seg, slot: i as u8, name: SEG[i] });
+    }
     None
+}
+
+/// Parse an AArch64 register name. Aliasing follows the architecture:
+/// `w5`/`x5` share GP slot 5, `s0`/`d0`/`q0`/`v0.<arr>` share vector
+/// slot 0. `sp`/`wsp` live in GP slot 31, the zero registers
+/// `xzr`/`wzr` in GP slot 32 (their writes are discarded by
+/// `Instruction::writes`).
+pub fn parse_aarch64_register(name: &str) -> Option<Register> {
+    let lower = name.to_ascii_lowercase();
+    let n = lower.as_str();
+    match n {
+        "sp" => {
+            return Some(Register { class: RegisterClass::AGp64, slot: 31, name: "sp" });
+        }
+        "wsp" => {
+            return Some(Register { class: RegisterClass::AGp32, slot: 31, name: "wsp" });
+        }
+        "xzr" => {
+            return Some(Register { class: RegisterClass::AGp64, slot: 32, name: "xzr" });
+        }
+        "wzr" => {
+            return Some(Register { class: RegisterClass::AGp32, slot: 32, name: "wzr" });
+        }
+        "lr" => {
+            return Some(Register { class: RegisterClass::AGp64, slot: 30, name: "lr" });
+        }
+        "fp" => {
+            return Some(Register { class: RegisterClass::AGp64, slot: 29, name: "fp" });
+        }
+        _ => {}
+    }
+    let numbered = |prefix: &str, class: RegisterClass, max: u8| -> Option<Register> {
+        let rest = n.strip_prefix(prefix)?;
+        let idx = rest.parse::<u8>().ok()?;
+        if idx < max {
+            Some(Register { class, slot: idx, name: static_name(prefix, idx) })
+        } else {
+            None
+        }
+    };
+    // Vector registers may carry an arrangement: `v0.2d`, `v12.4s`, ...
+    if let Some(rest) = n.strip_prefix('v') {
+        if let Some((idx_s, arr)) = rest.split_once('.') {
+            let idx = idx_s.parse::<u8>().ok()?;
+            if idx < 32 {
+                let name = a64_vec_name(idx, arr)?;
+                return Some(Register { class: RegisterClass::AVec, slot: idx, name });
+            }
+            return None;
+        }
+        return numbered("v", RegisterClass::AVec, 32);
+    }
+    numbered("x", RegisterClass::AGp64, 31)
+        .or_else(|| numbered("w", RegisterClass::AGp32, 31))
+        .or_else(|| numbered("q", RegisterClass::AVec, 32))
+        .or_else(|| numbered("d", RegisterClass::AFp64, 32))
+        .or_else(|| numbered("s", RegisterClass::AFp32, 32))
 }
 
 fn vec_name(class: RegisterClass, idx: u8) -> &'static str {
@@ -190,31 +291,58 @@ fn mask_name(idx: u8) -> &'static str {
     static_name("k", idx)
 }
 
-/// Canonical static names for numbered registers. Covers xmm/ymm/zmm 0..32
-/// and k0..8 without leaking.
+/// 32-entry static name table: `concat!(prefix, N, suffix)`.
+macro_rules! name_table {
+    ($p:literal, $s:literal, $idx:expr) => {{
+        const T: [&str; 32] = [
+            concat!($p, "0", $s), concat!($p, "1", $s), concat!($p, "2", $s),
+            concat!($p, "3", $s), concat!($p, "4", $s), concat!($p, "5", $s),
+            concat!($p, "6", $s), concat!($p, "7", $s), concat!($p, "8", $s),
+            concat!($p, "9", $s), concat!($p, "10", $s), concat!($p, "11", $s),
+            concat!($p, "12", $s), concat!($p, "13", $s), concat!($p, "14", $s),
+            concat!($p, "15", $s), concat!($p, "16", $s), concat!($p, "17", $s),
+            concat!($p, "18", $s), concat!($p, "19", $s), concat!($p, "20", $s),
+            concat!($p, "21", $s), concat!($p, "22", $s), concat!($p, "23", $s),
+            concat!($p, "24", $s), concat!($p, "25", $s), concat!($p, "26", $s),
+            concat!($p, "27", $s), concat!($p, "28", $s), concat!($p, "29", $s),
+            concat!($p, "30", $s), concat!($p, "31", $s),
+        ];
+        T[$idx as usize]
+    }};
+}
+
+/// Canonical static names for numbered registers: xmm/ymm/zmm 0..32 and
+/// k0..8 (x86), x/w/v/q/d/s (AArch64) — no leaking.
 pub(crate) fn static_name(prefix: &str, idx: u8) -> &'static str {
-    macro_rules! table {
-        ($p:literal) => {{
-            const T: [&str; 32] = [
-                concat!($p, "0"), concat!($p, "1"), concat!($p, "2"), concat!($p, "3"),
-                concat!($p, "4"), concat!($p, "5"), concat!($p, "6"), concat!($p, "7"),
-                concat!($p, "8"), concat!($p, "9"), concat!($p, "10"), concat!($p, "11"),
-                concat!($p, "12"), concat!($p, "13"), concat!($p, "14"), concat!($p, "15"),
-                concat!($p, "16"), concat!($p, "17"), concat!($p, "18"), concat!($p, "19"),
-                concat!($p, "20"), concat!($p, "21"), concat!($p, "22"), concat!($p, "23"),
-                concat!($p, "24"), concat!($p, "25"), concat!($p, "26"), concat!($p, "27"),
-                concat!($p, "28"), concat!($p, "29"), concat!($p, "30"), concat!($p, "31"),
-            ];
-            T[idx as usize]
-        }};
-    }
     match prefix {
-        "xmm" => table!("xmm"),
-        "ymm" => table!("ymm"),
-        "zmm" => table!("zmm"),
-        "k" => table!("k"),
+        "xmm" => name_table!("xmm", "", idx),
+        "ymm" => name_table!("ymm", "", idx),
+        "zmm" => name_table!("zmm", "", idx),
+        "k" => name_table!("k", "", idx),
+        "x" => name_table!("x", "", idx),
+        "w" => name_table!("w", "", idx),
+        "v" => name_table!("v", "", idx),
+        "q" => name_table!("q", "", idx),
+        "d" => name_table!("d", "", idx),
+        "s" => name_table!("s", "", idx),
         _ => unreachable!("static_name prefix {prefix}"),
     }
+}
+
+/// Static names for AArch64 vector registers with an arrangement
+/// specifier (`v0.2d`, ...). `None` for unsupported arrangements.
+fn a64_vec_name(idx: u8, arr: &str) -> Option<&'static str> {
+    Some(match arr {
+        "2d" => name_table!("v", ".2d", idx),
+        "1d" => name_table!("v", ".1d", idx),
+        "4s" => name_table!("v", ".4s", idx),
+        "2s" => name_table!("v", ".2s", idx),
+        "8h" => name_table!("v", ".8h", idx),
+        "4h" => name_table!("v", ".4h", idx),
+        "16b" => name_table!("v", ".16b", idx),
+        "8b" => name_table!("v", ".8b", idx),
+        _ => return None,
+    })
 }
 
 /// The FLAGS pseudo-register (implicit dep of compares and branches).
@@ -263,5 +391,50 @@ mod tests {
             assert_eq!(r.class, RegisterClass::Gp64);
             assert_eq!(r.name, n);
         }
+    }
+
+    #[test]
+    fn segment_registers_parse() {
+        let fs = parse_register("fs").unwrap();
+        assert_eq!(fs.class, RegisterClass::Seg);
+        assert_eq!(fs.name, "fs");
+    }
+
+    #[test]
+    fn aarch64_gp_aliasing() {
+        let x5 = parse_aarch64_register("x5").unwrap();
+        let w5 = parse_aarch64_register("w5").unwrap();
+        assert_eq!(x5.file(), w5.file());
+        assert_eq!(x5.class, RegisterClass::AGp64);
+        assert_eq!(w5.class, RegisterClass::AGp32);
+        assert_eq!(x5.name, "x5");
+    }
+
+    #[test]
+    fn aarch64_vector_views_alias() {
+        let v = parse_aarch64_register("v3.2d").unwrap();
+        let q = parse_aarch64_register("q3").unwrap();
+        let d = parse_aarch64_register("d3").unwrap();
+        let s = parse_aarch64_register("s3").unwrap();
+        assert_eq!(v.file(), q.file());
+        assert_eq!(q.file(), d.file());
+        assert_eq!(d.file(), s.file());
+        assert_eq!(v.name, "v3.2d");
+        assert_eq!(v.class.sig(), "q");
+        assert_eq!(d.class.sig(), "d");
+    }
+
+    #[test]
+    fn aarch64_specials() {
+        assert_eq!(parse_aarch64_register("sp").unwrap().slot, 31);
+        assert_eq!(parse_aarch64_register("xzr").unwrap().slot, 32);
+        assert_eq!(
+            parse_aarch64_register("wzr").unwrap().file(),
+            parse_aarch64_register("xzr").unwrap().file()
+        );
+        assert!(parse_aarch64_register("x31").is_none());
+        assert!(parse_aarch64_register("v32.2d").is_none());
+        assert!(parse_aarch64_register("v0.3d").is_none());
+        assert!(parse_aarch64_register("rax").is_none());
     }
 }

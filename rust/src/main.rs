@@ -5,8 +5,8 @@
 //! request/report shape, structured errors.
 //!
 //! Subcommands:
-//!   analyze <file.s> --arch skl|zen|hsw [--baseline] [--critpath] [--json]
-//!   simulate <file.s> --arch skl|zen [--iterations N]
+//!   analyze <file.s> --arch skl|zen|hsw|tx2 [--baseline] [--critpath] [--json]
+//!   simulate <file.s> --arch skl|zen|tx2 [--iterations N]
 //!   ibench --instr <form> --arch skl|zen [--conflict <form>]
 //!   build-model --instr <form> --arch skl|zen
 //!   validate-model --arch skl|zen
@@ -77,9 +77,9 @@ fn machine_opt(engine: &Engine, opts: &HashMap<&str, &str>) -> Result<Arc<Machin
     engine.machine(arch).map_err(|e| anyhow!("{e}"))
 }
 
-fn load_kernel(path: &str) -> Result<asm::Kernel> {
+fn load_kernel(path: &str, isa: osaca::isa::Isa) -> Result<asm::Kernel> {
     let src = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
-    asm::extract_kernel(path, &src)
+    asm::extract_kernel_isa(path, &src, isa)
 }
 
 fn run(args: &[String]) -> Result<()> {
@@ -106,7 +106,7 @@ fn run(args: &[String]) -> Result<()> {
                     .map_err(|e| anyhow!("{e}"))?,
                 None => hardware.clone(),
             };
-            let kernel = load_kernel(path)?;
+            let kernel = load_kernel(path, machine.isa)?;
             let machine = if opts.contains_key("learn") {
                 // §III: benchmark unknown forms automatically on the
                 // hardware substrate and register the extended model.
@@ -151,7 +151,7 @@ fn run(args: &[String]) -> Result<()> {
                 opts.get("iterations").map(|v| v.parse()).transpose()?.unwrap_or(1000);
             let req = Engine::request(path)
                 .machine(machine.clone())
-                .kernel(load_kernel(path)?)
+                .kernel(load_kernel(path, machine.isa)?)
                 .passes(Passes::SIMULATE)
                 .sim_config(SimConfig { iterations, warmup: iterations / 5 });
             let report = engine.analyze(&req).map_err(|e| anyhow!("{e}"))?;
@@ -267,7 +267,7 @@ fn run(args: &[String]) -> Result<()> {
             let unroll: usize = opts.get("unroll").map(|v| v.parse()).transpose()?.unwrap_or(1);
             let req = Engine::request(path)
                 .machine(machine.clone())
-                .kernel(load_kernel(path)?)
+                .kernel(load_kernel(path, machine.isa)?)
                 .passes(Passes::ALL)
                 .unroll(unroll);
             let r = engine.analyze(&req).map_err(|e| anyhow!("{e}"))?;
@@ -352,10 +352,11 @@ fn run(args: &[String]) -> Result<()> {
             serve_demo(&engine, n)?;
         }
         "list-workloads" => {
-            for w in workloads::all() {
+            for w in workloads::all_isa() {
                 println!(
-                    "{:<16} compiled-for={:<4} unroll={} flops/it={}",
+                    "{:<16} isa={:<8} compiled-for={:<4} unroll={} flops/it={}",
                     w.name(),
+                    w.isa.name(),
                     w.compiled_for,
                     w.unroll,
                     w.flops_per_it
@@ -414,8 +415,8 @@ fn print_usage() {
 usage: osaca <command> [options]
 
 commands:
-  analyze <file.s> --arch skl|zen|hsw [--baseline] [--critpath] [--json]
-  simulate <file.s> --arch skl|zen [--iterations N]
+  analyze <file.s> --arch skl|zen|hsw|tx2 [--baseline] [--critpath] [--json]
+  simulate <file.s> --arch skl|zen|tx2 [--iterations N]
   ibench --instr <form> --arch skl|zen [--conflict <form>]
   build-model --instr <form> --arch skl|zen
   validate-model --arch skl|zen

@@ -20,7 +20,7 @@
 
 use anyhow::{anyhow, bail, Context, Result};
 
-use crate::isa::InstructionForm;
+use crate::isa::{InstructionForm, Isa};
 
 use super::entry::{FormEntry, Uop, UopKind};
 use super::machine::{CoreParams, MachineModel};
@@ -31,6 +31,7 @@ impl MachineModel {
     pub fn parse(src: &str) -> Result<MachineModel> {
         let mut name = None;
         let mut arch_name = String::new();
+        let mut isa = Isa::X86;
         let mut ports: Vec<String> = Vec::new();
         let mut frequency_ghz = 1.8f64;
         let mut flags: Vec<String> = Vec::new();
@@ -54,6 +55,10 @@ impl MachineModel {
                     let (short, pretty) = rest.split_once(char::is_whitespace).unwrap_or((rest, ""));
                     name = Some(short.to_string());
                     arch_name = pretty.trim_matches('"').to_string();
+                }
+                "isa" => {
+                    isa = Isa::parse(rest)
+                        .ok_or_else(|| anyhow!("line {}: unknown isa `{rest}`", lineno + 1))?;
                 }
                 "freq" => frequency_ghz = rest.parse().context("bad freq")?,
                 "ports" => ports = rest.split_whitespace().map(str::to_string).collect(),
@@ -100,6 +105,7 @@ impl MachineModel {
         let mut model = MachineModel {
             name,
             arch_name,
+            isa,
             ports,
             frequency_ghz,
             avx256_split: flags.iter().any(|f| f == "avx256_split"),
@@ -130,6 +136,9 @@ impl MachineModel {
     pub fn serialize(&self) -> String {
         let mut out = String::new();
         out.push_str(&format!("arch {} \"{}\"\n", self.name, self.arch_name));
+        if self.isa != Isa::X86 {
+            out.push_str(&format!("isa {}\n", self.isa.name()));
+        }
         out.push_str(&format!("freq {}\n", self.frequency_ghz));
         out.push_str(&format!("ports {}\n", self.ports.join(" ")));
         let plist = |m: PortMask| {
@@ -264,7 +273,7 @@ fn parse_entry(model: &MachineModel, line: &str) -> Result<FormEntry> {
             other => bail!("unknown entry field `{other}`"),
         }
     }
-    if uops.is_empty() && !form.mnemonic.starts_with('j') {
+    if uops.is_empty() && !model.isa.is_branch_mnemonic(&form.mnemonic) {
         bail!("entry `{form}` has no uops (only branches may)");
     }
     Ok(FormEntry { form, latency, throughput, uops })
@@ -330,9 +339,23 @@ entry vdivsd-xmm_xmm_xmm lat=13 tp=4 uops=c@1:P0,dv@4:0DV
 
     #[test]
     fn builtin_serialize_roundtrip() {
-        for m in [super::super::skylake(), super::super::zen()] {
+        for m in [super::super::skylake(), super::super::zen(), super::super::thunderx2()] {
             let m2 = MachineModel::parse(&m.serialize()).unwrap();
             assert_eq!(m.entries.len(), m2.entries.len(), "{}", m.name);
+            assert_eq!(m.isa, m2.isa, "{}", m.name);
         }
+    }
+
+    #[test]
+    fn isa_directive_parses_and_defaults() {
+        let m = MachineModel::parse(MINI).unwrap();
+        assert_eq!(m.isa, Isa::X86);
+        let a64 = "arch t \"T\"\nisa aarch64\nports I0 LS\nloadports LS\n\
+                   entry fadd-d_d_d lat=6 tp=0.5 uops=c@1:I0\n";
+        let m = MachineModel::parse(a64).unwrap();
+        assert_eq!(m.isa, Isa::AArch64);
+        assert!(m.serialize().contains("isa aarch64"));
+        let bad = "arch t \"T\"\nisa riscv\nports I0\n";
+        assert!(MachineModel::parse(bad).is_err());
     }
 }

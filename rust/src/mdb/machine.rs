@@ -5,7 +5,7 @@ use std::sync::Arc;
 
 use anyhow::{anyhow, Result};
 
-use crate::isa::{Instruction, InstructionForm};
+use crate::isa::{Instruction, InstructionForm, Isa};
 
 use super::entry::{FormEntry, Provenance, ResolvedUops, Uop, UopKind};
 use super::index::FormIndex;
@@ -52,10 +52,16 @@ impl Default for CoreParams {
 /// A full machine model (one per microarchitecture).
 #[derive(Debug)]
 pub struct MachineModel {
-    /// Short name used on the CLI (`skl`, `zen`).
+    /// Short name used on the CLI (`skl`, `zen`, `tx2`).
     pub name: String,
     /// Human-readable name ("Intel Skylake").
     pub arch_name: String,
+    /// Instruction-set architecture the model describes (`isa` directive
+    /// in the `.mdb` file; defaults to x86). Kernels resolve against a
+    /// model only when their ISA matches, and the synthesis fallbacks
+    /// (x86 suffix normalization, 256-bit splitting, mem-form synthesis)
+    /// are keyed on it so they can never fire on foreign-ISA forms.
+    pub isa: Isa,
     /// Port display names, index = port id used in masks.
     pub ports: Vec<String>,
     /// Clock frequency used to convert cycles <-> time (paper: 1.8 GHz).
@@ -99,6 +105,7 @@ impl Clone for MachineModel {
         MachineModel {
             name: self.name.clone(),
             arch_name: self.arch_name.clone(),
+            isa: self.isa,
             ports: self.ports.clone(),
             frequency_ghz: self.frequency_ghz,
             avx256_split: self.avx256_split,
@@ -187,6 +194,18 @@ impl MachineModel {
     /// the form that affects synthesis — so repeated resolution of the
     /// same kernel is a lock-light cache hit.
     pub fn resolve(&self, ins: &Instruction) -> Result<Arc<ResolvedUops>> {
+        // ISA guard: a foreign-ISA instruction must never hit the direct
+        // tier by coincidental form spelling, nor trigger this model's
+        // synthesis rules (cross-ISA cache pollution would follow).
+        if ins.isa != self.isa {
+            return Err(anyhow!(
+                "ISA mismatch: {} instruction `{ins}` (line {}) cannot resolve against the {} model `{}`",
+                ins.isa,
+                ins.line,
+                self.isa,
+                self.name
+            ));
+        }
         let form = ins.form();
         if let Some(r) = self.direct_index().get(&form) {
             return Ok(Arc::clone(r));
@@ -200,33 +219,40 @@ impl MachineModel {
     }
 
     /// The uncached synthesis fallbacks (steps 2-4 of [`resolve`]).
+    ///
+    /// Every fallback is x86-specific (AT&T size suffixes, AVX 256-bit
+    /// halving, one-mem-operand synthesis), so models for other ISAs go
+    /// straight to the database-miss error: an AArch64 form either hits
+    /// the direct tier or fails loudly.
     fn resolve_fresh(&self, ins: &Instruction, form: &InstructionForm) -> Result<ResolvedUops> {
-        // 2. scalar-int suffix normalization.
-        if let Some(e) = self.suffix_normalized(form) {
-            return Ok(ResolvedUops { entry: e, provenance: Provenance::SynthesizedSuffix });
-        }
-        // 3. ymm from xmm when the architecture splits 256-bit ops.
-        if self.avx256_split && form.sig.0.contains("ymm") {
-            let xmm_form = InstructionForm {
-                mnemonic: form.mnemonic.clone(),
-                sig: crate::isa::OperandSig(form.sig.0.replace("ymm", "xmm")),
-            };
-            if let Ok(base) = self.resolve_form_only(&xmm_form) {
-                let mut uops = base.uops.clone();
-                uops.extend(base.uops.iter().cloned());
-                let entry = FormEntry {
-                    form: form.clone(),
-                    latency: base.latency, // halves execute independently
-                    throughput: base.throughput * 2.0,
-                    uops,
-                };
-                return Ok(ResolvedUops { entry, provenance: Provenance::SynthesizedSplit });
+        if self.isa == Isa::X86 {
+            // 2. scalar-int suffix normalization.
+            if let Some(e) = self.suffix_normalized(form) {
+                return Ok(ResolvedUops { entry: e, provenance: Provenance::SynthesizedSuffix });
             }
-        }
-        // 4. memory-form synthesis from the register form.
-        if form.sig.0.contains("mem") {
-            if let Some(resolved) = self.synthesize_mem(ins, form)? {
-                return Ok(resolved);
+            // 3. ymm from xmm when the architecture splits 256-bit ops.
+            if self.avx256_split && form.sig.0.contains("ymm") {
+                let xmm_form = InstructionForm {
+                    mnemonic: form.mnemonic.clone(),
+                    sig: crate::isa::OperandSig(form.sig.0.replace("ymm", "xmm")),
+                };
+                if let Ok(base) = self.resolve_form_only(&xmm_form) {
+                    let mut uops = base.uops.clone();
+                    uops.extend(base.uops.iter().cloned());
+                    let entry = FormEntry {
+                        form: form.clone(),
+                        latency: base.latency, // halves execute independently
+                        throughput: base.throughput * 2.0,
+                        uops,
+                    };
+                    return Ok(ResolvedUops { entry, provenance: Provenance::SynthesizedSplit });
+                }
+            }
+            // 4. memory-form synthesis from the register form.
+            if form.sig.0.contains("mem") {
+                if let Some(resolved) = self.synthesize_mem(ins, form)? {
+                    return Ok(resolved);
+                }
             }
         }
         Err(anyhow!(

@@ -7,8 +7,11 @@
 //! scheduler sizes, load latency, store-forward latency, ...).
 //!
 //! Models ship as `.mdb` text files embedded in the binary
-//! (`data/skl.mdb`, `data/zen.mdb`, `data/hsw.mdb`) and can be
-//! written/extended by the model builder (paper §II-C workflow).
+//! (`data/skl.mdb`, `data/zen.mdb`, `data/hsw.mdb`, and the AArch64
+//! `data/tx2.mdb`) and can be written/extended by the model builder
+//! (paper §II-C workflow). A model's `isa` directive selects the
+//! assembly syntax and gates the synthesis fallbacks (see
+//! `MachineModel::isa`).
 //!
 //! Built-in models are parsed **once** per process and shared as
 //! `Arc<MachineModel>` (the registry behind `osaca::api::Engine`); the
@@ -77,19 +80,25 @@ fn hsw_shared() -> &'static Arc<MachineModel> {
     M.get_or_init(|| parse_builtin(include_str!("data/hsw.mdb"), "hsw"))
 }
 
-/// Canonical CLI names of the built-in models.
-pub fn builtin_names() -> &'static [&'static str] {
-    &["hsw", "skl", "zen"]
+fn tx2_shared() -> &'static Arc<MachineModel> {
+    static M: OnceLock<Arc<MachineModel>> = OnceLock::new();
+    M.get_or_init(|| parse_builtin(include_str!("data/tx2.mdb"), "tx2"))
 }
 
-/// Shared handle to a built-in model by CLI name (`skl`, `zen`, `hsw`
-/// plus the long aliases). This is the lookup the `api::Engine`
+/// Canonical CLI names of the built-in models.
+pub fn builtin_names() -> &'static [&'static str] {
+    &["hsw", "skl", "tx2", "zen"]
+}
+
+/// Shared handle to a built-in model by CLI name (`skl`, `zen`, `hsw`,
+/// `tx2` plus the long aliases). This is the lookup the `api::Engine`
 /// registry uses: no parsing, no copying.
 pub fn by_name_shared(name: &str) -> Option<Arc<MachineModel>> {
     match name.to_ascii_lowercase().as_str() {
         "skl" | "skylake" => Some(skl_shared().clone()),
         "zen" | "znver1" => Some(zen_shared().clone()),
         "hsw" | "haswell" => Some(hsw_shared().clone()),
+        "tx2" | "thunderx2" => Some(tx2_shared().clone()),
         _ => None,
     }
 }
@@ -113,6 +122,14 @@ pub fn zen() -> MachineModel {
 /// Compatibility shim; see [`skylake`].
 pub fn haswell() -> MachineModel {
     hsw_shared().as_ref().clone()
+}
+
+/// Built-in Marvell/Cavium ThunderX2 (AArch64) model — the outlook
+/// item of the paper ("how the method may be generalized to new
+/// architectures"), following the 2019 OSACA follow-up's ARM support.
+/// Compatibility shim; see [`skylake`].
+pub fn thunderx2() -> MachineModel {
+    tx2_shared().as_ref().clone()
 }
 
 /// Look up a built-in model by CLI name (`skl`, `zen`, `hsw`).
@@ -145,7 +162,21 @@ mod tests {
         assert!(by_name("SKYLAKE").is_some());
         assert!(by_name("zen").is_some());
         assert!(by_name("hsw").is_some());
+        assert!(by_name("tx2").is_some());
+        assert!(by_name("thunderx2").is_some());
         assert!(by_name("cascadelake").is_none());
+    }
+
+    #[test]
+    fn tx2_model_is_aarch64() {
+        use crate::isa::Isa;
+        let m = thunderx2();
+        assert_eq!(m.name, "tx2");
+        assert_eq!(m.isa, Isa::AArch64);
+        assert_eq!(m.ports.len(), 8); // I0 I1 F0 F1 LS0 LS1 SD DV
+        assert_eq!(m.divider_ports().count(), 1);
+        assert!(!m.avx256_split);
+        assert!(m.sim_macro_fusion);
     }
 
     #[test]

@@ -180,8 +180,12 @@ fn run_core(
     // skipped with one comparison.
     let mut waiting: Vec<(u64, u64)> = Vec::with_capacity(sched_size + nuops);
     // Done-cycle ring indexed by gid: completion cycle of every
-    // in-flight µ-op, NOT_DONE before issue. In-flight count is bounded
-    // by the ROB, so `gid & ring_mask` never collides.
+    // in-flight µ-op, NOT_DONE before issue. `gid & ring_mask` cannot
+    // collide: live gids span [rob_head_gid, next_gid), whose width is
+    // rob.len(), and dispatch refuses a slot whenever rob.len() + n_new
+    // would exceed rob_size — so the live span never exceeds rob_size,
+    // and ring_cap > rob_size by construction. The release-checked
+    // retire assert below would trip on any violation of this bound.
     let ring_cap = (rob_size + nuops + 1).next_power_of_two();
     let ring_mask = ring_cap - 1;
     let mut done: Vec<u64> = vec![NOT_DONE; ring_cap];
@@ -226,8 +230,12 @@ fn run_core(
             // Invariant: retirement is gid-indexed — slots pop from the
             // ROB front exactly once, in order, so the slot's first
             // µ-op is always the current head. (An older revision
-            // silently advanced `ret_slot` when this was violated.)
-            debug_assert_eq!(
+            // silently advanced `ret_slot` when this was violated,
+            // corrupting results.) Checked in release builds too: a
+            // done-ring collision here would silently skew every
+            // Measurement field, and the check is one multiply-add and
+            // compare per retired slot — far off the hot path.
+            assert_eq!(
                 ret_iter * uops_per_iter + s as u64,
                 rob_head_gid,
                 "retire cursor desynced from ROB head"

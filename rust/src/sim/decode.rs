@@ -189,8 +189,15 @@ pub fn decode_kernel(kernel: &Kernel, machine: &MachineModel) -> Result<DecodedI
             continue;
         }
         if ins.is_reg_move() && machine.sim_move_elim {
-            let src = ins.operands[0].reg().map(|r| r.file());
-            let dst = ins.operands[1].reg().map(|r| r.file());
+            // Operand order is ISA-dependent: AT&T is source-first,
+            // AArch64 destination-first. `is_reg_move` guarantees two
+            // register operands.
+            let (src_op, dst_op) = match ins.isa {
+                crate::isa::Isa::X86 => (&ins.operands[0], &ins.operands[1]),
+                crate::isa::Isa::AArch64 => (&ins.operands[1], &ins.operands[0]),
+            };
+            let src = src_op.reg().map(|r| r.file());
+            let dst = dst_op.reg().map(|r| r.file());
             if let (Some(s), Some(d)) = (src, dst) {
                 let s = resolve(&alias, s);
                 alias.insert(d, s);
@@ -208,10 +215,13 @@ pub fn decode_kernel(kernel: &Kernel, machine: &MachineModel) -> Result<DecodedI
                 continue;
             }
         }
-        if ins.is_branch() && machine.sim_macro_fusion {
-            // Fused with the preceding cmp/test µ-op: no extra µ-op.
-            // (All modeled kernels end in cmp+jcc; an unfused branch
-            // would be a Compute µ-op on the branch ports.)
+        if ins.is_fusible_branch() && machine.sim_macro_fusion {
+            // Fused with the preceding flag-setting µ-op: no extra
+            // µ-op. On x86 all modeled kernels end in cmp/test+jcc; on
+            // AArch64 only `b.<cond>` (and bare `b`) fuse —
+            // compare-and-branch forms (cbnz/cbz/tbz/tbnz) carry their
+            // own register read and rename slot, so they resolve and
+            // execute like any other instruction below.
             eliminated += 1;
             continue;
         }
@@ -497,5 +507,63 @@ mod tests {
         // mov eliminated; vaddpd reads ymm0 -> aliases ymm1 (invariant).
         assert_eq!(d.eliminated, 2);
         assert_eq!(d.uops.len(), 2); // vaddpd + cmp
+    }
+
+    #[test]
+    fn aarch64_compare_branch_is_not_fused() {
+        // cbnz carries its own register read: it must resolve, occupy
+        // a rename slot, and depend on the counter update — unlike
+        // b.<cond>, which macro-fuses away.
+        use crate::asm::extract_kernel_isa;
+        use crate::isa::Isa;
+        let m = crate::mdb::thunderx2();
+        let src = "\n.L4:\nldr q0, [x7, x4]\nadd x4, x4, #16\nsub x5, x5, #2\ncbnz x5, .L4\n";
+        let k = extract_kernel_isa("t", src, Isa::AArch64).unwrap();
+        let d = decode_kernel(&k, &m).unwrap();
+        assert_eq!(d.eliminated, 0);
+        assert_eq!(d.uops.len(), 4);
+        assert_eq!(d.slots, 4);
+        let cbnz = d.uops.last().unwrap();
+        assert!(
+            cbnz.deps.iter().any(|dp| matches!(dp, DepSource::Intra(2))),
+            "{:?}",
+            cbnz.deps
+        );
+    }
+
+    #[test]
+    fn aarch64_cross_file_fmov_not_eliminated() {
+        // `fmov d0, x1` transfers GP->FP: not move-elimination
+        // eligible even with sim_move_elim set.
+        use crate::asm::parser::parse_instruction_isa;
+        use crate::isa::Isa;
+        let i = parse_instruction_isa("fmov d0, x1", 1, Isa::AArch64).unwrap();
+        assert!(!i.is_reg_move());
+        let i = parse_instruction_isa("fmov d0, d1", 1, Isa::AArch64).unwrap();
+        assert!(i.is_reg_move());
+        let i = parse_instruction_isa("mov x0, x1", 1, Isa::AArch64).unwrap();
+        assert!(i.is_reg_move());
+    }
+
+    #[test]
+    fn aarch64_move_elim_aliases_dest_to_source() {
+        // AArch64 moves are destination-FIRST; the alias must map the
+        // dest to the source's writer, not the AT&T-order reverse.
+        use crate::asm::extract_kernel_isa;
+        use crate::isa::Isa;
+        let mut m = crate::mdb::thunderx2();
+        m.sim_move_elim = true;
+        let src = "\n.L1:\nadd x1, x1, #1\nmov x0, x1\nadd x2, x0, #1\nsubs x5, x5, #1\nb.ne .L1\n";
+        let k = extract_kernel_isa("t", src, Isa::AArch64).unwrap();
+        let d = decode_kernel(&k, &m).unwrap();
+        assert_eq!(d.eliminated, 2); // mov + fused b.ne
+        assert_eq!(d.uops.len(), 3);
+        // `add x2, x0, #1` reads x0 -> alias -> x1, written by uop 0.
+        let add2 = &d.uops[1];
+        assert!(
+            add2.deps.iter().any(|dp| matches!(dp, DepSource::Intra(0))),
+            "{:?}",
+            add2.deps
+        );
     }
 }

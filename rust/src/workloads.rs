@@ -1,8 +1,10 @@
 //! Embedded workload fixtures — the paper's validation kernels
 //! (transcribed from its listings; see workloads/*/*.s) plus extra
-//! kernels exercising other bottleneck classes.
+//! kernels exercising other bottleneck classes, and the AArch64
+//! (ThunderX2) variants for the multi-ISA frontend.
 
-use crate::asm::{extract_kernel, Kernel};
+use crate::asm::{extract_kernel_isa, Kernel};
+use crate::isa::Isa;
 
 /// One fixture: a compiled kernel variant.
 #[derive(Debug, Clone, Copy)]
@@ -10,7 +12,7 @@ pub struct Workload {
     /// Benchmark family (`triad`, `pi`, ...).
     pub family: &'static str,
     /// Which architecture the code was "compiled for" (`skl`, `zen`,
-    /// or `any` when identical code is produced for both).
+    /// `tx2`, or `any` when identical x86 code is produced for both).
     pub compiled_for: &'static str,
     /// Optimization flag (`-O1`, `-O2`, `-O3`).
     pub flag: &'static str,
@@ -18,6 +20,8 @@ pub struct Workload {
     pub unroll: usize,
     /// FLOP per source iteration (for the MFLOP/s columns).
     pub flops_per_it: usize,
+    /// Syntax the fixture is written in.
+    pub isa: Isa,
     pub source: &'static str,
 }
 
@@ -27,7 +31,7 @@ impl Workload {
     }
 
     pub fn kernel(&self) -> Kernel {
-        extract_kernel(&self.name(), self.source).expect("embedded fixture parses")
+        extract_kernel_isa(&self.name(), self.source, self.isa).expect("embedded fixture parses")
     }
 
     /// Does this fixture represent code compiled for `arch`?
@@ -45,6 +49,7 @@ pub const TRIAD: &[Workload] = &[
         flag: "-O1",
         unroll: 1,
         flops_per_it: 2,
+        isa: Isa::X86,
         source: include_str!("../../workloads/triad/o1.s"),
     },
     Workload {
@@ -53,6 +58,7 @@ pub const TRIAD: &[Workload] = &[
         flag: "-O2",
         unroll: 1,
         flops_per_it: 2,
+        isa: Isa::X86,
         source: include_str!("../../workloads/triad/o2.s"),
     },
     Workload {
@@ -61,6 +67,7 @@ pub const TRIAD: &[Workload] = &[
         flag: "-O3",
         unroll: 4,
         flops_per_it: 2,
+        isa: Isa::X86,
         source: include_str!("../../workloads/triad/skl_o3.s"),
     },
     Workload {
@@ -69,6 +76,7 @@ pub const TRIAD: &[Workload] = &[
         flag: "-O3",
         unroll: 2,
         flops_per_it: 2,
+        isa: Isa::X86,
         source: include_str!("../../workloads/triad/zen_o3.s"),
     },
 ];
@@ -82,6 +90,7 @@ pub const PI: &[Workload] = &[
         flag: "-O1",
         unroll: 1,
         flops_per_it: 5,
+        isa: Isa::X86,
         source: include_str!("../../workloads/pi/o1.s"),
     },
     Workload {
@@ -90,6 +99,7 @@ pub const PI: &[Workload] = &[
         flag: "-O2",
         unroll: 1,
         flops_per_it: 5,
+        isa: Isa::X86,
         source: include_str!("../../workloads/pi/o2.s"),
     },
     Workload {
@@ -98,6 +108,7 @@ pub const PI: &[Workload] = &[
         flag: "-O3",
         unroll: 8,
         flops_per_it: 5,
+        isa: Isa::X86,
         source: include_str!("../../workloads/pi/o3.s"),
     },
 ];
@@ -110,6 +121,7 @@ pub const EXTRA: &[Workload] = &[
         flag: "-O2",
         unroll: 1,
         flops_per_it: 1,
+        isa: Isa::X86,
         source: include_str!("../../workloads/extra/sum_reduction.s"),
     },
     Workload {
@@ -118,6 +130,7 @@ pub const EXTRA: &[Workload] = &[
         flag: "-O3",
         unroll: 4,
         flops_per_it: 2,
+        isa: Isa::X86,
         source: include_str!("../../workloads/extra/daxpy.s"),
     },
     Workload {
@@ -126,6 +139,7 @@ pub const EXTRA: &[Workload] = &[
         flag: "-O3",
         unroll: 8,
         flops_per_it: 0,
+        isa: Isa::X86,
         source: include_str!("../../workloads/extra/stream_copy.s"),
     },
     Workload {
@@ -134,6 +148,7 @@ pub const EXTRA: &[Workload] = &[
         flag: "-O3",
         unroll: 8,
         flops_per_it: 2,
+        isa: Isa::X86,
         source: include_str!("../../workloads/extra/dot_product.s"),
     },
     Workload {
@@ -142,20 +157,69 @@ pub const EXTRA: &[Workload] = &[
         flag: "-O3",
         unroll: 2,
         flops_per_it: 2,
+        isa: Isa::X86,
         source: include_str!("../../workloads/extra/triad_sse.s"),
     },
 ];
 
-/// All fixtures.
+/// AArch64 (ThunderX2) fixtures for the multi-ISA frontend: the triad
+/// and π kernels of the paper re-targeted per the 2019 follow-up.
+pub const AARCH64: &[Workload] = &[
+    Workload {
+        family: "triad",
+        compiled_for: "tx2",
+        flag: "-O2",
+        unroll: 2,
+        flops_per_it: 2,
+        isa: Isa::AArch64,
+        source: include_str!("../../workloads/triad/tx2_o2.s"),
+    },
+    Workload {
+        family: "pi",
+        compiled_for: "tx2",
+        flag: "-O1",
+        unroll: 1,
+        flops_per_it: 5,
+        isa: Isa::AArch64,
+        source: include_str!("../../workloads/pi/tx2_o1.s"),
+    },
+];
+
+/// All **x86** fixtures (the paper's validation set). Kept x86-only on
+/// purpose: callers iterate this against the skl/zen/hsw models. See
+/// [`AARCH64`] / [`all_isa`] for the ARM fixtures.
 pub fn all() -> Vec<&'static Workload> {
     TRIAD.iter().chain(PI.iter()).chain(EXTRA.iter()).collect()
 }
 
-/// Find a fixture by `family`, target arch, and flag.
+/// Every fixture of every ISA.
+pub fn all_isa() -> Vec<&'static Workload> {
+    all().into_iter().chain(AARCH64.iter()).collect()
+}
+
+/// ISA of a target architecture name, via the built-in model registry
+/// (unknown names default to x86, preserving the historical behavior
+/// for ad-hoc arch strings).
+fn arch_isa(arch: &str) -> Isa {
+    crate::mdb::by_name_shared(arch).map(|m| m.isa).unwrap_or_default()
+}
+
+/// Find a fixture by `family`, target arch, and flag (searches all
+/// ISAs; the `tx2` arch selects the AArch64 set). An exact
+/// `compiled_for` match wins over the `any` fixtures, and the `any`
+/// fallback only applies ISA-compatibly — so `("triad", "tx2", "-O2")`
+/// finds the ARM kernel, and a flag with no ARM fixture returns `None`
+/// rather than an x86 kernel that could only fail `IsaMismatch`.
 pub fn find(family: &str, arch: &str, flag: &str) -> Option<&'static Workload> {
-    all()
-        .into_iter()
-        .find(|w| w.family == family && w.flag == flag && w.is_for(arch))
+    let all = all_isa();
+    all.iter()
+        .find(|w| w.family == family && w.flag == flag && w.compiled_for == arch)
+        .or_else(|| {
+            let isa = arch_isa(arch);
+            all.iter()
+                .find(|w| w.family == family && w.flag == flag && w.is_for(arch) && w.isa == isa)
+        })
+        .copied()
 }
 
 #[cfg(test)]
@@ -164,11 +228,30 @@ mod tests {
 
     #[test]
     fn all_fixtures_parse_and_have_markers() {
-        for w in all() {
+        for w in all_isa() {
             let k = w.kernel();
             assert!(!k.is_empty(), "{}", w.name());
             assert!(k.loop_label.is_some(), "{}", w.name());
+            assert_eq!(k.isa, w.isa, "{}", w.name());
         }
+    }
+
+    #[test]
+    fn aarch64_fixtures_found_by_arch() {
+        let t = find("triad", "tx2", "-O2").unwrap();
+        assert_eq!(t.isa, Isa::AArch64);
+        assert_eq!(t.unroll, 2);
+        assert_eq!(t.kernel().len(), 7);
+        let p = find("pi", "tx2", "-O1").unwrap();
+        assert_eq!(p.kernel().len(), 10);
+        // The x86 sets are untouched by the ARM additions.
+        assert!(all().iter().all(|w| w.isa == Isa::X86));
+        // No ISA-incompatible fallback: a flag with no ARM fixture is
+        // None, never an x86 kernel; and x86 archs still reach the
+        // `any` fixtures.
+        assert!(find("pi", "tx2", "-O2").is_none());
+        assert!(find("triad", "tx2", "-O3").is_none());
+        assert_eq!(find("pi", "skl", "-O2").unwrap().compiled_for, "any");
     }
 
     #[test]

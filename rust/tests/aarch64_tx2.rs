@@ -1,0 +1,232 @@
+//! End-to-end pinned numbers for the AArch64 (ThunderX2) backend: the
+//! multi-ISA frontend parses the ARM fixtures, the `tx2` machine model
+//! resolves them, and analyzer/critpath/simulator agree on the
+//! designed bottlenecks. Also pins zero cross-ISA resolution-cache
+//! pollution when x86 and AArch64 kernels alternate.
+
+use osaca::analyzer::{analyze, critical_path};
+use osaca::api::{Engine, OsacaError, Passes};
+use osaca::isa::Isa;
+use osaca::mdb::{by_name, thunderx2};
+use osaca::sim::{simulate, SimConfig};
+use osaca::workloads;
+
+fn cfg() -> SimConfig {
+    SimConfig { iterations: 600, warmup: 150 }
+}
+
+fn approx(a: f32, b: f32) -> bool {
+    (a - b).abs() < 0.011
+}
+
+/// Triad, 128-bit ASIMD: 2 loads + 1 store AGU on the two LS pipes
+/// -> 1.5 cy per assembly iteration (0.75 cy per source iteration).
+#[test]
+fn triad_tx2_analyzer_pinned() {
+    let w = workloads::find("triad", "tx2", "-O2").unwrap();
+    let m = thunderx2();
+    let a = analyze(&w.kernel(), &m).unwrap();
+    assert!(approx(a.cy_per_asm_iter, 1.5), "{}", a.cy_per_asm_iter);
+    assert!(approx(a.cy_per_source_it(2), 0.75));
+    for port in ["LS0", "LS1"] {
+        let p = m.port_index(port).unwrap();
+        assert!(approx(a.totals[p], 1.5), "{port}: {}", a.totals[p]);
+    }
+    let sd = m.port_index("SD").unwrap();
+    assert!(approx(a.totals[sd], 1.0), "SD: {}", a.totals[sd]);
+    for port in ["F0", "F1"] {
+        let p = m.port_index(port).unwrap();
+        assert!(approx(a.totals[p], 0.5), "{port}: {}", a.totals[p]);
+    }
+    for port in ["I0", "I1"] {
+        let p = m.port_index(port).unwrap();
+        assert!(approx(a.totals[p], 1.0), "{port}: {}", a.totals[p]);
+    }
+    // The branch row is blank.
+    assert!(a.lines.last().unwrap().occupancy.iter().all(|&x| x == 0.0));
+}
+
+/// Triad latency structure: no loop-carried FP chain (v0 is re-loaded
+/// every iteration), so the carried bound is the 1-cycle counter chain;
+/// intra-iteration chain is load(4) + fmla(6) + store-data(1).
+#[test]
+fn triad_tx2_critpath_pinned() {
+    let w = workloads::find("triad", "tx2", "-O2").unwrap();
+    let r = critical_path(&w.kernel(), &thunderx2()).unwrap();
+    assert!((r.carried_per_iteration - 1.0).abs() < 1e-3, "{r:?}");
+    assert!((r.intra_iteration - 11.0).abs() < 1e-3, "{r:?}");
+}
+
+/// Simulated triad: LS pipes and the 4-wide frontend both bound the
+/// loop at 1.5 cy/asm-iter; no store-to-load forwarding (three
+/// distinct streams).
+#[test]
+fn triad_tx2_simulated() {
+    let w = workloads::find("triad", "tx2", "-O2").unwrap();
+    let m = simulate(&w.kernel(), &thunderx2(), cfg()).unwrap();
+    assert!(
+        (1.4..1.7).contains(&m.cycles_per_iteration),
+        "{}",
+        m.cycles_per_iteration
+    );
+    assert_eq!(m.counters.forwarded_loads, 0);
+    let cy_it = m.cy_per_source_it(2);
+    assert!((0.7..0.85).contains(&cy_it), "{cy_it}");
+}
+
+/// π at -O1: the non-pipelined divide (DV busy 16 cy) dominates both
+/// the 3-per-pipe FP pressure and the 6-cycle sum recurrence.
+#[test]
+fn pi_tx2_analyzer_divider_bound() {
+    let w = workloads::find("pi", "tx2", "-O1").unwrap();
+    let m = thunderx2();
+    let a = analyze(&w.kernel(), &m).unwrap();
+    assert!(approx(a.cy_per_asm_iter, 16.0), "{}", a.cy_per_asm_iter);
+    assert_eq!(m.ports[a.bottleneck_port], "DV");
+}
+
+/// π latency structure: the sum recurrence (fadd, 6 cy) is the carried
+/// bound; the in-iteration chain threads five 6-cycle FP ops and the
+/// 23-cycle divide.
+#[test]
+fn pi_tx2_critpath_pinned() {
+    let w = workloads::find("pi", "tx2", "-O1").unwrap();
+    let r = critical_path(&w.kernel(), &thunderx2()).unwrap();
+    assert!((r.carried_per_iteration - 6.0).abs() < 1e-3, "{r:?}");
+    assert!((r.intra_iteration - 59.0).abs() < 1e-3, "{r:?}");
+}
+
+/// Simulated π: divider-serialized at ~16 cy/iter, like the x86 π
+/// kernels are at their own divider periods (Table V's shape).
+#[test]
+fn pi_tx2_simulated() {
+    let w = workloads::find("pi", "tx2", "-O1").unwrap();
+    let m = simulate(&w.kernel(), &thunderx2(), cfg()).unwrap();
+    assert!(
+        (15.5..16.6).contains(&m.cycles_per_iteration),
+        "{}",
+        m.cycles_per_iteration
+    );
+    assert_eq!(m.counters.forwarded_loads, 0);
+}
+
+/// The whole Engine pipeline works on an AArch64 request: `.arch("tx2")`
+/// selects the AArch64 syntax automatically, and throughput + critpath
+/// + simulate all run from one decode.
+#[test]
+fn engine_end_to_end_tx2() {
+    let engine = Engine::cpu_only();
+    let w = workloads::find("triad", "tx2", "-O2").unwrap();
+    let req = Engine::request(&w.name())
+        .arch("tx2")
+        .source(w.source)
+        .passes(Passes::THROUGHPUT | Passes::CRITPATH | Passes::SIMULATE)
+        .unroll(w.unroll)
+        .sim_config(cfg());
+    let report = engine.analyze(&req).unwrap();
+    let t = report.throughput.as_ref().unwrap();
+    assert!(approx(t.cy_per_asm_iter, 1.5), "{}", t.cy_per_asm_iter);
+    assert!(report.critpath.is_some());
+    let sim = report.simulation.as_ref().unwrap();
+    assert!((1.4..1.7).contains(&sim.cycles_per_iteration), "{}", sim.cycles_per_iteration);
+    assert!(approx(report.predicted_cy_per_asm_iter().unwrap(), 1.5));
+    assert!(approx(report.predicted_cy_per_source_it().unwrap(), 0.75));
+    let json = report.to_json();
+    assert!(json.contains("\"arch\":\"tx2\""));
+    assert!(json.contains("\"throughput\""));
+    assert!(json.contains("\"simulation\""));
+}
+
+/// The engine lists tx2 among the available architectures and rejects
+/// ISA-mismatched requests with a structured error.
+#[test]
+fn isa_mismatch_is_structured() {
+    let engine = Engine::cpu_only();
+    assert!(engine.available_arches().contains(&"tx2".to_string()));
+    // An x86 kernel explicitly handed to the tx2 model.
+    let xk = workloads::find("triad", "skl", "-O3").unwrap().kernel();
+    let req = Engine::request("mismatch").arch("tx2").kernel(xk);
+    match engine.analyze(&req) {
+        Err(OsacaError::IsaMismatch { kernel_isa, model_isa, arch }) => {
+            assert_eq!(kernel_isa, "x86");
+            assert_eq!(model_isa, "aarch64");
+            assert_eq!(arch, "tx2");
+        }
+        other => panic!("expected IsaMismatch, got {other:?}"),
+    }
+    // Forcing the x86 syntax on an AArch64 model is the same mismatch.
+    let w = workloads::find("triad", "skl", "-O3").unwrap();
+    let req = Engine::request("mismatch2").arch("tx2").isa(Isa::X86).source(w.source);
+    assert!(matches!(engine.analyze(&req), Err(OsacaError::IsaMismatch { .. })));
+}
+
+/// Compare-and-branch forms are not macro-fused, so they pre-validate:
+/// an unmodeled one is a structured UnresolvedForm, not a stringly
+/// pass-time failure; a modeled one analyzes fine.
+#[test]
+fn compare_branch_validation_is_structured() {
+    let engine = Engine::cpu_only();
+    // cbnz on an FP register has no tx2 entry (and no hardware
+    // meaning) — prepare() must catch it.
+    let req = Engine::request("cb")
+        .arch("tx2")
+        .source("\n.L1:\nadd x4, x4, #1\ncbnz d0, .L1\n")
+        .passes(Passes::THROUGHPUT | Passes::SIMULATE);
+    match engine.analyze(&req) {
+        Err(OsacaError::UnresolvedForm { form, arch, .. }) => {
+            assert!(form.contains("cbnz"), "{form}");
+            assert_eq!(arch, "tx2");
+        }
+        other => panic!("expected UnresolvedForm, got {other:?}"),
+    }
+    // The modeled cbnz form runs end to end, and the analyzer charges
+    // it on the I pipes exactly like the simulator executes it:
+    // add + sub + cbnz = 3 integer µ-ops on 2 pipes = 1.5 cy/iter.
+    let req = Engine::request("cb2")
+        .arch("tx2")
+        .source("\n.L1:\nldr q0, [x7, x4]\nadd x4, x4, #16\nsub x5, x5, #2\ncbnz x5, .L1\n")
+        .passes(Passes::THROUGHPUT | Passes::SIMULATE)
+        .sim_config(cfg());
+    let report = engine.analyze(&req).unwrap();
+    let t = report.throughput.as_ref().unwrap();
+    assert!(approx(t.cy_per_asm_iter, 1.5), "{}", t.cy_per_asm_iter);
+    let sim = report.simulation.as_ref().unwrap();
+    assert!((1.4..1.7).contains(&sim.cycles_per_iteration), "{}", sim.cycles_per_iteration);
+}
+
+/// Cross-ISA cache hygiene: alternating x86-on-skl and AArch64-on-tx2
+/// analyses perform zero fresh form resolutions once warm, and a
+/// foreign-ISA instruction can never resolve against the other model
+/// (the x86 suffix/split/mem synthesis tiers are gated off for ARM).
+#[test]
+fn form_index_has_no_cross_isa_pollution() {
+    let skl = by_name("skl").unwrap();
+    let tx2 = by_name("tx2").unwrap();
+    let xk = workloads::find("triad", "skl", "-O3").unwrap().kernel();
+    let ak = workloads::find("triad", "tx2", "-O2").unwrap().kernel();
+    let sim_cfg = SimConfig { iterations: 60, warmup: 15 };
+    // Warm both models.
+    analyze(&xk, &skl).unwrap();
+    simulate(&xk, &skl, sim_cfg).unwrap();
+    analyze(&ak, &tx2).unwrap();
+    simulate(&ak, &tx2, sim_cfg).unwrap();
+    let skl_misses = skl.resolution_miss_count();
+    let tx2_misses = tx2.resolution_miss_count();
+    // The AArch64 fixture resolves entirely from direct entries: no
+    // synthesis may ever run for it.
+    assert_eq!(tx2_misses, 0, "ARM forms must be direct hits");
+    for _ in 0..3 {
+        analyze(&xk, &skl).unwrap();
+        analyze(&ak, &tx2).unwrap();
+        simulate(&xk, &skl, sim_cfg).unwrap();
+        simulate(&ak, &tx2, sim_cfg).unwrap();
+    }
+    assert_eq!(skl.resolution_miss_count(), skl_misses, "x86 misses moved");
+    assert_eq!(tx2.resolution_miss_count(), tx2_misses, "ARM misses moved");
+    // Foreign-ISA instructions are rejected outright — x86 suffix/split
+    // rules can never fire on ARM forms and vice versa.
+    assert!(tx2.resolve(&xk.instructions[0]).is_err());
+    assert!(skl.resolve(&ak.instructions[0]).is_err());
+    assert_eq!(skl.resolution_miss_count(), skl_misses);
+    assert_eq!(tx2.resolution_miss_count(), tx2_misses);
+}

@@ -1,0 +1,93 @@
+//! Parse → display → parse round-trip over every shipped workload
+//! fixture (both ISAs). PR 2 removed `Instruction.raw` and made
+//! `Display` reconstruct source lines; this pins that the
+//! reconstruction is faithful: re-parsing the rendered text yields an
+//! identical instruction (mnemonic, operands, prefixes, ISA), and the
+//! rendering is a canonical fixpoint (display∘parse∘display = display).
+
+use osaca::asm::{parse_file_isa, parse_instruction_isa, Line};
+use osaca::workloads;
+
+#[test]
+fn every_fixture_roundtrips_through_display() {
+    for w in workloads::all_isa() {
+        let lines = parse_file_isa(w.source, w.isa).unwrap_or_else(|e| panic!("{}: {e}", w.name()));
+        let mut checked = 0usize;
+        for l in &lines {
+            let Line::Instruction(i) = l else { continue };
+            let text = i.to_string();
+            let re = parse_instruction_isa(&text, i.line, w.isa)
+                .unwrap_or_else(|e| panic!("{}: reparse of `{text}`: {e}", w.name()));
+            assert_eq!(&re, i, "{}: `{text}`", w.name());
+            assert_eq!(re.to_string(), text, "{}: display not a fixpoint", w.name());
+            checked += 1;
+        }
+        assert!(checked >= 5, "{}: only {checked} instructions checked", w.name());
+    }
+}
+
+#[test]
+fn extracted_kernels_roundtrip_through_display() {
+    // Kernel extraction preserves the same instructions, so the
+    // round-trip must also hold on what analyses actually consume.
+    for w in workloads::all_isa() {
+        let k = w.kernel();
+        for i in &k.instructions {
+            let text = i.to_string();
+            let re = parse_instruction_isa(&text, i.line, w.isa)
+                .unwrap_or_else(|e| panic!("{}: `{text}`: {e}", w.name()));
+            assert_eq!(&re, i, "{}: `{text}`", w.name());
+        }
+    }
+}
+
+/// Constructs PR 2's known risk spots explicitly: prefixes, memory
+/// operand shapes (zero displacement, scale 1, missing base, segment
+/// overrides, rip-relative symbols), case-folded mnemonics.
+#[test]
+fn tricky_x86_spellings_roundtrip() {
+    use osaca::isa::Isa;
+    for src in [
+        "lock addl $1, (%rax)",
+        "vfmadd132pd 0(%r13,%rax), %ymm3, %ymm0",
+        "vmovsd -8(%rcx,%rax,8), %xmm0",
+        "vmovsd .LC2(%rip), %xmm4",
+        "movq %fs:16(%rax), %rbx",
+        "movl (,%rax,4), %ebx",
+        "VADDPD %Ymm1, %ymm2, %YMM3",
+        "addq $-32, %rax",
+        "vextracti128 $0x1, %ymm2, %xmm1",
+        "jne .L2",
+    ] {
+        let i = parse_instruction_isa(src, 7, Isa::X86).unwrap_or_else(|e| panic!("{src}: {e}"));
+        let text = i.to_string();
+        let re = parse_instruction_isa(&text, 7, Isa::X86)
+            .unwrap_or_else(|e| panic!("reparse `{text}`: {e}"));
+        assert_eq!(re, i, "{src} -> {text}");
+        assert_eq!(re.to_string(), text, "{src}: not a fixpoint");
+    }
+}
+
+#[test]
+fn tricky_aarch64_spellings_roundtrip() {
+    use osaca::isa::Isa;
+    for src in [
+        "ldr q0, [x7, x4]",
+        "ldr d1, [x2, x5, lsl #3]",
+        "str w0, [sp, #16]",
+        "fmla v0.2d, v1.2d, v2.2d",
+        "eor v3.16b, v3.16b, v3.16b",
+        "movi v0.2d, #0",
+        "subs x5, x5, #2",
+        "mov x1, #111",
+        "b.ne .L4",
+        "ldr x0, [x1]",
+    ] {
+        let i = parse_instruction_isa(src, 3, Isa::AArch64).unwrap_or_else(|e| panic!("{src}: {e}"));
+        let text = i.to_string();
+        let re = parse_instruction_isa(&text, 3, Isa::AArch64)
+            .unwrap_or_else(|e| panic!("reparse `{text}`: {e}"));
+        assert_eq!(re, i, "{src} -> {text}");
+        assert_eq!(re.to_string(), text, "{src}: not a fixpoint");
+    }
+}

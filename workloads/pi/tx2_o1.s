@@ -1,0 +1,24 @@
+// Pi by numerical integration (paper Listing 2) compiled for
+// AArch64/ThunderX2 at -O1: scalar, one source iteration per assembly
+// iteration, 5 FLOP/iter.
+//
+// w4 = i, w5 = n, d4 = 0.5, d5 = dx, d6 = 1.0, d7 = 4.0 (invariant),
+// d8 = running sum. The sum recurrence (fadd, 6 cy) and the
+// non-pipelined divide (DV busy 16 cy) are the candidate bottlenecks;
+// the divider wins.
+	mov	x1, #111
+	.byte	213,3,32,31
+.L2:
+	scvtf	d0, w4
+	fadd	d0, d0, d4
+	fmul	d0, d0, d5
+	fmul	d1, d0, d0
+	fadd	d1, d1, d6
+	fdiv	d2, d7, d1
+	fadd	d8, d8, d2
+	add	w4, w4, #1
+	cmp	w4, w5
+	b.ne	.L2
+	mov	x1, #222
+	.byte	213,3,32,31
+	ret

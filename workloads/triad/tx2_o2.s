@@ -1,0 +1,21 @@
+// STREAM triad a[i] = b[i] + s*c[i], compiled for AArch64/ThunderX2
+// at -O2 with 128-bit ASIMD vectorization: one assembly iteration
+// covers 16 bytes = 2 doubles (unroll 2).
+//
+// x7 = b, x8 = c, x9 = a, x4 = byte offset, x5 = remaining elements,
+// v2.2d = broadcast scalar s (loop-invariant).
+//
+// OSACA/IACA markers (AArch64 flavor: mov x1 + nop encoding bytes).
+	mov	x1, #111
+	.byte	213,3,32,31
+.L4:
+	ldr	q0, [x7, x4]
+	ldr	q1, [x8, x4]
+	fmla	v0.2d, v1.2d, v2.2d
+	str	q0, [x9, x4]
+	add	x4, x4, #16
+	subs	x5, x5, #2
+	b.ne	.L4
+	mov	x1, #222
+	.byte	213,3,32,31
+	ret
