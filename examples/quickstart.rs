@@ -1,9 +1,9 @@
-//! Quickstart: analyze the Schönauer triad for x86 (Skylake, Zen) and
-//! AArch64 (ThunderX2) and compare against the simulated hardware —
-//! the paper's Fig. 4 flow plus its "generalize to new architectures"
-//! outlook, driven entirely through the `osaca::api` session layer
-//! (the `tx2` arch flips the frontend to the AArch64 syntax
-//! automatically).
+//! Quickstart: analyze the Schönauer triad for x86 (Skylake, Zen),
+//! AArch64 (ThunderX2) and RISC-V (RV64) and compare against the
+//! simulated hardware — the paper's Fig. 4 flow plus its "generalize
+//! to new architectures" outlook, driven entirely through the
+//! `osaca::api` session layer (the `tx2`/`rv64` archs flip the
+//! frontend to the matching syntax automatically).
 //!
 //! Run: `cargo run --release --example quickstart`
 
@@ -13,7 +13,7 @@ use osaca::workloads;
 
 fn main() -> Result<()> {
     let engine = Engine::new();
-    for (arch, flag) in [("skl", "-O3"), ("zen", "-O3"), ("tx2", "-O2")] {
+    for (arch, flag) in [("skl", "-O3"), ("zen", "-O3"), ("tx2", "-O2"), ("rv64", "-O2")] {
         let w = workloads::find("triad", arch, flag).unwrap();
 
         // One request, every pass: OSACA throughput analysis (Tables

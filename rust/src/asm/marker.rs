@@ -14,8 +14,11 @@
 //! processor executes but IACA's disassembler recognizes. On AArch64 the
 //! marker is `mov x1, #111` / `mov x1, #222` followed by
 //! `.byte 213,3,32,31` (a `nop` encoding), matching OSACA's ARM support.
-//! We detect the mov + `.byte` pairs in parsed lines; the mov shape is
-//! keyed by the instruction's own ISA.
+//! On RISC-V the analogous convention is `li t0, 111` / `li t0, 222`
+//! followed by `.byte 19,0,0,0` (the little-endian encoding of
+//! `addi x0, x0, 0`, the canonical RV nop). We detect the mov/li +
+//! `.byte` pairs in parsed lines; the marker shape is keyed by the
+//! instruction's own ISA.
 
 use crate::isa::operand::Operand;
 use crate::isa::Isa;
@@ -26,6 +29,7 @@ pub const START_MARKER_IMM: i64 = 111;
 pub const END_MARKER_IMM: i64 = 222;
 pub const MARKER_BYTES: &str = "100,103,144";
 pub const AARCH64_MARKER_BYTES: &str = "213,3,32,31";
+pub const RISCV_MARKER_BYTES: &str = "19,0,0,0";
 
 /// Location of the marked region: indices into the parsed `Line` slice,
 /// exclusive of the marker instructions themselves.
@@ -50,6 +54,15 @@ fn is_marker_mov(line: &Line, imm: i64) -> bool {
                     && matches!(&i.operands[0], Operand::Reg(r) if r.name == "x1")
                     && i.operands[1] == Operand::Imm(imm)
             }
+            Isa::RiscV => {
+                // `li t0, 111` — accept the raw `x5` spelling too (the
+                // slot, not the name, identifies the register).
+                i.mnemonic == "li"
+                    && i.operands.len() == 2
+                    && matches!(&i.operands[0], Operand::Reg(r) if r.slot == 5
+                        && r.class == crate::isa::RegisterClass::RGp64)
+                    && i.operands[1] == Operand::Imm(imm)
+            }
         },
         _ => false,
     }
@@ -59,7 +72,10 @@ fn is_marker_bytes(line: &Line) -> bool {
     match line {
         Line::Directive { name, args } => {
             let compact = args.replace(' ', "");
-            name == "byte" && (compact == MARKER_BYTES || compact == AARCH64_MARKER_BYTES)
+            name == "byte"
+                && (compact == MARKER_BYTES
+                    || compact == AARCH64_MARKER_BYTES
+                    || compact == RISCV_MARKER_BYTES)
         }
         _ => false,
     }
@@ -142,6 +158,24 @@ movl $222, %ebx
         let src = "movl $111, %ebx\n.byte 100, 103, 144\nnop\nmovl $222, %ebx\n.byte 100,103,144\n";
         let lines = parse_file(src).unwrap();
         assert!(find_marked_region(&lines).is_some());
+    }
+
+    #[test]
+    fn riscv_markers_found() {
+        use crate::asm::parser::parse_file_isa;
+        use crate::isa::Isa;
+        let src = "li t0, 111\n.byte 19,0,0,0\n.L3:\nfld fa5, 0(a5)\nbne a4, a5, .L3\nli t0, 222\n.byte 19,0,0,0\n";
+        let lines = parse_file_isa(src, Isa::RiscV).unwrap();
+        let r = find_marked_region(&lines).unwrap();
+        let n_instr = lines[r.start..r.end]
+            .iter()
+            .filter(|l| matches!(l, Line::Instruction(_)))
+            .count();
+        assert_eq!(n_instr, 2);
+        // The raw x5 spelling is the same marker register.
+        let src2 = src.replace("li t0,", "li x5,");
+        let lines2 = parse_file_isa(&src2, Isa::RiscV).unwrap();
+        assert!(find_marked_region(&lines2).is_some());
     }
 
     #[test]

@@ -1,5 +1,5 @@
-//! Assembly-file handling: AT&T x86 and AArch64 parsing behind the
-//! [`syntax::IsaSyntax`] trait, IACA/OSACA marker detection, and
+//! Assembly-file handling: AT&T x86, AArch64 and RISC-V parsing behind
+//! the [`syntax::IsaSyntax`] trait, IACA/OSACA marker detection, and
 //! marked-kernel extraction (paper §III, Fig. 4).
 
 pub mod kernel;
@@ -11,4 +11,4 @@ pub use kernel::{extract_kernel, extract_kernel_isa, Kernel};
 pub use parser::{
     parse_file, parse_file_isa, parse_instruction, parse_instruction_isa, Line, ParseError,
 };
-pub use syntax::{syntax_for, AArch64Syntax, AttSyntax, IsaSyntax};
+pub use syntax::{syntax_for, AArch64Syntax, AttSyntax, IsaSyntax, RiscVSyntax};

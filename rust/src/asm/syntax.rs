@@ -1,22 +1,28 @@
 //! Per-ISA assembly syntax: the [`IsaSyntax`] trait and its AT&T x86
-//! ([`AttSyntax`]) and ARMv8 A64 ([`AArch64Syntax`]) implementations.
+//! ([`AttSyntax`]), ARMv8 A64 ([`AArch64Syntax`]) and RISC-V RV64
+//! ([`RiscVSyntax`]) implementations.
 //!
 //! The line-level grammar (labels, `.`-directives, blank lines) is
 //! shared across ISAs and lives in [`super::parser`]; what differs per
 //! ISA — comment markers, mnemonic prefixes, operand splitting, operand
 //! and memory-reference shapes, register names — is behind this trait.
-//! Adding a backend is a syntax impl plus a `.mdb` machine model:
-//! nothing in the analyzer, simulator or api layers is ISA-specific
-//! (DESIGN.md §7).
+//! The trait also carries the benchmark-emission surface consumed by
+//! `ibench::gen`, so `--learn` model construction works on every
+//! backend: register pools, memory/immediate spellings, destination
+//! position and the counter/branch loop scaffold are per-ISA data, not
+//! hard-coded AT&T text. Adding a backend is a syntax impl plus a
+//! `.mdb` machine model: nothing in the analyzer, simulator or api
+//! layers is ISA-specific (DESIGN.md §7).
 
 use crate::isa::operand::{MemRef, Operand};
-use crate::isa::register::parse_aarch64_register;
+use crate::isa::register::{parse_aarch64_register, parse_riscv_register};
 use crate::isa::{Instruction, Isa};
 
 use super::parser::{parse_instruction_att, parse_int, split_operands_delim, ParseError};
 
 /// The syntax of one instruction-set architecture: how to strip
-/// comments and how to parse one instruction statement.
+/// comments, how to parse one instruction statement, and how to emit
+/// benchmark-loop text (`ibench::gen`).
 pub trait IsaSyntax: Sync {
     /// The ISA this syntax parses.
     fn isa(&self) -> Isa;
@@ -27,6 +33,37 @@ pub trait IsaSyntax: Sync {
     /// Parse a single instruction statement (labels and directives are
     /// handled by the shared line parser).
     fn parse_instruction(&self, code: &str, lineno: usize) -> Result<Instruction, ParseError>;
+
+    // ---- benchmark-loop emission (ibench::gen) ----------------------
+    //
+    // The pools below are disjoint from each other and from the
+    // registers the loop scaffold and memory bases use, so latency
+    // chains never tangle with the loop counter. Index convention
+    // (shared across ISAs, established by the x86 generator):
+    // * 0..=12  — destination pool (chains / rotating TP dests);
+    // * 13..=15 — never-written source pool;
+    // * 16..    — probe-destination pool (conflict loops).
+
+    /// Spelling of a register of signature-class `tok` from pool slot
+    /// `idx`, or `None` when the class cannot be benchmarked on this
+    /// ISA. `mnemonic` lets an impl pick a spelling variant (AArch64
+    /// `q0` for loads/stores vs `v0.2d` for ALU forms).
+    fn bench_reg(&self, mnemonic: &str, tok: &str, idx: usize) -> Option<String>;
+
+    /// Loop-invariant memory-operand spelling (store target when
+    /// `store`, load source otherwise).
+    fn bench_mem(&self, store: bool) -> &'static str;
+
+    /// Immediate-operand spelling.
+    fn bench_imm(&self) -> &'static str;
+
+    /// Counter / compare / branch lines closing a `.Lbench:` loop.
+    fn bench_loop_overhead(&self) -> &'static str;
+
+    /// Index of the destination operand for an `n`-token form of
+    /// `mnemonic` (x86: last; AArch64/RISC-V: first, except stores
+    /// whose destination is the memory operand).
+    fn bench_dest_index(&self, mnemonic: &str, toks: &[&str]) -> usize;
 }
 
 /// The syntax implementation for an ISA.
@@ -34,6 +71,7 @@ pub fn syntax_for(isa: Isa) -> &'static dyn IsaSyntax {
     match isa {
         Isa::X86 => &AttSyntax,
         Isa::AArch64 => &AArch64Syntax,
+        Isa::RiscV => &RiscVSyntax,
     }
 }
 
@@ -57,6 +95,72 @@ impl IsaSyntax for AttSyntax {
     fn parse_instruction(&self, code: &str, lineno: usize) -> Result<Instruction, ParseError> {
         parse_instruction_att(code, lineno)
     }
+
+    /// Pools (disjoint by construction so chains never tangle):
+    /// * vector: dests 0..=12 -> xmm/ymm 0..12, sources 13..=15;
+    /// * GP: dests 0..4 -> r8..r11, sources 13/14 -> r12/r13,
+    ///   probe-dests 16.. -> rsi/rdi/rbp/r14/r15
+    ///   (rax/rbx are memory bases, ecx/edx the loop counter).
+    fn bench_reg(&self, _mnemonic: &str, tok: &str, idx: usize) -> Option<String> {
+        let gp = |idx: usize| -> String {
+            const PROBE_POOL: [&str; 5] = ["rsi", "rdi", "rbp", "r14", "r15"];
+            if idx >= 16 {
+                PROBE_POOL[(idx - 16) % 5].to_string()
+            } else if idx >= 13 {
+                format!("r{}", 12 + (idx - 13) % 2)
+            } else {
+                format!("r{}", 8 + idx % 4)
+            }
+        };
+        let gp32 = |idx: usize| -> String {
+            const PROBE_POOL: [&str; 5] = ["esi", "edi", "ebp", "r14d", "r15d"];
+            if idx >= 16 {
+                PROBE_POOL[(idx - 16) % 5].to_string()
+            } else if idx >= 13 {
+                format!("r{}d", 12 + (idx - 13) % 2)
+            } else {
+                format!("r{}d", 8 + idx % 4)
+            }
+        };
+        Some(match tok {
+            "xmm" => format!("%xmm{}", idx.min(15)),
+            "ymm" => format!("%ymm{}", idx.min(15)),
+            "r64" => format!("%{}", gp(idx)),
+            "r32" | "r" => format!("%{}", gp32(idx)),
+            _ => return None,
+        })
+    }
+
+    fn bench_mem(&self, store: bool) -> &'static str {
+        if store {
+            "(%rbx)" // store target, loop-invariant
+        } else {
+            "(%rax)" // load source, loop-invariant
+        }
+    }
+
+    fn bench_imm(&self) -> &'static str {
+        "$1"
+    }
+
+    fn bench_loop_overhead(&self) -> &'static str {
+        "addl $1, %ecx\ncmpl %ecx, %edx\njne .Lbench\n"
+    }
+
+    fn bench_dest_index(&self, _mnemonic: &str, toks: &[&str]) -> usize {
+        toks.len().saturating_sub(1)
+    }
+}
+
+/// Destination-operand position shared by the dest-first ISAs: operand
+/// 0, except stores, whose destination is the (sole, last) memory
+/// operand in the signature.
+fn dest_first_dest_index(is_store: bool, toks: &[&str]) -> usize {
+    if is_store {
+        toks.iter().position(|t| *t == "mem").unwrap_or(0)
+    } else {
+        0
+    }
 }
 
 /// ARMv8 AArch64 GNU-as syntax (`x0`, `#imm`, `[base, index, lsl #s]`).
@@ -79,6 +183,130 @@ impl IsaSyntax for AArch64Syntax {
 
     fn parse_instruction(&self, code: &str, lineno: usize) -> Result<Instruction, ParseError> {
         parse_instruction_a64(code, lineno)
+    }
+
+    /// Pools: GP dests x0/x2/x3/x9, sources x12/x13, probe dests
+    /// x4..x8 (x10/x11 are the memory bases, x17 the loop counter, and
+    /// x1 is excluded everywhere — it is the AArch64 marker register,
+    /// so a future marker-wrapped benchmark loop can never clobber
+    /// it); FP/vector pool indices map straight onto d/s/v/q 0..15
+    /// like the x86 vector pool.
+    fn bench_reg(&self, mnemonic: &str, tok: &str, idx: usize) -> Option<String> {
+        let gp = |idx: usize| -> usize {
+            const DEST_POOL: [usize; 4] = [0, 2, 3, 9];
+            const PROBE_POOL: [usize; 5] = [4, 5, 6, 7, 8];
+            if idx >= 16 {
+                PROBE_POOL[(idx - 16) % 5]
+            } else if idx >= 13 {
+                12 + (idx - 13) % 2
+            } else {
+                DEST_POOL[idx % 4]
+            }
+        };
+        Some(match tok {
+            "x" => format!("x{}", gp(idx)),
+            "w" => format!("w{}", gp(idx)),
+            "d" => format!("d{}", idx.min(15)),
+            "s" => format!("s{}", idx.min(15)),
+            "q" => {
+                // Loads/stores take the scalar `q` spelling; ALU forms
+                // the arrangement spelling. Both carry the `q`
+                // signature and alias the same vector slot.
+                let n = idx.min(15);
+                if mnemonic.starts_with("ld") || mnemonic.starts_with("st") {
+                    format!("q{n}")
+                } else {
+                    format!("v{n}.2d")
+                }
+            }
+            _ => return None,
+        })
+    }
+
+    fn bench_mem(&self, store: bool) -> &'static str {
+        if store {
+            "[x11]"
+        } else {
+            "[x10]"
+        }
+    }
+
+    fn bench_imm(&self) -> &'static str {
+        "#1"
+    }
+
+    fn bench_loop_overhead(&self) -> &'static str {
+        "subs x17, x17, #1\nb.ne .Lbench\n"
+    }
+
+    fn bench_dest_index(&self, mnemonic: &str, toks: &[&str]) -> usize {
+        dest_first_dest_index(mnemonic.starts_with("st"), toks)
+    }
+}
+
+/// RISC-V RV64 GNU-as syntax (`a0`/`fa5` registers, bare immediates,
+/// `offset(base)` memory operands, `#` comments — unlike A64, `#` is
+/// safe as a comment marker because immediates carry no sigil).
+pub struct RiscVSyntax;
+
+impl IsaSyntax for RiscVSyntax {
+    fn isa(&self) -> Isa {
+        Isa::RiscV
+    }
+
+    fn strip_comment<'a>(&self, line: &'a str) -> &'a str {
+        match line.find('#') {
+            Some(idx) => &line[..idx],
+            None => line,
+        }
+    }
+
+    fn parse_instruction(&self, code: &str, lineno: usize) -> Result<Instruction, ParseError> {
+        parse_instruction_riscv(code, lineno)
+    }
+
+    /// Pools: GP dests t3..t6, sources s2/s3, probe dests s4..s8
+    /// (a6/a7 are the memory bases, t1/t2 the loop counter and bound,
+    /// t0 the marker register); FP pool indices map onto f0..f15 like
+    /// the x86 vector pool.
+    fn bench_reg(&self, _mnemonic: &str, tok: &str, idx: usize) -> Option<String> {
+        Some(match tok {
+            "x" => {
+                const DEST_POOL: [&str; 4] = ["t3", "t4", "t5", "t6"];
+                const SRC_POOL: [&str; 2] = ["s2", "s3"];
+                const PROBE_POOL: [&str; 5] = ["s4", "s5", "s6", "s7", "s8"];
+                if idx >= 16 {
+                    PROBE_POOL[(idx - 16) % 5]
+                } else if idx >= 13 {
+                    SRC_POOL[(idx - 13) % 2]
+                } else {
+                    DEST_POOL[idx % 4]
+                }
+                .to_string()
+            }
+            "f" => format!("f{}", idx.min(15)),
+            _ => return None,
+        })
+    }
+
+    fn bench_mem(&self, store: bool) -> &'static str {
+        if store {
+            "0(a7)"
+        } else {
+            "0(a6)"
+        }
+    }
+
+    fn bench_imm(&self) -> &'static str {
+        "1"
+    }
+
+    fn bench_loop_overhead(&self) -> &'static str {
+        "addi t1, t1, 1\nbne t1, t2, .Lbench\n"
+    }
+
+    fn bench_dest_index(&self, mnemonic: &str, toks: &[&str]) -> usize {
+        dest_first_dest_index(crate::isa::instruction::riscv_is_store_mnemonic(mnemonic), toks)
     }
 }
 
@@ -254,6 +482,127 @@ fn parse_memref_a64(s: &str, lineno: usize, ctx: &str) -> Result<MemRef, ParseEr
         return Err(err(lineno, ctx, format!("malformed memory operand `{s}`")));
     }
     Ok(mem)
+}
+
+/// Parse one RV64 instruction like `fmadd.d fa5, fa5, fa0, fa4` or
+/// `ld a0, 8(sp)`.
+pub(crate) fn parse_instruction_riscv(
+    code: &str,
+    lineno: usize,
+) -> Result<Instruction, ParseError> {
+    let code = code.trim();
+    let (mnemonic, rest) = match code.split_once(char::is_whitespace) {
+        Some((m, r)) => (m, r.trim()),
+        None => (code, ""),
+    };
+    if mnemonic.is_empty() {
+        return Err(err(lineno, code, "empty instruction"));
+    }
+    let mnemonic = if mnemonic.bytes().any(|b| b.is_ascii_uppercase()) {
+        mnemonic.to_ascii_lowercase()
+    } else {
+        mnemonic.to_string()
+    };
+    let operands = if rest.is_empty() {
+        Vec::new()
+    } else {
+        // Memory operands carry no commas inside their parentheses
+        // (`offset(base)` only), but reuse the depth-aware splitter for
+        // robustness against spaced spellings.
+        split_operands_delim(rest, '(', ')')
+            .into_iter()
+            .map(|o| parse_operand_riscv(o.trim(), lineno, code))
+            .collect::<Result<Vec<_>, _>>()?
+    };
+    Ok(Instruction { mnemonic, operands, line: lineno, isa: Isa::RiscV, prefix: None })
+}
+
+fn parse_operand_riscv(s: &str, lineno: usize, ctx: &str) -> Result<Operand, ParseError> {
+    if s.is_empty() {
+        return Err(err(lineno, ctx, "empty operand"));
+    }
+    // Memory reference: offset(base), 0 offset may be spelled `(base)`.
+    if s.contains('(') {
+        return parse_memref_riscv(s, lineno, ctx).map(Operand::Mem);
+    }
+    if let Some(r) = parse_riscv_register(s) {
+        return Ok(Operand::Reg(r));
+    }
+    // Immediates are bare: 16, -8, 0x1f.
+    if let Some(v) = parse_int(s) {
+        return Ok(Operand::Imm(v));
+    }
+    // Register-shaped tokens that failed to parse (`x32`, `f40`, `a9`,
+    // `s12`, `ft12`) are typos or out-of-range names, not labels —
+    // error at the source line instead of surfacing later as a bogus
+    // `...-lbl` database miss. Labels that merely start with a register
+    // letter (`x2_loop`, `sum_head`) still parse as labels.
+    if riscv_register_shaped(s) {
+        return Err(err(lineno, ctx, format!("unknown register `{s}`")));
+    }
+    Ok(Operand::Label(s.to_string()))
+}
+
+/// Does `s` look like a RISC-V register name (letter prefix + all-digit
+/// tail) without actually being one? Case-folded like
+/// `parse_riscv_register`, so `X32` is caught the same as `x32`.
+fn riscv_register_shaped(s: &str) -> bool {
+    let lower = s.to_ascii_lowercase();
+    let s = lower.as_str();
+    let tail_digits = |t: &str| !t.is_empty() && t.bytes().all(|b| b.is_ascii_digit());
+    if let Some(rest) = s.strip_prefix('x') {
+        return tail_digits(rest);
+    }
+    if let Some(rest) = s.strip_prefix('f') {
+        if tail_digits(rest) {
+            return true; // f32..: raw FP spelling out of range
+        }
+        // fa9 / ft12 / fs13 shapes.
+        if let Some(r2) = rest.strip_prefix(['a', 't', 's']) {
+            return tail_digits(r2);
+        }
+        return false;
+    }
+    if let Some(rest) = s.strip_prefix(['a', 't', 's']) {
+        return tail_digits(rest);
+    }
+    false
+}
+
+fn parse_memref_riscv(s: &str, lineno: usize, ctx: &str) -> Result<MemRef, ParseError> {
+    // Relocation operands (`%lo(sym)(a5)`) are linker-level syntax our
+    // subset does not model; reject rather than mis-parse.
+    if s.starts_with('%') {
+        return Err(err(lineno, ctx, format!("relocation operand `{s}` not supported")));
+    }
+    let (pre, rest) = match s.find('(') {
+        Some(a) => (&s[..a], &s[a + 1..]),
+        None => return Err(err(lineno, ctx, format!("malformed memory operand `{s}`"))),
+    };
+    let inner = rest
+        .strip_suffix(')')
+        .ok_or_else(|| err(lineno, ctx, format!("malformed memory operand `{s}`")))?;
+    if inner.contains('(') {
+        return Err(err(lineno, ctx, format!("malformed memory operand `{s}`")));
+    }
+    let pre = pre.trim();
+    let displacement = if pre.is_empty() {
+        0
+    } else {
+        parse_int(pre)
+            .ok_or_else(|| err(lineno, ctx, format!("bad displacement in `{s}`")))?
+    };
+    let base_name = inner.trim();
+    let base = parse_riscv_register(base_name)
+        .ok_or_else(|| err(lineno, ctx, format!("unknown register `{base_name}`")))?;
+    Ok(MemRef {
+        displacement,
+        base: Some(base),
+        index: None,
+        scale: 1,
+        segment: None,
+        symbol: None,
+    })
 }
 
 #[cfg(test)]
@@ -444,5 +793,153 @@ mod tests {
             let re = parse_instruction_a64(&i.to_string(), 1).unwrap();
             assert_eq!(re, i, "{src}");
         }
+    }
+
+    // ---- RISC-V ------------------------------------------------------
+
+    fn rv(s: &str) -> Instruction {
+        parse_instruction_riscv(s, 1).expect(s)
+    }
+
+    #[test]
+    fn riscv_parses_fmadd() {
+        let i = rv("fmadd.d fa5, fa5, fa0, fa4");
+        assert_eq!(i.mnemonic, "fmadd.d");
+        assert_eq!(i.operands.len(), 4);
+        assert_eq!(i.form().to_string(), "fmadd.d-f_f_f_f");
+        assert_eq!(i.isa, Isa::RiscV);
+        // Dest-first, addend explicit: 3 reads, 1 write.
+        assert_eq!(i.reads().len(), 3);
+        assert_eq!(i.writes().len(), 1);
+        assert_eq!(i.writes()[0].name, "fa5");
+    }
+
+    #[test]
+    fn riscv_loads_and_stores() {
+        let i = rv("fld fa5, 0(a5)");
+        assert_eq!(i.form().to_string(), "fld-f_mem");
+        assert!(i.is_load());
+        assert!(!i.is_store());
+        let m = i.operands[1].mem().unwrap();
+        assert_eq!(m.displacement, 0);
+        assert_eq!(m.base.unwrap().name, "a5");
+        assert!(m.index.is_none());
+        let i = rv("fsd fa5, 8(a3)");
+        assert!(i.is_store());
+        assert!(!i.is_load());
+        assert!(matches!(i.dest(), Some(Operand::Mem(_))));
+        // Store data + address registers are all reads; nothing written.
+        let reads = i.reads();
+        assert!(reads.iter().any(|r| r.name == "fa5"));
+        assert!(reads.iter().any(|r| r.name == "a3"));
+        assert!(i.writes().is_empty());
+        // `li` is not a load; `ld` with raw names parses too.
+        assert!(!rv("li a0, 1").is_load());
+        assert!(rv("ld x10, 0(x15)").is_load());
+    }
+
+    #[test]
+    fn riscv_branches_carry_register_reads() {
+        let i = rv("bne a4, a5, .L2");
+        assert!(i.is_branch());
+        assert!(i.is_cond_branch());
+        // No flags register on RISC-V: never fusible, reads both regs.
+        assert!(!i.is_fusible_branch());
+        let reads = i.reads();
+        assert_eq!(reads.len(), 2);
+        assert!(reads.iter().all(|r| r.name != "flags"));
+        assert_eq!(i.operands[2], Operand::Label(".L2".into()));
+        assert!(i.dest().is_none());
+        let j = rv("j .L5");
+        assert!(j.is_branch());
+        assert!(!j.is_cond_branch());
+        assert!(!j.is_fusible_branch());
+    }
+
+    #[test]
+    fn riscv_zero_register_and_idioms() {
+        let i = rv("addi zero, a0, 1");
+        assert!(i.writes().is_empty());
+        let i = rv("xor a3, a3, a3");
+        assert!(i.is_zero_idiom());
+        assert!(!rv("xor a3, a3, a4").is_zero_idiom());
+        assert!(rv("mv a0, a1").is_reg_move());
+        assert!(rv("fmv.d fa0, fa1").is_reg_move());
+        // Cross-file transfers are spelled differently and never match.
+        assert!(!rv("fmv.d.x fa0, a1").is_reg_move());
+    }
+
+    #[test]
+    fn riscv_immediates_are_bare_and_comments_are_hash() {
+        let i = rv("addi a5, a5, 8");
+        assert_eq!(i.operands[2], Operand::Imm(8));
+        assert_eq!(i.form().to_string(), "addi-x_x_imm");
+        assert!(!i.writes_flags());
+        let syn = RiscVSyntax;
+        assert_eq!(syn.strip_comment("addi a5, a5, 8 # bump"), "addi a5, a5, 8 ");
+        assert_eq!(syn.strip_comment("addi a5, a5, 8"), "addi a5, a5, 8");
+    }
+
+    #[test]
+    fn riscv_register_shaped_typos_error_not_label() {
+        assert!(parse_instruction_riscv("add x32, x0, x1", 1).is_err());
+        // Case-folded like register parsing itself: `X32` is the same
+        // typo as `x32`, not a label.
+        assert!(parse_instruction_riscv("add X32, x0, x1", 1).is_err());
+        assert!(parse_instruction_riscv("fadd.d f32, f0, f1", 1).is_err());
+        assert!(parse_instruction_riscv("add a9, a0, a1", 1).is_err());
+        assert!(parse_instruction_riscv("fadd.d fa9, fa0, fa1", 1).is_err());
+        assert!(parse_instruction_riscv("add s12, s0, s1", 1).is_err());
+        assert!(parse_instruction_riscv("ld a0, 0(zz9)", 1).is_err());
+        assert!(parse_instruction_riscv("ld a0, %lo(sym)(a5)", 1).is_err());
+        // Labels that merely start with a register letter still parse.
+        let i = rv("bne a4, a5, x2_loop");
+        assert_eq!(i.operands[2], Operand::Label("x2_loop".into()));
+        let i = rv("j sum_head");
+        assert_eq!(i.operands[0], Operand::Label("sum_head".into()));
+    }
+
+    #[test]
+    fn riscv_display_roundtrip() {
+        for src in [
+            "fld fa5, 0(a5)",
+            "fsd fa5, 0(a3)",
+            "ld a0, 8(sp)",
+            "fmadd.d fa5, fa5, fa0, fa4",
+            "fadd.d fa4, fa4, fa1",
+            "fdiv.d fa4, fa0, fa4",
+            "addi a5, a5, 8",
+            "addiw a4, a4, 1",
+            "fcvt.d.w fa5, a4",
+            "bne a4, a5, .L2",
+            "li t0, 111",
+        ] {
+            let i = rv(src);
+            assert_eq!(i.to_string(), src);
+            let re = parse_instruction_riscv(&i.to_string(), 1).unwrap();
+            assert_eq!(re, i, "{src}");
+        }
+    }
+
+    #[test]
+    fn bench_emission_hooks_per_isa() {
+        // Dest index: x86 last, dest-first first, stores -> mem token.
+        assert_eq!(AttSyntax.bench_dest_index("vaddpd", &["xmm", "xmm", "xmm"]), 2);
+        assert_eq!(AArch64Syntax.bench_dest_index("fadd", &["d", "d", "d"]), 0);
+        assert_eq!(AArch64Syntax.bench_dest_index("str", &["x", "mem"]), 1);
+        assert_eq!(RiscVSyntax.bench_dest_index("fadd.d", &["f", "f", "f"]), 0);
+        assert_eq!(RiscVSyntax.bench_dest_index("fsd", &["f", "mem"]), 1);
+        // Register pools produce parseable spellings.
+        assert_eq!(AttSyntax.bench_reg("vaddpd", "xmm", 0).unwrap(), "%xmm0");
+        assert_eq!(AArch64Syntax.bench_reg("fadd", "d", 2).unwrap(), "d2");
+        assert_eq!(AArch64Syntax.bench_reg("ldr", "q", 0).unwrap(), "q0");
+        assert_eq!(AArch64Syntax.bench_reg("fmla", "q", 0).unwrap(), "v0.2d");
+        assert_eq!(RiscVSyntax.bench_reg("fadd.d", "f", 3).unwrap(), "f3");
+        assert_eq!(RiscVSyntax.bench_reg("add", "x", 0).unwrap(), "t3");
+        assert_eq!(RiscVSyntax.bench_reg("add", "x", 13).unwrap(), "s2");
+        assert_eq!(RiscVSyntax.bench_reg("add", "x", 16).unwrap(), "s4");
+        // Unknown classes are None, not panics.
+        assert!(RiscVSyntax.bench_reg("add", "ymm", 0).is_none());
+        assert!(AArch64Syntax.bench_reg("add", "r64", 0).is_none());
     }
 }

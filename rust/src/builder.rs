@@ -20,9 +20,9 @@
 
 use anyhow::{bail, Result};
 
-use crate::asm::{extract_kernel, Kernel};
+use crate::asm::{extract_kernel_isa, Kernel};
 use crate::ibench::{latency_loop, run_conflict, throughput_loop, BenchSpec};
-use crate::isa::InstructionForm;
+use crate::isa::{InstructionForm, Isa};
 use crate::mdb::{FormEntry, MachineModel, PortMask, Uop, UopKind};
 use crate::sim::{simulate, SimConfig};
 
@@ -62,10 +62,18 @@ impl ValidationRow {
 }
 
 /// The standard probe set (§II-B): one representative per port class —
-/// FP add, FP mul, vector int, scalar int. Probes without a database
-/// entry on `machine` are dropped (they could not be co-scheduled).
+/// FP add, FP mul, vector int, scalar int (or the nearest equivalents
+/// the target ISA offers). Probes without a database entry on `machine`
+/// are dropped (they could not be co-scheduled).
 pub fn default_probes(machine: &MachineModel) -> Vec<BenchSpec> {
-    ["vaddpd-xmm_xmm_xmm", "vmulpd-xmm_xmm_xmm", "vpaddd-xmm_xmm_xmm", "add-imm_r"]
+    let probes: &[&str] = match machine.isa {
+        Isa::X86 => {
+            &["vaddpd-xmm_xmm_xmm", "vmulpd-xmm_xmm_xmm", "vpaddd-xmm_xmm_xmm", "add-imm_r"]
+        }
+        Isa::AArch64 => &["fadd-d_d_d", "fmul-d_d_d", "fadd-q_q_q", "add-x_x_imm"],
+        Isa::RiscV => &["fadd.d-f_f_f", "fmul.d-f_f_f", "add-x_x_x", "addi-x_x_imm"],
+    };
+    probes
         .iter()
         .map(|s| BenchSpec::parse(s))
         .filter(|spec| machine.entries.contains_key(&spec.form))
@@ -75,8 +83,8 @@ pub fn default_probes(machine: &MachineModel) -> Vec<BenchSpec> {
 /// TP-benchmark one form at `width` independent instances: returns
 /// cycles/instruction and per-port busy cycles per loop iteration.
 fn tp_profile(spec: &BenchSpec, machine: &MachineModel, width: usize) -> Result<(f64, Vec<f64>)> {
-    let src = throughput_loop(spec, width)?;
-    let kernel = extract_kernel("tp-profile", &src)?;
+    let src = throughput_loop(spec, machine.isa, width)?;
+    let kernel = extract_kernel_isa("tp-profile", &src, machine.isa)?;
     let m = simulate(&kernel, machine, SimConfig { iterations: 400, warmup: 100 })?;
     let busy: Vec<f64> =
         m.port_busy.iter().map(|&b| b as f64 / m.iterations as f64).collect();
@@ -86,8 +94,8 @@ fn tp_profile(spec: &BenchSpec, machine: &MachineModel, width: usize) -> Result<
 /// Chained-loop latency (§II-A): cycles per chained instance.
 fn latency_of(spec: &BenchSpec, machine: &MachineModel) -> Result<f64> {
     let unroll = 4;
-    let src = latency_loop(spec, unroll)?;
-    let kernel = extract_kernel("lat-profile", &src)?;
+    let src = latency_loop(spec, machine.isa, unroll)?;
+    let kernel = extract_kernel_isa("lat-profile", &src, machine.isa)?;
     let m = simulate(&kernel, machine, SimConfig { iterations: 400, warmup: 100 })?;
     Ok(m.cycles_per_iteration / unroll as f64)
 }
@@ -108,15 +116,9 @@ pub fn infer_entry(
     machine: &MachineModel,
     probes: &[BenchSpec],
 ) -> Result<Inference> {
-    if machine.isa != crate::isa::Isa::X86 {
-        // ibench emits AT&T x86 loops; benchmarking non-x86 models
-        // needs an ISA-aware generator (ROADMAP item).
-        bail!(
-            "model construction is x86-only for now: `{}` is a {} model",
-            machine.name,
-            machine.isa
-        );
-    }
+    // The loop generator goes through the machine's `IsaSyntax`
+    // (register pools, operand spellings, loop scaffold), so this works
+    // for every backend — the historical x86-only bail is gone.
     let spec = BenchSpec { form: form.clone() };
     let measured_latency = latency_of(&spec, machine)?;
     let (rtp, busy_large) = tp_profile(&spec, machine, WIDTH_LARGE)?;
@@ -125,9 +127,16 @@ pub fn infer_entry(
 
     let sig = &form.sig.0;
     let tokens: Vec<&str> = if sig.is_empty() { Vec::new() } else { sig.split('_').collect() };
-    let is_store = tokens.last() == Some(&"mem");
-    let has_load = tokens.iter().rev().skip(1).any(|t| *t == "mem")
-        || (!is_store && sig.contains("mem"));
+    // A form is a store iff the *destination* operand is the memory one.
+    // Position alone cannot decide this across ISAs: x86 stores carry
+    // `mem` last, but so do dest-first loads (`ldr-x_mem` vs
+    // `str-x_mem`) — ask the ISA's syntax where the destination sits.
+    let dest_pos = crate::asm::syntax_for(machine.isa).bench_dest_index(&form.mnemonic, &tokens);
+    let is_store = tokens.get(dest_pos).copied() == Some("mem");
+    let has_load = tokens
+        .iter()
+        .enumerate()
+        .any(|(i, t)| *t == "mem" && (!is_store || i != dest_pos));
 
     let divider = machine.divider_ports();
     let mut compute = PortMask::EMPTY;
@@ -278,13 +287,63 @@ pub fn learn_missing(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::mdb::{skylake, zen};
+    use crate::mdb::{rv64, skylake, thunderx2, zen};
 
     #[test]
     fn probes_exist_in_both_databases() {
         for m in [skylake(), zen()] {
             assert_eq!(default_probes(&m).len(), 4, "{}", m.name);
         }
+    }
+
+    #[test]
+    fn probes_exist_in_every_builtin_database() {
+        // The probe set is ISA-aware: every built-in model keeps a full
+        // probe complement so `--learn` conflict analysis works on all.
+        for m in [skylake(), zen(), crate::mdb::haswell(), thunderx2(), rv64()] {
+            assert_eq!(default_probes(&m).len(), 4, "{}", m.name);
+        }
+    }
+
+    /// The ISSUE-4 satellite: `--learn` on a **non-x86** model produces
+    /// a well-formed `.mdb` stanza — the historical "model construction
+    /// is x86-only" bail is gone and must stay gone.
+    #[test]
+    fn learn_missing_produces_mdb_stanza_on_non_x86() {
+        // AArch64 substrate.
+        let hardware = thunderx2();
+        let mut model = hardware.clone();
+        let form = InstructionForm::parse("fmul-d_d_d");
+        model.entries.remove(&form);
+        let w = crate::workloads::find("pi", "tx2", "-O1").unwrap();
+        let learned = learn_missing(&w.kernel(), &mut model, &hardware).unwrap();
+        assert_eq!(learned.len(), 1, "{learned:?}");
+        assert_eq!(learned[0].entry.form, form);
+        // The learned entry round-trips through the `.mdb` text format.
+        let text = model.serialize();
+        assert!(text.contains("entry fmul-d_d_d"), "{text}");
+        let reparsed = MachineModel::parse(&text).unwrap();
+        assert!(reparsed.entries.contains_key(&form));
+        assert!(crate::analyzer::analyze(&w.kernel(), &model).is_ok());
+
+        // RISC-V substrate, same workflow.
+        let hardware = rv64();
+        let mut model = hardware.clone();
+        let form = InstructionForm::parse("fmul.d-f_f_f");
+        model.entries.remove(&form);
+        let w = crate::workloads::find("pi", "rv64", "-O1").unwrap();
+        let learned = learn_missing(&w.kernel(), &mut model, &hardware).unwrap();
+        assert_eq!(learned.len(), 1, "{learned:?}");
+        let inf = &learned[0];
+        assert!((inf.measured_latency - 5.0).abs() < 0.3, "{}", inf.measured_latency);
+        // Single F pipe -> rTP 1.0 and a one-port compute µ-op.
+        assert!((inf.measured_rtp - 1.0).abs() < 0.15, "{}", inf.measured_rtp);
+        let c = inf.entry.uops.iter().find(|u| u.kind == UopKind::Compute).unwrap();
+        assert_eq!(c.ports.count(), 1);
+        let text = model.serialize();
+        assert!(text.contains("entry fmul.d-f_f_f"), "{text}");
+        assert!(MachineModel::parse(&text).unwrap().entries.contains_key(&form));
+        assert!(crate::analyzer::analyze(&w.kernel(), &model).is_ok());
     }
 
     #[test]

@@ -1,17 +1,23 @@
 //! Benchmark-loop generation.
 //!
-//! Builds AT&T assembly source text for latency chains, parallelism
-//! sweeps and port-conflict probes, mirroring the loops shown in paper
-//! §II-A/§II-C. The generated text goes through the ordinary parser and
-//! kernel extraction, so benchmarks exercise exactly the same pipeline
-//! as user kernels.
+//! Builds assembly source text for latency chains, parallelism sweeps
+//! and port-conflict probes, mirroring the loops shown in paper
+//! §II-A/§II-C. Everything ISA-specific — register pools, memory and
+//! immediate spellings, destination position, the counter/branch loop
+//! scaffold — comes from the target's [`IsaSyntax`] implementation
+//! (`asm::syntax`), so model construction (`--learn`) works for every
+//! backend, not just AT&T x86. The generated text goes through the
+//! ordinary parser and kernel extraction, so benchmarks exercise
+//! exactly the same pipeline as user kernels.
 
 use anyhow::{bail, Result};
 
-use crate::isa::InstructionForm;
+use crate::asm::syntax::{syntax_for, IsaSyntax};
+use crate::isa::{InstructionForm, Isa};
 
 /// What to benchmark: an instruction form, e.g.
-/// `vfmadd132pd-mem_xmm_xmm`.
+/// `vfmadd132pd-mem_xmm_xmm` (x86), `fadd-d_d_d` (AArch64),
+/// `fadd.d-f_f_f` (RISC-V).
 #[derive(Debug, Clone)]
 pub struct BenchSpec {
     pub form: InstructionForm,
@@ -30,78 +36,48 @@ impl BenchSpec {
         }
     }
 
-    /// Register spelling for an operand class and pool index.
+    /// Render one instance of the instruction under `syntax`.
     ///
-    /// Pools (disjoint by construction so chains never tangle):
-    /// * vector: dests 0..=12 -> xmm/ymm 0..12, sources 13..=15;
-    /// * GP: dests 0..4 -> r8..r11, sources 13/14 -> r12/r13,
-    ///   probe-dests 16..21 -> esi/edi/ebp/r14/r15
-    ///   (rax/rbx are memory bases, ecx/edx the loop counter).
-    fn reg(&self, tok: &str, idx: usize) -> Result<String> {
-        let gp = |idx: usize| -> String {
-            const PROBE_POOL: [&str; 5] = ["rsi", "rdi", "rbp", "r14", "r15"];
-            if idx >= 16 {
-                PROBE_POOL[(idx - 16) % 5].to_string()
-            } else if idx >= 13 {
-                format!("r{}", 12 + (idx - 13) % 2)
-            } else {
-                format!("r{}", 8 + idx % 4)
-            }
-        };
-        let gp32 = |idx: usize| -> String {
-            const PROBE_POOL: [&str; 5] = ["esi", "edi", "ebp", "r14d", "r15d"];
-            if idx >= 16 {
-                PROBE_POOL[(idx - 16) % 5].to_string()
-            } else if idx >= 13 {
-                format!("r{}d", 12 + (idx - 13) % 2)
-            } else {
-                format!("r{}d", 8 + idx % 4)
-            }
-        };
-        Ok(match tok {
-            "xmm" => format!("%xmm{}", idx.min(15)),
-            "ymm" => format!("%ymm{}", idx.min(15)),
-            "r64" => format!("%{}", gp(idx)),
-            "r32" | "r" => format!("%{}", gp32(idx)),
-            other => bail!("cannot choose a register for operand class `{other}`"),
-        })
-    }
-
-    /// Render one instance of the instruction.
-    ///
-    /// * `dest_idx` — register index of the destination;
-    /// * `src_idx` — register index used for the *first* register source
+    /// * `dest_idx` — register-pool index of the destination;
+    /// * `src_idx` — pool index used for the *first* register source
     ///   (the chained one in latency loops);
-    /// * `other_idx` — register index for remaining sources.
-    fn render(&self, dest_idx: usize, src_idx: usize, other_idx: usize) -> Result<String> {
+    /// * `other_idx` — pool index for remaining sources.
+    fn render(
+        &self,
+        syntax: &dyn IsaSyntax,
+        dest_idx: usize,
+        src_idx: usize,
+        other_idx: usize,
+    ) -> Result<String> {
         let toks = self.sig_tokens();
         if toks.is_empty() {
             return Ok(self.form.mnemonic.clone());
         }
-        let n = toks.len();
-        let mut ops: Vec<String> = Vec::with_capacity(n);
+        let mnemonic = self.form.mnemonic.as_str();
+        let dest_pos = syntax.bench_dest_index(mnemonic, &toks);
+        let mut ops: Vec<String> = Vec::with_capacity(toks.len());
         let mut first_reg_source = true;
         for (i, tok) in toks.iter().enumerate() {
-            let is_dest = i + 1 == n;
+            let is_dest = i == dest_pos;
             let text = match *tok {
-                "mem" => {
-                    if is_dest {
-                        "(%rbx)".to_string() // store target, loop-invariant
-                    } else {
-                        "(%rax)".to_string() // load source, loop-invariant
-                    }
-                }
-                "imm" => "$1".to_string(),
+                "mem" => syntax.bench_mem(is_dest).to_string(),
+                "imm" => syntax.bench_imm().to_string(),
                 "lbl" => bail!("cannot benchmark branch forms"),
                 cls => {
-                    if is_dest {
-                        self.reg(cls, dest_idx)?
+                    let idx = if is_dest {
+                        dest_idx
                     } else if first_reg_source {
                         first_reg_source = false;
-                        self.reg(cls, src_idx)?
+                        src_idx
                     } else {
-                        self.reg(cls, other_idx)?
-                    }
+                        other_idx
+                    };
+                    syntax.bench_reg(mnemonic, cls, idx).ok_or_else(|| {
+                        anyhow::anyhow!(
+                            "cannot choose a {} register for operand class `{cls}`",
+                            syntax.isa()
+                        )
+                    })?
                 }
             };
             ops.push(text);
@@ -110,44 +86,49 @@ impl BenchSpec {
     }
 }
 
-const LOOP_OVERHEAD: &str = "addl $1, %ecx\ncmpl %ecx, %edx\njne .Lbench\n";
+fn close_loop(syntax: &dyn IsaSyntax, body: String) -> String {
+    format!(".Lbench:\n{body}{}", syntax.bench_loop_overhead())
+}
 
 /// Latency benchmark: `unroll` chained copies (paper §II-A first listing:
 /// destination of each instruction is a source of the next).
-pub fn latency_loop(spec: &BenchSpec, unroll: usize) -> Result<String> {
+pub fn latency_loop(spec: &BenchSpec, isa: Isa, unroll: usize) -> Result<String> {
+    let syntax = syntax_for(isa);
     let mut body = String::new();
     for _ in 0..unroll {
         // dest == chained source register 0.
-        body.push_str(&spec.render(0, 0, 6)?);
+        body.push_str(&spec.render(syntax, 0, 0, 6)?);
         body.push('\n');
     }
-    Ok(format!(".Lbench:\n{body}{LOOP_OVERHEAD}"))
+    Ok(close_loop(syntax, body))
 }
 
 /// Parallelism sweep: `chains` independent dependency chains, each
 /// `depth` instructions long (paper §II-A second listing: three chains,
 /// unrolled; §II-C sweeps 1..12 chains).
-pub fn parallel_loop(spec: &BenchSpec, chains: usize, depth: usize) -> Result<String> {
+pub fn parallel_loop(spec: &BenchSpec, isa: Isa, chains: usize, depth: usize) -> Result<String> {
+    let syntax = syntax_for(isa);
     let mut body = String::new();
     for _ in 0..depth {
         for c in 0..chains {
-            body.push_str(&spec.render(c, c, 13)?);
+            body.push_str(&spec.render(syntax, c, c, 13)?);
             body.push('\n');
         }
     }
-    Ok(format!(".Lbench:\n{body}{LOOP_OVERHEAD}"))
+    Ok(close_loop(syntax, body))
 }
 
 /// Fully independent throughput loop ("TP"): destinations rotate over a
 /// wide register range, sources are never written.
-pub fn throughput_loop(spec: &BenchSpec, width: usize) -> Result<String> {
+pub fn throughput_loop(spec: &BenchSpec, isa: Isa, width: usize) -> Result<String> {
+    let syntax = syntax_for(isa);
     let mut body = String::new();
     for c in 0..width {
         // dest rotates 0..width; sources fixed at 13/14 (never written).
-        body.push_str(&spec.render(c, 13, 14)?);
+        body.push_str(&spec.render(syntax, c, 13, 14)?);
         body.push('\n');
     }
-    Ok(format!(".Lbench:\n{body}{LOOP_OVERHEAD}"))
+    Ok(close_loop(syntax, body))
 }
 
 /// Port-conflict probe (paper §II-B/§II-C): the TP loop of `a`
@@ -155,28 +136,29 @@ pub fn throughput_loop(spec: &BenchSpec, width: usize) -> Result<String> {
 ///
 /// `a`'s destinations rotate over the full dest pool (so even forms
 /// that read their destination, like FMA, expose enough parallelism);
-/// `b` writes the dedicated probe pool (vector: xmm12; GP:
-/// esi/edi/ebp/r14/r15) and reads only never-written source registers.
-pub fn conflict_loop(a: &BenchSpec, b: &BenchSpec, width: usize) -> Result<String> {
+/// `b` writes the dedicated probe pool and reads only never-written
+/// source registers.
+pub fn conflict_loop(a: &BenchSpec, b: &BenchSpec, isa: Isa, width: usize) -> Result<String> {
+    let syntax = syntax_for(isa);
     let mut body = String::new();
     for c in 0..width {
-        body.push_str(&a.render(c, c, 14)?);
+        body.push_str(&a.render(syntax, c, c, 14)?);
         body.push('\n');
-        body.push_str(&b.render(16 + c % 5, 13, 13)?);
+        body.push_str(&b.render(syntax, 16 + c % 5, 13, 13)?);
         body.push('\n');
     }
-    Ok(format!(".Lbench:\n{body}{LOOP_OVERHEAD}"))
+    Ok(close_loop(syntax, body))
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::asm::extract_kernel;
+    use crate::asm::{extract_kernel, extract_kernel_isa};
 
     #[test]
     fn latency_loop_chains_registers() {
         let spec = BenchSpec::parse("vaddpd-xmm_xmm_xmm");
-        let src = latency_loop(&spec, 4).unwrap();
+        let src = latency_loop(&spec, Isa::X86, 4).unwrap();
         let k = extract_kernel("lat", &src).unwrap();
         // 4 chained adds + 2 overhead instructions + branch.
         assert_eq!(k.len(), 7);
@@ -189,7 +171,7 @@ mod tests {
     #[test]
     fn parallel_loop_has_k_chains() {
         let spec = BenchSpec::parse("vaddpd-xmm_xmm_xmm");
-        let src = parallel_loop(&spec, 5, 3).unwrap();
+        let src = parallel_loop(&spec, Isa::X86, 5, 3).unwrap();
         let k = extract_kernel("par", &src).unwrap();
         let adds = k.instructions.iter().filter(|i| i.mnemonic == "vaddpd").count();
         assert_eq!(adds, 15);
@@ -198,21 +180,23 @@ mod tests {
     #[test]
     fn mem_form_uses_memory_source() {
         let spec = BenchSpec::parse("vfmadd132pd-mem_xmm_xmm");
-        let src = latency_loop(&spec, 1).unwrap();
+        let src = latency_loop(&spec, Isa::X86, 1).unwrap();
         assert!(src.contains("vfmadd132pd (%rax), %xmm0, %xmm0"));
     }
 
     #[test]
     fn branch_forms_rejected() {
         let spec = BenchSpec::parse("jne-lbl");
-        assert!(latency_loop(&spec, 1).is_err());
+        assert!(latency_loop(&spec, Isa::X86, 1).is_err());
+        let spec = BenchSpec::parse("bne-x_x_lbl");
+        assert!(latency_loop(&spec, Isa::RiscV, 1).is_err());
     }
 
     #[test]
     fn conflict_loop_interleaves() {
         let a = BenchSpec::parse("vfmadd132pd-mem_xmm_xmm");
         let b = BenchSpec::parse("vmulpd-xmm_xmm_xmm");
-        let src = conflict_loop(&a, &b, 6).unwrap();
+        let src = conflict_loop(&a, &b, Isa::X86, 6).unwrap();
         let k = extract_kernel("conf", &src).unwrap();
         let fmas = k.instructions.iter().filter(|i| i.mnemonic == "vfmadd132pd").count();
         let muls = k.instructions.iter().filter(|i| i.mnemonic == "vmulpd").count();
@@ -223,7 +207,63 @@ mod tests {
     #[test]
     fn store_form_targets_memory() {
         let spec = BenchSpec::parse("vmovapd-xmm_mem");
-        let src = throughput_loop(&spec, 4).unwrap();
+        let src = throughput_loop(&spec, Isa::X86, 4).unwrap();
         assert!(src.contains("vmovapd %xmm13, (%rbx)"), "{src}");
+    }
+
+    #[test]
+    fn aarch64_latency_loop_chains_dest_first() {
+        // Destination-first chaining: `fadd d0, d0, d6`.
+        let spec = BenchSpec::parse("fadd-d_d_d");
+        let src = latency_loop(&spec, Isa::AArch64, 2).unwrap();
+        assert!(src.contains("fadd d0, d0, d6"), "{src}");
+        assert!(src.contains("subs x17, x17, #1"), "{src}");
+        let k = extract_kernel_isa("lat", &src, Isa::AArch64).unwrap();
+        assert_eq!(k.len(), 4); // 2 chained + subs + b.ne
+        assert_eq!(k.isa, Isa::AArch64);
+    }
+
+    #[test]
+    fn aarch64_store_and_load_forms() {
+        // Stores: dest is the memory operand, data register is a source.
+        let spec = BenchSpec::parse("str-q_mem");
+        let src = throughput_loop(&spec, Isa::AArch64, 2).unwrap();
+        assert!(src.contains("str q13, [x11]"), "{src}");
+        // Loads: dest-first register, memory source.
+        let spec = BenchSpec::parse("ldr-q_mem");
+        let src = throughput_loop(&spec, Isa::AArch64, 2).unwrap();
+        assert!(src.contains("ldr q0, [x10]"), "{src}");
+        assert!(src.contains("ldr q1, [x10]"), "{src}");
+    }
+
+    #[test]
+    fn riscv_latency_loop_chains_dest_first() {
+        let spec = BenchSpec::parse("fadd.d-f_f_f");
+        let src = latency_loop(&spec, Isa::RiscV, 2).unwrap();
+        assert!(src.contains("fadd.d f0, f0, f6"), "{src}");
+        assert!(src.contains("addi t1, t1, 1"), "{src}");
+        assert!(src.contains("bne t1, t2, .Lbench"), "{src}");
+        let k = extract_kernel_isa("lat", &src, Isa::RiscV).unwrap();
+        assert_eq!(k.len(), 4); // 2 chained + addi + bne
+        assert_eq!(k.isa, Isa::RiscV);
+    }
+
+    #[test]
+    fn riscv_store_and_load_forms() {
+        let spec = BenchSpec::parse("fsd-f_mem");
+        let src = throughput_loop(&spec, Isa::RiscV, 2).unwrap();
+        assert!(src.contains("fsd f13, 0(a7)"), "{src}");
+        let spec = BenchSpec::parse("ld-x_mem");
+        let src = throughput_loop(&spec, Isa::RiscV, 2).unwrap();
+        assert!(src.contains("ld t3, 0(a6)"), "{src}");
+        assert!(src.contains("ld t4, 0(a6)"), "{src}");
+    }
+
+    #[test]
+    fn wrong_isa_class_errors() {
+        // An x86 class token cannot be rendered on RISC-V and vice
+        // versa — a real error, not a silent mis-spelling.
+        assert!(latency_loop(&BenchSpec::parse("vaddpd-xmm_xmm_xmm"), Isa::RiscV, 1).is_err());
+        assert!(latency_loop(&BenchSpec::parse("fadd.d-f_f_f"), Isa::X86, 1).is_err());
     }
 }

@@ -12,6 +12,11 @@
 //! * **port conflict** (§II-B): a throughput-bound loop of instruction A
 //!   interleaved with instruction B — if the combined reciprocal
 //!   throughput exceeds A's own, A and B share a port.
+//!
+//! Loop emission is ISA-generic: register pools, operand spellings and
+//! the counter/branch scaffold come from the target's
+//! [`crate::asm::IsaSyntax`], so the same machinery benchmarks x86,
+//! AArch64 and RISC-V models (`--learn` on every backend).
 
 pub mod gen;
 pub mod runner;

@@ -4,7 +4,8 @@
 
 use anyhow::Result;
 
-use crate::asm::extract_kernel;
+use crate::asm::extract_kernel_isa;
+use crate::isa::Isa;
 use crate::mdb::MachineModel;
 use crate::sim::{simulate, SimConfig};
 
@@ -48,7 +49,7 @@ impl SweepResult {
 }
 
 fn sim_cy_per_instr(src: &str, machine: &MachineModel, n_instr: usize) -> Result<f64> {
-    let kernel = extract_kernel("bench", src)?;
+    let kernel = extract_kernel_isa("bench", src, machine.isa)?;
     let m = simulate(&kernel, machine, SimConfig { iterations: 400, warmup: 100 })?;
     Ok(m.cycles_per_iteration / n_instr as f64)
 }
@@ -56,21 +57,21 @@ fn sim_cy_per_instr(src: &str, machine: &MachineModel, n_instr: usize) -> Result
 /// Measure the latency of an instruction form (single chain).
 pub fn measure_latency(spec: &BenchSpec, machine: &MachineModel) -> Result<f64> {
     let unroll = 4;
-    let src = latency_loop(spec, unroll)?;
+    let src = latency_loop(spec, machine.isa, unroll)?;
     sim_cy_per_instr(&src, machine, unroll)
 }
 
 /// Measure reciprocal throughput (fully independent TP loop).
 pub fn measure_throughput(spec: &BenchSpec, machine: &MachineModel) -> Result<f64> {
     let width = 12;
-    let src = throughput_loop(spec, width)?;
+    let src = throughput_loop(spec, machine.isa, width)?;
     sim_cy_per_instr(&src, machine, width)
 }
 
 /// Run one named benchmark variant.
 pub fn run_bench(spec: &BenchSpec, machine: &MachineModel, chains: usize) -> Result<BenchResult> {
     let depth = (24 / chains).max(2);
-    let src = parallel_loop(spec, chains, depth)?;
+    let src = parallel_loop(spec, machine.isa, chains, depth)?;
     let cy = sim_cy_per_instr(&src, machine, chains * depth)?;
     Ok(BenchResult { label: format!("{}-{}", spec.form, chains), cy_per_instr: cy })
 }
@@ -81,6 +82,7 @@ pub fn run_bench(spec: &BenchSpec, machine: &MachineModel, chains: usize) -> Res
 /// Returns the file paths written.
 pub fn emit_bench_files(
     spec: &BenchSpec,
+    isa: Isa,
     dir: &std::path::Path,
 ) -> Result<Vec<std::path::PathBuf>> {
     std::fs::create_dir_all(dir)?;
@@ -92,11 +94,11 @@ pub fn emit_bench_files(
         written.push(path);
         Ok(())
     };
-    emit("lat", latency_loop(spec, 4)?)?;
+    emit("lat", latency_loop(spec, isa, 4)?)?;
     for k in [2usize, 4, 5, 8, 10, 12] {
-        emit(&k.to_string(), parallel_loop(spec, k, (24 / k).max(2))?)?;
+        emit(&k.to_string(), parallel_loop(spec, isa, k, (24 / k).max(2))?)?;
     }
-    emit("TP", throughput_loop(spec, 12)?)?;
+    emit("TP", throughput_loop(spec, isa, 12)?)?;
     Ok(written)
 }
 
@@ -122,7 +124,7 @@ pub fn run_conflict(
     // Width 10: enough chains that even a 5-cycle-latency FMA is
     // throughput-bound (paper §II-C sweeps to 10-12 for the same reason).
     let width = 10;
-    let src = conflict_loop(a, b, width)?;
+    let src = conflict_loop(a, b, machine.isa, width)?;
     let cy = sim_cy_per_instr(&src, machine, width)?;
     Ok(BenchResult { label: format!("{}-TP-{}", a.form, b.form.mnemonic), cy_per_instr: cy })
 }
@@ -197,7 +199,7 @@ mod tests {
     fn emit_bench_files_roundtrip() {
         let spec = BenchSpec::parse("vaddpd-xmm_xmm_xmm");
         let dir = std::env::temp_dir().join(format!("osaca-ibench-{}", std::process::id()));
-        let files = emit_bench_files(&spec, &dir).unwrap();
+        let files = emit_bench_files(&spec, Isa::X86, &dir).unwrap();
         assert_eq!(files.len(), 8); // lat + 6 sweep points + TP
         // Every emitted file parses and simulates.
         for f in &files {
@@ -207,6 +209,29 @@ mod tests {
             assert!(m.cycles_per_iteration > 0.0);
         }
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn tx2_fadd_latency_and_tp_measured() {
+        // The ISA-generic generator drives the AArch64 substrate: fadd
+        // latency 6 cy, rTP 0.5 (two symmetric FP pipes).
+        let m = crate::mdb::thunderx2();
+        let spec = BenchSpec::parse("fadd-d_d_d");
+        let lat = measure_latency(&spec, &m).unwrap();
+        assert!((lat - 6.0).abs() < 0.3, "{lat}");
+        let tp = measure_throughput(&spec, &m).unwrap();
+        assert!((tp - 0.5).abs() < 0.1, "{tp}");
+    }
+
+    #[test]
+    fn rv64_fadd_latency_and_tp_measured() {
+        // Single F pipe: latency 5 cy, rTP 1.0.
+        let m = crate::mdb::rv64();
+        let spec = BenchSpec::parse("fadd.d-f_f_f");
+        let lat = measure_latency(&spec, &m).unwrap();
+        assert!((lat - 5.0).abs() < 0.3, "{lat}");
+        let tp = measure_throughput(&spec, &m).unwrap();
+        assert!((tp - 1.0).abs() < 0.15, "{tp}");
     }
 
     #[test]

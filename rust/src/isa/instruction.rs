@@ -7,9 +7,24 @@
 
 use std::fmt;
 
-use super::operand::{fmt_operand_aarch64, Operand};
+use super::operand::{fmt_operand_aarch64, fmt_operand_riscv, Operand};
 use super::register::{flags, Register};
 use super::Isa;
+
+/// RISC-V store mnemonics (RV64GC loop-kernel subset). Stores are the
+/// only dest-first-ISA instructions whose destination is the memory
+/// operand rather than operand 0. Shared with
+/// `asm::syntax::RiscVSyntax::bench_dest_index` so the parser's and the
+/// benchmark generator's notion of "store" can never drift apart.
+pub(crate) fn riscv_is_store_mnemonic(m: &str) -> bool {
+    matches!(m, "sb" | "sh" | "sw" | "sd" | "fsw" | "fsd")
+}
+
+/// RISC-V load mnemonics. Spelled out (rather than `starts_with('l')`)
+/// so pseudo-ops like `li`/`la` can never classify as loads.
+fn riscv_is_load_mnemonic(m: &str) -> bool {
+    matches!(m, "lb" | "lh" | "lw" | "ld" | "lbu" | "lhu" | "lwu" | "flw" | "fld")
+}
 
 /// One parsed assembly instruction. Operand order follows the source
 /// syntax: destination **last** for AT&T x86, destination **first** for
@@ -102,8 +117,9 @@ impl Instruction {
     }
 
     /// The destination operand. AT&T x86: the **last** operand (compares,
-    /// tests and branches have none). AArch64: the **first** operand,
-    /// except stores (`st*`), whose destination is the memory operand.
+    /// tests and branches have none). AArch64 and RISC-V: the **first**
+    /// operand, except stores (`st*` / `sd`-family), whose destination
+    /// is the memory operand.
     pub fn dest(&self) -> Option<&Operand> {
         if self.is_branch() || self.is_compare() || self.mnemonic == "nop" {
             return None;
@@ -117,15 +133,26 @@ impl Instruction {
                     self.operands.first()
                 }
             }
+            Isa::RiscV => {
+                if riscv_is_store_mnemonic(&self.mnemonic) {
+                    self.operands.iter().find(|o| o.is_mem())
+                } else {
+                    self.operands.first()
+                }
+            }
         }
     }
 
     /// Registers written by this instruction (architectural view).
-    /// AArch64 zero-register writes (`xzr`/`wzr`) are discarded.
+    /// Zero-register writes (AArch64 `xzr`/`wzr`, RISC-V `zero`/`x0`)
+    /// are discarded. The RISC-V check is by class + slot, NOT by name:
+    /// `x0` is a perfectly writable register on AArch64.
     pub fn writes(&self) -> Vec<Register> {
         let mut out = Vec::new();
         if let Some(Operand::Reg(r)) = self.dest() {
-            if !matches!(r.name, "xzr" | "wzr") {
+            let zero_reg = matches!(r.name, "xzr" | "wzr")
+                || (r.class == super::register::RegisterClass::RGp64 && r.slot == 0);
+            if !zero_reg {
                 out.push(*r);
             }
         }
@@ -187,6 +214,27 @@ impl Instruction {
                     out.push(flags());
                 }
             }
+            Isa::RiscV => {
+                // Destination-first like AArch64, but there is no flags
+                // register at all: conditional branches read their own
+                // register operands (handled below because branches
+                // have no dest), and compares don't exist as flag ops.
+                let dest_is_reg0 = !self.is_branch()
+                    && !riscv_is_store_mnemonic(&self.mnemonic)
+                    && matches!(self.operands.first(), Some(Operand::Reg(_)));
+                for (i, op) in self.operands.iter().enumerate() {
+                    match op {
+                        Operand::Reg(r) => {
+                            if i == 0 && dest_is_reg0 {
+                                continue;
+                            }
+                            out.push(*r);
+                        }
+                        Operand::Mem(m) => out.extend(m.address_registers()),
+                        _ => {}
+                    }
+                }
+            }
         }
         out
     }
@@ -225,6 +273,9 @@ impl Instruction {
                     || self.mnemonic.starts_with("fmls")
                     || matches!(self.mnemonic.as_str(), "mla" | "mls")
             }
+            // RV64GC has no accumulating forms in the modeled subset:
+            // fmadd.d carries its addend as an explicit 4th operand.
+            Isa::RiscV => false,
         }
     }
 
@@ -233,7 +284,7 @@ impl Instruction {
     }
 
     pub fn is_cond_branch(&self) -> bool {
-        self.is_branch() && !matches!(self.mnemonic.as_str(), "jmp" | "b")
+        self.is_branch() && !matches!(self.mnemonic.as_str(), "jmp" | "b" | "j")
     }
 
     /// Branches that macro-fuse with a flag-setting predecessor (and
@@ -242,11 +293,14 @@ impl Instruction {
     /// compare-and-branch forms (cbz/cbnz/tbz/tbnz) carry their own
     /// register read and resolve/execute like other instructions —
     /// `api::Engine::prepare` and `sim::decode` share this predicate.
+    /// RISC-V has no flags register, so *every* branch is a
+    /// compare-and-branch that must resolve against the database.
     pub fn is_fusible_branch(&self) -> bool {
         self.is_branch()
             && match self.isa {
                 Isa::X86 => true,
                 Isa::AArch64 => self.mnemonic == "b" || self.mnemonic.starts_with("b."),
+                Isa::RiscV => false,
             }
     }
 
@@ -262,6 +316,9 @@ impl Instruction {
             Isa::AArch64 => {
                 matches!(self.mnemonic.as_str(), "cmp" | "cmn" | "tst" | "fcmp" | "fcmpe" | "ccmp")
             }
+            // No flags register: RISC-V "compares" (slt/sltu/...) write
+            // an ordinary GP destination and classify as plain ALU ops.
+            Isa::RiscV => false,
         }
     }
 
@@ -291,6 +348,7 @@ impl Instruction {
                 self.is_compare()
                     || matches!(self.mnemonic.as_str(), "subs" | "adds" | "ands" | "bics" | "negs")
             }
+            Isa::RiscV => false,
         }
     }
 
@@ -310,6 +368,7 @@ impl Instruction {
                 })
             }
             Isa::AArch64 => self.mnemonic.starts_with("ld") && self.has_mem_operand(),
+            Isa::RiscV => riscv_is_load_mnemonic(&self.mnemonic) && self.has_mem_operand(),
         }
     }
 
@@ -347,6 +406,16 @@ impl Instruction {
                 }
                 false
             }
+            Isa::RiscV => {
+                // `xor rd, rs, rs` with rd == rs is the idiomatic GP
+                // zeroing sequence; `li rd, 0` decodes as an ALU op and
+                // is not eliminated (matching real RV cores).
+                m == "xor"
+                    && matches!(
+                        self.operands.as_slice(),
+                        [Operand::Reg(a), Operand::Reg(b), Operand::Reg(c)] if a == b && b == c
+                    )
+            }
         }
     }
 
@@ -365,6 +434,7 @@ impl Instruction {
                     || self.mnemonic.starts_with("movdqa")
             }
             Isa::AArch64 => matches!(self.mnemonic.as_str(), "mov" | "fmov"),
+            Isa::RiscV => matches!(self.mnemonic.as_str(), "mv" | "fmv.d" | "fmv.s"),
         };
         if !(movish && self.operands.len() == 2) {
             return false;
@@ -374,8 +444,11 @@ impl Instruction {
                 Isa::X86 => true,
                 // GP<->FP transfers (`fmov d0, x1`) cross register
                 // files and cannot be eliminated at rename — real
-                // cores pay a multi-cycle transfer for them.
-                Isa::AArch64 => matches!(
+                // cores pay a multi-cycle transfer for them. (RISC-V
+                // spells its cross-file transfers `fmv.d.x`/`fmv.x.d`,
+                // which the mnemonic list above already excludes, but
+                // the file check keeps the rule structural.)
+                Isa::AArch64 | Isa::RiscV => matches!(
                     (a.file(), b.file()),
                     (
                         super::register::RegisterFile::Gp(_),
@@ -421,6 +494,7 @@ impl fmt::Display for Instruction {
             match self.isa {
                 Isa::X86 => write!(f, "{op}")?,
                 Isa::AArch64 => fmt_operand_aarch64(op, f)?,
+                Isa::RiscV => fmt_operand_riscv(op, f)?,
             }
         }
         Ok(())

@@ -20,7 +20,9 @@ pub use register::{Register, RegisterClass, RegisterFile};
 /// The instruction-set architecture of a parsed instruction, kernel or
 /// machine model. `X86` means AT&T-syntax x86-64 (the paper's target);
 /// `AArch64` is the ARMv8 A64 syntax (the OSACA follow-up paper's second
-/// backend, used by the `tx2` ThunderX2 model).
+/// backend, used by the `tx2` ThunderX2 model); `RiscV` is RV64GC
+/// GNU-as syntax (the `rv64` model — the third proof of the DESIGN.md
+/// §7 backend recipe).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
 pub enum Isa {
     /// AT&T-syntax x86-64 (`%rax`, `$imm`, `disp(base,index,scale)`,
@@ -30,6 +32,10 @@ pub enum Isa {
     /// ARMv8 AArch64 (`x0`, `#imm`, `[base, index, lsl #s]`,
     /// destination-first).
     AArch64,
+    /// RISC-V RV64GC (`a0`/`fa0`, bare immediates, `offset(base)`
+    /// memory operands, destination-first, no flags register —
+    /// branches are compare-and-branch).
+    RiscV,
 }
 
 impl Isa {
@@ -38,6 +44,7 @@ impl Isa {
         match self {
             Isa::X86 => "x86",
             Isa::AArch64 => "aarch64",
+            Isa::RiscV => "riscv",
         }
     }
 
@@ -46,6 +53,7 @@ impl Isa {
         match s.to_ascii_lowercase().as_str() {
             "x86" | "x86_64" | "x86-64" | "att" => Some(Isa::X86),
             "aarch64" | "arm64" | "armv8" => Some(Isa::AArch64),
+            "riscv" | "riscv64" | "rv64" | "rv64gc" => Some(Isa::RiscV),
             _ => None,
         }
     }
@@ -59,6 +67,26 @@ impl Isa {
             Isa::AArch64 => {
                 m == "b" || m.starts_with("b.") || matches!(m, "cbz" | "cbnz" | "tbz" | "tbnz")
             }
+            // RISC-V has no condition flags: every conditional branch
+            // compares its own register operands (plus the `j` jump and
+            // the `beqz`-style single-register pseudo-ops GCC emits).
+            Isa::RiscV => matches!(
+                m,
+                "j" | "beq"
+                    | "bne"
+                    | "blt"
+                    | "bge"
+                    | "bltu"
+                    | "bgeu"
+                    | "bgt"
+                    | "ble"
+                    | "beqz"
+                    | "bnez"
+                    | "blez"
+                    | "bgez"
+                    | "bltz"
+                    | "bgtz"
+            ),
         }
     }
 }
@@ -75,11 +103,13 @@ mod tests {
 
     #[test]
     fn isa_names_roundtrip() {
-        for isa in [Isa::X86, Isa::AArch64] {
+        for isa in [Isa::X86, Isa::AArch64, Isa::RiscV] {
             assert_eq!(Isa::parse(isa.name()), Some(isa));
         }
         assert_eq!(Isa::parse("arm64"), Some(Isa::AArch64));
-        assert_eq!(Isa::parse("riscv"), None);
+        assert_eq!(Isa::parse("rv64"), Some(Isa::RiscV));
+        assert_eq!(Isa::parse("rv64gc"), Some(Isa::RiscV));
+        assert_eq!(Isa::parse("sparc"), None);
         assert_eq!(Isa::default(), Isa::X86);
     }
 
@@ -93,5 +123,13 @@ mod tests {
         assert!(Isa::AArch64.is_branch_mnemonic("cbnz"));
         assert!(!Isa::AArch64.is_branch_mnemonic("bl"));
         assert!(!Isa::AArch64.is_branch_mnemonic("jne"));
+        assert!(Isa::RiscV.is_branch_mnemonic("bne"));
+        assert!(Isa::RiscV.is_branch_mnemonic("bgeu"));
+        assert!(Isa::RiscV.is_branch_mnemonic("bnez"));
+        assert!(Isa::RiscV.is_branch_mnemonic("j"));
+        // jal/jalr write a link register and are out of the modeled
+        // loop-kernel subset — not classified as plain branches.
+        assert!(!Isa::RiscV.is_branch_mnemonic("jal"));
+        assert!(!Isa::RiscV.is_branch_mnemonic("jne"));
     }
 }

@@ -148,6 +148,30 @@ pub(crate) fn fmt_operand_aarch64(op: &Operand, f: &mut fmt::Formatter<'_>) -> f
     }
 }
 
+impl MemRef {
+    /// RISC-V rendering: `disp(base)`. The displacement is always
+    /// printed (GCC emits `0(a5)`), making the rendering a canonical
+    /// fixpoint for the round-trip tests.
+    pub(crate) fn fmt_riscv(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}(", self.displacement)?;
+        if let Some(b) = self.base {
+            write!(f, "{}", b.name)?;
+        }
+        write!(f, ")")
+    }
+}
+
+/// RISC-V operand rendering (no sigils at all: bare register names,
+/// bare immediates, `offset(base)` memory references).
+pub(crate) fn fmt_operand_riscv(op: &Operand, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+    match op {
+        Operand::Reg(r) => write!(f, "{}", r.name),
+        Operand::Imm(v) => write!(f, "{v}"),
+        Operand::Mem(m) => m.fmt_riscv(f),
+        Operand::Label(l) => write!(f, "{l}"),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -48,6 +48,12 @@ pub enum RegisterClass {
     AFp64,
     /// AArch64 128-bit SIMD vector (v0..v31 with arrangement, q0..q31).
     AVec,
+    /// RISC-V 64-bit integer register (x0..x31 / ABI names; x0 is the
+    /// hard-wired zero whose writes are discarded).
+    RGp64,
+    /// RISC-V FP register (f0..f31 / ABI names; RV64GC `D` extension,
+    /// so 64-bit wide).
+    RFp64,
 }
 
 impl RegisterClass {
@@ -70,6 +76,8 @@ impl RegisterClass {
             RegisterClass::AFp32 => 32,
             RegisterClass::AFp64 => 64,
             RegisterClass::AVec => 128,
+            RegisterClass::RGp64 => 64,
+            RegisterClass::RFp64 => 64,
         }
     }
 
@@ -93,6 +101,11 @@ impl RegisterClass {
             RegisterClass::AFp32 => "s",
             RegisterClass::AFp64 => "d",
             RegisterClass::AVec => "q",
+            // RISC-V signature letters: kernels never mix ISAs and
+            // `.mdb` resolution is ISA-gated, so reusing `x` for the
+            // GP file (like AArch64) cannot collide across models.
+            RegisterClass::RGp64 => "x",
+            RegisterClass::RFp64 => "f",
         }
     }
 }
@@ -132,13 +145,15 @@ impl Register {
             | RegisterClass::Gp32
             | RegisterClass::Gp64
             | RegisterClass::AGp32
-            | RegisterClass::AGp64 => RegisterFile::Gp(self.slot),
+            | RegisterClass::AGp64
+            | RegisterClass::RGp64 => RegisterFile::Gp(self.slot),
             RegisterClass::Xmm
             | RegisterClass::Ymm
             | RegisterClass::Zmm
             | RegisterClass::AFp32
             | RegisterClass::AFp64
-            | RegisterClass::AVec => RegisterFile::Vec(self.slot),
+            | RegisterClass::AVec
+            | RegisterClass::RFp64 => RegisterFile::Vec(self.slot),
             RegisterClass::Mask => RegisterFile::Mask(self.slot),
             RegisterClass::Rip => RegisterFile::Rip,
             RegisterClass::Flags => RegisterFile::Flags,
@@ -277,6 +292,66 @@ pub fn parse_aarch64_register(name: &str) -> Option<Register> {
         .or_else(|| numbered("s", RegisterClass::AFp32, 32))
 }
 
+/// RISC-V integer ABI names, index = architectural number (x0..x31).
+const RV_GP_ABI: [&str; 32] = [
+    "zero", "ra", "sp", "gp", "tp", "t0", "t1", "t2", "s0", "s1", "a0", "a1", "a2", "a3", "a4",
+    "a5", "a6", "a7", "s2", "s3", "s4", "s5", "s6", "s7", "s8", "s9", "s10", "s11", "t3", "t4",
+    "t5", "t6",
+];
+
+/// RISC-V FP ABI names, index = architectural number (f0..f31).
+const RV_FP_ABI: [&str; 32] = [
+    "ft0", "ft1", "ft2", "ft3", "ft4", "ft5", "ft6", "ft7", "fs0", "fs1", "fa0", "fa1", "fa2",
+    "fa3", "fa4", "fa5", "fa6", "fa7", "fs2", "fs3", "fs4", "fs5", "fs6", "fs7", "fs8", "fs9",
+    "fs10", "fs11", "ft8", "ft9", "ft10", "ft11",
+];
+
+/// Parse a RISC-V register name: ABI names (`a0`, `fa5`, `zero`, ...)
+/// and raw architectural names (`x10`, `f15`). `x0`/`zero` writes are
+/// discarded by `Instruction::writes`, mirroring AArch64's `xzr`. The
+/// spelling is preserved in `name` so display round-trips.
+pub fn parse_riscv_register(name: &str) -> Option<Register> {
+    let lower = name.to_ascii_lowercase();
+    let n = lower.as_str();
+    if let Some(i) = RV_GP_ABI.iter().position(|&r| r == n) {
+        return Some(Register { class: RegisterClass::RGp64, slot: i as u8, name: RV_GP_ABI[i] });
+    }
+    if let Some(i) = RV_FP_ABI.iter().position(|&r| r == n) {
+        return Some(Register { class: RegisterClass::RFp64, slot: i as u8, name: RV_FP_ABI[i] });
+    }
+    // `fp` is the standard alias for s0/x8.
+    if n == "fp" {
+        return Some(Register { class: RegisterClass::RGp64, slot: 8, name: "fp" });
+    }
+    // Raw architectural spellings. `f` before `x` is irrelevant — the
+    // prefixes are disjoint.
+    if let Some(rest) = n.strip_prefix('x') {
+        if let Ok(idx) = rest.parse::<u8>() {
+            if idx < 32 && !rest.is_empty() {
+                return Some(Register {
+                    class: RegisterClass::RGp64,
+                    slot: idx,
+                    name: static_name("x", idx),
+                });
+            }
+        }
+        return None;
+    }
+    if let Some(rest) = n.strip_prefix('f') {
+        if let Ok(idx) = rest.parse::<u8>() {
+            if idx < 32 {
+                return Some(Register {
+                    class: RegisterClass::RFp64,
+                    slot: idx,
+                    name: static_name("f", idx),
+                });
+            }
+        }
+        return None;
+    }
+    None
+}
+
 fn vec_name(class: RegisterClass, idx: u8) -> &'static str {
     let prefix = match class {
         RegisterClass::Xmm => "xmm",
@@ -325,6 +400,7 @@ pub(crate) fn static_name(prefix: &str, idx: u8) -> &'static str {
         "q" => name_table!("q", "", idx),
         "d" => name_table!("d", "", idx),
         "s" => name_table!("s", "", idx),
+        "f" => name_table!("f", "", idx),
         _ => unreachable!("static_name prefix {prefix}"),
     }
 }
@@ -422,6 +498,39 @@ mod tests {
         assert_eq!(v.name, "v3.2d");
         assert_eq!(v.class.sig(), "q");
         assert_eq!(d.class.sig(), "d");
+    }
+
+    #[test]
+    fn riscv_abi_and_raw_names_alias() {
+        let a0 = parse_riscv_register("a0").unwrap();
+        let x10 = parse_riscv_register("x10").unwrap();
+        assert_eq!(a0.file(), x10.file());
+        assert_eq!(a0.class, RegisterClass::RGp64);
+        assert_eq!(a0.name, "a0");
+        assert_eq!(x10.name, "x10");
+        let fa5 = parse_riscv_register("fa5").unwrap();
+        let f15 = parse_riscv_register("f15").unwrap();
+        assert_eq!(fa5.file(), f15.file());
+        assert_eq!(fa5.class, RegisterClass::RFp64);
+        assert_eq!(fa5.class.sig(), "f");
+        assert_eq!(a0.class.sig(), "x");
+    }
+
+    #[test]
+    fn riscv_specials() {
+        let zero = parse_riscv_register("zero").unwrap();
+        assert_eq!(zero.slot, 0);
+        assert_eq!(zero.file(), parse_riscv_register("x0").unwrap().file());
+        assert_eq!(parse_riscv_register("fp").unwrap().slot, 8);
+        assert_eq!(
+            parse_riscv_register("fp").unwrap().file(),
+            parse_riscv_register("s0").unwrap().file()
+        );
+        assert_eq!(parse_riscv_register("sp").unwrap().slot, 2);
+        assert!(parse_riscv_register("x32").is_none());
+        assert!(parse_riscv_register("f32").is_none());
+        assert!(parse_riscv_register("rax").is_none());
+        assert!(parse_riscv_register("x2_loop").is_none());
     }
 
     #[test]

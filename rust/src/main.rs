@@ -5,10 +5,10 @@
 //! request/report shape, structured errors.
 //!
 //! Subcommands:
-//!   analyze <file.s> --arch skl|zen|hsw|tx2 [--baseline] [--critpath] [--json]
-//!   simulate <file.s> --arch skl|zen|tx2 [--iterations N]
-//!   ibench --instr <form> --arch skl|zen [--conflict <form>]
-//!   build-model --instr <form> --arch skl|zen
+//!   analyze <file.s> --arch skl|zen|hsw|tx2|rv64 [--baseline] [--critpath] [--json]
+//!   simulate <file.s> --arch skl|zen|tx2|rv64 [--iterations N]
+//!   ibench --instr <form> --arch skl|zen|tx2|rv64 [--conflict <form>]
+//!   build-model --instr <form> --arch skl|zen|tx2|rv64
 //!   validate-model --arch skl|zen
 //!   compare <file.s> --arch skl|zen [--unroll N]
 //!   tables [--table1] [--table3] [--table5] [--all]
@@ -184,8 +184,11 @@ fn run(args: &[String]) -> Result<()> {
                 .ok_or_else(|| anyhow!("usage: ibench --instr vaddpd-xmm_xmm_xmm --arch skl"))?;
             let spec = BenchSpec::parse(instr);
             if let Some(dir) = opts.get("emit") {
-                let files =
-                    osaca::ibench::runner::emit_bench_files(&spec, std::path::Path::new(dir))?;
+                let files = osaca::ibench::runner::emit_bench_files(
+                    &spec,
+                    machine.isa,
+                    std::path::Path::new(dir),
+                )?;
                 for f in &files {
                     println!("wrote {}", f.display());
                 }
@@ -415,10 +418,10 @@ fn print_usage() {
 usage: osaca <command> [options]
 
 commands:
-  analyze <file.s> --arch skl|zen|hsw|tx2 [--baseline] [--critpath] [--json]
-  simulate <file.s> --arch skl|zen|tx2 [--iterations N]
-  ibench --instr <form> --arch skl|zen [--conflict <form>]
-  build-model --instr <form> --arch skl|zen
+  analyze <file.s> --arch skl|zen|hsw|tx2|rv64 [--learn] [--baseline] [--critpath] [--json]
+  simulate <file.s> --arch skl|zen|tx2|rv64 [--iterations N]
+  ibench --instr <form> --arch skl|zen|tx2|rv64 [--conflict <form>]
+  build-model --instr <form> --arch skl|zen|tx2|rv64
   validate-model --arch skl|zen
   compare <file.s> --arch skl|zen [--unroll N]
   tables [--table1|--table3|--table5|--all]

@@ -339,7 +339,12 @@ entry vdivsd-xmm_xmm_xmm lat=13 tp=4 uops=c@1:P0,dv@4:0DV
 
     #[test]
     fn builtin_serialize_roundtrip() {
-        for m in [super::super::skylake(), super::super::zen(), super::super::thunderx2()] {
+        for m in [
+            super::super::skylake(),
+            super::super::zen(),
+            super::super::thunderx2(),
+            super::super::rv64(),
+        ] {
             let m2 = MachineModel::parse(&m.serialize()).unwrap();
             assert_eq!(m.entries.len(), m2.entries.len(), "{}", m.name);
             assert_eq!(m.isa, m2.isa, "{}", m.name);
@@ -355,7 +360,12 @@ entry vdivsd-xmm_xmm_xmm lat=13 tp=4 uops=c@1:P0,dv@4:0DV
         let m = MachineModel::parse(a64).unwrap();
         assert_eq!(m.isa, Isa::AArch64);
         assert!(m.serialize().contains("isa aarch64"));
-        let bad = "arch t \"T\"\nisa riscv\nports I0\n";
+        let rv = "arch t \"T\"\nisa riscv\nports I0 LS\nloadports LS\n\
+                  entry fadd.d-f_f_f lat=5 tp=1 uops=c@1:I0\n";
+        let m = MachineModel::parse(rv).unwrap();
+        assert_eq!(m.isa, Isa::RiscV);
+        assert!(m.serialize().contains("isa riscv"));
+        let bad = "arch t \"T\"\nisa sparc\nports I0\n";
         assert!(MachineModel::parse(bad).is_err());
     }
 }

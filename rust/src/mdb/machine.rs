@@ -52,7 +52,7 @@ impl Default for CoreParams {
 /// A full machine model (one per microarchitecture).
 #[derive(Debug)]
 pub struct MachineModel {
-    /// Short name used on the CLI (`skl`, `zen`, `tx2`).
+    /// Short name used on the CLI (`skl`, `zen`, `tx2`, `rv64`).
     pub name: String,
     /// Human-readable name ("Intel Skylake").
     pub arch_name: String,
@@ -222,8 +222,8 @@ impl MachineModel {
     ///
     /// Every fallback is x86-specific (AT&T size suffixes, AVX 256-bit
     /// halving, one-mem-operand synthesis), so models for other ISAs go
-    /// straight to the database-miss error: an AArch64 form either hits
-    /// the direct tier or fails loudly.
+    /// straight to the database-miss error: an AArch64 or RISC-V form
+    /// either hits the direct tier or fails loudly.
     fn resolve_fresh(&self, ins: &Instruction, form: &InstructionForm) -> Result<ResolvedUops> {
         if self.isa == Isa::X86 {
             // 2. scalar-int suffix normalization.

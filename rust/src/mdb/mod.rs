@@ -85,20 +85,26 @@ fn tx2_shared() -> &'static Arc<MachineModel> {
     M.get_or_init(|| parse_builtin(include_str!("data/tx2.mdb"), "tx2"))
 }
 
+fn rv64_shared() -> &'static Arc<MachineModel> {
+    static M: OnceLock<Arc<MachineModel>> = OnceLock::new();
+    M.get_or_init(|| parse_builtin(include_str!("data/rv64.mdb"), "rv64"))
+}
+
 /// Canonical CLI names of the built-in models.
 pub fn builtin_names() -> &'static [&'static str] {
-    &["hsw", "skl", "tx2", "zen"]
+    &["hsw", "rv64", "skl", "tx2", "zen"]
 }
 
 /// Shared handle to a built-in model by CLI name (`skl`, `zen`, `hsw`,
-/// `tx2` plus the long aliases). This is the lookup the `api::Engine`
-/// registry uses: no parsing, no copying.
+/// `tx2`, `rv64` plus the long aliases). This is the lookup the
+/// `api::Engine` registry uses: no parsing, no copying.
 pub fn by_name_shared(name: &str) -> Option<Arc<MachineModel>> {
     match name.to_ascii_lowercase().as_str() {
         "skl" | "skylake" => Some(skl_shared().clone()),
         "zen" | "znver1" => Some(zen_shared().clone()),
         "hsw" | "haswell" => Some(hsw_shared().clone()),
         "tx2" | "thunderx2" => Some(tx2_shared().clone()),
+        "rv64" | "riscv" | "rv64gc" => Some(rv64_shared().clone()),
         _ => None,
     }
 }
@@ -130,6 +136,13 @@ pub fn haswell() -> MachineModel {
 /// Compatibility shim; see [`skylake`].
 pub fn thunderx2() -> MachineModel {
     tx2_shared().as_ref().clone()
+}
+
+/// Built-in generic RV64GC model — the third backend of the DESIGN.md
+/// §7 recipe, with the riscv-sim-derived dual-issue pipe structure
+/// (see `data/rv64.mdb`). Compatibility shim; see [`skylake`].
+pub fn rv64() -> MachineModel {
+    rv64_shared().as_ref().clone()
 }
 
 /// Look up a built-in model by CLI name (`skl`, `zen`, `hsw`).
@@ -164,7 +177,31 @@ mod tests {
         assert!(by_name("hsw").is_some());
         assert!(by_name("tx2").is_some());
         assert!(by_name("thunderx2").is_some());
+        assert!(by_name("rv64").is_some());
+        assert!(by_name("riscv").is_some());
+        assert!(by_name("RV64GC").is_some());
         assert!(by_name("cascadelake").is_none());
+    }
+
+    #[test]
+    fn rv64_model_is_riscv() {
+        use crate::isa::Isa;
+        let m = rv64();
+        assert_eq!(m.name, "rv64");
+        assert_eq!(m.isa, Isa::RiscV);
+        assert_eq!(m.ports.len(), 7); // I0 I1 LS B F SD DV
+        assert_eq!(m.divider_ports().count(), 1);
+        assert!(!m.avx256_split);
+        // No flags register -> nothing to macro-fuse; no rename-stage
+        // eliminations are modeled for this core.
+        assert!(!m.sim_macro_fusion);
+        assert_eq!(m.params.rename_width, 2);
+        assert_eq!(m.params.retire_width, 2);
+        // Every branch form resolves to a real µ-op on the B pipe.
+        use crate::isa::InstructionForm;
+        let bne = &m.entries[&InstructionForm::new("bne", "x_x_lbl")];
+        assert_eq!(bne.uops.len(), 1);
+        assert!((bne.implied_rtp() - 1.0).abs() < 1e-6);
     }
 
     #[test]

@@ -190,11 +190,13 @@ pub fn decode_kernel(kernel: &Kernel, machine: &MachineModel) -> Result<DecodedI
         }
         if ins.is_reg_move() && machine.sim_move_elim {
             // Operand order is ISA-dependent: AT&T is source-first,
-            // AArch64 destination-first. `is_reg_move` guarantees two
-            // register operands.
+            // AArch64 and RISC-V destination-first. `is_reg_move`
+            // guarantees two register operands.
             let (src_op, dst_op) = match ins.isa {
                 crate::isa::Isa::X86 => (&ins.operands[0], &ins.operands[1]),
-                crate::isa::Isa::AArch64 => (&ins.operands[1], &ins.operands[0]),
+                crate::isa::Isa::AArch64 | crate::isa::Isa::RiscV => {
+                    (&ins.operands[1], &ins.operands[0])
+                }
             };
             let src = src_op.reg().map(|r| r.file());
             let dst = dst_op.reg().map(|r| r.file());

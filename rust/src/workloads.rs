@@ -1,7 +1,7 @@
 //! Embedded workload fixtures — the paper's validation kernels
 //! (transcribed from its listings; see workloads/*/*.s) plus extra
 //! kernels exercising other bottleneck classes, and the AArch64
-//! (ThunderX2) variants for the multi-ISA frontend.
+//! (ThunderX2) and RISC-V (RV64) variants for the multi-ISA frontend.
 
 use crate::asm::{extract_kernel_isa, Kernel};
 use crate::isa::Isa;
@@ -12,7 +12,8 @@ pub struct Workload {
     /// Benchmark family (`triad`, `pi`, ...).
     pub family: &'static str,
     /// Which architecture the code was "compiled for" (`skl`, `zen`,
-    /// `tx2`, or `any` when identical x86 code is produced for both).
+    /// `tx2`, `rv64`, or `any` when identical x86 code is produced for
+    /// both x86 targets).
     pub compiled_for: &'static str,
     /// Optimization flag (`-O1`, `-O2`, `-O3`).
     pub flag: &'static str,
@@ -162,6 +163,30 @@ pub const EXTRA: &[Workload] = &[
     },
 ];
 
+/// RISC-V (RV64GC) fixtures — the third-backend proof of the
+/// DESIGN.md §7 recipe: the paper's two validation kernels re-targeted
+/// for the riscv-sim-derived dual-issue `rv64` model.
+pub const RISCV: &[Workload] = &[
+    Workload {
+        family: "triad",
+        compiled_for: "rv64",
+        flag: "-O2",
+        unroll: 1,
+        flops_per_it: 2,
+        isa: Isa::RiscV,
+        source: include_str!("../../workloads/triad/rv64_o2.s"),
+    },
+    Workload {
+        family: "pi",
+        compiled_for: "rv64",
+        flag: "-O1",
+        unroll: 1,
+        flops_per_it: 5,
+        isa: Isa::RiscV,
+        source: include_str!("../../workloads/pi/rv64_o1.s"),
+    },
+];
+
 /// AArch64 (ThunderX2) fixtures for the multi-ISA frontend: the triad
 /// and π kernels of the paper re-targeted per the 2019 follow-up.
 pub const AARCH64: &[Workload] = &[
@@ -194,7 +219,7 @@ pub fn all() -> Vec<&'static Workload> {
 
 /// Every fixture of every ISA.
 pub fn all_isa() -> Vec<&'static Workload> {
-    all().into_iter().chain(AARCH64.iter()).collect()
+    all().into_iter().chain(AARCH64.iter()).chain(RISCV.iter()).collect()
 }
 
 /// ISA of a target architecture name, via the built-in model registry
@@ -252,6 +277,22 @@ mod tests {
         assert!(find("pi", "tx2", "-O2").is_none());
         assert!(find("triad", "tx2", "-O3").is_none());
         assert_eq!(find("pi", "skl", "-O2").unwrap().compiled_for, "any");
+    }
+
+    #[test]
+    fn riscv_fixtures_found_by_arch() {
+        let t = find("triad", "rv64", "-O2").unwrap();
+        assert_eq!(t.isa, Isa::RiscV);
+        assert_eq!(t.unroll, 1);
+        assert_eq!(t.kernel().len(), 8);
+        let p = find("pi", "rv64", "-O1").unwrap();
+        assert_eq!(p.kernel().len(), 9);
+        // No ISA-incompatible fallback, and the x86/ARM sets are
+        // untouched by the RISC-V additions.
+        assert!(find("pi", "rv64", "-O2").is_none());
+        assert!(find("triad", "rv64", "-O3").is_none());
+        assert!(all().iter().all(|w| w.isa == Isa::X86));
+        assert!(AARCH64.iter().all(|w| w.isa == Isa::AArch64));
     }
 
     #[test]

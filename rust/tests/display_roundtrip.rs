@@ -1,5 +1,5 @@
 //! Parse → display → parse round-trip over every shipped workload
-//! fixture (both ISAs). PR 2 removed `Instruction.raw` and made
+//! fixture (all three ISAs). PR 2 removed `Instruction.raw` and made
 //! `Display` reconstruct source lines; this pins that the
 //! reconstruction is faithful: re-parsing the rendered text yields an
 //! identical instruction (mnemonic, operands, prefixes, ISA), and the
@@ -65,6 +65,53 @@ fn tricky_x86_spellings_roundtrip() {
             .unwrap_or_else(|e| panic!("reparse `{text}`: {e}"));
         assert_eq!(re, i, "{src} -> {text}");
         assert_eq!(re.to_string(), text, "{src}: not a fixpoint");
+    }
+}
+
+#[test]
+fn tricky_riscv_spellings_roundtrip() {
+    use osaca::isa::Isa;
+    for src in [
+        "fld fa5, 0(a5)",
+        "fsd fa4, -8(a3)",
+        "ld a0, 16(sp)",
+        "sd ra, 8(sp)",
+        "fmadd.d fa4, fa3, fa0, fa4",
+        "fdiv.d fa4, fa0, fa4",
+        "fcvt.d.w fa5, a4",
+        "addi a5, a5, 8",
+        "addiw a4, a4, 1",
+        "xor a3, a3, a3",
+        "mv a0, a1",
+        "li t0, 111",
+        "bne a4, a5, .L2",
+        "j .L5",
+    ] {
+        let i = parse_instruction_isa(src, 5, Isa::RiscV).unwrap_or_else(|e| panic!("{src}: {e}"));
+        let text = i.to_string();
+        assert_eq!(text, src, "canonical rendering differs");
+        let re = parse_instruction_isa(&text, 5, Isa::RiscV)
+            .unwrap_or_else(|e| panic!("reparse `{text}`: {e}"));
+        assert_eq!(re, i, "{src} -> {text}");
+        assert_eq!(re.to_string(), text, "{src}: not a fixpoint");
+    }
+    // Raw architectural spellings are preserved, and a zero-offset
+    // `(base)` canonicalizes to `0(base)`.
+    let i = parse_instruction_isa("ld x10, (x15)", 1, Isa::RiscV).unwrap();
+    assert_eq!(i.to_string(), "ld x10, 0(x15)");
+    let re = parse_instruction_isa(&i.to_string(), 1, Isa::RiscV).unwrap();
+    assert_eq!(re, i);
+}
+
+#[test]
+fn all_three_isas_have_fixture_coverage() {
+    // The 16+ fixture set spans all three ISAs; the blanket round-trip
+    // tests above only prove what the fixture list feeds them.
+    use osaca::isa::Isa;
+    let ws = workloads::all_isa();
+    assert!(ws.len() >= 16, "{} fixtures", ws.len());
+    for isa in [Isa::X86, Isa::AArch64, Isa::RiscV] {
+        assert!(ws.iter().any(|w| w.isa == isa), "no fixture for {isa}");
     }
 }
 

@@ -1,0 +1,25 @@
+# Pi by numerical integration (paper Listing 2) compiled for RV64GC at
+# -O1: scalar, one source iteration per assembly iteration, 5 FLOP/iter.
+#
+# a4 = i, a5 = n, fa2 = 0.5, fa3 = dx, fa1 = 1.0, fa0 = 4.0
+# (loop-invariant), fs0 = running sum. There is no separate compare:
+# the bne at the bottom is RISC-V's compare-and-branch, executing a
+# real µ-op on the B pipe.
+#
+# The sum recurrence (fadd.d, 5 cy) and the non-pipelined divide (DV
+# busy 12 cy) are the candidate bottlenecks; the divider wins.
+	li	t0, 111
+	.byte	19,0,0,0
+.L2:
+	fcvt.d.w	fa5, a4
+	fadd.d	fa5, fa5, fa2
+	fmul.d	fa5, fa5, fa3
+	fmul.d	fa4, fa5, fa5
+	fadd.d	fa4, fa4, fa1
+	fdiv.d	fa4, fa0, fa4
+	fadd.d	fs0, fs0, fa4
+	addiw	a4, a4, 1
+	bne	a4, a5, .L2
+	li	t0, 222
+	.byte	19,0,0,0
+	ret

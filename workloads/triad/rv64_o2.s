@@ -1,0 +1,28 @@
+# STREAM triad a[i] = b[i] + s*c[i], compiled for RV64GC at -O2:
+# scalar double, one source iteration per assembly iteration (RV64GC
+# has no vector extension, and the single offset(base) addressing mode
+# forces one pointer bump per stream).
+#
+# a5 = &b[i], a4 = &c[i], a3 = &a[i], a6 = &b[n] (loop bound),
+# fa0 = scalar s (loop-invariant).
+#
+# Designed bottleneck: the single LS pipe carries 2 loads + 1 store
+# AGU = 3.0 cy/iter for the analyzer — but the dual-issue frontend
+# (8 slots / 2-wide = 4.0 cy/iter) is the real limit the uniform-split
+# port model cannot see; tests/riscv_rv64.rs pins both numbers.
+#
+# OSACA/IACA markers (RISC-V flavor: li t0 + canonical-nop bytes).
+	li	t0, 111
+	.byte	19,0,0,0
+.L3:
+	fld	fa4, 0(a5)
+	fld	fa3, 0(a4)
+	fmadd.d	fa4, fa3, fa0, fa4
+	fsd	fa4, 0(a3)
+	addi	a5, a5, 8
+	addi	a4, a4, 8
+	addi	a3, a3, 8
+	bne	a5, a6, .L3
+	li	t0, 222
+	.byte	19,0,0,0
+	ret
