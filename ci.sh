@@ -30,13 +30,20 @@ bench_smoke() {
 # on both skl and zen (the paper's cross-compile Table I cases
 # included), tx2_* on tx2, rv64_* on rv64. Any parse/resolve error
 # fails the leg; unit tests only cover the fixtures they name, this
-# covers them all.
+# covers them all. Each analysis also runs a `--format json` leg piped
+# through `python3 -m json.tool`, so a malformed byte from the
+# hand-rolled emitter fails CI on every fixture × model combination.
 isa_smoke() {
     echo "== per-ISA smoke: CLI analyze over workloads/ × {skl,zen,tx2,rv64} =="
     # Always (re)build: cargo makes this a no-op when fresh, and a
     # stale binary must never silently validate old code.
     cargo build --release
     local bin=./target/release/osaca
+    local json_check=1
+    if ! command -v python3 >/dev/null 2>&1; then
+        json_check=0
+        echo "per-ISA smoke: WARNING — python3 unavailable, JSON legs skipped"
+    fi
     local fails=0 runs=0
     local f base archs arch
     for f in workloads/*/*.s; do
@@ -53,6 +60,14 @@ isa_smoke() {
             if ! "$bin" analyze "$f" --arch "$arch" --critpath >/dev/null; then
                 echo "FAIL: analyze $f --arch $arch"
                 fails=$((fails + 1))
+            fi
+            if (( json_check )); then
+                runs=$((runs + 1))
+                if ! "$bin" analyze "$f" --arch "$arch" --critpath --frontend-bound \
+                        --format json | python3 -m json.tool >/dev/null; then
+                    echo "FAIL: analyze $f --arch $arch --format json"
+                    fails=$((fails + 1))
+                fi
             fi
         done
     done

@@ -5,29 +5,35 @@
 //! Run: `cargo run --release --example cross_arch`
 
 use anyhow::Result;
-use osaca::api::Engine;
-use osaca::benchlib::print_table;
+use osaca::api::{Engine, Format};
+use osaca::benchlib::{format_table, print_table};
 use osaca::report::experiments::{render_table3, table3};
 use osaca::sim::SimConfig;
+
+const HEADERS: [&str; 9] = [
+    "executed on",
+    "compiled for",
+    "flag",
+    "unroll",
+    "MFLOP/s",
+    "Mit/s",
+    "measured cy/it",
+    "OSACA cy/it",
+    "IACA-like cy/it",
+];
 
 fn main() -> Result<()> {
     let engine = Engine::new();
     let rows = table3(engine.coordinator(), SimConfig::default())?;
     print_table(
         "Table III: Schönauer triad, measured (simulator @1.8 GHz) vs predicted",
-        &[
-            "executed on",
-            "compiled for",
-            "flag",
-            "unroll",
-            "MFLOP/s",
-            "Mit/s",
-            "measured cy/it",
-            "OSACA cy/it",
-            "IACA-like cy/it",
-        ],
+        &HEADERS,
         &render_table3(&rows),
     );
+    // Machine-readable appendix: the same rows through the CSV table
+    // emitter (what `tables --table3 --format csv` prints) — ready for
+    // plotting scripts.
+    print!("\n{}", format_table(Format::Csv, "table3", &HEADERS, &render_table3(&rows)));
 
     // Paper's headline observation, stated explicitly:
     let get = |on: &str, for_: &str| {

@@ -9,7 +9,8 @@
 //! Run: `cargo run --release --example model_construction`
 
 use anyhow::{anyhow, Result};
-use osaca::api::Engine;
+use osaca::api::{Engine, Format};
+use osaca::benchlib::format_table;
 use osaca::builder::{default_probes, infer_entry};
 use osaca::ibench::{run_conflict, run_sweep, BenchSpec};
 use osaca::isa::InstructionForm;
@@ -45,9 +46,13 @@ fn main() -> Result<()> {
         let mut m2 = machine.as_ref().clone();
         m2.entries.clear();
         m2.insert(inf.entry.clone());
-        for line in m2.serialize().lines().filter(|l| l.starts_with("entry")) {
-            println!("  {line}");
-        }
+        let entry_line = m2
+            .serialize()
+            .lines()
+            .find(|l| l.starts_with("entry"))
+            .unwrap_or_default()
+            .to_string();
+        println!("  {entry_line}");
         // Compare with the shipped (ground-truth) database entry.
         if let Some(db) = machine.entries.get(&form) {
             println!(
@@ -58,6 +63,24 @@ fn main() -> Result<()> {
                 (db.implied_rtp() as f64 - inf.measured_rtp).abs() < 0.1
             );
         }
+        // Machine-readable appendix: the same deduction through the
+        // JSON table emitter — the identical 5-column shape (incl. the
+        // serialized entry) that `build-model --format json` emits.
+        println!(
+            "{}",
+            format_table(
+                Format::Json,
+                "build-model",
+                &["form", "latency_cy", "rtp_cy_per_instr", "conflicting_probes", "entry"],
+                &[vec![
+                    inf.entry.form.to_string(),
+                    format!("{:.2}", inf.measured_latency),
+                    format!("{:.3}", inf.measured_rtp),
+                    format!("{:?}", inf.conflicting_probes),
+                    entry_line,
+                ]],
+            )
+        );
         println!();
     }
     Ok(())

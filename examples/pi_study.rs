@@ -29,6 +29,10 @@ fn main() -> Result<()> {
             let cp = r.critpath.as_ref().expect("critpath pass");
             let m = r.simulation.as_ref().expect("simulate pass");
             let u = w.unroll as f64;
+            // The structured winner names the limiting resource per
+            // row — the -O1 lines literally say "critical_path".
+            let prediction = r.prediction();
+            let winner = prediction.winner().expect("analytic passes ran");
             rows.push(vec![
                 r.machine.arch_name.clone(),
                 flag.to_string(),
@@ -36,6 +40,7 @@ fn main() -> Result<()> {
                 format!("{:.2}", a.cy_per_asm_iter as f64 / u),
                 format!("{:.2}", cp.carried_per_iteration as f64 / u),
                 format!("{:.2}", m.cy_per_source_it(w.unroll)),
+                format!("{} ({})", winner.kind.name(), winner.resource),
             ]);
             stall_rows.push(vec![
                 r.machine.arch_name.clone(),
@@ -51,7 +56,7 @@ fn main() -> Result<()> {
     }
     print_table(
         "pi benchmark (Table V + critical-path extension), cy per source iteration",
-        &["arch", "flag", "IACA-like", "OSACA", "crit-path bound", "measured"],
+        &["arch", "flag", "IACA-like", "OSACA", "crit-path bound", "measured", "winning bound"],
         &rows,
     );
     print_table(

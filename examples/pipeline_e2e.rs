@@ -116,8 +116,11 @@ fn main() -> Result<()> {
             let a = report.throughput.as_ref().expect("throughput pass");
             let cp = report.critpath.as_ref().expect("critpath pass");
             let m = report.simulation.as_ref().expect("simulate pass");
-            let pred = a.cy_per_asm_iter.max(cp.carried_per_iteration);
-            let ratio = m.cycles_per_iteration / pred as f64;
+            // The combined model is the Prediction's max-over-bounds;
+            // the winner also names the limiting resource per row.
+            let prediction = report.prediction();
+            let winner = prediction.winner().expect("analytic passes ran");
+            let ratio = m.cycles_per_iteration / winner.cy_per_asm_iter as f64;
             // Track accuracy of the combined (throughput + critical
             // path) model; pure-OSACA deviates on latency-bound kernels.
             if w.family != "pi" || w.flag != "-O1" {
@@ -130,12 +133,21 @@ fn main() -> Result<()> {
                 format!("{:.2}", cp.carried_per_iteration),
                 format!("{:.2}", m.cycles_per_iteration),
                 format!("{:.2}", ratio),
+                format!("{} ({})", winner.kind.name(), winner.resource),
             ]);
         }
     }
     print_table(
         "cy per assembly iteration",
-        &["machine", "workload", "OSACA", "critpath", "measured", "meas/max(pred)"],
+        &[
+            "machine",
+            "workload",
+            "OSACA",
+            "critpath",
+            "measured",
+            "meas/max(pred)",
+            "winning bound",
+        ],
         &rows,
     );
     println!(

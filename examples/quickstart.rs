@@ -5,10 +5,17 @@
 //! `osaca::api` session layer (the `tx2`/`rv64` archs flip the
 //! frontend to the matching syntax automatically).
 //!
+//! Instead of grepping report text, the structured `Prediction` is the
+//! thing to inspect: every resource bound (port pressure, the
+//! width-aware frontend bound, divider occupancy, critical path) with
+//! the winner identifying *why* the kernel is slow. On the 2-wide
+//! `rv64` core the winner flips from the LS port (3.0 cy) to the
+//! frontend (4.0 cy) — exactly what the simulator measures.
+//!
 //! Run: `cargo run --release --example quickstart`
 
 use anyhow::Result;
-use osaca::api::{Engine, Passes};
+use osaca::api::{BoundKind, Engine, Passes};
 use osaca::workloads;
 
 fn main() -> Result<()> {
@@ -16,28 +23,47 @@ fn main() -> Result<()> {
     for (arch, flag) in [("skl", "-O3"), ("zen", "-O3"), ("tx2", "-O2"), ("rv64", "-O2")] {
         let w = workloads::find("triad", arch, flag).unwrap();
 
-        // One request, every pass: OSACA throughput analysis (Tables
-        // II/IV), the balanced IACA-like baseline through the batching
-        // solver, and a "measurement" on the simulator substrate.
+        // One request, every pass — with the width-aware frontend
+        // bound on, so narrow cores are predicted correctly (the
+        // paper-pinned wide-core tables are unaffected: their port
+        // bound dominates).
         let report = engine.analyze(
             &Engine::request(&w.name())
                 .arch(arch)
                 .source(w.source)
-                .passes(Passes::THROUGHPUT | Passes::BASELINE | Passes::SIMULATE)
+                .passes(Passes::ALL)
+                .frontend_bound(true)
                 .unroll(w.unroll),
         )?;
 
         print!("{}", report.to_text());
-        let b = report.baseline.as_ref().expect("baseline pass");
+
+        // Bound inspection: a queryable decomposition, not a string.
+        let prediction = report.prediction();
+        let winner = prediction.winner().expect("analytic passes ran");
         println!(
-            "balanced baseline: {:.2} cy/asm-iter (uniform cross-check {:.2})",
-            b.cy_per_asm_iter, b.uniform_cy
+            "winning bound: {} ({}) -> {:.2} cy / assembly iteration",
+            winner.kind.name(),
+            winner.resource,
+            winner.cy_per_asm_iter
         );
-        let m = report.simulation.as_ref().expect("simulate pass");
+        for bound in &prediction.bounds {
+            println!(
+                "  {:<14} {:>6.2} cy  [{}, from the {} pass]",
+                bound.kind.name(),
+                bound.cy_per_asm_iter,
+                bound.resource,
+                bound.source.name()
+            );
+        }
+        // The simulator's measurement rides along in the same
+        // vocabulary — compare prediction vs observation directly.
+        let sim = prediction.bound(BoundKind::Simulated).expect("simulate pass ran");
         println!(
-            "simulated hardware: {:.2} cy/asm-iter = {:.2} cy per source iteration\n",
-            m.cycles_per_iteration,
-            m.cy_per_source_it(w.unroll)
+            "simulated hardware: {:.2} cy/asm-iter ({}), predicted {:.2}\n",
+            sim.cy_per_asm_iter,
+            sim.resource,
+            winner.cy_per_asm_iter
         );
     }
     Ok(())

@@ -277,6 +277,41 @@ fn main() {
         engine.stats().avg_batch_size()
     );
 
+    // ---- report construction + emitters ---------------------------------
+    // What one serving-path response costs after the passes are done:
+    // assembling the Prediction bound decomposition and emitting the
+    // versioned JSON. Frontend bound on, so the decomposition carries
+    // every analytic bound kind.
+    println!("--- report emitters ---");
+    let w = workloads::find("triad", "skl", "-O3").unwrap();
+    let report = engine
+        .analyze(
+            &Engine::request(&w.name())
+                .arch("skl")
+                .source(w.source)
+                .passes(Passes::ANALYTIC)
+                .frontend_bound(true)
+                .unroll(w.unroll),
+        )
+        .unwrap();
+    const EMITS: usize = 1000;
+    let s = bench("report/prediction_build", 2, 10, || {
+        for _ in 0..EMITS {
+            std::hint::black_box(report.prediction());
+        }
+    });
+    let rate = EMITS as f64 / s.median.as_secs_f64();
+    println!("{}  ({:.0} predictions/s)", s.report(), rate);
+    json.record(&s, &[("predictions_per_s", rate)]);
+    let s = bench("report/json_emit", 2, 10, || {
+        for _ in 0..EMITS {
+            std::hint::black_box(report.to_json());
+        }
+    });
+    let rate = EMITS as f64 / s.median.as_secs_f64();
+    println!("{}  ({:.0} emits/s)", s.report(), rate);
+    json.record(&s, &[("json_emits_per_s", rate)]);
+
     // ---- machine-readable results ---------------------------------------
     let path =
         std::env::var("OSACA_BENCH_JSON").unwrap_or_else(|_| "BENCH_hotpath.json".to_string());

@@ -13,9 +13,17 @@
 //! * no zero-idiom shortcuts and no macro-fusion — the model
 //!   deliberately over-counts where real hardware takes shortcuts
 //!   (§III-B: 4.25 cy predicted vs 4.00 measured for π at -O2).
+//!
+//! Beyond the paper, [`AnalyzerConfig::frontend_bound`] adds an opt-in
+//! width-aware bound `rename slots / rename_width` that closes the
+//! narrow-core blind spot documented in DESIGN.md §7 (the 2-wide `rv64`
+//! triad is frontend-bound at 4.0 cy where the port model sees 3.0 cy).
 
 pub mod critpath;
 pub mod throughput;
 
 pub use critpath::{critical_path, critical_path_decoded, CritPathReport};
-pub use throughput::{analyze, Analysis, LineOccupancy};
+pub use throughput::{
+    analyze, analyze_with, analyze_with_slots, Analysis, AnalyzerConfig, FrontendBound,
+    LineOccupancy,
+};

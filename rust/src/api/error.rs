@@ -28,6 +28,9 @@ pub enum OsacaError {
     IsaMismatch { kernel_isa: &'static str, model_isa: &'static str, arch: String },
     /// The request carried neither source text nor a kernel.
     EmptyRequest { name: String },
+    /// An unknown report format name (CLI `--format`, emitter
+    /// selection). `supported` lists every built-in emitter.
+    UnsupportedFormat { requested: String, supported: Vec<String> },
     /// The kernel does not fit the solver artifact's µ-op budget.
     KernelTooLarge { max: usize, message: String },
     /// The solver thread did not reply within the configured timeout.
@@ -71,6 +74,11 @@ impl fmt::Display for OsacaError {
             OsacaError::EmptyRequest { name } => {
                 write!(f, "request `{name}` has neither source text nor a kernel")
             }
+            OsacaError::UnsupportedFormat { requested, supported } => write!(
+                f,
+                "unsupported report format `{requested}` (supported: {})",
+                supported.join(", ")
+            ),
             OsacaError::KernelTooLarge { max, message } => {
                 write!(f, "kernel exceeds the solver budget of {max} µ-ops: {message}")
             }

@@ -27,8 +27,11 @@
 //! * [`Engine::analyze_batch`] maps a whole request slice directly
 //!   onto the solver's B=8 batch slots (`ceil(n/8)` artifact
 //!   executions — see `ServiceStats::batches`);
-//! * [`AnalysisReport`] carries one optional section per pass with
-//!   text/JSON rendering;
+//! * [`AnalysisReport`] carries one optional section per pass, the
+//!   structured [`Prediction`] bound decomposition (which resource wins
+//!   and why), and pluggable text/JSON/CSV rendering via the
+//!   [`Emitter`] trait (selected per request with
+//!   [`AnalysisRequest::format`]);
 //! * [`OsacaError`] makes failures matchable (unknown arch with the
 //!   available list, parse errors with line numbers, unresolved forms,
 //!   solver timeouts) instead of stringly-typed.
@@ -38,6 +41,7 @@
 //! as thin compatibility shims.
 
 mod error;
+mod prediction;
 mod report;
 mod request;
 
@@ -46,7 +50,7 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, OnceLock, RwLock};
 use std::time::Duration;
 
-use crate::analyzer::{analyze, critical_path_decoded};
+use crate::analyzer::{analyze, analyze_with_slots, critical_path_decoded};
 use crate::asm::{extract_kernel_isa, Kernel};
 use crate::baseline::{encode, to_prediction};
 use crate::coordinator::{Coordinator, CoordinatorConfig, ServiceStats, SubmitError};
@@ -61,7 +65,9 @@ use crate::sim::{run_decoded, DecodedKernel};
 const ANALYTIC_POOL_MAX: usize = 8;
 
 pub use crate::coordinator::Backend;
+pub use crate::report::emit::{Emitter, Format, SCHEMA_VERSION};
 pub use error::OsacaError;
+pub use prediction::{Bound, BoundKind, PassSource, Prediction};
 pub use report::AnalysisReport;
 pub use request::{AnalysisRequest, Passes};
 
@@ -292,21 +298,31 @@ impl Engine {
             arch: machine.name.clone(),
             machine: machine.clone(),
             unroll: req.unroll,
+            format: req.format,
             throughput: None,
             critpath: None,
             baseline: None,
             simulation: None,
         };
-        // Decode once: the critical-path pass and the simulator consume
-        // the same dependency-wired template, so parse+resolve+decode
-        // work happens once per request, not once per pass.
-        let decoded = if req.passes.intersects(Passes::CRITPATH | Passes::SIMULATE) {
+        // Decode once: the critical-path pass, the simulator and the
+        // width-aware frontend bound all consume the same
+        // dependency-wired template, so parse+resolve+decode work
+        // happens once per request, not once per pass.
+        let wants_frontend = req.frontend_bound && req.passes.contains(Passes::THROUGHPUT);
+        let wants_decode =
+            req.passes.intersects(Passes::CRITPATH | Passes::SIMULATE) || wants_frontend;
+        let decoded = if wants_decode {
             Some(DecodedKernel::new(kernel, machine).map_err(internal)?)
         } else {
             None
         };
         if req.passes.contains(Passes::THROUGHPUT) {
-            report.throughput = Some(analyze(kernel, machine).map_err(internal)?);
+            report.throughput = Some(if wants_frontend {
+                let slots = decoded.as_ref().expect("decoded for frontend bound").iter.slots;
+                analyze_with_slots(kernel, machine, slots).map_err(internal)?
+            } else {
+                analyze(kernel, machine).map_err(internal)?
+            });
         }
         if let Some(dk) = &decoded {
             if req.passes.contains(Passes::CRITPATH) {
@@ -498,6 +514,18 @@ mod tests {
         let json = report.to_json();
         assert!(json.contains("\"throughput\""));
         assert!(json.contains("\"baseline\""));
+        // The structured decomposition: ports win (the load-bound
+        // triad), the baseline rides along as an observation, and the
+        // winner agrees with the flat prediction.
+        let p = report.prediction();
+        let w = p.winner().unwrap();
+        assert_eq!(w.kind, BoundKind::PortPressure);
+        assert!((w.cy_per_asm_iter - 2.0).abs() < 0.01);
+        assert!(p.bound(BoundKind::Divider).is_some());
+        assert!(p.bound(BoundKind::CriticalPath).is_some());
+        assert!(p.bound(BoundKind::Baseline).is_some());
+        assert!(p.bound(BoundKind::FrontEnd).is_none(), "frontend bound is opt-in");
+        assert_eq!(p.cy_per_asm_iter(), report.predicted_cy_per_asm_iter());
     }
 
     #[test]

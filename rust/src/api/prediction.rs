@@ -1,0 +1,258 @@
+//! The structured prediction: throughput as a decomposition into named
+//! resource bounds.
+//!
+//! The paper's core claim is that the reciprocal throughput of a kernel
+//! is the *maximum over resource bounds* — port pressure, divider
+//! occupancy, dependency chains — yet a flat cycle number cannot say
+//! *which* resource won. [`Prediction`] makes that queryable: every
+//! pass contributes [`Bound`]s carrying the kind of resource, the bound
+//! it enforces in cycles per assembly iteration, the concrete winning
+//! resource (a port name, the rename stage, a dependency chain) and the
+//! pass that produced it. Model-derived bounds (port pressure, the
+//! opt-in width-aware frontend bound, divider occupancy, critical path)
+//! combine by `max` into the analytic prediction; observations (the
+//! balanced baseline, the simulator measurement) ride along in the same
+//! vocabulary without being folded into it.
+
+use crate::api::AnalysisReport;
+
+/// The resource class a [`Bound`] describes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum BoundKind {
+    /// Uniform-split pressure on the busiest non-divider port.
+    PortPressure,
+    /// Width-aware frontend bound: `rename slots / rename_width`
+    /// (opt-in via `AnalysisRequest::frontend_bound`).
+    FrontEnd,
+    /// Occupancy of the busiest divider pseudo-pipe (`DV`/`0DV`).
+    Divider,
+    /// Loop-carried dependency-chain bound (cycles per iteration).
+    CriticalPath,
+    /// IACA-like balanced baseline — an alternative predictor, not a
+    /// lower bound; reported for comparison only.
+    Baseline,
+    /// Simulated-hardware throughput — an observation, not a bound.
+    Simulated,
+}
+
+impl BoundKind {
+    /// Stable machine-readable name (used by the JSON/CSV emitters).
+    pub fn name(self) -> &'static str {
+        match self {
+            BoundKind::PortPressure => "port_pressure",
+            BoundKind::FrontEnd => "frontend",
+            BoundKind::Divider => "divider",
+            BoundKind::CriticalPath => "critical_path",
+            BoundKind::Baseline => "baseline",
+            BoundKind::Simulated => "simulated",
+        }
+    }
+
+    /// Does this bound participate in the analytic `max`? Baseline and
+    /// simulation are comparisons, not model-derived lower bounds.
+    pub fn is_model_bound(self) -> bool {
+        !matches!(self, BoundKind::Baseline | BoundKind::Simulated)
+    }
+}
+
+/// The pass that produced a [`Bound`] (provenance).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum PassSource {
+    Throughput,
+    Critpath,
+    Baseline,
+    Simulate,
+}
+
+impl PassSource {
+    /// Stable machine-readable name (used by the JSON/CSV emitters).
+    pub fn name(self) -> &'static str {
+        match self {
+            PassSource::Throughput => "throughput",
+            PassSource::Critpath => "critpath",
+            PassSource::Baseline => "baseline",
+            PassSource::Simulate => "simulate",
+        }
+    }
+}
+
+/// One named resource bound of a [`Prediction`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct Bound {
+    pub kind: BoundKind,
+    /// Cycles per assembly iteration this resource alone enforces (for
+    /// observations: the value measured/predicted by that pass).
+    pub cy_per_asm_iter: f32,
+    /// The concrete winning resource: a port name (`"LS"`, `"P3"`),
+    /// the rename stage (`"8 slots / 2-wide"`), a divider pipe, or a
+    /// chain description.
+    pub resource: String,
+    /// Which pass computed the bound.
+    pub source: PassSource,
+}
+
+/// The structured result of an analysis: every resource bound the
+/// requested passes produced, in a fixed kind order (port pressure,
+/// frontend, divider, critical path, baseline, simulated).
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct Prediction {
+    pub bounds: Vec<Bound>,
+    /// Assembly-loop unroll factor (for per-source-iteration values).
+    pub unroll: usize,
+}
+
+impl Prediction {
+    /// The winning model bound: the largest
+    /// [`BoundKind::is_model_bound`] entry (first of equals, in kind
+    /// order). `None` when no model-bound pass ran.
+    pub fn winner(&self) -> Option<&Bound> {
+        let mut best: Option<&Bound> = None;
+        for b in self.bounds.iter().filter(|b| b.kind.is_model_bound()) {
+            if best.map(|w| b.cy_per_asm_iter > w.cy_per_asm_iter).unwrap_or(true) {
+                best = Some(b);
+            }
+        }
+        best
+    }
+
+    /// The analytic prediction: max over the model bounds, cycles per
+    /// assembly iteration.
+    pub fn cy_per_asm_iter(&self) -> Option<f32> {
+        self.winner().map(|b| b.cy_per_asm_iter)
+    }
+
+    /// The analytic prediction per *source* iteration.
+    pub fn cy_per_source_it(&self) -> Option<f32> {
+        self.cy_per_asm_iter().map(|cy| cy / self.unroll.max(1) as f32)
+    }
+
+    /// The bound of one kind, if the producing pass ran.
+    pub fn bound(&self, kind: BoundKind) -> Option<&Bound> {
+        self.bounds.iter().find(|b| b.kind == kind)
+    }
+
+    /// Build the decomposition from a report's pass sections.
+    pub(crate) fn from_report(r: &AnalysisReport) -> Prediction {
+        let mut bounds = Vec::new();
+        let divider = r.machine.divider_ports();
+        if let Some(t) = &r.throughput {
+            // Busiest non-divider port; "last max" to match the
+            // analyzer's bottleneck_port convention on ties.
+            let mut port: Option<(usize, f32)> = None;
+            let mut div: Option<(usize, f32)> = None;
+            for (i, &v) in t.totals.iter().enumerate() {
+                let slot = if divider.contains(i) { &mut div } else { &mut port };
+                let better = match slot {
+                    Some((_, best)) => v >= *best,
+                    None => true,
+                };
+                if better {
+                    *slot = Some((i, v));
+                }
+            }
+            if let Some((i, v)) = port {
+                bounds.push(Bound {
+                    kind: BoundKind::PortPressure,
+                    cy_per_asm_iter: v,
+                    resource: r.machine.ports[i].clone(),
+                    source: PassSource::Throughput,
+                });
+            }
+            if let Some(f) = &t.frontend {
+                bounds.push(Bound {
+                    kind: BoundKind::FrontEnd,
+                    cy_per_asm_iter: f.cy_per_asm_iter,
+                    resource: crate::sim::frontend_resource_label(f.slots, f.width),
+                    source: PassSource::Throughput,
+                });
+            }
+            if let Some((i, v)) = div {
+                bounds.push(Bound {
+                    kind: BoundKind::Divider,
+                    cy_per_asm_iter: v,
+                    resource: r.machine.ports[i].clone(),
+                    source: PassSource::Throughput,
+                });
+            }
+        }
+        if let Some(c) = &r.critpath {
+            bounds.push(Bound {
+                kind: BoundKind::CriticalPath,
+                cy_per_asm_iter: c.carried_per_iteration,
+                resource: "loop-carried chain".to_string(),
+                source: PassSource::Critpath,
+            });
+        }
+        if let Some(b) = &r.baseline {
+            bounds.push(Bound {
+                kind: BoundKind::Baseline,
+                cy_per_asm_iter: b.cy_per_asm_iter,
+                resource: "balanced ports".to_string(),
+                source: PassSource::Baseline,
+            });
+        }
+        if let Some(m) = &r.simulation {
+            bounds.push(Bound {
+                kind: BoundKind::Simulated,
+                cy_per_asm_iter: m.cycles_per_iteration as f32,
+                resource: m.bottleneck_resource(&r.machine),
+                source: PassSource::Simulate,
+            });
+        }
+        Prediction { bounds, unroll: r.unroll }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn bound(kind: BoundKind, cy: f32) -> Bound {
+        Bound {
+            kind,
+            cy_per_asm_iter: cy,
+            resource: "r".to_string(),
+            source: PassSource::Throughput,
+        }
+    }
+
+    #[test]
+    fn winner_is_the_max_model_bound() {
+        let p = Prediction {
+            bounds: vec![
+                bound(BoundKind::PortPressure, 3.0),
+                bound(BoundKind::FrontEnd, 4.0),
+                bound(BoundKind::Divider, 0.0),
+                bound(BoundKind::Simulated, 9.0), // observation: ignored
+            ],
+            unroll: 2,
+        };
+        let w = p.winner().unwrap();
+        assert_eq!(w.kind, BoundKind::FrontEnd);
+        assert_eq!(p.cy_per_asm_iter(), Some(4.0));
+        assert_eq!(p.cy_per_source_it(), Some(2.0));
+    }
+
+    #[test]
+    fn ties_prefer_the_earlier_kind() {
+        let p = Prediction {
+            bounds: vec![
+                bound(BoundKind::PortPressure, 2.0),
+                bound(BoundKind::CriticalPath, 2.0),
+            ],
+            unroll: 1,
+        };
+        assert_eq!(p.winner().unwrap().kind, BoundKind::PortPressure);
+    }
+
+    #[test]
+    fn empty_prediction_has_no_winner() {
+        let p = Prediction::default();
+        assert!(p.winner().is_none());
+        assert!(p.cy_per_asm_iter().is_none());
+        // Observations alone do not make a prediction.
+        let p = Prediction { bounds: vec![bound(BoundKind::Baseline, 2.0)], unroll: 1 };
+        assert!(p.cy_per_asm_iter().is_none());
+        assert!(p.bound(BoundKind::Baseline).is_some());
+    }
+}

@@ -1,17 +1,19 @@
 //! The unified analysis report: one struct, optional per-pass sections,
-//! text and JSON rendering.
+//! a structured [`Prediction`] decomposition, and pluggable rendering
+//! through the `report::emit` emitters.
 
-use std::fmt::Write as _;
 use std::sync::Arc;
 
 use crate::analyzer::{Analysis, CritPathReport};
+use crate::api::prediction::Prediction;
 use crate::baseline::BaselinePrediction;
 use crate::mdb::MachineModel;
-use crate::report::render_occupancy;
+use crate::report::emit::Format;
 use crate::sim::Measurement;
 
 /// Result of one [`super::Engine::analyze`] call. Sections are present
-/// for exactly the passes requested.
+/// for exactly the passes requested; [`AnalysisReport::prediction`]
+/// assembles them into the bound decomposition.
 #[derive(Debug, Clone)]
 pub struct AnalysisReport {
     pub name: String,
@@ -19,6 +21,9 @@ pub struct AnalysisReport {
     pub arch: String,
     pub machine: Arc<MachineModel>,
     pub unroll: usize,
+    /// Output format selected on the request (used by
+    /// [`AnalysisReport::render`]).
+    pub format: Format,
     /// OSACA uniform-split throughput analysis ([`super::Passes::THROUGHPUT`]).
     pub throughput: Option<Analysis>,
     /// Latency bounds ([`super::Passes::CRITPATH`]).
@@ -30,16 +35,37 @@ pub struct AnalysisReport {
 }
 
 impl AnalysisReport {
-    /// The combined analytic prediction: max of the throughput bound
-    /// and the loop-carried latency bound, cycles per assembly
-    /// iteration. `None` when neither pass ran.
+    /// The structured prediction: every resource bound the requested
+    /// passes produced (port pressure, opt-in frontend, divider,
+    /// critical path, plus baseline/simulation observations), with the
+    /// winning model bound identifying *why* the kernel is slow.
+    /// Assembled on demand so it always reflects the sections present
+    /// (the baseline attaches after the in-process passes).
+    pub fn prediction(&self) -> Prediction {
+        Prediction::from_report(self)
+    }
+
+    /// The combined analytic prediction — the max over the model
+    /// bounds, cycles per assembly iteration. `None` when no
+    /// model-bound pass ran.
+    ///
+    /// Allocation-free equivalent of `prediction().cy_per_asm_iter()`
+    /// (serving loops call this per request): the throughput section's
+    /// port max already equals `max(port pressure, divider)`, so only
+    /// the frontend and critical-path values need folding in.
     pub fn predicted_cy_per_asm_iter(&self) -> Option<f32> {
-        match (&self.throughput, &self.critpath) {
-            (Some(t), Some(c)) => Some(t.cy_per_asm_iter.max(c.carried_per_iteration)),
-            (Some(t), None) => Some(t.cy_per_asm_iter),
-            (None, Some(c)) => Some(c.carried_per_iteration),
-            (None, None) => None,
+        let mut best: Option<f32> = None;
+        let mut fold = |v: f32| best = Some(best.map_or(v, |b| b.max(v)));
+        if let Some(t) = &self.throughput {
+            fold(t.cy_per_asm_iter);
+            if let Some(f) = &t.frontend {
+                fold(f.cy_per_asm_iter);
+            }
         }
+        if let Some(c) = &self.critpath {
+            fold(c.carried_per_iteration);
+        }
+        best
     }
 
     /// Combined prediction per *source* iteration.
@@ -47,151 +73,26 @@ impl AnalysisReport {
         self.predicted_cy_per_asm_iter().map(|cy| cy / self.unroll as f32)
     }
 
+    /// Render in the format selected on the request
+    /// (`AnalysisRequest::format`, default text).
+    pub fn render(&self) -> String {
+        self.format.emitter().emit(self)
+    }
+
     /// Human-readable rendering: the paper-style occupancy table plus
     /// one line per additional section.
     pub fn to_text(&self) -> String {
-        let mut out = String::new();
-        let _ = writeln!(out, "=== {} on {} ({}) ===", self.name, self.machine.arch_name, self.arch);
-        if let Some(t) = &self.throughput {
-            out.push_str(&render_occupancy(t, &self.machine));
-        }
-        if let Some(c) = &self.critpath {
-            let _ = writeln!(
-                out,
-                "Critical path: {:.2} cy intra-iteration, {:.2} cy/it loop-carried bound",
-                c.intra_iteration, c.carried_per_iteration
-            );
-        }
-        if let Some(b) = &self.baseline {
-            let _ = writeln!(
-                out,
-                "Balanced (IACA-like) baseline: {:.2} cy / assembly iteration (uniform {:.2})",
-                b.cy_per_asm_iter, b.uniform_cy
-            );
-        }
-        if let Some(m) = &self.simulation {
-            let _ = writeln!(
-                out,
-                "Simulated hardware: {:.3} cy / assembly iteration over {} iterations",
-                m.cycles_per_iteration, m.iterations
-            );
-        }
-        if self.unroll > 1 {
-            if let Some(cy) = self.predicted_cy_per_source_it() {
-                let _ = writeln!(
-                    out,
-                    "Combined prediction: {cy:.2} cy / source iteration (unroll {})",
-                    self.unroll
-                );
-            }
-        }
-        out
+        crate::report::emit::TEXT.emit(self)
     }
 
-    /// Machine-readable rendering (hand-rolled JSON: serde is not
-    /// vendored in the offline build).
+    /// Machine-readable JSON (versioned — see
+    /// [`crate::report::emit::SCHEMA_VERSION`]).
     pub fn to_json(&self) -> String {
-        let mut out = String::from("{");
-        push_str_field(&mut out, "name", &self.name);
-        out.push(',');
-        push_str_field(&mut out, "arch", &self.arch);
-        let _ = write!(out, ",\"unroll\":{}", self.unroll);
-        if let Some(t) = &self.throughput {
-            let _ = write!(
-                out,
-                ",\"throughput\":{{\"cy_per_asm_iter\":{},\"bottleneck_port\":",
-                fmt_f32(t.cy_per_asm_iter)
-            );
-            push_json_string(&mut out, &self.machine.ports[t.bottleneck_port]);
-            out.push_str(",\"totals\":[");
-            for (i, v) in t.totals.iter().enumerate() {
-                if i > 0 {
-                    out.push(',');
-                }
-                out.push_str(&fmt_f32(*v));
-            }
-            out.push_str("]}");
-        }
-        if let Some(c) = &self.critpath {
-            let _ = write!(
-                out,
-                ",\"critpath\":{{\"intra_iteration\":{},\"carried_per_iteration\":{}}}",
-                fmt_f32(c.intra_iteration),
-                fmt_f32(c.carried_per_iteration)
-            );
-        }
-        if let Some(b) = &self.baseline {
-            let _ = write!(
-                out,
-                ",\"baseline\":{{\"cy_per_asm_iter\":{},\"uniform_cy\":{}}}",
-                fmt_f32(b.cy_per_asm_iter),
-                fmt_f32(b.uniform_cy)
-            );
-        }
-        if let Some(m) = &self.simulation {
-            let _ = write!(
-                out,
-                ",\"simulation\":{{\"cycles_per_iteration\":{},\"iterations\":{},\
-                 \"issue_stall_cycles\":{},\"forwarded_loads\":{}}}",
-                fmt_f64(m.cycles_per_iteration),
-                m.iterations,
-                m.counters.issue_stall_cycles,
-                m.counters.forwarded_loads
-            );
-        }
-        out.push('}');
-        out
+        crate::report::emit::JSON.emit(self)
     }
-}
 
-fn fmt_f32(v: f32) -> String {
-    if v.is_finite() {
-        format!("{v}")
-    } else {
-        "null".to_string()
-    }
-}
-
-fn fmt_f64(v: f64) -> String {
-    if v.is_finite() {
-        format!("{v}")
-    } else {
-        "null".to_string()
-    }
-}
-
-fn push_str_field(out: &mut String, key: &str, value: &str) {
-    push_json_string(out, key);
-    out.push(':');
-    push_json_string(out, value);
-}
-
-fn push_json_string(out: &mut String, s: &str) {
-    out.push('"');
-    for c in s.chars() {
-        match c {
-            '"' => out.push_str("\\\""),
-            '\\' => out.push_str("\\\\"),
-            '\n' => out.push_str("\\n"),
-            '\r' => out.push_str("\\r"),
-            '\t' => out.push_str("\\t"),
-            c if (c as u32) < 0x20 => {
-                let _ = write!(out, "\\u{:04x}", c as u32);
-            }
-            c => out.push(c),
-        }
-    }
-    out.push('"');
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-
-    #[test]
-    fn json_escaping() {
-        let mut s = String::new();
-        push_json_string(&mut s, "a\"b\\c\nd");
-        assert_eq!(s, "\"a\\\"b\\\\c\\nd\"");
+    /// Machine-readable CSV (one row per bound / port total).
+    pub fn to_csv(&self) -> String {
+        crate::report::emit::CSV.emit(self)
     }
 }

@@ -6,6 +6,7 @@ use std::sync::Arc;
 use crate::asm::Kernel;
 use crate::isa::Isa;
 use crate::mdb::MachineModel;
+use crate::report::emit::Format;
 use crate::sim::SimConfig;
 
 /// The composable analysis passes an [`super::Engine`] can run over a
@@ -96,6 +97,15 @@ pub struct AnalysisRequest {
     pub isa: Option<Isa>,
     /// Which passes to run.
     pub passes: Passes,
+    /// Compute the width-aware frontend bound
+    /// `max(port pressure, rename slots / rename_width)` in the
+    /// throughput pass. Off by default so the paper-pinned skl/zen/tx2
+    /// tables stay exact; on narrow cores (the 2-wide `rv64`) it closes
+    /// the analyzer-vs-simulator gap documented in DESIGN.md §7.
+    pub frontend_bound: bool,
+    /// Output format for [`super::AnalysisReport::render`]
+    /// (default: text).
+    pub format: Format,
     /// Assembly-loop unroll factor (cycles-per-source-iteration
     /// conversions in the report).
     pub unroll: usize,
@@ -113,6 +123,8 @@ impl AnalysisRequest {
             kernel: None,
             isa: None,
             passes: Passes::ANALYTIC,
+            frontend_bound: false,
+            format: Format::Text,
             unroll: 1,
             sim: SimConfig::default(),
         }
@@ -158,6 +170,19 @@ impl AnalysisRequest {
         self
     }
 
+    /// Enable the width-aware frontend bound in the throughput pass
+    /// (default off — see [`AnalysisRequest::frontend_bound`]).
+    pub fn frontend_bound(mut self, enabled: bool) -> Self {
+        self.frontend_bound = enabled;
+        self
+    }
+
+    /// Select the report output format (default: [`Format::Text`]).
+    pub fn format(mut self, format: Format) -> Self {
+        self.format = format;
+        self
+    }
+
     /// Set the unroll factor (default 1).
     pub fn unroll(mut self, unroll: usize) -> Self {
         self.unroll = unroll.max(1);
@@ -194,10 +219,18 @@ mod tests {
             .arch("zen")
             .source(".L1:\naddl $1, %eax\njne .L1\n")
             .passes(Passes::THROUGHPUT)
+            .frontend_bound(true)
+            .format(Format::Json)
             .unroll(4);
         assert_eq!(req.arch, "zen");
         assert_eq!(req.unroll, 4);
         assert!(req.source.is_some());
         assert_eq!(req.passes, Passes::THROUGHPUT);
+        assert!(req.frontend_bound);
+        assert_eq!(req.format, Format::Json);
+        // Defaults: off / text.
+        let d = AnalysisRequest::new("d");
+        assert!(!d.frontend_bound);
+        assert_eq!(d.format, Format::Text);
     }
 }

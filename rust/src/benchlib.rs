@@ -144,26 +144,87 @@ impl BenchJson {
 
 /// Print a markdown-ish table: header + rows of equal arity.
 pub fn print_table(title: &str, header: &[&str], rows: &[Vec<String>]) {
-    println!("\n== {title} ==");
-    let ncol = header.len();
-    let mut widths: Vec<usize> = header.iter().map(|h| h.len()).collect();
-    for r in rows {
-        for (i, c) in r.iter().enumerate().take(ncol) {
-            widths[i] = widths[i].max(c.len());
+    print!("{}", format_table(crate::report::emit::Format::Text, title, header, rows));
+}
+
+/// Render a generic table in any report format (the CLI's `--format`
+/// plumbing for tabular subcommands): text reproduces [`print_table`]'s
+/// layout, JSON emits `{"title", "header", "rows"}`, CSV emits header +
+/// rows with RFC-4180 escaping (the title is dropped — CSV has no
+/// comment syntax).
+pub fn format_table(
+    format: crate::report::emit::Format,
+    title: &str,
+    header: &[&str],
+    rows: &[Vec<String>],
+) -> String {
+    use crate::report::emit::{csv_field, json_string, Format};
+    match format {
+        Format::Text => {
+            let mut out = format!("\n== {title} ==\n");
+            let ncol = header.len();
+            let mut widths: Vec<usize> = header.iter().map(|h| h.len()).collect();
+            for r in rows {
+                for (i, c) in r.iter().enumerate().take(ncol) {
+                    widths[i] = widths[i].max(c.len());
+                }
+            }
+            let fmt_row = |cells: Vec<String>| {
+                cells
+                    .iter()
+                    .enumerate()
+                    .map(|(i, c)| format!("{:>w$}", c, w = widths[i.min(ncol - 1)]))
+                    .collect::<Vec<_>>()
+                    .join(" | ")
+            };
+            out.push_str(&fmt_row(header.iter().map(|s| s.to_string()).collect()));
+            out.push('\n');
+            out.push_str(
+                &widths.iter().map(|w| "-".repeat(*w)).collect::<Vec<_>>().join("-|-"),
+            );
+            out.push('\n');
+            for r in rows {
+                out.push_str(&fmt_row(r.clone()));
+                out.push('\n');
+            }
+            out
         }
-    }
-    let fmt_row = |cells: Vec<String>| {
-        cells
-            .iter()
-            .enumerate()
-            .map(|(i, c)| format!("{:>w$}", c, w = widths[i.min(ncol - 1)]))
-            .collect::<Vec<_>>()
-            .join(" | ")
-    };
-    println!("{}", fmt_row(header.iter().map(|s| s.to_string()).collect()));
-    println!("{}", widths.iter().map(|w| "-".repeat(*w)).collect::<Vec<_>>().join("-|-"));
-    for r in rows {
-        println!("{}", fmt_row(r.clone()));
+        Format::Json => {
+            let mut out = String::from("{\"title\":");
+            out.push_str(&json_string(title));
+            out.push_str(",\"header\":[");
+            for (i, h) in header.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                out.push_str(&json_string(h));
+            }
+            out.push_str("],\"rows\":[");
+            for (i, r) in rows.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                out.push('[');
+                for (j, c) in r.iter().enumerate() {
+                    if j > 0 {
+                        out.push(',');
+                    }
+                    out.push_str(&json_string(c));
+                }
+                out.push(']');
+            }
+            out.push_str("]}");
+            out
+        }
+        Format::Csv => {
+            let mut out = header.iter().map(|h| csv_field(h)).collect::<Vec<_>>().join(",");
+            out.push('\n');
+            for r in rows {
+                out.push_str(&r.iter().map(|c| csv_field(c)).collect::<Vec<_>>().join(","));
+                out.push('\n');
+            }
+            out
+        }
     }
 }
 
@@ -213,6 +274,20 @@ mod tests {
         assert!(text.contains("\"p10_ns\""));
         assert!(text.contains("\"p90_ns\""));
         assert!(text.contains("\"kernels_per_s\": 123.456"));
+    }
+
+    #[test]
+    fn format_table_covers_all_formats() {
+        use crate::report::emit::Format;
+        let header = ["a", "b"];
+        let rows = vec![vec!["1".to_string(), "x,y".to_string()]];
+        let text = format_table(Format::Text, "t", &header, &rows);
+        assert!(text.contains("== t =="));
+        assert!(text.contains("a | "));
+        let json = format_table(Format::Json, "t", &header, &rows);
+        assert_eq!(json, "{\"title\":\"t\",\"header\":[\"a\",\"b\"],\"rows\":[[\"1\",\"x,y\"]]}");
+        let csv = format_table(Format::Csv, "t", &header, &rows);
+        assert_eq!(csv, "a,b\n1,\"x,y\"\n");
     }
 
     #[test]

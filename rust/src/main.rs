@@ -4,8 +4,9 @@
 //! layer: one machine-model registry, one batching coordinator, one
 //! request/report shape, structured errors.
 //!
-//! Subcommands:
-//!   analyze <file.s> --arch skl|zen|hsw|tx2|rv64 [--baseline] [--critpath] [--json]
+//! Subcommands (all take `--format text|json|csv`; `analyze` also
+//! takes `--frontend-bound` for the width-aware frontend bound):
+//!   analyze <file.s> --arch skl|zen|hsw|tx2|rv64 [--baseline] [--critpath] [--frontend-bound] [--json]
 //!   simulate <file.s> --arch skl|zen|tx2|rv64 [--iterations N]
 //!   ibench --instr <form> --arch skl|zen|tx2|rv64 [--conflict <form>]
 //!   build-model --instr <form> --arch skl|zen|tx2|rv64
@@ -25,12 +26,13 @@ use std::sync::Arc;
 
 use anyhow::{anyhow, bail, Context, Result};
 
-use osaca::api::{Engine, Passes};
-use osaca::benchlib::print_table;
+use osaca::api::{Engine, Format, Passes};
+use osaca::benchlib::{format_table, print_table};
 use osaca::builder::{default_probes, infer_entry, validate_model};
 use osaca::ibench::{run_conflict, run_sweep, BenchSpec};
 use osaca::isa::InstructionForm;
 use osaca::mdb::MachineModel;
+use osaca::report::emit::{csv_field, json_string};
 use osaca::report::experiments::{
     render_table1, render_table3, render_table5, table1, table3, table5,
 };
@@ -82,6 +84,27 @@ fn load_kernel(path: &str, isa: osaca::isa::Isa) -> Result<asm::Kernel> {
     asm::extract_kernel_isa(path, &src, isa)
 }
 
+/// Print a generic table in the selected `--format`.
+fn emit_table(format: Format, title: &str, header: &[&str], rows: &[Vec<String>]) {
+    let s = format_table(format, title, header, rows);
+    if format == Format::Json {
+        println!("{s}");
+    } else {
+        print!("{s}");
+    }
+}
+
+/// Print a rendered report: text keeps its trailing layout, the
+/// machine-readable formats get a final newline for shell pipelines.
+fn emit_report(report: &osaca::api::AnalysisReport) {
+    let s = report.render();
+    if report.format == Format::Json {
+        println!("{s}");
+    } else {
+        print!("{s}");
+    }
+}
+
 fn run(args: &[String]) -> Result<()> {
     let Some(cmd) = args.first() else {
         print_usage();
@@ -89,11 +112,17 @@ fn run(args: &[String]) -> Result<()> {
     };
     let rest = &args[1..];
     let (pos, opts) = parse_opts(rest);
+    // `--format text|json|csv` is accepted by every subcommand; unknown
+    // names fail fast with the structured UnsupportedFormat error.
+    let format = match opts.get("format") {
+        Some(v) => Format::parse(v).map_err(|e| anyhow!("{e}"))?,
+        None => Format::Text,
+    };
     let engine = Engine::new();
     match cmd.as_str() {
         "analyze" => {
             let path = pos.first().ok_or_else(|| {
-                anyhow!("usage: analyze <file.s> --arch skl|zen [--model file.mdb] [--learn] [--baseline] [--critpath] [--json]")
+                anyhow!("usage: analyze <file.s> --arch skl|zen [--model file.mdb] [--learn] [--baseline] [--critpath] [--frontend-bound] [--format text|json|csv]")
             })?;
             // --model loads a (possibly partial) user model file; --arch
             // still selects the hardware substrate for --learn.
@@ -107,6 +136,8 @@ fn run(args: &[String]) -> Result<()> {
                 None => hardware.clone(),
             };
             let kernel = load_kernel(path, machine.isa)?;
+            // `--json` predates `--format` and remains as an alias.
+            let format = if opts.contains_key("json") { Format::Json } else { format };
             let machine = if opts.contains_key("learn") {
                 // §III: benchmark unknown forms automatically on the
                 // hardware substrate and register the extended model.
@@ -114,13 +145,20 @@ fn run(args: &[String]) -> Result<()> {
                 let learned =
                     osaca::builder::learn_missing(&kernel, &mut learned_model, &hardware)?;
                 for inf in &learned {
-                    println!(
+                    // Progress notes must not corrupt machine-readable
+                    // stdout: route them to stderr unless in text mode.
+                    let line = format!(
                         "learned {}: lat {:.1} cy, rTP {:.2} cy/instr (probes: {:?})",
                         inf.entry.form,
                         inf.measured_latency,
                         inf.measured_rtp,
                         inf.conflicting_probes
                     );
+                    if format == Format::Text {
+                        println!("{line}");
+                    } else {
+                        eprintln!("{line}");
+                    }
                 }
                 engine.register_machine(learned_model)
             } else {
@@ -133,14 +171,14 @@ fn run(args: &[String]) -> Result<()> {
             if opts.contains_key("baseline") {
                 passes |= Passes::BASELINE;
             }
-            let req =
-                Engine::request(path).machine(machine).kernel(kernel).passes(passes);
+            let req = Engine::request(path)
+                .machine(machine)
+                .kernel(kernel)
+                .passes(passes)
+                .frontend_bound(opts.contains_key("frontend-bound"))
+                .format(format);
             let report = engine.analyze(&req).map_err(|e| anyhow!("{e}"))?;
-            if opts.contains_key("json") {
-                println!("{}", report.to_json());
-            } else {
-                print!("{}", report.to_text());
-            }
+            emit_report(&report);
         }
         "simulate" => {
             let path = pos
@@ -153,8 +191,13 @@ fn run(args: &[String]) -> Result<()> {
                 .machine(machine.clone())
                 .kernel(load_kernel(path, machine.isa)?)
                 .passes(Passes::SIMULATE)
+                .format(format)
                 .sim_config(SimConfig { iterations, warmup: iterations / 5 });
             let report = engine.analyze(&req).map_err(|e| anyhow!("{e}"))?;
+            if format != Format::Text {
+                emit_report(&report);
+                return Ok(());
+            }
             let m = report.simulation.as_ref().expect("simulation pass ran");
             println!(
                 "{}: {:.3} cy / assembly iteration over {} measured iterations",
@@ -197,10 +240,29 @@ fn run(args: &[String]) -> Result<()> {
             if let Some(other) = opts.get("conflict") {
                 let b = BenchSpec::parse(other);
                 let r = run_conflict(&spec, &b, &machine)?;
+                if format != Format::Text {
+                    emit_table(
+                        format,
+                        "ibench conflict",
+                        &["benchmark", "cy_per_instr"],
+                        &[vec![r.label.clone(), format!("{:.3}", r.cy_per_instr)]],
+                    );
+                    return Ok(());
+                }
                 println!("Using frequency {:.2}GHz.", machine.frequency_ghz);
                 println!("{}:  {:.3} (clk cy)", r.label, r.cy_per_instr);
             } else {
                 let sweep = run_sweep(&spec, &machine)?;
+                if format != Format::Text {
+                    let mut rows =
+                        vec![vec![format!("{}-1", sweep.form), format!("{:.3}", sweep.latency)]];
+                    for (k, cy) in &sweep.points {
+                        rows.push(vec![format!("{}-{k}", sweep.form), format!("{cy:.3}")]);
+                    }
+                    rows.push(vec![format!("{}-TP", sweep.form), format!("{:.3}", sweep.tp)]);
+                    emit_table(format, "ibench sweep", &["benchmark", "cy_per_instr"], &rows);
+                    return Ok(());
+                }
                 print!("{}", sweep.render(machine.frequency_ghz));
             }
         }
@@ -212,11 +274,6 @@ fn run(args: &[String]) -> Result<()> {
             let form = InstructionForm::parse(instr);
             let probes = default_probes(&machine);
             let inf = infer_entry(&form, &machine, &probes)?;
-            println!(
-                "measured: latency {:.2} cy, rTP {:.3} cy/instr",
-                inf.measured_latency, inf.measured_rtp
-            );
-            println!("conflicting probes: {:?}", inf.conflicting_probes);
             let mut m2 = machine.as_ref().clone();
             m2.entries.clear();
             m2.insert(inf.entry.clone());
@@ -226,6 +283,26 @@ fn run(args: &[String]) -> Result<()> {
                 .find(|l| l.starts_with("entry"))
                 .unwrap_or_default()
                 .to_string();
+            if format != Format::Text {
+                emit_table(
+                    format,
+                    "build-model",
+                    &["form", "latency_cy", "rtp_cy_per_instr", "conflicting_probes", "entry"],
+                    &[vec![
+                        inf.entry.form.to_string(),
+                        format!("{:.2}", inf.measured_latency),
+                        format!("{:.3}", inf.measured_rtp),
+                        format!("{:?}", inf.conflicting_probes),
+                        line,
+                    ]],
+                );
+                return Ok(());
+            }
+            println!(
+                "measured: latency {:.2} cy, rTP {:.3} cy/instr",
+                inf.measured_latency, inf.measured_rtp
+            );
+            println!("conflicting probes: {:?}", inf.conflicting_probes);
             println!("database entry: {line}");
         }
         "validate-model" => {
@@ -257,7 +334,8 @@ fn run(args: &[String]) -> Result<()> {
                     ]
                 })
                 .collect();
-            print_table(
+            emit_table(
+                format,
                 &format!("model validation ({})", machine.name),
                 &["form", "db lat", "meas lat", "db rTP", "meas rTP", "ports", "verdict"],
                 &table,
@@ -272,8 +350,15 @@ fn run(args: &[String]) -> Result<()> {
                 .machine(machine.clone())
                 .kernel(load_kernel(path, machine.isa)?)
                 .passes(Passes::ALL)
+                .format(format)
                 .unroll(unroll);
             let r = engine.analyze(&req).map_err(|e| anyhow!("{e}"))?;
+            if format != Format::Text {
+                // The report carries all four passes; the emitters
+                // already speak the bound vocabulary.
+                emit_report(&r);
+                return Ok(());
+            }
             let osaca = r.throughput.as_ref().expect("throughput pass");
             let baseline = r.baseline.as_ref().expect("baseline pass");
             let critpath = r.critpath.as_ref().expect("critpath pass");
@@ -307,21 +392,29 @@ fn run(args: &[String]) -> Result<()> {
         }
         "tables" => {
             let coord = engine.coordinator();
-            let all = opts.contains_key("all") || opts.is_empty();
+            // No table selector (only e.g. `--format`) means all.
+            let all = opts.contains_key("all")
+                || !["table1", "table3", "table5"].iter().any(|t| opts.contains_key(*t));
             let cfg = SimConfig::default();
+            let mut selected: Vec<(&str, Vec<&str>, Vec<Vec<String>>)> = Vec::new();
             if all || opts.contains_key("table1") {
-                let rows = table1(coord)?;
-                print_table(
+                selected.push((
                     "Table I: triad throughput analyses (cy per assembly iteration)",
-                    &["compiled for", "flag", "unroll", "OSACA Zen", "OSACA SKL", "IACA-like SKL"],
-                    &render_table1(&rows),
-                );
+                    vec![
+                        "compiled for",
+                        "flag",
+                        "unroll",
+                        "OSACA Zen",
+                        "OSACA SKL",
+                        "IACA-like SKL",
+                    ],
+                    render_table1(&table1(coord)?),
+                ));
             }
             if all || opts.contains_key("table3") {
-                let rows = table3(coord, cfg)?;
-                print_table(
+                selected.push((
                     "Table III: triad measured (simulator @1.8GHz) vs predictions",
-                    &[
+                    vec![
                         "executed on",
                         "compiled for",
                         "flag",
@@ -332,29 +425,106 @@ fn run(args: &[String]) -> Result<()> {
                         "OSACA cy/it",
                         "IACA-like cy/it",
                     ],
-                    &render_table3(&rows),
-                );
+                    render_table3(&table3(coord, cfg)?),
+                ));
             }
             if all || opts.contains_key("table5") {
-                let rows = table5(coord, cfg)?;
-                print_table(
+                selected.push((
                     "Table V: pi benchmark predictions vs measurement",
-                    &["arch", "flag", "IACA-like", "OSACA", "measured cy/it", "stall cy"],
-                    &render_table5(&rows),
-                );
+                    vec!["arch", "flag", "IACA-like", "OSACA", "measured cy/it", "stall cy"],
+                    render_table5(&table5(coord, cfg)?),
+                ));
+            }
+            match format {
+                Format::Json => {
+                    // One JSON document, not one per table — consumers
+                    // pipe this straight into json.tool / jq.
+                    let docs: Vec<String> = selected
+                        .iter()
+                        .map(|(title, header, rows)| format_table(format, title, header, rows))
+                        .collect();
+                    println!("{{\"tables\":[{}]}}", docs.join(","));
+                }
+                Format::Csv => {
+                    // CSV has no multi-table framing: concatenating
+                    // tables with different headers/arities would be a
+                    // ragged stream, so require one table per document.
+                    if selected.len() > 1 {
+                        bail!(
+                            "--format csv emits one table per document; select one of \
+                             --table1 | --table3 | --table5 (or use --format json for all)"
+                        );
+                    }
+                    for (title, header, rows) in &selected {
+                        emit_table(format, title, header, rows);
+                    }
+                }
+                Format::Text => {
+                    for (title, header, rows) in &selected {
+                        emit_table(format, title, header, rows);
+                    }
+                }
             }
         }
         "figures" => {
-            for arch in ["skl", "zen"] {
-                let m = engine.machine(arch).map_err(|e| anyhow!("{e}"))?;
-                println!("{}", render_port_diagram(&m));
+            match format {
+                Format::Text => {
+                    for arch in ["skl", "zen"] {
+                        let m = engine.machine(arch).map_err(|e| anyhow!("{e}"))?;
+                        println!("{}", render_port_diagram(&m));
+                    }
+                }
+                Format::Json => {
+                    let mut out = String::from("{\"figures\":[");
+                    for (i, arch) in ["skl", "zen"].iter().enumerate() {
+                        let m = engine.machine(arch).map_err(|e| anyhow!("{e}"))?;
+                        if i > 0 {
+                            out.push(',');
+                        }
+                        out.push_str("{\"arch\":");
+                        out.push_str(&json_string(arch));
+                        out.push_str(",\"diagram\":");
+                        out.push_str(&json_string(&render_port_diagram(&m)));
+                        out.push('}');
+                    }
+                    out.push_str("]}");
+                    println!("{out}");
+                }
+                Format::Csv => {
+                    println!("arch,diagram");
+                    for arch in ["skl", "zen"] {
+                        let m = engine.machine(arch).map_err(|e| anyhow!("{e}"))?;
+                        println!("{arch},{}", csv_field(&render_port_diagram(&m)));
+                    }
+                }
             }
         }
         "serve" => {
             let n: usize = opts.get("requests").map(|v| v.parse()).transpose()?.unwrap_or(64);
-            serve_demo(&engine, n)?;
+            serve_demo(&engine, n, format)?;
         }
         "list-workloads" => {
+            if format != Format::Text {
+                let rows: Vec<Vec<String>> = workloads::all_isa()
+                    .iter()
+                    .map(|w| {
+                        vec![
+                            w.name(),
+                            w.isa.name().to_string(),
+                            w.compiled_for.to_string(),
+                            w.unroll.to_string(),
+                            w.flops_per_it.to_string(),
+                        ]
+                    })
+                    .collect();
+                emit_table(
+                    format,
+                    "workloads",
+                    &["name", "isa", "compiled_for", "unroll", "flops_per_it"],
+                    &rows,
+                );
+                return Ok(());
+            }
             for w in workloads::all_isa() {
                 println!(
                     "{:<16} isa={:<8} compiled-for={:<4} unroll={} flops/it={}",
@@ -376,7 +546,7 @@ fn run(args: &[String]) -> Result<()> {
 
 /// Drive the coordinator's true batch path with a request mix and
 /// report service statistics (the serving-framework face of the repo).
-fn serve_demo(engine: &Engine, n: usize) -> Result<()> {
+fn serve_demo(engine: &Engine, n: usize, format: Format) -> Result<()> {
     let ws = workloads::all();
     let reqs: Vec<_> = (0..n)
         .map(|i| {
@@ -398,6 +568,21 @@ fn serve_demo(engine: &Engine, n: usize) -> Result<()> {
         }
     }
     let stats = engine.stats();
+    if format != Format::Text {
+        emit_table(
+            format,
+            "serve",
+            &["requests", "req_per_s", "batches", "avg_batch_size", "solve_micros"],
+            &[vec![
+                n.to_string(),
+                format!("{:.0}", n as f64 / dt.as_secs_f64()),
+                stats.batches.load(std::sync::atomic::Ordering::Relaxed).to_string(),
+                format!("{:.2}", stats.avg_batch_size()),
+                stats.solve_micros.load(std::sync::atomic::Ordering::Relaxed).to_string(),
+            ]],
+        );
+        return Ok(());
+    }
     println!(
         "served {n} analysis requests in {dt:?} ({:.0} req/s)",
         n as f64 / dt.as_secs_f64()
@@ -417,8 +602,8 @@ fn print_usage() {
 
 usage: osaca <command> [options]
 
-commands:
-  analyze <file.s> --arch skl|zen|hsw|tx2|rv64 [--learn] [--baseline] [--critpath] [--json]
+commands (all accept --format text|json|csv):
+  analyze <file.s> --arch skl|zen|hsw|tx2|rv64 [--learn] [--baseline] [--critpath] [--frontend-bound]
   simulate <file.s> --arch skl|zen|tx2|rv64 [--iterations N]
   ibench --instr <form> --arch skl|zen|tx2|rv64 [--conflict <form>]
   build-model --instr <form> --arch skl|zen|tx2|rv64

@@ -1,0 +1,427 @@
+//! Pluggable report emitters: one [`Emitter`] trait, three built-in
+//! implementations.
+//!
+//! * [`Text`] — the human-readable report: the paper-style occupancy
+//!   table plus one line per section. With the frontend bound disabled
+//!   (the default) its output is byte-for-byte what the pre-emitter
+//!   `to_text` produced, so the paper-pinned table snapshots stay
+//!   exact.
+//! * [`Json`] — versioned machine-readable output (hand-rolled: serde
+//!   is not vendored in the offline build). [`SCHEMA_VERSION`] is bumped
+//!   whenever the key shape changes; `tests/report_formats.rs` pins the
+//!   version-1 key set so a shape change without a bump fails CI.
+//! * [`Csv`] — flat rows (one per bound / port total) for spreadsheet
+//!   and shell-pipeline consumers.
+//!
+//! Emitters are selected per request (`AnalysisRequest::format`) or on
+//! the CLI via `--format text|json|csv`; unknown names fail with the
+//! structured `OsacaError::UnsupportedFormat`.
+
+use std::fmt::Write as _;
+
+use crate::api::{AnalysisReport, Bound, OsacaError};
+use crate::report::render_occupancy;
+
+/// Version of the machine-readable report schema (JSON `schema_version`
+/// field, CSV first column). Bump on any change to the emitted key
+/// shape; numeric values may change freely.
+pub const SCHEMA_VERSION: u32 = 1;
+
+/// The built-in output formats.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum Format {
+    #[default]
+    Text,
+    Json,
+    Csv,
+}
+
+impl Format {
+    pub const ALL: [Format; 3] = [Format::Text, Format::Json, Format::Csv];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Format::Text => "text",
+            Format::Json => "json",
+            Format::Csv => "csv",
+        }
+    }
+
+    /// Parse a format name (CLI `--format` value). Unknown names
+    /// produce the structured error listing what is supported.
+    pub fn parse(name: &str) -> Result<Format, OsacaError> {
+        Format::ALL
+            .into_iter()
+            .find(|f| f.name().eq_ignore_ascii_case(name))
+            .ok_or_else(|| OsacaError::UnsupportedFormat {
+                requested: name.to_string(),
+                supported: Format::ALL.iter().map(|f| f.name().to_string()).collect(),
+            })
+    }
+
+    /// The emitter implementing this format.
+    pub fn emitter(self) -> &'static dyn Emitter {
+        match self {
+            Format::Text => &TEXT,
+            Format::Json => &JSON,
+            Format::Csv => &CSV,
+        }
+    }
+}
+
+/// A report emitter. The three built-ins cover text/JSON/CSV; the trait
+/// is public so embedders can render an [`AnalysisReport`] into their
+/// own wire format with the same signature.
+pub trait Emitter: Sync {
+    /// The format this emitter implements (diagnostics, dispatch).
+    fn format(&self) -> Format;
+
+    /// Serialize one report.
+    fn emit(&self, report: &AnalysisReport) -> String;
+}
+
+/// Human-readable text (the default; paper-style table layout).
+pub struct Text;
+/// Versioned machine-readable JSON.
+pub struct Json;
+/// Flat machine-readable CSV.
+pub struct Csv;
+
+pub static TEXT: Text = Text;
+pub static JSON: Json = Json;
+pub static CSV: Csv = Csv;
+
+impl Emitter for Text {
+    fn format(&self) -> Format {
+        Format::Text
+    }
+
+    fn emit(&self, r: &AnalysisReport) -> String {
+        let mut out = String::new();
+        let _ = writeln!(out, "=== {} on {} ({}) ===", r.name, r.machine.arch_name, r.arch);
+        let mut frontend_on = false;
+        if let Some(t) = &r.throughput {
+            out.push_str(&render_occupancy(t, &r.machine));
+            if let Some(f) = &t.frontend {
+                frontend_on = true;
+                let _ = writeln!(
+                    out,
+                    "Width-aware frontend bound: {:.2} cy / assembly iteration ({})",
+                    f.cy_per_asm_iter,
+                    crate::sim::frontend_resource_label(f.slots, f.width)
+                );
+            }
+        }
+        if let Some(c) = &r.critpath {
+            let _ = writeln!(
+                out,
+                "Critical path: {:.2} cy intra-iteration, {:.2} cy/it loop-carried bound",
+                c.intra_iteration, c.carried_per_iteration
+            );
+        }
+        if let Some(b) = &r.baseline {
+            let _ = writeln!(
+                out,
+                "Balanced (IACA-like) baseline: {:.2} cy / assembly iteration (uniform {:.2})",
+                b.cy_per_asm_iter, b.uniform_cy
+            );
+        }
+        if let Some(m) = &r.simulation {
+            let _ = writeln!(
+                out,
+                "Simulated hardware: {:.3} cy / assembly iteration over {} iterations",
+                m.cycles_per_iteration, m.iterations
+            );
+        }
+        // One decomposition serves both closing lines. The winner line
+        // only appears alongside the opt-in frontend bound, so default
+        // text output is unchanged from the pre-emitter layout.
+        if frontend_on || r.unroll > 1 {
+            let p = r.prediction();
+            if frontend_on {
+                if let Some(w) = p.winner() {
+                    let _ = writeln!(
+                        out,
+                        "Prediction: {:.2} cy / assembly iteration — {} bound ({})",
+                        w.cy_per_asm_iter,
+                        w.kind.name(),
+                        w.resource
+                    );
+                }
+            }
+            if r.unroll > 1 {
+                if let Some(cy) = p.cy_per_source_it() {
+                    let _ = writeln!(
+                        out,
+                        "Combined prediction: {cy:.2} cy / source iteration (unroll {})",
+                        r.unroll
+                    );
+                }
+            }
+        }
+        out
+    }
+}
+
+impl Emitter for Json {
+    fn format(&self) -> Format {
+        Format::Json
+    }
+
+    fn emit(&self, r: &AnalysisReport) -> String {
+        let p = r.prediction();
+        let mut out = String::from("{");
+        let _ = write!(out, "\"schema_version\":{SCHEMA_VERSION},");
+        push_str_field(&mut out, "name", &r.name);
+        out.push(',');
+        push_str_field(&mut out, "arch", &r.arch);
+        out.push(',');
+        push_str_field(&mut out, "isa", r.machine.isa.name());
+        let _ = write!(out, ",\"unroll\":{}", r.unroll);
+        out.push_str(",\"prediction\":{");
+        match p.winner() {
+            Some(w) => {
+                let _ = write!(
+                    out,
+                    "\"cy_per_asm_iter\":{},\"cy_per_source_iter\":{},",
+                    fmt_f32(w.cy_per_asm_iter),
+                    fmt_f32(w.cy_per_asm_iter / r.unroll.max(1) as f32)
+                );
+                out.push_str("\"bound\":");
+                push_json_string(&mut out, w.kind.name());
+                out.push_str(",\"resource\":");
+                push_json_string(&mut out, &w.resource);
+            }
+            None => out.push_str(
+                "\"cy_per_asm_iter\":null,\"cy_per_source_iter\":null,\
+                 \"bound\":null,\"resource\":null",
+            ),
+        }
+        out.push_str(",\"bounds\":[");
+        for (i, b) in p.bounds.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            push_bound(&mut out, b);
+        }
+        out.push_str("]}");
+        if let Some(t) = &r.throughput {
+            let _ = write!(
+                out,
+                ",\"throughput\":{{\"cy_per_asm_iter\":{},\"bottleneck_port\":",
+                fmt_f32(t.cy_per_asm_iter)
+            );
+            push_json_string(&mut out, &r.machine.ports[t.bottleneck_port]);
+            out.push_str(",\"totals\":[");
+            for (i, v) in t.totals.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                out.push_str(&fmt_f32(*v));
+            }
+            out.push(']');
+            if let Some(f) = &t.frontend {
+                let _ = write!(
+                    out,
+                    ",\"frontend\":{{\"slots\":{},\"rename_width\":{},\"cy_per_asm_iter\":{}}}",
+                    f.slots,
+                    f.width,
+                    fmt_f32(f.cy_per_asm_iter)
+                );
+            }
+            out.push('}');
+        }
+        if let Some(c) = &r.critpath {
+            let _ = write!(
+                out,
+                ",\"critpath\":{{\"intra_iteration\":{},\"carried_per_iteration\":{}}}",
+                fmt_f32(c.intra_iteration),
+                fmt_f32(c.carried_per_iteration)
+            );
+        }
+        if let Some(b) = &r.baseline {
+            let _ = write!(
+                out,
+                ",\"baseline\":{{\"cy_per_asm_iter\":{},\"uniform_cy\":{}}}",
+                fmt_f32(b.cy_per_asm_iter),
+                fmt_f32(b.uniform_cy)
+            );
+        }
+        if let Some(m) = &r.simulation {
+            let _ = write!(
+                out,
+                ",\"simulation\":{{\"cycles_per_iteration\":{},\"iterations\":{},\
+                 \"issue_stall_cycles\":{},\"forwarded_loads\":{}}}",
+                fmt_f64(m.cycles_per_iteration),
+                m.iterations,
+                m.counters.issue_stall_cycles,
+                m.counters.forwarded_loads
+            );
+        }
+        out.push('}');
+        out
+    }
+}
+
+fn push_bound(out: &mut String, b: &Bound) {
+    out.push_str("{\"kind\":");
+    push_json_string(out, b.kind.name());
+    out.push_str(",\"resource\":");
+    push_json_string(out, &b.resource);
+    let _ = write!(out, ",\"cy_per_asm_iter\":{},\"source\":", fmt_f32(b.cy_per_asm_iter));
+    push_json_string(out, b.source.name());
+    let _ = write!(out, ",\"model_bound\":{}}}", b.kind.is_model_bound());
+}
+
+impl Emitter for Csv {
+    fn format(&self) -> Format {
+        Format::Csv
+    }
+
+    fn emit(&self, r: &AnalysisReport) -> String {
+        let p = r.prediction();
+        let mut out = String::from(
+            "schema_version,name,arch,isa,unroll,record,kind,resource,cy_per_asm_iter\n",
+        );
+        let prefix = format!(
+            "{SCHEMA_VERSION},{},{},{},{}",
+            csv_field(&r.name),
+            csv_field(&r.arch),
+            r.machine.isa.name(),
+            r.unroll
+        );
+        for b in &p.bounds {
+            let record = if b.kind.is_model_bound() { "bound" } else { "observation" };
+            let _ = writeln!(
+                out,
+                "{prefix},{record},{},{},{}",
+                b.kind.name(),
+                csv_field(&b.resource),
+                fmt_f32(b.cy_per_asm_iter)
+            );
+        }
+        if let Some(w) = p.winner() {
+            let _ = writeln!(
+                out,
+                "{prefix},prediction,{},{},{}",
+                w.kind.name(),
+                csv_field(&w.resource),
+                fmt_f32(w.cy_per_asm_iter)
+            );
+        }
+        if let Some(t) = &r.throughput {
+            for (i, v) in t.totals.iter().enumerate() {
+                let _ = writeln!(
+                    out,
+                    "{prefix},port_total,port,{},{}",
+                    csv_field(&r.machine.ports[i]),
+                    fmt_f32(*v)
+                );
+            }
+        }
+        out
+    }
+}
+
+/// Shortest-roundtrip float rendering; non-finite values become `null`
+/// so JSON output always parses.
+pub(crate) fn fmt_f32(v: f32) -> String {
+    if v.is_finite() {
+        format!("{v}")
+    } else {
+        "null".to_string()
+    }
+}
+
+pub(crate) fn fmt_f64(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v}")
+    } else {
+        "null".to_string()
+    }
+}
+
+fn push_str_field(out: &mut String, key: &str, value: &str) {
+    push_json_string(out, key);
+    out.push(':');
+    push_json_string(out, value);
+}
+
+/// Append `s` as a JSON string literal (quotes, escapes).
+pub fn push_json_string(out: &mut String, s: &str) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+/// `s` as a JSON string literal.
+pub fn json_string(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    push_json_string(&mut out, s);
+    out
+}
+
+/// Escape one CSV field (RFC 4180: quote when it contains a comma,
+/// quote or newline; double embedded quotes).
+pub fn csv_field(s: &str) -> String {
+    if s.contains([',', '"', '\n', '\r']) {
+        format!("\"{}\"", s.replace('"', "\"\""))
+    } else {
+        s.to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_escaping() {
+        let mut s = String::new();
+        push_json_string(&mut s, "a\"b\\c\nd");
+        assert_eq!(s, "\"a\\\"b\\\\c\\nd\"");
+    }
+
+    #[test]
+    fn csv_escaping() {
+        assert_eq!(csv_field("plain"), "plain");
+        assert_eq!(csv_field("a,b"), "\"a,b\"");
+        assert_eq!(csv_field("q\"q"), "\"q\"\"q\"");
+    }
+
+    #[test]
+    fn format_parse_round_trips_and_rejects() {
+        for f in Format::ALL {
+            assert_eq!(Format::parse(f.name()).unwrap(), f);
+            assert_eq!(f.emitter().format(), f);
+        }
+        assert_eq!(Format::parse("JSON").unwrap(), Format::Json);
+        match Format::parse("yaml") {
+            Err(OsacaError::UnsupportedFormat { requested, supported }) => {
+                assert_eq!(requested, "yaml");
+                assert_eq!(supported, vec!["text", "json", "csv"]);
+            }
+            other => panic!("expected UnsupportedFormat, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn float_rendering_is_shortest_and_null_safe() {
+        assert_eq!(fmt_f32(2.0), "2");
+        assert_eq!(fmt_f32(1.25), "1.25");
+        assert_eq!(fmt_f32(f32::NAN), "null");
+        assert_eq!(fmt_f64(f64::INFINITY), "null");
+    }
+}

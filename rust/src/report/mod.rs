@@ -1,5 +1,7 @@
-//! Report rendering: the paper's tables and port-model figures.
+//! Report rendering: the paper's tables and port-model figures, plus
+//! the pluggable text/JSON/CSV emitters (`emit`).
 
+pub mod emit;
 pub mod experiments;
 
 use crate::analyzer::Analysis;

@@ -52,6 +52,9 @@ pub struct Measurement {
     pub port_busy: Vec<u64>,
     /// Cycles in the measured window.
     pub window_cycles: u64,
+    /// Fused rename/retire slots one iteration occupies (the frontend
+    /// bandwidth unit — see `DecodedKernel::total_slots`).
+    pub slots_per_iteration: usize,
 }
 
 impl Measurement {
@@ -65,6 +68,47 @@ impl Measurement {
     pub fn cy_per_source_it(&self, unroll: usize) -> f64 {
         self.cycles_per_iteration / unroll as f64
     }
+
+    /// Name the resource that bounded the measured window, in the same
+    /// vocabulary the analytic `Bound`s use: the busiest port when its
+    /// per-iteration busy cycles saturate the iteration period (within
+    /// half a cycle of slack for warm-up ripple); otherwise the
+    /// frontend when the rename-slot bound `slots / rename_width`
+    /// accounts for the period (e.g. the 2-wide `rv64` triad: LS busy
+    /// 3.0 cy under a 4.0 cy = 8/2 period); otherwise a dependency
+    /// chain — nothing structural saturated, so latency did.
+    pub fn bottleneck_resource(&self, machine: &MachineModel) -> String {
+        let iters = self.iterations.max(1) as f64;
+        let mut best = 0usize;
+        let mut best_busy = f64::NEG_INFINITY;
+        for (p, &b) in self.port_busy.iter().enumerate() {
+            let busy = b as f64 / iters;
+            // >= : last of equals, matching the analyzer convention.
+            if busy >= best_busy {
+                best_busy = busy;
+                best = p;
+            }
+        }
+        if !self.port_busy.is_empty() && best_busy + 0.5 >= self.cycles_per_iteration {
+            return machine.ports[best].clone();
+        }
+        let width = machine.params.rename_width.max(1);
+        let frontend_cy = self.slots_per_iteration as f64 / width as f64;
+        if frontend_cy + 0.5 >= self.cycles_per_iteration {
+            frontend_resource_label(self.slots_per_iteration, width)
+        } else {
+            "dependency chain".to_string()
+        }
+    }
+}
+
+/// The canonical resource label for a frontend (rename-width) bound,
+/// e.g. `"8 slots / 2-wide"`. One definition on purpose: the analyzer's
+/// `FrontendBound`, the simulator's [`Measurement::bottleneck_resource`]
+/// and the report emitters must all speak the identical string so
+/// prediction and measurement are comparable in JSON/CSV output.
+pub fn frontend_resource_label(slots: usize, width: usize) -> String {
+    format!("{slots} slots / {width}-wide")
 }
 
 #[derive(Debug, Clone, PartialEq, Eq, Hash)]
@@ -497,6 +541,7 @@ fn run_core(
         counters: wcounters,
         port_busy: wports,
         window_cycles,
+        slots_per_iteration: total_slots,
     }
 }
 
@@ -591,6 +636,20 @@ mod tests {
         let ra = a.counters.issue_stall_cycles as f64 / a.window_cycles as f64;
         let rb = b.counters.issue_stall_cycles as f64 / b.window_cycles as f64;
         assert!(ra > 4.0 * rb.max(0.01), "stall ratios {ra} vs {rb}");
+    }
+
+    #[test]
+    fn bottleneck_resource_names_port_or_frontend() {
+        // Divider-serialized: the DV pseudo-pipe saturates the period.
+        let skl = skylake();
+        let src = "\n.L1:\nvdivsd %xmm1, %xmm2, %xmm0\ncmpl $1, %eax\njne .L1\n";
+        let m = measure(src, &skl);
+        assert_eq!(m.bottleneck_resource(&skl), "0DV");
+        // Latency-bound chain: no port saturates and the rename-slot
+        // bound (4 slots / 4-wide = 1 cy) is far under the 9 cy period.
+        let src = "\n.L2:\nvaddsd (%rsp), %xmm0, %xmm5\nvmovsd %xmm5, (%rsp)\naddl $1, %eax\ncmpl $100, %eax\njne .L2\n";
+        let m = measure(src, &skl);
+        assert_eq!(m.bottleneck_resource(&skl), "dependency chain");
     }
 
     #[test]

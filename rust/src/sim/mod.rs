@@ -23,5 +23,5 @@ pub mod core;
 pub mod decode;
 pub mod trace;
 
-pub use core::{run_decoded, simulate, Measurement, SimConfig};
+pub use core::{frontend_resource_label, run_decoded, simulate, Measurement, SimConfig};
 pub use decode::{decode_kernel, DecodedIter, DecodedKernel, SimUop};

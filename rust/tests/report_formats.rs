@@ -1,0 +1,450 @@
+//! ISSUE-5: the machine-readable report emitters.
+//!
+//! * Golden-file snapshots of the JSON and CSV emitters for one x86 and
+//!   one RISC-V fixture (the rv64 one with the width-aware frontend
+//!   bound on, so the full bound decomposition is pinned byte-for-byte).
+//! * A schema lock: the version-1 JSON key set is pinned, so changing
+//!   the emitted shape without bumping `SCHEMA_VERSION` (and this test)
+//!   fails CI.
+//! * A hand-rolled JSON validity check over every workload fixture ×
+//!   matching built-in model — the in-test half of ci.sh's
+//!   `--format json | python3 -m json.tool` sweep.
+
+use osaca::api::{AnalysisReport, BoundKind, Engine, Format, OsacaError, Passes, SCHEMA_VERSION};
+use osaca::sim::SimConfig;
+use osaca::workloads;
+
+fn skl_triad_report(engine: &Engine) -> AnalysisReport {
+    let w = workloads::find("triad", "skl", "-O3").unwrap();
+    engine
+        .analyze(
+            &Engine::request(&w.name())
+                .arch("skl")
+                .source(w.source)
+                .passes(Passes::THROUGHPUT)
+                .unroll(w.unroll),
+        )
+        .unwrap()
+}
+
+fn rv64_triad_report(engine: &Engine) -> AnalysisReport {
+    let w = workloads::find("triad", "rv64", "-O2").unwrap();
+    engine
+        .analyze(
+            &Engine::request(&w.name())
+                .arch("rv64")
+                .source(w.source)
+                .passes(Passes::THROUGHPUT | Passes::CRITPATH)
+                .frontend_bound(true)
+                .unroll(w.unroll),
+        )
+        .unwrap()
+}
+
+#[test]
+fn json_golden_skl_triad() {
+    let engine = Engine::cpu_only();
+    let got = skl_triad_report(&engine).to_json();
+    let want = include_str!("golden/skl_triad.json");
+    assert_eq!(got.trim_end(), want.trim_end());
+}
+
+#[test]
+fn json_golden_rv64_triad() {
+    let engine = Engine::cpu_only();
+    let got = rv64_triad_report(&engine).to_json();
+    let want = include_str!("golden/rv64_triad.json");
+    assert_eq!(got.trim_end(), want.trim_end());
+}
+
+#[test]
+fn csv_golden_skl_triad() {
+    let engine = Engine::cpu_only();
+    let got = skl_triad_report(&engine).to_csv();
+    let want = include_str!("golden/skl_triad.csv");
+    assert_eq!(got.trim_end(), want.trim_end());
+}
+
+#[test]
+fn csv_golden_rv64_triad() {
+    let engine = Engine::cpu_only();
+    let got = rv64_triad_report(&engine).to_csv();
+    let want = include_str!("golden/rv64_triad.csv");
+    assert_eq!(got.trim_end(), want.trim_end());
+}
+
+/// The version-1 key set. Changing the JSON shape requires bumping
+/// `SCHEMA_VERSION` *and* pinning the new set here — one without the
+/// other fails.
+#[test]
+fn schema_version_pins_json_shape() {
+    const V1_KEYS: &[&str] = &[
+        "arch",
+        "baseline",
+        "bottleneck_port",
+        "bound",
+        "bounds",
+        "carried_per_iteration",
+        "critpath",
+        "cy_per_asm_iter",
+        "cy_per_source_iter",
+        "cycles_per_iteration",
+        "forwarded_loads",
+        "frontend",
+        "intra_iteration",
+        "isa",
+        "issue_stall_cycles",
+        "iterations",
+        "kind",
+        "model_bound",
+        "name",
+        "prediction",
+        "rename_width",
+        "resource",
+        "schema_version",
+        "simulation",
+        "slots",
+        "source",
+        "throughput",
+        "totals",
+        "uniform_cy",
+        "unroll",
+    ];
+    // This test pins version 1. A schema bump invalidates it by
+    // construction: update SCHEMA_VERSION, this constant and the pinned
+    // key list together.
+    assert_eq!(SCHEMA_VERSION, 1, "schema bumped: re-pin the key set for the new version");
+    // A report with every section present (all passes + frontend
+    // bound) must emit exactly the pinned keys.
+    let engine = Engine::cpu_only();
+    let w = workloads::find("triad", "skl", "-O3").unwrap();
+    let report = engine
+        .analyze(
+            &Engine::request(&w.name())
+                .arch("skl")
+                .source(w.source)
+                .passes(Passes::ALL)
+                .frontend_bound(true)
+                .sim_config(SimConfig { iterations: 120, warmup: 30 })
+                .unroll(w.unroll),
+        )
+        .unwrap();
+    assert!(report.baseline.is_some() && report.simulation.is_some());
+    let mut keys = json_keys(&report.to_json());
+    keys.sort();
+    keys.dedup();
+    assert_eq!(keys, V1_KEYS, "JSON shape changed without a SCHEMA_VERSION bump");
+}
+
+/// Every fixture × matching built-in model emits valid JSON and
+/// rectangular CSV (the library-side half of ci.sh's isa-smoke JSON
+/// leg, which additionally round-trips through `python3 -m json.tool`).
+#[test]
+fn emitters_are_well_formed_for_every_fixture_and_model() {
+    let engine = Engine::cpu_only();
+    let mut checked = 0;
+    for w in workloads::all_isa() {
+        for arch in ["skl", "zen", "hsw", "tx2", "rv64"] {
+            let model = engine.machine(arch).unwrap();
+            if model.isa != w.isa {
+                continue;
+            }
+            let report = match engine.analyze(
+                &Engine::request(&w.name())
+                    .arch(arch)
+                    .source(w.source)
+                    .passes(Passes::THROUGHPUT | Passes::CRITPATH)
+                    .frontend_bound(true)
+                    .unroll(w.unroll),
+            ) {
+                Ok(r) => r,
+                // Cross-model x86 cases that genuinely cannot resolve
+                // are not emitter bugs; the ci.sh sweep pins which
+                // combinations must analyze.
+                Err(OsacaError::UnresolvedForm { .. }) => continue,
+                Err(e) => panic!("{}/{arch}: {e}", w.name()),
+            };
+            let json = report.to_json();
+            validate_json(&json).unwrap_or_else(|e| panic!("{}/{arch}: {e}\n{json}", w.name()));
+            let csv = report.to_csv();
+            let mut lines = csv.lines();
+            let header_cols = lines.next().unwrap().split(',').count();
+            assert_eq!(header_cols, 9, "{}/{arch}: header arity", w.name());
+            for l in lines {
+                assert_eq!(
+                    split_csv(l).len(),
+                    header_cols,
+                    "{}/{arch}: ragged CSV row `{l}`",
+                    w.name()
+                );
+            }
+            checked += 1;
+        }
+    }
+    assert!(checked >= 16, "only {checked} fixture×model combinations checked");
+}
+
+#[test]
+fn unknown_format_is_a_structured_error() {
+    match Format::parse("yaml") {
+        Err(OsacaError::UnsupportedFormat { requested, supported }) => {
+            assert_eq!(requested, "yaml");
+            assert!(supported.contains(&"json".to_string()));
+        }
+        other => panic!("expected UnsupportedFormat, got {other:?}"),
+    }
+}
+
+/// `render()` follows the request's emitter selection.
+#[test]
+fn render_honors_requested_format() {
+    let engine = Engine::cpu_only();
+    let w = workloads::find("triad", "skl", "-O3").unwrap();
+    let base = Engine::request(&w.name()).arch("skl").source(w.source).passes(Passes::THROUGHPUT);
+    let text = engine.analyze(&base.clone()).unwrap();
+    assert_eq!(text.format, Format::Text);
+    assert!(text.render().starts_with("=== "));
+    let json = engine.analyze(&base.clone().format(Format::Json)).unwrap();
+    assert!(json.render().starts_with("{\"schema_version\":"));
+    let csv = engine.analyze(&base.format(Format::Csv)).unwrap();
+    assert!(csv.render().starts_with("schema_version,"));
+}
+
+/// Baseline and simulation enter the CSV as `observation` records, not
+/// `bound`s — they never steer the prediction row.
+#[test]
+fn observations_are_labelled_in_csv() {
+    let engine = Engine::cpu_only();
+    let w = workloads::find("triad", "skl", "-O3").unwrap();
+    let report = engine
+        .analyze(
+            &Engine::request(&w.name())
+                .arch("skl")
+                .source(w.source)
+                .passes(Passes::ALL)
+                .sim_config(SimConfig { iterations: 120, warmup: 30 })
+                .unroll(w.unroll),
+        )
+        .unwrap();
+    let csv = report.to_csv();
+    assert!(csv.contains(",observation,baseline,"), "{csv}");
+    assert!(csv.contains(",observation,simulated,"), "{csv}");
+    assert!(csv.contains(",prediction,port_pressure,"), "{csv}");
+    let p = report.prediction();
+    assert!(!p.bound(BoundKind::Simulated).unwrap().kind.is_model_bound());
+}
+
+// ---------------------------------------------------------------------
+// Minimal JSON machinery for the tests above (serde is not vendored).
+
+/// Collect every object key (`"k":`) in the document.
+fn json_keys(s: &str) -> Vec<String> {
+    let bytes: Vec<char> = s.chars().collect();
+    let mut keys = Vec::new();
+    let mut i = 0;
+    while i < bytes.len() {
+        if bytes[i] == '"' {
+            let start = i + 1;
+            let mut j = start;
+            while j < bytes.len() && bytes[j] != '"' {
+                if bytes[j] == '\\' {
+                    j += 1;
+                }
+                j += 1;
+            }
+            let content: String = bytes[start..j].iter().collect();
+            let mut k = j + 1;
+            while k < bytes.len() && bytes[k].is_whitespace() {
+                k += 1;
+            }
+            if k < bytes.len() && bytes[k] == ':' {
+                keys.push(content);
+            }
+            i = j + 1;
+        } else {
+            i += 1;
+        }
+    }
+    keys
+}
+
+/// Recursive-descent JSON validity check (objects, arrays, strings,
+/// numbers, booleans, null). Returns the parse error position.
+fn validate_json(s: &str) -> Result<(), String> {
+    let b: Vec<char> = s.chars().collect();
+    let mut pos = 0;
+    skip_ws(&b, &mut pos);
+    value(&b, &mut pos)?;
+    skip_ws(&b, &mut pos);
+    if pos != b.len() {
+        return Err(format!("trailing garbage at {pos}"));
+    }
+    Ok(())
+}
+
+fn skip_ws(b: &[char], pos: &mut usize) {
+    while *pos < b.len() && b[*pos].is_whitespace() {
+        *pos += 1;
+    }
+}
+
+fn value(b: &[char], pos: &mut usize) -> Result<(), String> {
+    match b.get(*pos) {
+        Some('{') => {
+            *pos += 1;
+            skip_ws(b, pos);
+            if b.get(*pos) == Some(&'}') {
+                *pos += 1;
+                return Ok(());
+            }
+            loop {
+                skip_ws(b, pos);
+                string(b, pos)?;
+                skip_ws(b, pos);
+                expect(b, pos, ':')?;
+                skip_ws(b, pos);
+                value(b, pos)?;
+                skip_ws(b, pos);
+                match b.get(*pos) {
+                    Some(',') => *pos += 1,
+                    Some('}') => {
+                        *pos += 1;
+                        return Ok(());
+                    }
+                    other => return Err(format!("expected , or }} at {pos}, got {other:?}")),
+                }
+            }
+        }
+        Some('[') => {
+            *pos += 1;
+            skip_ws(b, pos);
+            if b.get(*pos) == Some(&']') {
+                *pos += 1;
+                return Ok(());
+            }
+            loop {
+                skip_ws(b, pos);
+                value(b, pos)?;
+                skip_ws(b, pos);
+                match b.get(*pos) {
+                    Some(',') => *pos += 1,
+                    Some(']') => {
+                        *pos += 1;
+                        return Ok(());
+                    }
+                    other => return Err(format!("expected , or ] at {pos}, got {other:?}")),
+                }
+            }
+        }
+        Some('"') => string(b, pos),
+        Some('t') => literal(b, pos, "true"),
+        Some('f') => literal(b, pos, "false"),
+        Some('n') => literal(b, pos, "null"),
+        Some(c) if *c == '-' || c.is_ascii_digit() => number(b, pos),
+        other => Err(format!("unexpected {other:?} at {pos}")),
+    }
+}
+
+fn string(b: &[char], pos: &mut usize) -> Result<(), String> {
+    expect(b, pos, '"')?;
+    while let Some(&c) = b.get(*pos) {
+        *pos += 1;
+        match c {
+            '"' => return Ok(()),
+            '\\' => {
+                match b.get(*pos) {
+                    Some('u') => {
+                        for k in 1..=4 {
+                            if !b.get(*pos + k).map(|c| c.is_ascii_hexdigit()).unwrap_or(false) {
+                                return Err(format!("bad \\u escape at {pos}"));
+                            }
+                        }
+                        *pos += 5;
+                    }
+                    Some('"' | '\\' | '/' | 'b' | 'f' | 'n' | 'r' | 't') => *pos += 1,
+                    other => return Err(format!("bad escape {other:?} at {pos}")),
+                }
+            }
+            c if (c as u32) < 0x20 => return Err(format!("raw control char at {pos}")),
+            _ => {}
+        }
+    }
+    Err("unterminated string".to_string())
+}
+
+fn number(b: &[char], pos: &mut usize) -> Result<(), String> {
+    let start = *pos;
+    if b.get(*pos) == Some(&'-') {
+        *pos += 1;
+    }
+    let digits = |b: &[char], pos: &mut usize| {
+        let s = *pos;
+        while b.get(*pos).map(|c| c.is_ascii_digit()).unwrap_or(false) {
+            *pos += 1;
+        }
+        *pos > s
+    };
+    if !digits(b, pos) {
+        return Err(format!("bad number at {start}"));
+    }
+    if b.get(*pos) == Some(&'.') {
+        *pos += 1;
+        if !digits(b, pos) {
+            return Err(format!("bad fraction at {start}"));
+        }
+    }
+    if matches!(b.get(*pos), Some('e' | 'E')) {
+        *pos += 1;
+        if matches!(b.get(*pos), Some('+' | '-')) {
+            *pos += 1;
+        }
+        if !digits(b, pos) {
+            return Err(format!("bad exponent at {start}"));
+        }
+    }
+    Ok(())
+}
+
+fn literal(b: &[char], pos: &mut usize, lit: &str) -> Result<(), String> {
+    for c in lit.chars() {
+        if b.get(*pos) != Some(&c) {
+            return Err(format!("bad literal at {pos}, wanted `{lit}`"));
+        }
+        *pos += 1;
+    }
+    Ok(())
+}
+
+fn expect(b: &[char], pos: &mut usize, c: char) -> Result<(), String> {
+    if b.get(*pos) == Some(&c) {
+        *pos += 1;
+        Ok(())
+    } else {
+        Err(format!("expected `{c}` at {pos}, got {:?}", b.get(*pos)))
+    }
+}
+
+/// Split one CSV line honoring RFC-4180 quoting.
+fn split_csv(line: &str) -> Vec<String> {
+    let mut fields = Vec::new();
+    let mut cur = String::new();
+    let mut quoted = false;
+    let mut chars = line.chars().peekable();
+    while let Some(c) = chars.next() {
+        match c {
+            '"' if quoted => {
+                if chars.peek() == Some(&'"') {
+                    cur.push('"');
+                    chars.next();
+                } else {
+                    quoted = false;
+                }
+            }
+            '"' => quoted = true,
+            ',' if !quoted => fields.push(std::mem::take(&mut cur)),
+            c => cur.push(c),
+        }
+    }
+    fields.push(cur);
+    fields
+}

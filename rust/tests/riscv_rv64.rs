@@ -10,11 +10,12 @@
 //! that `ibench::gen` emits valid loop kernels for every built-in
 //! model (the `--learn` acceptance criterion).
 
-use osaca::analyzer::{analyze, critical_path};
-use osaca::api::{Engine, OsacaError, Passes};
+use osaca::analyzer::{analyze, analyze_with, critical_path, AnalyzerConfig};
+use osaca::api::{BoundKind, Engine, OsacaError, Passes};
 use osaca::asm::extract_kernel_isa;
 use osaca::ibench::{latency_loop, throughput_loop, BenchSpec};
 use osaca::mdb::{by_name, rv64};
+use osaca::report::render_occupancy;
 use osaca::sim::{simulate, SimConfig};
 use osaca::workloads;
 
@@ -95,6 +96,89 @@ fn triad_rv64_simulated_frontend_bound() {
     );
 }
 
+/// ISSUE-5 tentpole pin — the closed blind spot. With
+/// `.frontend_bound(true)` the triad prediction is 4.0 cy and
+/// frontend-bound (8 slots / 2-wide), matching the simulator; with the
+/// flag off (the default) it stays the 3.0 cy LS-bound port prediction.
+/// The port table itself is identical either way.
+#[test]
+fn triad_rv64_frontend_bound_closes_divergence() {
+    let engine = Engine::cpu_only();
+    let w = workloads::find("triad", "rv64", "-O2").unwrap();
+    let request = |frontend: bool| {
+        Engine::request(&w.name())
+            .arch("rv64")
+            .source(w.source)
+            .passes(Passes::THROUGHPUT | Passes::CRITPATH)
+            .frontend_bound(frontend)
+    };
+
+    let on = engine.analyze(&request(true)).unwrap();
+    let t = on.throughput.as_ref().unwrap();
+    // Port table untouched: LS stays the 3.0 cy port bottleneck.
+    assert!(approx(t.cy_per_asm_iter, 3.0), "{}", t.cy_per_asm_iter);
+    let f = t.frontend.as_ref().expect("frontend bound requested");
+    assert_eq!(f.slots, 8, "8 instructions, nothing fuses on RISC-V");
+    assert_eq!(f.width, 2);
+    assert!((f.cy_per_asm_iter - 4.0).abs() < 1e-6);
+    // The prediction now says *frontend*, at the simulator's number.
+    let p = on.prediction();
+    let winner = p.winner().unwrap();
+    assert_eq!(winner.kind, BoundKind::FrontEnd);
+    assert!((winner.cy_per_asm_iter - 4.0).abs() < 1e-6);
+    assert_eq!(winner.resource, "8 slots / 2-wide");
+    assert!((on.predicted_cy_per_asm_iter().unwrap() - 4.0).abs() < 1e-6);
+    let meas = simulate(&w.kernel(), &rv64(), cfg()).unwrap();
+    assert!(
+        (meas.cycles_per_iteration - on.predicted_cy_per_asm_iter().unwrap() as f64).abs() < 0.15,
+        "analyzer {} vs sim {}",
+        on.predicted_cy_per_asm_iter().unwrap(),
+        meas.cycles_per_iteration
+    );
+    // The simulator names the same resource in the Bound vocabulary.
+    assert_eq!(meas.bottleneck_resource(&rv64()), "8 slots / 2-wide");
+
+    // Flag off: the paper-style LS-bound 3.0 cy prediction survives.
+    let off = engine.analyze(&request(false)).unwrap();
+    assert!(off.throughput.as_ref().unwrap().frontend.is_none());
+    let p = off.prediction();
+    let winner = p.winner().unwrap();
+    assert_eq!(winner.kind, BoundKind::PortPressure);
+    assert_eq!(winner.resource, "LS");
+    assert!((winner.cy_per_asm_iter - 3.0).abs() < 1e-6);
+    assert!((off.predicted_cy_per_asm_iter().unwrap() - 3.0).abs() < 1e-6);
+}
+
+/// ISSUE-5 satellite: the paper-pinned skl/zen/tx2 analyzer tables are
+/// bit-identical with the frontend flag off — and even with it *on*,
+/// the occupancy table (totals, bottleneck, rendered text) does not
+/// move; only the extra bound appears.
+#[test]
+fn paper_tables_bit_identical_with_frontend_flag_off() {
+    let engine = Engine::cpu_only();
+    for (arch, flag) in [("skl", "-O3"), ("zen", "-O3"), ("tx2", "-O2")] {
+        let w = workloads::find("triad", arch, flag).unwrap();
+        let m = by_name(arch).unwrap();
+        let base = analyze(&w.kernel(), &m).unwrap();
+        let base_table = render_occupancy(&base, &m);
+        // analyze_with(flag on) renders the identical table.
+        let on = analyze_with(&w.kernel(), &m, &AnalyzerConfig { frontend_bound: true }).unwrap();
+        assert_eq!(render_occupancy(&on, &m), base_table, "{arch}: table moved");
+        assert_eq!(on.totals, base.totals, "{arch}: totals moved");
+        assert_eq!(on.cy_per_asm_iter, base.cy_per_asm_iter, "{arch}");
+        assert_eq!(on.bottleneck_port, base.bottleneck_port, "{arch}");
+        // The engine's default (flag off) text report embeds that exact
+        // table and carries no frontend section.
+        let r = engine
+            .analyze(
+                &Engine::request(&w.name()).arch(arch).source(w.source).passes(Passes::THROUGHPUT),
+            )
+            .unwrap();
+        assert!(r.throughput.as_ref().unwrap().frontend.is_none(), "{arch}");
+        assert!(r.to_text().contains(&base_table), "{arch}: text layout changed");
+    }
+}
+
 /// π at -O1: the non-pipelined divide (DV busy 12 cy) dominates the
 /// 7-cycle F-pipe pressure and the 5-cycle sum recurrence.
 #[test]
@@ -117,6 +201,37 @@ fn pi_rv64_critpath_pinned() {
     let r = critical_path(&w.kernel(), &rv64()).unwrap();
     assert!((r.carried_per_iteration - 5.0).abs() < 1e-3, "{r:?}");
     assert!((r.intra_iteration - 49.0).abs() < 1e-3, "{r:?}");
+}
+
+/// π through the structured prediction: the divider is a *named* bound
+/// kind now — DV 12.0 beats the F-pipe pressure (7.0), the frontend
+/// (9 slots / 2-wide = 4.5) and the sum recurrence (5.0), and the
+/// winner says so.
+#[test]
+fn pi_rv64_prediction_is_divider_bound() {
+    let engine = Engine::cpu_only();
+    let w = workloads::find("pi", "rv64", "-O1").unwrap();
+    let r = engine
+        .analyze(
+            &Engine::request(&w.name())
+                .arch("rv64")
+                .source(w.source)
+                .passes(Passes::THROUGHPUT | Passes::CRITPATH)
+                .frontend_bound(true),
+        )
+        .unwrap();
+    let p = r.prediction();
+    let winner = p.winner().unwrap();
+    assert_eq!(winner.kind, BoundKind::Divider);
+    assert_eq!(winner.resource, "DV");
+    assert!((winner.cy_per_asm_iter - 12.0).abs() < 0.011);
+    let port = p.bound(BoundKind::PortPressure).unwrap();
+    assert_eq!(port.resource, "F");
+    assert!((port.cy_per_asm_iter - 7.0).abs() < 0.011);
+    let fe = p.bound(BoundKind::FrontEnd).unwrap();
+    assert!((fe.cy_per_asm_iter - 4.5).abs() < 1e-6);
+    let cp = p.bound(BoundKind::CriticalPath).unwrap();
+    assert!((cp.cy_per_asm_iter - 5.0).abs() < 1e-3);
 }
 
 /// Simulated π: divider-serialized at ~12 cy/iter (Table V's shape on
