@@ -1,11 +1,12 @@
 #!/usr/bin/env bash
 # CI entry point: tier-1 verification plus style, lint and perf gates.
 #
-# Usage: ./ci.sh [--quick|--bench-smoke|--isa-smoke]
+# Usage: ./ci.sh [--quick|--bench-smoke|--isa-smoke|--serve-smoke]
 #   --quick        tier-1 only (skip fmt/clippy, the per-ISA sweep and
 #                  the bench smoke run)
 #   --bench-smoke  only the shrunken hot-path bench + baseline gate
 #   --isa-smoke    only the per-ISA CLI sweep over workloads/
+#   --serve-smoke  only the live `osaca serve` session smoke test
 set -euo pipefail
 cd "$(dirname "$0")"
 
@@ -16,12 +17,69 @@ bench_smoke() {
     # Automated baseline gate (±20% on every shared derived rate).
     # While BENCH_hotpath.json is still the PR-3 placeholder the script
     # warns and passes; it arms itself once a real baseline is
-    # committed. See scripts/check_bench_baseline.py.
+    # committed. See scripts/check_bench_baseline.py. The serve/req_s
+    # case must exist in the fresh run regardless — a silently dropped
+    # serving bench must not read as "no regression".
     if command -v python3 >/dev/null 2>&1; then
-        python3 scripts/check_bench_baseline.py BENCH_hotpath.json "$fresh"
+        OSACA_BENCH_REQUIRE=serve/req_s \
+            python3 scripts/check_bench_baseline.py BENCH_hotpath.json "$fresh"
     else
         echo "bench-baseline: WARNING — python3 unavailable, comparison skipped"
     fi
+}
+
+# Live-service smoke: boot `osaca serve` on an ephemeral port, drive it
+# over the real socket with scripts/serve_smoke_client.py (analyzes on
+# both shards, memo-hit check, stats consistency, wire shutdown), then
+# require a clean drain of the server process. The rust integration
+# tests cover the same surface in-process; this leg proves the shipped
+# binary + a foreign-language client agree on the wire contract.
+serve_smoke() {
+    echo "== serve smoke: live osaca serve session =="
+    if ! command -v python3 >/dev/null 2>&1; then
+        echo "serve-smoke: WARNING — python3 unavailable, leg skipped"
+        return 0
+    fi
+    cargo build --release
+    local bin=./target/release/osaca
+    local log="${TMPDIR:-/tmp}/osaca-serve-smoke.log"
+    "$bin" serve --addr 127.0.0.1:0 --shards 2 >"$log" 2>&1 &
+    local pid=$!
+    local addr="" i
+    for i in $(seq 1 100); do
+        addr="$(sed -n 's/^serving on //p' "$log" | head -n1)"
+        [[ -n "$addr" ]] && break
+        if ! kill -0 "$pid" 2>/dev/null; then
+            echo "serve-smoke: server died during startup"
+            cat "$log"
+            exit 1
+        fi
+        sleep 0.1
+    done
+    if [[ -z "$addr" ]]; then
+        echo "serve-smoke: server never reported its address"
+        cat "$log"
+        kill "$pid" 2>/dev/null || true
+        exit 1
+    fi
+    if ! python3 scripts/serve_smoke_client.py "$addr" 16; then
+        kill "$pid" 2>/dev/null || true
+        cat "$log"
+        exit 1
+    fi
+    # The client sent the wire shutdown; the server must drain and exit
+    # cleanly on its own.
+    if ! wait "$pid"; then
+        echo "serve-smoke: server exited non-zero after shutdown"
+        cat "$log"
+        exit 1
+    fi
+    if ! grep -q "drained cleanly" "$log"; then
+        echo "serve-smoke: no clean-drain confirmation in the server log"
+        cat "$log"
+        exit 1
+    fi
+    echo "serve-smoke: OK"
 }
 
 # Cross-ISA regression gate: run the CLI analyze path (parse + marker
@@ -87,6 +145,10 @@ case "${1:-}" in
         isa_smoke
         exit 0
         ;;
+    --serve-smoke)
+        serve_smoke
+        exit 0
+        ;;
 esac
 
 echo "== tier-1: build =="
@@ -111,6 +173,9 @@ if [[ "${1:-}" != "--quick" ]]; then
 
     # Every fixture × every matching model through the real CLI.
     isa_smoke
+
+    # The shipped binary serving over a real socket to a python client.
+    serve_smoke
 
     # Hot-path regressions fail loudly at two levels: the smoke bench
     # asserts the cached-model and warm-resolution counters while

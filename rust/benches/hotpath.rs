@@ -312,6 +312,96 @@ fn main() {
     println!("{}  ({:.0} emits/s)", s.report(), rate);
     json.record(&s, &[("json_emits_per_s", rate)]);
 
+    // ---- serve: the persistent TCP service ------------------------------
+    // End-to-end wire cost per request: frame parse, shard queue, memo
+    // lookup, render, socket round-trip. Four persistent connections
+    // cycling the workload mix — after the first round almost every
+    // request is a memo hit, which is the steady state a long-lived
+    // service actually runs in. Latency percentiles are recorded as
+    // *inverse* rates (1/p50, 1/p99) so the bench baseline gate keeps
+    // its below-baseline-is-regression direction for every shared key.
+    println!("--- serve ---");
+    {
+        use osaca::report::emit::json_string;
+        use osaca::serve::{ServeConfig, Server};
+        use std::io::{BufRead, BufReader, Write};
+        use std::net::TcpStream;
+
+        let server = Server::bind(ServeConfig {
+            addr: "127.0.0.1:0".to_string(),
+            backend: osaca::api::Backend::Cpu,
+            ..ServeConfig::default()
+        })
+        .expect("bind serve bench server");
+        let addr = server.local_addr();
+        let frames: Vec<String> = (0..n)
+            .map(|i| {
+                let w = ws[i % ws.len()];
+                let arch = if i % 2 == 0 { "skl" } else { "zen" };
+                format!(
+                    "{{\"op\":\"analyze\",\"name\":{},\"arch\":\"{arch}\",\"source\":{},\
+                     \"passes\":[\"analytic\"],\"unroll\":{}}}",
+                    json_string(&w.name()),
+                    json_string(w.source),
+                    w.unroll
+                )
+            })
+            .collect();
+        let clients = 4.min(n.max(1));
+        let per_client = (n / clients).max(1);
+        let mut latencies: Vec<f64> = Vec::new();
+        let s = bench("serve/req_s", sc.warm_big, sc.samp_big, || {
+            latencies.clear();
+            let handles: Vec<_> = frames
+                .chunks(per_client)
+                .map(|chunk| {
+                    let chunk = chunk.to_vec();
+                    std::thread::spawn(move || {
+                        let stream = TcpStream::connect(addr).expect("connect");
+                        let mut reader = BufReader::new(stream.try_clone().expect("clone"));
+                        let mut stream = stream;
+                        let mut lats = Vec::with_capacity(chunk.len());
+                        let mut line = String::new();
+                        for f in &chunk {
+                            let t0 = std::time::Instant::now();
+                            stream.write_all(f.as_bytes()).expect("send frame");
+                            stream.write_all(b"\n").expect("send newline");
+                            line.clear();
+                            reader.read_line(&mut line).expect("read response");
+                            lats.push(t0.elapsed().as_secs_f64());
+                            assert!(line.contains("\"status\":\"ok\""), "serve error: {line}");
+                        }
+                        lats
+                    })
+                })
+                .collect();
+            for h in handles {
+                latencies.extend(h.join().expect("client thread"));
+            }
+        });
+        latencies.sort_by(f64::total_cmp);
+        let p50 = latencies[latencies.len() / 2];
+        let p99 = latencies[(latencies.len() * 99 / 100).min(latencies.len() - 1)];
+        let rate = n as f64 / s.median.as_secs_f64();
+        println!(
+            "{}  ({:.0} req/s; latency p50 {:.1}µs p99 {:.1}µs)",
+            s.report(),
+            rate,
+            p50 * 1e6,
+            p99 * 1e6
+        );
+        json.record(
+            &s,
+            &[
+                ("req_per_s", rate),
+                ("p50_req_per_s", 1.0 / p50),
+                ("p99_req_per_s", 1.0 / p99),
+            ],
+        );
+        server.shutdown();
+        server.join();
+    }
+
     // ---- machine-readable results ---------------------------------------
     let path =
         std::env::var("OSACA_BENCH_JSON").unwrap_or_else(|_| "BENCH_hotpath.json".to_string());

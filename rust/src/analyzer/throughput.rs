@@ -41,7 +41,7 @@ pub struct FrontendBound {
 }
 
 /// Per-line port occupancy (one row of Tables II/IV/VI/VII).
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct LineOccupancy {
     /// Kernel instruction index.
     pub instr: usize,

@@ -41,6 +41,27 @@ pub enum OsacaError {
     Internal { message: String },
 }
 
+impl OsacaError {
+    /// Stable machine-readable error kind, used by the serve wire
+    /// format's error frames (`{"error":{"kind":...}}`). Renaming a
+    /// kind is a wire-contract change and needs a schema-version bump.
+    pub fn kind_name(&self) -> &'static str {
+        match self {
+            OsacaError::UnknownArch { .. } => "unknown_arch",
+            OsacaError::ParseError { .. } => "parse_error",
+            OsacaError::MalformedModel { .. } => "malformed_model",
+            OsacaError::UnresolvedForm { .. } => "unresolved_form",
+            OsacaError::IsaMismatch { .. } => "isa_mismatch",
+            OsacaError::EmptyRequest { .. } => "empty_request",
+            OsacaError::UnsupportedFormat { .. } => "unsupported_format",
+            OsacaError::KernelTooLarge { .. } => "kernel_too_large",
+            OsacaError::SolverTimeout { .. } => "solver_timeout",
+            OsacaError::ServiceUnavailable { .. } => "service_unavailable",
+            OsacaError::Internal { .. } => "internal",
+        }
+    }
+}
+
 impl fmt::Display for OsacaError {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         match self {

@@ -303,6 +303,7 @@ impl Engine {
             critpath: None,
             baseline: None,
             simulation: None,
+            prediction_cell: std::sync::OnceLock::new(),
         };
         // Decode once: the critical-path pass, the simulator and the
         // width-aware frontend bound all consume the same

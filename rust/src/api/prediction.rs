@@ -14,6 +14,7 @@
 //! balanced baseline, the simulator measurement) ride along in the same
 //! vocabulary without being folded into it.
 
+use crate::analyzer::LineOccupancy;
 use crate::api::AnalysisReport;
 
 /// The resource class a [`Bound`] describes.
@@ -99,6 +100,11 @@ pub struct Prediction {
     pub bounds: Vec<Bound>,
     /// Assembly-loop unroll factor (for per-source-iteration values).
     pub unroll: usize,
+    /// Per-line port occupancy rows from the throughput pass (empty
+    /// when the pass did not run). Absorbed here so the structured
+    /// prediction carries the paper's whole table, not only its max —
+    /// the last string-only part of the report before schema v2.
+    pub lines: Vec<LineOccupancy>,
 }
 
 impl Prediction {
@@ -199,7 +205,8 @@ impl Prediction {
                 source: PassSource::Simulate,
             });
         }
-        Prediction { bounds, unroll: r.unroll }
+        let lines = r.throughput.as_ref().map(|t| t.lines.clone()).unwrap_or_default();
+        Prediction { bounds, unroll: r.unroll, lines }
     }
 }
 
@@ -226,6 +233,7 @@ mod tests {
                 bound(BoundKind::Simulated, 9.0), // observation: ignored
             ],
             unroll: 2,
+            lines: Vec::new(),
         };
         let w = p.winner().unwrap();
         assert_eq!(w.kind, BoundKind::FrontEnd);
@@ -241,6 +249,7 @@ mod tests {
                 bound(BoundKind::CriticalPath, 2.0),
             ],
             unroll: 1,
+            lines: Vec::new(),
         };
         assert_eq!(p.winner().unwrap().kind, BoundKind::PortPressure);
     }
@@ -251,7 +260,11 @@ mod tests {
         assert!(p.winner().is_none());
         assert!(p.cy_per_asm_iter().is_none());
         // Observations alone do not make a prediction.
-        let p = Prediction { bounds: vec![bound(BoundKind::Baseline, 2.0)], unroll: 1 };
+        let p = Prediction {
+            bounds: vec![bound(BoundKind::Baseline, 2.0)],
+            unroll: 1,
+            lines: Vec::new(),
+        };
         assert!(p.cy_per_asm_iter().is_none());
         assert!(p.bound(BoundKind::Baseline).is_some());
     }

@@ -2,7 +2,7 @@
 //! a structured [`Prediction`] decomposition, and pluggable rendering
 //! through the `report::emit` emitters.
 
-use std::sync::Arc;
+use std::sync::{Arc, OnceLock};
 
 use crate::analyzer::{Analysis, CritPathReport};
 use crate::api::prediction::Prediction;
@@ -32,6 +32,12 @@ pub struct AnalysisReport {
     pub baseline: Option<BaselinePrediction>,
     /// Simulator measurement ([`super::Passes::SIMULATE`]).
     pub simulation: Option<Measurement>,
+    /// Lazily-built shared decomposition (see
+    /// [`AnalysisReport::prediction_shared`]). Cloning a report after
+    /// the cell is filled shares the same `Arc<Prediction>` — that is
+    /// what lets `serve`'s memo hand every memo hit the one
+    /// decomposition instead of rebuilding it per response.
+    pub(crate) prediction_cell: OnceLock<Arc<Prediction>>,
 }
 
 impl AnalysisReport {
@@ -43,6 +49,18 @@ impl AnalysisReport {
     /// (the baseline attaches after the in-process passes).
     pub fn prediction(&self) -> Prediction {
         Prediction::from_report(self)
+    }
+
+    /// The decomposition behind a shared handle, built at most once per
+    /// report (and shared by clones made afterwards). The engine only
+    /// returns complete reports, so by the time a caller can reach this
+    /// every requested section is attached; a caller that mutates the
+    /// pass sections afterwards should use [`AnalysisReport::prediction`]
+    /// to re-derive. The emitters render through this handle — one
+    /// decomposition serves text, JSON and CSV output of the same
+    /// report, and `serve` memo hits reuse it across responses.
+    pub fn prediction_shared(&self) -> Arc<Prediction> {
+        self.prediction_cell.get_or_init(|| Arc::new(self.prediction())).clone()
     }
 
     /// The combined analytic prediction — the max over the model

@@ -39,6 +39,28 @@ impl Passes {
         self.0 & other.0 == other.0
     }
 
+    /// The raw flag bits (stable across releases: THROUGHPUT=1,
+    /// CRITPATH=2, BASELINE=4, SIMULATE=8). Used by the request
+    /// fingerprint and the serve wire format.
+    pub fn bits(self) -> u8 {
+        self.0
+    }
+
+    /// Parse one pass (or pass-set) name as used on the serve wire:
+    /// `throughput`, `critpath`, `baseline`, `simulate`, `analytic`,
+    /// `all`. Case-insensitive; unknown names return `None`.
+    pub fn from_name(name: &str) -> Option<Passes> {
+        Some(match name.to_ascii_lowercase().as_str() {
+            "throughput" => Passes::THROUGHPUT,
+            "critpath" => Passes::CRITPATH,
+            "baseline" => Passes::BASELINE,
+            "simulate" => Passes::SIMULATE,
+            "analytic" => Passes::ANALYTIC,
+            "all" => Passes::ALL,
+            _ => return None,
+        })
+    }
+
     /// Does `self` include at least one pass of `other`?
     pub fn intersects(self, other: Passes) -> bool {
         self.0 & other.0 != 0
@@ -194,6 +216,54 @@ impl AnalysisRequest {
         self.sim = cfg;
         self
     }
+
+    /// A stable 64-bit fingerprint of the *analysis-relevant* request
+    /// configuration: the kernel text (source, or the canonical
+    /// rendering of a pre-extracted kernel), the machine (registered
+    /// model name or lower-cased arch), the pass set, the frontend-bound
+    /// flag, the unroll factor and the simulation parameters.
+    ///
+    /// `name` and `format` are presentation-only and deliberately
+    /// excluded, so differently-labelled requests for the same analysis
+    /// share one memo slot in `serve::MemoCache`.
+    pub fn fingerprint(&self) -> u64 {
+        // FNV-1a; 0xff separators so adjacent fields cannot alias.
+        const BASIS: u64 = 0xcbf2_9ce4_8422_2325;
+        const PRIME: u64 = 0x0000_0100_0000_01b3;
+        let mut h = BASIS;
+        let mut eat = |bytes: &[u8]| {
+            for &b in bytes {
+                h ^= b as u64;
+                h = h.wrapping_mul(PRIME);
+            }
+            h ^= 0xff;
+            h = h.wrapping_mul(PRIME);
+        };
+        match &self.machine {
+            Some(m) => eat(m.name.to_ascii_lowercase().as_bytes()),
+            None => eat(self.arch.to_ascii_lowercase().as_bytes()),
+        }
+        match (&self.kernel, &self.source) {
+            // A pre-extracted kernel hashes its canonical Display
+            // rendering, so source-text and kernel submissions of the
+            // same loop agree only when their spellings do.
+            (Some(k), _) => {
+                for ins in &k.instructions {
+                    eat(ins.to_string().as_bytes());
+                }
+            }
+            (None, Some(src)) => eat(src.as_bytes()),
+            (None, None) => eat(b""),
+        }
+        if let Some(isa) = self.isa {
+            eat(isa.name().as_bytes());
+        }
+        eat(&[self.passes.bits(), self.frontend_bound as u8]);
+        eat(&self.unroll.to_le_bytes());
+        eat(&self.sim.iterations.to_le_bytes());
+        eat(&self.sim.warmup.to_le_bytes());
+        h
+    }
 }
 
 #[cfg(test)]
@@ -211,6 +281,51 @@ mod tests {
         let mut q = Passes::NONE;
         q |= Passes::SIMULATE;
         assert!(q.contains(Passes::SIMULATE));
+    }
+
+    #[test]
+    fn pass_names_round_trip() {
+        for (name, p) in [
+            ("throughput", Passes::THROUGHPUT),
+            ("critpath", Passes::CRITPATH),
+            ("baseline", Passes::BASELINE),
+            ("simulate", Passes::SIMULATE),
+            ("analytic", Passes::ANALYTIC),
+            ("all", Passes::ALL),
+        ] {
+            assert_eq!(Passes::from_name(name), Some(p));
+        }
+        assert_eq!(Passes::from_name("THROUGHPUT"), Some(Passes::THROUGHPUT));
+        assert_eq!(Passes::from_name("warp"), None);
+        assert_eq!(Passes::THROUGHPUT.bits(), 1);
+        assert_eq!(Passes::ALL.bits(), 0b1111);
+    }
+
+    #[test]
+    fn fingerprint_ignores_presentation_fields_only() {
+        let base = || {
+            AnalysisRequest::new("a")
+                .arch("skl")
+                .source(".L1:\naddl $1, %eax\njne .L1\n")
+                .passes(Passes::THROUGHPUT)
+                .unroll(2)
+        };
+        let f = base().fingerprint();
+        // name and format are presentation-only.
+        let mut renamed = base();
+        renamed.name = "b".into();
+        assert_eq!(renamed.fingerprint(), f);
+        assert_eq!(base().format(Format::Json).fingerprint(), f);
+        // Everything analysis-relevant changes the key.
+        assert_ne!(base().arch("zen").fingerprint(), f);
+        assert_ne!(base().unroll(3).fingerprint(), f);
+        assert_ne!(base().passes(Passes::ANALYTIC).fingerprint(), f);
+        assert_ne!(base().frontend_bound(true).fingerprint(), f);
+        assert_ne!(base().source(".L1:\naddl $2, %eax\njne .L1\n").fingerprint(), f);
+        assert_ne!(
+            base().sim_config(SimConfig { iterations: 7, warmup: 0 }).fingerprint(),
+            f
+        );
     }
 
     #[test]

@@ -52,6 +52,11 @@ pub struct ServiceStats {
     pub batches: AtomicU64,
     pub batched_kernels: AtomicU64,
     pub solve_micros: AtomicU64,
+    /// Messages currently waiting in the submission queue (a gauge,
+    /// not a counter): incremented at submit, decremented when the
+    /// solver thread dequeues. Surfaced as
+    /// [`Coordinator::queue_depth`] for serving introspection.
+    pub queued: AtomicU64,
 }
 
 impl ServiceStats {
@@ -221,11 +226,14 @@ impl Coordinator {
             .expect("single pool lock")
             .pop()
             .unwrap_or_else(|| mpsc::sync_channel(1));
-        self.tx
-            .as_ref()
-            .expect("coordinator running")
-            .send(Msg::One(Job { enc, reply: rtx.clone() }))
-            .map_err(|_| SubmitError::Closed)?;
+        let Some(tx) = self.tx.as_ref() else {
+            return Err(SubmitError::Closed);
+        };
+        self.stats.queued.fetch_add(1, Ordering::Relaxed);
+        if tx.send(Msg::One(Job { enc, reply: rtx.clone() })).is_err() {
+            self.stats.queued.fetch_sub(1, Ordering::Relaxed);
+            return Err(SubmitError::Closed);
+        }
         match rrx.recv_timeout(self.reply_timeout) {
             Ok(out) => {
                 // Channel is drained: safe to reuse.
@@ -259,11 +267,14 @@ impl Coordinator {
             .expect("batch pool lock")
             .pop()
             .unwrap_or_else(|| mpsc::sync_channel(1));
-        self.tx
-            .as_ref()
-            .expect("coordinator running")
-            .send(Msg::Many(BatchJob { encs, reply: rtx.clone() }))
-            .map_err(|_| SubmitError::Closed)?;
+        let Some(tx) = self.tx.as_ref() else {
+            return Err(SubmitError::Closed);
+        };
+        self.stats.queued.fetch_add(1, Ordering::Relaxed);
+        if tx.send(Msg::Many(BatchJob { encs, reply: rtx.clone() })).is_err() {
+            self.stats.queued.fetch_sub(1, Ordering::Relaxed);
+            return Err(SubmitError::Closed);
+        }
         let timeout = self.reply_timeout.saturating_mul(chunks);
         match rrx.recv_timeout(timeout) {
             Ok(outs) => {
@@ -306,14 +317,30 @@ impl Coordinator {
         let baseline = crate::baseline::to_prediction(&out);
         Ok(AnalysisResponse { osaca, baseline, critpath })
     }
-}
 
-impl Drop for Coordinator {
-    fn drop(&mut self) {
+    /// Messages currently waiting in the submission queue (see
+    /// [`ServiceStats::queued`]).
+    pub fn queue_depth(&self) -> u64 {
+        self.stats.queued.load(Ordering::Relaxed)
+    }
+
+    /// Graceful shutdown: close the submission queue (subsequent
+    /// submissions return [`SubmitError::Closed`] instead of
+    /// panicking) and join the solver thread, which finishes every
+    /// message already queued before exiting. Idempotent; `Drop` calls
+    /// it, so an explicit call is only needed to sequence the drain
+    /// before other teardown.
+    pub fn drain(&mut self) {
         drop(self.tx.take());
         if let Some(h) = self.worker.take() {
             let _ = h.join();
         }
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        self.drain();
     }
 }
 
@@ -343,7 +370,10 @@ fn solver_loop(
         let first = match pending.take() {
             Some(m) => m,
             None => match rx.recv() {
-                Ok(m) => m,
+                Ok(m) => {
+                    stats.queued.fetch_sub(1, Ordering::Relaxed);
+                    m
+                }
                 Err(_) => return, // all senders dropped
             },
         };
@@ -373,8 +403,14 @@ fn solver_loop(
                         break;
                     }
                     match rx.recv_timeout(deadline - now) {
-                        Ok(Msg::One(j)) => jobs.push(j),
+                        Ok(Msg::One(j)) => {
+                            stats.queued.fetch_sub(1, Ordering::Relaxed);
+                            jobs.push(j);
+                        }
                         Ok(m @ Msg::Many(_)) => {
+                            // Dequeued here; `pending` only re-routes it
+                            // inside this thread, so the gauge drops now.
+                            stats.queued.fetch_sub(1, Ordering::Relaxed);
                             pending = Some(m);
                             break;
                         }
@@ -469,6 +505,21 @@ mod tests {
             c.solve_batch(vec![enc.clone(); 2]).unwrap();
         }
         assert_eq!(c.batch_pool.lock().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn drained_coordinator_returns_closed_not_panic() {
+        let mut c = Coordinator::cpu_only();
+        let w = workloads::find("triad", "skl", "-O3").unwrap();
+        let machine = mdb::skylake();
+        let enc = encode(&w.kernel(), &machine).unwrap();
+        assert!(c.solve_one(enc.clone()).is_ok());
+        assert_eq!(c.queue_depth(), 0, "gauge returns to zero after dequeue");
+        c.drain();
+        c.drain(); // idempotent
+        assert!(matches!(c.solve_one(enc.clone()), Err(SubmitError::Closed)));
+        assert!(matches!(c.solve_batch(vec![enc]), Err(SubmitError::Closed)));
+        assert_eq!(c.queue_depth(), 0);
     }
 
     #[test]

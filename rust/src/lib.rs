@@ -9,7 +9,8 @@
 //!   out-of-order core *simulator* (the measurement substrate standing in
 //!   for real Skylake/Zen silicon), ibench-style benchmark generation,
 //!   semi-automatic model construction, the OSACA throughput analyzer, an
-//!   IACA-like balanced baseline, and a batching analysis coordinator.
+//!   IACA-like balanced baseline, a batching analysis coordinator, and a
+//!   persistent sharded analysis service ([`serve`]).
 //! * **L2/L1 (python/, build-time only)** — the batched port-pressure
 //!   solver (uniform + iteratively balanced) as a JAX model wrapping a
 //!   Pallas kernel, AOT-lowered to `artifacts/port_solver.hlo.txt` and
@@ -33,6 +34,7 @@ pub mod isa;
 pub mod mdb;
 pub mod proplite;
 pub mod report;
+pub mod serve;
 pub mod runtime;
 pub mod sim;
 pub mod workloads;

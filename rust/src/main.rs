@@ -14,7 +14,7 @@
 //!   compare <file.s> --arch skl|zen [--unroll N]
 //!   tables [--table1] [--table3] [--table5] [--all]
 //!   figures
-//!   serve [--requests N]   (batch submission through the coordinator)
+//!   serve [--addr host:port] [--shards N] [--memo-cap N]   (persistent TCP service; --loopback for the in-process batch demo)
 //!   list-workloads
 //!
 //! Hand-rolled argument parsing: clap is not vendored in this offline
@@ -37,6 +37,7 @@ use osaca::report::experiments::{
     render_table1, render_table3, render_table5, table1, table3, table5,
 };
 use osaca::report::render_port_diagram;
+use osaca::serve::{ServeConfig, Server};
 use osaca::sim::SimConfig;
 use osaca::{asm, workloads};
 
@@ -500,8 +501,38 @@ fn run(args: &[String]) -> Result<()> {
             }
         }
         "serve" => {
-            let n: usize = opts.get("requests").map(|v| v.parse()).transpose()?.unwrap_or(64);
-            serve_demo(&engine, n, format)?;
+            // `--loopback` keeps the old in-process batch demo; the
+            // default is the persistent TCP service (`osaca::serve`).
+            if opts.contains_key("loopback") {
+                let n: usize =
+                    opts.get("requests").map(|v| v.parse()).transpose()?.unwrap_or(64);
+                serve_demo(&engine, n, format)?;
+                return Ok(());
+            }
+            let mut cfg = ServeConfig {
+                addr: opts.get("addr").unwrap_or(&"127.0.0.1:7117").to_string(),
+                ..ServeConfig::default()
+            };
+            if let Some(v) = opts.get("shards") {
+                cfg.shards = v.parse::<usize>().context("--shards")?.max(1);
+            }
+            if let Some(v) = opts.get("memo-cap") {
+                cfg.memo_cap = v.parse().context("--memo-cap")?;
+            }
+            if let Some(v) = opts.get("queue-depth") {
+                cfg.queue_depth = v.parse::<usize>().context("--queue-depth")?.max(1);
+            }
+            let server = Server::bind(cfg.clone())
+                .with_context(|| format!("binding {}", cfg.addr))?;
+            // The smoke harness greps this exact line for the resolved
+            // (possibly ephemeral) address.
+            println!("serving on {}", server.local_addr());
+            println!(
+                "shards={} memo-cap={} queue-depth={} (send {{\"op\":\"shutdown\"}} to stop)",
+                cfg.shards, cfg.memo_cap, cfg.queue_depth
+            );
+            server.join();
+            println!("drained cleanly");
         }
         "list-workloads" => {
             if format != Format::Text {
@@ -611,7 +642,7 @@ commands (all accept --format text|json|csv):
   compare <file.s> --arch skl|zen [--unroll N]
   tables [--table1|--table3|--table5|--all]
   figures
-  serve [--requests N]
+  serve [--addr host:port] [--shards N] [--memo-cap N] [--queue-depth N] [--loopback [--requests N]]
   list-workloads"
     );
 }

@@ -107,6 +107,19 @@ pub enum Provenance {
     SynthesizedSuffix,
 }
 
+impl Provenance {
+    /// Stable machine-readable name (used by the JSON/CSV emitters and
+    /// the serve wire format).
+    pub fn name(self) -> &'static str {
+        match self {
+            Provenance::Direct => "direct",
+            Provenance::SynthesizedMem => "synth_mem",
+            Provenance::SynthesizedSplit => "synth_split",
+            Provenance::SynthesizedSuffix => "synth_suffix",
+        }
+    }
+}
+
 /// Resolved µ-ops for a concrete instruction, with provenance.
 #[derive(Debug, Clone)]
 pub struct ResolvedUops {

@@ -23,9 +23,13 @@ use crate::api::{AnalysisReport, Bound, OsacaError};
 use crate::report::render_occupancy;
 
 /// Version of the machine-readable report schema (JSON `schema_version`
-/// field, CSV first column). Bump on any change to the emitted key
-/// shape; numeric values may change freely.
-pub const SCHEMA_VERSION: u32 = 1;
+/// field, CSV first column, and the serve wire frames). Bump on any
+/// change to the emitted key shape; numeric values may change freely.
+///
+/// v2: the prediction object absorbed the per-line occupancy rows
+/// (`prediction.lines`, CSV `line_occupancy`/`line_hidden` records) and
+/// the serve error/stats/ok/overloaded frames joined the contract.
+pub const SCHEMA_VERSION: u32 = 2;
 
 /// The built-in output formats.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
@@ -137,7 +141,7 @@ impl Emitter for Text {
         // only appears alongside the opt-in frontend bound, so default
         // text output is unchanged from the pre-emitter layout.
         if frontend_on || r.unroll > 1 {
-            let p = r.prediction();
+            let p = r.prediction_shared();
             if frontend_on {
                 if let Some(w) = p.winner() {
                     let _ = writeln!(
@@ -169,7 +173,7 @@ impl Emitter for Json {
     }
 
     fn emit(&self, r: &AnalysisReport) -> String {
-        let p = r.prediction();
+        let p = r.prediction_shared();
         let mut out = String::from("{");
         let _ = write!(out, "\"schema_version\":{SCHEMA_VERSION},");
         push_str_field(&mut out, "name", &r.name);
@@ -203,6 +207,31 @@ impl Emitter for Json {
                 out.push(',');
             }
             push_bound(&mut out, b);
+        }
+        out.push_str("],\"lines\":[");
+        for (i, l) in p.lines.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            let _ = write!(out, "{{\"instr\":{},\"text\":", l.instr);
+            push_json_string(&mut out, &l.text);
+            out.push_str(",\"occupancy\":[");
+            for (j, v) in l.occupancy.iter().enumerate() {
+                if j > 0 {
+                    out.push(',');
+                }
+                out.push_str(&fmt_f32(*v));
+            }
+            out.push_str("],\"hidden\":[");
+            for (j, v) in l.hidden.iter().enumerate() {
+                if j > 0 {
+                    out.push(',');
+                }
+                out.push_str(&fmt_f32(*v));
+            }
+            out.push_str("],\"provenance\":");
+            push_json_string(&mut out, l.provenance.name());
+            out.push('}');
         }
         out.push_str("]}");
         if let Some(t) = &r.throughput {
@@ -279,7 +308,7 @@ impl Emitter for Csv {
     }
 
     fn emit(&self, r: &AnalysisReport) -> String {
-        let p = r.prediction();
+        let p = r.prediction_shared();
         let mut out = String::from(
             "schema_version,name,arch,isa,unroll,record,kind,resource,cy_per_asm_iter\n",
         );
@@ -319,6 +348,141 @@ impl Emitter for Csv {
                 );
             }
         }
+        // Per-line rows mirror `prediction.lines` in the JSON shape:
+        // one row per nonzero cell, kind = port, resource = the line
+        // label (`#<index> <instruction text>`, quoted — AT&T operand
+        // lists contain commas).
+        for l in &p.lines {
+            let label = csv_field(&format!("#{} {}", l.instr, l.text));
+            for (i, v) in l.occupancy.iter().enumerate() {
+                if *v != 0.0 {
+                    let _ = writeln!(
+                        out,
+                        "{prefix},line_occupancy,{},{label},{}",
+                        csv_field(&r.machine.ports[i]),
+                        fmt_f32(*v)
+                    );
+                }
+            }
+            for (i, v) in l.hidden.iter().enumerate() {
+                if *v != 0.0 {
+                    let _ = writeln!(
+                        out,
+                        "{prefix},line_hidden,{},{label},{}",
+                        csv_field(&r.machine.ports[i]),
+                        fmt_f32(*v)
+                    );
+                }
+            }
+        }
+        out
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Serve wire frames.
+//
+// The `osaca::serve` service speaks newline-delimited JSON; every frame
+// it emits is versioned with the same [`SCHEMA_VERSION`] as the report
+// emitters because the frames wrap (or stand in for) emitter output —
+// a consumer that pins the report shape needs the envelope pinned by
+// the same number, and an error/stats shape change is as much a wire
+// break as a report shape change. Frames are built here rather than in
+// `serve` so the whole machine-readable surface lives under one roof
+// (and one version-bump policy).
+// ---------------------------------------------------------------------------
+
+/// Success envelope for one `analyze` request. For the JSON format the
+/// rendered report is embedded raw (it is already a JSON object); text
+/// and CSV renderings are carried as a JSON string. `report` is the
+/// last key so stream consumers can slice it off positionally.
+pub fn ok_frame(format: Format, memo_hit: bool, rendered: &str) -> String {
+    let mut out = String::with_capacity(rendered.len() + 96);
+    let _ = write!(
+        out,
+        "{{\"schema_version\":{SCHEMA_VERSION},\"status\":\"ok\",\"memo_hit\":{memo_hit},\
+         \"format\":\"{}\",\"report\":",
+        format.name()
+    );
+    match format {
+        Format::Json => out.push_str(rendered),
+        Format::Text | Format::Csv => push_json_string(&mut out, rendered),
+    }
+    out.push('}');
+    out
+}
+
+/// Structured error envelope (`kind` is machine-readable — an
+/// [`OsacaError::kind_name`] or the wire-level `bad_request`).
+pub fn error_frame(kind: &str, message: &str) -> String {
+    let mut out = String::with_capacity(message.len() + 80);
+    let _ = write!(out, "{{\"schema_version\":{SCHEMA_VERSION},\"status\":\"error\",\"error\":{{\"kind\":");
+    push_json_string(&mut out, kind);
+    out.push_str(",\"message\":");
+    push_json_string(&mut out, message);
+    out.push_str("}}");
+    out
+}
+
+/// Backpressure envelope: the target shard's queue was full and the
+/// request was rejected without being enqueued.
+pub fn overloaded_frame(shard: usize, queue_depth: u64) -> String {
+    format!(
+        "{{\"schema_version\":{SCHEMA_VERSION},\"status\":\"overloaded\",\
+         \"shard\":{shard},\"queue_depth\":{queue_depth}}}"
+    )
+}
+
+/// Acknowledgement for a wire `shutdown` request, sent before the
+/// server drains.
+pub fn bye_frame() -> String {
+    format!("{{\"schema_version\":{SCHEMA_VERSION},\"status\":\"bye\"}}")
+}
+
+/// Snapshot rendered for a wire `stats` request. Plain data — `serve`
+/// fills it from its counters; rendering lives here with the other
+/// frames so the key set is covered by the schema-version policy.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct StatsFrame {
+    /// Analyze-op responses sent (ok + error + overloaded).
+    pub served: u64,
+    /// Requests answered from the cross-request memo.
+    pub memo_hits: u64,
+    /// Requests that missed the memo and ran an analysis.
+    pub memo_misses: u64,
+    /// Full analyses executed (misses that reached an engine).
+    pub analyses: u64,
+    /// Error frames sent.
+    pub errors: u64,
+    /// Overloaded frames sent.
+    pub overloaded: u64,
+    /// Memo entries currently resident.
+    pub memo_len: u64,
+    /// Per-shard queued+in-flight gauge at snapshot time.
+    pub queue_depths: Vec<u64>,
+}
+
+impl StatsFrame {
+    pub fn render(&self) -> String {
+        let mut out = format!(
+            "{{\"schema_version\":{SCHEMA_VERSION},\"status\":\"stats\",\"served\":{},\
+             \"memo_hits\":{},\"memo_misses\":{},\"analyses\":{},\"errors\":{},\
+             \"overloaded\":{},\"memo_len\":{},\"queue_depths\":[",
+            self.served,
+            self.memo_hits,
+            self.memo_misses,
+            self.analyses,
+            self.errors,
+            self.overloaded,
+            self.memo_len
+        );
+        for (i, d) in self.queue_depths.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            let _ = write!(out, "{d}");
+        }
+        out.push_str("]}");
         out
     }
 }
@@ -415,6 +579,30 @@ mod tests {
             }
             other => panic!("expected UnsupportedFormat, got {other:?}"),
         }
+    }
+
+    #[test]
+    fn wire_frames_are_versioned_and_escaped() {
+        let ok = ok_frame(Format::Json, true, "{\"k\":1}");
+        assert!(ok.starts_with("{\"schema_version\":2,\"status\":\"ok\",\"memo_hit\":true,"));
+        assert!(ok.ends_with(",\"report\":{\"k\":1}}"), "report must be the raw last key: {ok}");
+        let ok_text = ok_frame(Format::Text, false, "line one\nline two");
+        assert!(ok_text.ends_with(",\"report\":\"line one\\nline two\"}"));
+
+        let e = error_frame("bad_request", "not a \"frame\"");
+        assert!(e.starts_with("{\"schema_version\":2,\"status\":\"error\",\"error\":{\"kind\":\"bad_request\""));
+        assert!(e.contains("\\\"frame\\\""));
+
+        assert_eq!(
+            overloaded_frame(1, 64),
+            "{\"schema_version\":2,\"status\":\"overloaded\",\"shard\":1,\"queue_depth\":64}"
+        );
+        assert_eq!(bye_frame(), "{\"schema_version\":2,\"status\":\"bye\"}");
+
+        let s = StatsFrame { served: 2, memo_hits: 1, queue_depths: vec![0, 3], ..Default::default() };
+        let rendered = s.render();
+        assert!(rendered.starts_with("{\"schema_version\":2,\"status\":\"stats\",\"served\":2,"));
+        assert!(rendered.ends_with("\"queue_depths\":[0,3]}"));
     }
 
     #[test]

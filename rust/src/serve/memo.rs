@@ -1,0 +1,196 @@
+//! Cross-request memoization: `(kernel, model, config) → Arc<report>`.
+//!
+//! The key is [`crate::api::AnalysisRequest::fingerprint`] — it covers
+//! everything analysis-relevant and excludes the presentation-only
+//! `name`/`format` fields, so differently-labelled requests for the
+//! same analysis share one slot. The value is a shared
+//! [`AnalysisReport`] whose `prediction_cell` the server fills once at
+//! insert time: every hit clones the report (cheap — the sections are
+//! small and the decomposition rides behind the `Arc`), patches the
+//! presentation fields from the incoming request, and renders.
+//!
+//! Bounded true-LRU: a `HashMap` into a slab-backed doubly-linked
+//! recency list. `get` promotes to the front, `insert` evicts the tail
+//! once `cap` entries are resident. All operations are O(1); the server
+//! holds the lock only for the map operation, never across an analysis.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use crate::api::AnalysisReport;
+
+const NIL: usize = usize::MAX;
+
+struct Slot {
+    key: u64,
+    value: Arc<AnalysisReport>,
+    prev: usize,
+    next: usize,
+}
+
+/// Bounded LRU over analysis fingerprints. `cap == 0` disables
+/// memoization (every lookup misses, nothing is retained).
+pub struct MemoCache {
+    cap: usize,
+    map: HashMap<u64, usize>,
+    slots: Vec<Slot>,
+    free: Vec<usize>,
+    head: usize,
+    tail: usize,
+}
+
+impl MemoCache {
+    pub fn new(cap: usize) -> Self {
+        MemoCache {
+            cap,
+            map: HashMap::with_capacity(cap.min(1024)),
+            slots: Vec::with_capacity(cap.min(1024)),
+            free: Vec::new(),
+            head: NIL,
+            tail: NIL,
+        }
+    }
+
+    /// Entries currently resident.
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    /// Look up a fingerprint; a hit is promoted to most-recent.
+    pub fn get(&mut self, key: u64) -> Option<Arc<AnalysisReport>> {
+        let &i = self.map.get(&key)?;
+        self.unlink(i);
+        self.link_front(i);
+        Some(self.slots[i].value.clone())
+    }
+
+    /// Insert (or replace) an entry, evicting the least-recently-used
+    /// one when full.
+    pub fn insert(&mut self, key: u64, value: Arc<AnalysisReport>) {
+        if self.cap == 0 {
+            return;
+        }
+        if let Some(&i) = self.map.get(&key) {
+            self.slots[i].value = value;
+            self.unlink(i);
+            self.link_front(i);
+            return;
+        }
+        if self.map.len() >= self.cap {
+            let lru = self.tail;
+            debug_assert_ne!(lru, NIL);
+            self.unlink(lru);
+            self.map.remove(&self.slots[lru].key);
+            self.free.push(lru);
+        }
+        let slot = Slot { key, value, prev: NIL, next: NIL };
+        let i = match self.free.pop() {
+            Some(i) => {
+                self.slots[i] = slot;
+                i
+            }
+            None => {
+                self.slots.push(slot);
+                self.slots.len() - 1
+            }
+        };
+        self.map.insert(key, i);
+        self.link_front(i);
+    }
+
+    fn unlink(&mut self, i: usize) {
+        let (prev, next) = (self.slots[i].prev, self.slots[i].next);
+        if prev == NIL {
+            self.head = next;
+        } else {
+            self.slots[prev].next = next;
+        }
+        if next == NIL {
+            self.tail = prev;
+        } else {
+            self.slots[next].prev = prev;
+        }
+        self.slots[i].prev = NIL;
+        self.slots[i].next = NIL;
+    }
+
+    fn link_front(&mut self, i: usize) {
+        self.slots[i].prev = NIL;
+        self.slots[i].next = self.head;
+        if self.head != NIL {
+            self.slots[self.head].prev = i;
+        }
+        self.head = i;
+        if self.tail == NIL {
+            self.tail = i;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::{Engine, Passes};
+
+    fn report(name: &str) -> Arc<AnalysisReport> {
+        let engine = Engine::cpu_only();
+        let req = Engine::request(name)
+            .arch("skl")
+            .source(".L1:\naddl $1, %eax\njne .L1\n")
+            .passes(Passes::THROUGHPUT);
+        Arc::new(engine.analyze(&req).unwrap())
+    }
+
+    #[test]
+    fn evicts_least_recently_used() {
+        let r = report("m");
+        let mut c = MemoCache::new(2);
+        c.insert(1, r.clone());
+        c.insert(2, r.clone());
+        assert!(c.get(1).is_some()); // promote 1; 2 is now LRU
+        c.insert(3, r.clone());
+        assert_eq!(c.len(), 2);
+        assert!(c.get(2).is_none(), "2 was least recently used");
+        assert!(c.get(1).is_some());
+        assert!(c.get(3).is_some());
+    }
+
+    #[test]
+    fn replace_promotes_and_keeps_len() {
+        let r = report("m");
+        let mut c = MemoCache::new(2);
+        c.insert(1, r.clone());
+        c.insert(2, r.clone());
+        c.insert(1, r.clone()); // replace, promote
+        c.insert(3, r.clone()); // evicts 2
+        assert!(c.get(1).is_some());
+        assert!(c.get(2).is_none());
+        assert_eq!(c.len(), 2);
+    }
+
+    #[test]
+    fn zero_capacity_disables() {
+        let r = report("m");
+        let mut c = MemoCache::new(0);
+        c.insert(1, r);
+        assert!(c.is_empty());
+        assert!(c.get(1).is_none());
+    }
+
+    #[test]
+    fn hits_share_one_prediction_decomposition() {
+        let r = report("shared");
+        r.prediction_shared(); // fill the cell before insert, like the server
+        let mut c = MemoCache::new(4);
+        c.insert(9, r);
+        let a = c.get(9).unwrap();
+        // A hit clones the report (to patch name/format); the clone's
+        // decomposition must still be the same allocation.
+        let patched = (*a).clone();
+        assert!(Arc::ptr_eq(&a.prediction_shared(), &patched.prediction_shared()));
+    }
+}

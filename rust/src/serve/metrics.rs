@@ -1,0 +1,76 @@
+//! Serving counters, exposed through the wire `stats` op.
+//!
+//! Plain relaxed atomics — the counters are monotonic event counts with
+//! no cross-counter invariant to protect, so a `stats` snapshot taken
+//! mid-request may observe e.g. a memo miss whose analysis has not yet
+//! been counted. That is fine for an introspection surface; tests
+//! quiesce the server before asserting.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::report::emit::StatsFrame;
+
+/// Counters kept by the serve layer (the per-shard engines keep their
+/// own solver-side `ServiceStats` underneath).
+#[derive(Debug, Default)]
+pub struct ServeMetrics {
+    /// Analyze-op responses sent: ok + error + overloaded. Stats,
+    /// shutdown and test-op responses are not "served analyses".
+    pub served: AtomicU64,
+    /// Analyze requests answered from the cross-request memo.
+    pub memo_hits: AtomicU64,
+    /// Analyze requests that missed the memo.
+    pub memo_misses: AtomicU64,
+    /// Analyses actually executed by an engine (misses that got to run).
+    pub analyses: AtomicU64,
+    /// Error frames sent.
+    pub errors: AtomicU64,
+    /// Overloaded (backpressure) frames sent.
+    pub overloaded: AtomicU64,
+}
+
+impl ServeMetrics {
+    pub fn bump(counter: &AtomicU64) {
+        counter.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Snapshot into the schema-versioned wire frame. The memo length
+    /// and per-shard queue gauges live outside this struct and are
+    /// passed in by the server.
+    pub fn frame(&self, memo_len: u64, queue_depths: Vec<u64>) -> StatsFrame {
+        StatsFrame {
+            served: self.served.load(Ordering::Relaxed),
+            memo_hits: self.memo_hits.load(Ordering::Relaxed),
+            memo_misses: self.memo_misses.load(Ordering::Relaxed),
+            analyses: self.analyses.load(Ordering::Relaxed),
+            errors: self.errors.load(Ordering::Relaxed),
+            overloaded: self.overloaded.load(Ordering::Relaxed),
+            memo_len,
+            queue_depths,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn snapshot_carries_every_counter() {
+        let m = ServeMetrics::default();
+        ServeMetrics::bump(&m.served);
+        ServeMetrics::bump(&m.served);
+        ServeMetrics::bump(&m.memo_hits);
+        ServeMetrics::bump(&m.errors);
+        let f = m.frame(3, vec![0, 2]);
+        assert_eq!(f.served, 2);
+        assert_eq!(f.memo_hits, 1);
+        assert_eq!(f.memo_misses, 0);
+        assert_eq!(f.errors, 1);
+        assert_eq!(f.memo_len, 3);
+        assert_eq!(f.queue_depths, vec![0, 2]);
+        let rendered = f.render();
+        assert!(rendered.contains("\"served\":2"));
+        assert!(rendered.contains("\"queue_depths\":[0,2]"));
+    }
+}

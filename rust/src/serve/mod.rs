@@ -1,0 +1,518 @@
+//! `osaca::serve` — a persistent, sharded analysis service.
+//!
+//! The batch CLI pays the whole pipeline cost per invocation: process
+//! start, model registry construction, solver-thread spin-up, then one
+//! analysis. This module keeps all of that alive behind a TCP listener
+//! speaking newline-delimited, schema-versioned JSON frames (the
+//! request grammar is documented in [`wire`]; response frames are built
+//! by `report::emit` so the whole machine-readable surface shares one
+//! [`crate::report::emit::SCHEMA_VERSION`] policy).
+//!
+//! Architecture (DESIGN.md §9):
+//!
+//! * **Shards.** `ServeConfig::shards` long-lived [`Engine`]s, each
+//!   with its own solver coordinator and bounded job queue. Requests
+//!   route by `hash(arch) % shards`, so every model family lands on a
+//!   stable shard and its coordinator batches same-model solver work.
+//!   Built-in machine models are shared process-wide through the `mdb`
+//!   Arc cache, so shards do not duplicate model memory.
+//! * **Memoization.** A bounded LRU ([`memo::MemoCache`]) keyed by
+//!   [`AnalysisRequest::fingerprint`] — everything analysis-relevant,
+//!   nothing presentation-only. The cached value is an
+//!   `Arc<AnalysisReport>` whose `prediction_cell` is filled once at
+//!   insert; every hit clones the report, patches `name`/`format` from
+//!   the incoming request, and renders — sharing one bound
+//!   decomposition across all hits.
+//! * **Backpressure.** Connection threads `try_send` into the target
+//!   shard's bounded queue. A full queue answers immediately with a
+//!   structured `overloaded` frame (shard index + current gauge)
+//!   instead of blocking the connection or buffering unboundedly.
+//! * **Timeouts.** Each queued request waits at most
+//!   `ServeConfig::reply_timeout` (the same knob as the coordinator's
+//!   solver reply timeout) for its shard worker; expiry produces a
+//!   `solver_timeout` error frame. Reply channels are fresh per request
+//!   (not pooled like the coordinator's): a timed-out connection drops
+//!   its receiver and the worker's late `try_send` fails harmlessly,
+//!   so a stale reply can never be delivered to a later request.
+//! * **Drain.** Wire `shutdown` (or [`Server::shutdown`]) flips a flag
+//!   and wakes the accept loop with a self-connection. [`Server::join`]
+//!   then joins the accept thread, joins every connection thread
+//!   (in-flight replies complete first — the shard workers are still
+//!   alive), closes the shard queues, and joins the workers, which
+//!   drain whatever was already queued before exiting. Nothing accepted
+//!   is dropped on the floor.
+//! * **Introspection.** The wire `stats` op snapshots
+//!   [`metrics::ServeMetrics`] (served / memo hits / errors /
+//!   overloaded), the memo length and the per-shard queue gauges into a
+//!   schema-versioned frame.
+
+pub mod json;
+pub mod memo;
+pub mod metrics;
+pub mod wire;
+
+use std::io::{self, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{self, Receiver, SyncSender, TrySendError};
+use std::sync::{Arc, Mutex};
+use std::thread::{self, JoinHandle};
+use std::time::Duration;
+
+use crate::api::{AnalysisRequest, Backend, Engine, Format};
+use crate::coordinator::CoordinatorConfig;
+use crate::report::emit::{bye_frame, error_frame, ok_frame, overloaded_frame};
+
+use memo::MemoCache;
+use metrics::ServeMetrics;
+use wire::WireRequest;
+
+/// Server tunables.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Listen address (`host:port`; port 0 picks an ephemeral port —
+    /// read it back with [`Server::local_addr`]).
+    pub addr: String,
+    /// Number of engine shards (≥ 1).
+    pub shards: usize,
+    /// Cross-request memo capacity (entries; 0 disables memoization).
+    pub memo_cap: usize,
+    /// Bounded per-shard job queue depth (≥ 1); a full queue produces
+    /// `overloaded` frames.
+    pub queue_depth: usize,
+    /// Per-request reply timeout (also forwarded to each shard
+    /// engine's solver coordinator).
+    pub reply_timeout: Duration,
+    /// Solver backend for the shard engines.
+    pub backend: Backend,
+    /// Enable test-only wire ops (`sleep`) that exist so integration
+    /// tests can shape server load deterministically. Never enable in
+    /// production configurations.
+    pub test_ops: bool,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            addr: "127.0.0.1:7117".to_string(),
+            shards: 2,
+            memo_cap: 256,
+            queue_depth: 64,
+            reply_timeout: CoordinatorConfig::default().reply_timeout,
+            backend: Backend::Auto,
+            test_ops: false,
+        }
+    }
+}
+
+/// One engine shard: a long-lived [`Engine`] plus its bounded job
+/// queue and a queued+in-flight gauge.
+struct Shard {
+    engine: Engine,
+    /// `None` once the server is draining; taken by [`Server::join`]
+    /// so the worker's `recv` loop ends after the queue empties.
+    tx: Mutex<Option<SyncSender<Job>>>,
+    /// Jobs accepted but not yet fully processed (queued + in-flight).
+    queued: AtomicU64,
+}
+
+/// State shared by the accept loop, connection threads and shard
+/// workers.
+struct Shared {
+    shards: Vec<Shard>,
+    metrics: ServeMetrics,
+    memo: Mutex<MemoCache>,
+    shutdown: AtomicBool,
+    conns: Mutex<Vec<JoinHandle<()>>>,
+    reply_timeout: Duration,
+    test_ops: bool,
+    addr: SocketAddr,
+}
+
+impl Shared {
+    fn initiate_shutdown(&self) {
+        if self.shutdown.swap(true, Ordering::SeqCst) {
+            return;
+        }
+        // Wake the accept loop; the dummy connection is dropped there.
+        let _ = TcpStream::connect(self.addr);
+    }
+}
+
+/// A shard job. Replies travel over a fresh 1-slot channel per request
+/// so timeouts cannot leak a reply into a later request.
+enum Job {
+    Analyze { req: AnalysisRequest, key: u64, reply: SyncSender<String> },
+    Sleep { ms: u64, reply: SyncSender<String> },
+}
+
+/// The running service. Bind with [`Server::bind`], stop with a wire
+/// `shutdown` frame or [`Server::shutdown`], and wait for the drain
+/// with [`Server::join`].
+pub struct Server {
+    shared: Arc<Shared>,
+    addr: SocketAddr,
+    accept: Option<JoinHandle<()>>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl Server {
+    /// Bind the listener and start the accept loop and shard workers.
+    pub fn bind(cfg: ServeConfig) -> io::Result<Server> {
+        let listener = TcpListener::bind(&cfg.addr)?;
+        let addr = listener.local_addr()?;
+        let n = cfg.shards.max(1);
+        let mut rxs: Vec<Receiver<Job>> = Vec::with_capacity(n);
+        let mut shards: Vec<Shard> = Vec::with_capacity(n);
+        for _ in 0..n {
+            let (tx, rx) = mpsc::sync_channel(cfg.queue_depth.max(1));
+            rxs.push(rx);
+            shards.push(Shard {
+                engine: Engine::builder()
+                    .backend(cfg.backend)
+                    .reply_timeout(cfg.reply_timeout)
+                    .build(),
+                tx: Mutex::new(Some(tx)),
+                queued: AtomicU64::new(0),
+            });
+        }
+        let shared = Arc::new(Shared {
+            shards,
+            metrics: ServeMetrics::default(),
+            memo: Mutex::new(MemoCache::new(cfg.memo_cap)),
+            shutdown: AtomicBool::new(false),
+            conns: Mutex::new(Vec::new()),
+            reply_timeout: cfg.reply_timeout,
+            test_ops: cfg.test_ops,
+            addr,
+        });
+        let workers = rxs
+            .into_iter()
+            .enumerate()
+            .map(|(i, rx)| {
+                let s = shared.clone();
+                thread::Builder::new()
+                    .name(format!("osaca-serve-shard{i}"))
+                    .spawn(move || shard_worker(&s, i, rx))
+                    .expect("spawn shard worker")
+            })
+            .collect();
+        let accept = {
+            let s = shared.clone();
+            thread::Builder::new()
+                .name("osaca-serve-accept".to_string())
+                .spawn(move || accept_loop(&s, listener))
+                .expect("spawn accept loop")
+        };
+        Ok(Server { shared, addr, accept: Some(accept), workers })
+    }
+
+    /// The bound address (resolves port 0).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Programmatic equivalent of the wire `shutdown` op.
+    pub fn shutdown(&self) {
+        self.shared.initiate_shutdown();
+    }
+
+    /// Block until the server has shut down and fully drained: accept
+    /// loop gone, every connection answered, every queued job
+    /// processed, every worker joined. Without a `shutdown` trigger
+    /// this serves forever — the CLI's foreground mode.
+    pub fn join(mut self) {
+        self.drain();
+    }
+
+    fn drain(&mut self) {
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        // The accept loop is gone, so the conns vector only shrinks
+        // from here; loop in case a connection was being registered
+        // while we took the first batch.
+        loop {
+            let conns: Vec<JoinHandle<()>> =
+                std::mem::take(&mut *self.shared.conns.lock().expect("conns"));
+            if conns.is_empty() {
+                break;
+            }
+            for c in conns {
+                let _ = c.join();
+            }
+        }
+        for shard in &self.shared.shards {
+            shard.tx.lock().expect("shard tx").take();
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        // Forced teardown (join() leaves nothing for this to do): flip
+        // the flag so conn threads and the accept loop exit, then
+        // drain as usual.
+        self.shared.initiate_shutdown();
+        self.drain();
+    }
+}
+
+/// Stable shard routing: FNV-1a over the lower-cased arch name. Every
+/// model family maps to one shard, so its solver work batches together
+/// and its engine's model registry stays hot.
+fn shard_index(arch: &str, shards: usize) -> usize {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in arch.bytes() {
+        h ^= b.to_ascii_lowercase() as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    (h % shards.max(1) as u64) as usize
+}
+
+fn accept_loop(shared: &Arc<Shared>, listener: TcpListener) {
+    loop {
+        match listener.accept() {
+            Ok((stream, _)) => {
+                if shared.shutdown.load(Ordering::Relaxed) {
+                    // The wake-up self-connection (or a late client);
+                    // drop it and stop accepting.
+                    return;
+                }
+                let s = shared.clone();
+                let handle = thread::Builder::new()
+                    .name("osaca-serve-conn".to_string())
+                    .spawn(move || handle_conn(s, stream))
+                    .expect("spawn connection thread");
+                shared.conns.lock().expect("conns").push(handle);
+            }
+            Err(_) => {
+                if shared.shutdown.load(Ordering::Relaxed) {
+                    return;
+                }
+            }
+        }
+    }
+}
+
+/// Outcome of a non-blocking queue submission.
+enum Submit {
+    Queued,
+    Full(u64),
+    Closed,
+}
+
+fn submit(shared: &Shared, idx: usize, job: Job) -> Submit {
+    let shard = &shared.shards[idx];
+    let guard = shard.tx.lock().expect("shard tx");
+    let Some(tx) = guard.as_ref() else {
+        return Submit::Closed;
+    };
+    // Gauge counts queued + in-flight: incremented here, decremented by
+    // the worker after it finishes the job (rolled back on rejection).
+    shard.queued.fetch_add(1, Ordering::Relaxed);
+    match tx.try_send(job) {
+        Ok(()) => Submit::Queued,
+        Err(TrySendError::Full(_)) => {
+            let depth = shard.queued.fetch_sub(1, Ordering::Relaxed) - 1;
+            Submit::Full(depth)
+        }
+        Err(TrySendError::Disconnected(_)) => {
+            shard.queued.fetch_sub(1, Ordering::Relaxed);
+            Submit::Closed
+        }
+    }
+}
+
+fn handle_conn(shared: Arc<Shared>, mut stream: TcpStream) {
+    // Short read timeout: the read loop polls the shutdown flag between
+    // attempts, so idle connections notice a drain within ~100ms.
+    let _ = stream.set_read_timeout(Some(Duration::from_millis(100)));
+    let mut buf: Vec<u8> = Vec::new();
+    while let Some(line) = read_frame(&mut stream, &mut buf, &shared.shutdown) {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let response = match wire::parse_request(line, shared.test_ops) {
+            Err(e) => {
+                // Malformed frame: structured error, connection stays
+                // open. Not counted as "served" — we cannot even tell
+                // which op it was.
+                ServeMetrics::bump(&shared.metrics.errors);
+                error_frame(e.kind, &e.message)
+            }
+            Ok(WireRequest::Stats) => {
+                let memo_len = shared.memo.lock().expect("memo").len() as u64;
+                let depths =
+                    shared.shards.iter().map(|s| s.queued.load(Ordering::Relaxed)).collect();
+                shared.metrics.frame(memo_len, depths).render()
+            }
+            Ok(WireRequest::Shutdown) => {
+                let _ = write_frame(&mut stream, &bye_frame());
+                shared.initiate_shutdown();
+                return;
+            }
+            Ok(WireRequest::Sleep { ms }) => {
+                let (rtx, rrx) = mpsc::sync_channel(1);
+                match submit(&shared, 0, Job::Sleep { ms, reply: rtx }) {
+                    Submit::Queued => rrx
+                        .recv_timeout(shared.reply_timeout + Duration::from_millis(ms))
+                        .unwrap_or_else(|_| {
+                            error_frame("solver_timeout", "sleep reply timed out")
+                        }),
+                    Submit::Full(depth) => overloaded_frame(0, depth),
+                    Submit::Closed => error_frame("service_unavailable", "server is draining"),
+                }
+            }
+            Ok(WireRequest::Analyze(req)) => {
+                let idx = shard_index(&req.arch, shared.shards.len());
+                let key = req.fingerprint();
+                let (rtx, rrx) = mpsc::sync_channel(1);
+                let resp = match submit(&shared, idx, Job::Analyze { req, key, reply: rtx }) {
+                    Submit::Queued => match rrx.recv_timeout(shared.reply_timeout) {
+                        Ok(frame) => frame,
+                        Err(_) => {
+                            ServeMetrics::bump(&shared.metrics.errors);
+                            error_frame(
+                                "solver_timeout",
+                                &format!("no reply within {:?}", shared.reply_timeout),
+                            )
+                        }
+                    },
+                    Submit::Full(depth) => {
+                        ServeMetrics::bump(&shared.metrics.overloaded);
+                        overloaded_frame(idx, depth)
+                    }
+                    Submit::Closed => {
+                        ServeMetrics::bump(&shared.metrics.errors);
+                        error_frame("service_unavailable", "server is draining")
+                    }
+                };
+                ServeMetrics::bump(&shared.metrics.served);
+                resp
+            }
+        };
+        if !write_frame(&mut stream, &response) {
+            return;
+        }
+    }
+}
+
+/// Read one newline-terminated frame, polling the shutdown flag
+/// between read attempts. Returns `None` on connection close, IO
+/// error, or drain.
+fn read_frame(stream: &mut TcpStream, buf: &mut Vec<u8>, shutdown: &AtomicBool) -> Option<String> {
+    let mut chunk = [0u8; 4096];
+    loop {
+        if let Some(pos) = buf.iter().position(|&b| b == b'\n') {
+            let line: Vec<u8> = buf.drain(..=pos).collect();
+            let mut line = String::from_utf8_lossy(&line[..line.len() - 1]).into_owned();
+            if line.ends_with('\r') {
+                line.pop();
+            }
+            return Some(line);
+        }
+        if shutdown.load(Ordering::Relaxed) {
+            return None;
+        }
+        match stream.read(&mut chunk) {
+            Ok(0) => return None,
+            Ok(n) => buf.extend_from_slice(&chunk[..n]),
+            Err(e) if matches!(e.kind(), io::ErrorKind::WouldBlock | io::ErrorKind::TimedOut) => {
+                continue
+            }
+            Err(_) => return None,
+        }
+    }
+}
+
+fn write_frame(stream: &mut TcpStream, frame: &str) -> bool {
+    stream.write_all(frame.as_bytes()).and_then(|()| stream.write_all(b"\n")).is_ok()
+}
+
+fn shard_worker(shared: &Shared, index: usize, rx: Receiver<Job>) {
+    // `recv` fails once the server takes the shard's sender; every job
+    // queued before that is still delivered first, which is exactly the
+    // graceful-drain contract.
+    while let Ok(job) = rx.recv() {
+        match job {
+            Job::Analyze { req, key, reply } => {
+                let frame = analyze_job(shared, index, req, key);
+                // A timed-out connection dropped its receiver; the
+                // failed send is the intended outcome then.
+                let _ = reply.try_send(frame);
+            }
+            Job::Sleep { ms, reply } => {
+                thread::sleep(Duration::from_millis(ms));
+                let _ = reply.try_send(ok_frame(Format::Text, false, "slept"));
+            }
+        }
+        shared.shards[index].queued.fetch_sub(1, Ordering::Relaxed);
+    }
+}
+
+fn analyze_job(shared: &Shared, index: usize, req: AnalysisRequest, key: u64) -> String {
+    if let Some(hit) = shared.memo.lock().expect("memo").get(key) {
+        ServeMetrics::bump(&shared.metrics.memo_hits);
+        // The fingerprint excludes presentation fields, so patch them
+        // from this request before rendering. The clone shares the
+        // cached report's Arc'd prediction decomposition.
+        let mut patched = (*hit).clone();
+        patched.name = req.name;
+        patched.format = req.format;
+        return ok_frame(patched.format, true, &patched.render());
+    }
+    ServeMetrics::bump(&shared.metrics.memo_misses);
+    ServeMetrics::bump(&shared.metrics.analyses);
+    match shared.shards[index].engine.analyze(&req) {
+        Ok(report) => {
+            let format = report.format;
+            let arc = Arc::new(report);
+            // Fill the shared decomposition once, before the report
+            // becomes visible to other requests.
+            arc.prediction_shared();
+            let rendered = arc.render();
+            shared.memo.lock().expect("memo").insert(key, arc);
+            ok_frame(format, false, &rendered)
+        }
+        Err(e) => {
+            // Failures are not memoized: a registered-later model or a
+            // transient solver problem should not pin an error.
+            ServeMetrics::bump(&shared.metrics.errors);
+            error_frame(e.kind_name(), &e.to_string())
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shard_routing_is_stable_and_case_insensitive() {
+        for arches in [["skl", "SKL"], ["zen", "Zen"], ["rv64", "RV64"]] {
+            assert_eq!(shard_index(arches[0], 4), shard_index(arches[1], 4));
+        }
+        // Different families spread (not all on one shard for the
+        // built-ins we ship).
+        let idx: Vec<usize> =
+            ["skl", "zen", "hsw", "tx2", "rv64"].iter().map(|a| shard_index(a, 4)).collect();
+        assert!(idx.iter().any(|&i| i != idx[0]), "built-ins all collided: {idx:?}");
+        // Single shard degenerates safely.
+        assert_eq!(shard_index("skl", 1), 0);
+        assert_eq!(shard_index("skl", 0), 0);
+    }
+
+    #[test]
+    fn config_defaults_are_documented_values() {
+        let c = ServeConfig::default();
+        assert_eq!(c.shards, 2);
+        assert_eq!(c.memo_cap, 256);
+        assert_eq!(c.queue_depth, 64);
+        assert!(!c.test_ops);
+    }
+}

@@ -1,0 +1,200 @@
+//! Wire request decoding: one newline-delimited JSON frame → one
+//! [`WireRequest`].
+//!
+//! The request grammar (responses are built in `report::emit` — the
+//! frames share [`crate::report::emit::SCHEMA_VERSION`] with the report
+//! emitters):
+//!
+//! ```json
+//! {"op":"analyze","arch":"skl","source":"...","name":"triad",
+//!  "passes":["throughput","critpath"],"frontend_bound":false,
+//!  "unroll":4,"format":"json"}
+//! {"op":"stats"}
+//! {"op":"shutdown"}
+//! {"op":"sleep","ms":250}        // test-ops builds only
+//! ```
+//!
+//! `analyze` requires `arch` and `source`; everything else defaults
+//! (`passes` → analytic, `format` → json, `unroll` → 1, `name` →
+//! "wire"). Malformed frames produce a structured error with a
+//! machine-readable kind, never a disconnect — the connection survives
+//! and the client can retry.
+
+use crate::api::{AnalysisRequest, Format, Passes};
+use crate::serve::json::{self, JsonValue};
+
+/// One decoded request frame.
+#[derive(Debug)]
+pub enum WireRequest {
+    Analyze(AnalysisRequest),
+    Stats,
+    Shutdown,
+    /// Test-ops only: occupy a shard worker for `ms` milliseconds so
+    /// tests can saturate a queue deterministically.
+    Sleep { ms: u64 },
+}
+
+/// Why a frame could not be decoded. `kind` is the machine-readable
+/// error kind for the error frame (`bad_request` for grammar problems,
+/// `unsupported_format` for a bad `format` value).
+#[derive(Debug)]
+pub struct FrameError {
+    pub kind: &'static str,
+    pub message: String,
+}
+
+impl FrameError {
+    fn bad(message: impl Into<String>) -> FrameError {
+        FrameError { kind: "bad_request", message: message.into() }
+    }
+}
+
+/// Decode one frame. `test_ops` gates the ops that exist only so the
+/// integration tests can shape server load (`sleep`).
+pub fn parse_request(line: &str, test_ops: bool) -> Result<WireRequest, FrameError> {
+    let v = json::parse(line).map_err(|e| FrameError::bad(e.to_string()))?;
+    if !matches!(v, JsonValue::Obj(_)) {
+        return Err(FrameError::bad("frame must be a JSON object"));
+    }
+    let op = v
+        .get("op")
+        .and_then(JsonValue::as_str)
+        .ok_or_else(|| FrameError::bad("missing string field `op`"))?;
+    match op {
+        "analyze" => analyze_request(&v).map(WireRequest::Analyze),
+        "stats" => Ok(WireRequest::Stats),
+        "shutdown" => Ok(WireRequest::Shutdown),
+        "sleep" if test_ops => {
+            let ms = v
+                .get("ms")
+                .and_then(JsonValue::as_u64)
+                .ok_or_else(|| FrameError::bad("`sleep` needs integer field `ms`"))?;
+            Ok(WireRequest::Sleep { ms })
+        }
+        other => Err(FrameError::bad(format!("unknown op `{other}`"))),
+    }
+}
+
+fn analyze_request(v: &JsonValue) -> Result<AnalysisRequest, FrameError> {
+    let arch = v
+        .get("arch")
+        .and_then(JsonValue::as_str)
+        .ok_or_else(|| FrameError::bad("`analyze` needs string field `arch`"))?;
+    let source = v
+        .get("source")
+        .and_then(JsonValue::as_str)
+        .ok_or_else(|| FrameError::bad("`analyze` needs string field `source`"))?;
+    let name = v.get("name").and_then(JsonValue::as_str).unwrap_or("wire");
+    let mut req = AnalysisRequest::new(name).arch(arch).source(source);
+
+    if let Some(passes) = v.get("passes") {
+        let names = passes
+            .as_array()
+            .ok_or_else(|| FrameError::bad("`passes` must be an array of pass names"))?;
+        let mut set = Passes::NONE;
+        for n in names {
+            let n = n
+                .as_str()
+                .ok_or_else(|| FrameError::bad("`passes` entries must be strings"))?;
+            set |= Passes::from_name(n)
+                .ok_or_else(|| FrameError::bad(format!("unknown pass `{n}`")))?;
+        }
+        req = req.passes(set);
+    }
+    if let Some(fb) = v.get("frontend_bound") {
+        let fb = fb
+            .as_bool()
+            .ok_or_else(|| FrameError::bad("`frontend_bound` must be a boolean"))?;
+        req = req.frontend_bound(fb);
+    }
+    if let Some(u) = v.get("unroll") {
+        let u = u
+            .as_u64()
+            .ok_or_else(|| FrameError::bad("`unroll` must be a non-negative integer"))?;
+        req = req.unroll(u as usize);
+    }
+    match v.get("format") {
+        None => req = req.format(Format::Json),
+        Some(f) => {
+            let f = f.as_str().ok_or_else(|| FrameError::bad("`format` must be a string"))?;
+            let format = Format::parse(f).map_err(|e| FrameError {
+                kind: "unsupported_format",
+                message: e.to_string(),
+            })?;
+            req = req.format(format);
+        }
+    }
+    Ok(req)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn analyze_defaults_and_overrides() {
+        let r = parse_request(
+            "{\"op\":\"analyze\",\"arch\":\"skl\",\"source\":\".L1:\\njne .L1\\n\"}",
+            false,
+        )
+        .unwrap();
+        let WireRequest::Analyze(req) = r else { panic!("expected analyze") };
+        assert_eq!(req.arch, "skl");
+        assert_eq!(req.name, "wire");
+        assert_eq!(req.passes, Passes::ANALYTIC);
+        assert_eq!(req.format, Format::Json, "wire default is json, not text");
+        assert_eq!(req.unroll, 1);
+
+        let r = parse_request(
+            "{\"op\":\"analyze\",\"arch\":\"rv64\",\"source\":\"x\",\"name\":\"triad\",\
+             \"passes\":[\"throughput\",\"critpath\"],\"frontend_bound\":true,\
+             \"unroll\":4,\"format\":\"csv\"}",
+            false,
+        )
+        .unwrap();
+        let WireRequest::Analyze(req) = r else { panic!("expected analyze") };
+        assert_eq!(req.name, "triad");
+        assert_eq!(req.passes, Passes::THROUGHPUT | Passes::CRITPATH);
+        assert!(req.frontend_bound);
+        assert_eq!(req.unroll, 4);
+        assert_eq!(req.format, Format::Csv);
+    }
+
+    #[test]
+    fn control_ops_parse() {
+        assert!(matches!(parse_request("{\"op\":\"stats\"}", false), Ok(WireRequest::Stats)));
+        assert!(matches!(
+            parse_request("{\"op\":\"shutdown\"}", false),
+            Ok(WireRequest::Shutdown)
+        ));
+        assert!(matches!(
+            parse_request("{\"op\":\"sleep\",\"ms\":50}", true),
+            Ok(WireRequest::Sleep { ms: 50 })
+        ));
+        // sleep is gated behind test_ops.
+        let e = parse_request("{\"op\":\"sleep\",\"ms\":50}", false).unwrap_err();
+        assert_eq!(e.kind, "bad_request");
+    }
+
+    #[test]
+    fn malformed_frames_are_structured_errors() {
+        for (frame, kind) in [
+            ("not json", "bad_request"),
+            ("[1,2]", "bad_request"),
+            ("{\"op\":\"warp\"}", "bad_request"),
+            ("{\"op\":\"analyze\",\"source\":\"x\"}", "bad_request"),
+            ("{\"op\":\"analyze\",\"arch\":\"skl\"}", "bad_request"),
+            (
+                "{\"op\":\"analyze\",\"arch\":\"skl\",\"source\":\"x\",\"passes\":[\"warp\"]}",
+                "bad_request",
+            ),
+            (
+                "{\"op\":\"analyze\",\"arch\":\"skl\",\"source\":\"x\",\"format\":\"yaml\"}",
+                "unsupported_format",
+            ),
+        ] {
+            let e = parse_request(frame, false).unwrap_err();
+            assert_eq!(e.kind, kind, "frame: {frame}");
+        }
+    }
+}

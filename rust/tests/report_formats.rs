@@ -3,7 +3,7 @@
 //! * Golden-file snapshots of the JSON and CSV emitters for one x86 and
 //!   one RISC-V fixture (the rv64 one with the width-aware frontend
 //!   bound on, so the full bound decomposition is pinned byte-for-byte).
-//! * A schema lock: the version-1 JSON key set is pinned, so changing
+//! * A schema lock: the version-2 JSON key set is pinned, so changing
 //!   the emitted shape without bumping `SCHEMA_VERSION` (and this test)
 //!   fails CI.
 //! * A hand-rolled JSON validity check over every workload fixture ×
@@ -73,12 +73,14 @@ fn csv_golden_rv64_triad() {
     assert_eq!(got.trim_end(), want.trim_end());
 }
 
-/// The version-1 key set. Changing the JSON shape requires bumping
+/// The version-2 key set (v1 + the per-line occupancy rows absorbed
+/// into `prediction.lines`: hidden, instr, lines, occupancy,
+/// provenance, text). Changing the JSON shape requires bumping
 /// `SCHEMA_VERSION` *and* pinning the new set here — one without the
 /// other fails.
 #[test]
 fn schema_version_pins_json_shape() {
-    const V1_KEYS: &[&str] = &[
+    const V2_KEYS: &[&str] = &[
         "arch",
         "baseline",
         "bottleneck_port",
@@ -91,29 +93,35 @@ fn schema_version_pins_json_shape() {
         "cycles_per_iteration",
         "forwarded_loads",
         "frontend",
+        "hidden",
+        "instr",
         "intra_iteration",
         "isa",
         "issue_stall_cycles",
         "iterations",
         "kind",
+        "lines",
         "model_bound",
         "name",
+        "occupancy",
         "prediction",
+        "provenance",
         "rename_width",
         "resource",
         "schema_version",
         "simulation",
         "slots",
         "source",
+        "text",
         "throughput",
         "totals",
         "uniform_cy",
         "unroll",
     ];
-    // This test pins version 1. A schema bump invalidates it by
+    // This test pins version 2. A schema bump invalidates it by
     // construction: update SCHEMA_VERSION, this constant and the pinned
     // key list together.
-    assert_eq!(SCHEMA_VERSION, 1, "schema bumped: re-pin the key set for the new version");
+    assert_eq!(SCHEMA_VERSION, 2, "schema bumped: re-pin the key set for the new version");
     // A report with every section present (all passes + frontend
     // bound) must emit exactly the pinned keys.
     let engine = Engine::cpu_only();
@@ -133,7 +141,7 @@ fn schema_version_pins_json_shape() {
     let mut keys = json_keys(&report.to_json());
     keys.sort();
     keys.dedup();
-    assert_eq!(keys, V1_KEYS, "JSON shape changed without a SCHEMA_VERSION bump");
+    assert_eq!(keys, V2_KEYS, "JSON shape changed without a SCHEMA_VERSION bump");
 }
 
 /// Every fixture × matching built-in model emits valid JSON and

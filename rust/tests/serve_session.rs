@@ -1,0 +1,263 @@
+//! ISSUE-6: the persistent sharded analysis service, exercised over a
+//! real TCP socket.
+//!
+//! * Concurrent clients round-trip schema-versioned frames whose
+//!   embedded reports byte-match the emitter golden files.
+//! * The cross-request memo is observable on the wire: `memo_hit`
+//!   flips on the second identical request and the `stats` counters
+//!   pin hit/miss/analysis accounting exactly.
+//! * A saturated 1-slot shard queue answers `overloaded` instead of
+//!   blocking, and the same connection succeeds on retry.
+//! * Malformed frames produce structured errors and the connection
+//!   survives them.
+//! * A wire `shutdown` acknowledges with `bye` and the server drains
+//!   cleanly.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::thread;
+use std::time::Duration;
+
+use osaca::api::Backend;
+use osaca::report::emit::json_string;
+use osaca::serve::json::{self, JsonValue};
+use osaca::serve::{ServeConfig, Server};
+use osaca::workloads;
+
+/// A line-oriented test client over one persistent connection.
+struct Client {
+    stream: TcpStream,
+    reader: BufReader<TcpStream>,
+}
+
+impl Client {
+    fn connect(addr: std::net::SocketAddr) -> Client {
+        let stream = TcpStream::connect(addr).expect("connect");
+        stream.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+        let reader = BufReader::new(stream.try_clone().expect("clone stream"));
+        Client { stream, reader }
+    }
+
+    fn send(&mut self, frame: &str) {
+        self.stream.write_all(frame.as_bytes()).expect("send frame");
+        self.stream.write_all(b"\n").expect("send newline");
+    }
+
+    fn recv(&mut self) -> String {
+        let mut line = String::new();
+        let n = self.reader.read_line(&mut line).expect("read frame");
+        assert!(n > 0, "server closed the connection unexpectedly");
+        line.trim_end().to_string()
+    }
+
+    fn round_trip(&mut self, frame: &str) -> String {
+        self.send(frame);
+        self.recv()
+    }
+}
+
+fn serve(cfg: ServeConfig) -> Server {
+    Server::bind(cfg).expect("bind server")
+}
+
+fn cpu_config() -> ServeConfig {
+    ServeConfig { addr: "127.0.0.1:0".to_string(), backend: Backend::Cpu, ..Default::default() }
+}
+
+/// The wire request whose embedded report must byte-match
+/// `golden/skl_triad.json`.
+fn skl_request() -> String {
+    let w = workloads::find("triad", "skl", "-O3").unwrap();
+    format!(
+        "{{\"op\":\"analyze\",\"name\":\"{}\",\"arch\":\"skl\",\"source\":{},\
+         \"passes\":[\"throughput\"],\"unroll\":{},\"format\":\"json\"}}",
+        w.name(),
+        json_string(w.source),
+        w.unroll
+    )
+}
+
+/// The wire request whose embedded report must byte-match
+/// `golden/rv64_triad.json`.
+fn rv64_request() -> String {
+    let w = workloads::find("triad", "rv64", "-O2").unwrap();
+    format!(
+        "{{\"op\":\"analyze\",\"name\":\"{}\",\"arch\":\"rv64\",\"source\":{},\
+         \"passes\":[\"throughput\",\"critpath\"],\"frontend_bound\":true,\
+         \"unroll\":{},\"format\":\"json\"}}",
+        w.name(),
+        json_string(w.source),
+        w.unroll
+    )
+}
+
+/// Slice the raw report object out of an ok frame; `report` is the last
+/// key by contract so the payload runs to the closing brace.
+fn extract_report(frame: &str) -> &str {
+    let idx = frame.find("\"report\":").unwrap_or_else(|| panic!("no report key: {frame}"));
+    &frame[idx + "\"report\":".len()..frame.len() - 1]
+}
+
+fn parsed(frame: &str) -> JsonValue {
+    json::parse(frame).unwrap_or_else(|e| panic!("unparseable frame `{frame}`: {e}"))
+}
+
+fn status(frame: &str) -> String {
+    parsed(frame).get("status").and_then(JsonValue::as_str).expect("status").to_string()
+}
+
+#[test]
+fn concurrent_clients_round_trip_golden_frames() {
+    let server = serve(cpu_config());
+    let addr = server.local_addr();
+    let cases: [(String, &str); 2] = [
+        (skl_request(), include_str!("golden/skl_triad.json")),
+        (rv64_request(), include_str!("golden/rv64_triad.json")),
+    ];
+    let handles: Vec<_> = cases
+        .into_iter()
+        .map(|(request, golden)| {
+            thread::spawn(move || {
+                let mut c = Client::connect(addr);
+                for i in 0..3 {
+                    let frame = c.round_trip(&request);
+                    let v = parsed(&frame);
+                    assert_eq!(v.get("status").and_then(JsonValue::as_str), Some("ok"));
+                    assert_eq!(v.get("schema_version").and_then(JsonValue::as_u64), Some(2));
+                    // The memo works per fingerprint even under
+                    // concurrency: each client's repeats hit.
+                    let expect_hit = i > 0;
+                    assert_eq!(
+                        v.get("memo_hit").and_then(JsonValue::as_bool),
+                        Some(expect_hit),
+                        "request {i}: {frame}"
+                    );
+                    assert_eq!(extract_report(&frame), golden.trim_end(), "request {i}");
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().expect("client thread");
+    }
+    server.shutdown();
+    server.join();
+}
+
+#[test]
+fn memo_hits_are_pinned_in_stats() {
+    let server = serve(cpu_config());
+    let mut c = Client::connect(server.local_addr());
+    let request = skl_request();
+    let first = c.round_trip(&request);
+    assert!(first.contains("\"memo_hit\":false"), "{first}");
+    let second = c.round_trip(&request);
+    assert!(second.contains("\"memo_hit\":true"), "{second}");
+    assert_eq!(extract_report(&first), extract_report(&second));
+
+    let stats = parsed(&c.round_trip("{\"op\":\"stats\"}"));
+    let field = |k: &str| stats.get(k).and_then(JsonValue::as_u64).expect(k);
+    assert_eq!(field("served"), 2);
+    assert_eq!(field("analyses"), 1, "second request must not re-analyze");
+    assert_eq!(field("memo_hits"), 1);
+    assert_eq!(field("memo_misses"), 1);
+    assert_eq!(field("errors"), 0);
+    assert_eq!(field("overloaded"), 0);
+    assert_eq!(field("memo_len"), 1);
+    let depths = stats.get("queue_depths").and_then(JsonValue::as_array).expect("queue_depths");
+    assert_eq!(depths.len(), 2, "one gauge per shard");
+    server.shutdown();
+    server.join();
+}
+
+#[test]
+fn saturated_queue_answers_overloaded_then_recovers() {
+    let server = serve(ServeConfig {
+        shards: 1,
+        queue_depth: 1,
+        test_ops: true,
+        ..cpu_config()
+    });
+    let addr = server.local_addr();
+    // Occupy the single worker; the sleep job leaves the 1-slot queue
+    // buffer free once dequeued.
+    let mut blocker = Client::connect(addr);
+    blocker.send("{\"op\":\"sleep\",\"ms\":600}");
+    thread::sleep(Duration::from_millis(200));
+    // Fill the queue slot behind the sleeping job (no reply yet).
+    let mut queued = Client::connect(addr);
+    queued.send(&skl_request());
+    thread::sleep(Duration::from_millis(100));
+    // Queue full: the third client gets structured backpressure
+    // immediately rather than blocking.
+    let mut rejected = Client::connect(addr);
+    let frame = rejected.round_trip(&rv64_request());
+    let v = parsed(&frame);
+    assert_eq!(v.get("status").and_then(JsonValue::as_str), Some("overloaded"), "{frame}");
+    assert_eq!(v.get("shard").and_then(JsonValue::as_u64), Some(0));
+    assert!(v.get("queue_depth").and_then(JsonValue::as_u64).is_some(), "{frame}");
+
+    // The queued analyze completes once the worker wakes.
+    assert_eq!(status(&queued.recv()), "ok");
+    assert_eq!(status(&blocker.recv()), "ok");
+    // Same rejected connection, post-saturation: retry succeeds.
+    let mut ok = false;
+    for _ in 0..50 {
+        let frame = rejected.round_trip(&rv64_request());
+        if status(&frame) == "ok" {
+            ok = true;
+            break;
+        }
+        thread::sleep(Duration::from_millis(100));
+    }
+    assert!(ok, "retry after saturation never succeeded");
+    server.shutdown();
+    server.join();
+}
+
+#[test]
+fn malformed_frames_error_and_the_connection_survives() {
+    let server = serve(cpu_config());
+    let mut c = Client::connect(server.local_addr());
+
+    let frame = c.round_trip("not json");
+    let v = parsed(&frame);
+    assert_eq!(v.get("status").and_then(JsonValue::as_str), Some("error"), "{frame}");
+    let kind = v.get("error").and_then(|e| e.get("kind")).and_then(JsonValue::as_str);
+    assert_eq!(kind, Some("bad_request"), "{frame}");
+
+    // Analysis errors are structured too, with the library error kind.
+    let frame = c.round_trip(
+        "{\"op\":\"analyze\",\"arch\":\"mips\",\"source\":\".L1:\\nnop\\n\"}",
+    );
+    let v = parsed(&frame);
+    assert_eq!(v.get("status").and_then(JsonValue::as_str), Some("error"), "{frame}");
+    let kind = v.get("error").and_then(|e| e.get("kind")).and_then(JsonValue::as_str);
+    assert_eq!(kind, Some("unknown_arch"), "{frame}");
+
+    // Same connection, still serving.
+    let frame = c.round_trip(&skl_request());
+    assert_eq!(status(&frame), "ok");
+
+    // Bad frames are counted as errors but never as served analyses.
+    let stats = parsed(&c.round_trip("{\"op\":\"stats\"}"));
+    assert_eq!(stats.get("served").and_then(JsonValue::as_u64), Some(2));
+    assert_eq!(stats.get("errors").and_then(JsonValue::as_u64), Some(2));
+    server.shutdown();
+    server.join();
+}
+
+#[test]
+fn wire_shutdown_acknowledges_and_drains() {
+    let server = serve(cpu_config());
+    let addr = server.local_addr();
+    let mut c = Client::connect(addr);
+    assert_eq!(status(&c.round_trip(&skl_request())), "ok");
+    let bye = c.round_trip("{\"op\":\"shutdown\"}");
+    assert_eq!(parsed(&bye).get("status").and_then(JsonValue::as_str), Some("bye"), "{bye}");
+    // join() returns only after the accept loop, every connection and
+    // every shard worker has wound down.
+    server.join();
+    // The listener is gone: new connections are refused.
+    assert!(TcpStream::connect(addr).is_err(), "listener survived drain");
+}

@@ -17,6 +17,12 @@ derived rate (kernels/s, req/s, ...) is compared against the baseline:
 
 Tolerance defaults to 0.20 (±20%), override with OSACA_BENCH_TOLERANCE.
 
+OSACA_BENCH_REQUIRE (comma-separated benchmark names) lists benchmarks
+that must be present in the FRESH results regardless of the baseline's
+state — a required bench silently dropped from the suite must fail the
+gate, not read as "nothing regressed". The requirement is checked even
+while the placeholder-baseline skip below is active.
+
 While the committed baseline is still the PR-3 placeholder (empty
 `results`, no toolchain had ever existed in the dev containers), the
 comparison is meaningless: the script prints a warning and exits 0 so
@@ -51,6 +57,16 @@ def main():
     fresh = load(fresh_path)
     base_results = baseline.get("results") or {}
     fresh_results = fresh.get("results") or {}
+
+    required = [n for n in os.environ.get("OSACA_BENCH_REQUIRE", "").split(",") if n]
+    missing = [n for n in required if n not in fresh_results]
+    if missing:
+        print(
+            f"bench-baseline: FAILED — required benchmark(s) missing from "
+            f"{fresh_path}: {', '.join(missing)}",
+            file=sys.stderr,
+        )
+        return 1
 
     if not base_results:
         print(

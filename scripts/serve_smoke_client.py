@@ -1,0 +1,118 @@
+#!/usr/bin/env python3
+"""Smoke client for the `osaca serve` TCP service (ci.sh --serve-smoke).
+
+Usage: serve_smoke_client.py <host:port> <n_requests>
+
+Drives one live server end to end over the real socket:
+
+* sends <n_requests> `analyze` frames (alternating the shipped skl and
+  rv64 triad fixtures so both shards and both ISAs are exercised),
+  asserting every response is a schema-versioned `ok` frame whose
+  embedded JSON report parses;
+* asserts at least one `memo_hit:true` response once a fingerprint
+  repeats (n_requests >= 3 guarantees a repeat);
+* requests `stats` and asserts the counters cover the analyzes sent;
+* sends `shutdown` and asserts the `bye` acknowledgement.
+
+Exits non-zero (with a diagnostic on stderr) on the first violated
+expectation. The caller owns the server process and checks its clean
+exit separately.
+"""
+import json
+import socket
+import sys
+
+SCHEMA_VERSION = 2
+
+SKL_SOURCE = "workloads/triad/skl_o3.s"
+RV64_SOURCE = "workloads/triad/rv64_o2.s"
+
+
+def fail(msg):
+    print(f"serve-smoke: FAIL — {msg}", file=sys.stderr)
+    sys.exit(1)
+
+
+def request_frames():
+    with open(SKL_SOURCE) as f:
+        skl = f.read()
+    with open(RV64_SOURCE) as f:
+        rv64 = f.read()
+    return [
+        {
+            "op": "analyze",
+            "name": "smoke-skl",
+            "arch": "skl",
+            "source": skl,
+            "passes": ["throughput"],
+            "unroll": 4,
+        },
+        {
+            "op": "analyze",
+            "name": "smoke-rv64",
+            "arch": "rv64",
+            "source": rv64,
+            "passes": ["throughput", "critpath"],
+            "frontend_bound": True,
+            "unroll": 1,
+        },
+    ]
+
+
+def main():
+    if len(sys.argv) != 3:
+        print(__doc__, file=sys.stderr)
+        return 2
+    host, _, port = sys.argv[1].rpartition(":")
+    n = int(sys.argv[2])
+
+    sock = socket.create_connection((host, int(port)), timeout=30)
+    rfile = sock.makefile("r", encoding="utf-8")
+
+    def round_trip(frame):
+        sock.sendall((json.dumps(frame) + "\n").encode())
+        line = rfile.readline()
+        if not line:
+            fail("server closed the connection mid-session")
+        try:
+            return json.loads(line)
+        except json.JSONDecodeError as e:
+            fail(f"unparseable response frame: {e}: {line!r}")
+
+    templates = request_frames()
+    memo_hits = 0
+    for i in range(n):
+        resp = round_trip(templates[i % len(templates)])
+        if resp.get("schema_version") != SCHEMA_VERSION:
+            fail(f"response {i}: schema_version {resp.get('schema_version')}")
+        if resp.get("status") != "ok":
+            fail(f"response {i}: status {resp.get('status')}: {resp}")
+        report = resp.get("report")
+        if not isinstance(report, dict) or "prediction" not in report:
+            fail(f"response {i}: malformed embedded report: {resp}")
+        if resp.get("memo_hit"):
+            memo_hits += 1
+    if n >= 3 and memo_hits == 0:
+        fail("no memo hit despite repeated fingerprints")
+
+    stats = round_trip({"op": "stats"})
+    if stats.get("status") != "stats":
+        fail(f"stats frame: {stats}")
+    if stats.get("served", 0) < n:
+        fail(f"stats.served {stats.get('served')} < {n} analyzes sent")
+    if stats.get("memo_hits", 0) != memo_hits:
+        fail(f"stats.memo_hits {stats.get('memo_hits')} != observed {memo_hits}")
+
+    bye = round_trip({"op": "shutdown"})
+    if bye.get("status") != "bye":
+        fail(f"shutdown acknowledgement: {bye}")
+
+    print(
+        f"serve-smoke: OK — {n} analyzes "
+        f"({memo_hits} memo hits), stats consistent, clean shutdown"
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
