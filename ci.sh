@@ -1,12 +1,15 @@
 #!/usr/bin/env bash
 # CI entry point: tier-1 verification plus style, lint and perf gates.
 #
-# Usage: ./ci.sh [--quick|--bench-smoke|--isa-smoke|--serve-smoke]
+# Usage: ./ci.sh [--quick|--bench-smoke|--isa-smoke|--serve-smoke|--chaos-smoke]
 #   --quick        tier-1 only (skip fmt/clippy, the per-ISA sweep and
 #                  the bench smoke run)
 #   --bench-smoke  only the shrunken hot-path bench + baseline gate
 #   --isa-smoke    only the per-ISA CLI sweep over workloads/
 #   --serve-smoke  only the live `osaca serve` session smoke test
+#   --chaos-smoke  only the seeded fault-injection run against the
+#                  live binary (worker panics, limits, oversized and
+#                  torn frames must all degrade structurally)
 set -euo pipefail
 cd "$(dirname "$0")"
 
@@ -17,11 +20,12 @@ bench_smoke() {
     # Automated baseline gate (±20% on every shared derived rate).
     # While BENCH_hotpath.json is still the PR-3 placeholder the script
     # warns and passes; it arms itself once a real baseline is
-    # committed. See scripts/check_bench_baseline.py. The serve/req_s
-    # case must exist in the fresh run regardless — a silently dropped
-    # serving bench must not read as "no regression".
+    # committed. See scripts/check_bench_baseline.py. The serving
+    # cases (steady-state req/s and the load-shed rejection path) must
+    # exist in the fresh run regardless — a silently dropped serving
+    # bench must not read as "no regression".
     if command -v python3 >/dev/null 2>&1; then
-        OSACA_BENCH_REQUIRE=serve/req_s \
+        OSACA_BENCH_REQUIRE=serve/req_s,serve/shed_latency \
             python3 scripts/check_bench_baseline.py BENCH_hotpath.json "$fresh"
     else
         echo "bench-baseline: WARNING — python3 unavailable, comparison skipped"
@@ -80,6 +84,63 @@ serve_smoke() {
         exit 1
     fi
     echo "serve-smoke: OK"
+}
+
+# Chaos smoke: boot the shipped binary with seeded fault injection,
+# per-connection limits and test ops armed, then drive it with the
+# chaos mode of the smoke client. The fixed seed makes the fault
+# schedule reproducible; the client proves every degradation is a
+# structured frame, the panic counters are pinned nonzero, and the
+# server still drains cleanly afterwards — the full ladder on the
+# shipped binary, not just in-process.
+chaos_smoke() {
+    echo "== chaos smoke: seeded fault injection against the live binary =="
+    if ! command -v python3 >/dev/null 2>&1; then
+        echo "chaos-smoke: WARNING — python3 unavailable, leg skipped"
+        return 0
+    fi
+    cargo build --release
+    local bin=./target/release/osaca
+    local log="${TMPDIR:-/tmp}/osaca-chaos-smoke.log"
+    "$bin" serve --addr 127.0.0.1:0 --shards 2 --queue-depth 4 \
+        --chaos 7117 --test-ops --max-rps 2 --burst 3 \
+        --max-frame-bytes 65536 >"$log" 2>&1 &
+    local pid=$!
+    local addr="" i
+    for i in $(seq 1 100); do
+        addr="$(sed -n 's/^serving on //p' "$log" | head -n1)"
+        [[ -n "$addr" ]] && break
+        if ! kill -0 "$pid" 2>/dev/null; then
+            echo "chaos-smoke: server died during startup"
+            cat "$log"
+            exit 1
+        fi
+        sleep 0.1
+    done
+    if [[ -z "$addr" ]]; then
+        echo "chaos-smoke: server never reported its address"
+        cat "$log"
+        kill "$pid" 2>/dev/null || true
+        exit 1
+    fi
+    if ! python3 scripts/serve_smoke_client.py "$addr" 12 --chaos; then
+        kill "$pid" 2>/dev/null || true
+        cat "$log"
+        exit 1
+    fi
+    # Even after injected panics and torn frames, the wire shutdown
+    # must drain the server cleanly.
+    if ! wait "$pid"; then
+        echo "chaos-smoke: server exited non-zero after shutdown"
+        cat "$log"
+        exit 1
+    fi
+    if ! grep -q "drained cleanly" "$log"; then
+        echo "chaos-smoke: no clean-drain confirmation in the server log"
+        cat "$log"
+        exit 1
+    fi
+    echo "chaos-smoke: OK"
 }
 
 # Cross-ISA regression gate: run the CLI analyze path (parse + marker
@@ -149,6 +210,10 @@ case "${1:-}" in
         serve_smoke
         exit 0
         ;;
+    --chaos-smoke)
+        chaos_smoke
+        exit 0
+        ;;
 esac
 
 echo "== tier-1: build =="
@@ -176,6 +241,10 @@ if [[ "${1:-}" != "--quick" ]]; then
 
     # The shipped binary serving over a real socket to a python client.
     serve_smoke
+
+    # The same binary under seeded fault injection: every degradation
+    # must be a structured frame and the drain must stay clean.
+    chaos_smoke
 
     # Hot-path regressions fail loudly at two levels: the smoke bench
     # asserts the cached-model and warm-resolution counters while

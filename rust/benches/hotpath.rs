@@ -402,6 +402,87 @@ fn main() {
         server.join();
     }
 
+    // ---- serve: load-shed rejection latency -----------------------------
+    // How fast a saturated server says "no": a 1×1 deployment pinned at
+    // its full gauge (one job in flight, one queued) sheds every fresh
+    // analyze — admission ladder, memo probe, overloaded frame, socket
+    // round-trip — without touching a worker. Rejections must stay
+    // cheap or shedding defeats its purpose.
+    {
+        use osaca::report::emit::json_string;
+        use osaca::serve::{ServeConfig, Server};
+        use std::io::{BufRead, BufReader, Write};
+        use std::net::TcpStream;
+
+        let server = Server::bind(ServeConfig {
+            addr: "127.0.0.1:0".to_string(),
+            backend: osaca::api::Backend::Cpu,
+            shards: 1,
+            queue_depth: 1,
+            test_ops: true,
+            ..ServeConfig::default()
+        })
+        .expect("bind shed bench server");
+        let addr = server.local_addr();
+        let connect = || {
+            let stream = TcpStream::connect(addr).expect("connect");
+            let reader = BufReader::new(stream.try_clone().expect("clone"));
+            (stream, reader)
+        };
+        let round_trip = |stream: &mut TcpStream, reader: &mut BufReader<TcpStream>, f: &str| {
+            stream.write_all(f.as_bytes()).expect("send frame");
+            stream.write_all(b"\n").expect("send newline");
+            let mut line = String::new();
+            reader.read_line(&mut line).expect("read response");
+            line
+        };
+        // Saturate: one sleep in flight plus one queued is the full
+        // gauge of a 1×1 deployment — the auto shed threshold. The
+        // sleeps outlive the measured phase by a wide margin.
+        let (mut blocker, mut blocker_r) = connect();
+        blocker.write_all(b"{\"op\":\"sleep\",\"ms\":2500}\n").expect("blocker");
+        std::thread::sleep(std::time::Duration::from_millis(50));
+        let (mut filler, mut filler_r) = connect();
+        filler.write_all(b"{\"op\":\"sleep\",\"ms\":10}\n").expect("filler");
+        let (mut c, mut r) = connect();
+        loop {
+            let stats = round_trip(&mut c, &mut r, "{\"op\":\"stats\"}");
+            if stats.contains("\"shedding\":true") {
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(10));
+        }
+        // A request that is never memoized (it is always shed before it
+        // could be analyzed), so every round trip is a fresh rejection.
+        let w = workloads::find("triad", "skl", "-O3").unwrap();
+        let miss = format!(
+            "{{\"op\":\"analyze\",\"name\":{},\"arch\":\"skl\",\"source\":{},\
+             \"passes\":[\"analytic\"],\"unroll\":{}}}",
+            json_string(&w.name()),
+            json_string(w.source),
+            w.unroll
+        );
+        let rejects = if std::env::var("OSACA_BENCH_SMOKE").is_ok() { 100 } else { 500 };
+        let s = bench("serve/shed_latency", 1, 2, || {
+            for _ in 0..rejects {
+                let line = round_trip(&mut c, &mut r, &miss);
+                let shed = line.contains("\"status\":\"overloaded\"")
+                    && line.contains("\"shedding\":true");
+                assert!(shed, "expected a shed rejection: {line}");
+            }
+        });
+        let rate = rejects as f64 / s.median.as_secs_f64();
+        println!("{}  ({:.0} rejects/s)", s.report(), rate);
+        json.record(&s, &[("rejects_per_s", rate)]);
+        // Drain the sleepers before shutdown so join() is immediate.
+        let mut line = String::new();
+        blocker_r.read_line(&mut line).expect("blocker reply");
+        line.clear();
+        filler_r.read_line(&mut line).expect("filler reply");
+        server.shutdown();
+        server.join();
+    }
+
     // ---- machine-readable results ---------------------------------------
     let path =
         std::env::var("OSACA_BENCH_JSON").unwrap_or_else(|_| "BENCH_hotpath.json".to_string());

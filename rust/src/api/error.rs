@@ -123,6 +123,9 @@ impl From<SubmitError> for OsacaError {
             SubmitError::Closed => {
                 OsacaError::ServiceUnavailable { message: "solver thread gone".into() }
             }
+            SubmitError::Panicked { category } => OsacaError::Internal {
+                message: format!("solver worker panicked ({category}); backend restarted"),
+            },
         }
     }
 }

@@ -479,6 +479,11 @@ impl Engine {
                         SubmitError::Closed => OsacaError::ServiceUnavailable {
                             message: "solver thread gone".into(),
                         },
+                        SubmitError::Panicked { category } => OsacaError::Internal {
+                            message: format!(
+                                "solver worker panicked ({category}); backend restarted"
+                            ),
+                        },
                     });
                 }
             }

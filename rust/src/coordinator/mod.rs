@@ -21,6 +21,7 @@
 //! uses std::thread + mpsc; the public API is synchronous.
 
 use std::fmt;
+use std::panic::{self, AssertUnwindSafe};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{self, Receiver, RecvTimeoutError, SyncSender};
 use std::sync::{Arc, Mutex};
@@ -57,6 +58,11 @@ pub struct ServiceStats {
     /// solver thread dequeues. Surfaced as
     /// [`Coordinator::queue_depth`] for serving introspection.
     pub queued: AtomicU64,
+    /// Solver backends rebuilt after a caught panic: the solver thread
+    /// never dies with a request — it answers
+    /// [`SubmitError::Panicked`], restarts its backend, and keeps
+    /// serving the queue.
+    pub solver_restarts: AtomicU64,
 }
 
 impl ServiceStats {
@@ -110,6 +116,10 @@ pub enum SubmitError {
     Timeout { waited: Duration },
     /// The solver thread is gone (coordinator shut down).
     Closed,
+    /// The backend panicked on this request. The solver thread caught
+    /// it, rebuilt its backend, and kept serving; `category` is a
+    /// redacted stable label (panic payloads are never forwarded).
+    Panicked { category: String },
 }
 
 impl fmt::Display for SubmitError {
@@ -119,6 +129,9 @@ impl fmt::Display for SubmitError {
                 write!(f, "solver reply timeout after {waited:?}")
             }
             SubmitError::Closed => write!(f, "solver thread gone"),
+            SubmitError::Panicked { category } => {
+                write!(f, "solver worker panicked ({category}); backend restarted")
+            }
         }
     }
 }
@@ -133,14 +146,20 @@ enum SolverBackend {
     Cpu,
 }
 
+/// Reply payloads carry the panic category on failure so a submitter
+/// learns *why* there is no output instead of waiting out its timeout
+/// against a reply that will never come.
+type SingleReply = Result<SolveOut, String>;
+type BatchReply = Result<Vec<SolveOut>, String>;
+
 struct Job {
     enc: EncodedKernel,
-    reply: SyncSender<SolveOut>,
+    reply: SyncSender<SingleReply>,
 }
 
 struct BatchJob {
     encs: Vec<EncodedKernel>,
-    reply: SyncSender<Vec<SolveOut>>,
+    reply: SyncSender<BatchReply>,
 }
 
 enum Msg {
@@ -148,8 +167,8 @@ enum Msg {
     Many(BatchJob),
 }
 
-type SinglePool = Mutex<Vec<(SyncSender<SolveOut>, Receiver<SolveOut>)>>;
-type BatchPool = Mutex<Vec<(SyncSender<Vec<SolveOut>>, Receiver<Vec<SolveOut>>)>>;
+type SinglePool = Mutex<Vec<(SyncSender<SingleReply>, Receiver<SingleReply>)>>;
+type BatchPool = Mutex<Vec<(SyncSender<BatchReply>, Receiver<BatchReply>)>>;
 
 /// How many idle reply channels each pool retains.
 const POOL_CAP: usize = 64;
@@ -189,7 +208,10 @@ impl Coordinator {
         let window = cfg.window;
         let worker = std::thread::Builder::new()
             .name("osaca-solver".into())
-            .spawn(move || solver_loop(rx, make_backend(), wstats, window))
+            // The factory travels into the thread (not a built backend:
+            // the PJRT client is not Send) so supervision can rebuild
+            // the backend after a caught panic.
+            .spawn(move || solver_loop(rx, make_backend, wstats, window))
             .expect("spawn solver thread");
         Coordinator {
             tx: Some(tx),
@@ -235,13 +257,14 @@ impl Coordinator {
             return Err(SubmitError::Closed);
         }
         match rrx.recv_timeout(self.reply_timeout) {
-            Ok(out) => {
-                // Channel is drained: safe to reuse.
+            Ok(result) => {
+                // Channel is drained: safe to reuse (a panic reply
+                // drains it just like a success).
                 let mut pool = self.single_pool.lock().expect("single pool lock");
                 if pool.len() < POOL_CAP {
                     pool.push((rtx, rrx));
                 }
-                Ok(out)
+                result.map_err(|category| SubmitError::Panicked { category })
             }
             Err(RecvTimeoutError::Timeout) => {
                 // The reply may still arrive later; the channel is
@@ -277,12 +300,12 @@ impl Coordinator {
         }
         let timeout = self.reply_timeout.saturating_mul(chunks);
         match rrx.recv_timeout(timeout) {
-            Ok(outs) => {
+            Ok(result) => {
                 let mut pool = self.batch_pool.lock().expect("batch pool lock");
                 if pool.len() < POOL_CAP {
                     pool.push((rtx, rrx));
                 }
-                Ok(outs)
+                result.map_err(|category| SubmitError::Panicked { category })
             }
             Err(RecvTimeoutError::Timeout) => Err(SubmitError::Timeout { waited: timeout }),
             Err(RecvTimeoutError::Disconnected) => Err(SubmitError::Closed),
@@ -357,12 +380,37 @@ fn run_backend(backend: &SolverBackend, encs: &[EncodedKernel]) -> Vec<SolveOut>
     }
 }
 
+/// The redacted category every caught backend panic collapses to.
+/// Panic payloads can carry internal state (slice indices, model
+/// internals); they are logged nowhere and never cross a channel.
+const SOLVER_PANIC_CATEGORY: &str = "solver_panic";
+
+/// Run the backend under `catch_unwind`; on panic, bump the restart
+/// counter and rebuild the backend from the factory so the solver
+/// thread keeps serving.
+fn run_supervised(
+    backend: &mut SolverBackend,
+    make_backend: &impl Fn() -> SolverBackend,
+    stats: &ServiceStats,
+    encs: &[EncodedKernel],
+) -> Result<Vec<SolveOut>, String> {
+    match panic::catch_unwind(AssertUnwindSafe(|| run_backend(backend, encs))) {
+        Ok(outs) => Ok(outs),
+        Err(_payload) => {
+            *backend = make_backend();
+            stats.solver_restarts.fetch_add(1, Ordering::Relaxed);
+            Err(SOLVER_PANIC_CATEGORY.to_string())
+        }
+    }
+}
+
 fn solver_loop(
     rx: Receiver<Msg>,
-    backend: SolverBackend,
+    make_backend: impl Fn() -> SolverBackend,
     stats: Arc<ServiceStats>,
     window: Duration,
 ) {
+    let mut backend = make_backend();
     // A batch message that arrived while a single-path window was being
     // filled; handled before blocking on the queue again.
     let mut pending: Option<Msg> = None;
@@ -380,19 +428,33 @@ fn solver_loop(
         match first {
             Msg::Many(bj) => {
                 // Direct slot mapping: ceil(n/8) solver executions,
-                // no window wait.
+                // no window wait. A panic in any chunk fails the whole
+                // submission (outputs must align with inputs) but the
+                // reply still arrives — the submitter never deadlocks
+                // against a dead worker.
                 let mut outs = Vec::with_capacity(bj.encs.len());
+                let mut failure: Option<String> = None;
                 for chunk in bj.encs.chunks(BATCH) {
                     let t0 = Instant::now();
-                    let res = run_backend(&backend, chunk);
-                    stats.batches.fetch_add(1, Ordering::Relaxed);
-                    stats.batched_kernels.fetch_add(chunk.len() as u64, Ordering::Relaxed);
-                    stats
-                        .solve_micros
-                        .fetch_add(t0.elapsed().as_micros() as u64, Ordering::Relaxed);
-                    outs.extend(res);
+                    match run_supervised(&mut backend, &make_backend, &stats, chunk) {
+                        Ok(res) => {
+                            stats.batches.fetch_add(1, Ordering::Relaxed);
+                            stats.batched_kernels.fetch_add(chunk.len() as u64, Ordering::Relaxed);
+                            stats
+                                .solve_micros
+                                .fetch_add(t0.elapsed().as_micros() as u64, Ordering::Relaxed);
+                            outs.extend(res);
+                        }
+                        Err(category) => {
+                            failure = Some(category);
+                            break;
+                        }
+                    }
                 }
-                let _ = bj.reply.send(outs);
+                let _ = match failure {
+                    None => bj.reply.send(Ok(outs)),
+                    Some(category) => bj.reply.send(Err(category)),
+                };
             }
             Msg::One(first_job) => {
                 let mut jobs = vec![first_job];
@@ -420,14 +482,25 @@ fn solver_loop(
                 }
                 let encs: Vec<EncodedKernel> = jobs.iter().map(|j| j.enc.clone()).collect();
                 let t0 = Instant::now();
-                let outs = run_backend(&backend, &encs);
-                stats.batches.fetch_add(1, Ordering::Relaxed);
-                stats.batched_kernels.fetch_add(jobs.len() as u64, Ordering::Relaxed);
-                stats
-                    .solve_micros
-                    .fetch_add(t0.elapsed().as_micros() as u64, Ordering::Relaxed);
-                for (job, out) in jobs.into_iter().zip(outs.into_iter()) {
-                    let _ = job.reply.send(out);
+                match run_supervised(&mut backend, &make_backend, &stats, &encs) {
+                    Ok(outs) => {
+                        stats.batches.fetch_add(1, Ordering::Relaxed);
+                        stats.batched_kernels.fetch_add(jobs.len() as u64, Ordering::Relaxed);
+                        stats
+                            .solve_micros
+                            .fetch_add(t0.elapsed().as_micros() as u64, Ordering::Relaxed);
+                        for (job, out) in jobs.into_iter().zip(outs.into_iter()) {
+                            let _ = job.reply.send(Ok(out));
+                        }
+                    }
+                    Err(category) => {
+                        // One poisoned kernel fails its window-mates
+                        // too (outputs cannot be attributed), but every
+                        // waiter gets an answer instead of a timeout.
+                        for job in jobs {
+                            let _ = job.reply.send(Err(category.clone()));
+                        }
+                    }
                 }
             }
         }
@@ -520,6 +593,30 @@ mod tests {
         assert!(matches!(c.solve_one(enc.clone()), Err(SubmitError::Closed)));
         assert!(matches!(c.solve_batch(vec![enc]), Err(SubmitError::Closed)));
         assert_eq!(c.queue_depth(), 0);
+    }
+
+    #[test]
+    fn solver_panic_is_contained_and_reported() {
+        let c = Coordinator::cpu_only();
+        let w = workloads::find("triad", "skl", "-O3").unwrap();
+        let machine = mdb::skylake();
+        let good = encode(&w.kernel(), &machine).unwrap();
+        // An empty encoding drives solve_cpu out of bounds — a
+        // deterministic stand-in for any backend bug.
+        let poison = EncodedKernel { mask: Vec::new(), cost: Vec::new() };
+        let err = c.solve_one(poison.clone()).unwrap_err();
+        assert!(
+            matches!(&err, SubmitError::Panicked { category } if category == "solver_panic"),
+            "{err}"
+        );
+        assert!(err.to_string().contains("restarted"));
+        assert_eq!(c.stats.solver_restarts.load(Ordering::Relaxed), 1);
+        // The rebuilt backend keeps serving — both paths.
+        assert!(c.solve_one(good.clone()).is_ok());
+        let err = c.solve_batch(vec![good.clone(), poison]).unwrap_err();
+        assert!(matches!(err, SubmitError::Panicked { .. }));
+        assert_eq!(c.stats.solver_restarts.load(Ordering::Relaxed), 2);
+        assert_eq!(c.solve_batch(vec![good; 3]).unwrap().len(), 3);
     }
 
     #[test]

@@ -14,7 +14,9 @@
 //!   compare <file.s> --arch skl|zen [--unroll N]
 //!   tables [--table1] [--table3] [--table5] [--all]
 //!   figures
-//!   serve [--addr host:port] [--shards N] [--memo-cap N]   (persistent TCP service; --loopback for the in-process batch demo)
+//!   serve [--addr host:port] [--shards N] [--memo-cap N] [--memo-max-bytes N] [--max-rps R]
+//!         [--burst N] [--max-inflight N] [--max-frame-bytes N] [--chaos [seed]] [--test-ops]
+//!         (persistent TCP service; --loopback for the in-process batch demo)
 //!   list-workloads
 //!
 //! Hand-rolled argument parsing: clap is not vendored in this offline
@@ -522,6 +524,30 @@ fn run(args: &[String]) -> Result<()> {
             if let Some(v) = opts.get("queue-depth") {
                 cfg.queue_depth = v.parse::<usize>().context("--queue-depth")?.max(1);
             }
+            if let Some(v) = opts.get("memo-max-bytes") {
+                cfg.memo_max_bytes = v.parse().context("--memo-max-bytes")?;
+            }
+            if let Some(v) = opts.get("max-rps") {
+                cfg.max_rps = v.parse::<f64>().context("--max-rps")?.max(0.0);
+            }
+            if let Some(v) = opts.get("burst") {
+                cfg.burst = v.parse::<u32>().context("--burst")?.max(1);
+            }
+            if let Some(v) = opts.get("max-inflight") {
+                cfg.max_inflight = v.parse().context("--max-inflight")?;
+            }
+            if let Some(v) = opts.get("max-frame-bytes") {
+                cfg.max_frame_bytes = v.parse::<usize>().context("--max-frame-bytes")?.max(1024);
+            }
+            cfg.test_ops = opts.contains_key("test-ops");
+            if let Some(v) = opts.get("chaos") {
+                // Bare `--chaos` uses the default seed; a value pins one.
+                cfg.chaos_seed = Some(if *v == "true" {
+                    osaca::serve::faults::DEFAULT_CHAOS_SEED
+                } else {
+                    v.parse::<u64>().context("--chaos")?
+                });
+            }
             let server = Server::bind(cfg.clone())
                 .with_context(|| format!("binding {}", cfg.addr))?;
             // The smoke harness greps this exact line for the resolved
@@ -531,6 +557,9 @@ fn run(args: &[String]) -> Result<()> {
                 "shards={} memo-cap={} queue-depth={} (send {{\"op\":\"shutdown\"}} to stop)",
                 cfg.shards, cfg.memo_cap, cfg.queue_depth
             );
+            if let Some(seed) = cfg.chaos_seed {
+                println!("chaos fault injection enabled (seed {seed})");
+            }
             server.join();
             println!("drained cleanly");
         }
@@ -642,7 +671,9 @@ commands (all accept --format text|json|csv):
   compare <file.s> --arch skl|zen [--unroll N]
   tables [--table1|--table3|--table5|--all]
   figures
-  serve [--addr host:port] [--shards N] [--memo-cap N] [--queue-depth N] [--loopback [--requests N]]
+  serve [--addr host:port] [--shards N] [--memo-cap N] [--memo-max-bytes N] [--queue-depth N]
+        [--max-rps R] [--burst N] [--max-inflight N] [--max-frame-bytes N]
+        [--chaos [seed]] [--test-ops] [--loopback [--requests N]]
   list-workloads"
     );
 }

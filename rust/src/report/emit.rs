@@ -29,7 +29,14 @@ use crate::report::render_occupancy;
 /// v2: the prediction object absorbed the per-line occupancy rows
 /// (`prediction.lines`, CSV `line_occupancy`/`line_hidden` records) and
 /// the serve error/stats/ok/overloaded frames joined the contract.
-pub const SCHEMA_VERSION: u32 = 2;
+///
+/// v3: the serve fault-tolerance surface — a `rate_limited` frame
+/// (`reason`, `retry_after_ms`), a `shedding` flag on `overloaded`
+/// frames, and the `stats` frame grew the degradation counters
+/// (`rate_limited`, `shed`, `deadline_expired`, `panics`,
+/// `worker_restarts`, `oversized_frames`, `memo_bytes`, `shedding`).
+/// The report JSON/CSV key shape is unchanged from v2.
+pub const SCHEMA_VERSION: u32 = 3;
 
 /// The built-in output formats.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
@@ -424,13 +431,30 @@ pub fn error_frame(kind: &str, message: &str) -> String {
     out
 }
 
-/// Backpressure envelope: the target shard's queue was full and the
-/// request was rejected without being enqueued.
-pub fn overloaded_frame(shard: usize, queue_depth: u64) -> String {
+/// Backpressure envelope: the request was rejected without being
+/// enqueued — either the target shard's queue was full (`shedding:
+/// false`) or the server is in load-shed mode and refusing fresh
+/// analyses service-wide (`shedding: true`).
+pub fn overloaded_frame(shard: usize, queue_depth: u64, shedding: bool) -> String {
     format!(
         "{{\"schema_version\":{SCHEMA_VERSION},\"status\":\"overloaded\",\
-         \"shard\":{shard},\"queue_depth\":{queue_depth}}}"
+         \"shard\":{shard},\"queue_depth\":{queue_depth},\"shedding\":{shedding}}}"
     )
+}
+
+/// Per-connection fairness rejection: the client exceeded its token
+/// bucket (`reason: "rps"`) or its in-flight cap (`reason:
+/// "inflight"`). `retry_after_ms` is the earliest time a retry can
+/// succeed assuming no other traffic on the connection.
+pub fn rate_limited_frame(reason: &str, retry_after_ms: u64) -> String {
+    let mut out = String::with_capacity(96);
+    let _ = write!(
+        out,
+        "{{\"schema_version\":{SCHEMA_VERSION},\"status\":\"rate_limited\",\"reason\":"
+    );
+    push_json_string(&mut out, reason);
+    let _ = write!(out, ",\"retry_after_ms\":{retry_after_ms}}}");
+    out
 }
 
 /// Acknowledgement for a wire `shutdown` request, sent before the
@@ -454,10 +478,28 @@ pub struct StatsFrame {
     pub analyses: u64,
     /// Error frames sent.
     pub errors: u64,
-    /// Overloaded frames sent.
+    /// Overloaded (queue-full) frames sent.
     pub overloaded: u64,
+    /// Rate-limited frames sent (token bucket + in-flight cap).
+    pub rate_limited: u64,
+    /// Analyses rejected by load-shed mode (memo misses only — hits
+    /// are still served while shedding).
+    pub shed: u64,
+    /// Requests whose `deadline_ms` expired while queued; dropped at
+    /// dispatch with a `deadline_exceeded` frame.
+    pub deadline_expired: u64,
+    /// Worker panics caught by shard supervision.
+    pub panics: u64,
+    /// Workers restarted with a fresh engine after a panic.
+    pub worker_restarts: u64,
+    /// Frames rejected for exceeding the wire frame-size limit.
+    pub oversized_frames: u64,
     /// Memo entries currently resident.
     pub memo_len: u64,
+    /// Approximate bytes held by memoized rendered reports.
+    pub memo_bytes: u64,
+    /// Whether load-shed mode is active at snapshot time.
+    pub shedding: bool,
     /// Per-shard queued+in-flight gauge at snapshot time.
     pub queue_depths: Vec<u64>,
 }
@@ -467,14 +509,24 @@ impl StatsFrame {
         let mut out = format!(
             "{{\"schema_version\":{SCHEMA_VERSION},\"status\":\"stats\",\"served\":{},\
              \"memo_hits\":{},\"memo_misses\":{},\"analyses\":{},\"errors\":{},\
-             \"overloaded\":{},\"memo_len\":{},\"queue_depths\":[",
+             \"overloaded\":{},\"rate_limited\":{},\"shed\":{},\"deadline_expired\":{},\
+             \"panics\":{},\"worker_restarts\":{},\"oversized_frames\":{},\
+             \"memo_len\":{},\"memo_bytes\":{},\"shedding\":{},\"queue_depths\":[",
             self.served,
             self.memo_hits,
             self.memo_misses,
             self.analyses,
             self.errors,
             self.overloaded,
-            self.memo_len
+            self.rate_limited,
+            self.shed,
+            self.deadline_expired,
+            self.panics,
+            self.worker_restarts,
+            self.oversized_frames,
+            self.memo_len,
+            self.memo_bytes,
+            self.shedding
         );
         for (i, d) in self.queue_depths.iter().enumerate() {
             if i > 0 {
@@ -584,24 +636,35 @@ mod tests {
     #[test]
     fn wire_frames_are_versioned_and_escaped() {
         let ok = ok_frame(Format::Json, true, "{\"k\":1}");
-        assert!(ok.starts_with("{\"schema_version\":2,\"status\":\"ok\",\"memo_hit\":true,"));
+        assert!(ok.starts_with("{\"schema_version\":3,\"status\":\"ok\",\"memo_hit\":true,"));
         assert!(ok.ends_with(",\"report\":{\"k\":1}}"), "report must be the raw last key: {ok}");
         let ok_text = ok_frame(Format::Text, false, "line one\nline two");
         assert!(ok_text.ends_with(",\"report\":\"line one\\nline two\"}"));
 
         let e = error_frame("bad_request", "not a \"frame\"");
-        assert!(e.starts_with("{\"schema_version\":2,\"status\":\"error\",\"error\":{\"kind\":\"bad_request\""));
+        assert!(e.starts_with("{\"schema_version\":3,\"status\":\"error\",\"error\":{\"kind\":\"bad_request\""));
         assert!(e.contains("\\\"frame\\\""));
 
         assert_eq!(
-            overloaded_frame(1, 64),
-            "{\"schema_version\":2,\"status\":\"overloaded\",\"shard\":1,\"queue_depth\":64}"
+            overloaded_frame(1, 64, false),
+            "{\"schema_version\":3,\"status\":\"overloaded\",\"shard\":1,\
+             \"queue_depth\":64,\"shedding\":false}"
         );
-        assert_eq!(bye_frame(), "{\"schema_version\":2,\"status\":\"bye\"}");
+        assert_eq!(
+            rate_limited_frame("rps", 250),
+            "{\"schema_version\":3,\"status\":\"rate_limited\",\"reason\":\"rps\",\
+             \"retry_after_ms\":250}"
+        );
+        assert_eq!(bye_frame(), "{\"schema_version\":3,\"status\":\"bye\"}");
 
         let s = StatsFrame { served: 2, memo_hits: 1, queue_depths: vec![0, 3], ..Default::default() };
         let rendered = s.render();
-        assert!(rendered.starts_with("{\"schema_version\":2,\"status\":\"stats\",\"served\":2,"));
+        assert!(rendered.starts_with("{\"schema_version\":3,\"status\":\"stats\",\"served\":2,"));
+        assert!(rendered.contains("\"rate_limited\":0"));
+        assert!(rendered.contains("\"deadline_expired\":0"));
+        assert!(rendered.contains("\"worker_restarts\":0"));
+        assert!(rendered.contains("\"memo_bytes\":0"));
+        assert!(rendered.contains("\"shedding\":false"));
         assert!(rendered.ends_with("\"queue_depths\":[0,3]}"));
     }
 

@@ -91,7 +91,7 @@ impl std::error::Error for JsonError {}
 /// Parse one complete JSON document; trailing non-whitespace is an
 /// error (a frame is exactly one value).
 pub fn parse(input: &str) -> Result<JsonValue, JsonError> {
-    let mut p = Parser { bytes: input.as_bytes(), pos: 0 };
+    let mut p = Parser { bytes: input.as_bytes(), pos: 0, depth: 0 };
     p.skip_ws();
     let v = p.value()?;
     p.skip_ws();
@@ -101,14 +101,29 @@ pub fn parse(input: &str) -> Result<JsonValue, JsonError> {
     Ok(v)
 }
 
+/// Nesting bound: the recursive-descent parser consumes stack per
+/// container level, so a hostile frame of ten thousand `[`s must be
+/// rejected, not allowed to overflow the connection thread's stack. No
+/// legitimate request or response frame nests deeper than ~6 levels.
+const MAX_DEPTH: usize = 64;
+
 struct Parser<'a> {
     bytes: &'a [u8],
     pos: usize,
+    depth: usize,
 }
 
 impl<'a> Parser<'a> {
     fn err(&self, message: &str) -> JsonError {
         JsonError { offset: self.pos, message: message.to_string() }
+    }
+
+    fn enter(&mut self) -> Result<(), JsonError> {
+        self.depth += 1;
+        if self.depth > MAX_DEPTH {
+            return Err(self.err("nesting deeper than 64 levels"));
+        }
+        Ok(())
     }
 
     fn peek(&self) -> Option<u8> {
@@ -132,8 +147,18 @@ impl<'a> Parser<'a> {
 
     fn value(&mut self) -> Result<JsonValue, JsonError> {
         match self.peek() {
-            Some(b'{') => self.object(),
-            Some(b'[') => self.array(),
+            Some(b'{') => {
+                self.enter()?;
+                let v = self.object();
+                self.depth -= 1;
+                v
+            }
+            Some(b'[') => {
+                self.enter()?;
+                let v = self.array();
+                self.depth -= 1;
+                v
+            }
             Some(b'"') => Ok(JsonValue::Str(self.string()?)),
             Some(b't') => self.literal("true", JsonValue::Bool(true)),
             Some(b'f') => self.literal("false", JsonValue::Bool(false)),
@@ -350,6 +375,20 @@ mod tests {
         for bad in ["", "{", "{\"a\":}", "[1,]", "\"unterminated", "{\"a\":1} trailing", "nul"] {
             assert!(parse(bad).is_err(), "should reject: {bad}");
         }
+    }
+
+    #[test]
+    fn nesting_is_bounded() {
+        // Reasonable nesting parses fine...
+        let ten = format!("{}1{}", "[".repeat(10), "]".repeat(10));
+        assert!(parse(&ten).is_ok());
+        // ...but a hostile deeply-nested frame is a structured error,
+        // not a stack overflow.
+        let hostile = format!("{}1{}", "[".repeat(10_000), "]".repeat(10_000));
+        let e = parse(&hostile).unwrap_err();
+        assert!(e.message.contains("nesting"), "{}", e.message);
+        let hostile_obj = format!("{}1{}", "{\"k\":".repeat(200), "}".repeat(200));
+        assert!(parse(&hostile_obj).is_err());
     }
 
     #[test]

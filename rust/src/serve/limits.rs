@@ -1,0 +1,123 @@
+//! Per-connection fairness: the token bucket behind `--max-rps` /
+//! `--burst`.
+//!
+//! Each connection thread owns one [`TokenBucket`]; a rejected acquire
+//! becomes a `rate_limited` wire frame carrying the computed
+//! `retry_after_ms` hint. The bucket takes the current `Instant` as an
+//! explicit parameter so refill arithmetic is unit-testable without
+//! sleeping. The companion in-flight cap (`--max-inflight`) is a plain
+//! shared gauge owned by `serve::mod` — the jobs themselves carry the
+//! decrement side — so no abstraction lives here for it.
+
+use std::time::Instant;
+
+/// A standard token bucket: `rate_per_s` tokens accrue per second up to
+/// a ceiling of `burst`; each admitted request spends one token. A rate
+/// of zero (or below) disables limiting entirely — every acquire
+/// succeeds.
+#[derive(Debug)]
+pub struct TokenBucket {
+    rate_per_s: f64,
+    burst: f64,
+    tokens: f64,
+    last: Instant,
+}
+
+impl TokenBucket {
+    /// `burst` is clamped to at least 1: a bucket that can never hold a
+    /// whole token would reject everything forever.
+    pub fn new(rate_per_s: f64, burst: u32) -> TokenBucket {
+        let burst = f64::from(burst.max(1));
+        TokenBucket { rate_per_s: rate_per_s.max(0.0), burst, tokens: burst, last: Instant::now() }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.rate_per_s > 0.0
+    }
+
+    /// Spend one token, refilling for the time elapsed since the last
+    /// call. On rejection returns the milliseconds until one whole
+    /// token will have accrued (the `retry_after_ms` wire hint),
+    /// rounded up so an honest client that waits exactly that long
+    /// succeeds.
+    pub fn try_acquire(&mut self, now: Instant) -> Result<(), u64> {
+        if !self.enabled() {
+            return Ok(());
+        }
+        let elapsed = now.saturating_duration_since(self.last).as_secs_f64();
+        self.last = now;
+        self.tokens = (self.tokens + elapsed * self.rate_per_s).min(self.burst);
+        if self.tokens >= 1.0 {
+            self.tokens -= 1.0;
+            Ok(())
+        } else {
+            let deficit = 1.0 - self.tokens;
+            Err(((deficit / self.rate_per_s) * 1000.0).ceil() as u64)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn burst_then_starve_then_refill() {
+        let t0 = Instant::now();
+        let mut b = TokenBucket::new(2.0, 3);
+        // The full burst is admitted back to back...
+        for i in 0..3 {
+            assert!(b.try_acquire(t0).is_ok(), "burst token {i}");
+        }
+        // ...then the bucket is dry: at 2 tokens/s one whole token is
+        // 500ms away.
+        let retry = b.try_acquire(t0).unwrap_err();
+        assert_eq!(retry, 500);
+        // 600ms later one token has accrued; the next request passes
+        // and the one after is again told to wait.
+        let t1 = t0 + Duration::from_millis(600);
+        assert!(b.try_acquire(t1).is_ok());
+        assert!(b.try_acquire(t1).is_err());
+    }
+
+    #[test]
+    fn refill_is_capped_at_burst() {
+        let t0 = Instant::now();
+        let mut b = TokenBucket::new(100.0, 2);
+        assert!(b.try_acquire(t0).is_ok());
+        assert!(b.try_acquire(t0).is_ok());
+        // An hour of idling still only banks `burst` tokens.
+        let t1 = t0 + Duration::from_secs(3600);
+        assert!(b.try_acquire(t1).is_ok());
+        assert!(b.try_acquire(t1).is_ok());
+        assert!(b.try_acquire(t1).is_err());
+    }
+
+    #[test]
+    fn zero_rate_disables() {
+        let t0 = Instant::now();
+        let mut b = TokenBucket::new(0.0, 1);
+        assert!(!b.enabled());
+        for _ in 0..100 {
+            assert!(b.try_acquire(t0).is_ok());
+        }
+    }
+
+    #[test]
+    fn zero_burst_is_clamped_to_one() {
+        let t0 = Instant::now();
+        let mut b = TokenBucket::new(1000.0, 0);
+        assert!(b.try_acquire(t0).is_ok(), "a 0-burst bucket must still hold one token");
+    }
+
+    #[test]
+    fn retry_hint_rounds_up() {
+        let t0 = Instant::now();
+        let mut b = TokenBucket::new(3.0, 1);
+        assert!(b.try_acquire(t0).is_ok());
+        // 1/3 s = 333.33ms; the hint must not round down to a time at
+        // which the token has not yet accrued.
+        assert_eq!(b.try_acquire(t0).unwrap_err(), 334);
+    }
+}

@@ -13,6 +13,14 @@
 //! recency list. `get` promotes to the front, `insert` evicts the tail
 //! once `cap` entries are resident. All operations are O(1); the server
 //! holds the lock only for the map operation, never across an analysis.
+//!
+//! Doubly bounded: by entry count (`cap`) and, when `max_bytes > 0`, by
+//! an approximate resident byte total so a flood of large kernels
+//! cannot balloon memory past `--memo-max-bytes`. Each entry carries a
+//! caller-supplied `cost` (the server uses the rendered report length
+//! as the proxy — the dominant retained allocation); inserts evict from
+//! the LRU tail until the budget holds, and an entry costlier than the
+//! whole budget is simply never cached.
 
 use std::collections::HashMap;
 use std::sync::Arc;
@@ -24,14 +32,18 @@ const NIL: usize = usize::MAX;
 struct Slot {
     key: u64,
     value: Arc<AnalysisReport>,
+    cost: usize,
     prev: usize,
     next: usize,
 }
 
 /// Bounded LRU over analysis fingerprints. `cap == 0` disables
-/// memoization (every lookup misses, nothing is retained).
+/// memoization (every lookup misses, nothing is retained);
+/// `max_bytes == 0` means no byte bound (entry cap only).
 pub struct MemoCache {
     cap: usize,
+    max_bytes: usize,
+    bytes: usize,
     map: HashMap<u64, usize>,
     slots: Vec<Slot>,
     free: Vec<usize>,
@@ -40,9 +52,11 @@ pub struct MemoCache {
 }
 
 impl MemoCache {
-    pub fn new(cap: usize) -> Self {
+    pub fn new(cap: usize, max_bytes: usize) -> Self {
         MemoCache {
             cap,
+            max_bytes,
+            bytes: 0,
             map: HashMap::with_capacity(cap.min(1024)),
             slots: Vec::with_capacity(cap.min(1024)),
             free: Vec::new(),
@@ -54,6 +68,11 @@ impl MemoCache {
     /// Entries currently resident.
     pub fn len(&self) -> usize {
         self.map.len()
+    }
+
+    /// Approximate resident bytes (sum of entry costs).
+    pub fn bytes(&self) -> usize {
+        self.bytes
     }
 
     pub fn is_empty(&self) -> bool {
@@ -68,38 +87,56 @@ impl MemoCache {
         Some(self.slots[i].value.clone())
     }
 
-    /// Insert (or replace) an entry, evicting the least-recently-used
-    /// one when full.
-    pub fn insert(&mut self, key: u64, value: Arc<AnalysisReport>) {
+    /// Insert (or replace) an entry, evicting least-recently-used ones
+    /// until both the entry cap and the byte budget hold.
+    pub fn insert(&mut self, key: u64, value: Arc<AnalysisReport>, cost: usize) {
         if self.cap == 0 {
             return;
         }
-        if let Some(&i) = self.map.get(&key) {
-            self.slots[i].value = value;
-            self.unlink(i);
-            self.link_front(i);
+        if self.max_bytes > 0 && cost > self.max_bytes {
+            // Larger than the whole budget: caching it would immediately
+            // evict everything else and then itself — never admit it.
             return;
         }
-        if self.map.len() >= self.cap {
-            let lru = self.tail;
-            debug_assert_ne!(lru, NIL);
-            self.unlink(lru);
-            self.map.remove(&self.slots[lru].key);
-            self.free.push(lru);
+        if let Some(&i) = self.map.get(&key) {
+            self.bytes = self.bytes - self.slots[i].cost + cost;
+            self.slots[i].value = value;
+            self.slots[i].cost = cost;
+            self.unlink(i);
+            self.link_front(i);
+        } else {
+            if self.map.len() >= self.cap {
+                self.evict_tail();
+            }
+            let slot = Slot { key, value, cost, prev: NIL, next: NIL };
+            let i = match self.free.pop() {
+                Some(i) => {
+                    self.slots[i] = slot;
+                    i
+                }
+                None => {
+                    self.slots.push(slot);
+                    self.slots.len() - 1
+                }
+            };
+            self.bytes += cost;
+            self.map.insert(key, i);
+            self.link_front(i);
         }
-        let slot = Slot { key, value, prev: NIL, next: NIL };
-        let i = match self.free.pop() {
-            Some(i) => {
-                self.slots[i] = slot;
-                i
-            }
-            None => {
-                self.slots.push(slot);
-                self.slots.len() - 1
-            }
-        };
-        self.map.insert(key, i);
-        self.link_front(i);
+        // Terminates: the entry just linked costs <= max_bytes, so at
+        // worst it ends up alone within budget.
+        while self.max_bytes > 0 && self.bytes > self.max_bytes {
+            self.evict_tail();
+        }
+    }
+
+    fn evict_tail(&mut self) {
+        let lru = self.tail;
+        debug_assert_ne!(lru, NIL);
+        self.unlink(lru);
+        self.bytes -= self.slots[lru].cost;
+        self.map.remove(&self.slots[lru].key);
+        self.free.push(lru);
     }
 
     fn unlink(&mut self, i: usize) {
@@ -148,11 +185,11 @@ mod tests {
     #[test]
     fn evicts_least_recently_used() {
         let r = report("m");
-        let mut c = MemoCache::new(2);
-        c.insert(1, r.clone());
-        c.insert(2, r.clone());
+        let mut c = MemoCache::new(2, 0);
+        c.insert(1, r.clone(), 10);
+        c.insert(2, r.clone(), 10);
         assert!(c.get(1).is_some()); // promote 1; 2 is now LRU
-        c.insert(3, r.clone());
+        c.insert(3, r.clone(), 10);
         assert_eq!(c.len(), 2);
         assert!(c.get(2).is_none(), "2 was least recently used");
         assert!(c.get(1).is_some());
@@ -162,11 +199,11 @@ mod tests {
     #[test]
     fn replace_promotes_and_keeps_len() {
         let r = report("m");
-        let mut c = MemoCache::new(2);
-        c.insert(1, r.clone());
-        c.insert(2, r.clone());
-        c.insert(1, r.clone()); // replace, promote
-        c.insert(3, r.clone()); // evicts 2
+        let mut c = MemoCache::new(2, 0);
+        c.insert(1, r.clone(), 10);
+        c.insert(2, r.clone(), 10);
+        c.insert(1, r.clone(), 10); // replace, promote
+        c.insert(3, r.clone(), 10); // evicts 2
         assert!(c.get(1).is_some());
         assert!(c.get(2).is_none());
         assert_eq!(c.len(), 2);
@@ -175,18 +212,71 @@ mod tests {
     #[test]
     fn zero_capacity_disables() {
         let r = report("m");
-        let mut c = MemoCache::new(0);
-        c.insert(1, r);
+        let mut c = MemoCache::new(0, 0);
+        c.insert(1, r, 10);
         assert!(c.is_empty());
         assert!(c.get(1).is_none());
+    }
+
+    #[test]
+    fn byte_budget_evicts_in_lru_order() {
+        let r = report("m");
+        // Budget fits two 10-cost entries but not three.
+        let mut c = MemoCache::new(8, 25);
+        c.insert(1, r.clone(), 10);
+        c.insert(2, r.clone(), 10);
+        assert_eq!(c.bytes(), 20);
+        assert!(c.get(1).is_some()); // promote 1; 2 is now LRU
+        c.insert(3, r.clone(), 10);
+        assert_eq!(c.len(), 2);
+        assert_eq!(c.bytes(), 20);
+        assert!(c.get(2).is_none(), "byte eviction must follow LRU order");
+        assert!(c.get(1).is_some());
+        assert!(c.get(3).is_some());
+    }
+
+    #[test]
+    fn one_giant_entry_evicts_everything_smaller() {
+        let r = report("m");
+        let mut c = MemoCache::new(8, 30);
+        c.insert(1, r.clone(), 5);
+        c.insert(2, r.clone(), 5);
+        c.insert(3, r.clone(), 28); // fits the budget alone, nothing else does
+        assert_eq!(c.len(), 1);
+        assert_eq!(c.bytes(), 28);
+        assert!(c.get(3).is_some());
+    }
+
+    #[test]
+    fn over_budget_entry_is_never_admitted() {
+        let r = report("m");
+        let mut c = MemoCache::new(8, 30);
+        c.insert(1, r.clone(), 10);
+        c.insert(2, r.clone(), 31); // costs more than the whole budget
+        assert_eq!(c.len(), 1);
+        assert_eq!(c.bytes(), 10);
+        assert!(c.get(2).is_none());
+        assert!(c.get(1).is_some(), "the resident entry must survive the rejected insert");
+    }
+
+    #[test]
+    fn replace_adjusts_byte_gauge() {
+        let r = report("m");
+        let mut c = MemoCache::new(8, 100);
+        c.insert(1, r.clone(), 10);
+        c.insert(1, r.clone(), 40);
+        assert_eq!(c.bytes(), 40);
+        c.insert(1, r.clone(), 5);
+        assert_eq!(c.bytes(), 5);
+        assert_eq!(c.len(), 1);
     }
 
     #[test]
     fn hits_share_one_prediction_decomposition() {
         let r = report("shared");
         r.prediction_shared(); // fill the cell before insert, like the server
-        let mut c = MemoCache::new(4);
-        c.insert(9, r);
+        let mut c = MemoCache::new(4, 0);
+        c.insert(9, r, 10);
         let a = c.get(9).unwrap();
         // A hit clones the report (to patch name/format); the clone's
         // decomposition must still be the same allocation.

@@ -14,8 +14,9 @@ use crate::report::emit::StatsFrame;
 /// own solver-side `ServiceStats` underneath).
 #[derive(Debug, Default)]
 pub struct ServeMetrics {
-    /// Analyze-op responses sent: ok + error + overloaded. Stats,
-    /// shutdown and test-op responses are not "served analyses".
+    /// Analyze-op responses sent: ok + error + overloaded +
+    /// rate_limited + shed. Stats, shutdown and test-op responses are
+    /// not "served analyses".
     pub served: AtomicU64,
     /// Analyze requests answered from the cross-request memo.
     pub memo_hits: AtomicU64,
@@ -23,10 +24,24 @@ pub struct ServeMetrics {
     pub memo_misses: AtomicU64,
     /// Analyses actually executed by an engine (misses that got to run).
     pub analyses: AtomicU64,
-    /// Error frames sent.
+    /// Error frames sent (includes internal_error and
+    /// deadline_exceeded, which also bump their dedicated counters).
     pub errors: AtomicU64,
-    /// Overloaded (backpressure) frames sent.
+    /// Overloaded (backpressure) frames sent, shedding or not.
     pub overloaded: AtomicU64,
+    /// rate_limited frames sent (token bucket or in-flight cap).
+    pub rate_limited: AtomicU64,
+    /// Analyze misses rejected because the server was in shed mode.
+    pub shed: AtomicU64,
+    /// Requests dropped at dispatch because their deadline had expired.
+    pub deadline_expired: AtomicU64,
+    /// Worker panics caught by shard supervision.
+    pub panics: AtomicU64,
+    /// Engines rebuilt after a caught panic (== panics today; kept
+    /// separate so a future pooled-restart strategy stays observable).
+    pub worker_restarts: AtomicU64,
+    /// Frames rejected for exceeding the configured length bound.
+    pub oversized_frames: AtomicU64,
 }
 
 impl ServeMetrics {
@@ -34,10 +49,16 @@ impl ServeMetrics {
         counter.fetch_add(1, Ordering::Relaxed);
     }
 
-    /// Snapshot into the schema-versioned wire frame. The memo length
-    /// and per-shard queue gauges live outside this struct and are
-    /// passed in by the server.
-    pub fn frame(&self, memo_len: u64, queue_depths: Vec<u64>) -> StatsFrame {
+    /// Snapshot into the schema-versioned wire frame. The memo gauges,
+    /// per-shard queue gauges and the shed flag live outside this
+    /// struct and are passed in by the server.
+    pub fn frame(
+        &self,
+        memo_len: u64,
+        memo_bytes: u64,
+        queue_depths: Vec<u64>,
+        shedding: bool,
+    ) -> StatsFrame {
         StatsFrame {
             served: self.served.load(Ordering::Relaxed),
             memo_hits: self.memo_hits.load(Ordering::Relaxed),
@@ -45,7 +66,15 @@ impl ServeMetrics {
             analyses: self.analyses.load(Ordering::Relaxed),
             errors: self.errors.load(Ordering::Relaxed),
             overloaded: self.overloaded.load(Ordering::Relaxed),
+            rate_limited: self.rate_limited.load(Ordering::Relaxed),
+            shed: self.shed.load(Ordering::Relaxed),
+            deadline_expired: self.deadline_expired.load(Ordering::Relaxed),
+            panics: self.panics.load(Ordering::Relaxed),
+            worker_restarts: self.worker_restarts.load(Ordering::Relaxed),
+            oversized_frames: self.oversized_frames.load(Ordering::Relaxed),
             memo_len,
+            memo_bytes,
+            shedding,
             queue_depths,
         }
     }
@@ -62,15 +91,32 @@ mod tests {
         ServeMetrics::bump(&m.served);
         ServeMetrics::bump(&m.memo_hits);
         ServeMetrics::bump(&m.errors);
-        let f = m.frame(3, vec![0, 2]);
+        ServeMetrics::bump(&m.rate_limited);
+        ServeMetrics::bump(&m.shed);
+        ServeMetrics::bump(&m.deadline_expired);
+        ServeMetrics::bump(&m.panics);
+        ServeMetrics::bump(&m.worker_restarts);
+        ServeMetrics::bump(&m.oversized_frames);
+        let f = m.frame(3, 4096, vec![0, 2], true);
         assert_eq!(f.served, 2);
         assert_eq!(f.memo_hits, 1);
         assert_eq!(f.memo_misses, 0);
         assert_eq!(f.errors, 1);
+        assert_eq!(f.rate_limited, 1);
+        assert_eq!(f.shed, 1);
+        assert_eq!(f.deadline_expired, 1);
+        assert_eq!(f.panics, 1);
+        assert_eq!(f.worker_restarts, 1);
+        assert_eq!(f.oversized_frames, 1);
         assert_eq!(f.memo_len, 3);
+        assert_eq!(f.memo_bytes, 4096);
+        assert!(f.shedding);
         assert_eq!(f.queue_depths, vec![0, 2]);
         let rendered = f.render();
         assert!(rendered.contains("\"served\":2"));
+        assert!(rendered.contains("\"worker_restarts\":1"));
+        assert!(rendered.contains("\"memo_bytes\":4096"));
+        assert!(rendered.contains("\"shedding\":true"));
         assert!(rendered.contains("\"queue_depths\":[0,2]"));
     }
 }

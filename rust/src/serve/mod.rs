@@ -8,7 +8,7 @@
 //! by `report::emit` so the whole machine-readable surface shares one
 //! [`crate::report::emit::SCHEMA_VERSION`] policy).
 //!
-//! Architecture (DESIGN.md §9):
+//! Architecture (DESIGN.md §9–§10):
 //!
 //! * **Shards.** `ServeConfig::shards` long-lived [`Engine`]s, each
 //!   with its own solver coordinator and bounded job queue. Requests
@@ -16,17 +16,42 @@
 //!   stable shard and its coordinator batches same-model solver work.
 //!   Built-in machine models are shared process-wide through the `mdb`
 //!   Arc cache, so shards do not duplicate model memory.
-//! * **Memoization.** A bounded LRU ([`memo::MemoCache`]) keyed by
-//!   [`AnalysisRequest::fingerprint`] — everything analysis-relevant,
-//!   nothing presentation-only. The cached value is an
+//! * **Supervision.** The shard worker owns its engine and runs every
+//!   analysis under `catch_unwind`: a panic poisons only that request
+//!   (a structured `internal_error` frame whose message is redacted to
+//!   a category — panic payloads are not a wire surface), the engine is
+//!   rebuilt fresh, and `panics`/`worker_restarts` count the event.
+//!   Reply channels are per-request, so a request whose worker died
+//!   mid-flight times out like any other late reply — nothing
+//!   deadlocks on a dead worker.
+//! * **Memoization.** A doubly bounded LRU ([`memo::MemoCache`]) keyed
+//!   by [`AnalysisRequest::fingerprint`] — capped by entries
+//!   (`memo_cap`) and resident bytes (`memo_max_bytes`), so a flood of
+//!   large kernels cannot balloon memory. The cached value is an
 //!   `Arc<AnalysisReport>` whose `prediction_cell` is filled once at
 //!   insert; every hit clones the report, patches `name`/`format` from
 //!   the incoming request, and renders — sharing one bound
 //!   decomposition across all hits.
-//! * **Backpressure.** Connection threads `try_send` into the target
-//!   shard's bounded queue. A full queue answers immediately with a
-//!   structured `overloaded` frame (shard index + current gauge)
-//!   instead of blocking the connection or buffering unboundedly.
+//! * **Fairness.** Each connection carries a token bucket
+//!   ([`limits::TokenBucket`], `--max-rps`/`--burst`) and an in-flight
+//!   cap (`--max-inflight`), answered with `rate_limited` frames that
+//!   carry a `retry_after_ms` hint — one greedy client cannot
+//!   monopolize a shard's bounded queue. An `analyze` may carry
+//!   `deadline_ms`; if it has not reached a worker by then it is
+//!   answered `deadline_exceeded` instead of being analyzed late.
+//! * **Backpressure and shed.** Connection threads `try_send` into the
+//!   target shard's bounded queue; a full queue answers a structured
+//!   `overloaded` frame immediately. Under total saturation (every
+//!   queue slot and worker busy, with hysteresis) the server enters
+//!   shed mode: new `analyze` misses are rejected up front with
+//!   `overloaded`+`shedding:true`, while `stats` and memo hits still
+//!   answer — the degradation ladder trades throughput for
+//!   introspection, never the reverse.
+//! * **Fault injection.** `--chaos` arms a seeded deterministic
+//!   schedule ([`faults::FaultPlan`]) that injects worker panics,
+//!   reply delays and queue stalls at the dispatch choke point, so
+//!   every failure mode above is reproducible in tests (and in the CI
+//!   chaos smoke leg) rather than theoretical.
 //! * **Timeouts.** Each queued request waits at most
 //!   `ServeConfig::reply_timeout` (the same knob as the coordinator's
 //!   solver reply timeout) for its shard worker; expiry produces a
@@ -34,6 +59,11 @@
 //!   (not pooled like the coordinator's): a timed-out connection drops
 //!   its receiver and the worker's late `try_send` fails harmlessly,
 //!   so a stale reply can never be delivered to a later request.
+//! * **Wire robustness.** Frames longer than `max_frame_bytes` are
+//!   answered with a `frame_too_large` error and skipped without
+//!   unbounded buffering or killing the connection; blank lines and
+//!   `\r\n` terminators are tolerated; request nesting is bounded by
+//!   the JSON reader.
 //! * **Drain.** Wire `shutdown` (or [`Server::shutdown`]) flips a flag
 //!   and wakes the accept loop with a self-connection. [`Server::join`]
 //!   then joins the accept thread, joins every connection thread
@@ -43,29 +73,42 @@
 //!   is dropped on the floor.
 //! * **Introspection.** The wire `stats` op snapshots
 //!   [`metrics::ServeMetrics`] (served / memo hits / errors /
-//!   overloaded), the memo length and the per-shard queue gauges into a
+//!   overloaded / rate_limited / shed / deadline_expired / panics /
+//!   worker_restarts / oversized_frames), the memo entry and byte
+//!   gauges, the per-shard queue gauges and the shed flag into a
 //!   schema-versioned frame.
 
+pub mod faults;
 pub mod json;
+pub mod limits;
 pub mod memo;
 pub mod metrics;
 pub mod wire;
 
+use std::any::Any;
 use std::io::{self, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::panic::{self, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{self, Receiver, SyncSender, TrySendError};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, MutexGuard};
 use std::thread::{self, JoinHandle};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use crate::api::{AnalysisRequest, Backend, Engine, Format};
 use crate::coordinator::CoordinatorConfig;
-use crate::report::emit::{bye_frame, error_frame, ok_frame, overloaded_frame};
+use crate::report::emit::{bye_frame, error_frame, ok_frame, overloaded_frame, rate_limited_frame};
 
+use faults::{Fault, FaultPlan};
+use limits::TokenBucket;
 use memo::MemoCache;
 use metrics::ServeMetrics;
 use wire::WireRequest;
+
+/// `retry_after_ms` hint on in-flight-cap rejections: the client's own
+/// outstanding request bounds the wait, so a short constant beats
+/// guessing the analysis latency.
+const RETRY_INFLIGHT_MS: u64 = 50;
 
 /// Server tunables.
 #[derive(Debug, Clone)]
@@ -77,6 +120,9 @@ pub struct ServeConfig {
     pub shards: usize,
     /// Cross-request memo capacity (entries; 0 disables memoization).
     pub memo_cap: usize,
+    /// Cross-request memo byte budget (approximate resident bytes;
+    /// 0 means entry-capped only).
+    pub memo_max_bytes: usize,
     /// Bounded per-shard job queue depth (≥ 1); a full queue produces
     /// `overloaded` frames.
     pub queue_depth: usize,
@@ -85,10 +131,34 @@ pub struct ServeConfig {
     pub reply_timeout: Duration,
     /// Solver backend for the shard engines.
     pub backend: Backend,
-    /// Enable test-only wire ops (`sleep`) that exist so integration
-    /// tests can shape server load deterministically. Never enable in
-    /// production configurations.
+    /// Per-connection admitted analyze rate (tokens/second; 0 disables
+    /// rate limiting).
+    pub max_rps: f64,
+    /// Token-bucket burst: analyzes admitted back-to-back before the
+    /// rate applies (clamped ≥ 1 when limiting is on).
+    pub burst: u32,
+    /// Per-connection in-flight analyze cap (0 disables): a connection
+    /// with this many analyzes queued or running is told to retry.
+    pub max_inflight: usize,
+    /// Maximum accepted frame length in bytes; longer lines answer a
+    /// `frame_too_large` error and are skipped.
+    pub max_frame_bytes: usize,
+    /// Shed-mode entry threshold on the summed queued+in-flight gauge
+    /// (0 = auto: total gauge capacity, i.e. shed only at full
+    /// saturation).
+    pub shed_high: usize,
+    /// Shed-mode exit threshold (0 = auto: a quarter of capacity);
+    /// clamped below `shed_high` so the hysteresis is real.
+    pub shed_low: usize,
+    /// Enable test-only wire ops (`sleep`, `panic`) that exist so
+    /// integration tests can shape and fault server load
+    /// deterministically. Never enable in production configurations.
     pub test_ops: bool,
+    /// Seeded deterministic fault injection (`--chaos`): worker
+    /// panics, reply delays and queue stalls per
+    /// [`faults::FaultPlan`]. Never enable in production
+    /// configurations.
+    pub chaos_seed: Option<u64>,
 }
 
 impl Default for ServeConfig {
@@ -97,18 +167,26 @@ impl Default for ServeConfig {
             addr: "127.0.0.1:7117".to_string(),
             shards: 2,
             memo_cap: 256,
+            memo_max_bytes: 0,
             queue_depth: 64,
             reply_timeout: CoordinatorConfig::default().reply_timeout,
             backend: Backend::Auto,
+            max_rps: 0.0,
+            burst: 8,
+            max_inflight: 0,
+            max_frame_bytes: 1 << 20,
+            shed_high: 0,
+            shed_low: 0,
             test_ops: false,
+            chaos_seed: None,
         }
     }
 }
 
-/// One engine shard: a long-lived [`Engine`] plus its bounded job
-/// queue and a queued+in-flight gauge.
+/// One engine shard's queue handle and gauge. The engine itself lives
+/// on the worker thread's stack so supervision can rebuild it after a
+/// caught panic without synchronizing with readers.
 struct Shard {
-    engine: Engine,
     /// `None` once the server is draining; taken by [`Server::join`]
     /// so the worker's `recv` loop ends after the queue empties.
     tx: Mutex<Option<SyncSender<Job>>>,
@@ -125,6 +203,15 @@ struct Shared {
     shutdown: AtomicBool,
     conns: Mutex<Vec<JoinHandle<()>>>,
     reply_timeout: Duration,
+    backend: Backend,
+    max_rps: f64,
+    burst: u32,
+    max_inflight: u64,
+    max_frame_bytes: usize,
+    shed_high: u64,
+    shed_low: u64,
+    shedding: AtomicBool,
+    chaos: Option<FaultPlan>,
     test_ops: bool,
     addr: SocketAddr,
 }
@@ -137,13 +224,61 @@ impl Shared {
         // Wake the accept loop; the dummy connection is dropped there.
         let _ = TcpStream::connect(self.addr);
     }
+
+    /// Memo lock, tolerant of poisoning: the memo is plain data with no
+    /// cross-field invariant a panicking holder could have broken
+    /// half-way (every mutation completes or the entry is absent), and
+    /// the supervision story is that one panic never takes the cache
+    /// down with it.
+    fn lock_memo(&self) -> MutexGuard<'_, MemoCache> {
+        self.memo.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+    }
+
+    /// Shed-mode state with hysteresis over the summed queued+in-flight
+    /// gauge: enter at `shed_high`, leave at `shed_low`. Evaluated on
+    /// the request path (no dedicated sampler thread) — under the loads
+    /// where shedding matters, requests arrive constantly.
+    fn shed_state(&self) -> bool {
+        let total: u64 = self.shards.iter().map(|s| s.queued.load(Ordering::Relaxed)).sum();
+        if self.shedding.load(Ordering::Relaxed) {
+            if total <= self.shed_low {
+                self.shedding.store(false, Ordering::Relaxed);
+                return false;
+            }
+            true
+        } else {
+            if total >= self.shed_high {
+                self.shedding.store(true, Ordering::Relaxed);
+                return true;
+            }
+            false
+        }
+    }
+}
+
+/// Build a shard engine. Called at worker start and again after every
+/// caught panic — a restarted worker must not inherit state a panic
+/// may have corrupted.
+fn fresh_engine(shared: &Shared) -> Engine {
+    Engine::builder().backend(shared.backend).reply_timeout(shared.reply_timeout).build()
 }
 
 /// A shard job. Replies travel over a fresh 1-slot channel per request
 /// so timeouts cannot leak a reply into a later request.
 enum Job {
-    Analyze { req: AnalysisRequest, key: u64, reply: SyncSender<String> },
+    Analyze {
+        req: AnalysisRequest,
+        key: u64,
+        reply: SyncSender<String>,
+        /// Queue-time budget; expired at dispatch → `deadline_exceeded`.
+        deadline: Option<Instant>,
+        /// The submitting connection's in-flight gauge; the worker
+        /// drops it when the job finishes, however it finishes.
+        inflight: Arc<AtomicU64>,
+    },
     Sleep { ms: u64, reply: SyncSender<String> },
+    /// Test-ops only: panic inside the worker to exercise supervision.
+    Panic { reply: SyncSender<String> },
 }
 
 /// The running service. Bind with [`Server::bind`], stop with a wire
@@ -167,22 +302,33 @@ impl Server {
         for _ in 0..n {
             let (tx, rx) = mpsc::sync_channel(cfg.queue_depth.max(1));
             rxs.push(rx);
-            shards.push(Shard {
-                engine: Engine::builder()
-                    .backend(cfg.backend)
-                    .reply_timeout(cfg.reply_timeout)
-                    .build(),
-                tx: Mutex::new(Some(tx)),
-                queued: AtomicU64::new(0),
-            });
+            shards.push(Shard { tx: Mutex::new(Some(tx)), queued: AtomicU64::new(0) });
         }
+        // Auto shed thresholds: the gauge tops out at shards ×
+        // (queue_depth + 1) — every slot queued plus one in flight per
+        // worker — so the default only sheds at provable saturation
+        // (a merely-full single queue still answers plain
+        // `overloaded`), and leaves once load drops to a quarter.
+        let gauge_cap = n as u64 * (cfg.queue_depth.max(1) as u64 + 1);
+        let shed_high = if cfg.shed_high > 0 { cfg.shed_high as u64 } else { gauge_cap };
+        let shed_low = if cfg.shed_low > 0 { cfg.shed_low as u64 } else { gauge_cap / 4 };
+        let shed_low = shed_low.min(shed_high.saturating_sub(1));
         let shared = Arc::new(Shared {
             shards,
             metrics: ServeMetrics::default(),
-            memo: Mutex::new(MemoCache::new(cfg.memo_cap)),
+            memo: Mutex::new(MemoCache::new(cfg.memo_cap, cfg.memo_max_bytes)),
             shutdown: AtomicBool::new(false),
             conns: Mutex::new(Vec::new()),
             reply_timeout: cfg.reply_timeout,
+            backend: cfg.backend,
+            max_rps: cfg.max_rps,
+            burst: cfg.burst,
+            max_inflight: cfg.max_inflight as u64,
+            max_frame_bytes: cfg.max_frame_bytes.max(1),
+            shed_high,
+            shed_low,
+            shedding: AtomicBool::new(false),
+            chaos: cfg.chaos_seed.map(FaultPlan::new),
             test_ops: cfg.test_ops,
             addr,
         });
@@ -332,7 +478,32 @@ fn handle_conn(shared: Arc<Shared>, mut stream: TcpStream) {
     // attempts, so idle connections notice a drain within ~100ms.
     let _ = stream.set_read_timeout(Some(Duration::from_millis(100)));
     let mut buf: Vec<u8> = Vec::new();
-    while let Some(line) = read_frame(&mut stream, &mut buf, &shared.shutdown) {
+    // Per-connection fairness state: the token bucket admits analyzes,
+    // the gauge counts this connection's queued/running analyzes (the
+    // worker decrements it when a job finishes).
+    let mut bucket = TokenBucket::new(shared.max_rps, shared.burst);
+    let inflight = Arc::new(AtomicU64::new(0));
+    loop {
+        let line =
+            match read_frame(&mut stream, &mut buf, &shared.shutdown, shared.max_frame_bytes) {
+                ReadOutcome::Closed => return,
+                ReadOutcome::Oversized => {
+                    // Answer, then skip bytes until the offending line
+                    // ends — the connection survives with bounded
+                    // memory.
+                    ServeMetrics::bump(&shared.metrics.oversized_frames);
+                    ServeMetrics::bump(&shared.metrics.errors);
+                    let msg = format!("frame exceeds {} bytes", shared.max_frame_bytes);
+                    if !write_frame(&mut stream, &error_frame("frame_too_large", &msg)) {
+                        return;
+                    }
+                    if !discard_through_newline(&mut stream, &mut buf, &shared.shutdown) {
+                        return;
+                    }
+                    continue;
+                }
+                ReadOutcome::Frame(line) => line,
+            };
         let line = line.trim();
         if line.is_empty() {
             continue;
@@ -346,10 +517,13 @@ fn handle_conn(shared: Arc<Shared>, mut stream: TcpStream) {
                 error_frame(e.kind, &e.message)
             }
             Ok(WireRequest::Stats) => {
-                let memo_len = shared.memo.lock().expect("memo").len() as u64;
+                let (memo_len, memo_bytes) = {
+                    let memo = shared.lock_memo();
+                    (memo.len() as u64, memo.bytes() as u64)
+                };
                 let depths =
                     shared.shards.iter().map(|s| s.queued.load(Ordering::Relaxed)).collect();
-                shared.metrics.frame(memo_len, depths).render()
+                shared.metrics.frame(memo_len, memo_bytes, depths, shared.shed_state()).render()
             }
             Ok(WireRequest::Shutdown) => {
                 let _ = write_frame(&mut stream, &bye_frame());
@@ -364,34 +538,22 @@ fn handle_conn(shared: Arc<Shared>, mut stream: TcpStream) {
                         .unwrap_or_else(|_| {
                             error_frame("solver_timeout", "sleep reply timed out")
                         }),
-                    Submit::Full(depth) => overloaded_frame(0, depth),
+                    Submit::Full(depth) => overloaded_frame(0, depth, false),
                     Submit::Closed => error_frame("service_unavailable", "server is draining"),
                 }
             }
-            Ok(WireRequest::Analyze(req)) => {
-                let idx = shard_index(&req.arch, shared.shards.len());
-                let key = req.fingerprint();
+            Ok(WireRequest::Panic) => {
                 let (rtx, rrx) = mpsc::sync_channel(1);
-                let resp = match submit(&shared, idx, Job::Analyze { req, key, reply: rtx }) {
-                    Submit::Queued => match rrx.recv_timeout(shared.reply_timeout) {
-                        Ok(frame) => frame,
-                        Err(_) => {
-                            ServeMetrics::bump(&shared.metrics.errors);
-                            error_frame(
-                                "solver_timeout",
-                                &format!("no reply within {:?}", shared.reply_timeout),
-                            )
-                        }
-                    },
-                    Submit::Full(depth) => {
-                        ServeMetrics::bump(&shared.metrics.overloaded);
-                        overloaded_frame(idx, depth)
-                    }
-                    Submit::Closed => {
-                        ServeMetrics::bump(&shared.metrics.errors);
-                        error_frame("service_unavailable", "server is draining")
-                    }
-                };
+                match submit(&shared, 0, Job::Panic { reply: rtx }) {
+                    Submit::Queued => rrx.recv_timeout(shared.reply_timeout).unwrap_or_else(|_| {
+                        error_frame("solver_timeout", "panic reply timed out")
+                    }),
+                    Submit::Full(depth) => overloaded_frame(0, depth, false),
+                    Submit::Closed => error_frame("service_unavailable", "server is draining"),
+                }
+            }
+            Ok(WireRequest::Analyze { req, deadline_ms }) => {
+                let resp = analyze_op(&shared, &mut bucket, &inflight, req, deadline_ms);
                 ServeMetrics::bump(&shared.metrics.served);
                 resp
             }
@@ -402,10 +564,89 @@ fn handle_conn(shared: Arc<Shared>, mut stream: TcpStream) {
     }
 }
 
+/// The analyze admission ladder: rate limit → in-flight cap → shed
+/// check (memo hits still answer) → queue submission. Each rung
+/// answers its own structured frame; only the last rung costs a queue
+/// slot.
+fn analyze_op(
+    shared: &Shared,
+    bucket: &mut TokenBucket,
+    inflight: &Arc<AtomicU64>,
+    req: AnalysisRequest,
+    deadline_ms: Option<u64>,
+) -> String {
+    if let Err(retry_ms) = bucket.try_acquire(Instant::now()) {
+        ServeMetrics::bump(&shared.metrics.rate_limited);
+        return rate_limited_frame("rps", retry_ms);
+    }
+    if shared.max_inflight > 0 && inflight.load(Ordering::Relaxed) >= shared.max_inflight {
+        ServeMetrics::bump(&shared.metrics.rate_limited);
+        return rate_limited_frame("inflight", RETRY_INFLIGHT_MS);
+    }
+    let idx = shard_index(&req.arch, shared.shards.len());
+    let key = req.fingerprint();
+    if shared.shed_state() {
+        // Degradation ladder: a saturated server still answers what it
+        // already knows (memo hits bypass the queue entirely) and
+        // rejects only work that needs a worker.
+        if let Some(frame) = try_memo_frame(shared, key, &req.name, req.format) {
+            return frame;
+        }
+        ServeMetrics::bump(&shared.metrics.shed);
+        ServeMetrics::bump(&shared.metrics.overloaded);
+        let depth = shared.shards[idx].queued.load(Ordering::Relaxed);
+        return overloaded_frame(idx, depth, true);
+    }
+    let deadline = deadline_ms.map(|ms| Instant::now() + Duration::from_millis(ms));
+    let (rtx, rrx) = mpsc::sync_channel(1);
+    inflight.fetch_add(1, Ordering::Relaxed);
+    let job = Job::Analyze { req, key, reply: rtx, deadline, inflight: inflight.clone() };
+    match submit(shared, idx, job) {
+        Submit::Queued => match rrx.recv_timeout(shared.reply_timeout) {
+            Ok(frame) => frame,
+            Err(_) => {
+                // The worker still owns the job (and will decrement the
+                // in-flight gauge when it finishes); only the reply is
+                // abandoned.
+                ServeMetrics::bump(&shared.metrics.errors);
+                error_frame(
+                    "solver_timeout",
+                    &format!("no reply within {:?}", shared.reply_timeout),
+                )
+            }
+        },
+        Submit::Full(depth) => {
+            inflight.fetch_sub(1, Ordering::Relaxed);
+            ServeMetrics::bump(&shared.metrics.overloaded);
+            overloaded_frame(idx, depth, false)
+        }
+        Submit::Closed => {
+            inflight.fetch_sub(1, Ordering::Relaxed);
+            ServeMetrics::bump(&shared.metrics.errors);
+            error_frame("service_unavailable", "server is draining")
+        }
+    }
+}
+
+/// Outcome of one frame-read attempt.
+enum ReadOutcome {
+    Frame(String),
+    /// The line under construction exceeded `max_frame` bytes without
+    /// a newline; the caller answers a structured error and discards
+    /// the rest of the line.
+    Oversized,
+    /// Connection closed, IO error, or drain.
+    Closed,
+}
+
 /// Read one newline-terminated frame, polling the shutdown flag
-/// between read attempts. Returns `None` on connection close, IO
-/// error, or drain.
-fn read_frame(stream: &mut TcpStream, buf: &mut Vec<u8>, shutdown: &AtomicBool) -> Option<String> {
+/// between read attempts and bounding the line buffer.
+fn read_frame(
+    stream: &mut TcpStream,
+    buf: &mut Vec<u8>,
+    shutdown: &AtomicBool,
+    max_frame: usize,
+) -> ReadOutcome {
     let mut chunk = [0u8; 4096];
     loop {
         if let Some(pos) = buf.iter().position(|&b| b == b'\n') {
@@ -414,18 +655,51 @@ fn read_frame(stream: &mut TcpStream, buf: &mut Vec<u8>, shutdown: &AtomicBool) 
             if line.ends_with('\r') {
                 line.pop();
             }
-            return Some(line);
+            return ReadOutcome::Frame(line);
+        }
+        if buf.len() > max_frame {
+            return ReadOutcome::Oversized;
         }
         if shutdown.load(Ordering::Relaxed) {
-            return None;
+            return ReadOutcome::Closed;
         }
         match stream.read(&mut chunk) {
-            Ok(0) => return None,
+            Ok(0) => return ReadOutcome::Closed,
             Ok(n) => buf.extend_from_slice(&chunk[..n]),
             Err(e) if matches!(e.kind(), io::ErrorKind::WouldBlock | io::ErrorKind::TimedOut) => {
                 continue
             }
-            Err(_) => return None,
+            Err(_) => return ReadOutcome::Closed,
+        }
+    }
+}
+
+/// Skip input until the end of the current (oversized) line, keeping
+/// memory bounded by clearing the buffer between reads. Bytes after
+/// the newline are preserved for the next frame. Returns false when
+/// the connection should close.
+fn discard_through_newline(
+    stream: &mut TcpStream,
+    buf: &mut Vec<u8>,
+    shutdown: &AtomicBool,
+) -> bool {
+    let mut chunk = [0u8; 4096];
+    loop {
+        if let Some(pos) = buf.iter().position(|&b| b == b'\n') {
+            buf.drain(..=pos);
+            return true;
+        }
+        buf.clear();
+        if shutdown.load(Ordering::Relaxed) {
+            return false;
+        }
+        match stream.read(&mut chunk) {
+            Ok(0) => return false,
+            Ok(n) => buf.extend_from_slice(&chunk[..n]),
+            Err(e) if matches!(e.kind(), io::ErrorKind::WouldBlock | io::ErrorKind::TimedOut) => {
+                continue
+            }
+            Err(_) => return false,
         }
     }
 }
@@ -435,40 +709,112 @@ fn write_frame(stream: &mut TcpStream, frame: &str) -> bool {
 }
 
 fn shard_worker(shared: &Shared, index: usize, rx: Receiver<Job>) {
+    // The worker owns its engine so supervision can rebuild it after a
+    // caught panic without any shared-state coordination.
+    let mut engine = fresh_engine(shared);
     // `recv` fails once the server takes the shard's sender; every job
     // queued before that is still delivered first, which is exactly the
     // graceful-drain contract.
     while let Ok(job) = rx.recv() {
         match job {
-            Job::Analyze { req, key, reply } => {
-                let frame = analyze_job(shared, index, req, key);
+            Job::Analyze { req, key, reply, deadline, inflight } => {
+                let frame = if deadline.is_some_and(|d| Instant::now() >= d) {
+                    ServeMetrics::bump(&shared.metrics.deadline_expired);
+                    ServeMetrics::bump(&shared.metrics.errors);
+                    error_frame("deadline_exceeded", "request deadline expired before dispatch")
+                } else {
+                    let fault = shared.chaos.as_ref().and_then(FaultPlan::next_dispatch);
+                    if let Some(Fault::StallQueue { ms }) = fault {
+                        thread::sleep(Duration::from_millis(ms));
+                    }
+                    let outcome = panic::catch_unwind(AssertUnwindSafe(|| {
+                        if matches!(fault, Some(Fault::Panic)) {
+                            panic!("chaos: injected worker panic");
+                        }
+                        analyze_job(shared, &engine, req, key)
+                    }));
+                    match outcome {
+                        Ok(frame) => {
+                            if let Some(Fault::DelayReply { ms }) = fault {
+                                thread::sleep(Duration::from_millis(ms));
+                            }
+                            frame
+                        }
+                        Err(payload) => recover(shared, &mut engine, payload.as_ref()),
+                    }
+                };
                 // A timed-out connection dropped its receiver; the
                 // failed send is the intended outcome then.
                 let _ = reply.try_send(frame);
+                inflight.fetch_sub(1, Ordering::Relaxed);
             }
             Job::Sleep { ms, reply } => {
                 thread::sleep(Duration::from_millis(ms));
                 let _ = reply.try_send(ok_frame(Format::Text, false, "slept"));
+            }
+            Job::Panic { reply } => {
+                let outcome: Result<String, Box<dyn Any + Send>> =
+                    panic::catch_unwind(|| panic!("test-op: injected worker panic"));
+                let frame = match outcome {
+                    Ok(frame) => frame,
+                    Err(payload) => recover(shared, &mut engine, payload.as_ref()),
+                };
+                let _ = reply.try_send(frame);
             }
         }
         shared.shards[index].queued.fetch_sub(1, Ordering::Relaxed);
     }
 }
 
-fn analyze_job(shared: &Shared, index: usize, req: AnalysisRequest, key: u64) -> String {
-    if let Some(hit) = shared.memo.lock().expect("memo").get(key) {
-        ServeMetrics::bump(&shared.metrics.memo_hits);
-        // The fingerprint excludes presentation fields, so patch them
-        // from this request before rendering. The clone shares the
-        // cached report's Arc'd prediction decomposition.
-        let mut patched = (*hit).clone();
-        patched.name = req.name;
-        patched.format = req.format;
-        return ok_frame(patched.format, true, &patched.render());
+/// Supervision: count the panic, rebuild the engine, answer a frame
+/// whose message is a redacted category — panic payloads can carry
+/// internal state and are not a wire surface.
+fn recover(shared: &Shared, engine: &mut Engine, payload: &(dyn Any + Send)) -> String {
+    ServeMetrics::bump(&shared.metrics.panics);
+    ServeMetrics::bump(&shared.metrics.errors);
+    *engine = fresh_engine(shared);
+    ServeMetrics::bump(&shared.metrics.worker_restarts);
+    error_frame("internal_error", panic_category(payload))
+}
+
+/// Redact a panic payload to a stable category. The injected classes
+/// keep distinct names so tests can tell supervision paths apart; any
+/// genuine panic is just "worker_panic".
+fn panic_category(payload: &(dyn Any + Send)) -> &'static str {
+    let msg = payload
+        .downcast_ref::<&str>()
+        .copied()
+        .or_else(|| payload.downcast_ref::<String>().map(String::as_str));
+    match msg {
+        Some(m) if m.starts_with("chaos:") => "injected_chaos_panic",
+        Some(m) if m.starts_with("test-op:") => "injected_test_panic",
+        _ => "worker_panic",
+    }
+}
+
+/// Render an answer from the memo, if present: bump the hit counter,
+/// clone the cached report, patch the presentation-only fields from
+/// this request, render. Used both on the worker path and directly on
+/// the connection path in shed mode (hits must not need a queue slot).
+fn try_memo_frame(shared: &Shared, key: u64, name: &str, format: Format) -> Option<String> {
+    let hit = shared.lock_memo().get(key)?;
+    ServeMetrics::bump(&shared.metrics.memo_hits);
+    // The fingerprint excludes presentation fields, so patch them from
+    // this request before rendering. The clone shares the cached
+    // report's Arc'd prediction decomposition.
+    let mut patched = (*hit).clone();
+    patched.name = name.to_string();
+    patched.format = format;
+    Some(ok_frame(format, true, &patched.render()))
+}
+
+fn analyze_job(shared: &Shared, engine: &Engine, req: AnalysisRequest, key: u64) -> String {
+    if let Some(frame) = try_memo_frame(shared, key, &req.name, req.format) {
+        return frame;
     }
     ServeMetrics::bump(&shared.metrics.memo_misses);
     ServeMetrics::bump(&shared.metrics.analyses);
-    match shared.shards[index].engine.analyze(&req) {
+    match engine.analyze(&req) {
         Ok(report) => {
             let format = report.format;
             let arc = Arc::new(report);
@@ -476,7 +822,9 @@ fn analyze_job(shared: &Shared, index: usize, req: AnalysisRequest, key: u64) ->
             // becomes visible to other requests.
             arc.prediction_shared();
             let rendered = arc.render();
-            shared.memo.lock().expect("memo").insert(key, arc);
+            // The rendered length is the byte-cost proxy: the rendered
+            // report dominates what a cached entry keeps alive.
+            shared.lock_memo().insert(key, arc, rendered.len());
             ok_frame(format, false, &rendered)
         }
         Err(e) => {
@@ -512,7 +860,28 @@ mod tests {
         let c = ServeConfig::default();
         assert_eq!(c.shards, 2);
         assert_eq!(c.memo_cap, 256);
+        assert_eq!(c.memo_max_bytes, 0, "byte bound is opt-in");
         assert_eq!(c.queue_depth, 64);
+        assert_eq!(c.max_rps, 0.0, "rate limiting is opt-in");
+        assert_eq!(c.burst, 8);
+        assert_eq!(c.max_inflight, 0, "in-flight cap is opt-in");
+        assert_eq!(c.max_frame_bytes, 1 << 20);
+        assert_eq!(c.shed_high, 0, "0 = auto (full gauge capacity)");
+        assert_eq!(c.shed_low, 0, "0 = auto (quarter capacity)");
         assert!(!c.test_ops);
+        assert!(c.chaos_seed.is_none());
+    }
+
+    #[test]
+    fn panic_categories_are_redacted() {
+        let boxed: Box<dyn Any + Send> = Box::new("chaos: injected worker panic");
+        assert_eq!(panic_category(boxed.as_ref()), "injected_chaos_panic");
+        let boxed: Box<dyn Any + Send> = Box::new("test-op: injected worker panic".to_string());
+        assert_eq!(panic_category(boxed.as_ref()), "injected_test_panic");
+        let boxed: Box<dyn Any + Send> =
+            Box::new("index out of bounds: secret internal detail".to_string());
+        assert_eq!(panic_category(boxed.as_ref()), "worker_panic");
+        let boxed: Box<dyn Any + Send> = Box::new(42u32);
+        assert_eq!(panic_category(boxed.as_ref()), "worker_panic");
     }
 }

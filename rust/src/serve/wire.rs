@@ -8,17 +8,20 @@
 //! ```json
 //! {"op":"analyze","arch":"skl","source":"...","name":"triad",
 //!  "passes":["throughput","critpath"],"frontend_bound":false,
-//!  "unroll":4,"format":"json"}
+//!  "unroll":4,"format":"json","deadline_ms":250}
 //! {"op":"stats"}
 //! {"op":"shutdown"}
 //! {"op":"sleep","ms":250}        // test-ops builds only
+//! {"op":"panic"}                 // test-ops builds only
 //! ```
 //!
 //! `analyze` requires `arch` and `source`; everything else defaults
 //! (`passes` → analytic, `format` → json, `unroll` → 1, `name` →
-//! "wire"). Malformed frames produce a structured error with a
-//! machine-readable kind, never a disconnect — the connection survives
-//! and the client can retry.
+//! "wire", `deadline_ms` → none). `deadline_ms` is a serving concern,
+//! not an analysis input — it rides next to the request rather than on
+//! it, so the memo fingerprint is untouched by it. Malformed frames
+//! produce a structured error with a machine-readable kind, never a
+//! disconnect — the connection survives and the client can retry.
 
 use crate::api::{AnalysisRequest, Format, Passes};
 use crate::serve::json::{self, JsonValue};
@@ -26,12 +29,21 @@ use crate::serve::json::{self, JsonValue};
 /// One decoded request frame.
 #[derive(Debug)]
 pub enum WireRequest {
-    Analyze(AnalysisRequest),
+    Analyze {
+        req: AnalysisRequest,
+        /// Queue-time budget: if the request has not reached a worker
+        /// within this many milliseconds it is answered with a
+        /// `deadline_exceeded` error instead of being analyzed.
+        deadline_ms: Option<u64>,
+    },
     Stats,
     Shutdown,
     /// Test-ops only: occupy a shard worker for `ms` milliseconds so
     /// tests can saturate a queue deterministically.
     Sleep { ms: u64 },
+    /// Test-ops only: panic inside a shard worker so tests can pin the
+    /// supervision path (internal_error frame, engine rebuild).
+    Panic,
 }
 
 /// Why a frame could not be decoded. `kind` is the machine-readable
@@ -50,7 +62,8 @@ impl FrameError {
 }
 
 /// Decode one frame. `test_ops` gates the ops that exist only so the
-/// integration tests can shape server load (`sleep`).
+/// integration tests can shape server load (`sleep`) and fault it
+/// (`panic`).
 pub fn parse_request(line: &str, test_ops: bool) -> Result<WireRequest, FrameError> {
     let v = json::parse(line).map_err(|e| FrameError::bad(e.to_string()))?;
     if !matches!(v, JsonValue::Obj(_)) {
@@ -61,7 +74,16 @@ pub fn parse_request(line: &str, test_ops: bool) -> Result<WireRequest, FrameErr
         .and_then(JsonValue::as_str)
         .ok_or_else(|| FrameError::bad("missing string field `op`"))?;
     match op {
-        "analyze" => analyze_request(&v).map(WireRequest::Analyze),
+        "analyze" => {
+            let deadline_ms = match v.get("deadline_ms") {
+                None => None,
+                Some(d) => Some(d.as_u64().ok_or_else(|| {
+                    FrameError::bad("`deadline_ms` must be a non-negative integer")
+                })?),
+            };
+            let req = analyze_request(&v)?;
+            Ok(WireRequest::Analyze { req, deadline_ms })
+        }
         "stats" => Ok(WireRequest::Stats),
         "shutdown" => Ok(WireRequest::Shutdown),
         "sleep" if test_ops => {
@@ -71,6 +93,7 @@ pub fn parse_request(line: &str, test_ops: bool) -> Result<WireRequest, FrameErr
                 .ok_or_else(|| FrameError::bad("`sleep` needs integer field `ms`"))?;
             Ok(WireRequest::Sleep { ms })
         }
+        "panic" if test_ops => Ok(WireRequest::Panic),
         other => Err(FrameError::bad(format!("unknown op `{other}`"))),
     }
 }
@@ -138,26 +161,48 @@ mod tests {
             false,
         )
         .unwrap();
-        let WireRequest::Analyze(req) = r else { panic!("expected analyze") };
+        let WireRequest::Analyze { req, deadline_ms } = r else { panic!("expected analyze") };
         assert_eq!(req.arch, "skl");
         assert_eq!(req.name, "wire");
         assert_eq!(req.passes, Passes::ANALYTIC);
         assert_eq!(req.format, Format::Json, "wire default is json, not text");
         assert_eq!(req.unroll, 1);
+        assert_eq!(deadline_ms, None);
 
         let r = parse_request(
             "{\"op\":\"analyze\",\"arch\":\"rv64\",\"source\":\"x\",\"name\":\"triad\",\
              \"passes\":[\"throughput\",\"critpath\"],\"frontend_bound\":true,\
-             \"unroll\":4,\"format\":\"csv\"}",
+             \"unroll\":4,\"format\":\"csv\",\"deadline_ms\":250}",
             false,
         )
         .unwrap();
-        let WireRequest::Analyze(req) = r else { panic!("expected analyze") };
+        let WireRequest::Analyze { req, deadline_ms } = r else { panic!("expected analyze") };
         assert_eq!(req.name, "triad");
         assert_eq!(req.passes, Passes::THROUGHPUT | Passes::CRITPATH);
         assert!(req.frontend_bound);
         assert_eq!(req.unroll, 4);
         assert_eq!(req.format, Format::Csv);
+        assert_eq!(deadline_ms, Some(250));
+    }
+
+    #[test]
+    fn deadline_does_not_perturb_the_fingerprint() {
+        let plain = parse_request(
+            "{\"op\":\"analyze\",\"arch\":\"skl\",\"source\":\"x\"}",
+            false,
+        )
+        .unwrap();
+        let bounded = parse_request(
+            "{\"op\":\"analyze\",\"arch\":\"skl\",\"source\":\"x\",\"deadline_ms\":10}",
+            false,
+        )
+        .unwrap();
+        let (WireRequest::Analyze { req: a, .. }, WireRequest::Analyze { req: b, .. }) =
+            (plain, bounded)
+        else {
+            panic!("expected analyze frames")
+        };
+        assert_eq!(a.fingerprint(), b.fingerprint(), "deadline is a serving concern only");
     }
 
     #[test]
@@ -171,8 +216,11 @@ mod tests {
             parse_request("{\"op\":\"sleep\",\"ms\":50}", true),
             Ok(WireRequest::Sleep { ms: 50 })
         ));
-        // sleep is gated behind test_ops.
+        assert!(matches!(parse_request("{\"op\":\"panic\"}", true), Ok(WireRequest::Panic)));
+        // sleep and panic are gated behind test_ops.
         let e = parse_request("{\"op\":\"sleep\",\"ms\":50}", false).unwrap_err();
+        assert_eq!(e.kind, "bad_request");
+        let e = parse_request("{\"op\":\"panic\"}", false).unwrap_err();
         assert_eq!(e.kind, "bad_request");
     }
 
@@ -184,6 +232,10 @@ mod tests {
             ("{\"op\":\"warp\"}", "bad_request"),
             ("{\"op\":\"analyze\",\"source\":\"x\"}", "bad_request"),
             ("{\"op\":\"analyze\",\"arch\":\"skl\"}", "bad_request"),
+            (
+                "{\"op\":\"analyze\",\"arch\":\"skl\",\"source\":\"x\",\"deadline_ms\":-1}",
+                "bad_request",
+            ),
             (
                 "{\"op\":\"analyze\",\"arch\":\"skl\",\"source\":\"x\",\"passes\":[\"warp\"]}",
                 "bad_request",

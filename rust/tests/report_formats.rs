@@ -3,7 +3,7 @@
 //! * Golden-file snapshots of the JSON and CSV emitters for one x86 and
 //!   one RISC-V fixture (the rv64 one with the width-aware frontend
 //!   bound on, so the full bound decomposition is pinned byte-for-byte).
-//! * A schema lock: the version-2 JSON key set is pinned, so changing
+//! * A schema lock: the version-3 JSON key set is pinned, so changing
 //!   the emitted shape without bumping `SCHEMA_VERSION` (and this test)
 //!   fails CI.
 //! * A hand-rolled JSON validity check over every workload fixture ×
@@ -73,14 +73,15 @@ fn csv_golden_rv64_triad() {
     assert_eq!(got.trim_end(), want.trim_end());
 }
 
-/// The version-2 key set (v1 + the per-line occupancy rows absorbed
-/// into `prediction.lines`: hidden, instr, lines, occupancy,
-/// provenance, text). Changing the JSON shape requires bumping
-/// `SCHEMA_VERSION` *and* pinning the new set here — one without the
-/// other fails.
+/// The version-3 key set. v3 did not change the report body — the
+/// bump covers the serve wire frames (shedding/rate_limited fields and
+/// the new fault-tolerance counters), which share this version number.
+/// The report keys are therefore identical to v2. Changing the JSON
+/// shape requires bumping `SCHEMA_VERSION` *and* pinning the new set
+/// here — one without the other fails.
 #[test]
 fn schema_version_pins_json_shape() {
-    const V2_KEYS: &[&str] = &[
+    const V3_KEYS: &[&str] = &[
         "arch",
         "baseline",
         "bottleneck_port",
@@ -118,10 +119,10 @@ fn schema_version_pins_json_shape() {
         "uniform_cy",
         "unroll",
     ];
-    // This test pins version 2. A schema bump invalidates it by
+    // This test pins version 3. A schema bump invalidates it by
     // construction: update SCHEMA_VERSION, this constant and the pinned
     // key list together.
-    assert_eq!(SCHEMA_VERSION, 2, "schema bumped: re-pin the key set for the new version");
+    assert_eq!(SCHEMA_VERSION, 3, "schema bumped: re-pin the key set for the new version");
     // A report with every section present (all passes + frontend
     // bound) must emit exactly the pinned keys.
     let engine = Engine::cpu_only();
@@ -141,7 +142,7 @@ fn schema_version_pins_json_shape() {
     let mut keys = json_keys(&report.to_json());
     keys.sort();
     keys.dedup();
-    assert_eq!(keys, V2_KEYS, "JSON shape changed without a SCHEMA_VERSION bump");
+    assert_eq!(keys, V3_KEYS, "JSON shape changed without a SCHEMA_VERSION bump");
 }
 
 /// Every fixture × matching built-in model emits valid JSON and

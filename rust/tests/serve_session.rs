@@ -123,7 +123,7 @@ fn concurrent_clients_round_trip_golden_frames() {
                     let frame = c.round_trip(&request);
                     let v = parsed(&frame);
                     assert_eq!(v.get("status").and_then(JsonValue::as_str), Some("ok"));
-                    assert_eq!(v.get("schema_version").and_then(JsonValue::as_u64), Some(2));
+                    assert_eq!(v.get("schema_version").and_then(JsonValue::as_u64), Some(3));
                     // The memo works per fingerprint even under
                     // concurrency: each client's repeats hit.
                     let expect_hit = i > 0;
@@ -196,6 +196,9 @@ fn saturated_queue_answers_overloaded_then_recovers() {
     assert_eq!(v.get("status").and_then(JsonValue::as_str), Some("overloaded"), "{frame}");
     assert_eq!(v.get("shard").and_then(JsonValue::as_u64), Some(0));
     assert!(v.get("queue_depth").and_then(JsonValue::as_u64).is_some(), "{frame}");
+    // A full 1×1 deployment is at the auto shed threshold, so the
+    // rejection frame reports degraded mode.
+    assert_eq!(v.get("shedding").and_then(JsonValue::as_bool), Some(true), "{frame}");
 
     // The queued analyze completes once the worker wakes.
     assert_eq!(status(&queued.recv()), "ok");

@@ -1,9 +1,9 @@
 #!/usr/bin/env python3
 """Smoke client for the `osaca serve` TCP service (ci.sh --serve-smoke).
 
-Usage: serve_smoke_client.py <host:port> <n_requests>
+Usage: serve_smoke_client.py <host:port> <n_requests> [--chaos]
 
-Drives one live server end to end over the real socket:
+Default mode drives one live server end to end over the real socket:
 
 * sends <n_requests> `analyze` frames (alternating the shipped skl and
   rv64 triad fixtures so both shards and both ISAs are exercised),
@@ -14,6 +14,21 @@ Drives one live server end to end over the real socket:
 * requests `stats` and asserts the counters cover the analyzes sent;
 * sends `shutdown` and asserts the `bye` acknowledgement.
 
+`--chaos` mode (ci.sh --chaos-smoke) expects a server booted with
+`--chaos <seed> --test-ops --max-rps 2 --burst 3 --max-frame-bytes
+65536` and proves the degradation ladder on the shipped binary:
+
+* the analyze sweep tolerates every structured degradation frame
+  (`overloaded`, `rate_limited`, redacted `internal_error`,
+  `solver_timeout`, `deadline_exceeded`) but nothing unstructured;
+* a `panic` probe must answer the redacted frame and the connection
+  must recover to an `ok` within a bounded retry loop;
+* an oversized frame answers `frame_too_large` and the connection
+  survives; a torn/blank-line frame reassembles;
+* `stats` must pin the fault counters (panics, worker_restarts,
+  oversized_frames, rate_limited) as nonzero;
+* the wire shutdown still acknowledges with `bye`.
+
 Exits non-zero (with a diagnostic on stderr) on the first violated
 expectation. The caller owns the server process and checks its clean
 exit separately.
@@ -21,11 +36,21 @@ exit separately.
 import json
 import socket
 import sys
+import time
 
-SCHEMA_VERSION = 2
+SCHEMA_VERSION = 3
 
 SKL_SOURCE = "workloads/triad/skl_o3.s"
 RV64_SOURCE = "workloads/triad/rv64_o2.s"
+
+# Structured degradation statuses a chaotic server may answer.
+CHAOS_STATUSES = {"ok", "overloaded", "rate_limited"}
+CHAOS_ERROR_KINDS = {
+    "internal_error",
+    "solver_timeout",
+    "deadline_exceeded",
+    "frame_too_large",
+}
 
 
 def fail(msg):
@@ -59,12 +84,97 @@ def request_frames():
     ]
 
 
+def check_chaos_frame(i, resp):
+    """A chaotic server may degrade, but only into structured frames."""
+    if resp.get("schema_version") != SCHEMA_VERSION:
+        fail(f"response {i}: schema_version {resp.get('schema_version')}: {resp}")
+    status = resp.get("status")
+    if status in CHAOS_STATUSES:
+        return status
+    if status == "error":
+        kind = resp.get("error", {}).get("kind")
+        if kind in CHAOS_ERROR_KINDS:
+            return f"error:{kind}"
+        fail(f"response {i}: unexpected error kind: {resp}")
+    fail(f"response {i}: unstructured degradation: {resp}")
+
+
+def chaos_session(sock, rfile, round_trip, n):
+    templates = request_frames()
+    seen = {}
+    for i in range(n):
+        frame = dict(templates[i % len(templates)])
+        # Generous deadline: exercises the deadline plumbing end to
+        # end; expiry under an injected stall is a tolerated outcome.
+        frame["deadline_ms"] = 2000
+        outcome = check_chaos_frame(i, round_trip(frame))
+        seen[outcome] = seen.get(outcome, 0) + 1
+
+    # Deterministic panic probe: the redacted frame, then recovery.
+    resp = round_trip({"op": "panic"})
+    if resp.get("status") != "error":
+        fail(f"panic probe: {resp}")
+    if resp.get("error", {}).get("kind") != "internal_error":
+        fail(f"panic probe kind: {resp}")
+    if resp.get("error", {}).get("message") != "injected_test_panic":
+        fail(f"panic payload not redacted: {resp}")
+    for _ in range(20):
+        time.sleep(0.6)  # also refills the 2 rps token bucket
+        resp = round_trip(templates[0])
+        check_chaos_frame("recovery", resp)
+        if resp.get("status") == "ok":
+            break
+    else:
+        fail("connection never recovered to an ok after the panic probe")
+
+    # Oversized frame: structured rejection, connection survives.
+    sock.sendall(b"x" * 100_000 + b"\n")
+    line = rfile.readline()
+    resp = json.loads(line)
+    if resp.get("error", {}).get("kind") != "frame_too_large":
+        fail(f"oversized probe: {resp}")
+    check_chaos_frame("post-oversized", round_trip(templates[0]))
+
+    # Torn frame with wire noise: blank line, split writes, CRLF.
+    payload = json.dumps(templates[0]).encode()
+    sock.sendall(b"\n")
+    sock.sendall(payload[: len(payload) // 2])
+    time.sleep(0.2)
+    sock.sendall(payload[len(payload) // 2 :])
+    sock.sendall(b"\r\n")
+    check_chaos_frame("torn", json.loads(rfile.readline()))
+
+    stats = round_trip({"op": "stats"})
+    if stats.get("status") != "stats":
+        fail(f"stats frame: {stats}")
+    if stats.get("schema_version") != SCHEMA_VERSION:
+        fail(f"stats schema_version: {stats}")
+    for counter in ("panics", "worker_restarts", "oversized_frames", "rate_limited"):
+        if stats.get(counter, 0) < 1:
+            fail(f"stats.{counter} = {stats.get(counter)} — fault never recorded: {stats}")
+    if stats.get("served", 0) < n:
+        fail(f"stats.served {stats.get('served')} < {n} analyzes sent")
+
+    bye = round_trip({"op": "shutdown"})
+    if bye.get("status") != "bye":
+        fail(f"shutdown acknowledgement: {bye}")
+
+    mix = ", ".join(f"{k}×{v}" for k, v in sorted(seen.items()))
+    print(
+        f"serve-smoke: OK (chaos) — {n} analyzes degraded only structurally "
+        f"({mix}); panic redacted + recovered; oversized and torn frames "
+        f"survived; fault counters pinned; clean shutdown"
+    )
+    return 0
+
+
 def main():
-    if len(sys.argv) != 3:
+    if len(sys.argv) not in (3, 4) or (len(sys.argv) == 4 and sys.argv[3] != "--chaos"):
         print(__doc__, file=sys.stderr)
         return 2
     host, _, port = sys.argv[1].rpartition(":")
     n = int(sys.argv[2])
+    chaos = len(sys.argv) == 4
 
     sock = socket.create_connection((host, int(port)), timeout=30)
     rfile = sock.makefile("r", encoding="utf-8")
@@ -78,6 +188,9 @@ def main():
             return json.loads(line)
         except json.JSONDecodeError as e:
             fail(f"unparseable response frame: {e}: {line!r}")
+
+    if chaos:
+        return chaos_session(sock, rfile, round_trip, n)
 
     templates = request_frames()
     memo_hits = 0
