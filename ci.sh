@@ -1,7 +1,7 @@
 #!/usr/bin/env bash
 # CI entry point: tier-1 verification plus style, lint and perf gates.
 #
-# Usage: ./ci.sh [--quick|--bench-smoke|--isa-smoke|--serve-smoke|--chaos-smoke]
+# Usage: ./ci.sh [--quick|--bench-smoke|--isa-smoke|--serve-smoke|--chaos-smoke|--corpus-smoke]
 #   --quick        tier-1 only (skip fmt/clippy, the per-ISA sweep and
 #                  the bench smoke run)
 #   --bench-smoke  only the shrunken hot-path bench + baseline gate
@@ -10,6 +10,9 @@
 #   --chaos-smoke  only the seeded fault-injection run against the
 #                  live binary (worker panics, limits, oversized and
 #                  torn frames must all degrade structurally)
+#   --corpus-smoke only the corpus pipeline: gen_corpus.py synthesizes
+#                  blocks, `osaca corpus` scores them, and the JSON
+#                  scorecard must validate and reproduce byte-for-byte
 set -euo pipefail
 cd "$(dirname "$0")"
 
@@ -25,7 +28,7 @@ bench_smoke() {
     # exist in the fresh run regardless — a silently dropped serving
     # bench must not read as "no regression".
     if command -v python3 >/dev/null 2>&1; then
-        OSACA_BENCH_REQUIRE=serve/req_s,serve/shed_latency \
+        OSACA_BENCH_REQUIRE=serve/req_s,serve/shed_latency,corpus/blocks_per_s,exec/steal_overhead \
             python3 scripts/check_bench_baseline.py BENCH_hotpath.json "$fresh"
     else
         echo "bench-baseline: WARNING — python3 unavailable, comparison skipped"
@@ -143,6 +146,67 @@ chaos_smoke() {
     echo "chaos-smoke: OK"
 }
 
+# Corpus smoke: synthesize a corpus of basic blocks from the workload
+# fixtures, score it with the shipped `osaca corpus` binary, and gate
+# on three properties: the scorecard validates (schema tag, block
+# count, zero errors, histogram totals), two runs over the same corpus
+# are byte-identical (the executor must not leak scheduling order into
+# aggregates), and the tar-archive loader agrees with the directory
+# loader. A self-derived measured-cycles sidecar then pins the MAPE
+# path at ~0.
+corpus_smoke() {
+    echo "== corpus smoke: gen_corpus.py → osaca corpus scorecard =="
+    if ! command -v python3 >/dev/null 2>&1; then
+        echo "corpus-smoke: WARNING — python3 unavailable, leg skipped"
+        return 0
+    fi
+    cargo build --release
+    local bin=./target/release/osaca
+    local dir="${TMPDIR:-/tmp}/osaca-corpus-smoke"
+    rm -rf "$dir"
+    mkdir -p "$dir"
+    python3 scripts/gen_corpus.py --out "$dir/blocks" --count 60 --seed 7117 \
+        --tar "$dir/blocks.tar"
+    "$bin" corpus "$dir/blocks" --arch skl --format json >"$dir/run_a.json"
+    "$bin" corpus "$dir/blocks" --arch skl --format json >"$dir/run_b.json"
+    if ! cmp -s "$dir/run_a.json" "$dir/run_b.json"; then
+        echo "corpus-smoke: scorecard is not reproducible across runs"
+        diff "$dir/run_a.json" "$dir/run_b.json" || true
+        exit 1
+    fi
+    "$bin" corpus "$dir/blocks.tar" --arch skl --format json >"$dir/run_tar.json"
+    if ! cmp -s "$dir/run_a.json" "$dir/run_tar.json"; then
+        echo "corpus-smoke: tar loader disagrees with the directory loader"
+        exit 1
+    fi
+    python3 - "$dir/run_a.json" "$dir/measured.csv" <<'EOF'
+import json, sys
+card = json.load(open(sys.argv[1]))
+assert card["schema_version"] == 3, card["schema_version"]
+assert card["kind"] == "corpus_scorecard", card["kind"]
+assert card["blocks"] == 60, card["blocks"]
+assert len(card["scores"]) == 60
+assert card["errors"] == 0, [s for s in card["scores"] if s["error"]]
+assert sum(card["histogram"].values()) == 60, card["histogram"]
+assert card["mape_pct"] is None and card["measured_blocks"] == 0
+with open(sys.argv[2], "w") as f:
+    f.write("name,cycles\n")
+    for s in card["scores"]:
+        f.write(f"{s['name']},{s['cy_per_asm_iter']}\n")
+EOF
+    "$bin" corpus "$dir/blocks" --arch skl --format json \
+        --measured "$dir/measured.csv" >"$dir/run_measured.json"
+    python3 - "$dir/run_measured.json" <<'EOF'
+import json, sys
+card = json.load(open(sys.argv[1]))
+assert card["measured_blocks"] == 60, card["measured_blocks"]
+# Predictions measured against themselves: MAPE ~0 up to the f32→text
+# →f64 round trip.
+assert card["mape_pct"] is not None and card["mape_pct"] < 1e-4, card["mape_pct"]
+EOF
+    echo "corpus-smoke: OK"
+}
+
 # Cross-ISA regression gate: run the CLI analyze path (parse + marker
 # extraction + resolve + throughput + critpath) over every fixture in
 # workloads/ against every ISA-matching built-in model — x86 fixtures
@@ -214,6 +278,10 @@ case "${1:-}" in
         chaos_smoke
         exit 0
         ;;
+    --corpus-smoke)
+        corpus_smoke
+        exit 0
+        ;;
 esac
 
 echo "== tier-1: build =="
@@ -245,6 +313,10 @@ if [[ "${1:-}" != "--quick" ]]; then
     # The same binary under seeded fault injection: every degradation
     # must be a structured frame and the drain must stay clean.
     chaos_smoke
+
+    # The corpus pipeline end to end: synthesized blocks, reproducible
+    # scorecard, tar/dir loader agreement, MAPE sidecar.
+    corpus_smoke
 
     # Hot-path regressions fail loudly at two levels: the smoke bench
     # asserts the cached-model and warm-resolution counters while

@@ -277,6 +277,72 @@ fn main() {
         engine.stats().avg_batch_size()
     );
 
+    // ---- corpus scorecard path ------------------------------------------
+    // Whole-file basic blocks through load→batch→aggregate: the
+    // end-to-end `osaca corpus` rate, minus file IO.
+    println!("--- corpus ---");
+    {
+        use osaca::corpus::{self, CorpusBlock, CorpusOptions};
+        let n_blocks = if std::env::var("OSACA_BENCH_SMOKE").is_ok() { 32 } else { 128 };
+        let blocks: Vec<CorpusBlock> = (0..n_blocks)
+            .map(|i| {
+                let w = ws[i % ws.len()];
+                CorpusBlock { name: format!("block_{i:04}.s"), source: w.source.to_string() }
+            })
+            .collect();
+        let opts = CorpusOptions::default();
+        let mut errors = 0;
+        let s = bench("corpus/blocks_per_s", sc.warm_big, sc.samp_big, || {
+            let card = corpus::score_blocks(&engine, &blocks, &opts);
+            errors = card.errors();
+        });
+        assert_eq!(errors, 0, "workload-derived corpus blocks must all score");
+        let rate = n_blocks as f64 / s.median.as_secs_f64();
+        println!("{}  ({:.0} blocks/s)", s.report(), rate);
+        json.record(&s, &[("blocks_per_s", rate)]);
+    }
+
+    // ---- executor: steal overhead ---------------------------------------
+    // Pure scheduling cost of the unified pool: no-op jobs all homed to
+    // one worker of a 2-worker pool, so a large share of them cross the
+    // cross-worker steal path instead of the home fast path.
+    println!("--- executor ---");
+    {
+        use osaca::exec::{ExecConfig, Executor, Job};
+        use std::sync::mpsc;
+        let exec: Executor<()> = Executor::new(
+            ExecConfig {
+                workers: 2,
+                queue_depth: 1024,
+                name: "osaca-bench-exec".to_string(),
+                ..Default::default()
+            },
+            |_worker| (),
+        );
+        let jobs = if std::env::var("OSACA_BENCH_SMOKE").is_ok() { 2_000 } else { 20_000 };
+        let s = bench("exec/steal_overhead", 2, 10, || {
+            let (tx, rx) = mpsc::channel();
+            for _ in 0..jobs {
+                let tx = tx.clone();
+                exec.submit(
+                    Some(0),
+                    Job::new(move |_ctx| {
+                        tx.send(()).unwrap();
+                    }),
+                )
+                .unwrap_or_else(|_| panic!("submit to bench pool"));
+            }
+            drop(tx);
+            assert_eq!(rx.iter().count(), jobs, "bench pool lost jobs");
+        });
+        let rate = jobs as f64 / s.median.as_secs_f64();
+        let steals = exec.stats().steals.load(std::sync::atomic::Ordering::Relaxed);
+        println!("{}  ({:.0} jobs/s, {steals} steals)", s.report(), rate);
+        json.record(&s, &[("jobs_per_s", rate)]);
+        exec.close();
+        exec.join();
+    }
+
     // ---- report construction + emitters ---------------------------------
     // What one serving-path response costs after the passes are done:
     // assembling the Prediction bound decomposition and emitting the

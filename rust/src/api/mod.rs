@@ -21,12 +21,15 @@
 //!
 //! * [`Engine`] owns the shared machine-model registry (`Arc`-cached
 //!   built-ins plus user-registered `.mdb` models) and the lazily
-//!   started batching [`Coordinator`];
+//!   started batching [`Coordinator`]; it is a cheap `Clone` (an `Arc`
+//!   handle), so requests can fan out across threads and executor jobs
+//!   without scoped lifetimes;
 //! * [`AnalysisRequest`] is a builder: name, arch/machine,
 //!   source/kernel, composable [`Passes`], unroll, sim parameters;
-//! * [`Engine::analyze_batch`] maps a whole request slice directly
-//!   onto the solver's B=8 batch slots (`ceil(n/8)` artifact
-//!   executions — see `ServiceStats::batches`);
+//! * [`Engine::analyze_batch`] fans the analytic passes out on the
+//!   crate-wide [`crate::exec`] executor, then maps every baseline
+//!   solve of the batch directly onto the solver's B=8 batch slots
+//!   (`ceil(n/8)` artifact executions — see `ServiceStats::batches`);
 //! * [`AnalysisReport`] carries one optional section per pass, the
 //!   structured [`Prediction`] bound decomposition (which resource wins
 //!   and why), and pluggable text/JSON/CSV rendering via the
@@ -46,22 +49,23 @@ mod report;
 mod request;
 
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{Arc, OnceLock, RwLock};
+use std::sync::atomic::Ordering;
+use std::sync::{mpsc, Arc, OnceLock, RwLock};
 use std::time::Duration;
 
 use crate::analyzer::{analyze, analyze_with_slots, critical_path_decoded};
 use crate::asm::{extract_kernel_isa, Kernel};
 use crate::baseline::{encode, to_prediction};
 use crate::coordinator::{Coordinator, CoordinatorConfig, ServiceStats, SubmitError};
+use crate::exec::{self, Executor};
 use crate::mdb::{self, MachineModel};
 use crate::runtime::{EncodedKernel, MAX_UOPS};
 use crate::sim::{run_decoded, DecodedKernel};
 
-/// Upper bound on the scoped worker pool that runs the in-process
-/// analytic passes of [`Engine::analyze_batch`]. Small on purpose: the
-/// passes are short and allocation-light, so a handful of workers
-/// saturates the win while keeping thread startup cost negligible.
+/// Upper bound on the executor pool that runs the in-process analytic
+/// passes of [`Engine::analyze_batch`]. Small on purpose: the passes
+/// are short and allocation-light, so a handful of workers saturates
+/// the win while keeping thread startup cost negligible.
 const ANALYTIC_POOL_MAX: usize = 8;
 
 pub use crate::coordinator::Backend;
@@ -128,20 +132,40 @@ impl EngineBuilder {
     }
 
     pub fn build(self) -> Engine {
-        Engine { config: self.cfg, models: RwLock::new(HashMap::new()), coord: OnceLock::new() }
+        Engine {
+            inner: Arc::new(EngineInner {
+                config: self.cfg,
+                models: RwLock::new(HashMap::new()),
+                coord: OnceLock::new(),
+                pool: OnceLock::new(),
+            }),
+        }
     }
 }
 
-/// The analysis engine: machine-model registry + batching service.
-///
-/// Cheap to share (`Arc<Engine>`); the solver thread starts lazily on
-/// the first request that needs the baseline pass.
-pub struct Engine {
+/// The shared state behind an [`Engine`] handle.
+struct EngineInner {
     config: EngineConfig,
     /// User-registered models, keyed by lower-cased name. Built-ins
     /// come from the process-wide `mdb` cache.
     models: RwLock<HashMap<String, Arc<MachineModel>>>,
     coord: OnceLock<Coordinator>,
+    /// Lazily started analytic worker pool for [`Engine::analyze_batch`]
+    /// (context-free workers — the analytic passes only need `&Engine`,
+    /// which each job captures as its own cheap clone).
+    pool: OnceLock<Executor<()>>,
+}
+
+/// The analysis engine: machine-model registry + batching service.
+///
+/// An `Engine` is a cheap clonable handle (`Arc` inside): clones share
+/// the registry, the coordinator and the analytic pool, so one can be
+/// captured by `'static` executor jobs while the caller keeps using
+/// its own. The solver thread starts lazily on the first request that
+/// needs the baseline pass.
+#[derive(Clone)]
+pub struct Engine {
+    inner: Arc<EngineInner>,
 }
 
 impl Default for Engine {
@@ -174,12 +198,12 @@ impl Engine {
 
     /// The underlying batching coordinator (started on first use).
     pub fn coordinator(&self) -> &Coordinator {
-        self.coord.get_or_init(|| {
+        self.inner.coord.get_or_init(|| {
             Coordinator::with_config(CoordinatorConfig {
-                backend: self.config.backend,
-                window: self.config.batch_window,
-                reply_timeout: self.config.reply_timeout,
-                queue_depth: self.config.queue_depth,
+                backend: self.inner.config.backend,
+                window: self.inner.config.batch_window,
+                reply_timeout: self.inner.config.reply_timeout,
+                queue_depth: self.inner.config.queue_depth,
             })
         })
     }
@@ -193,7 +217,7 @@ impl Engine {
     /// then the cached built-ins (`skl`, `zen`, `hsw` + aliases).
     pub fn machine(&self, arch: &str) -> Result<Arc<MachineModel>, OsacaError> {
         let key = arch.to_ascii_lowercase();
-        if let Some(m) = self.models.read().expect("model registry").get(&key) {
+        if let Some(m) = self.inner.models.read().expect("model registry").get(&key) {
             return Ok(m.clone());
         }
         mdb::by_name_shared(&key).ok_or_else(|| OsacaError::UnknownArch {
@@ -206,7 +230,7 @@ impl Engine {
     pub fn available_arches(&self) -> Vec<String> {
         let mut v: Vec<String> =
             mdb::builtin_names().iter().map(|s| s.to_string()).collect();
-        v.extend(self.models.read().expect("model registry").keys().cloned());
+        v.extend(self.inner.models.read().expect("model registry").keys().cloned());
         v.sort();
         v.dedup();
         v
@@ -224,7 +248,8 @@ impl Engine {
     /// Register an in-memory model under its `name`.
     pub fn register_machine(&self, model: MachineModel) -> Arc<MachineModel> {
         let arc = Arc::new(model);
-        self.models
+        self.inner
+            .models
             .write()
             .expect("model registry")
             .insert(arc.name.to_ascii_lowercase(), arc.clone());
@@ -385,55 +410,86 @@ impl Engine {
         Ok((report, enc))
     }
 
-    /// Fan the per-request analytic work out over a small scoped worker
-    /// pool (std threads, no executor). Workers pull request indices
-    /// from a shared cursor and report `(index, outcome)` pairs, so the
-    /// returned vector is in request order regardless of completion
-    /// order and per-request failures stay in their slot.
+    /// The lazily started analytic worker pool (shared by every clone
+    /// of this engine).
+    fn analytic_pool(&self) -> &Executor<()> {
+        self.inner.pool.get_or_init(|| {
+            let workers = std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1)
+                .min(ANALYTIC_POOL_MAX);
+            Executor::new(
+                exec::ExecConfig {
+                    workers,
+                    queue_depth: 64,
+                    name: "osaca-analytic".to_string(),
+                    ..Default::default()
+                },
+                |_worker| (),
+            )
+        })
+    }
+
+    /// Fan the per-request analytic work out over the executor pool.
+    /// Jobs go through the shared injector (no affinity — the passes
+    /// have no per-worker state to stay close to) and report
+    /// `(index, outcome)` pairs, so the returned vector is in request
+    /// order regardless of steal interleaving and per-request failures
+    /// stay in their slot. A panicking request costs only its own slot:
+    /// executor supervision rebuilds the worker and the job's
+    /// `on_panic` files a structured `Internal` error.
     #[allow(clippy::type_complexity)]
-    fn run_analytic_pooled(
+    fn run_analytic_exec(
         &self,
         reqs: &[AnalysisRequest],
     ) -> Vec<Result<(AnalysisReport, Option<EncodedKernel>), OsacaError>> {
-        let workers = std::thread::available_parallelism()
-            .map(|n| n.get())
-            .unwrap_or(1)
-            .min(ANALYTIC_POOL_MAX)
-            .min(reqs.len());
-        if workers <= 1 {
+        if reqs.len() <= 1 {
             return reqs.iter().map(|r| self.analytic_one(r)).collect();
         }
-        let next = AtomicUsize::new(0);
+        let pool = self.analytic_pool();
+        let (tx, rx) = mpsc::channel();
+        for (i, req) in reqs.iter().enumerate() {
+            let engine = self.clone();
+            let req = req.clone();
+            let run_tx = tx.clone();
+            let panic_tx = tx.clone();
+            let job = exec::Job::new(move |_ctx: &mut ()| {
+                let _ = run_tx.send((i, engine.analytic_one(&req)));
+            })
+            .on_panic(move |category| {
+                let _ = panic_tx.send((
+                    i,
+                    Err(OsacaError::Internal {
+                        message: format!(
+                            "analysis worker panicked ({category}); worker restarted"
+                        ),
+                    }),
+                ));
+            });
+            if pool.submit(None, job).is_err() {
+                // Only possible during teardown of a closed pool.
+                let _ = tx.send((
+                    i,
+                    Err(OsacaError::ServiceUnavailable {
+                        message: "analytic pool closed".into(),
+                    }),
+                ));
+            }
+        }
+        // Every job answers exactly once (run or on_panic); the channel
+        // closes when the last job's sender drops.
+        drop(tx);
         let mut slots: Vec<Option<Result<(AnalysisReport, Option<EncodedKernel>), OsacaError>>> =
             Vec::with_capacity(reqs.len());
         slots.resize_with(reqs.len(), || None);
-        std::thread::scope(|scope| {
-            let handles: Vec<_> = (0..workers)
-                .map(|_| {
-                    scope.spawn(|| {
-                        let mut out = Vec::new();
-                        loop {
-                            let i = next.fetch_add(1, Ordering::Relaxed);
-                            if i >= reqs.len() {
-                                break;
-                            }
-                            out.push((i, self.analytic_one(&reqs[i])));
-                        }
-                        out
-                    })
-                })
-                .collect();
-            for h in handles {
-                for (i, outcome) in h.join().expect("analytic worker panicked") {
-                    slots[i] = Some(outcome);
-                }
-            }
-        });
+        for (i, outcome) in rx {
+            slots[i] = Some(outcome);
+        }
         slots.into_iter().map(|s| s.expect("every request analyzed")).collect()
     }
 
-    /// Run many requests: the in-process analytic passes run on the
-    /// scoped worker pool, then every baseline solve of the batch maps
+    /// Run many requests: the in-process analytic passes fan out on the
+    /// executor pool, then every baseline solve of the batch maps
     /// directly onto consecutive B=8 solver slots (`ceil(n/8)` artifact
     /// executions instead of one windowed reply channel per request).
     /// Results come back in request order; per-request failures do not
@@ -445,7 +501,7 @@ impl Engine {
         let mut results: Vec<Result<AnalysisReport, OsacaError>> = Vec::with_capacity(reqs.len());
         let mut baseline_idx: Vec<usize> = Vec::new();
         let mut baseline_encs: Vec<EncodedKernel> = Vec::new();
-        for (i, outcome) in self.run_analytic_pooled(reqs).into_iter().enumerate() {
+        for (i, outcome) in self.run_analytic_exec(reqs).into_iter().enumerate() {
             match outcome {
                 Ok((report, enc)) => {
                     if let Some(enc) = enc {
@@ -567,5 +623,17 @@ mod tests {
         assert_eq!(m.name, "toy");
         assert!(engine.machine("toy").is_ok());
         assert!(engine.available_arches().contains(&"toy".to_string()));
+    }
+
+    #[test]
+    fn engine_clones_share_state() {
+        let engine = Engine::cpu_only();
+        let clone = engine.clone();
+        let text = "arch toy2 \"Toy2\"\nports P0 LD\nloadports LD\n\
+                    entry vaddpd-xmm_xmm_xmm lat=2 tp=1 uops=c@1:P0\n";
+        engine.register_model_text(text).unwrap();
+        // Registry, coordinator and stats are one shared instance.
+        assert!(clone.machine("toy2").is_ok());
+        assert!(std::ptr::eq(engine.coordinator(), clone.coordinator()));
     }
 }

@@ -1,7 +1,7 @@
 //! Kernel extraction: the marked loop body that the analyzer and the
 //! simulator consume.
 
-use anyhow::{bail, Context, Result};
+use anyhow::{bail, Result};
 
 use crate::isa::{Instruction, Isa};
 
@@ -71,11 +71,13 @@ pub fn extract_kernel_isa(name: &str, src: &str, isa: Isa) -> Result<Kernel> {
     // instructions are copied into the kernel.
     let body: &[Line] = match region {
         Some(r) => &lines[r.start..r.end],
-        None => {
-            let (head, end) = innermost_loop(&lines)
-                .context("no IACA/OSACA markers and no label/backward-branch loop found")?;
-            &lines[head..end]
-        }
+        None => match innermost_loop(&lines) {
+            Some((head, end)) => &lines[head..end],
+            // Whole-file-as-kernel: a bare basic block (BHive-style
+            // corpus input) has neither markers nor a back-edge; treat
+            // every instruction in the file as one iteration.
+            None => &lines[..],
+        },
     };
     let instructions: Vec<Instruction> = body
         .iter()
@@ -171,6 +173,17 @@ ret
     #[test]
     fn empty_file_errors() {
         assert!(extract_kernel("t", "\n\n").is_err());
+    }
+
+    #[test]
+    fn straightline_block_falls_back_to_whole_file() {
+        // No markers, no back-edge: a bare basic block (corpus-style
+        // input) is taken whole, one file = one iteration.
+        let src = "vmovapd (%r15,%rax), %ymm0\nvaddpd %ymm0, %ymm1, %ymm2\naddq $32, %rax\n";
+        let k = extract_kernel("t", src).unwrap();
+        assert_eq!(k.len(), 3);
+        assert_eq!(k.loop_label, None);
+        assert_eq!(k.n_loads(), 1);
     }
 
     #[test]

@@ -2,16 +2,25 @@
 //!
 //! Batches concurrent analysis requests into the fixed-size slots of
 //! the AOT artifact (B = 8), the way a serving framework batches model
-//! requests. Two submission paths share one solver thread:
+//! requests. Two submission paths share one solver worker on the
+//! crate-wide [`crate::exec`] executor:
 //!
-//! * **single** ([`Coordinator::solve_one`]): the request is queued and
-//!   the solver thread coalesces it with whatever else arrives inside
-//!   the batching window — the latency-oriented interactive path;
+//! * **single** ([`Coordinator::solve_one`]): the request joins a
+//!   batching window; the first submitter in an empty window becomes
+//!   the *leader*, waits [`CoordinatorConfig::window`] for company,
+//!   then submits one executor job that solves the whole window and
+//!   answers every waiter — the latency-oriented interactive path;
 //! * **batch** ([`Coordinator::solve_batch`]): a whole vector of
 //!   encoded kernels is mapped directly onto consecutive B=8 artifact
 //!   slots with no window wait and one reply channel for the entire
 //!   submission — the throughput-oriented path behind
 //!   `api::Engine::analyze_batch`.
+//!
+//! Supervision (panic → [`SubmitError::Panicked`] with the redacted
+//! `solver_panic` category → backend rebuilt from the factory) lives in
+//! the executor; this module only wires reply channels and stats. The
+//! backend is constructed *inside* the worker thread because the PJRT
+//! client is not `Send`.
 //!
 //! Reply channels are pooled and reused across requests; the reply
 //! timeout and batching window are configurable through
@@ -21,11 +30,9 @@
 //! uses std::thread + mpsc; the public API is synchronous.
 
 use std::fmt;
-use std::panic::{self, AssertUnwindSafe};
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{self, Receiver, RecvTimeoutError, SyncSender};
 use std::sync::{Arc, Mutex};
-use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
@@ -33,6 +40,7 @@ use anyhow::{anyhow, Result};
 use crate::analyzer::{analyze, critical_path, Analysis, CritPathReport};
 use crate::asm::{extract_kernel_isa, Kernel};
 use crate::baseline::{encode, BaselinePrediction};
+use crate::exec::{self, ExecStats, Executor};
 use crate::mdb::{self, MachineModel};
 use crate::runtime::{solve_cpu, EncodedKernel, PortSolver, SolveOut, BATCH};
 
@@ -47,21 +55,24 @@ pub struct AnalysisResponse {
 
 /// Service statistics (exposed for the perf pass, `serve` CLI, and the
 /// api layer's batch-splitting tests).
+///
+/// `queued` and `solver_restarts` are legacy mirrors kept for pinned
+/// consumers; the executor-level truth is [`Coordinator::exec_stats`].
 #[derive(Debug, Default)]
 pub struct ServiceStats {
     pub requests: AtomicU64,
     pub batches: AtomicU64,
     pub batched_kernels: AtomicU64,
     pub solve_micros: AtomicU64,
-    /// Messages currently waiting in the submission queue (a gauge,
-    /// not a counter): incremented at submit, decremented when the
-    /// solver thread dequeues. Surfaced as
+    /// Submissions accepted but not yet picked up by the solver worker
+    /// (a gauge, not a counter). Surfaced as
     /// [`Coordinator::queue_depth`] for serving introspection.
     pub queued: AtomicU64,
-    /// Solver backends rebuilt after a caught panic: the solver thread
+    /// Solver backends rebuilt after a caught panic: the solver worker
     /// never dies with a request — it answers
-    /// [`SubmitError::Panicked`], restarts its backend, and keeps
-    /// serving the queue.
+    /// [`SubmitError::Panicked`], the executor rebuilds its backend,
+    /// and it keeps serving the queue. Mirrors
+    /// `exec_stats().worker_restarts`.
     pub solver_restarts: AtomicU64,
 }
 
@@ -88,12 +99,12 @@ pub enum Backend {
 #[derive(Debug, Clone, Copy)]
 pub struct CoordinatorConfig {
     pub backend: Backend,
-    /// Batching window: how long the solver thread waits for more
-    /// single-path requests before flushing a partial batch.
+    /// Batching window: how long a single-path leader waits for more
+    /// requests before flushing a partial batch.
     pub window: Duration,
     /// How long a submitter waits for its reply before giving up.
     pub reply_timeout: Duration,
-    /// Depth of the submission queue.
+    /// Depth of the submission queue (the solver worker's deque).
     pub queue_depth: usize,
 }
 
@@ -116,9 +127,9 @@ pub enum SubmitError {
     Timeout { waited: Duration },
     /// The solver thread is gone (coordinator shut down).
     Closed,
-    /// The backend panicked on this request. The solver thread caught
-    /// it, rebuilt its backend, and kept serving; `category` is a
-    /// redacted stable label (panic payloads are never forwarded).
+    /// The backend panicked on this request. The executor caught it,
+    /// rebuilt the backend, and kept serving; `category` is a redacted
+    /// stable label (panic payloads are never forwarded).
     Panicked { category: String },
 }
 
@@ -146,25 +157,40 @@ enum SolverBackend {
     Cpu,
 }
 
-/// Reply payloads carry the panic category on failure so a submitter
-/// learns *why* there is no output instead of waiting out its timeout
-/// against a reply that will never come.
-type SingleReply = Result<SolveOut, String>;
-type BatchReply = Result<Vec<SolveOut>, String>;
+fn make_backend(backend: Backend) -> SolverBackend {
+    match backend {
+        Backend::Cpu => SolverBackend::Cpu,
+        Backend::Auto => match PortSolver::load_default() {
+            Ok(s) => SolverBackend::Artifact(s),
+            Err(e) => {
+                eprintln!("artifact unavailable ({e}); using cpu solver");
+                SolverBackend::Cpu
+            }
+        },
+    }
+}
 
-struct Job {
+/// Why a reply carries no output. Distinguishing `Closed` from
+/// `Panicked` matters on the single path: a window *leader* that finds
+/// the executor draining must tell its window-mates the service is
+/// gone, not that their kernels crashed the solver.
+#[derive(Debug, Clone)]
+enum SolveFailure {
+    Panicked(String),
+    Closed,
+}
+
+/// Reply payloads carry the failure so a submitter learns *why* there
+/// is no output instead of waiting out its timeout against a reply
+/// that will never come.
+type SingleReply = Result<SolveOut, SolveFailure>;
+type BatchReply = Result<Vec<SolveOut>, SolveFailure>;
+
+/// A single-path request parked in the batching window, waiting for
+/// the window leader to submit it.
+struct PendingOne {
     enc: EncodedKernel,
     reply: SyncSender<SingleReply>,
-}
-
-struct BatchJob {
-    encs: Vec<EncodedKernel>,
-    reply: SyncSender<BatchReply>,
-}
-
-enum Msg {
-    One(Job),
-    Many(BatchJob),
 }
 
 type SinglePool = Mutex<Vec<(SyncSender<SingleReply>, Receiver<SingleReply>)>>;
@@ -174,10 +200,11 @@ type BatchPool = Mutex<Vec<(SyncSender<BatchReply>, Receiver<BatchReply>)>>;
 const POOL_CAP: usize = 64;
 
 /// The coordinator service. Shareable (`Arc<Coordinator>`) handles
-/// submit requests; one solver thread owns the PJRT executable.
+/// submit requests; one executor worker owns the PJRT executable.
 pub struct Coordinator {
-    tx: Option<SyncSender<Msg>>,
-    worker: Option<JoinHandle<()>>,
+    exec: Executor<SolverBackend>,
+    /// Single-path batching window (see [`Coordinator::solve_one`]).
+    pending: Mutex<Vec<PendingOne>>,
     pub stats: Arc<ServiceStats>,
     /// Batching window (see [`CoordinatorConfig::window`]).
     pub window: Duration,
@@ -189,35 +216,25 @@ pub struct Coordinator {
 
 impl Coordinator {
     /// Create a coordinator with explicit tunables; the backend is
-    /// constructed *inside* the solver thread (the PJRT client is not
-    /// `Send`).
+    /// constructed *inside* the solver worker (the PJRT client is not
+    /// `Send`), and rebuilt there after any caught panic.
     pub fn with_config(cfg: CoordinatorConfig) -> Self {
-        let make_backend = move || match cfg.backend {
-            Backend::Cpu => SolverBackend::Cpu,
-            Backend::Auto => match PortSolver::load_default() {
-                Ok(s) => SolverBackend::Artifact(s),
-                Err(e) => {
-                    eprintln!("artifact unavailable ({e}); using cpu solver");
-                    SolverBackend::Cpu
-                }
+        let backend = cfg.backend;
+        let exec = Executor::new(
+            exec::ExecConfig {
+                workers: 1,
+                queue_depth: cfg.queue_depth.max(1),
+                name: "osaca-solver".to_string(),
+                panic_label: Some(SOLVER_PANIC_CATEGORY),
+                ..Default::default()
             },
-        };
-        let (tx, rx) = mpsc::sync_channel::<Msg>(cfg.queue_depth.max(1));
-        let stats = Arc::new(ServiceStats::default());
-        let wstats = stats.clone();
-        let window = cfg.window;
-        let worker = std::thread::Builder::new()
-            .name("osaca-solver".into())
-            // The factory travels into the thread (not a built backend:
-            // the PJRT client is not Send) so supervision can rebuild
-            // the backend after a caught panic.
-            .spawn(move || solver_loop(rx, make_backend, wstats, window))
-            .expect("spawn solver thread");
+            move |_worker| make_backend(backend),
+        );
         Coordinator {
-            tx: Some(tx),
-            worker: Some(worker),
-            stats,
-            window,
+            exec,
+            pending: Mutex::new(Vec::new()),
+            stats: Arc::new(ServiceStats::default()),
+            window: cfg.window,
             reply_timeout: cfg.reply_timeout,
             single_pool: Mutex::new(Vec::new()),
             batch_pool: Mutex::new(Vec::new()),
@@ -241,6 +258,12 @@ impl Coordinator {
     }
 
     /// Solve one encoded kernel through the windowed batching path.
+    ///
+    /// The first request into an empty window is the *leader*: it
+    /// sleeps out the window, takes every request that joined
+    /// meanwhile, and submits one executor job that maps them onto
+    /// consecutive B=8 slots and answers each waiter on its own pooled
+    /// channel. Followers just wait on their reply.
     pub fn solve_one(&self, enc: EncodedKernel) -> Result<SolveOut, SubmitError> {
         let (rtx, rrx) = self
             .single_pool
@@ -248,23 +271,79 @@ impl Coordinator {
             .expect("single pool lock")
             .pop()
             .unwrap_or_else(|| mpsc::sync_channel(1));
-        let Some(tx) = self.tx.as_ref() else {
-            return Err(SubmitError::Closed);
-        };
         self.stats.queued.fetch_add(1, Ordering::Relaxed);
-        if tx.send(Msg::One(Job { enc, reply: rtx.clone() })).is_err() {
-            self.stats.queued.fetch_sub(1, Ordering::Relaxed);
-            return Err(SubmitError::Closed);
+        let is_leader = {
+            let mut pending = self.pending.lock().expect("pending lock");
+            pending.push(PendingOne { enc, reply: rtx.clone() });
+            pending.len() == 1
+        };
+        if is_leader {
+            std::thread::sleep(self.window);
+            let jobs: Vec<PendingOne> =
+                std::mem::take(&mut *self.pending.lock().expect("pending lock"));
+            self.stats.queued.fetch_sub(jobs.len() as u64, Ordering::Relaxed);
+            // Senders the leader can still reach after the job closure
+            // has consumed its own copies (for the failed-submit path).
+            let notify: Vec<SyncSender<SingleReply>> =
+                jobs.iter().map(|j| j.reply.clone()).collect();
+            let on_panic_replies = notify.clone();
+            let encs: Vec<EncodedKernel> = jobs.iter().map(|j| j.enc.clone()).collect();
+            let senders: Vec<SyncSender<SingleReply>> =
+                jobs.into_iter().map(|j| j.reply).collect();
+            // How many waiters were already answered when a panic
+            // unwound the job: `on_panic` must not push a stale error
+            // into a channel whose waiter already took its output (the
+            // channel would return to the pool poisoned).
+            let done = Arc::new(AtomicUsize::new(0));
+            let done_run = done.clone();
+            let stats = self.stats.clone();
+            let stats_panic = self.stats.clone();
+            let job = exec::Job::new(move |backend: &mut SolverBackend| {
+                let mut idx = 0;
+                for chunk in encs.chunks(BATCH) {
+                    let t0 = Instant::now();
+                    let outs = run_backend(backend, chunk);
+                    stats.batches.fetch_add(1, Ordering::Relaxed);
+                    stats.batched_kernels.fetch_add(chunk.len() as u64, Ordering::Relaxed);
+                    stats
+                        .solve_micros
+                        .fetch_add(t0.elapsed().as_micros() as u64, Ordering::Relaxed);
+                    for out in outs {
+                        let _ = senders[idx].try_send(Ok(out));
+                        idx += 1;
+                        done_run.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+            })
+            .on_panic(move |category| {
+                stats_panic.solver_restarts.fetch_add(1, Ordering::Relaxed);
+                // One poisoned kernel fails its unanswered window-mates
+                // too (outputs cannot be attributed), but every waiter
+                // gets an answer instead of a timeout.
+                let answered = done.load(Ordering::Relaxed);
+                for s in on_panic_replies.iter().skip(answered) {
+                    let _ = s.try_send(Err(SolveFailure::Panicked(category.to_string())));
+                }
+            });
+            if self.exec.submit(Some(0), job).is_err() {
+                for s in &notify {
+                    let _ = s.try_send(Err(SolveFailure::Closed));
+                }
+            }
         }
         match rrx.recv_timeout(self.reply_timeout) {
             Ok(result) => {
-                // Channel is drained: safe to reuse (a panic reply
+                // Channel is drained: safe to reuse (a failure reply
                 // drains it just like a success).
                 let mut pool = self.single_pool.lock().expect("single pool lock");
                 if pool.len() < POOL_CAP {
                     pool.push((rtx, rrx));
                 }
-                result.map_err(|category| SubmitError::Panicked { category })
+                drop(pool);
+                result.map_err(|f| match f {
+                    SolveFailure::Panicked(category) => SubmitError::Panicked { category },
+                    SolveFailure::Closed => SubmitError::Closed,
+                })
             }
             Err(RecvTimeoutError::Timeout) => {
                 // The reply may still arrive later; the channel is
@@ -275,7 +354,7 @@ impl Coordinator {
         }
     }
 
-    /// Solve a whole submission in one message: the solver thread maps
+    /// Solve a whole submission in one executor job: the worker maps
     /// the kernels directly onto consecutive B=8 artifact slots (no
     /// batching-window wait, `ceil(n/8)` solver executions, one pooled
     /// reply channel). Returns outputs in submission order.
@@ -290,11 +369,32 @@ impl Coordinator {
             .expect("batch pool lock")
             .pop()
             .unwrap_or_else(|| mpsc::sync_channel(1));
-        let Some(tx) = self.tx.as_ref() else {
-            return Err(SubmitError::Closed);
-        };
         self.stats.queued.fetch_add(1, Ordering::Relaxed);
-        if tx.send(Msg::Many(BatchJob { encs, reply: rtx.clone() })).is_err() {
+        let stats = self.stats.clone();
+        let stats_panic = self.stats.clone();
+        let reply = rtx.clone();
+        let reply_panic = rtx.clone();
+        let job = exec::Job::new(move |backend: &mut SolverBackend| {
+            stats.queued.fetch_sub(1, Ordering::Relaxed);
+            let mut outs = Vec::with_capacity(encs.len());
+            for chunk in encs.chunks(BATCH) {
+                let t0 = Instant::now();
+                let res = run_backend(backend, chunk);
+                stats.batches.fetch_add(1, Ordering::Relaxed);
+                stats.batched_kernels.fetch_add(chunk.len() as u64, Ordering::Relaxed);
+                stats.solve_micros.fetch_add(t0.elapsed().as_micros() as u64, Ordering::Relaxed);
+                outs.extend(res);
+            }
+            let _ = reply.try_send(Ok(outs));
+        })
+        .on_panic(move |category| {
+            stats_panic.solver_restarts.fetch_add(1, Ordering::Relaxed);
+            // A panic in any chunk fails the whole submission (outputs
+            // must align with inputs) but the reply still arrives — the
+            // submitter never deadlocks against a dead worker.
+            let _ = reply_panic.try_send(Err(SolveFailure::Panicked(category.to_string())));
+        });
+        if self.exec.submit(Some(0), job).is_err() {
             self.stats.queued.fetch_sub(1, Ordering::Relaxed);
             return Err(SubmitError::Closed);
         }
@@ -305,7 +405,11 @@ impl Coordinator {
                 if pool.len() < POOL_CAP {
                     pool.push((rtx, rrx));
                 }
-                result.map_err(|category| SubmitError::Panicked { category })
+                drop(pool);
+                result.map_err(|f| match f {
+                    SolveFailure::Panicked(category) => SubmitError::Panicked { category },
+                    SolveFailure::Closed => SubmitError::Closed,
+                })
             }
             Err(RecvTimeoutError::Timeout) => Err(SubmitError::Timeout { waited: timeout }),
             Err(RecvTimeoutError::Disconnected) => Err(SubmitError::Closed),
@@ -347,23 +451,22 @@ impl Coordinator {
         self.stats.queued.load(Ordering::Relaxed)
     }
 
+    /// Executor-level counters for the solver worker (queued /
+    /// in-flight / panics / worker restarts). `ServiceStats` mirrors
+    /// the legacy subset; this is the unified surface.
+    pub fn exec_stats(&self) -> &ExecStats {
+        self.exec.stats()
+    }
+
     /// Graceful shutdown: close the submission queue (subsequent
     /// submissions return [`SubmitError::Closed`] instead of
-    /// panicking) and join the solver thread, which finishes every
-    /// message already queued before exiting. Idempotent; `Drop` calls
+    /// panicking) and join the solver worker, which finishes every
+    /// job already queued before exiting. Idempotent; `Drop` calls
     /// it, so an explicit call is only needed to sequence the drain
     /// before other teardown.
     pub fn drain(&mut self) {
-        drop(self.tx.take());
-        if let Some(h) = self.worker.take() {
-            let _ = h.join();
-        }
-    }
-}
-
-impl Drop for Coordinator {
-    fn drop(&mut self) {
-        self.drain();
+        self.exec.close();
+        self.exec.join();
     }
 }
 
@@ -380,132 +483,11 @@ fn run_backend(backend: &SolverBackend, encs: &[EncodedKernel]) -> Vec<SolveOut>
     }
 }
 
-/// The redacted category every caught backend panic collapses to.
-/// Panic payloads can carry internal state (slice indices, model
-/// internals); they are logged nowhere and never cross a channel.
+/// The redacted category every caught backend panic collapses to
+/// (installed as the executor's `panic_label`). Panic payloads can
+/// carry internal state (slice indices, model internals); they are
+/// logged nowhere and never cross a channel.
 const SOLVER_PANIC_CATEGORY: &str = "solver_panic";
-
-/// Run the backend under `catch_unwind`; on panic, bump the restart
-/// counter and rebuild the backend from the factory so the solver
-/// thread keeps serving.
-fn run_supervised(
-    backend: &mut SolverBackend,
-    make_backend: &impl Fn() -> SolverBackend,
-    stats: &ServiceStats,
-    encs: &[EncodedKernel],
-) -> Result<Vec<SolveOut>, String> {
-    match panic::catch_unwind(AssertUnwindSafe(|| run_backend(backend, encs))) {
-        Ok(outs) => Ok(outs),
-        Err(_payload) => {
-            *backend = make_backend();
-            stats.solver_restarts.fetch_add(1, Ordering::Relaxed);
-            Err(SOLVER_PANIC_CATEGORY.to_string())
-        }
-    }
-}
-
-fn solver_loop(
-    rx: Receiver<Msg>,
-    make_backend: impl Fn() -> SolverBackend,
-    stats: Arc<ServiceStats>,
-    window: Duration,
-) {
-    let mut backend = make_backend();
-    // A batch message that arrived while a single-path window was being
-    // filled; handled before blocking on the queue again.
-    let mut pending: Option<Msg> = None;
-    loop {
-        let first = match pending.take() {
-            Some(m) => m,
-            None => match rx.recv() {
-                Ok(m) => {
-                    stats.queued.fetch_sub(1, Ordering::Relaxed);
-                    m
-                }
-                Err(_) => return, // all senders dropped
-            },
-        };
-        match first {
-            Msg::Many(bj) => {
-                // Direct slot mapping: ceil(n/8) solver executions,
-                // no window wait. A panic in any chunk fails the whole
-                // submission (outputs must align with inputs) but the
-                // reply still arrives — the submitter never deadlocks
-                // against a dead worker.
-                let mut outs = Vec::with_capacity(bj.encs.len());
-                let mut failure: Option<String> = None;
-                for chunk in bj.encs.chunks(BATCH) {
-                    let t0 = Instant::now();
-                    match run_supervised(&mut backend, &make_backend, &stats, chunk) {
-                        Ok(res) => {
-                            stats.batches.fetch_add(1, Ordering::Relaxed);
-                            stats.batched_kernels.fetch_add(chunk.len() as u64, Ordering::Relaxed);
-                            stats
-                                .solve_micros
-                                .fetch_add(t0.elapsed().as_micros() as u64, Ordering::Relaxed);
-                            outs.extend(res);
-                        }
-                        Err(category) => {
-                            failure = Some(category);
-                            break;
-                        }
-                    }
-                }
-                let _ = match failure {
-                    None => bj.reply.send(Ok(outs)),
-                    Some(category) => bj.reply.send(Err(category)),
-                };
-            }
-            Msg::One(first_job) => {
-                let mut jobs = vec![first_job];
-                let deadline = Instant::now() + window;
-                while jobs.len() < BATCH {
-                    let now = Instant::now();
-                    if now >= deadline {
-                        break;
-                    }
-                    match rx.recv_timeout(deadline - now) {
-                        Ok(Msg::One(j)) => {
-                            stats.queued.fetch_sub(1, Ordering::Relaxed);
-                            jobs.push(j);
-                        }
-                        Ok(m @ Msg::Many(_)) => {
-                            // Dequeued here; `pending` only re-routes it
-                            // inside this thread, so the gauge drops now.
-                            stats.queued.fetch_sub(1, Ordering::Relaxed);
-                            pending = Some(m);
-                            break;
-                        }
-                        Err(RecvTimeoutError::Timeout) => break,
-                        Err(RecvTimeoutError::Disconnected) => break,
-                    }
-                }
-                let encs: Vec<EncodedKernel> = jobs.iter().map(|j| j.enc.clone()).collect();
-                let t0 = Instant::now();
-                match run_supervised(&mut backend, &make_backend, &stats, &encs) {
-                    Ok(outs) => {
-                        stats.batches.fetch_add(1, Ordering::Relaxed);
-                        stats.batched_kernels.fetch_add(jobs.len() as u64, Ordering::Relaxed);
-                        stats
-                            .solve_micros
-                            .fetch_add(t0.elapsed().as_micros() as u64, Ordering::Relaxed);
-                        for (job, out) in jobs.into_iter().zip(outs.into_iter()) {
-                            let _ = job.reply.send(Ok(out));
-                        }
-                    }
-                    Err(category) => {
-                        // One poisoned kernel fails its window-mates
-                        // too (outputs cannot be attributed), but every
-                        // waiter gets an answer instead of a timeout.
-                        for job in jobs {
-                            let _ = job.reply.send(Err(category.clone()));
-                        }
-                    }
-                }
-            }
-        }
-    }
-}
 
 #[cfg(test)]
 mod tests {
@@ -611,6 +593,9 @@ mod tests {
         );
         assert!(err.to_string().contains("restarted"));
         assert_eq!(c.stats.solver_restarts.load(Ordering::Relaxed), 1);
+        // The executor surface agrees with the legacy mirror.
+        assert_eq!(c.exec_stats().panics.load(Ordering::Relaxed), 1);
+        assert_eq!(c.exec_stats().worker_restarts.load(Ordering::Relaxed), 1);
         // The rebuilt backend keeps serving — both paths.
         assert!(c.solve_one(good.clone()).is_ok());
         let err = c.solve_batch(vec![good.clone(), poison]).unwrap_err();

@@ -1,0 +1,494 @@
+//! Corpus-scale analysis: score a directory (or tar archive) of `.s`
+//! basic blocks and aggregate a scorecard.
+//!
+//! A *corpus block* is one assembly file holding one basic block —
+//! BHive-style input with no IACA/OSACA markers and usually no loop
+//! back-edge; kernel extraction falls back to whole-file-as-kernel for
+//! these. Blocks stream through [`crate::api::Engine::analyze_batch`],
+//! which fans the analytic passes out on the shared work-stealing
+//! executor ([`crate::exec`]), so corpus throughput scales with cores
+//! without any scheduling code here.
+//!
+//! The scorecard is a **sibling document** of the v3 report schema: it
+//! carries the same `"schema_version":3` tag but its own `"kind"`, and
+//! adds no keys to the existing report/stats shapes. It contains no
+//! timestamps or host identifiers — the same corpus and machine model
+//! must produce byte-identical output across runs (CI diffs two runs).
+
+use std::collections::{BTreeMap, HashMap};
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::api::{Engine, Passes};
+use crate::report::emit::{csv_field, fmt_f32, fmt_f64, push_json_string, SCHEMA_VERSION};
+
+/// One assembly basic block of the corpus, named by its path within
+/// the corpus root (or tar archive).
+#[derive(Debug, Clone)]
+pub struct CorpusBlock {
+    pub name: String,
+    pub source: String,
+}
+
+/// Knobs for [`score_blocks`].
+#[derive(Debug, Clone)]
+pub struct CorpusOptions {
+    /// Machine model to score against (default `skl`).
+    pub arch: String,
+    /// Include the opt-in frontend bound in each block's prediction.
+    pub frontend_bound: bool,
+    /// Blocks per `analyze_batch` call. Bounds peak memory on huge
+    /// corpora while still keeping the executor saturated.
+    pub chunk: usize,
+}
+
+impl Default for CorpusOptions {
+    fn default() -> Self {
+        CorpusOptions { arch: "skl".to_string(), frontend_bound: false, chunk: 256 }
+    }
+}
+
+/// Per-block scoring outcome. Failed blocks keep their slot (with
+/// `bound == "error"`) so the scorecard always covers the whole corpus.
+#[derive(Debug, Clone)]
+pub struct BlockScore {
+    pub name: String,
+    /// Predicted cycles per assembly iteration (the winning model
+    /// bound); `None` when analysis failed.
+    pub cy_per_asm_iter: Option<f32>,
+    /// Winning bound kind name (`port_pressure`, `frontend`, `divider`,
+    /// `critical_path`) or `error`.
+    pub bound: String,
+    /// The concrete winning resource (port name, rename stage, chain).
+    pub resource: String,
+    pub error: Option<String>,
+}
+
+/// Aggregate corpus scorecard: every block's prediction plus the
+/// bottleneck histogram and (optional) accuracy vs. measured cycles.
+#[derive(Debug, Clone)]
+pub struct Scorecard {
+    pub arch: String,
+    pub scores: Vec<BlockScore>,
+    /// Bound-kind name → number of blocks it won (plus the `error`
+    /// bucket). `BTreeMap` so rendering order is deterministic.
+    pub histogram: BTreeMap<String, u64>,
+    /// Blocks matched against the measured-cycles sidecar.
+    pub measured_blocks: u64,
+    /// Mean absolute percentage error vs. the sidecar, in percent.
+    pub mape_pct: Option<f64>,
+}
+
+impl Scorecard {
+    pub fn errors(&self) -> u64 {
+        self.histogram.get("error").copied().unwrap_or(0)
+    }
+
+    /// Scorecard as one JSON document (`"kind":"corpus_scorecard"`,
+    /// tagged with the shared wire [`SCHEMA_VERSION`]). Key order is
+    /// fixed and no timestamps are included: identical inputs render
+    /// byte-identical output.
+    pub fn render_json(&self) -> String {
+        let mut out = String::with_capacity(256 + self.scores.len() * 96);
+        out.push_str(&format!(
+            "{{\"schema_version\":{SCHEMA_VERSION},\"kind\":\"corpus_scorecard\",\"arch\":"
+        ));
+        push_json_string(&mut out, &self.arch);
+        out.push_str(&format!(",\"blocks\":{},\"errors\":{}", self.scores.len(), self.errors()));
+        out.push_str(",\"histogram\":{");
+        for (i, (kind, n)) in self.histogram.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            push_json_string(&mut out, kind);
+            out.push_str(&format!(":{n}"));
+        }
+        out.push('}');
+        out.push_str(&format!(",\"measured_blocks\":{}", self.measured_blocks));
+        out.push_str(",\"mape_pct\":");
+        match self.mape_pct {
+            Some(v) => out.push_str(&fmt_f64(v)),
+            None => out.push_str("null"),
+        }
+        out.push_str(",\"scores\":[");
+        for (i, s) in self.scores.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str("{\"name\":");
+            push_json_string(&mut out, &s.name);
+            out.push_str(",\"cy_per_asm_iter\":");
+            match s.cy_per_asm_iter {
+                Some(v) => out.push_str(&fmt_f32(v)),
+                None => out.push_str("null"),
+            }
+            out.push_str(",\"bound\":");
+            push_json_string(&mut out, &s.bound);
+            out.push_str(",\"resource\":");
+            push_json_string(&mut out, &s.resource);
+            out.push_str(",\"error\":");
+            match &s.error {
+                Some(e) => push_json_string(&mut out, e),
+                None => out.push_str("null"),
+            }
+            out.push('}');
+        }
+        out.push_str("]}");
+        out
+    }
+
+    /// Per-block rows as RFC-4180 CSV with a header line. Aggregates
+    /// (histogram, MAPE) are JSON-only; CSV is the flat per-block view.
+    pub fn render_csv(&self) -> String {
+        let mut out = String::from("name,cy_per_asm_iter,bound,resource,error\r\n");
+        for s in &self.scores {
+            let cy = match s.cy_per_asm_iter {
+                Some(v) => fmt_f32(v),
+                None => String::new(),
+            };
+            out.push_str(&format!(
+                "{},{},{},{},{}\r\n",
+                csv_field(&s.name),
+                cy,
+                csv_field(&s.bound),
+                csv_field(&s.resource),
+                csv_field(s.error.as_deref().unwrap_or("")),
+            ));
+        }
+        out
+    }
+}
+
+/// Load corpus blocks from `path`: a directory (every `.s` file,
+/// recursively), a `.tar` archive of `.s` files, or a single `.s`
+/// file. Blocks are sorted by name so corpus order — and therefore the
+/// scorecard — is independent of filesystem enumeration order.
+pub fn load_blocks(path: &Path) -> Result<Vec<CorpusBlock>> {
+    let mut blocks = Vec::new();
+    if path.is_dir() {
+        walk_dir(path, path, &mut blocks)?;
+    } else if path.extension().and_then(|e| e.to_str()) == Some("tar") {
+        let bytes = fs::read(path).with_context(|| format!("reading {}", path.display()))?;
+        load_tar(&bytes, &mut blocks)?;
+    } else {
+        let source =
+            fs::read_to_string(path).with_context(|| format!("reading {}", path.display()))?;
+        let name = path
+            .file_name()
+            .map(|n| n.to_string_lossy().into_owned())
+            .unwrap_or_else(|| path.display().to_string());
+        blocks.push(CorpusBlock { name, source });
+    }
+    blocks.sort_by(|a, b| a.name.cmp(&b.name));
+    if blocks.is_empty() {
+        bail!("no .s blocks found under {}", path.display());
+    }
+    Ok(blocks)
+}
+
+fn walk_dir(dir: &Path, root: &Path, out: &mut Vec<CorpusBlock>) -> Result<()> {
+    let mut entries: Vec<PathBuf> = fs::read_dir(dir)
+        .with_context(|| format!("reading directory {}", dir.display()))?
+        .map(|e| e.map(|e| e.path()))
+        .collect::<std::io::Result<_>>()?;
+    entries.sort();
+    for p in entries {
+        if p.is_dir() {
+            walk_dir(&p, root, out)?;
+        } else if p.extension().and_then(|e| e.to_str()) == Some("s") {
+            let source =
+                fs::read_to_string(&p).with_context(|| format!("reading {}", p.display()))?;
+            let name = p
+                .strip_prefix(root)
+                .unwrap_or(&p)
+                .to_string_lossy()
+                .replace(std::path::MAIN_SEPARATOR, "/");
+            out.push(CorpusBlock { name, source });
+        }
+    }
+    Ok(())
+}
+
+/// Minimal ustar reader: 512-byte headers, octal size, regular-file
+/// entries only. Enough for archives produced by `tar -cf` (and by
+/// `scripts/gen_corpus.py --tar`); no extensions (pax, GNU longname).
+fn load_tar(bytes: &[u8], out: &mut Vec<CorpusBlock>) -> Result<()> {
+    let mut off = 0usize;
+    while off + 512 <= bytes.len() {
+        let hdr = &bytes[off..off + 512];
+        if hdr.iter().all(|&b| b == 0) {
+            break; // end-of-archive marker
+        }
+        let name = tar_str(&hdr[0..100]);
+        let prefix = tar_str(&hdr[345..500]);
+        let size = tar_octal(&hdr[124..136])
+            .with_context(|| format!("bad size field in tar header for `{name}`"))?;
+        let typeflag = hdr[156];
+        let full = if prefix.is_empty() { name.to_string() } else { format!("{prefix}/{name}") };
+        let data = off + 512;
+        let end = data + size;
+        if end > bytes.len() {
+            bail!("truncated tar entry `{full}`");
+        }
+        if (typeflag == b'0' || typeflag == 0) && full.ends_with(".s") {
+            let source = String::from_utf8_lossy(&bytes[data..end]).into_owned();
+            out.push(CorpusBlock { name: full, source });
+        }
+        off = data + size.div_ceil(512) * 512;
+    }
+    Ok(())
+}
+
+fn tar_str(field: &[u8]) -> &str {
+    let len = field.iter().position(|&b| b == 0).unwrap_or(field.len());
+    std::str::from_utf8(&field[..len]).unwrap_or("").trim()
+}
+
+fn tar_octal(field: &[u8]) -> Result<usize> {
+    let s = tar_str(field);
+    if s.is_empty() {
+        return Ok(0);
+    }
+    usize::from_str_radix(s, 8).map_err(|e| anyhow::anyhow!("{e}"))
+}
+
+/// Score every block through the engine's batch path (throughput +
+/// critical-path passes) and aggregate the bottleneck histogram.
+/// Blocks are scored in chunks of [`CorpusOptions::chunk`]; results
+/// stay in corpus order regardless of executor scheduling.
+pub fn score_blocks(engine: &Engine, blocks: &[CorpusBlock], opts: &CorpusOptions) -> Scorecard {
+    let passes = Passes::THROUGHPUT | Passes::CRITPATH;
+    let mut scores: Vec<BlockScore> = Vec::with_capacity(blocks.len());
+    for chunk in blocks.chunks(opts.chunk.max(1)) {
+        let reqs: Vec<_> = chunk
+            .iter()
+            .map(|b| {
+                Engine::request(&b.name)
+                    .arch(&opts.arch)
+                    .source(b.source.as_str())
+                    .passes(passes)
+                    .frontend_bound(opts.frontend_bound)
+            })
+            .collect();
+        for (b, outcome) in chunk.iter().zip(engine.analyze_batch(&reqs)) {
+            scores.push(match outcome {
+                Ok(report) => {
+                    let prediction = report.prediction();
+                    match prediction.winner() {
+                        Some(w) => BlockScore {
+                            name: b.name.clone(),
+                            cy_per_asm_iter: Some(w.cy_per_asm_iter),
+                            bound: w.kind.name().to_string(),
+                            resource: w.resource.clone(),
+                            error: None,
+                        },
+                        None => BlockScore {
+                            name: b.name.clone(),
+                            cy_per_asm_iter: None,
+                            bound: "error".to_string(),
+                            resource: String::new(),
+                            error: Some("no model bound produced".to_string()),
+                        },
+                    }
+                }
+                Err(e) => BlockScore {
+                    name: b.name.clone(),
+                    cy_per_asm_iter: None,
+                    bound: "error".to_string(),
+                    resource: String::new(),
+                    error: Some(e.to_string()),
+                },
+            });
+        }
+    }
+    let mut histogram = BTreeMap::new();
+    for s in &scores {
+        *histogram.entry(s.bound.clone()).or_insert(0u64) += 1;
+    }
+    Scorecard { arch: opts.arch.clone(), scores, histogram, measured_blocks: 0, mape_pct: None }
+}
+
+/// Fold a measured-cycles sidecar (`name,cycles` CSV; `#` comments and
+/// a `name,cycles` header tolerated) into the scorecard's MAPE. Blocks
+/// without a measurement — and measurements without a block — are
+/// skipped; only positive measurements with a successful prediction
+/// count.
+pub fn attach_measured(card: &mut Scorecard, csv: &str) -> Result<()> {
+    let mut measured: HashMap<String, f64> = HashMap::new();
+    for (lineno, raw) in csv.lines().enumerate() {
+        let line = raw.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let Some((name, cy)) = line.rsplit_once(',') else {
+            bail!("sidecar line {}: expected `name,cycles`, got `{line}`", lineno + 1);
+        };
+        let name = name.trim();
+        let cy = cy.trim();
+        match cy.parse::<f64>() {
+            Ok(v) => {
+                measured.insert(name.to_string(), v);
+            }
+            // Tolerate a leading header row; anything else is a bad file.
+            Err(_) if lineno == 0 => continue,
+            Err(e) => bail!("sidecar line {}: bad cycles `{cy}`: {e}", lineno + 1),
+        }
+    }
+    let mut n = 0u64;
+    let mut sum = 0.0f64;
+    for s in &card.scores {
+        let (Some(pred), Some(&m)) = (s.cy_per_asm_iter, measured.get(&s.name)) else {
+            continue;
+        };
+        if m > 0.0 {
+            sum += ((pred as f64 - m) / m).abs();
+            n += 1;
+        }
+    }
+    card.measured_blocks = n;
+    card.mape_pct = if n > 0 { Some(100.0 * sum / n as f64) } else { None };
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::Backend;
+
+    const BLOCK_A: &str = "vmovapd (%r15,%rax), %ymm0\nvaddpd %ymm0, %ymm1, %ymm2\n";
+    const BLOCK_B: &str = "vfmadd231pd %ymm1, %ymm2, %ymm3\nvfmadd231pd %ymm1, %ymm2, %ymm3\n";
+
+    fn tar_entry(name: &str, data: &[u8]) -> Vec<u8> {
+        let mut hdr = vec![0u8; 512];
+        hdr[..name.len()].copy_from_slice(name.as_bytes());
+        let size = format!("{:011o}\0", data.len());
+        hdr[124..124 + size.len()].copy_from_slice(size.as_bytes());
+        hdr[156] = b'0';
+        // Checksum: field treated as spaces while summing.
+        hdr[148..156].fill(b' ');
+        let sum: u32 = hdr.iter().map(|&b| b as u32).sum();
+        let chk = format!("{sum:06o}\0 ");
+        hdr[148..148 + chk.len()].copy_from_slice(chk.as_bytes());
+        let mut out = hdr;
+        out.extend_from_slice(data);
+        out.resize(out.len().div_ceil(512) * 512, 0);
+        out
+    }
+
+    #[test]
+    fn tar_blocks_load_sorted_and_skip_non_asm() {
+        let mut tar = Vec::new();
+        tar.extend(tar_entry("b.s", BLOCK_B.as_bytes()));
+        tar.extend(tar_entry("readme.txt", b"not assembly"));
+        tar.extend(tar_entry("a.s", BLOCK_A.as_bytes()));
+        tar.extend(vec![0u8; 1024]); // end-of-archive
+        let mut blocks = Vec::new();
+        load_tar(&tar, &mut blocks).unwrap();
+        blocks.sort_by(|a, b| a.name.cmp(&b.name));
+        assert_eq!(blocks.len(), 2);
+        assert_eq!(blocks[0].name, "a.s");
+        assert_eq!(blocks[0].source, BLOCK_A);
+        assert_eq!(blocks[1].name, "b.s");
+    }
+
+    #[test]
+    fn truncated_tar_is_rejected() {
+        let mut tar = tar_entry("a.s", BLOCK_A.as_bytes());
+        tar.truncate(600); // header promises more data than present
+        let mut blocks = Vec::new();
+        assert!(load_tar(&tar, &mut blocks).is_err());
+    }
+
+    #[test]
+    fn scorecard_covers_every_block_and_is_reproducible() {
+        let engine = Engine::builder().backend(Backend::Cpu).build();
+        let blocks = vec![
+            CorpusBlock { name: "a.s".into(), source: BLOCK_A.into() },
+            // Instruction-free source: kernel extraction rejects it.
+            CorpusBlock { name: "bad.s".into(), source: "\n\n".into() },
+            CorpusBlock { name: "b.s".into(), source: BLOCK_B.into() },
+        ];
+        let opts = CorpusOptions::default();
+        let card = score_blocks(&engine, &blocks, &opts);
+        assert_eq!(card.scores.len(), 3);
+        assert_eq!(card.scores[0].name, "a.s");
+        assert!(card.scores[0].cy_per_asm_iter.is_some());
+        assert_eq!(card.scores[1].bound, "error");
+        assert!(card.scores[1].error.is_some());
+        assert_eq!(card.errors(), 1);
+        assert_eq!(card.histogram.values().sum::<u64>(), 3);
+        // Aggregate counts (and the rendered document) must not depend
+        // on executor scheduling: score the same corpus again and
+        // compare byte-for-byte.
+        let again = score_blocks(&engine, &blocks, &opts);
+        assert_eq!(card.render_json(), again.render_json());
+        assert_eq!(card.render_csv(), again.render_csv());
+        let json = card.render_json();
+        assert!(json.starts_with(&format!("{{\"schema_version\":{SCHEMA_VERSION}")));
+        assert!(json.contains("\"kind\":\"corpus_scorecard\""));
+        assert!(json.contains("\"blocks\":3"));
+        assert!(json.contains("\"errors\":1"));
+    }
+
+    #[test]
+    fn mape_matches_hand_computation() {
+        let mut card = Scorecard {
+            arch: "skl".into(),
+            scores: vec![
+                BlockScore {
+                    name: "a.s".into(),
+                    cy_per_asm_iter: Some(2.0),
+                    bound: "port_pressure".into(),
+                    resource: "P0".into(),
+                    error: None,
+                },
+                BlockScore {
+                    name: "b.s".into(),
+                    cy_per_asm_iter: Some(3.0),
+                    bound: "critical_path".into(),
+                    resource: "chain".into(),
+                    error: None,
+                },
+                BlockScore {
+                    name: "c.s".into(),
+                    cy_per_asm_iter: None,
+                    bound: "error".into(),
+                    resource: String::new(),
+                    error: Some("boom".into()),
+                },
+            ],
+            histogram: BTreeMap::new(),
+            measured_blocks: 0,
+            mape_pct: None,
+        };
+        // a: |2-4|/4 = 0.5; b: |3-2|/2 = 0.5; c unmatched (error);
+        // d present in sidecar but not the corpus — skipped.
+        let sidecar = "name,cycles\na.s,4.0\nb.s,2.0\nc.s,1.0\nd.s,9.0\n";
+        attach_measured(&mut card, sidecar).unwrap();
+        assert_eq!(card.measured_blocks, 2);
+        assert!((card.mape_pct.unwrap() - 50.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn csv_escapes_and_orders_rows() {
+        let card = Scorecard {
+            arch: "skl".into(),
+            scores: vec![BlockScore {
+                name: "odd,name.s".into(),
+                cy_per_asm_iter: Some(1.5),
+                bound: "frontend".into(),
+                resource: "4-wide".into(),
+                error: None,
+            }],
+            histogram: BTreeMap::new(),
+            measured_blocks: 0,
+            mape_pct: None,
+        };
+        let csv = card.render_csv();
+        let mut lines = csv.lines();
+        assert_eq!(lines.next(), Some("name,cy_per_asm_iter,bound,resource,error"));
+        assert_eq!(lines.next(), Some("\"odd,name.s\",1.5,frontend,4-wide,"));
+    }
+}

@@ -1,0 +1,560 @@
+//! `osaca::exec` — the one work-stealing executor behind every
+//! parallel path in the crate (DESIGN.md §11).
+//!
+//! Before this layer existed the crate had three independent execution
+//! mechanisms — `api::Engine::analyze_batch`'s ad-hoc scoped pool, the
+//! coordinator's dedicated solver thread, and `serve`'s N shard workers
+//! on bounded `sync_channel`s — each with its own queueing, supervision
+//! and stats story. This module unifies them:
+//!
+//! * **Queues.** Each worker owns a bounded FIFO deque; submissions
+//!   carry an optional *home* hint (`Some(worker)`) that pins a job to
+//!   a worker's deque for locality (serve uses the arch-hash shard
+//!   index so FormIndex/memo locality survives), or go to a bounded
+//!   global *injector* (`None`) that any worker drains. A worker takes
+//!   from its own deque first, then the injector, then **steals** from
+//!   other workers' deque fronts — an idle worker never sits out a
+//!   hot-queue burst, and steal order (oldest job first) preserves
+//!   rough submission fairness.
+//! * **Backpressure.** [`Executor::try_submit`] answers a structured
+//!   [`Submit::Full`] (carrying the home gauge) instead of blocking —
+//!   the contract serve's `overloaded` frames are built on. The
+//!   blocking [`Executor::submit`] waits for a slot (the coordinator's
+//!   semantics) and hands the job back on a closed executor so the
+//!   caller can notify its own waiters.
+//! * **Supervision.** Every job runs under `catch_unwind`. A panic is
+//!   redacted to a stable category ([`panic_category`], or the
+//!   executor-wide `panic_label` override), the worker's context is
+//!   rebuilt from the factory *before* the job's `on_panic` callback
+//!   answers anyone — by the time a caller sees the categorized error,
+//!   the worker is already fresh. `panics` and `worker_restarts`
+//!   count every event.
+//! * **Stats.** One [`ExecStats`] surface (queued / in-flight / steals
+//!   / panics / worker restarts) plus per-worker [`WorkerStats`]
+//!   (executed jobs, home gauge). `serve`'s wire `stats` frame and the
+//!   coordinator's `ServiceStats` re-export these counters instead of
+//!   reimplementing them.
+//! * **Drain.** [`Executor::close`] stops admissions; workers finish
+//!   everything already queued (own deque, injector, and stealable
+//!   remainders) before exiting, so a close-then-join loses zero jobs.
+//!
+//! Worker contexts are built *inside* the worker thread by the factory
+//! (`Fn(worker_index) -> C`), never moved across threads — the PJRT
+//! solver client is not `Send`, and serve's per-shard `Engine`s follow
+//! the same rule.
+
+use std::any::Any;
+use std::collections::VecDeque;
+use std::panic::{self, AssertUnwindSafe};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// Executor tunables.
+#[derive(Debug, Clone)]
+pub struct ExecConfig {
+    /// Worker (and deque) count, clamped ≥ 1.
+    pub workers: usize,
+    /// Per-worker deque bound, clamped ≥ 1; a full home deque answers
+    /// [`Submit::Full`].
+    pub queue_depth: usize,
+    /// Injector bound for affinity-free submissions (0 = auto:
+    /// `workers × queue_depth`).
+    pub injector_depth: usize,
+    /// Worker thread name prefix (worker `i` is named `{name}{i}`).
+    pub name: String,
+    /// Redact *every* caught panic to this category instead of
+    /// payload-prefix classification (the coordinator pins
+    /// `"solver_panic"` this way).
+    pub panic_label: Option<&'static str>,
+}
+
+impl Default for ExecConfig {
+    fn default() -> Self {
+        ExecConfig {
+            workers: 1,
+            queue_depth: 64,
+            injector_depth: 0,
+            name: "osaca-exec".to_string(),
+            panic_label: None,
+        }
+    }
+}
+
+/// Executor-wide counters. Plain relaxed atomics: monotonic event
+/// counts and gauges with no cross-counter invariant, same discipline
+/// as `serve::metrics`.
+#[derive(Debug, Default)]
+pub struct ExecStats {
+    /// Jobs accepted but not yet picked up by a worker (deques +
+    /// injector).
+    pub queued: AtomicU64,
+    /// Jobs currently running on some worker.
+    pub in_flight: AtomicU64,
+    /// Jobs a worker took from another worker's deque.
+    pub steals: AtomicU64,
+    /// Job panics caught by worker supervision.
+    pub panics: AtomicU64,
+    /// Worker contexts rebuilt after a caught panic (== panics today;
+    /// kept separate so a pooled-restart strategy stays observable).
+    pub worker_restarts: AtomicU64,
+}
+
+/// Per-worker counters.
+#[derive(Debug, Default)]
+pub struct WorkerStats {
+    /// Jobs this worker ran to completion (including panicked jobs —
+    /// the job was consumed either way).
+    pub executed: AtomicU64,
+    /// Gauge of jobs *homed* to this worker that are queued or still
+    /// running (wherever they actually run): incremented at submit,
+    /// decremented when the job finishes. This is the per-shard
+    /// `queue_depths` gauge serve exposes on the wire.
+    pub home: AtomicU64,
+}
+
+/// A unit of work plus its supervision callback.
+///
+/// `run` executes on a worker with exclusive access to that worker's
+/// context. If it panics, the executor rebuilds the context and calls
+/// `on_panic` with the redacted category — `on_panic` must own its own
+/// reply senders (anything `run` owned went down with the unwind).
+pub struct Job<C> {
+    run: Box<dyn FnOnce(&mut C) + Send + 'static>,
+    on_panic: Box<dyn FnOnce(&'static str) + Send + 'static>,
+}
+
+impl<C> Job<C> {
+    pub fn new(run: impl FnOnce(&mut C) + Send + 'static) -> Job<C> {
+        Job { run: Box::new(run), on_panic: Box::new(|_category| {}) }
+    }
+
+    /// Attach the panic callback (replaces the default no-op).
+    pub fn on_panic(mut self, f: impl FnOnce(&'static str) + Send + 'static) -> Job<C> {
+        self.on_panic = Box::new(f);
+        self
+    }
+}
+
+/// Outcome of a non-blocking submission.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Submit {
+    Queued,
+    /// The home deque (or injector) is full; carries the home gauge
+    /// (queued + in-flight) so backpressure frames can report depth.
+    Full(u64),
+    /// The executor is closed (draining); nothing was accepted.
+    Closed,
+}
+
+struct QueuedJob<C> {
+    job: Job<C>,
+    home: Option<usize>,
+}
+
+struct State<C> {
+    deques: Vec<VecDeque<QueuedJob<C>>>,
+    injector: VecDeque<QueuedJob<C>>,
+    closed: bool,
+}
+
+struct Core<C> {
+    state: Mutex<State<C>>,
+    /// Workers wait here for work (or close).
+    work_cv: Condvar,
+    /// Blocking submitters wait here for queue space.
+    space_cv: Condvar,
+    stats: ExecStats,
+    workers: Vec<WorkerStats>,
+    queue_depth: usize,
+    injector_depth: usize,
+    panic_label: Option<&'static str>,
+}
+
+/// The work-stealing executor. Shareable by reference (all methods take
+/// `&self`); dropping it closes and joins the workers.
+pub struct Executor<C> {
+    core: Arc<Core<C>>,
+    handles: Mutex<Vec<JoinHandle<()>>>,
+}
+
+impl<C: 'static> Executor<C> {
+    /// Start `cfg.workers` workers, each owning a context built by
+    /// `factory(worker_index)` on its own thread (contexts are never
+    /// moved across threads, so `C` needs no `Send`).
+    pub fn new(
+        cfg: ExecConfig,
+        factory: impl Fn(usize) -> C + Send + Sync + 'static,
+    ) -> Executor<C> {
+        let n = cfg.workers.max(1);
+        let queue_depth = cfg.queue_depth.max(1);
+        let injector_depth =
+            if cfg.injector_depth > 0 { cfg.injector_depth } else { n * queue_depth };
+        let core = Arc::new(Core {
+            state: Mutex::new(State {
+                deques: (0..n).map(|_| VecDeque::new()).collect(),
+                injector: VecDeque::new(),
+                closed: false,
+            }),
+            work_cv: Condvar::new(),
+            space_cv: Condvar::new(),
+            stats: ExecStats::default(),
+            workers: (0..n).map(|_| WorkerStats::default()).collect(),
+            queue_depth,
+            injector_depth,
+            panic_label: cfg.panic_label,
+        });
+        let factory: Arc<dyn Fn(usize) -> C + Send + Sync> = Arc::new(factory);
+        let handles = (0..n)
+            .map(|i| {
+                let core = core.clone();
+                let factory = factory.clone();
+                std::thread::Builder::new()
+                    .name(format!("{}{}", cfg.name, i))
+                    .spawn(move || worker_loop(&core, factory.as_ref(), i))
+                    .expect("spawn exec worker")
+            })
+            .collect();
+        Executor { core, handles: Mutex::new(handles) }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.core.workers.len()
+    }
+
+    pub fn stats(&self) -> &ExecStats {
+        &self.core.stats
+    }
+
+    pub fn worker_stats(&self) -> &[WorkerStats] {
+        &self.core.workers
+    }
+
+    /// Per-worker home gauges (queued + in-flight jobs homed to each
+    /// worker) — the wire `queue_depths` array.
+    pub fn queue_depths(&self) -> Vec<u64> {
+        self.core.workers.iter().map(|w| w.home.load(Ordering::Relaxed)).collect()
+    }
+
+    /// Non-blocking submission. `home` pins the job to a worker's deque
+    /// (for locality; idle workers may still steal it); `None` uses the
+    /// shared injector.
+    pub fn try_submit(&self, home: Option<usize>, job: Job<C>) -> Submit {
+        let core = &self.core;
+        let mut st = core.state.lock().expect("exec state");
+        if st.closed {
+            return Submit::Closed;
+        }
+        match home {
+            Some(h) => {
+                let h = h % st.deques.len();
+                if st.deques[h].len() >= core.queue_depth {
+                    return Submit::Full(core.workers[h].home.load(Ordering::Relaxed));
+                }
+                st.deques[h].push_back(QueuedJob { job, home: Some(h) });
+                core.workers[h].home.fetch_add(1, Ordering::Relaxed);
+            }
+            None => {
+                if st.injector.len() >= core.injector_depth {
+                    return Submit::Full(st.injector.len() as u64);
+                }
+                st.injector.push_back(QueuedJob { job, home: None });
+            }
+        }
+        core.stats.queued.fetch_add(1, Ordering::Relaxed);
+        drop(st);
+        core.work_cv.notify_one();
+        Submit::Queued
+    }
+
+    /// Blocking submission: waits for queue space instead of answering
+    /// `Full`. On a closed executor the job is handed back so the
+    /// caller can notify whoever holds its reply channels.
+    pub fn submit(&self, home: Option<usize>, job: Job<C>) -> Result<(), Job<C>> {
+        let core = &self.core;
+        let mut st = core.state.lock().expect("exec state");
+        loop {
+            if st.closed {
+                drop(st);
+                return Err(job);
+            }
+            let has_space = match home {
+                Some(h) => st.deques[h % st.deques.len()].len() < core.queue_depth,
+                None => st.injector.len() < core.injector_depth,
+            };
+            if has_space {
+                break;
+            }
+            st = core.space_cv.wait(st).expect("exec space wait");
+        }
+        match home {
+            Some(h) => {
+                let h = h % st.deques.len();
+                st.deques[h].push_back(QueuedJob { job, home: Some(h) });
+                core.workers[h].home.fetch_add(1, Ordering::Relaxed);
+            }
+            None => st.injector.push_back(QueuedJob { job, home: None }),
+        }
+        core.stats.queued.fetch_add(1, Ordering::Relaxed);
+        drop(st);
+        core.work_cv.notify_one();
+        Ok(())
+    }
+
+    /// Stop admissions. Workers finish everything already queued before
+    /// exiting — the drain contract. Idempotent.
+    pub fn close(&self) {
+        let mut st = self.core.state.lock().expect("exec state");
+        st.closed = true;
+        drop(st);
+        self.core.work_cv.notify_all();
+        self.core.space_cv.notify_all();
+    }
+
+    /// Join every worker thread (call [`Executor::close`] first or this
+    /// blocks forever). Idempotent.
+    pub fn join(&self) {
+        let handles: Vec<JoinHandle<()>> =
+            std::mem::take(&mut *self.handles.lock().expect("exec handles"));
+        for h in handles {
+            let _ = h.join();
+        }
+    }
+}
+
+impl<C> Drop for Executor<C> {
+    fn drop(&mut self) {
+        // Safe teardown without the `C: 'static` bound of the inherent
+        // methods: same close + join, inlined.
+        {
+            let mut st = self.core.state.lock().expect("exec state");
+            st.closed = true;
+        }
+        self.core.work_cv.notify_all();
+        self.core.space_cv.notify_all();
+        let handles: Vec<JoinHandle<()>> =
+            std::mem::take(&mut *self.handles.lock().expect("exec handles"));
+        for h in handles {
+            let _ = h.join();
+        }
+    }
+}
+
+/// What a worker found when it went looking for work.
+enum Found<C> {
+    Job(QueuedJob<C>, /* stolen */ bool),
+    Exit,
+}
+
+fn next_job<C>(core: &Core<C>, index: usize) -> Found<C> {
+    let mut st = core.state.lock().expect("exec state");
+    loop {
+        if let Some(q) = st.deques[index].pop_front() {
+            return Found::Job(q, false);
+        }
+        if let Some(q) = st.injector.pop_front() {
+            return Found::Job(q, false);
+        }
+        // Steal scan: round-robin from the next worker up, oldest job
+        // first (deque *front*, same end the owner takes from — strict
+        // FIFO per home queue even under steals).
+        let n = st.deques.len();
+        for off in 1..n {
+            let j = (index + off) % n;
+            if let Some(q) = st.deques[j].pop_front() {
+                return Found::Job(q, true);
+            }
+        }
+        if st.closed {
+            return Found::Exit;
+        }
+        // The timeout is a belt against lost-wakeup bugs, not a
+        // correctness requirement: every submit notifies under the
+        // same mutex.
+        let (guard, _timed_out) = core
+            .work_cv
+            .wait_timeout(st, Duration::from_millis(50))
+            .expect("exec work wait");
+        st = guard;
+    }
+}
+
+fn worker_loop<C>(core: &Core<C>, factory: &(dyn Fn(usize) -> C + Send + Sync), index: usize) {
+    let mut ctx = factory(index);
+    loop {
+        let (queued, stolen) = match next_job(core, index) {
+            Found::Job(q, stolen) => (q, stolen),
+            Found::Exit => return,
+        };
+        core.stats.queued.fetch_sub(1, Ordering::Relaxed);
+        core.stats.in_flight.fetch_add(1, Ordering::Relaxed);
+        if stolen {
+            core.stats.steals.fetch_add(1, Ordering::Relaxed);
+        }
+        // A queue slot just freed up; wake blocking submitters.
+        core.space_cv.notify_all();
+        let QueuedJob { job, home } = queued;
+        let Job { run, on_panic } = job;
+        match panic::catch_unwind(AssertUnwindSafe(|| run(&mut ctx))) {
+            Ok(()) => {}
+            Err(payload) => {
+                core.stats.panics.fetch_add(1, Ordering::Relaxed);
+                // Rebuild *before* answering: by the time a caller sees
+                // the categorized error, the worker context is already
+                // fresh — a restarted worker must not inherit state the
+                // panic may have corrupted.
+                ctx = factory(index);
+                core.stats.worker_restarts.fetch_add(1, Ordering::Relaxed);
+                let category =
+                    core.panic_label.unwrap_or_else(|| panic_category(payload.as_ref()));
+                // A panicking on_panic must not kill the worker too.
+                let _ = panic::catch_unwind(AssertUnwindSafe(move || on_panic(category)));
+            }
+        }
+        core.workers[index].executed.fetch_add(1, Ordering::Relaxed);
+        core.stats.in_flight.fetch_sub(1, Ordering::Relaxed);
+        if let Some(h) = home {
+            core.workers[h].home.fetch_sub(1, Ordering::Relaxed);
+        }
+    }
+}
+
+/// Redact a panic payload to a stable category. The injected classes
+/// keep distinct names so tests can tell supervision paths apart; any
+/// genuine panic is just "worker_panic". Payload text is never a wire
+/// surface — it can carry internal state.
+pub fn panic_category(payload: &(dyn Any + Send)) -> &'static str {
+    let msg = payload
+        .downcast_ref::<&str>()
+        .copied()
+        .or_else(|| payload.downcast_ref::<String>().map(String::as_str));
+    match msg {
+        Some(m) if m.starts_with("chaos:") => "injected_chaos_panic",
+        Some(m) if m.starts_with("test-op:") => "injected_test_panic",
+        _ => "worker_panic",
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc;
+
+    fn pool(workers: usize, queue_depth: usize) -> Executor<()> {
+        Executor::new(
+            ExecConfig {
+                workers,
+                queue_depth,
+                name: "exec-test".to_string(),
+                ..Default::default()
+            },
+            |_| (),
+        )
+    }
+
+    #[test]
+    fn panic_categories_are_redacted() {
+        let boxed: Box<dyn Any + Send> = Box::new("chaos: injected worker panic");
+        assert_eq!(panic_category(boxed.as_ref()), "injected_chaos_panic");
+        let boxed: Box<dyn Any + Send> = Box::new("test-op: injected worker panic".to_string());
+        assert_eq!(panic_category(boxed.as_ref()), "injected_test_panic");
+        let boxed: Box<dyn Any + Send> =
+            Box::new("index out of bounds: secret internal detail".to_string());
+        assert_eq!(panic_category(boxed.as_ref()), "worker_panic");
+        let boxed: Box<dyn Any + Send> = Box::new(42u32);
+        assert_eq!(panic_category(boxed.as_ref()), "worker_panic");
+    }
+
+    #[test]
+    fn jobs_run_and_drain_on_close() {
+        let ex = pool(3, 64);
+        let (tx, rx) = mpsc::channel();
+        for i in 0..48u64 {
+            let tx = tx.clone();
+            let sub = ex.try_submit(Some((i % 3) as usize), Job::new(move |_: &mut ()| {
+                tx.send(i).unwrap();
+            }));
+            assert_eq!(sub, Submit::Queued);
+        }
+        ex.close();
+        ex.join();
+        drop(tx);
+        let got: Vec<u64> = rx.iter().collect();
+        assert_eq!(got.len(), 48, "close+join must lose zero jobs");
+        assert_eq!(ex.try_submit(Some(0), Job::new(|_: &mut ()| {})), Submit::Closed);
+        assert_eq!(ex.stats().queued.load(Ordering::Relaxed), 0);
+        assert_eq!(ex.stats().in_flight.load(Ordering::Relaxed), 0);
+        let executed: u64 =
+            ex.worker_stats().iter().map(|w| w.executed.load(Ordering::Relaxed)).sum();
+        assert_eq!(executed, 48);
+    }
+
+    #[test]
+    fn full_home_deque_answers_structured_full() {
+        let ex = pool(1, 1);
+        let (hold_tx, hold_rx) = mpsc::channel::<()>();
+        ex.try_submit(
+            Some(0),
+            Job::new(move |_: &mut ()| {
+                hold_rx.recv().unwrap();
+            }),
+        );
+        // Wait until the blocker is in flight (deque empty again).
+        while ex.stats().in_flight.load(Ordering::Relaxed) == 0 {
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        assert_eq!(ex.try_submit(Some(0), Job::new(|_: &mut ()| {})), Submit::Queued);
+        // Home gauge = 1 in flight + 1 queued.
+        assert_eq!(ex.try_submit(Some(0), Job::new(|_: &mut ()| {})), Submit::Full(2));
+        hold_tx.send(()).unwrap();
+        ex.close();
+        ex.join();
+        assert_eq!(ex.queue_depths(), vec![0]);
+    }
+
+    #[test]
+    fn factory_rebuilds_context_after_panic() {
+        // Context = a generation counter: a panic must hand the next
+        // job a *fresh* context, not the poisoned one.
+        let built = Arc::new(AtomicU64::new(0));
+        let b = built.clone();
+        let ex = Executor::new(
+            ExecConfig { workers: 1, name: "exec-gen".to_string(), ..Default::default() },
+            move |_| b.fetch_add(1, Ordering::Relaxed),
+        );
+        let (tx, rx) = mpsc::channel();
+        ex.try_submit(Some(0), Job::new(|_: &mut u64| panic!("boom")));
+        let txc = tx.clone();
+        ex.try_submit(Some(0), Job::new(move |gen: &mut u64| {
+            txc.send(*gen).unwrap();
+        }));
+        let gen = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert_eq!(gen, 1, "second job must see the rebuilt (generation-1) context");
+        assert_eq!(built.load(Ordering::Relaxed), 2);
+        assert_eq!(ex.stats().panics.load(Ordering::Relaxed), 1);
+        assert_eq!(ex.stats().worker_restarts.load(Ordering::Relaxed), 1);
+        ex.close();
+        ex.join();
+    }
+
+    #[test]
+    fn panic_label_overrides_payload_classification() {
+        let ex = Executor::new(
+            ExecConfig {
+                workers: 1,
+                name: "exec-label".to_string(),
+                panic_label: Some("solver_panic"),
+                ..Default::default()
+            },
+            |_| (),
+        );
+        let (tx, rx) = mpsc::channel();
+        let job = Job::new(|_: &mut ()| panic!("chaos: would normally classify differently"))
+            .on_panic(move |category| tx.send(category).unwrap());
+        ex.try_submit(Some(0), job);
+        assert_eq!(rx.recv_timeout(Duration::from_secs(5)).unwrap(), "solver_panic");
+        ex.close();
+        ex.join();
+    }
+}

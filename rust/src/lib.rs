@@ -29,6 +29,8 @@ pub mod baseline;
 pub mod benchlib;
 pub mod builder;
 pub mod coordinator;
+pub mod corpus;
+pub mod exec;
 pub mod ibench;
 pub mod isa;
 pub mod mdb;

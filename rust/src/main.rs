@@ -17,6 +17,8 @@
 //!   serve [--addr host:port] [--shards N] [--memo-cap N] [--memo-max-bytes N] [--max-rps R]
 //!         [--burst N] [--max-inflight N] [--max-frame-bytes N] [--chaos [seed]] [--test-ops]
 //!         (persistent TCP service; --loopback for the in-process batch demo)
+//!   corpus <dir|archive.tar|file.s> [--arch skl] [--measured file.csv] [--frontend-bound]
+//!         (score a corpus of basic blocks; scorecard to stdout)
 //!   list-workloads
 //!
 //! Hand-rolled argument parsing: clap is not vendored in this offline
@@ -41,7 +43,7 @@ use osaca::report::experiments::{
 use osaca::report::render_port_diagram;
 use osaca::serve::{ServeConfig, Server};
 use osaca::sim::SimConfig;
-use osaca::{asm, workloads};
+use osaca::{asm, corpus, workloads};
 
 fn main() -> ExitCode {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -563,6 +565,50 @@ fn run(args: &[String]) -> Result<()> {
             server.join();
             println!("drained cleanly");
         }
+        "corpus" => {
+            let path = pos.first().ok_or_else(|| {
+                anyhow!(
+                    "usage: corpus <dir|archive.tar|file.s> [--arch skl] [--measured file.csv] \
+                     [--frontend-bound] [--chunk N] [--format text|json|csv]"
+                )
+            })?;
+            let blocks = corpus::load_blocks(std::path::Path::new(path))?;
+            let mut copts = corpus::CorpusOptions {
+                arch: opts.get("arch").copied().unwrap_or("skl").to_string(),
+                frontend_bound: opts.contains_key("frontend-bound"),
+                ..Default::default()
+            };
+            if let Some(v) = opts.get("chunk") {
+                copts.chunk = v.parse::<usize>().context("--chunk")?.max(1);
+            }
+            let mut card = corpus::score_blocks(&engine, &blocks, &copts);
+            if let Some(p) = opts.get("measured") {
+                let csv =
+                    std::fs::read_to_string(p).with_context(|| format!("reading {p}"))?;
+                corpus::attach_measured(&mut card, &csv)?;
+            }
+            match format {
+                Format::Json => println!("{}", card.render_json()),
+                Format::Csv => print!("{}", card.render_csv()),
+                Format::Text => {
+                    println!(
+                        "corpus: {} blocks on {} ({} errors)",
+                        card.scores.len(),
+                        card.arch,
+                        card.errors()
+                    );
+                    for (kind, n) in &card.histogram {
+                        println!("  {kind:<14} {n}");
+                    }
+                    if let Some(m) = card.mape_pct {
+                        println!(
+                            "MAPE vs measured: {m:.2}% over {} blocks",
+                            card.measured_blocks
+                        );
+                    }
+                }
+            }
+        }
         "list-workloads" => {
             if format != Format::Text {
                 let rows: Vec<Vec<String>> = workloads::all_isa()
@@ -674,6 +720,7 @@ commands (all accept --format text|json|csv):
   serve [--addr host:port] [--shards N] [--memo-cap N] [--memo-max-bytes N] [--queue-depth N]
         [--max-rps R] [--burst N] [--max-inflight N] [--max-frame-bytes N]
         [--chaos [seed]] [--test-ops] [--loopback [--requests N]]
+  corpus <dir|archive.tar|file.s> [--arch skl] [--measured file.csv] [--frontend-bound] [--chunk N]
   list-workloads"
     );
 }

@@ -35,11 +35,6 @@ pub struct ServeMetrics {
     pub shed: AtomicU64,
     /// Requests dropped at dispatch because their deadline had expired.
     pub deadline_expired: AtomicU64,
-    /// Worker panics caught by shard supervision.
-    pub panics: AtomicU64,
-    /// Engines rebuilt after a caught panic (== panics today; kept
-    /// separate so a future pooled-restart strategy stays observable).
-    pub worker_restarts: AtomicU64,
     /// Frames rejected for exceeding the configured length bound.
     pub oversized_frames: AtomicU64,
 }
@@ -50,14 +45,19 @@ impl ServeMetrics {
     }
 
     /// Snapshot into the schema-versioned wire frame. The memo gauges,
-    /// per-shard queue gauges and the shed flag live outside this
-    /// struct and are passed in by the server.
+    /// per-shard queue gauges, the shed flag and the supervision
+    /// counters (`panics`/`worker_restarts`, owned by the
+    /// `exec::ExecStats` of the worker pool since the executor
+    /// unification) live outside this struct and are passed in by the
+    /// server — the wire shape is unchanged.
     pub fn frame(
         &self,
         memo_len: u64,
         memo_bytes: u64,
         queue_depths: Vec<u64>,
         shedding: bool,
+        panics: u64,
+        worker_restarts: u64,
     ) -> StatsFrame {
         StatsFrame {
             served: self.served.load(Ordering::Relaxed),
@@ -69,8 +69,8 @@ impl ServeMetrics {
             rate_limited: self.rate_limited.load(Ordering::Relaxed),
             shed: self.shed.load(Ordering::Relaxed),
             deadline_expired: self.deadline_expired.load(Ordering::Relaxed),
-            panics: self.panics.load(Ordering::Relaxed),
-            worker_restarts: self.worker_restarts.load(Ordering::Relaxed),
+            panics,
+            worker_restarts,
             oversized_frames: self.oversized_frames.load(Ordering::Relaxed),
             memo_len,
             memo_bytes,
@@ -94,10 +94,8 @@ mod tests {
         ServeMetrics::bump(&m.rate_limited);
         ServeMetrics::bump(&m.shed);
         ServeMetrics::bump(&m.deadline_expired);
-        ServeMetrics::bump(&m.panics);
-        ServeMetrics::bump(&m.worker_restarts);
         ServeMetrics::bump(&m.oversized_frames);
-        let f = m.frame(3, 4096, vec![0, 2], true);
+        let f = m.frame(3, 4096, vec![0, 2], true, 1, 1);
         assert_eq!(f.served, 2);
         assert_eq!(f.memo_hits, 1);
         assert_eq!(f.memo_misses, 0);

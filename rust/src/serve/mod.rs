@@ -8,22 +8,28 @@
 //! by `report::emit` so the whole machine-readable surface shares one
 //! [`crate::report::emit::SCHEMA_VERSION`] policy).
 //!
-//! Architecture (DESIGN.md §9–§10):
+//! Architecture (DESIGN.md §9–§11):
 //!
-//! * **Shards.** `ServeConfig::shards` long-lived [`Engine`]s, each
-//!   with its own solver coordinator and bounded job queue. Requests
-//!   route by `hash(arch) % shards`, so every model family lands on a
-//!   stable shard and its coordinator batches same-model solver work.
-//!   Built-in machine models are shared process-wide through the `mdb`
-//!   Arc cache, so shards do not duplicate model memory.
-//! * **Supervision.** The shard worker owns its engine and runs every
-//!   analysis under `catch_unwind`: a panic poisons only that request
-//!   (a structured `internal_error` frame whose message is redacted to
-//!   a category — panic payloads are not a wire surface), the engine is
-//!   rebuilt fresh, and `panics`/`worker_restarts` count the event.
-//!   Reply channels are per-request, so a request whose worker died
-//!   mid-flight times out like any other late reply — nothing
-//!   deadlocks on a dead worker.
+//! * **Shards on the executor.** One [`crate::exec::Executor`] with
+//!   `ServeConfig::shards` workers, each owning a long-lived [`Engine`]
+//!   built inside its thread. Requests route by `hash(arch) % shards`
+//!   as a *submit hint*: every model family lands on a stable home
+//!   deque, so same-model solver work batches together and that
+//!   engine's FormIndex/model registry stays hot — but the hint is not
+//!   an assignment. An idle worker steals queued jobs cross-shard
+//!   instead of sitting out a hot-arch burst (the steal counters in
+//!   the exec stats make this observable). Built-in machine models are
+//!   shared process-wide through the `mdb` Arc cache, so shards do not
+//!   duplicate model memory.
+//! * **Supervision** lives in the executor (DESIGN.md §11): every job
+//!   runs under `catch_unwind`; a panic poisons only that request (a
+//!   structured `internal_error` frame whose message is redacted to a
+//!   category — panic payloads are not a wire surface), the worker's
+//!   engine is rebuilt fresh before the error is answered, and the
+//!   executor's `panics`/`worker_restarts` counters (re-exported into
+//!   the wire `stats` frame) count the event. Reply channels are
+//!   per-request, so a request whose worker died mid-flight times out
+//!   like any other late reply — nothing deadlocks on a dead worker.
 //! * **Memoization.** A doubly bounded LRU ([`memo::MemoCache`]) keyed
 //!   by [`AnalysisRequest::fingerprint`] — capped by entries
 //!   (`memo_cap`) and resident bytes (`memo_max_bytes`), so a flood of
@@ -36,17 +42,17 @@
 //!   ([`limits::TokenBucket`], `--max-rps`/`--burst`) and an in-flight
 //!   cap (`--max-inflight`), answered with `rate_limited` frames that
 //!   carry a `retry_after_ms` hint — one greedy client cannot
-//!   monopolize a shard's bounded queue. An `analyze` may carry
+//!   monopolize the bounded queues. An `analyze` may carry
 //!   `deadline_ms`; if it has not reached a worker by then it is
 //!   answered `deadline_exceeded` instead of being analyzed late.
-//! * **Backpressure and shed.** Connection threads `try_send` into the
-//!   target shard's bounded queue; a full queue answers a structured
-//!   `overloaded` frame immediately. Under total saturation (every
-//!   queue slot and worker busy, with hysteresis) the server enters
-//!   shed mode: new `analyze` misses are rejected up front with
-//!   `overloaded`+`shedding:true`, while `stats` and memo hits still
-//!   answer — the degradation ladder trades throughput for
-//!   introspection, never the reverse.
+//! * **Backpressure and shed.** Connection threads `try_submit` into
+//!   the home worker's bounded deque; a full deque answers a structured
+//!   `overloaded` frame immediately (the executor's `Submit::Full`
+//!   contract). Under total saturation (every queue slot and worker
+//!   busy, with hysteresis) the server enters shed mode: new `analyze`
+//!   misses are rejected up front with `overloaded`+`shedding:true`,
+//!   while `stats` and memo hits still answer — the degradation ladder
+//!   trades throughput for introspection, never the reverse.
 //! * **Fault injection.** `--chaos` arms a seeded deterministic
 //!   schedule ([`faults::FaultPlan`]) that injects worker panics,
 //!   reply delays and queue stalls at the dispatch choke point, so
@@ -54,7 +60,7 @@
 //!   chaos smoke leg) rather than theoretical.
 //! * **Timeouts.** Each queued request waits at most
 //!   `ServeConfig::reply_timeout` (the same knob as the coordinator's
-//!   solver reply timeout) for its shard worker; expiry produces a
+//!   solver reply timeout) for a worker; expiry produces a
 //!   `solver_timeout` error frame. Reply channels are fresh per request
 //!   (not pooled like the coordinator's): a timed-out connection drops
 //!   its receiver and the worker's late `try_send` fails harmlessly,
@@ -67,16 +73,18 @@
 //! * **Drain.** Wire `shutdown` (or [`Server::shutdown`]) flips a flag
 //!   and wakes the accept loop with a self-connection. [`Server::join`]
 //!   then joins the accept thread, joins every connection thread
-//!   (in-flight replies complete first — the shard workers are still
-//!   alive), closes the shard queues, and joins the workers, which
-//!   drain whatever was already queued before exiting. Nothing accepted
-//!   is dropped on the floor.
+//!   (in-flight replies complete first — the workers are still alive),
+//!   then closes and joins the executor, whose workers drain whatever
+//!   was already queued before exiting. Nothing accepted is dropped on
+//!   the floor.
 //! * **Introspection.** The wire `stats` op snapshots
 //!   [`metrics::ServeMetrics`] (served / memo hits / errors /
-//!   overloaded / rate_limited / shed / deadline_expired / panics /
-//!   worker_restarts / oversized_frames), the memo entry and byte
-//!   gauges, the per-shard queue gauges and the shed flag into a
-//!   schema-versioned frame.
+//!   overloaded / rate_limited / shed / deadline_expired /
+//!   oversized_frames) plus the executor's supervision counters
+//!   (panics / worker_restarts), the memo entry and byte gauges, the
+//!   per-worker home-queue gauges and the shed flag into a
+//!   schema-versioned frame — byte-identical keys to the pre-executor
+//!   shape.
 
 pub mod faults;
 pub mod json;
@@ -85,18 +93,17 @@ pub mod memo;
 pub mod metrics;
 pub mod wire;
 
-use std::any::Any;
 use std::io::{self, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
-use std::panic::{self, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::mpsc::{self, Receiver, SyncSender, TrySendError};
+use std::sync::mpsc;
 use std::sync::{Arc, Mutex, MutexGuard};
 use std::thread::{self, JoinHandle};
 use std::time::{Duration, Instant};
 
 use crate::api::{AnalysisRequest, Backend, Engine, Format};
 use crate::coordinator::CoordinatorConfig;
+use crate::exec::{self, Executor};
 use crate::report::emit::{bye_frame, error_frame, ok_frame, overloaded_frame, rate_limited_frame};
 
 use faults::{Fault, FaultPlan};
@@ -116,7 +123,7 @@ pub struct ServeConfig {
     /// Listen address (`host:port`; port 0 picks an ephemeral port —
     /// read it back with [`Server::local_addr`]).
     pub addr: String,
-    /// Number of engine shards (≥ 1).
+    /// Number of engine shards — executor workers (≥ 1).
     pub shards: usize,
     /// Cross-request memo capacity (entries; 0 disables memoization).
     pub memo_cap: usize,
@@ -183,27 +190,17 @@ impl Default for ServeConfig {
     }
 }
 
-/// One engine shard's queue handle and gauge. The engine itself lives
-/// on the worker thread's stack so supervision can rebuild it after a
-/// caught panic without synchronizing with readers.
-struct Shard {
-    /// `None` once the server is draining; taken by [`Server::join`]
-    /// so the worker's `recv` loop ends after the queue empties.
-    tx: Mutex<Option<SyncSender<Job>>>,
-    /// Jobs accepted but not yet fully processed (queued + in-flight).
-    queued: AtomicU64,
-}
-
-/// State shared by the accept loop, connection threads and shard
-/// workers.
+/// State shared by the accept loop, connection threads and executor
+/// jobs.
 struct Shared {
-    shards: Vec<Shard>,
+    /// The shard worker pool: one worker per shard, each owning an
+    /// [`Engine`] built (and rebuilt after panics) inside its thread.
+    exec: Executor<Engine>,
     metrics: ServeMetrics,
     memo: Mutex<MemoCache>,
     shutdown: AtomicBool,
     conns: Mutex<Vec<JoinHandle<()>>>,
     reply_timeout: Duration,
-    backend: Backend,
     max_rps: f64,
     burst: u32,
     max_inflight: u64,
@@ -239,7 +236,7 @@ impl Shared {
     /// the request path (no dedicated sampler thread) — under the loads
     /// where shedding matters, requests arrive constantly.
     fn shed_state(&self) -> bool {
-        let total: u64 = self.shards.iter().map(|s| s.queued.load(Ordering::Relaxed)).sum();
+        let total: u64 = self.exec.queue_depths().iter().sum();
         if self.shedding.load(Ordering::Relaxed) {
             if total <= self.shed_low {
                 self.shedding.store(false, Ordering::Relaxed);
@@ -256,31 +253,6 @@ impl Shared {
     }
 }
 
-/// Build a shard engine. Called at worker start and again after every
-/// caught panic — a restarted worker must not inherit state a panic
-/// may have corrupted.
-fn fresh_engine(shared: &Shared) -> Engine {
-    Engine::builder().backend(shared.backend).reply_timeout(shared.reply_timeout).build()
-}
-
-/// A shard job. Replies travel over a fresh 1-slot channel per request
-/// so timeouts cannot leak a reply into a later request.
-enum Job {
-    Analyze {
-        req: AnalysisRequest,
-        key: u64,
-        reply: SyncSender<String>,
-        /// Queue-time budget; expired at dispatch → `deadline_exceeded`.
-        deadline: Option<Instant>,
-        /// The submitting connection's in-flight gauge; the worker
-        /// drops it when the job finishes, however it finishes.
-        inflight: Arc<AtomicU64>,
-    },
-    Sleep { ms: u64, reply: SyncSender<String> },
-    /// Test-ops only: panic inside the worker to exercise supervision.
-    Panic { reply: SyncSender<String> },
-}
-
 /// The running service. Bind with [`Server::bind`], stop with a wire
 /// `shutdown` frame or [`Server::shutdown`], and wait for the drain
 /// with [`Server::join`].
@@ -288,22 +260,31 @@ pub struct Server {
     shared: Arc<Shared>,
     addr: SocketAddr,
     accept: Option<JoinHandle<()>>,
-    workers: Vec<JoinHandle<()>>,
 }
 
 impl Server {
-    /// Bind the listener and start the accept loop and shard workers.
+    /// Bind the listener and start the accept loop and the shard worker
+    /// pool.
     pub fn bind(cfg: ServeConfig) -> io::Result<Server> {
         let listener = TcpListener::bind(&cfg.addr)?;
         let addr = listener.local_addr()?;
         let n = cfg.shards.max(1);
-        let mut rxs: Vec<Receiver<Job>> = Vec::with_capacity(n);
-        let mut shards: Vec<Shard> = Vec::with_capacity(n);
-        for _ in 0..n {
-            let (tx, rx) = mpsc::sync_channel(cfg.queue_depth.max(1));
-            rxs.push(rx);
-            shards.push(Shard { tx: Mutex::new(Some(tx)), queued: AtomicU64::new(0) });
-        }
+        // The factory captures plain values, not `Shared` (which owns
+        // the executor): each worker builds its engine on its own
+        // thread, at start and again after every caught panic.
+        let backend = cfg.backend;
+        let reply_timeout = cfg.reply_timeout;
+        let pool = Executor::new(
+            exec::ExecConfig {
+                workers: n,
+                queue_depth: cfg.queue_depth.max(1),
+                name: "osaca-serve-shard".to_string(),
+                ..Default::default()
+            },
+            move |_shard| {
+                Engine::builder().backend(backend).reply_timeout(reply_timeout).build()
+            },
+        );
         // Auto shed thresholds: the gauge tops out at shards ×
         // (queue_depth + 1) — every slot queued plus one in flight per
         // worker — so the default only sheds at provable saturation
@@ -314,13 +295,12 @@ impl Server {
         let shed_low = if cfg.shed_low > 0 { cfg.shed_low as u64 } else { gauge_cap / 4 };
         let shed_low = shed_low.min(shed_high.saturating_sub(1));
         let shared = Arc::new(Shared {
-            shards,
+            exec: pool,
             metrics: ServeMetrics::default(),
             memo: Mutex::new(MemoCache::new(cfg.memo_cap, cfg.memo_max_bytes)),
             shutdown: AtomicBool::new(false),
             conns: Mutex::new(Vec::new()),
             reply_timeout: cfg.reply_timeout,
-            backend: cfg.backend,
             max_rps: cfg.max_rps,
             burst: cfg.burst,
             max_inflight: cfg.max_inflight as u64,
@@ -332,17 +312,6 @@ impl Server {
             test_ops: cfg.test_ops,
             addr,
         });
-        let workers = rxs
-            .into_iter()
-            .enumerate()
-            .map(|(i, rx)| {
-                let s = shared.clone();
-                thread::Builder::new()
-                    .name(format!("osaca-serve-shard{i}"))
-                    .spawn(move || shard_worker(&s, i, rx))
-                    .expect("spawn shard worker")
-            })
-            .collect();
         let accept = {
             let s = shared.clone();
             thread::Builder::new()
@@ -350,7 +319,7 @@ impl Server {
                 .spawn(move || accept_loop(&s, listener))
                 .expect("spawn accept loop")
         };
-        Ok(Server { shared, addr, accept: Some(accept), workers })
+        Ok(Server { shared, addr, accept: Some(accept) })
     }
 
     /// The bound address (resolves port 0).
@@ -361,6 +330,18 @@ impl Server {
     /// Programmatic equivalent of the wire `shutdown` op.
     pub fn shutdown(&self) {
         self.shared.initiate_shutdown();
+    }
+
+    /// Executor-level counters of the shard worker pool (queued /
+    /// in-flight / steals / panics / worker restarts).
+    pub fn exec_stats(&self) -> &exec::ExecStats {
+        self.shared.exec.stats()
+    }
+
+    /// Per-worker counters of the shard worker pool (jobs executed,
+    /// home-queue gauge).
+    pub fn worker_stats(&self) -> &[exec::WorkerStats] {
+        self.shared.exec.worker_stats()
     }
 
     /// Block until the server has shut down and fully drained: accept
@@ -388,12 +369,8 @@ impl Server {
                 let _ = c.join();
             }
         }
-        for shard in &self.shared.shards {
-            shard.tx.lock().expect("shard tx").take();
-        }
-        for w in self.workers.drain(..) {
-            let _ = w.join();
-        }
+        self.shared.exec.close();
+        self.shared.exec.join();
     }
 }
 
@@ -408,8 +385,9 @@ impl Drop for Server {
 }
 
 /// Stable shard routing: FNV-1a over the lower-cased arch name. Every
-/// model family maps to one shard, so its solver work batches together
-/// and its engine's model registry stays hot.
+/// model family maps to one home worker, so its solver work batches
+/// together and its engine's model registry stays hot — idle workers
+/// still steal across shards under imbalance.
 fn shard_index(arch: &str, shards: usize) -> usize {
     let mut h: u64 = 0xcbf2_9ce4_8422_2325;
     for b in arch.bytes() {
@@ -440,35 +418,6 @@ fn accept_loop(shared: &Arc<Shared>, listener: TcpListener) {
                     return;
                 }
             }
-        }
-    }
-}
-
-/// Outcome of a non-blocking queue submission.
-enum Submit {
-    Queued,
-    Full(u64),
-    Closed,
-}
-
-fn submit(shared: &Shared, idx: usize, job: Job) -> Submit {
-    let shard = &shared.shards[idx];
-    let guard = shard.tx.lock().expect("shard tx");
-    let Some(tx) = guard.as_ref() else {
-        return Submit::Closed;
-    };
-    // Gauge counts queued + in-flight: incremented here, decremented by
-    // the worker after it finishes the job (rolled back on rejection).
-    shard.queued.fetch_add(1, Ordering::Relaxed);
-    match tx.try_send(job) {
-        Ok(()) => Submit::Queued,
-        Err(TrySendError::Full(_)) => {
-            let depth = shard.queued.fetch_sub(1, Ordering::Relaxed) - 1;
-            Submit::Full(depth)
-        }
-        Err(TrySendError::Disconnected(_)) => {
-            shard.queued.fetch_sub(1, Ordering::Relaxed);
-            Submit::Closed
         }
     }
 }
@@ -521,9 +470,19 @@ fn handle_conn(shared: Arc<Shared>, mut stream: TcpStream) {
                     let memo = shared.lock_memo();
                     (memo.len() as u64, memo.bytes() as u64)
                 };
-                let depths =
-                    shared.shards.iter().map(|s| s.queued.load(Ordering::Relaxed)).collect();
-                shared.metrics.frame(memo_len, memo_bytes, depths, shared.shed_state()).render()
+                let depths = shared.exec.queue_depths();
+                let es = shared.exec.stats();
+                shared
+                    .metrics
+                    .frame(
+                        memo_len,
+                        memo_bytes,
+                        depths,
+                        shared.shed_state(),
+                        es.panics.load(Ordering::Relaxed),
+                        es.worker_restarts.load(Ordering::Relaxed),
+                    )
+                    .render()
             }
             Ok(WireRequest::Shutdown) => {
                 let _ = write_frame(&mut stream, &bye_frame());
@@ -532,24 +491,42 @@ fn handle_conn(shared: Arc<Shared>, mut stream: TcpStream) {
             }
             Ok(WireRequest::Sleep { ms }) => {
                 let (rtx, rrx) = mpsc::sync_channel(1);
-                match submit(&shared, 0, Job::Sleep { ms, reply: rtx }) {
-                    Submit::Queued => rrx
+                let job = exec::Job::new(move |_engine: &mut Engine| {
+                    thread::sleep(Duration::from_millis(ms));
+                    let _ = rtx.try_send(ok_frame(Format::Text, false, "slept"));
+                });
+                match shared.exec.try_submit(Some(0), job) {
+                    exec::Submit::Queued => rrx
                         .recv_timeout(shared.reply_timeout + Duration::from_millis(ms))
                         .unwrap_or_else(|_| {
                             error_frame("solver_timeout", "sleep reply timed out")
                         }),
-                    Submit::Full(depth) => overloaded_frame(0, depth, false),
-                    Submit::Closed => error_frame("service_unavailable", "server is draining"),
+                    exec::Submit::Full(depth) => overloaded_frame(0, depth, false),
+                    exec::Submit::Closed => {
+                        error_frame("service_unavailable", "server is draining")
+                    }
                 }
             }
             Ok(WireRequest::Panic) => {
                 let (rtx, rrx) = mpsc::sync_channel(1);
-                match submit(&shared, 0, Job::Panic { reply: rtx }) {
-                    Submit::Queued => rrx.recv_timeout(shared.reply_timeout).unwrap_or_else(|_| {
-                        error_frame("solver_timeout", "panic reply timed out")
-                    }),
-                    Submit::Full(depth) => overloaded_frame(0, depth, false),
-                    Submit::Closed => error_frame("service_unavailable", "server is draining"),
+                let s = shared.clone();
+                let job = exec::Job::new(|_engine: &mut Engine| {
+                    panic!("test-op: injected worker panic");
+                })
+                .on_panic(move |category| {
+                    ServeMetrics::bump(&s.metrics.errors);
+                    let _ = rtx.try_send(error_frame("internal_error", category));
+                });
+                match shared.exec.try_submit(Some(0), job) {
+                    exec::Submit::Queued => {
+                        rrx.recv_timeout(shared.reply_timeout).unwrap_or_else(|_| {
+                            error_frame("solver_timeout", "panic reply timed out")
+                        })
+                    }
+                    exec::Submit::Full(depth) => overloaded_frame(0, depth, false),
+                    exec::Submit::Closed => {
+                        error_frame("service_unavailable", "server is draining")
+                    }
                 }
             }
             Ok(WireRequest::Analyze { req, deadline_ms }) => {
@@ -569,7 +546,7 @@ fn handle_conn(shared: Arc<Shared>, mut stream: TcpStream) {
 /// answers its own structured frame; only the last rung costs a queue
 /// slot.
 fn analyze_op(
-    shared: &Shared,
+    shared: &Arc<Shared>,
     bucket: &mut TokenBucket,
     inflight: &Arc<AtomicU64>,
     req: AnalysisRequest,
@@ -583,7 +560,7 @@ fn analyze_op(
         ServeMetrics::bump(&shared.metrics.rate_limited);
         return rate_limited_frame("inflight", RETRY_INFLIGHT_MS);
     }
-    let idx = shard_index(&req.arch, shared.shards.len());
+    let idx = shard_index(&req.arch, shared.exec.workers());
     let key = req.fingerprint();
     if shared.shed_state() {
         // Degradation ladder: a saturated server still answers what it
@@ -594,18 +571,55 @@ fn analyze_op(
         }
         ServeMetrics::bump(&shared.metrics.shed);
         ServeMetrics::bump(&shared.metrics.overloaded);
-        let depth = shared.shards[idx].queued.load(Ordering::Relaxed);
+        let depth = shared.exec.queue_depths()[idx];
         return overloaded_frame(idx, depth, true);
     }
     let deadline = deadline_ms.map(|ms| Instant::now() + Duration::from_millis(ms));
+    // Reply channels are fresh per request so a timed-out connection's
+    // late reply dies in try_send instead of leaking forward.
     let (rtx, rrx) = mpsc::sync_channel(1);
     inflight.fetch_add(1, Ordering::Relaxed);
-    let job = Job::Analyze { req, key, reply: rtx, deadline, inflight: inflight.clone() };
-    match submit(shared, idx, job) {
-        Submit::Queued => match rrx.recv_timeout(shared.reply_timeout) {
+    let s = shared.clone();
+    let run_reply = rtx.clone();
+    let run_inflight = inflight.clone();
+    let job = exec::Job::new(move |engine: &mut Engine| {
+        let frame = if deadline.is_some_and(|d| Instant::now() >= d) {
+            ServeMetrics::bump(&s.metrics.deadline_expired);
+            ServeMetrics::bump(&s.metrics.errors);
+            error_frame("deadline_exceeded", "request deadline expired before dispatch")
+        } else {
+            let fault = s.chaos.as_ref().and_then(FaultPlan::next_dispatch);
+            if let Some(Fault::StallQueue { ms }) = fault {
+                thread::sleep(Duration::from_millis(ms));
+            }
+            if matches!(fault, Some(Fault::Panic)) {
+                panic!("chaos: injected worker panic");
+            }
+            let frame = analyze_job(&s, engine, req, key);
+            if let Some(Fault::DelayReply { ms }) = fault {
+                thread::sleep(Duration::from_millis(ms));
+            }
+            frame
+        };
+        // A timed-out connection dropped its receiver; the failed send
+        // is the intended outcome then.
+        let _ = run_reply.try_send(frame);
+        run_inflight.fetch_sub(1, Ordering::Relaxed);
+    });
+    let s = shared.clone();
+    let panic_inflight = inflight.clone();
+    let job = job.on_panic(move |category| {
+        // The executor already counted the panic and rebuilt the
+        // engine; this callback only owns the wire answer.
+        ServeMetrics::bump(&s.metrics.errors);
+        let _ = rtx.try_send(error_frame("internal_error", category));
+        panic_inflight.fetch_sub(1, Ordering::Relaxed);
+    });
+    match shared.exec.try_submit(Some(idx), job) {
+        exec::Submit::Queued => match rrx.recv_timeout(shared.reply_timeout) {
             Ok(frame) => frame,
             Err(_) => {
-                // The worker still owns the job (and will decrement the
+                // A worker still owns the job (and will decrement the
                 // in-flight gauge when it finishes); only the reply is
                 // abandoned.
                 ServeMetrics::bump(&shared.metrics.errors);
@@ -615,12 +629,12 @@ fn analyze_op(
                 )
             }
         },
-        Submit::Full(depth) => {
+        exec::Submit::Full(depth) => {
             inflight.fetch_sub(1, Ordering::Relaxed);
             ServeMetrics::bump(&shared.metrics.overloaded);
             overloaded_frame(idx, depth, false)
         }
-        Submit::Closed => {
+        exec::Submit::Closed => {
             inflight.fetch_sub(1, Ordering::Relaxed);
             ServeMetrics::bump(&shared.metrics.errors);
             error_frame("service_unavailable", "server is draining")
@@ -708,90 +722,6 @@ fn write_frame(stream: &mut TcpStream, frame: &str) -> bool {
     stream.write_all(frame.as_bytes()).and_then(|()| stream.write_all(b"\n")).is_ok()
 }
 
-fn shard_worker(shared: &Shared, index: usize, rx: Receiver<Job>) {
-    // The worker owns its engine so supervision can rebuild it after a
-    // caught panic without any shared-state coordination.
-    let mut engine = fresh_engine(shared);
-    // `recv` fails once the server takes the shard's sender; every job
-    // queued before that is still delivered first, which is exactly the
-    // graceful-drain contract.
-    while let Ok(job) = rx.recv() {
-        match job {
-            Job::Analyze { req, key, reply, deadline, inflight } => {
-                let frame = if deadline.is_some_and(|d| Instant::now() >= d) {
-                    ServeMetrics::bump(&shared.metrics.deadline_expired);
-                    ServeMetrics::bump(&shared.metrics.errors);
-                    error_frame("deadline_exceeded", "request deadline expired before dispatch")
-                } else {
-                    let fault = shared.chaos.as_ref().and_then(FaultPlan::next_dispatch);
-                    if let Some(Fault::StallQueue { ms }) = fault {
-                        thread::sleep(Duration::from_millis(ms));
-                    }
-                    let outcome = panic::catch_unwind(AssertUnwindSafe(|| {
-                        if matches!(fault, Some(Fault::Panic)) {
-                            panic!("chaos: injected worker panic");
-                        }
-                        analyze_job(shared, &engine, req, key)
-                    }));
-                    match outcome {
-                        Ok(frame) => {
-                            if let Some(Fault::DelayReply { ms }) = fault {
-                                thread::sleep(Duration::from_millis(ms));
-                            }
-                            frame
-                        }
-                        Err(payload) => recover(shared, &mut engine, payload.as_ref()),
-                    }
-                };
-                // A timed-out connection dropped its receiver; the
-                // failed send is the intended outcome then.
-                let _ = reply.try_send(frame);
-                inflight.fetch_sub(1, Ordering::Relaxed);
-            }
-            Job::Sleep { ms, reply } => {
-                thread::sleep(Duration::from_millis(ms));
-                let _ = reply.try_send(ok_frame(Format::Text, false, "slept"));
-            }
-            Job::Panic { reply } => {
-                let outcome: Result<String, Box<dyn Any + Send>> =
-                    panic::catch_unwind(|| panic!("test-op: injected worker panic"));
-                let frame = match outcome {
-                    Ok(frame) => frame,
-                    Err(payload) => recover(shared, &mut engine, payload.as_ref()),
-                };
-                let _ = reply.try_send(frame);
-            }
-        }
-        shared.shards[index].queued.fetch_sub(1, Ordering::Relaxed);
-    }
-}
-
-/// Supervision: count the panic, rebuild the engine, answer a frame
-/// whose message is a redacted category — panic payloads can carry
-/// internal state and are not a wire surface.
-fn recover(shared: &Shared, engine: &mut Engine, payload: &(dyn Any + Send)) -> String {
-    ServeMetrics::bump(&shared.metrics.panics);
-    ServeMetrics::bump(&shared.metrics.errors);
-    *engine = fresh_engine(shared);
-    ServeMetrics::bump(&shared.metrics.worker_restarts);
-    error_frame("internal_error", panic_category(payload))
-}
-
-/// Redact a panic payload to a stable category. The injected classes
-/// keep distinct names so tests can tell supervision paths apart; any
-/// genuine panic is just "worker_panic".
-fn panic_category(payload: &(dyn Any + Send)) -> &'static str {
-    let msg = payload
-        .downcast_ref::<&str>()
-        .copied()
-        .or_else(|| payload.downcast_ref::<String>().map(String::as_str));
-    match msg {
-        Some(m) if m.starts_with("chaos:") => "injected_chaos_panic",
-        Some(m) if m.starts_with("test-op:") => "injected_test_panic",
-        _ => "worker_panic",
-    }
-}
-
 /// Render an answer from the memo, if present: bump the hit counter,
 /// clone the cached report, patch the presentation-only fields from
 /// this request, render. Used both on the worker path and directly on
@@ -870,18 +800,5 @@ mod tests {
         assert_eq!(c.shed_low, 0, "0 = auto (quarter capacity)");
         assert!(!c.test_ops);
         assert!(c.chaos_seed.is_none());
-    }
-
-    #[test]
-    fn panic_categories_are_redacted() {
-        let boxed: Box<dyn Any + Send> = Box::new("chaos: injected worker panic");
-        assert_eq!(panic_category(boxed.as_ref()), "injected_chaos_panic");
-        let boxed: Box<dyn Any + Send> = Box::new("test-op: injected worker panic".to_string());
-        assert_eq!(panic_category(boxed.as_ref()), "injected_test_panic");
-        let boxed: Box<dyn Any + Send> =
-            Box::new("index out of bounds: secret internal detail".to_string());
-        assert_eq!(panic_category(boxed.as_ref()), "worker_panic");
-        let boxed: Box<dyn Any + Send> = Box::new(42u32);
-        assert_eq!(panic_category(boxed.as_ref()), "worker_panic");
     }
 }

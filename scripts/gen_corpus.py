@@ -1,0 +1,154 @@
+#!/usr/bin/env python3
+"""Synthesize a corpus of .s basic blocks by mutating the workload fixtures.
+
+Reads every fixture under --workloads for the selected ISA, strips
+comments, labels, branches and IACA/OSACA marker pairs down to a bare
+straightline basic block (BHive-style: no markers, no back-edge — the
+analyzer's whole-file-as-kernel fallback picks it up), then emits
+--count mutated variants:
+
+  * register rename — a seeded permutation of the ISA's vector
+    register file, applied consistently within the block;
+  * reorder        — a seeded shuffle of the instruction lines;
+  * unroll         — the block body repeated 1/2/4 times.
+
+Everything is driven by one random.Random(--seed), so the same seed
+and fixture set produce a byte-identical corpus (CI relies on this to
+diff two `osaca corpus` runs).
+
+Usage:
+  python3 scripts/gen_corpus.py --out /tmp/corpus --count 60 --seed 0
+  python3 scripts/gen_corpus.py --out /tmp/corpus --tar /tmp/corpus.tar
+"""
+
+import argparse
+import io
+import pathlib
+import random
+import re
+import sys
+import tarfile
+
+# Marker prologue/epilogue lines (x86, aarch64 and riscv flavors) plus
+# the encoded-nop .byte lines that accompany them.
+MARKER_RE = re.compile(
+    r"^\s*(\.byte\b|movl\s+\$(111|222)\b|mov\s+x1,\s*#(111|222)\b|li\s+t0,\s*(111|222)\b)"
+)
+LABEL_RE = re.compile(r"^\s*[.\w$]+:\s*$")
+BRANCH_RE = {
+    "x86": re.compile(r"^\s*(j[a-z]+)\s"),
+    "aarch64": re.compile(r"^\s*(b\.?[a-z]*|cbn?z|tbn?z)\s"),
+    "riscv": re.compile(r"^\s*(beq|bne|blt|bge|bltu|bgeu|j|jal|jalr)\s"),
+}
+COMMENT_PREFIXES = ("#", "//", ";")
+
+# Vector register families whose indices a rename permutes. GP/pointer
+# registers are left alone: a textual rename could alias a base pointer
+# onto the stack pointer or a loop counter.
+RENAME = {
+    "x86": (re.compile(r"%(ymm|xmm)(\d+)\b"), 16, "%{family}{idx}"),
+    "aarch64": (re.compile(r"\b(v|q)(\d+)\b"), 32, "{family}{idx}"),
+    "riscv": (re.compile(r"\b(fa)(\d+)\b"), 8, "{family}{idx}"),
+}
+
+
+def isa_of(path: pathlib.Path) -> str:
+    name = path.name
+    if "rv64" in name:
+        return "riscv"
+    if "tx2" in name:
+        return "aarch64"
+    return "x86"
+
+
+def to_basic_block(text: str, isa: str) -> list[str]:
+    """Strip a fixture to its bare instruction lines."""
+    out = []
+    for raw in text.splitlines():
+        line = raw.strip()
+        if not line or line.startswith(COMMENT_PREFIXES):
+            continue
+        if MARKER_RE.match(line) or LABEL_RE.match(line):
+            continue
+        if BRANCH_RE[isa].match(line) or line == "ret":
+            continue
+        out.append(line)
+    return out
+
+
+def rename_registers(lines: list[str], isa: str, rng: random.Random) -> list[str]:
+    pattern, nregs, template = RENAME[isa]
+    perm = list(range(nregs))
+    rng.shuffle(perm)
+
+    def sub(m: re.Match) -> str:
+        return template.format(family=m.group(1), idx=perm[int(m.group(2))])
+
+    return [pattern.sub(sub, l) for l in lines]
+
+
+def mutate(lines: list[str], isa: str, rng: random.Random) -> list[str]:
+    body = rename_registers(lines, isa, rng)
+    if rng.random() < 0.5:
+        rng.shuffle(body)
+    unroll = rng.choice([1, 1, 2, 4])
+    return body * unroll
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", required=True, help="output directory for block_NNNN.s files")
+    ap.add_argument("--count", type=int, default=60)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument(
+        "--isa",
+        default="x86",
+        choices=["x86", "aarch64", "riscv", "all"],
+        help="restrict source fixtures to one ISA (a corpus is scored "
+        "against one machine model, so mixing ISAs yields error rows)",
+    )
+    ap.add_argument("--workloads", default="workloads", help="fixture directory")
+    ap.add_argument("--tar", help="also pack the corpus into this ustar archive")
+    args = ap.parse_args()
+
+    fixtures = sorted(pathlib.Path(args.workloads).rglob("*.s"))
+    sources = []
+    for f in fixtures:
+        isa = isa_of(f)
+        if args.isa != "all" and isa != args.isa:
+            continue
+        block = to_basic_block(f.read_text(), isa)
+        if block:
+            sources.append((isa, block))
+    if not sources:
+        print(f"no {args.isa} fixtures under {args.workloads}", file=sys.stderr)
+        return 1
+
+    out = pathlib.Path(args.out)
+    out.mkdir(parents=True, exist_ok=True)
+    rng = random.Random(args.seed)
+    names = []
+    for i in range(args.count):
+        isa, block = sources[i % len(sources)]
+        lines = mutate(block, isa, rng)
+        name = f"block_{i:04d}.s"
+        (out / name).write_text("\n".join(lines) + "\n")
+        names.append(name)
+
+    if args.tar:
+        # Fixed metadata so the archive is byte-stable across runs.
+        with tarfile.open(args.tar, "w", format=tarfile.USTAR_FORMAT) as tf:
+            for name in sorted(names):
+                info = tarfile.TarInfo(name=name)
+                data = (out / name).read_bytes()
+                info.size = len(data)
+                info.mtime = 0
+                info.mode = 0o644
+                tf.addfile(info, fileobj=io.BytesIO(data))
+
+    print(f"wrote {len(names)} blocks to {out}" + (f" and {args.tar}" if args.tar else ""))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
