@@ -1,7 +1,7 @@
 #!/usr/bin/env bash
 # CI entry point: tier-1 verification plus style, lint and perf gates.
 #
-# Usage: ./ci.sh [--quick|--bench-smoke|--isa-smoke|--serve-smoke|--chaos-smoke|--corpus-smoke]
+# Usage: ./ci.sh [--quick|--bench-smoke|--isa-smoke|--serve-smoke|--chaos-smoke|--corpus-smoke|--mem-smoke]
 #   --quick        tier-1 only (skip fmt/clippy, the per-ISA sweep and
 #                  the bench smoke run)
 #   --bench-smoke  only the shrunken hot-path bench + baseline gate
@@ -13,8 +13,29 @@
 #   --corpus-smoke only the corpus pipeline: gen_corpus.py synthesizes
 #                  blocks, `osaca corpus` scores them, and the JSON
 #                  scorecard must validate and reproduce byte-for-byte
+#   --mem-smoke    only the cache-aware working-set sweep on the
+#                  release binary: predictions must be monotone
+#                  non-decreasing in footprint and the L1-resident
+#                  point must equal the infinite-L1 prediction
 set -euo pipefail
 cd "$(dirname "$0")"
+
+# Legs that need python3 call this first. On a dev box a missing
+# interpreter downgrades the leg to a loud skip (return 1 so the
+# caller can bail out of its own body); on a CI runner it is a hard
+# failure — a gate that silently skips on the runners is no gate.
+require_python3() {
+    local leg="$1"
+    if command -v python3 >/dev/null 2>&1; then
+        return 0
+    fi
+    if [[ "${CI:-}" == "true" ]]; then
+        echo "$leg: FAILED — python3 unavailable in CI"
+        exit 1
+    fi
+    echo "$leg: WARNING — python3 unavailable, leg skipped"
+    return 1
+}
 
 bench_smoke() {
     echo "== perf: hotpath bench (smoke) =="
@@ -26,12 +47,11 @@ bench_smoke() {
     # committed. See scripts/check_bench_baseline.py. The serving
     # cases (steady-state req/s and the load-shed rejection path) must
     # exist in the fresh run regardless — a silently dropped serving
-    # bench must not read as "no regression".
-    if command -v python3 >/dev/null 2>&1; then
-        OSACA_BENCH_REQUIRE=serve/req_s,serve/shed_latency,corpus/blocks_per_s,exec/steal_overhead \
+    # bench must not read as "no regression" — and so must the two
+    # cache-aware simulator cases.
+    if require_python3 bench-baseline; then
+        OSACA_BENCH_REQUIRE=serve/req_s,serve/shed_latency,corpus/blocks_per_s,exec/steal_overhead,sim/mem_l1_resident,sim/mem_sweep \
             python3 scripts/check_bench_baseline.py BENCH_hotpath.json "$fresh"
-    else
-        echo "bench-baseline: WARNING — python3 unavailable, comparison skipped"
     fi
 }
 
@@ -43,10 +63,7 @@ bench_smoke() {
 # binary + a foreign-language client agree on the wire contract.
 serve_smoke() {
     echo "== serve smoke: live osaca serve session =="
-    if ! command -v python3 >/dev/null 2>&1; then
-        echo "serve-smoke: WARNING — python3 unavailable, leg skipped"
-        return 0
-    fi
+    require_python3 serve-smoke || return 0
     cargo build --release
     local bin=./target/release/osaca
     local log="${TMPDIR:-/tmp}/osaca-serve-smoke.log"
@@ -98,10 +115,7 @@ serve_smoke() {
 # shipped binary, not just in-process.
 chaos_smoke() {
     echo "== chaos smoke: seeded fault injection against the live binary =="
-    if ! command -v python3 >/dev/null 2>&1; then
-        echo "chaos-smoke: WARNING — python3 unavailable, leg skipped"
-        return 0
-    fi
+    require_python3 chaos-smoke || return 0
     cargo build --release
     local bin=./target/release/osaca
     local log="${TMPDIR:-/tmp}/osaca-chaos-smoke.log"
@@ -156,10 +170,7 @@ chaos_smoke() {
 # path at ~0.
 corpus_smoke() {
     echo "== corpus smoke: gen_corpus.py → osaca corpus scorecard =="
-    if ! command -v python3 >/dev/null 2>&1; then
-        echo "corpus-smoke: WARNING — python3 unavailable, leg skipped"
-        return 0
-    fi
+    require_python3 corpus-smoke || return 0
     cargo build --release
     local bin=./target/release/osaca
     local dir="${TMPDIR:-/tmp}/osaca-corpus-smoke"
@@ -182,7 +193,7 @@ corpus_smoke() {
     python3 - "$dir/run_a.json" "$dir/measured.csv" <<'EOF'
 import json, sys
 card = json.load(open(sys.argv[1]))
-assert card["schema_version"] == 3, card["schema_version"]
+assert card["schema_version"] == 4, card["schema_version"]
 assert card["kind"] == "corpus_scorecard", card["kind"]
 assert card["blocks"] == 60, card["blocks"]
 assert len(card["scores"]) == 60
@@ -207,6 +218,41 @@ EOF
     echo "corpus-smoke: OK"
 }
 
+# Memory-model smoke: run the cache-aware working-set sweep on the
+# release binary and gate the two invariants the opt-in mode promises
+# (DESIGN.md §12). Predictions must be monotone non-decreasing in
+# footprint — a larger working set can never get faster — and the
+# L1-resident point must equal the infinite-L1 prediction exactly,
+# because that equality is what keeps every paper-pinned table valid
+# with the feature merged. The JSON must also survive an independent
+# parser, like every other emitter leg.
+mem_smoke() {
+    echo "== mem smoke: cache-aware working-set sweep =="
+    require_python3 mem-smoke || return 0
+    cargo build --release
+    local bin=./target/release/osaca
+    local out="${TMPDIR:-/tmp}/osaca-mem-smoke.json"
+    "$bin" mem-sweep --arch skl --format json >"$out"
+    python3 -m json.tool "$out" >/dev/null
+    python3 - "$out" <<'EOF'
+import json, sys
+card = json.load(open(sys.argv[1]))
+assert card["schema_version"] == 4, card["schema_version"]
+assert card["kind"] == "mem_sweep", card["kind"]
+pts = card["points"]
+assert len(pts) >= 3, pts
+cys = [p["cy_per_asm_iter"] for p in pts]
+assert cys == sorted(cys), f"sweep not monotone non-decreasing: {cys}"
+# The smallest default size (16 KiB) is L1-resident: the cache-aware
+# prediction must collapse to the infinite-L1 one, bit for bit.
+assert pts[0]["cy_per_asm_iter"] == pts[0]["infinite_l1_cy"], pts[0]
+assert pts[0]["level"] == "l1", pts[0]
+# And the sweep must actually leave L1: at least one memory-bound point.
+assert any(p["bound"] == "memory" for p in pts), cys
+EOF
+    echo "mem-smoke: OK"
+}
+
 # Cross-ISA regression gate: run the CLI analyze path (parse + marker
 # extraction + resolve + throughput + critpath) over every fixture in
 # workloads/ against every ISA-matching built-in model — x86 fixtures
@@ -223,9 +269,8 @@ isa_smoke() {
     cargo build --release
     local bin=./target/release/osaca
     local json_check=1
-    if ! command -v python3 >/dev/null 2>&1; then
+    if ! require_python3 per-ISA-smoke; then
         json_check=0
-        echo "per-ISA smoke: WARNING — python3 unavailable, JSON legs skipped"
     fi
     local fails=0 runs=0
     local f base archs arch
@@ -282,6 +327,10 @@ case "${1:-}" in
         corpus_smoke
         exit 0
         ;;
+    --mem-smoke)
+        mem_smoke
+        exit 0
+        ;;
 esac
 
 echo "== tier-1: build =="
@@ -306,6 +355,10 @@ if [[ "${1:-}" != "--quick" ]]; then
 
     # Every fixture × every matching model through the real CLI.
     isa_smoke
+
+    # The cache-aware working-set sweep on the shipped binary:
+    # monotonicity + L1-resident/infinite-L1 equality.
+    mem_smoke
 
     # The shipped binary serving over a real socket to a python client.
     serve_smoke

@@ -177,6 +177,42 @@ fn main() {
         println!("{}  ({:.0} runs/s)", s.report(), rate);
         json.record(&s, &[("runs_per_s", rate)]);
     }
+    {
+        // Cache-aware mode, L1-resident: the memory-model plumbing is on
+        // (LSQ tracking, per-load miss checks) but no load ever misses,
+        // so this prices the pure overhead of the opt-in path against
+        // the sim/triad-o3 runs above.
+        use osaca::sim::{analyze_memory, derive_footprint, run_decoded_mem, MemModel, MemSimPlan};
+        let w = workloads::find("triad-strided", "any", "-O3").unwrap();
+        let k = w.kernel();
+        let dk = DecodedKernel::new(&k, &skl).unwrap();
+        let model = MemModel::build(&skl, "ws=16K").unwrap();
+        let fp = derive_footprint(&k, &dk.iter, model.line_bytes());
+        let analysis = analyze_memory(&model, &fp, sc.sim_cfg.iterations as u64);
+        let plan = MemSimPlan::new(&model, &analysis, &fp);
+        let mut total_cycles = 0u64;
+        let mut uops = 0u64;
+        let s = bench("sim/mem_l1_resident", sc.warm_small, sc.samp_small, || {
+            let meas = run_decoded_mem(&dk, &skl, sc.sim_cfg, Some(&plan));
+            total_cycles = meas.total_cycles;
+            uops = meas.counters.uops_executed;
+        });
+        report_sim(&s, total_cycles, uops, &mut json);
+    }
+    {
+        // The whole working-set sweep (the `mem-sweep` subcommand and
+        // the `--mem-smoke` CI leg): one infinite-L1 analysis plus one
+        // cache-aware analysis per pinned size.
+        use osaca::report::experiments::{mem_sweep, MEM_SWEEP_SIZES};
+        let mut points = 0usize;
+        let s = bench("sim/mem_sweep", sc.warm_small, sc.samp_small, || {
+            let rows = mem_sweep("triad-strided", "any", "-O3", "skl", &MEM_SWEEP_SIZES).unwrap();
+            points = rows.len();
+        });
+        let rate = points as f64 / s.median.as_secs_f64();
+        println!("{}  ({:.0} points/s)", s.report(), rate);
+        json.record(&s, &[("points_per_s", rate)]);
+    }
 
     // ---- L3 analyzer ---------------------------------------------------
     println!("--- L3 analyzer ---");

@@ -31,6 +31,9 @@ pub enum OsacaError {
     /// An unknown report format name (CLI `--format`, emitter
     /// selection). `supported` lists every built-in emitter.
     UnsupportedFormat { requested: String, supported: Vec<String> },
+    /// The `--mem-model` / `AnalysisRequest::mem_model` spec string is
+    /// malformed or inconsistent with the machine's hierarchy.
+    BadMemModel { message: String },
     /// The kernel does not fit the solver artifact's µ-op budget.
     KernelTooLarge { max: usize, message: String },
     /// The solver thread did not reply within the configured timeout.
@@ -54,6 +57,7 @@ impl OsacaError {
             OsacaError::IsaMismatch { .. } => "isa_mismatch",
             OsacaError::EmptyRequest { .. } => "empty_request",
             OsacaError::UnsupportedFormat { .. } => "unsupported_format",
+            OsacaError::BadMemModel { .. } => "bad_mem_model",
             OsacaError::KernelTooLarge { .. } => "kernel_too_large",
             OsacaError::SolverTimeout { .. } => "solver_timeout",
             OsacaError::ServiceUnavailable { .. } => "service_unavailable",
@@ -100,6 +104,9 @@ impl fmt::Display for OsacaError {
                 "unsupported report format `{requested}` (supported: {})",
                 supported.join(", ")
             ),
+            OsacaError::BadMemModel { message } => {
+                write!(f, "bad memory-model spec: {message}")
+            }
             OsacaError::KernelTooLarge { max, message } => {
                 write!(f, "kernel exceeds the solver budget of {max} µ-ops: {message}")
             }

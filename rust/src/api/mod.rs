@@ -60,7 +60,9 @@ use crate::coordinator::{Coordinator, CoordinatorConfig, ServiceStats, SubmitErr
 use crate::exec::{self, Executor};
 use crate::mdb::{self, MachineModel};
 use crate::runtime::{EncodedKernel, MAX_UOPS};
-use crate::sim::{run_decoded, DecodedKernel};
+use crate::sim::{
+    analyze_memory, derive_footprint, run_decoded_mem, DecodedKernel, MemModel, MemSimPlan,
+};
 
 /// Upper bound on the executor pool that runs the in-process analytic
 /// passes of [`Engine::analyze_batch`]. Small on purpose: the passes
@@ -70,6 +72,7 @@ const ANALYTIC_POOL_MAX: usize = 8;
 
 pub use crate::coordinator::Backend;
 pub use crate::report::emit::{Emitter, Format, SCHEMA_VERSION};
+pub use crate::sim::{MemModel, MemoryAnalysis};
 pub use error::OsacaError;
 pub use prediction::{Bound, BoundKind, PassSource, Prediction};
 pub use report::AnalysisReport;
@@ -326,17 +329,20 @@ impl Engine {
             format: req.format,
             throughput: None,
             critpath: None,
+            memory: None,
             baseline: None,
             simulation: None,
             prediction_cell: std::sync::OnceLock::new(),
         };
-        // Decode once: the critical-path pass, the simulator and the
-        // width-aware frontend bound all consume the same
-        // dependency-wired template, so parse+resolve+decode work
-        // happens once per request, not once per pass.
+        // Decode once: the critical-path pass, the simulator, the
+        // width-aware frontend bound and the opt-in memory model all
+        // consume the same dependency-wired template, so
+        // parse+resolve+decode work happens once per request, not once
+        // per pass.
         let wants_frontend = req.frontend_bound && req.passes.contains(Passes::THROUGHPUT);
-        let wants_decode =
-            req.passes.intersects(Passes::CRITPATH | Passes::SIMULATE) || wants_frontend;
+        let wants_decode = req.passes.intersects(Passes::CRITPATH | Passes::SIMULATE)
+            || wants_frontend
+            || req.mem_model.is_some();
         let decoded = if wants_decode {
             Some(DecodedKernel::new(kernel, machine).map_err(internal)?)
         } else {
@@ -354,8 +360,22 @@ impl Engine {
             if req.passes.contains(Passes::CRITPATH) {
                 report.critpath = Some(critical_path_decoded(&dk.iter, machine));
             }
+            // The opt-in memory model: footprint-derived ECM bound plus
+            // the simulator plan. Strictly additive — with `mem_model`
+            // unset nothing here runs and every pinned table is
+            // bit-identical to the infinite-L1 pipeline.
+            let mut sim_plan: Option<MemSimPlan> = None;
+            if let Some(spec) = &req.mem_model {
+                let model = MemModel::build(machine, spec)
+                    .map_err(|e| OsacaError::BadMemModel { message: format!("{e:#}") })?;
+                let fp = derive_footprint(kernel, &dk.iter, model.line_bytes());
+                let analysis = analyze_memory(&model, &fp, req.sim.iterations as u64);
+                sim_plan = Some(MemSimPlan::new(&model, &analysis, &fp));
+                report.memory = Some(analysis);
+            }
             if req.passes.contains(Passes::SIMULATE) {
-                report.simulation = Some(run_decoded(dk, machine, req.sim));
+                report.simulation =
+                    Some(run_decoded_mem(dk, machine, req.sim, sim_plan.as_ref()));
             }
         }
         Ok(report)

@@ -29,6 +29,10 @@ pub enum BoundKind {
     Divider,
     /// Loop-carried dependency-chain bound (cycles per iteration).
     CriticalPath,
+    /// ECM-style memory-hierarchy bound: cycles per cacheline at the
+    /// resident level × lines per iteration (opt-in via
+    /// `AnalysisRequest::mem_model`).
+    Memory,
     /// IACA-like balanced baseline — an alternative predictor, not a
     /// lower bound; reported for comparison only.
     Baseline,
@@ -44,6 +48,7 @@ impl BoundKind {
             BoundKind::FrontEnd => "frontend",
             BoundKind::Divider => "divider",
             BoundKind::CriticalPath => "critical_path",
+            BoundKind::Memory => "memory",
             BoundKind::Baseline => "baseline",
             BoundKind::Simulated => "simulated",
         }
@@ -61,6 +66,7 @@ impl BoundKind {
 pub enum PassSource {
     Throughput,
     Critpath,
+    Memory,
     Baseline,
     Simulate,
 }
@@ -71,6 +77,7 @@ impl PassSource {
         match self {
             PassSource::Throughput => "throughput",
             PassSource::Critpath => "critpath",
+            PassSource::Memory => "memory",
             PassSource::Baseline => "baseline",
             PassSource::Simulate => "simulate",
         }
@@ -94,7 +101,7 @@ pub struct Bound {
 
 /// The structured result of an analysis: every resource bound the
 /// requested passes produced, in a fixed kind order (port pressure,
-/// frontend, divider, critical path, baseline, simulated).
+/// frontend, divider, critical path, memory, baseline, simulated).
 #[derive(Debug, Clone, PartialEq, Default)]
 pub struct Prediction {
     pub bounds: Vec<Bound>,
@@ -189,6 +196,14 @@ impl Prediction {
                 source: PassSource::Critpath,
             });
         }
+        if let Some(mem) = &r.memory {
+            bounds.push(Bound {
+                kind: BoundKind::Memory,
+                cy_per_asm_iter: mem.cy_per_asm_iter,
+                resource: mem.level.clone(),
+                source: PassSource::Memory,
+            });
+        }
         if let Some(b) = &r.baseline {
             bounds.push(Bound {
                 kind: BoundKind::Baseline,
@@ -252,6 +267,33 @@ mod tests {
             lines: Vec::new(),
         };
         assert_eq!(p.winner().unwrap().kind, BoundKind::PortPressure);
+    }
+
+    #[test]
+    fn memory_is_a_model_bound_and_loses_ties_to_ports() {
+        assert!(BoundKind::Memory.is_model_bound());
+        assert_eq!(BoundKind::Memory.name(), "memory");
+        // Push order puts port pressure before memory, so an exact tie
+        // keeps the infinite-L1 winner — the L1-resident sweep point
+        // stays byte-identical to the base prediction.
+        let p = Prediction {
+            bounds: vec![
+                bound(BoundKind::PortPressure, 2.0),
+                bound(BoundKind::Memory, 2.0),
+            ],
+            unroll: 1,
+            lines: Vec::new(),
+        };
+        assert_eq!(p.winner().unwrap().kind, BoundKind::PortPressure);
+        let p = Prediction {
+            bounds: vec![
+                bound(BoundKind::PortPressure, 2.0),
+                bound(BoundKind::Memory, 40.0),
+            ],
+            unroll: 1,
+            lines: Vec::new(),
+        };
+        assert_eq!(p.winner().unwrap().kind, BoundKind::Memory);
     }
 
     #[test]

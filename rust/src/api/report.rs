@@ -9,7 +9,7 @@ use crate::api::prediction::Prediction;
 use crate::baseline::BaselinePrediction;
 use crate::mdb::MachineModel;
 use crate::report::emit::Format;
-use crate::sim::Measurement;
+use crate::sim::{Measurement, MemoryAnalysis};
 
 /// Result of one [`super::Engine::analyze`] call. Sections are present
 /// for exactly the passes requested; [`AnalysisReport::prediction`]
@@ -28,6 +28,9 @@ pub struct AnalysisReport {
     pub throughput: Option<Analysis>,
     /// Latency bounds ([`super::Passes::CRITPATH`]).
     pub critpath: Option<CritPathReport>,
+    /// ECM-style memory-hierarchy bound (present only when the opt-in
+    /// `AnalysisRequest::mem_model` is set).
+    pub memory: Option<MemoryAnalysis>,
     /// IACA-like balanced baseline ([`super::Passes::BASELINE`]).
     pub baseline: Option<BaselinePrediction>,
     /// Simulator measurement ([`super::Passes::SIMULATE`]).
@@ -82,6 +85,9 @@ impl AnalysisReport {
         }
         if let Some(c) = &self.critpath {
             fold(c.carried_per_iteration);
+        }
+        if let Some(m) = &self.memory {
+            fold(m.cy_per_asm_iter);
         }
         best
     }

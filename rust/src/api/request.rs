@@ -133,6 +133,12 @@ pub struct AnalysisRequest {
     pub unroll: usize,
     /// Simulation parameters for [`Passes::SIMULATE`].
     pub sim: SimConfig,
+    /// Opt-in memory-model spec (`None` = the paper's infinite-L1
+    /// assumption, the default). `""`/`"on"`/`"default"` take the
+    /// machine model's `cache` stanzas; entries like
+    /// `l1=32K:4,l2=1M:12,mem=:80,ws=4M,lsq=72,lfb=8` override them.
+    /// See `sim::MemModel::build` for the grammar.
+    pub mem_model: Option<String>,
 }
 
 impl AnalysisRequest {
@@ -149,6 +155,7 @@ impl AnalysisRequest {
             format: Format::Text,
             unroll: 1,
             sim: SimConfig::default(),
+            mem_model: None,
         }
     }
 
@@ -217,6 +224,13 @@ impl AnalysisRequest {
         self
     }
 
+    /// Enable the opt-in cache-aware memory model (default off — see
+    /// [`AnalysisRequest::mem_model`] for the spec grammar).
+    pub fn mem_model(mut self, spec: impl Into<String>) -> Self {
+        self.mem_model = Some(spec.into());
+        self
+    }
+
     /// A stable 64-bit fingerprint of the *analysis-relevant* request
     /// configuration: the kernel text (source, or the canonical
     /// rendering of a pre-extracted kernel), the machine (registered
@@ -262,6 +276,11 @@ impl AnalysisRequest {
         eat(&self.unroll.to_le_bytes());
         eat(&self.sim.iterations.to_le_bytes());
         eat(&self.sim.warmup.to_le_bytes());
+        // Presence byte first so `None` and `Some("")` cannot alias.
+        eat(&[self.mem_model.is_some() as u8]);
+        if let Some(spec) = &self.mem_model {
+            eat(spec.as_bytes());
+        }
         h
     }
 }
@@ -326,6 +345,11 @@ mod tests {
             base().sim_config(SimConfig { iterations: 7, warmup: 0 }).fingerprint(),
             f
         );
+        // The memory-model spec is analysis-relevant; empty-spec "on"
+        // differs from off.
+        assert_ne!(base().mem_model("ws=4M").fingerprint(), f);
+        assert_ne!(base().mem_model("").fingerprint(), f);
+        assert_ne!(base().mem_model("").fingerprint(), base().mem_model("ws=4M").fingerprint());
     }
 
     #[test]

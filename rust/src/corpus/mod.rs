@@ -9,11 +9,14 @@
 //! executor ([`crate::exec`]), so corpus throughput scales with cores
 //! without any scheduling code here.
 //!
-//! The scorecard is a **sibling document** of the v3 report schema: it
-//! carries the same `"schema_version":3` tag but its own `"kind"`, and
+//! The scorecard is a **sibling document** of the v4 report schema: it
+//! carries the same `"schema_version":4` tag but its own `"kind"`, and
 //! adds no keys to the existing report/stats shapes. It contains no
 //! timestamps or host identifiers — the same corpus and machine model
 //! must produce byte-identical output across runs (CI diffs two runs).
+//! With [`CorpusOptions::mem_model`] set, the bottleneck histogram
+//! gains a `memory` bucket for blocks whose working set blows the
+//! hierarchy; without it, scoring is byte-identical to infinite-L1.
 
 use std::collections::{BTreeMap, HashMap};
 use std::fs;
@@ -39,6 +42,11 @@ pub struct CorpusOptions {
     pub arch: String,
     /// Include the opt-in frontend bound in each block's prediction.
     pub frontend_bound: bool,
+    /// Opt-in memory-model spec (`crate::sim::MemModel` grammar) added
+    /// to every block's request; blocks whose footprint blows the
+    /// hierarchy land in the scorecard's `memory` histogram bucket.
+    /// `None` keeps the infinite-L1 scoring byte-identical.
+    pub mem_model: Option<String>,
     /// Blocks per `analyze_batch` call. Bounds peak memory on huge
     /// corpora while still keeping the executor saturated.
     pub chunk: usize,
@@ -46,7 +54,12 @@ pub struct CorpusOptions {
 
 impl Default for CorpusOptions {
     fn default() -> Self {
-        CorpusOptions { arch: "skl".to_string(), frontend_bound: false, chunk: 256 }
+        CorpusOptions {
+            arch: "skl".to_string(),
+            frontend_bound: false,
+            mem_model: None,
+            chunk: 256,
+        }
     }
 }
 
@@ -265,11 +278,15 @@ pub fn score_blocks(engine: &Engine, blocks: &[CorpusBlock], opts: &CorpusOption
         let reqs: Vec<_> = chunk
             .iter()
             .map(|b| {
-                Engine::request(&b.name)
+                let mut req = Engine::request(&b.name)
                     .arch(&opts.arch)
                     .source(b.source.as_str())
                     .passes(passes)
-                    .frontend_bound(opts.frontend_bound)
+                    .frontend_bound(opts.frontend_bound);
+                if let Some(spec) = &opts.mem_model {
+                    req = req.mem_model(spec.clone());
+                }
+                req
             })
             .collect();
         for (b, outcome) in chunk.iter().zip(engine.analyze_batch(&reqs)) {

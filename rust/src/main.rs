@@ -19,7 +19,13 @@
 //!         (persistent TCP service; --loopback for the in-process batch demo)
 //!   corpus <dir|archive.tar|file.s> [--arch skl] [--measured file.csv] [--frontend-bound]
 //!         (score a corpus of basic blocks; scorecard to stdout)
+//!   mem-sweep [--arch skl] [--workload triad-strided] [--sizes 16K,1M,64M]
+//!         (working-set sweep under the opt-in memory model)
 //!   list-workloads
+//!
+//! `analyze`, `simulate`, `compare`, and `corpus` also take
+//! `--mem-model [spec]` to switch on the opt-in cache hierarchy + LSQ
+//! (see `sim::mem::MemModel` for the spec grammar).
 //!
 //! Hand-rolled argument parsing: clap is not vendored in this offline
 //! build environment.
@@ -37,8 +43,10 @@ use osaca::ibench::{run_conflict, run_sweep, BenchSpec};
 use osaca::isa::InstructionForm;
 use osaca::mdb::MachineModel;
 use osaca::report::emit::{csv_field, json_string};
+use osaca::report::emit::SCHEMA_VERSION;
 use osaca::report::experiments::{
-    render_table1, render_table3, render_table5, table1, table3, table5,
+    mem_sweep, render_mem_sweep, render_table1, render_table3, render_table5, table1, table3,
+    table5, MEM_SWEEP_SIZES,
 };
 use osaca::report::render_port_diagram;
 use osaca::serve::{ServeConfig, Server};
@@ -176,12 +184,17 @@ fn run(args: &[String]) -> Result<()> {
             if opts.contains_key("baseline") {
                 passes |= Passes::BASELINE;
             }
-            let req = Engine::request(path)
+            let mut req = Engine::request(path)
                 .machine(machine)
                 .kernel(kernel)
                 .passes(passes)
                 .frontend_bound(opts.contains_key("frontend-bound"))
                 .format(format);
+            // Bare `--mem-model` means "machine defaults"; a value is
+            // the spec grammar (`l1=32K:4,l2=1M:12,mem=:80,ws=4M,...`).
+            if let Some(spec) = opts.get("mem-model") {
+                req = req.mem_model(*spec);
+            }
             let report = engine.analyze(&req).map_err(|e| anyhow!("{e}"))?;
             emit_report(&report);
         }
@@ -192,12 +205,15 @@ fn run(args: &[String]) -> Result<()> {
             let machine = machine_opt(&engine, &opts)?;
             let iterations: usize =
                 opts.get("iterations").map(|v| v.parse()).transpose()?.unwrap_or(1000);
-            let req = Engine::request(path)
+            let mut req = Engine::request(path)
                 .machine(machine.clone())
                 .kernel(load_kernel(path, machine.isa)?)
                 .passes(Passes::SIMULATE)
                 .format(format)
                 .sim_config(SimConfig { iterations, warmup: iterations / 5 });
+            if let Some(spec) = opts.get("mem-model") {
+                req = req.mem_model(*spec);
+            }
             let report = engine.analyze(&req).map_err(|e| anyhow!("{e}"))?;
             if format != Format::Text {
                 emit_report(&report);
@@ -217,6 +233,17 @@ fn run(args: &[String]) -> Result<()> {
                 m.counters.uops_executed,
                 m.counters.forwarded_loads,
             );
+            if let Some(mem) = &report.memory {
+                println!(
+                    "memory model: {} in {} ({} streams, {} B/iter), lsq-stall {} cy, {} cache-miss loads",
+                    mem.working_set_human(),
+                    mem.level,
+                    mem.streams,
+                    mem.bytes_per_iter,
+                    m.counters.lsq_stall_cycles,
+                    m.counters.cache_miss_loads,
+                );
+            }
             let busy: Vec<String> = machine
                 .ports
                 .iter()
@@ -351,12 +378,15 @@ fn run(args: &[String]) -> Result<()> {
                 pos.first().ok_or_else(|| anyhow!("usage: compare <file.s> --arch skl|zen"))?;
             let machine = machine_opt(&engine, &opts)?;
             let unroll: usize = opts.get("unroll").map(|v| v.parse()).transpose()?.unwrap_or(1);
-            let req = Engine::request(path)
+            let mut req = Engine::request(path)
                 .machine(machine.clone())
                 .kernel(load_kernel(path, machine.isa)?)
                 .passes(Passes::ALL)
                 .format(format)
                 .unroll(unroll);
+            if let Some(spec) = opts.get("mem-model") {
+                req = req.mem_model(*spec);
+            }
             let r = engine.analyze(&req).map_err(|e| anyhow!("{e}"))?;
             if format != Format::Text {
                 // The report carries all four passes; the emitters
@@ -368,31 +398,39 @@ fn run(args: &[String]) -> Result<()> {
             let baseline = r.baseline.as_ref().expect("baseline pass");
             let critpath = r.critpath.as_ref().expect("critpath pass");
             let m = r.simulation.as_ref().expect("simulate pass");
+            let mut rows = vec![
+                vec![
+                    "OSACA (uniform ports)".into(),
+                    format!("{:.2}", osaca.cy_per_asm_iter),
+                    format!("{:.2}", osaca.cy_per_asm_iter / unroll as f32),
+                ],
+                vec![
+                    "balanced baseline (batched solver)".into(),
+                    format!("{:.2}", baseline.cy_per_asm_iter),
+                    format!("{:.2}", baseline.cy_per_asm_iter / unroll as f32),
+                ],
+                vec![
+                    "critical-path bound".into(),
+                    format!("{:.2}", critpath.carried_per_iteration),
+                    format!("{:.2}", critpath.carried_per_iteration / unroll as f32),
+                ],
+            ];
+            if let Some(mem) = &r.memory {
+                rows.push(vec![
+                    format!("memory bound ({} in {})", mem.working_set_human(), mem.level),
+                    format!("{:.2}", mem.cy_per_asm_iter),
+                    format!("{:.2}", mem.cy_per_asm_iter / unroll as f32),
+                ]);
+            }
+            rows.push(vec![
+                "simulated hardware".into(),
+                format!("{:.2}", m.cycles_per_iteration),
+                format!("{:.2}", m.cy_per_source_it(unroll)),
+            ]);
             print_table(
                 &format!("{path} on {}", machine.name),
                 &["predictor", "cy/asm-iter", "cy/src-it"],
-                &[
-                    vec![
-                        "OSACA (uniform ports)".into(),
-                        format!("{:.2}", osaca.cy_per_asm_iter),
-                        format!("{:.2}", osaca.cy_per_asm_iter / unroll as f32),
-                    ],
-                    vec![
-                        "balanced baseline (batched solver)".into(),
-                        format!("{:.2}", baseline.cy_per_asm_iter),
-                        format!("{:.2}", baseline.cy_per_asm_iter / unroll as f32),
-                    ],
-                    vec![
-                        "critical-path bound".into(),
-                        format!("{:.2}", critpath.carried_per_iteration),
-                        format!("{:.2}", critpath.carried_per_iteration / unroll as f32),
-                    ],
-                    vec![
-                        "simulated hardware".into(),
-                        format!("{:.2}", m.cycles_per_iteration),
-                        format!("{:.2}", m.cy_per_source_it(unroll)),
-                    ],
-                ],
+                &rows,
             );
         }
         "tables" => {
@@ -576,6 +614,7 @@ fn run(args: &[String]) -> Result<()> {
             let mut copts = corpus::CorpusOptions {
                 arch: opts.get("arch").copied().unwrap_or("skl").to_string(),
                 frontend_bound: opts.contains_key("frontend-bound"),
+                mem_model: opts.get("mem-model").map(|s| s.to_string()),
                 ..Default::default()
             };
             if let Some(v) = opts.get("chunk") {
@@ -607,6 +646,56 @@ fn run(args: &[String]) -> Result<()> {
                         );
                     }
                 }
+            }
+        }
+        "mem-sweep" => {
+            // Working-set sweep under the opt-in memory model: one
+            // analytic prediction per pinned footprint, next to the
+            // infinite-L1 prediction. `ci.sh --mem-smoke` gates on the
+            // JSON form (monotone, L1-resident == infinite-L1).
+            let arch = opts.get("arch").copied().unwrap_or("skl");
+            let family = opts.get("workload").copied().unwrap_or("triad-strided");
+            let target = opts.get("target").copied().unwrap_or("any");
+            let flag = opts.get("flag").copied().unwrap_or("-O3");
+            let sizes: Vec<u64> = match opts.get("sizes") {
+                Some(list) => list
+                    .split(',')
+                    .map(|s| osaca::mdb::format::parse_size(s.trim()))
+                    .collect::<Result<_>>()?,
+                None => MEM_SWEEP_SIZES.to_vec(),
+            };
+            let rows = mem_sweep(family, target, flag, arch, &sizes)?;
+            match format {
+                Format::Json => {
+                    let mut out = format!(
+                        "{{\"schema_version\":{SCHEMA_VERSION},\"kind\":\"mem_sweep\",\
+                         \"arch\":{},\"workload\":{},\"points\":[",
+                        json_string(arch),
+                        json_string(&format!("{family}-{target}-{}", flag.trim_start_matches('-'))),
+                    );
+                    for (i, r) in rows.iter().enumerate() {
+                        if i > 0 {
+                            out.push(',');
+                        }
+                        out.push_str(&format!(
+                            "{{\"working_set\":{},\"cy_per_asm_iter\":{},\"bound\":{},\
+                             \"level\":{},\"infinite_l1_cy\":{}}}",
+                            r.working_set,
+                            r.cy_per_asm_iter,
+                            json_string(r.bound),
+                            json_string(&r.level),
+                            r.infinite_l1_cy,
+                        ));
+                    }
+                    out.push_str("]}");
+                    println!("{out}");
+                }
+                _ => emit_table(
+                    format,
+                    &format!("working-set sweep: {family} on {arch}"),
+                    &["working_set", "cy/asm-iter", "bound", "level", "infinite-L1 cy"],
+                    &render_mem_sweep(&rows),
+                ),
             }
         }
         "list-workloads" => {
@@ -710,17 +799,25 @@ usage: osaca <command> [options]
 
 commands (all accept --format text|json|csv):
   analyze <file.s> --arch skl|zen|hsw|tx2|rv64 [--learn] [--baseline] [--critpath] [--frontend-bound]
-  simulate <file.s> --arch skl|zen|tx2|rv64 [--iterations N]
+          [--mem-model [spec]]
+  simulate <file.s> --arch skl|zen|tx2|rv64 [--iterations N] [--mem-model [spec]]
   ibench --instr <form> --arch skl|zen|tx2|rv64 [--conflict <form>]
   build-model --instr <form> --arch skl|zen|tx2|rv64
   validate-model --arch skl|zen
-  compare <file.s> --arch skl|zen [--unroll N]
+  compare <file.s> --arch skl|zen [--unroll N] [--mem-model [spec]]
   tables [--table1|--table3|--table5|--all]
   figures
   serve [--addr host:port] [--shards N] [--memo-cap N] [--memo-max-bytes N] [--queue-depth N]
         [--max-rps R] [--burst N] [--max-inflight N] [--max-frame-bytes N]
         [--chaos [seed]] [--test-ops] [--loopback [--requests N]]
   corpus <dir|archive.tar|file.s> [--arch skl] [--measured file.csv] [--frontend-bound] [--chunk N]
-  list-workloads"
+         [--mem-model [spec]]
+  mem-sweep [--arch skl] [--workload triad-strided] [--target any] [--flag -O3] [--sizes 16K,1M,...]
+  list-workloads
+
+memory-model spec: bare `--mem-model` takes the machine's hierarchy; or
+`l1=32K:4,l2=1M:12,mem=:80,ws=4M,lsq=72,lfb=8` (any subset; sizes take
+K/M/G binary suffixes). Off by default — the paper-pinned tables never
+change unless the flag is given."
     );
 }

@@ -23,7 +23,7 @@ use anyhow::{anyhow, bail, Context, Result};
 use crate::isa::{InstructionForm, Isa};
 
 use super::entry::{FormEntry, Uop, UopKind};
-use super::machine::{CoreParams, MachineModel};
+use super::machine::{CacheLevel, CoreParams, MachineModel};
 use super::port::PortMask;
 
 impl MachineModel {
@@ -41,6 +41,8 @@ impl MachineModel {
         let mut store_data_ports = PortMask::EMPTY;
         let mut store_agu_ports = PortMask::EMPTY;
         let mut store_agu_simple_ports = PortMask::EMPTY;
+        let mut caches: Vec<CacheLevel> = Vec::new();
+        let mut mem_latency_cy = 0u32;
         let mut entry_lines: Vec<(usize, String)> = Vec::new();
 
         for (lineno, raw) in src.lines().enumerate() {
@@ -87,8 +89,14 @@ impl MachineModel {
                         "load_latency" => params.load_latency = v.parse()?,
                         "store_forward_latency" => params.store_forward_latency = v.parse()?,
                         "sim_divider_scale" => params.sim_divider_scale = v.parse()?,
+                        "lsq" => params.lsq_size = v.parse()?,
+                        "lfb" => params.lfb = v.parse()?,
                         other => bail!("line {}: unknown param `{other}`", lineno + 1),
                     }
+                }
+                "cache" => {
+                    parse_cache_line(rest, &mut caches, &mut mem_latency_cy)
+                        .with_context(|| format!("line {}: cache", lineno + 1))?;
                 }
                 "entry" => entry_lines.push((lineno + 1, rest.to_string())),
                 other => bail!("line {}: unknown directive `{other}`", lineno + 1),
@@ -119,6 +127,8 @@ impl MachineModel {
             store_agu_ports,
             store_agu_simple_ports,
             params,
+            caches,
+            mem_latency_cy,
             entries: Default::default(),
             index: Default::default(),
         };
@@ -186,6 +196,23 @@ impl MachineModel {
         if (p.sim_divider_scale - 1.0).abs() > 1e-6 {
             out.push_str(&format!("param sim_divider_scale {}\n", p.sim_divider_scale));
         }
+        if !self.caches.is_empty() || self.mem_latency_cy != 0 {
+            out.push_str(&format!("param lsq {}\n", p.lsq_size));
+            out.push_str(&format!("param lfb {}\n", p.lfb));
+        }
+        for c in &self.caches {
+            out.push_str(&format!(
+                "cache {} size={} line={} lat={} assoc={}\n",
+                c.name,
+                fmt_size(c.size_bytes),
+                c.line_bytes,
+                c.latency_cy,
+                c.assoc
+            ));
+        }
+        if self.mem_latency_cy != 0 {
+            out.push_str(&format!("cache mem lat={}\n", self.mem_latency_cy));
+        }
         let mut forms: Vec<_> = self.entries.values().collect();
         forms.sort_by(|a, b| a.form.cmp(&b.form));
         for e in forms {
@@ -230,6 +257,65 @@ fn trim_float(v: f32) -> String {
     } else {
         format!("{v}")
     }
+}
+
+/// Parse a size with an optional binary suffix: `64`, `32K`, `1M`, `8G`.
+pub fn parse_size(s: &str) -> Result<u64> {
+    let s = s.trim();
+    let (digits, shift) = match s.as_bytes().last() {
+        Some(b'K' | b'k') => (&s[..s.len() - 1], 10),
+        Some(b'M' | b'm') => (&s[..s.len() - 1], 20),
+        Some(b'G' | b'g') => (&s[..s.len() - 1], 30),
+        _ => (s, 0),
+    };
+    let n: u64 = digits.trim().parse().with_context(|| format!("bad size `{s}`"))?;
+    n.checked_shl(shift).ok_or_else(|| anyhow!("size `{s}` overflows"))
+}
+
+/// Render a byte count with the largest exact binary suffix.
+pub fn fmt_size(bytes: u64) -> String {
+    for (shift, suffix) in [(30u32, "G"), (20, "M"), (10, "K")] {
+        if bytes != 0 && bytes % (1u64 << shift) == 0 {
+            return format!("{}{}", bytes >> shift, suffix);
+        }
+    }
+    bytes.to_string()
+}
+
+/// One `cache` stanza line: `cache l2 size=1M line=64 lat=12 assoc=16`
+/// for a level, `cache mem lat=80` for main memory (no capacity).
+fn parse_cache_line(rest: &str, caches: &mut Vec<CacheLevel>, mem_latency: &mut u32) -> Result<()> {
+    let mut parts = rest.split_whitespace();
+    let name = parts.next().ok_or_else(|| anyhow!("cache needs a level name"))?.to_string();
+    let mut size = 0u64;
+    let mut line = 64u32;
+    let mut lat = 0u32;
+    let mut assoc = 8u32;
+    for kv in parts {
+        let (k, v) = kv.split_once('=').ok_or_else(|| anyhow!("bad field `{kv}`"))?;
+        match k {
+            "size" => size = parse_size(v)?,
+            "line" => line = v.parse().context("line")?,
+            "lat" => lat = v.parse().context("lat")?,
+            "assoc" => assoc = v.parse().context("assoc")?,
+            other => bail!("unknown cache field `{other}`"),
+        }
+    }
+    if lat == 0 {
+        bail!("cache `{name}` needs lat=N");
+    }
+    if name.eq_ignore_ascii_case("mem") {
+        *mem_latency = lat;
+        return Ok(());
+    }
+    if size == 0 {
+        bail!("cache `{name}` needs size=N (only `mem` is unbounded)");
+    }
+    if line == 0 {
+        bail!("cache `{name}` needs a nonzero line size");
+    }
+    caches.push(CacheLevel { name, size_bytes: size, line_bytes: line, latency_cy: lat, assoc });
+    Ok(())
 }
 
 fn parse_port_list(ports: &[String], s: &str) -> Result<PortMask> {
@@ -335,6 +421,60 @@ entry vdivsd-xmm_xmm_xmm lat=13 tp=4 uops=c@1:P0,dv@4:0DV
     #[test]
     fn unknown_directive_errors() {
         assert!(MachineModel::parse("arch a \"A\"\nports P0\nbogus 1\n").is_err());
+    }
+
+    #[test]
+    fn cache_stanza_roundtrip() {
+        let src = format!(
+            "{MINI}param lsq 48\nparam lfb 8\n\
+             cache l1 size=32K line=64 lat=3 assoc=8\n\
+             cache l2 size=1M line=64 lat=12 assoc=16\n\
+             cache mem lat=80\n"
+        );
+        let m = MachineModel::parse(&src).unwrap();
+        assert_eq!(m.params.lsq_size, 48);
+        assert_eq!(m.params.lfb, 8);
+        assert_eq!(m.caches.len(), 2);
+        assert_eq!(m.caches[0].name, "l1");
+        assert_eq!(m.caches[0].size_bytes, 32 * 1024);
+        assert_eq!(m.caches[1].size_bytes, 1 << 20);
+        assert_eq!(m.caches[1].latency_cy, 12);
+        assert_eq!(m.mem_latency_cy, 80);
+        let m2 = MachineModel::parse(&m.serialize()).unwrap();
+        assert_eq!(m.caches, m2.caches);
+        assert_eq!(m.mem_latency_cy, m2.mem_latency_cy);
+        assert_eq!(m.params.lsq_size, m2.params.lsq_size);
+        // Size suffixes render back in their largest exact form.
+        assert!(m.serialize().contains("cache l1 size=32K"));
+        assert!(m.serialize().contains("cache l2 size=1M"));
+    }
+
+    #[test]
+    fn cache_stanza_rejects_malformed_lines() {
+        let base = "arch a \"A\"\nports P0 LD\nloadports LD\n\
+                    entry vaddpd-xmm_xmm_xmm lat=2 tp=1 uops=c@1:P0\n";
+        // A bounded level without a size, a level without a latency, and
+        // an unknown field must all fail with line context.
+        for bad in [
+            "cache l1 lat=4\n",
+            "cache l1 size=32K\n",
+            "cache l1 size=32K lat=4 ways=8\n",
+            "cache mem size=1G lat=0\n",
+        ] {
+            assert!(MachineModel::parse(&format!("{base}{bad}")).is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn size_suffixes_parse_and_render() {
+        assert_eq!(parse_size("64").unwrap(), 64);
+        assert_eq!(parse_size("32K").unwrap(), 32 * 1024);
+        assert_eq!(parse_size("1m").unwrap(), 1 << 20);
+        assert_eq!(parse_size("8G").unwrap(), 8u64 << 30);
+        assert!(parse_size("lots").is_err());
+        assert_eq!(fmt_size(32 * 1024), "32K");
+        assert_eq!(fmt_size(1 << 20), "1M");
+        assert_eq!(fmt_size(96), "96");
     }
 
     #[test]

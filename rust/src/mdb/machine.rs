@@ -33,6 +33,14 @@ pub struct CoreParams {
     /// pipelined real divider that the analytic model's fixed occupancy
     /// underestimates (paper observes Zen ~20% slower than predicted).
     pub sim_divider_scale: f32,
+    /// Load/store-queue entries (loads + store-address µ-ops in flight).
+    /// Only consulted by the opt-in cache-aware simulation mode
+    /// (`sim::mem`); the default infinite-L1 mode never gates on it.
+    pub lsq_size: usize,
+    /// Line-fill buffers: outstanding cache-line transfers a core can
+    /// overlap (memory-level parallelism divisor of the analytic
+    /// cycles-per-line model in `sim::mem`).
+    pub lfb: u32,
 }
 
 impl Default for CoreParams {
@@ -45,8 +53,31 @@ impl Default for CoreParams {
             load_latency: 4,
             store_forward_latency: 5,
             sim_divider_scale: 1.0,
+            lsq_size: 72,
+            lfb: 8,
         }
     }
+}
+
+/// One level of the parametric memory hierarchy (`cache` stanza in a
+/// `.mdb` file), innermost (L1) first. `latency_cy` is the full
+/// load-to-use latency when the working set resides in this level —
+/// NOT the incremental hop cost; the ECM decomposition in `sim::mem`
+/// derives the per-line transfer cost from latency *deltas*.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CacheLevel {
+    /// Level name (`l1`, `l2`, `l3`); the CLI spec grammar keys
+    /// overrides on it.
+    pub name: String,
+    /// Capacity in bytes.
+    pub size_bytes: u64,
+    /// Cache-line size in bytes.
+    pub line_bytes: u32,
+    /// Load-to-use latency (cycles) for a working set resident here.
+    pub latency_cy: u32,
+    /// Associativity (ways) — carried for completeness/serialization;
+    /// the capacity model is fully-associative.
+    pub assoc: u32,
 }
 
 /// A full machine model (one per microarchitecture).
@@ -91,6 +122,13 @@ pub struct MachineModel {
     /// Ports for store-AGU µ-ops with *simple* addressing (SKL port 7).
     pub store_agu_simple_ports: PortMask,
     pub params: CoreParams,
+    /// Parametric cache hierarchy (`cache` stanzas), innermost first.
+    /// Empty for models without one; the cache-aware mode then requires
+    /// a full `--mem-model` spec.
+    pub caches: Vec<CacheLevel>,
+    /// Main-memory load-to-use latency in cycles (`cache mem lat=N`);
+    /// 0 when the model declares no hierarchy.
+    pub mem_latency_cy: u32,
     pub entries: HashMap<InstructionForm, FormEntry>,
     /// Per-machine form-resolution cache (see `mdb::index`). Replaced
     /// wholesale by [`MachineModel::insert`]; fresh on every clone.
@@ -119,6 +157,8 @@ impl Clone for MachineModel {
             store_agu_ports: self.store_agu_ports,
             store_agu_simple_ports: self.store_agu_simple_ports,
             params: self.params.clone(),
+            caches: self.caches.clone(),
+            mem_latency_cy: self.mem_latency_cy,
             entries: self.entries.clone(),
             index: Arc::new(FormIndex::default()),
         }

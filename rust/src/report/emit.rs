@@ -36,7 +36,15 @@ use crate::report::render_occupancy;
 /// (`rate_limited`, `shed`, `deadline_expired`, `panics`,
 /// `worker_restarts`, `oversized_frames`, `memo_bytes`, `shedding`).
 /// The report JSON/CSV key shape is unchanged from v2.
-pub const SCHEMA_VERSION: u32 = 3;
+///
+/// v4: the opt-in memory model. A `memory` report section
+/// (`working_set`, `bytes_per_iter`, `lines_per_iter`, `streams`,
+/// `level`, `level_latency`, `cy_per_line`, `cy_per_asm_iter`,
+/// `lsq_size`, `ecm`) appears when `AnalysisRequest::mem_model` is set,
+/// the `simulation` section carries `lsq_stall_cycles`, and the bound
+/// vocabulary gains `memory`. With the memory model off (the default)
+/// only the version digit changes from v3.
+pub const SCHEMA_VERSION: u32 = 4;
 
 /// The built-in output formats.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
@@ -128,6 +136,17 @@ impl Emitter for Text {
                 out,
                 "Critical path: {:.2} cy intra-iteration, {:.2} cy/it loop-carried bound",
                 c.intra_iteration, c.carried_per_iteration
+            );
+        }
+        if let Some(m) = &r.memory {
+            let _ = writeln!(
+                out,
+                "Memory ({} in {}): {:.2} cy/line x {:.2} lines = {:.2} cy / assembly iteration",
+                m.working_set_human(),
+                m.level,
+                m.cy_per_line,
+                m.lines_per_iter,
+                m.cy_per_asm_iter
             );
         }
         if let Some(b) = &r.baseline {
@@ -275,6 +294,36 @@ impl Emitter for Json {
                 fmt_f32(c.carried_per_iteration)
             );
         }
+        if let Some(m) = &r.memory {
+            let _ = write!(
+                out,
+                ",\"memory\":{{\"working_set\":{},\"bytes_per_iter\":{},\
+                 \"lines_per_iter\":{},\"streams\":{},\"level\":",
+                m.working_set,
+                m.bytes_per_iter,
+                fmt_f32(m.lines_per_iter),
+                m.streams
+            );
+            push_json_string(&mut out, &m.level);
+            let _ = write!(
+                out,
+                ",\"level_latency\":{},\"cy_per_line\":{},\"cy_per_asm_iter\":{},\
+                 \"lsq_size\":{},\"ecm\":[",
+                m.level_latency_cy,
+                fmt_f32(m.cy_per_line),
+                fmt_f32(m.cy_per_asm_iter),
+                m.lsq_size
+            );
+            for (i, (name, cy)) in m.ecm.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                out.push('[');
+                push_json_string(&mut out, name);
+                let _ = write!(out, ",{}]", fmt_f32(*cy));
+            }
+            out.push_str("]}");
+        }
         if let Some(b) = &r.baseline {
             let _ = write!(
                 out,
@@ -287,11 +336,12 @@ impl Emitter for Json {
             let _ = write!(
                 out,
                 ",\"simulation\":{{\"cycles_per_iteration\":{},\"iterations\":{},\
-                 \"issue_stall_cycles\":{},\"forwarded_loads\":{}}}",
+                 \"issue_stall_cycles\":{},\"forwarded_loads\":{},\"lsq_stall_cycles\":{}}}",
                 fmt_f64(m.cycles_per_iteration),
                 m.iterations,
                 m.counters.issue_stall_cycles,
-                m.counters.forwarded_loads
+                m.counters.forwarded_loads,
+                m.counters.lsq_stall_cycles
             );
         }
         out.push('}');
@@ -636,30 +686,30 @@ mod tests {
     #[test]
     fn wire_frames_are_versioned_and_escaped() {
         let ok = ok_frame(Format::Json, true, "{\"k\":1}");
-        assert!(ok.starts_with("{\"schema_version\":3,\"status\":\"ok\",\"memo_hit\":true,"));
+        assert!(ok.starts_with("{\"schema_version\":4,\"status\":\"ok\",\"memo_hit\":true,"));
         assert!(ok.ends_with(",\"report\":{\"k\":1}}"), "report must be the raw last key: {ok}");
         let ok_text = ok_frame(Format::Text, false, "line one\nline two");
         assert!(ok_text.ends_with(",\"report\":\"line one\\nline two\"}"));
 
         let e = error_frame("bad_request", "not a \"frame\"");
-        assert!(e.starts_with("{\"schema_version\":3,\"status\":\"error\",\"error\":{\"kind\":\"bad_request\""));
+        assert!(e.starts_with("{\"schema_version\":4,\"status\":\"error\",\"error\":{\"kind\":\"bad_request\""));
         assert!(e.contains("\\\"frame\\\""));
 
         assert_eq!(
             overloaded_frame(1, 64, false),
-            "{\"schema_version\":3,\"status\":\"overloaded\",\"shard\":1,\
+            "{\"schema_version\":4,\"status\":\"overloaded\",\"shard\":1,\
              \"queue_depth\":64,\"shedding\":false}"
         );
         assert_eq!(
             rate_limited_frame("rps", 250),
-            "{\"schema_version\":3,\"status\":\"rate_limited\",\"reason\":\"rps\",\
+            "{\"schema_version\":4,\"status\":\"rate_limited\",\"reason\":\"rps\",\
              \"retry_after_ms\":250}"
         );
-        assert_eq!(bye_frame(), "{\"schema_version\":3,\"status\":\"bye\"}");
+        assert_eq!(bye_frame(), "{\"schema_version\":4,\"status\":\"bye\"}");
 
         let s = StatsFrame { served: 2, memo_hits: 1, queue_depths: vec![0, 3], ..Default::default() };
         let rendered = s.render();
-        assert!(rendered.starts_with("{\"schema_version\":3,\"status\":\"stats\",\"served\":2,"));
+        assert!(rendered.starts_with("{\"schema_version\":4,\"status\":\"stats\",\"served\":2,"));
         assert!(rendered.contains("\"rate_limited\":0"));
         assert!(rendered.contains("\"deadline_expired\":0"));
         assert!(rendered.contains("\"worker_restarts\":0"));

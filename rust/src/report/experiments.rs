@@ -154,6 +154,100 @@ fn machine_label(arch: &str) -> &'static str {
     }
 }
 
+/// One point of the working-set sweep: the kernel re-analyzed with its
+/// working set pinned to `working_set` bytes under the opt-in memory
+/// model, next to the infinite-L1 prediction for the same kernel.
+#[derive(Debug, Clone)]
+pub struct MemSweepRow {
+    pub working_set: u64,
+    /// Analytic prediction with the memory model on (cy / asm iter).
+    pub cy_per_asm_iter: f32,
+    /// Which bound won (`port_pressure`, `memory`, ...).
+    pub bound: &'static str,
+    /// Hierarchy level the working set was assigned to.
+    pub level: String,
+    /// The infinite-L1 prediction (identical for every row).
+    pub infinite_l1_cy: f32,
+}
+
+/// Default sweep sizes: L1-resident through far beyond every built-in
+/// LLC (16 KiB .. 64 MiB).
+pub const MEM_SWEEP_SIZES: [u64; 7] = [
+    16 << 10,
+    64 << 10,
+    256 << 10,
+    1 << 20,
+    4 << 20,
+    16 << 20,
+    64 << 20,
+];
+
+/// The working-set sweep the paper's infinite-L1 model cannot produce:
+/// re-analyze one workload at each pinned working-set size and report
+/// where the memory bound overtakes the in-core bounds. Cache-aware
+/// predictions must be monotone non-decreasing in footprint, and the
+/// L1-resident point must equal the infinite-L1 prediction exactly —
+/// `ci.sh --mem-smoke` gates both on the release binary.
+pub fn mem_sweep(
+    family: &str,
+    target: &str,
+    flag: &str,
+    arch: &str,
+    sizes: &[u64],
+) -> Result<Vec<MemSweepRow>> {
+    use crate::api::{Engine, Passes};
+    let w = workloads::find(family, target, flag)
+        .ok_or_else(|| anyhow::anyhow!("no fixture {family}/{target}/{flag}"))?;
+    let engine = Engine::cpu_only();
+    let base = engine
+        .analyze(
+            &Engine::request(&w.name())
+                .arch(arch)
+                .source(w.source)
+                .passes(Passes::THROUGHPUT)
+                .unroll(w.unroll),
+        )
+        .map_err(|e| anyhow::anyhow!("{e}"))?;
+    let infinite_l1_cy = base.predicted_cy_per_asm_iter().unwrap_or(0.0);
+    let mut rows = Vec::with_capacity(sizes.len());
+    for &ws in sizes {
+        let report = engine
+            .analyze(
+                &Engine::request(&w.name())
+                    .arch(arch)
+                    .source(w.source)
+                    .passes(Passes::THROUGHPUT)
+                    .unroll(w.unroll)
+                    .mem_model(format!("ws={ws}")),
+            )
+            .map_err(|e| anyhow::anyhow!("{e}"))?;
+        let p = report.prediction();
+        let winner = p.winner().ok_or_else(|| anyhow::anyhow!("no model bound"))?;
+        rows.push(MemSweepRow {
+            working_set: ws,
+            cy_per_asm_iter: winner.cy_per_asm_iter,
+            bound: winner.kind.name(),
+            level: report.memory.as_ref().map(|m| m.level.clone()).unwrap_or_default(),
+            infinite_l1_cy,
+        });
+    }
+    Ok(rows)
+}
+
+pub fn render_mem_sweep(rows: &[MemSweepRow]) -> Vec<Vec<String>> {
+    rows.iter()
+        .map(|r| {
+            vec![
+                crate::mdb::format::fmt_size(r.working_set),
+                format!("{:.2}", r.cy_per_asm_iter),
+                r.bound.to_string(),
+                r.level.clone(),
+                format!("{:.2}", r.infinite_l1_cy),
+            ]
+        })
+        .collect()
+}
+
 /// Format helpers shared by CLI and benches.
 pub fn render_table1(rows: &[Table1Row]) -> Vec<Vec<String>> {
     rows.iter()
@@ -209,6 +303,31 @@ mod tests {
 
     fn quick_cfg() -> SimConfig {
         SimConfig { iterations: 300, warmup: 80 }
+    }
+
+    #[test]
+    fn mem_sweep_is_monotone_and_anchored_at_infinite_l1() {
+        // Strided triad on skl: 8 lines/iter; ECM cy/line 0 (l1),
+        // 1 (l2), 5 (l3), 9.5 (mem) -> memory bounds 0/8/40/76 against
+        // the 2.0 port bound.
+        let rows =
+            mem_sweep("triad-strided", "any", "-O3", "skl", &MEM_SWEEP_SIZES).unwrap();
+        assert_eq!(rows.len(), 7);
+        let cys: Vec<f32> = rows.iter().map(|r| r.cy_per_asm_iter).collect();
+        assert_eq!(cys, vec![2.0, 8.0, 8.0, 8.0, 40.0, 76.0, 76.0]);
+        // L1-resident == the infinite-L1 prediction, exactly.
+        assert_eq!(rows[0].cy_per_asm_iter, rows[0].infinite_l1_cy);
+        assert_eq!(rows[0].bound, "port_pressure");
+        assert_eq!(rows[0].level, "l1");
+        for w in rows.windows(2) {
+            assert!(w[1].cy_per_asm_iter >= w[0].cy_per_asm_iter, "{w:?}");
+        }
+        for r in &rows[1..] {
+            assert_eq!(r.bound, "memory", "{r:?}");
+            assert_eq!(r.infinite_l1_cy, 2.0);
+        }
+        assert_eq!(rows[4].level, "l3");
+        assert_eq!(rows[6].level, "mem");
     }
 
     #[test]

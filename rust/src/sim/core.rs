@@ -23,6 +23,7 @@ use crate::isa::register::RegisterFile;
 use crate::mdb::{MachineModel, UopKind};
 
 use super::decode::{slot_structure, DecodedIter, DecodedKernel, DepSource, DepVersion, MemIdent};
+use super::mem::MemSimPlan;
 use super::trace::Counters;
 
 /// Simulation run parameters.
@@ -78,6 +79,13 @@ impl Measurement {
     /// 3.0 cy under a 4.0 cy = 8/2 period); otherwise a dependency
     /// chain — nothing structural saturated, so latency did.
     pub fn bottleneck_resource(&self, machine: &MachineModel) -> String {
+        // A dispatch front half-throttled by LSQ-full cycles is a memory
+        // bottleneck regardless of what the ports show downstream (only
+        // possible under an opt-in memory model; off-mode keeps the
+        // counter at zero).
+        if self.counters.lsq_stall_cycles * 2 >= self.window_cycles {
+            return "load/store queue".to_string();
+        }
         let iters = self.iterations.max(1) as f64;
         let mut best = 0usize;
         let mut best_busy = f64::NEG_INFINITY;
@@ -190,13 +198,27 @@ pub fn simulate(kernel: &Kernel, machine: &MachineModel, cfg: SimConfig) -> Resu
 /// a [`DecodedKernel`] once and use [`run_decoded`].
 pub fn run(template: &DecodedIter, machine: &MachineModel, cfg: SimConfig) -> Measurement {
     let (slot_ranges, empty_slots) = slot_structure(template);
-    run_core(template, &slot_ranges, empty_slots, machine, cfg)
+    run_core(template, &slot_ranges, empty_slots, machine, cfg, None)
 }
 
 /// Run a prebuilt [`DecodedKernel`]: no per-call decode or slot-range
 /// work. Bit-identical to [`simulate`] on the same kernel.
 pub fn run_decoded(dk: &DecodedKernel, machine: &MachineModel, cfg: SimConfig) -> Measurement {
-    run_core(&dk.iter, &dk.slot_ranges, dk.empty_slots, machine, cfg)
+    run_core(&dk.iter, &dk.slot_ranges, dk.empty_slots, machine, cfg, None)
+}
+
+/// Like [`run_decoded`], but with an optional memory-model plan: loads
+/// that open a new cacheline at the resident hierarchy level pay the
+/// level's extra latency, and Load/StoreAgu µ-ops compete for a finite
+/// load/store queue from dispatch to retire. `plan: None` is exactly
+/// [`run_decoded`] — bit-identical, enforced by `tests/sim_memory.rs`.
+pub fn run_decoded_mem(
+    dk: &DecodedKernel,
+    machine: &MachineModel,
+    cfg: SimConfig,
+    plan: Option<&MemSimPlan>,
+) -> Measurement {
+    run_core(&dk.iter, &dk.slot_ranges, dk.empty_slots, machine, cfg, plan)
 }
 
 fn run_core(
@@ -205,6 +227,7 @@ fn run_core(
     empty_slots: usize,
     machine: &MachineModel,
     cfg: SimConfig,
+    plan: Option<&MemSimPlan>,
 ) -> Measurement {
     let nuops = template.uops.len();
     let total_iters = (cfg.warmup + cfg.iterations) as u64;
@@ -241,6 +264,26 @@ fn run_core(
     let mut last_store: HashMap<MemKey, u64> = HashMap::new();
     let mut store_done: HashMap<u64, u64> = HashMap::new();
     let mut counters = Counters::default();
+
+    // Memory-model state (all dead when `plan` is None). Per-template-uop:
+    // does it hold an LSQ entry (Load/StoreAgu, dispatch → retire), and
+    // which Load ordinal is it (index into the plan's miss periods)?
+    let lsq_size = plan.map_or(usize::MAX, |p| p.lsq_size);
+    let mut lsq_uop: Vec<bool> = Vec::new();
+    let mut load_ord: Vec<usize> = Vec::new();
+    if plan.is_some() {
+        let mut n_loads = 0usize;
+        for u in &template.uops {
+            lsq_uop.push(matches!(u.kind, UopKind::Load | UopKind::StoreAgu));
+            if u.kind == UopKind::Load {
+                load_ord.push(n_loads);
+                n_loads += 1;
+            } else {
+                load_ord.push(usize::MAX);
+            }
+        }
+    }
+    let mut lsq_occ: usize = 0;
 
     // Dispatch cursor in slot units.
     let mut disp_iter: u64 = 0;
@@ -296,7 +339,14 @@ fn run_core(
             }
             // Pop the slot's µ-ops from the ROB front.
             for _ in s..e {
-                rob.pop_front();
+                let fin = rob.pop_front();
+                if plan.is_some() {
+                    if let Some(f) = fin {
+                        if lsq_uop[f.tidx] {
+                            lsq_occ -= 1;
+                        }
+                    }
+                }
                 rob_head_gid += 1;
             }
             ret_slot += 1;
@@ -404,7 +454,19 @@ fn run_core(
                 port_busy[p] += tu.occupancy as u64;
                 let mut dc = cycle + tu.latency.max(1) as u64;
                 if tu.kind == UopKind::Load {
-                    let base = cycle + load_lat;
+                    let mut base = cycle + load_lat;
+                    // Memory model: a load that opens a new cacheline at
+                    // the resident level pays the level's extra latency.
+                    // Forwarded loads read the store buffer, not the
+                    // hierarchy, so they never miss.
+                    if fwd_done.is_none() {
+                        if let Some(p) = plan {
+                            if p.load_misses(load_ord[rob[i].tidx], iter as usize) {
+                                base += p.miss_latency_cy as u64;
+                                counters.cache_miss_loads += 1;
+                            }
+                        }
+                    }
                     dc = match fwd_done {
                         Some(sc) => base.max(sc + fwd_lat),
                         None => base,
@@ -428,6 +490,7 @@ fn run_core(
         // ---------------- dispatch / rename --------------------------
         let mut dispatched = 0;
         let mut dispatch_blocked = false;
+        let mut lsq_blocked = false;
         while dispatched < rename_width && disp_iter < total_iters {
             if disp_slot < empty_slots {
                 disp_slot += 1;
@@ -436,9 +499,23 @@ fn run_core(
             }
             let (s, e) = slot_ranges[disp_slot - empty_slots];
             let n_new = e - s;
+            let n_lsq = if plan.is_some() {
+                (s..e).filter(|&t| lsq_uop[t]).count()
+            } else {
+                0
+            };
             if rob.len() + n_new > rob_size || sched_occupancy + n_new > sched_size {
                 counters.dispatch_stall_cycles += 1;
                 dispatch_blocked = true;
+                break;
+            }
+            if lsq_occ + n_lsq > lsq_size {
+                // ROB and scheduler have room but the LSQ is full: a
+                // stall the infinite-L1 model cannot produce.
+                counters.dispatch_stall_cycles += 1;
+                counters.lsq_stall_cycles += 1;
+                dispatch_blocked = true;
+                lsq_blocked = true;
                 break;
             }
             for t in s..e {
@@ -464,6 +541,7 @@ fn run_core(
                 next_gid += 1;
                 sched_occupancy += 1;
             }
+            lsq_occ += n_lsq;
             counters.uops_dispatched += n_new as u64;
             disp_slot += 1;
             dispatched += 1;
@@ -516,6 +594,9 @@ fn run_core(
                 }
                 if dispatch_blocked {
                     counters.dispatch_stall_cycles += skipped;
+                }
+                if lsq_blocked {
+                    counters.lsq_stall_cycles += skipped;
                 }
                 cycle = target - 1;
             }

@@ -1,0 +1,526 @@
+//! Parametric memory hierarchy + working-set footprint analysis.
+//!
+//! The paper's in-core model assumes an infinite L1: every load completes in
+//! `load_latency` cycles regardless of the kernel's data footprint. This
+//! module lifts that assumption behind an **opt-in** memory model
+//! (`AnalysisRequest::mem_model`). Nothing here runs unless a spec string is
+//! supplied, which keeps every paper-pinned table bit-identical.
+//!
+//! Three pieces compose:
+//!
+//! 1. [`MemModel`] — the hierarchy parameters. Seeded from the machine
+//!    model's `cache` stanzas (`mdb::machine::CacheLevel`), then overridden
+//!    by a CLI-style spec string such as
+//!    `l1=32K:4,l2=1M:12,mem=:80,ws=4M,lsq=72,lfb=8`.
+//! 2. [`Footprint`] — a static sweep over the kernel's memory references.
+//!    Streams are grouped by (base, index, scale, symbol); each stream's
+//!    advance per assembly iteration is recovered from the pointer-bump
+//!    instructions (`add`/`sub` with one immediate operand writing the
+//!    address register). Working set = bytes/iter × iterations unless the
+//!    spec pins `ws=`.
+//! 3. [`MemoryAnalysis`] — the ECM-style throughput bound: the working set
+//!    is assigned to the first level that holds it, and the cycles per
+//!    cacheline to move data that deep is the cumulative sum of inter-level
+//!    latency deltas divided by the line-fill-buffer count (overlap factor).
+//!
+//! [`MemSimPlan`] carries the per-load miss periods + level latency into the
+//! OoO simulator so `run_decoded_mem` can charge realistic load completion
+//! times and model a finite load/store queue.
+
+use crate::asm::kernel::Kernel;
+use crate::isa::instruction::Instruction;
+use crate::isa::operand::{MemRef, Operand, Register};
+use crate::mdb::format::{fmt_size, parse_size};
+use crate::mdb::machine::{CacheLevel, MachineModel};
+use crate::mdb::UopKind;
+use crate::sim::decode::DecodedIter;
+use anyhow::{bail, Context, Result};
+
+/// Fully-resolved memory hierarchy parameters for one analysis.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MemModel {
+    /// Cache levels ordered nearest-first (l1, l2, ...). Never empty.
+    pub levels: Vec<CacheLevel>,
+    /// Flat latency of a line fill that misses every cache level.
+    pub mem_latency_cy: u32,
+    /// Load/store queue entries available to the simulator.
+    pub lsq_size: usize,
+    /// Concurrent line fills (line-fill buffers); the ECM overlap divisor.
+    pub lfb: u32,
+    /// `ws=` spec override: pin the working set instead of deriving it.
+    pub ws_override: Option<u64>,
+}
+
+impl MemModel {
+    /// Build a model from the machine's `cache` stanzas plus a spec string.
+    ///
+    /// Grammar: comma-separated entries. `l<N>=SIZE:LAT` overrides or creates
+    /// a level (empty SIZE keeps the existing size); `mem=:LAT` sets the
+    /// miss-everything latency; `ws=SIZE`, `lsq=N`, `lfb=N` set scalars.
+    /// The bare spec (`""`, `on`, `default`, `true`) takes model defaults.
+    pub fn build(machine: &MachineModel, spec: &str) -> Result<MemModel> {
+        let mut levels = machine.caches.clone();
+        let mut mem_latency_cy = machine.mem_latency_cy;
+        let mut lsq_size = machine.params.lsq_size;
+        let mut lfb = machine.params.lfb;
+        let mut ws_override = None;
+
+        let spec = spec.trim();
+        if !matches!(spec, "" | "on" | "default" | "true") {
+            for entry in spec.split(',') {
+                let entry = entry.trim();
+                if entry.is_empty() {
+                    continue;
+                }
+                let (key, value) = entry
+                    .split_once('=')
+                    .with_context(|| format!("mem-model entry `{entry}`: expected key=value"))?;
+                match key {
+                    "ws" => {
+                        ws_override = Some(
+                            parse_size(value)
+                                .with_context(|| format!("mem-model ws `{value}`"))?,
+                        );
+                    }
+                    "lsq" => {
+                        lsq_size = value
+                            .parse()
+                            .with_context(|| format!("mem-model lsq `{value}`"))?;
+                    }
+                    "lfb" => {
+                        lfb = value
+                            .parse()
+                            .with_context(|| format!("mem-model lfb `{value}`"))?;
+                    }
+                    "mem" => {
+                        let lat = value.strip_prefix(':').unwrap_or(value);
+                        mem_latency_cy = lat
+                            .parse()
+                            .with_context(|| format!("mem-model mem latency `{value}`"))?;
+                    }
+                    name => {
+                        let (size, lat) = value.split_once(':').with_context(|| {
+                            format!("mem-model level `{entry}`: expected {name}=SIZE:LAT")
+                        })?;
+                        let latency_cy: u32 = lat
+                            .parse()
+                            .with_context(|| format!("mem-model `{name}` latency `{lat}`"))?;
+                        if let Some(level) = levels.iter_mut().find(|l| l.name == name) {
+                            if !size.is_empty() {
+                                level.size_bytes = parse_size(size)
+                                    .with_context(|| format!("mem-model `{name}` size"))?;
+                            }
+                            level.latency_cy = latency_cy;
+                        } else {
+                            if size.is_empty() {
+                                bail!("mem-model `{name}`: new level needs an explicit size");
+                            }
+                            levels.push(CacheLevel {
+                                name: name.to_string(),
+                                size_bytes: parse_size(size)
+                                    .with_context(|| format!("mem-model `{name}` size"))?,
+                                line_bytes: 64,
+                                latency_cy,
+                                assoc: 8,
+                            });
+                        }
+                    }
+                }
+            }
+        }
+
+        levels.sort_by_key(|l| l.size_bytes);
+        if levels.is_empty() {
+            bail!(
+                "mem-model: machine `{}` declares no cache levels and the spec adds none",
+                machine.arch_name
+            );
+        }
+        if mem_latency_cy == 0 {
+            bail!("mem-model: memory latency is unset (add `mem=:LAT` or a `cache mem` stanza)");
+        }
+        if lfb == 0 {
+            bail!("mem-model: lfb must be >= 1");
+        }
+        if lsq_size == 0 {
+            bail!("mem-model: lsq must be >= 1");
+        }
+        let mut prev = 0u32;
+        for l in &levels {
+            if l.latency_cy < prev {
+                bail!("mem-model: level `{}` latency {} below inner level's {prev}", l.name, l.latency_cy);
+            }
+            prev = l.latency_cy;
+        }
+        if mem_latency_cy < prev {
+            bail!("mem-model: memory latency {mem_latency_cy} below outermost cache's {prev}");
+        }
+
+        Ok(MemModel { levels, mem_latency_cy, lsq_size, lfb, ws_override })
+    }
+
+    /// Line size used for footprint math (the innermost level's).
+    pub fn line_bytes(&self) -> u32 {
+        self.levels[0].line_bytes
+    }
+}
+
+/// One contiguous access stream: a distinct (base, index, scale, symbol)
+/// address expression, with the bytes it advances per assembly iteration.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Stream {
+    pub base: Option<Register>,
+    pub index: Option<Register>,
+    pub scale: u8,
+    pub symbol: Option<String>,
+    /// Bytes the address moves per assembly (unrolled) iteration.
+    pub advance: u64,
+}
+
+/// Static working-set summary of a kernel.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Footprint {
+    pub streams: Vec<Stream>,
+    /// Total bytes of new data touched per assembly iteration.
+    pub bytes_per_iter: u64,
+    /// `bytes_per_iter / line`, as a float (streams can share lines).
+    pub lines_per_iter: f32,
+    /// For each Load uop in the decoded iteration (in uop order): the miss
+    /// period — a new line every `P` iterations (0 = address never moves).
+    pub load_periods: Vec<u32>,
+}
+
+/// Per-iteration advance of `reg`: scan for pointer-bump instructions
+/// (`add*`/`sub*` mnemonics with exactly one immediate operand) that write
+/// the register, and sum their |immediate|s.
+fn register_advance(kernel: &Kernel, reg: Register) -> u64 {
+    let mut adv = 0u64;
+    for instr in &kernel.instructions {
+        let m = instr.mnemonic.to_ascii_lowercase();
+        if !(m.starts_with("add") || m.starts_with("sub")) {
+            continue;
+        }
+        let imms: Vec<i64> = instr
+            .operands
+            .iter()
+            .filter_map(|o| match o {
+                Operand::Imm(v) => Some(*v),
+                _ => None,
+            })
+            .collect();
+        if imms.len() != 1 {
+            continue;
+        }
+        if instr.writes().contains(&reg) {
+            adv += imms[0].unsigned_abs();
+        }
+    }
+    adv
+}
+
+fn stream_key(m: &MemRef) -> (Option<Register>, Option<Register>, u8, Option<String>) {
+    (m.base, m.index, m.scale, m.symbol.clone())
+}
+
+/// Derive the kernel's access streams and per-load miss periods.
+///
+/// `iter` supplies the Load uops (one period each, aligned with the decoded
+/// uop order the simulator walks); `kernel` supplies the concrete address
+/// registers and the pointer-bump instructions that advance them.
+pub fn derive_footprint(kernel: &Kernel, iter: &DecodedIter, line_bytes: u32) -> Footprint {
+    let mut streams: Vec<Stream> = Vec::new();
+    let mut keys: Vec<(Option<Register>, Option<Register>, u8, Option<String>)> = Vec::new();
+
+    let mut note_stream = |m: &MemRef| {
+        let key = stream_key(m);
+        if keys.contains(&key) {
+            return;
+        }
+        let base_adv = m.base.map_or(0, |r| register_advance(kernel, r));
+        let index_adv = m.index.map_or(0, |r| register_advance(kernel, r));
+        let advance = base_adv + index_adv * u64::from(m.scale.max(1));
+        streams.push(Stream {
+            base: m.base,
+            index: m.index,
+            scale: m.scale,
+            symbol: m.symbol.clone(),
+            advance,
+        });
+        keys.push(key);
+    };
+
+    for instr in &kernel.instructions {
+        for op in &instr.operands {
+            if let Operand::Mem(m) = op {
+                note_stream(m);
+            }
+        }
+    }
+
+    let bytes_per_iter: u64 = streams.iter().map(|s| s.advance).sum();
+    let lines_per_iter = bytes_per_iter as f32 / line_bytes as f32;
+
+    // Map each Load uop back to its kernel instruction's first memref stream
+    // and compute the miss period: a fresh line every ceil(line/advance)
+    // iterations. Invariant addresses (advance 0) never miss.
+    let load_periods = iter
+        .uops
+        .iter()
+        .filter(|u| u.kind == UopKind::Load)
+        .map(|u| {
+            let adv = kernel
+                .instructions
+                .get(u.instr)
+                .and_then(instr_first_memref)
+                .map(|m| {
+                    let key = stream_key(m);
+                    keys.iter()
+                        .position(|k| *k == key)
+                        .map_or(0, |i| streams[i].advance)
+                })
+                .unwrap_or(0);
+            if adv == 0 {
+                0
+            } else {
+                u32::try_from(u64::from(line_bytes).div_ceil(adv)).unwrap_or(u32::MAX)
+            }
+        })
+        .collect();
+
+    Footprint { streams, bytes_per_iter, lines_per_iter, load_periods }
+}
+
+fn instr_first_memref(instr: &Instruction) -> Option<&MemRef> {
+    instr.operands.iter().find_map(|o| o.mem())
+}
+
+/// The memory bound and its ECM decomposition, as surfaced in reports.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MemoryAnalysis {
+    /// Working set in bytes (derived or `ws=`-pinned).
+    pub working_set: u64,
+    pub bytes_per_iter: u64,
+    pub lines_per_iter: f32,
+    /// Number of distinct access streams found.
+    pub streams: usize,
+    /// Level the working set resides in: a cache name or `"mem"`.
+    pub level: String,
+    /// Flat load-completion latency at that level (cycles).
+    pub level_latency_cy: u32,
+    /// Cycles per cacheline to move data from `level` into L1.
+    pub cy_per_line: f32,
+    /// The memory throughput bound: `cy_per_line * lines_per_iter`.
+    pub cy_per_asm_iter: f32,
+    pub lsq_size: usize,
+    /// Cumulative cycles/line for every hierarchy tier (ECM-style), e.g.
+    /// `[("l1", 0.0), ("l2", 1.0), ("l3", 5.0), ("mem", 9.5)]`.
+    pub ecm: Vec<(String, f32)>,
+}
+
+/// Assign the working set to a hierarchy level and compute the ECM bound.
+pub fn analyze_memory(model: &MemModel, fp: &Footprint, iterations: u64) -> MemoryAnalysis {
+    let working_set = model
+        .ws_override
+        .unwrap_or_else(|| fp.bytes_per_iter.saturating_mul(iterations));
+
+    // Cumulative cycles/line to pull data from tier k into L1: the sum over
+    // inner transfers of (lat_k - lat_{k-1}) / lfb. Residency in L1 is free.
+    let lfb = model.lfb as f32;
+    let mut ecm: Vec<(String, f32)> = Vec::with_capacity(model.levels.len() + 1);
+    let mut cum = 0.0f32;
+    let mut prev_lat = model.levels[0].latency_cy;
+    for (i, l) in model.levels.iter().enumerate() {
+        if i > 0 {
+            cum += (l.latency_cy - prev_lat) as f32 / lfb;
+            prev_lat = l.latency_cy;
+        }
+        ecm.push((l.name.clone(), cum));
+    }
+    cum += (model.mem_latency_cy - prev_lat) as f32 / lfb;
+    ecm.push(("mem".to_string(), cum));
+
+    let (level, level_latency_cy, cy_per_line) = model
+        .levels
+        .iter()
+        .enumerate()
+        .find(|(_, l)| l.size_bytes >= working_set)
+        .map(|(i, l)| (l.name.clone(), l.latency_cy, ecm[i].1))
+        .unwrap_or_else(|| {
+            ("mem".to_string(), model.mem_latency_cy, ecm.last().unwrap().1)
+        });
+
+    MemoryAnalysis {
+        working_set,
+        bytes_per_iter: fp.bytes_per_iter,
+        lines_per_iter: fp.lines_per_iter,
+        streams: fp.streams.len(),
+        level,
+        level_latency_cy,
+        cy_per_line,
+        cy_per_asm_iter: cy_per_line * fp.lines_per_iter,
+        lsq_size: model.lsq_size,
+        ecm,
+    }
+}
+
+impl MemoryAnalysis {
+    /// Human-readable working set, e.g. `4M`.
+    pub fn working_set_human(&self) -> String {
+        fmt_size(self.working_set)
+    }
+}
+
+/// What the OoO simulator needs from the memory model.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MemSimPlan {
+    /// Extra completion latency (beyond the in-core `load_latency`) a load
+    /// pays when it opens a new cacheline at the resident level.
+    pub miss_latency_cy: u32,
+    /// LSQ entries; Load and StoreAgu uops occupy one from dispatch to
+    /// retire.
+    pub lsq_size: usize,
+    /// Per-Load-uop miss periods from [`Footprint::load_periods`].
+    pub load_periods: Vec<u32>,
+}
+
+impl MemSimPlan {
+    /// Build the plan: loads at the resident level pay `level_latency - l1`
+    /// extra cycles on iterations that open a new line.
+    pub fn new(model: &MemModel, analysis: &MemoryAnalysis, fp: &Footprint) -> MemSimPlan {
+        let l1_lat = model.levels[0].latency_cy;
+        MemSimPlan {
+            miss_latency_cy: analysis.level_latency_cy.saturating_sub(l1_lat),
+            lsq_size: model.lsq_size,
+            load_periods: fp.load_periods.clone(),
+        }
+    }
+
+    /// Does load-uop number `load_idx` (0-based among Load uops in one
+    /// iteration) miss L1 on assembly iteration `iter_idx`?
+    pub fn load_misses(&self, load_idx: usize, iter_idx: usize) -> bool {
+        if self.miss_latency_cy == 0 {
+            return false;
+        }
+        match self.load_periods.get(load_idx) {
+            Some(&p) if p > 0 => iter_idx % (p as usize) == 0,
+            _ => false,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mdb;
+
+    fn skl() -> std::sync::Arc<MachineModel> {
+        mdb::by_name_shared("skl").unwrap()
+    }
+
+    #[test]
+    fn default_spec_takes_machine_hierarchy() {
+        let m = MemModel::build(&skl(), "default").unwrap();
+        assert_eq!(m.levels.len(), 3);
+        assert_eq!(m.levels[0].name, "l1");
+        assert_eq!(m.levels[0].size_bytes, 32 * 1024);
+        assert_eq!(m.levels[2].size_bytes, 8 << 20);
+        assert_eq!(m.mem_latency_cy, 80);
+        assert_eq!(m.lsq_size, 72);
+        assert_eq!(m.lfb, 8);
+        assert!(m.ws_override.is_none());
+    }
+
+    #[test]
+    fn spec_overrides_and_scalars() {
+        let m = MemModel::build(&skl(), "l2=512K:14,mem=:100,ws=4M,lsq=8,lfb=4").unwrap();
+        let l2 = m.levels.iter().find(|l| l.name == "l2").unwrap();
+        assert_eq!(l2.size_bytes, 512 * 1024);
+        assert_eq!(l2.latency_cy, 14);
+        assert_eq!(m.mem_latency_cy, 100);
+        assert_eq!(m.ws_override, Some(4 << 20));
+        assert_eq!(m.lsq_size, 8);
+        assert_eq!(m.lfb, 4);
+        // Empty size keeps the existing one, just swaps latency.
+        let m = MemModel::build(&skl(), "l1=:5").unwrap();
+        assert_eq!(m.levels[0].size_bytes, 32 * 1024);
+        assert_eq!(m.levels[0].latency_cy, 5);
+    }
+
+    #[test]
+    fn bad_specs_error() {
+        for bad in [
+            "l9=:7",            // new level without a size
+            "l1=32K",           // missing latency
+            "ws=banana",        // unparseable size
+            "mem=:0",           // zero memory latency
+            "lfb=0",
+            "lsq=0",
+            "l1=32K:90",        // latency above l2's -> non-increasing
+        ] {
+            assert!(MemModel::build(&skl(), bad).is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn ecm_decomposition_is_cumulative_over_lfb() {
+        let m = MemModel::build(&skl(), "on").unwrap();
+        // skl: l1@4, l2@12, l3@44, mem@80, lfb 8 ->
+        // l1 0, l2 (12-4)/8=1, l3 +32/8=5, mem +36/8=9.5
+        let fp = Footprint {
+            streams: vec![],
+            bytes_per_iter: 128,
+            lines_per_iter: 2.0,
+            load_periods: vec![],
+        };
+        let a = analyze_memory(&m, &fp, 1000);
+        assert_eq!(
+            a.ecm,
+            vec![
+                ("l1".to_string(), 0.0),
+                ("l2".to_string(), 1.0),
+                ("l3".to_string(), 5.0),
+                ("mem".to_string(), 9.5),
+            ]
+        );
+        // 128 B/iter * 1000 iters = 128000 B -> l2 (32K < 128000 <= 1M).
+        assert_eq!(a.level, "l2");
+        assert_eq!(a.cy_per_line, 1.0);
+        assert_eq!(a.cy_per_asm_iter, 2.0);
+        assert_eq!(a.working_set, 128_000);
+    }
+
+    #[test]
+    fn l1_resident_working_set_costs_nothing() {
+        let m = MemModel::build(&skl(), "ws=16K").unwrap();
+        let fp = Footprint {
+            streams: vec![],
+            bytes_per_iter: 512,
+            lines_per_iter: 8.0,
+            load_periods: vec![],
+        };
+        let a = analyze_memory(&m, &fp, 1_000_000);
+        assert_eq!(a.level, "l1");
+        assert_eq!(a.cy_per_line, 0.0);
+        assert_eq!(a.cy_per_asm_iter, 0.0);
+        // ws override wins over the derived footprint.
+        assert_eq!(a.working_set, 16 * 1024);
+    }
+
+    #[test]
+    fn sim_plan_miss_periods() {
+        let m = MemModel::build(&skl(), "ws=4M").unwrap();
+        let fp = Footprint {
+            streams: vec![],
+            bytes_per_iter: 512,
+            lines_per_iter: 8.0,
+            load_periods: vec![1, 2, 0],
+        };
+        let a = analyze_memory(&m, &fp, 1);
+        assert_eq!(a.level, "l3");
+        let plan = MemSimPlan::new(&m, &a, &fp);
+        assert_eq!(plan.miss_latency_cy, 44 - 4);
+        assert!(plan.load_misses(0, 0) && plan.load_misses(0, 7));
+        assert!(plan.load_misses(1, 0) && !plan.load_misses(1, 1) && plan.load_misses(1, 2));
+        assert!(!plan.load_misses(2, 0)); // invariant address never misses
+    }
+}

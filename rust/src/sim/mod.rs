@@ -11,6 +11,10 @@
 //! * dependency-carrying memory (store-to-load forwarding with latency —
 //!   the mechanism behind the paper's §III-B `-O1` anomaly),
 //! * finite ROB / scheduler, bounded rename and retire width,
+//! * an **opt-in** parametric memory hierarchy + load/store queue
+//!   (`sim::mem`) that lifts the paper's infinite-L1 assumption: load
+//!   completion latency then depends on the kernel's working-set
+//!   footprint, and Load/StoreAgu µ-ops compete for finite LSQ entries,
 //! * event counters mirroring the hardware events the paper quotes
 //!   (`UOPS_EXECUTED_STALL_CYCLES` etc.).
 //!
@@ -21,7 +25,11 @@
 
 pub mod core;
 pub mod decode;
+pub mod mem;
 pub mod trace;
 
-pub use core::{frontend_resource_label, run_decoded, simulate, Measurement, SimConfig};
+pub use core::{
+    frontend_resource_label, run_decoded, run_decoded_mem, simulate, Measurement, SimConfig,
+};
 pub use decode::{decode_kernel, DecodedIter, DecodedKernel, SimUop};
+pub use mem::{analyze_memory, derive_footprint, Footprint, MemModel, MemSimPlan, MemoryAnalysis};

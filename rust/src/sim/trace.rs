@@ -15,6 +15,13 @@ pub struct Counters {
     pub uops_dispatched: u64,
     /// Loads that hit store-to-load forwarding.
     pub forwarded_loads: u64,
+    /// Cycles rename/dispatch was blocked specifically on a full
+    /// load/store queue (only under the opt-in memory model; zero in
+    /// infinite-L1 mode).
+    pub lsq_stall_cycles: u64,
+    /// Loads that opened a new cacheline at the resident hierarchy
+    /// level and paid its latency (opt-in memory model only).
+    pub cache_miss_loads: u64,
 }
 
 impl Counters {
@@ -25,6 +32,8 @@ impl Counters {
         self.uops_executed -= start.uops_executed;
         self.uops_dispatched -= start.uops_dispatched;
         self.forwarded_loads -= start.forwarded_loads;
+        self.lsq_stall_cycles -= start.lsq_stall_cycles;
+        self.cache_miss_loads -= start.cache_miss_loads;
     }
 }
 
@@ -40,6 +49,8 @@ mod tests {
             uops_executed: 100,
             uops_dispatched: 110,
             forwarded_loads: 7,
+            lsq_stall_cycles: 6,
+            cache_miss_loads: 9,
         };
         let start = Counters {
             issue_stall_cycles: 3,
@@ -47,10 +58,14 @@ mod tests {
             uops_executed: 40,
             uops_dispatched: 45,
             forwarded_loads: 2,
+            lsq_stall_cycles: 2,
+            cache_miss_loads: 4,
         };
         c.subtract(&start);
         assert_eq!(c.issue_stall_cycles, 7);
         assert_eq!(c.uops_executed, 60);
         assert_eq!(c.forwarded_loads, 5);
+        assert_eq!(c.lsq_stall_cycles, 4);
+        assert_eq!(c.cache_miss_loads, 5);
     }
 }

@@ -161,6 +161,15 @@ pub const EXTRA: &[Workload] = &[
         isa: Isa::X86,
         source: include_str!("../../workloads/extra/triad_sse.s"),
     },
+    Workload {
+        family: "triad-strided",
+        compiled_for: "any",
+        flag: "-O3",
+        unroll: 4,
+        flops_per_it: 2,
+        isa: Isa::X86,
+        source: include_str!("../../workloads/extra/strided_triad.s"),
+    },
 ];
 
 /// RISC-V (RV64GC) fixtures — the third-backend proof of the

@@ -2,8 +2,9 @@
 //!
 //! * Golden-file snapshots of the JSON and CSV emitters for one x86 and
 //!   one RISC-V fixture (the rv64 one with the width-aware frontend
-//!   bound on, so the full bound decomposition is pinned byte-for-byte).
-//! * A schema lock: the version-3 JSON key set is pinned, so changing
+//!   bound on, so the full bound decomposition is pinned byte-for-byte),
+//!   plus a memory-model-active snapshot (strided triad, `ws=4M`).
+//! * A schema lock: the version-4 JSON key set is pinned, so changing
 //!   the emitted shape without bumping `SCHEMA_VERSION` (and this test)
 //!   fails CI.
 //! * A hand-rolled JSON validity check over every workload fixture ×
@@ -73,25 +74,63 @@ fn csv_golden_rv64_triad() {
     assert_eq!(got.trim_end(), want.trim_end());
 }
 
-/// The version-3 key set. v3 did not change the report body — the
-/// bump covers the serve wire frames (shedding/rate_limited fields and
-/// the new fault-tolerance counters), which share this version number.
-/// The report keys are therefore identical to v2. Changing the JSON
-/// shape requires bumping `SCHEMA_VERSION` *and* pinning the new set
-/// here — one without the other fails.
+/// The memory-model-active shape, pinned byte-for-byte: the strided
+/// triad with an L3-resident working set is memory-bound at the
+/// hand-derived 40.0 cy / asm iteration, and the `memory` section
+/// carries the ECM decomposition.
+fn strided_mem_report(engine: &Engine) -> AnalysisReport {
+    let w = workloads::find("triad-strided", "any", "-O3").unwrap();
+    engine
+        .analyze(
+            &Engine::request(&w.name())
+                .arch("skl")
+                .source(w.source)
+                .passes(Passes::THROUGHPUT)
+                .mem_model("ws=4M")
+                .unroll(w.unroll),
+        )
+        .unwrap()
+}
+
+#[test]
+fn json_golden_strided_triad_mem() {
+    let engine = Engine::cpu_only();
+    let got = strided_mem_report(&engine).to_json();
+    let want = include_str!("golden/skl_triad_mem.json");
+    assert_eq!(got.trim_end(), want.trim_end());
+}
+
+#[test]
+fn csv_golden_strided_triad_mem() {
+    let engine = Engine::cpu_only();
+    let got = strided_mem_report(&engine).to_csv();
+    let want = include_str!("golden/skl_triad_mem.csv");
+    assert_eq!(got.trim_end(), want.trim_end());
+}
+
+/// The version-4 key set: v3 plus the opt-in memory model — a `memory`
+/// report section (`working_set` .. `ecm`), `lsq_stall_cycles` in the
+/// simulation section, and the `memory` bound kind. With the memory
+/// model off, only the version digit differs from v3 (the off-mode
+/// goldens above pin that). Changing the JSON shape requires bumping
+/// `SCHEMA_VERSION` *and* pinning the new set here — one without the
+/// other fails.
 #[test]
 fn schema_version_pins_json_shape() {
-    const V3_KEYS: &[&str] = &[
+    const V4_KEYS: &[&str] = &[
         "arch",
         "baseline",
         "bottleneck_port",
         "bound",
         "bounds",
+        "bytes_per_iter",
         "carried_per_iteration",
         "critpath",
         "cy_per_asm_iter",
+        "cy_per_line",
         "cy_per_source_iter",
         "cycles_per_iteration",
+        "ecm",
         "forwarded_loads",
         "frontend",
         "hidden",
@@ -101,7 +140,13 @@ fn schema_version_pins_json_shape() {
         "issue_stall_cycles",
         "iterations",
         "kind",
+        "level",
+        "level_latency",
         "lines",
+        "lines_per_iter",
+        "lsq_size",
+        "lsq_stall_cycles",
+        "memory",
         "model_bound",
         "name",
         "occupancy",
@@ -113,18 +158,20 @@ fn schema_version_pins_json_shape() {
         "simulation",
         "slots",
         "source",
+        "streams",
         "text",
         "throughput",
         "totals",
         "uniform_cy",
         "unroll",
+        "working_set",
     ];
-    // This test pins version 3. A schema bump invalidates it by
+    // This test pins version 4. A schema bump invalidates it by
     // construction: update SCHEMA_VERSION, this constant and the pinned
     // key list together.
-    assert_eq!(SCHEMA_VERSION, 3, "schema bumped: re-pin the key set for the new version");
-    // A report with every section present (all passes + frontend
-    // bound) must emit exactly the pinned keys.
+    assert_eq!(SCHEMA_VERSION, 4, "schema bumped: re-pin the key set for the new version");
+    // A report with every section present (all passes + frontend bound
+    // + the opt-in memory model) must emit exactly the pinned keys.
     let engine = Engine::cpu_only();
     let w = workloads::find("triad", "skl", "-O3").unwrap();
     let report = engine
@@ -134,15 +181,17 @@ fn schema_version_pins_json_shape() {
                 .source(w.source)
                 .passes(Passes::ALL)
                 .frontend_bound(true)
+                .mem_model("ws=4M")
                 .sim_config(SimConfig { iterations: 120, warmup: 30 })
                 .unroll(w.unroll),
         )
         .unwrap();
     assert!(report.baseline.is_some() && report.simulation.is_some());
+    assert!(report.memory.is_some());
     let mut keys = json_keys(&report.to_json());
     keys.sort();
     keys.dedup();
-    assert_eq!(keys, V3_KEYS, "JSON shape changed without a SCHEMA_VERSION bump");
+    assert_eq!(keys, V4_KEYS, "JSON shape changed without a SCHEMA_VERSION bump");
 }
 
 /// Every fixture × matching built-in model emits valid JSON and

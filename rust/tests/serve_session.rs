@@ -123,7 +123,7 @@ fn concurrent_clients_round_trip_golden_frames() {
                     let frame = c.round_trip(&request);
                     let v = parsed(&frame);
                     assert_eq!(v.get("status").and_then(JsonValue::as_str), Some("ok"));
-                    assert_eq!(v.get("schema_version").and_then(JsonValue::as_u64), Some(3));
+                    assert_eq!(v.get("schema_version").and_then(JsonValue::as_u64), Some(4));
                     // The memo works per fingerprint even under
                     // concurrency: each client's repeats hit.
                     let expect_hit = i > 0;

@@ -1,0 +1,146 @@
+//! Integration: the opt-in cache hierarchy + LSQ (`sim::mem`).
+//!
+//! Two invariants matter. **Off**: with no `mem_model` on the request,
+//! every Measurement and every prediction is bit-identical to the
+//! infinite-L1 seed — the paper-pinned tables cannot drift. **On**: the
+//! strided triad's working-set sweep produces the hand-derived ECM
+//! numbers (8 lines/iter on skl: 8.0 cy in L2, 40.0 in L3, 76.0 in
+//! memory), and a starved LSQ shows up in the counters and the
+//! bottleneck label.
+
+use osaca::api::{Engine, OsacaError, Passes};
+use osaca::mdb::by_name;
+use osaca::sim::{
+    analyze_memory, derive_footprint, run_decoded, run_decoded_mem, DecodedKernel, MemModel,
+    MemSimPlan, SimConfig,
+};
+use osaca::workloads;
+
+fn cfg() -> SimConfig {
+    SimConfig { iterations: 400, warmup: 100 }
+}
+
+/// `run_decoded_mem(.., None)` is `run_decoded`: same cycles, same
+/// counters, same port busy — on every ISA the simulator supports.
+#[test]
+fn off_mode_is_bit_identical_across_isas() {
+    for (family, arch, flag) in [
+        ("triad", "skl", "-O3"),
+        ("triad", "zen", "-O3"),
+        ("triad", "tx2", "-O2"),
+        ("triad", "rv64", "-O2"),
+    ] {
+        let w = workloads::find(family, arch, flag).unwrap();
+        let m = by_name(arch).unwrap();
+        let dk = DecodedKernel::new(&w.kernel(), &m).unwrap();
+        let plain = run_decoded(&dk, &m, cfg());
+        let off = run_decoded_mem(&dk, &m, cfg(), None);
+        assert_eq!(plain.total_cycles, off.total_cycles, "{arch}");
+        assert_eq!(plain.window_cycles, off.window_cycles, "{arch}");
+        assert_eq!(plain.counters, off.counters, "{arch}");
+        assert_eq!(plain.port_busy, off.port_busy, "{arch}");
+        assert_eq!(plain.cycles_per_iteration, off.cycles_per_iteration, "{arch}");
+        // Off mode can never touch the memory-model counters.
+        assert_eq!(off.counters.lsq_stall_cycles, 0, "{arch}");
+        assert_eq!(off.counters.cache_miss_loads, 0, "{arch}");
+    }
+}
+
+fn strided_report(engine: &Engine, spec: Option<&str>) -> osaca::api::AnalysisReport {
+    let w = workloads::find("triad-strided", "any", "-O3").unwrap();
+    let mut req = Engine::request(&w.name())
+        .arch("skl")
+        .source(w.source)
+        .passes(Passes::THROUGHPUT)
+        .unroll(w.unroll);
+    if let Some(s) = spec {
+        req = req.mem_model(s);
+    }
+    engine.analyze(&req).unwrap_or_else(|e| panic!("{e}"))
+}
+
+/// End to end through the Engine: the strided triad is port-bound at
+/// 2.0 cy under infinite L1 and whenever L1-resident, then memory-bound
+/// at the hand-derived ECM values as the working set walks the skl
+/// hierarchy (L2 8.0, L3 40.0, DRAM 76.0 cy / asm iteration).
+#[test]
+fn strided_triad_walks_the_hierarchy() {
+    let engine = Engine::cpu_only();
+    let base = strided_report(&engine, None);
+    let w0 = base.prediction().winner().unwrap().cy_per_asm_iter;
+    assert!((w0 - 2.0).abs() < 1e-6, "{w0}");
+    assert!(base.memory.is_none());
+
+    for (spec, cy, kind, level) in [
+        ("ws=16K", 2.0f32, "port_pressure", "l1"),
+        ("ws=64K", 8.0, "memory", "l2"),
+        ("ws=4M", 40.0, "memory", "l3"),
+        ("ws=64M", 76.0, "memory", "mem"),
+    ] {
+        let r = strided_report(&engine, Some(spec));
+        let p = r.prediction();
+        let win = p.winner().unwrap();
+        assert!((win.cy_per_asm_iter - cy).abs() < 1e-6, "{spec}: {}", win.cy_per_asm_iter);
+        assert_eq!(win.kind.name(), kind, "{spec}");
+        let mem = r.memory.as_ref().expect(spec);
+        assert_eq!(mem.level, level, "{spec}");
+        // The footprint derivation sees all four 128 B/iter streams.
+        assert_eq!(mem.streams, 4, "{spec}");
+        assert_eq!(mem.bytes_per_iter, 512, "{spec}");
+        assert!((mem.lines_per_iter - 8.0).abs() < 1e-6, "{spec}");
+    }
+}
+
+/// A starved LSQ (4 entries = one iteration's Load/StoreAgu µ-ops)
+/// under an L3-resident working set: the stall shows up in the new
+/// counters, slows the simulated iteration down, and wins the
+/// bottleneck label.
+#[test]
+fn lsq_starvation_stalls_and_is_attributed() {
+    let w = workloads::find("triad-strided", "any", "-O3").unwrap();
+    let m = by_name("skl").unwrap();
+    let k = w.kernel();
+    let dk = DecodedKernel::new(&k, &m).unwrap();
+    let off = run_decoded(&dk, &m, cfg());
+
+    let model = MemModel::build(&m, "ws=4M,lsq=4").unwrap();
+    let fp = derive_footprint(&k, &dk.iter, model.line_bytes());
+    let analysis = analyze_memory(&model, &fp, cfg().iterations as u64);
+    assert_eq!(analysis.level, "l3");
+    assert_eq!(analysis.level_latency_cy, 44);
+    let plan = MemSimPlan::new(&model, &analysis, &fp);
+    assert_eq!(plan.miss_latency_cy, 40);
+
+    let on = run_decoded_mem(&dk, &m, cfg(), Some(&plan));
+    assert!(on.counters.lsq_stall_cycles > 0);
+    assert!(on.counters.cache_miss_loads > 0);
+    assert!(
+        on.cycles_per_iteration > off.cycles_per_iteration,
+        "{} vs {}",
+        on.cycles_per_iteration,
+        off.cycles_per_iteration
+    );
+    assert_eq!(on.bottleneck_resource(&m), "load/store queue");
+}
+
+/// A malformed spec is a structured `BadMemModel`, not a panic and not
+/// a silent fallback to infinite L1.
+#[test]
+fn bad_spec_is_a_structured_error() {
+    let engine = Engine::cpu_only();
+    let w = workloads::find("triad-strided", "any", "-O3").unwrap();
+    for bad in ["l1=bogus:4", "lsq=0", "l9=1M:5,l1=32K:90", "nonsense"] {
+        let req = Engine::request(&w.name())
+            .arch("skl")
+            .source(w.source)
+            .passes(Passes::THROUGHPUT)
+            .unroll(w.unroll)
+            .mem_model(bad);
+        match engine.analyze(&req) {
+            Err(OsacaError::BadMemModel { message }) => {
+                assert!(!message.is_empty(), "{bad}");
+            }
+            other => panic!("{bad}: expected BadMemModel, got {other:?}"),
+        }
+    }
+}

@@ -58,6 +58,15 @@ def main():
     base_results = baseline.get("results") or {}
     fresh_results = fresh.get("results") or {}
 
+    # One unambiguous status line for the CI log: is the ±tolerance
+    # comparison actually live, or still waiting on a real committed
+    # baseline? Greppable, so "the gate passed" can be told apart from
+    # "the gate never ran".
+    if base_results:
+        print(f"bench-baseline: ARMED ({len(base_results)} baseline benchmark(s), ±{tolerance:.0%})")
+    else:
+        print("bench-baseline: UNARMED (placeholder baseline)")
+
     required = [n for n in os.environ.get("OSACA_BENCH_REQUIRE", "").split(",") if n]
     missing = [n for n in required if n not in fresh_results]
     if missing:

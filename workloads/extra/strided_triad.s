@@ -1,0 +1,17 @@
+# Schoenauer triad with a 128-byte stride: same four-stream ymm body
+# as the skl -O3 triad but the pointer bump skips three vectors per
+# iteration, so each assembly iteration opens two fresh cachelines per
+# stream (4 x 128 B = 512 B = 8 lines/iter). L1-resident it is still
+# the 2.0 cy port-bound kernel; blow L1 and the infinite-L1 model is
+# provably wrong — exactly the fixture the opt-in memory model pins.
+	xorl	%ecx, %ecx
+	xorq	%rax, %rax
+.L20:
+	vmovapd	(%r15,%rax), %ymm0
+	vmovapd	(%r12,%rax), %ymm3
+	addl	$1, %ecx
+	vfmadd132pd	0(%r13,%rax), %ymm3, %ymm0
+	vmovapd	%ymm0, (%r14,%rax)
+	addq	$128, %rax
+	cmpl	%ecx, %r10d
+	ja	.L20
