@@ -1,7 +1,7 @@
 #!/usr/bin/env bash
 # CI entry point: tier-1 verification plus style, lint and perf gates.
 #
-# Usage: ./ci.sh [--quick|--bench-smoke|--isa-smoke|--serve-smoke|--chaos-smoke|--corpus-smoke|--mem-smoke]
+# Usage: ./ci.sh [--quick|--bench-smoke|--isa-smoke|--serve-smoke|--chaos-smoke|--corpus-smoke|--mem-smoke|--zoo-smoke]
 #   --quick        tier-1 only (skip fmt/clippy, the per-ISA sweep and
 #                  the bench smoke run)
 #   --bench-smoke  only the shrunken hot-path bench + baseline gate
@@ -17,6 +17,12 @@
 #                  release binary: predictions must be monotone
 #                  non-decreasing in footprint and the L1-resident
 #                  point must equal the infinite-L1 prediction
+#   --zoo-smoke    only the model-zoo pipeline: import-model compiles
+#                  the vendored uops.info fixture into .mdb models,
+#                  zoo-sweep scores every fixture × every registered
+#                  model, and the scorecard must validate, be
+#                  byte-reproducible, and carry no errors in the
+#                  imported-model cells
 set -euo pipefail
 cd "$(dirname "$0")"
 
@@ -50,7 +56,7 @@ bench_smoke() {
     # bench must not read as "no regression" — and so must the two
     # cache-aware simulator cases.
     if require_python3 bench-baseline; then
-        OSACA_BENCH_REQUIRE=serve/req_s,serve/shed_latency,corpus/blocks_per_s,exec/steal_overhead,sim/mem_l1_resident,sim/mem_sweep \
+        OSACA_BENCH_REQUIRE=serve/req_s,serve/shed_latency,corpus/blocks_per_s,exec/steal_overhead,sim/mem_l1_resident,sim/mem_sweep,mdb/registry_lazy_load \
             python3 scripts/check_bench_baseline.py BENCH_hotpath.json "$fresh"
     fi
 }
@@ -193,7 +199,7 @@ corpus_smoke() {
     python3 - "$dir/run_a.json" "$dir/measured.csv" <<'EOF'
 import json, sys
 card = json.load(open(sys.argv[1]))
-assert card["schema_version"] == 4, card["schema_version"]
+assert card["schema_version"] == 5, card["schema_version"]
 assert card["kind"] == "corpus_scorecard", card["kind"]
 assert card["blocks"] == 60, card["blocks"]
 assert len(card["scores"]) == 60
@@ -237,7 +243,7 @@ mem_smoke() {
     python3 - "$out" <<'EOF'
 import json, sys
 card = json.load(open(sys.argv[1]))
-assert card["schema_version"] == 4, card["schema_version"]
+assert card["schema_version"] == 5, card["schema_version"]
 assert card["kind"] == "mem_sweep", card["kind"]
 pts = card["points"]
 assert len(pts) >= 3, pts
@@ -251,6 +257,61 @@ assert pts[0]["level"] == "l1", pts[0]
 assert any(p["bound"] == "memory" for p in pts), cys
 EOF
     echo "mem-smoke: OK"
+}
+
+# Model-zoo smoke: compile the vendored uops.info-format fixture into
+# .mdb models with the shipped binary, then run the cross-model
+# validation sweep twice from the scanned models directory. Gates:
+# every import emits valid JSON and a loadable .mdb file, the sweep
+# scorecard validates (schema tag, imported models present, every x86
+# fixture covered per imported model, zero errors in imported cells),
+# and two runs are byte-identical — model order and cell contents must
+# be deterministic.
+zoo_smoke() {
+    echo "== zoo smoke: import-model → zoo-sweep scorecard =="
+    require_python3 zoo-smoke || return 0
+    cargo build --release
+    local bin=./target/release/osaca
+    local dir="${TMPDIR:-/tmp}/osaca-zoo-smoke"
+    rm -rf "$dir"
+    mkdir -p "$dir/models"
+    local xml=rust/tests/fixtures/uops_trimmed.xml
+    local arch
+    for arch in clx icl zen2; do
+        "$bin" import-model "$xml" --arch "$arch" --out "$dir/models" \
+            --format json >"$dir/import_$arch.json"
+        python3 -m json.tool "$dir/import_$arch.json" >/dev/null
+        if [[ ! -s "$dir/models/$arch.mdb" ]]; then
+            echo "zoo-smoke: import-model wrote no $arch.mdb"
+            exit 1
+        fi
+    done
+    "$bin" zoo-sweep --models-dir "$dir/models" --format json >"$dir/sweep_a.json"
+    "$bin" zoo-sweep --models-dir "$dir/models" --format json >"$dir/sweep_b.json"
+    if ! cmp -s "$dir/sweep_a.json" "$dir/sweep_b.json"; then
+        echo "zoo-smoke: sweep scorecard is not reproducible across runs"
+        diff "$dir/sweep_a.json" "$dir/sweep_b.json" || true
+        exit 1
+    fi
+    python3 -m json.tool "$dir/sweep_a.json" >/dev/null
+    python3 - "$dir/sweep_a.json" <<'EOF'
+import json, sys
+card = json.load(open(sys.argv[1]))
+assert card["schema_version"] == 5, card["schema_version"]
+assert card["kind"] == "zoo_sweep", card["kind"]
+imported = {"clx", "icl", "zen2"}
+assert imported <= set(card["models"]), card["models"]
+cells = card["cells"]
+x86 = {c["workload"] for c in cells if c["isa"] == "x86"}
+assert len(x86) >= 10, x86
+for m in sorted(imported):
+    mine = [c for c in cells if c["model"] == m]
+    assert {c["workload"] for c in mine} == x86, (m, x86)
+    bad = [c for c in mine if "error" in c]
+    assert not bad, (m, bad)
+    assert all(c["cy_per_asm_iter"] > 0 for c in mine), m
+EOF
+    echo "zoo-smoke: OK"
 }
 
 # Cross-ISA regression gate: run the CLI analyze path (parse + marker
@@ -331,6 +392,10 @@ case "${1:-}" in
         mem_smoke
         exit 0
         ;;
+    --zoo-smoke)
+        zoo_smoke
+        exit 0
+        ;;
 esac
 
 echo "== tier-1: build =="
@@ -370,6 +435,10 @@ if [[ "${1:-}" != "--quick" ]]; then
     # The corpus pipeline end to end: synthesized blocks, reproducible
     # scorecard, tar/dir loader agreement, MAPE sidecar.
     corpus_smoke
+
+    # The model zoo end to end: uops.info fixture → import-model →
+    # reproducible, error-free zoo-sweep scorecard.
+    zoo_smoke
 
     # Hot-path regressions fail loudly at two levels: the smoke bench
     # asserts the cached-model and warm-resolution counters while

@@ -89,6 +89,32 @@ fn main() {
         "cached machine-model lookups must not re-parse the embedded .mdb text"
     );
 
+    // ---- dynamic registry: lazy load ----------------------------------
+    // A zoo-imported model pays exactly one parse on first resolution,
+    // then serves from the same eviction-free Arc cache as the
+    // built-ins — the serving hot path must never re-parse.
+    {
+        let xml = include_str!("../tests/fixtures/uops_trimmed.xml");
+        osaca::zoo::import_and_register(xml, "clx").expect("import clx fixture");
+        let dyn_parses_before = mdb::registry_parse_count();
+        mdb::by_name_shared("clx").expect("registered model resolves");
+        let dyn_parses_warm = mdb::registry_parse_count();
+        assert_eq!(dyn_parses_warm, dyn_parses_before + 1, "first lookup parses once");
+        let s = bench("mdb/registry_lazy_load", 2, 10, || {
+            for _ in 0..sc.lookups {
+                std::hint::black_box(mdb::by_name_shared("clx"));
+            }
+        });
+        let rate = sc.lookups as f64 / s.median.as_secs_f64();
+        println!("{}  ({:.0} lookups/s)", s.report(), rate);
+        json.record(&s, &[("lookups_per_s", rate)]);
+        assert_eq!(
+            mdb::registry_parse_count(),
+            dyn_parses_warm,
+            "warm dynamic-registry lookups must not re-parse registered .mdb text"
+        );
+    }
+
     // ---- form resolution: cold vs warm --------------------------------
     // Cold = a fresh per-model FormIndex every run (every synthesized
     // form is re-derived); warm = the shared cached model (every resolve

@@ -20,6 +20,11 @@ pub enum OsacaError {
     ParseError { name: String, line: Option<usize>, message: String },
     /// A `.mdb` machine-model text failed to parse.
     MalformedModel { line: Option<usize>, message: String },
+    /// A uops.info XML import failed (`osaca import-model`): malformed
+    /// XML, an uncurated architecture, or measurements the overlay's
+    /// port list cannot express. `line` is the 1-based XML source line
+    /// when the failure is localized.
+    BadModelImport { line: Option<usize>, message: String },
     /// An instruction form has no database entry and could not be
     /// synthesized.
     UnresolvedForm { form: String, line: usize, arch: String },
@@ -53,6 +58,7 @@ impl OsacaError {
             OsacaError::UnknownArch { .. } => "unknown_arch",
             OsacaError::ParseError { .. } => "parse_error",
             OsacaError::MalformedModel { .. } => "malformed_model",
+            OsacaError::BadModelImport { .. } => "bad_model_import",
             OsacaError::UnresolvedForm { .. } => "unresolved_form",
             OsacaError::IsaMismatch { .. } => "isa_mismatch",
             OsacaError::EmptyRequest { .. } => "empty_request",
@@ -85,6 +91,12 @@ impl fmt::Display for OsacaError {
             }
             OsacaError::MalformedModel { line: None, message } => {
                 write!(f, "malformed machine model: {message}")
+            }
+            OsacaError::BadModelImport { line: Some(line), message } => {
+                write!(f, "model import failed at XML line {line}: {message}")
+            }
+            OsacaError::BadModelImport { line: None, message } => {
+                write!(f, "model import failed: {message}")
             }
             OsacaError::UnresolvedForm { form, line, arch } => write!(
                 f,

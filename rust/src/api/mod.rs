@@ -233,6 +233,7 @@ impl Engine {
     pub fn available_arches(&self) -> Vec<String> {
         let mut v: Vec<String> =
             mdb::builtin_names().iter().map(|s| s.to_string()).collect();
+        v.extend(mdb::registry_names());
         v.extend(self.inner.models.read().expect("model registry").keys().cloned());
         v.sort();
         v.dedup();

@@ -10,7 +10,7 @@
 //! without any scheduling code here.
 //!
 //! The scorecard is a **sibling document** of the v4 report schema: it
-//! carries the same `"schema_version":4` tag but its own `"kind"`, and
+//! carries the same `"schema_version":5` tag but its own `"kind"`, and
 //! adds no keys to the existing report/stats shapes. It contains no
 //! timestamps or host identifiers — the same corpus and machine model
 //! must produce byte-identical output across runs (CI diffs two runs).

@@ -40,3 +40,4 @@ pub mod serve;
 pub mod runtime;
 pub mod sim;
 pub mod workloads;
+pub mod zoo;

@@ -21,7 +21,13 @@
 //!         (score a corpus of basic blocks; scorecard to stdout)
 //!   mem-sweep [--arch skl] [--workload triad-strided] [--sizes 16K,1M,64M]
 //!         (working-set sweep under the opt-in memory model)
+//!   import-model <uops.xml> --arch clx|icl|zen2 [--out models]
+//!         (model zoo: compile a uops.info XML dump into a .mdb model)
+//!   zoo-sweep (every workload fixture x every registered model)
 //!   list-workloads
+//!
+//! Every subcommand also accepts `--models-dir <dir>` to register the
+//! `*.mdb` files inside with the dynamic model registry.
 //!
 //! `analyze`, `simulate`, `compare`, and `corpus` also take
 //! `--mem-model [spec]` to switch on the opt-in cache hierarchy + LSQ
@@ -45,8 +51,8 @@ use osaca::mdb::MachineModel;
 use osaca::report::emit::{csv_field, json_string};
 use osaca::report::emit::SCHEMA_VERSION;
 use osaca::report::experiments::{
-    mem_sweep, render_mem_sweep, render_table1, render_table3, render_table5, table1, table3,
-    table5, MEM_SWEEP_SIZES,
+    mem_sweep, render_mem_sweep, render_table1, render_table3, render_table5, render_zoo_sweep,
+    table1, table3, table5, zoo_sweep, MEM_SWEEP_SIZES,
 };
 use osaca::report::render_port_diagram;
 use osaca::serve::{ServeConfig, Server};
@@ -132,6 +138,13 @@ fn run(args: &[String]) -> Result<()> {
         None => Format::Text,
     };
     let engine = Engine::new();
+    // `--models-dir <dir>` (accepted by every subcommand) registers
+    // each `*.mdb` file in the process-wide dynamic registry before
+    // dispatch, so `--arch clx` works anywhere a built-in name does.
+    if let Some(dir) = opts.get("models-dir") {
+        osaca::mdb::scan_models_dir(std::path::Path::new(dir))
+            .with_context(|| format!("scanning --models-dir {dir}"))?;
+    }
     match cmd.as_str() {
         "analyze" => {
             let path = pos.first().ok_or_else(|| {
@@ -580,6 +593,10 @@ fn run(args: &[String]) -> Result<()> {
                 cfg.max_frame_bytes = v.parse::<usize>().context("--max-frame-bytes")?.max(1024);
             }
             cfg.test_ops = opts.contains_key("test-ops");
+            // The global scan above already registered the directory's
+            // models; handing it to the server additionally enables the
+            // `reload_models` wire op to re-scan without a restart.
+            cfg.models_dir = opts.get("models-dir").map(|s| s.to_string());
             if let Some(v) = opts.get("chaos") {
                 // Bare `--chaos` uses the default seed; a value pins one.
                 cfg.chaos_seed = Some(if *v == "true" {
@@ -698,6 +715,106 @@ fn run(args: &[String]) -> Result<()> {
                 ),
             }
         }
+        "import-model" => {
+            // Model zoo importer (DESIGN.md §13): uops.info-format XML
+            // + curated overlay -> .mdb text, written to --out and
+            // registered for the rest of this process.
+            let path = pos.first().ok_or_else(|| {
+                anyhow!("usage: import-model <uops.xml> --arch clx|icl|zen2 [--out models]")
+            })?;
+            let xml = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+            let arch = match opts.get("arch") {
+                Some(a) => *a,
+                None => {
+                    let present = osaca::zoo::arches_in(&xml).map_err(|e| anyhow!("{e}"))?;
+                    bail!(
+                        "import-model needs --arch; the XML has measurements for: {} \
+                         (curated overlays: {})",
+                        present.join(", "),
+                        osaca::zoo::curated_arches().join(", ")
+                    );
+                }
+            };
+            let imported = osaca::zoo::import_model(&xml, arch).map_err(|e| anyhow!("{e}"))?;
+            let name = imported.model.name.clone();
+            let out_dir = opts.get("out").copied().unwrap_or("models");
+            std::fs::create_dir_all(out_dir).with_context(|| format!("creating {out_dir}"))?;
+            let out_path = format!("{out_dir}/{name}.mdb");
+            std::fs::write(&out_path, &imported.text)
+                .with_context(|| format!("writing {out_path}"))?;
+            osaca::mdb::register_model_text(&name, &imported.text);
+            match format {
+                Format::Json => println!(
+                    "{{\"schema_version\":{SCHEMA_VERSION},\"kind\":\"import_model\",\
+                     \"arch\":{},\"entries\":{},\"ports\":{},\"path\":{}}}",
+                    json_string(&name),
+                    imported.entries,
+                    imported.model.ports.len(),
+                    json_string(&out_path),
+                ),
+                _ => println!(
+                    "imported {name} ({}): {} instruction forms, {} ports -> {out_path}",
+                    imported.model.arch_name,
+                    imported.entries,
+                    imported.model.ports.len(),
+                ),
+            }
+        }
+        "zoo-sweep" => {
+            // Cross-model validation sweep: every embedded workload ×
+            // every registered ISA-matching model (built-ins + whatever
+            // --models-dir / import-model registered). Deterministic
+            // order; `ci.sh --zoo-smoke` byte-compares two runs.
+            let rows = zoo_sweep(&engine);
+            match format {
+                Format::Json => {
+                    let mut models: Vec<&str> = Vec::new();
+                    for r in &rows {
+                        if !models.contains(&r.model.as_str()) {
+                            models.push(&r.model);
+                        }
+                    }
+                    let mut out = format!(
+                        "{{\"schema_version\":{SCHEMA_VERSION},\"kind\":\"zoo_sweep\",\
+                         \"models\":[{}],\"cells\":[",
+                        models
+                            .iter()
+                            .map(|m| json_string(m))
+                            .collect::<Vec<_>>()
+                            .join(","),
+                    );
+                    for (i, r) in rows.iter().enumerate() {
+                        if i > 0 {
+                            out.push(',');
+                        }
+                        out.push_str(&format!(
+                            "{{\"workload\":{},\"model\":{},\"isa\":{}",
+                            json_string(&r.workload),
+                            json_string(&r.model),
+                            json_string(r.isa),
+                        ));
+                        match (&r.cy_per_asm_iter, &r.error) {
+                            (Some(cy), _) => out.push_str(&format!(
+                                ",\"cy_per_asm_iter\":{cy},\"bound\":{}}}",
+                                json_string(&r.bound)
+                            )),
+                            (None, Some(e)) => {
+                                out.push_str(&format!(",\"error\":{}}}", json_string(e)))
+                            }
+                            (None, None) => out.push('}'),
+                        }
+                    }
+                    out.push_str("]}");
+                    println!("{out}");
+                }
+                _ => emit_table(
+                    format,
+                    "zoo sweep: workloads x registered models",
+                    &["workload", "model", "isa", "cy/asm-iter", "bound"],
+                    &render_zoo_sweep(&rows),
+                ),
+            }
+        }
         "list-workloads" => {
             if format != Format::Text {
                 let rows: Vec<Vec<String>> = workloads::all_isa()
@@ -813,7 +930,15 @@ commands (all accept --format text|json|csv):
   corpus <dir|archive.tar|file.s> [--arch skl] [--measured file.csv] [--frontend-bound] [--chunk N]
          [--mem-model [spec]]
   mem-sweep [--arch skl] [--workload triad-strided] [--target any] [--flag -O3] [--sizes 16K,1M,...]
+  import-model <uops.xml> --arch clx|icl|zen2 [--out models]
+         (compile uops.info-format XML + curated overlay into a .mdb model)
+  zoo-sweep [--models-dir dir]
+         (every workload fixture x every registered ISA-matching model)
   list-workloads
+
+every subcommand accepts --models-dir <dir>: each *.mdb file inside is
+registered (lazily parsed) so --arch takes imported names like clx;
+`serve` re-scans it on the `reload_models` wire op.
 
 memory-model spec: bare `--mem-model` takes the machine's hierarchy; or
 `l1=32K:4,l2=1M:12,mem=:80,ws=4M,lsq=72,lfb=8` (any subset; sizes take

@@ -23,6 +23,7 @@ pub mod format;
 pub(crate) mod index;
 pub mod machine;
 pub mod port;
+pub mod registry;
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, OnceLock};
@@ -30,6 +31,10 @@ use std::sync::{Arc, OnceLock};
 pub use entry::{FormEntry, Provenance, ResolvedUops, Uop, UopKind};
 pub use machine::MachineModel;
 pub use port::PortMask;
+pub use registry::{
+    canonical_arch, register_model_text, registry_names, registry_parse_count, reload_count,
+    scan_models_dir,
+};
 
 /// Number of times an embedded `.mdb` text has actually been parsed.
 /// At most one per built-in model per process — asserted by tests and
@@ -95,17 +100,19 @@ pub fn builtin_names() -> &'static [&'static str] {
     &["hsw", "rv64", "skl", "tx2", "zen"]
 }
 
-/// Shared handle to a built-in model by CLI name (`skl`, `zen`, `hsw`,
-/// `tx2`, `rv64` plus the long aliases). This is the lookup the
-/// `api::Engine` registry uses: no parsing, no copying.
+/// Shared handle to a model by CLI name: the five built-ins (`skl`,
+/// `zen`, `hsw`, `tx2`, `rv64` plus long aliases) and every
+/// dynamically registered model (`registry`), all through the one
+/// canonical alias table. This is the lookup the `api::Engine`
+/// registry uses: no parsing (after first use), no copying.
 pub fn by_name_shared(name: &str) -> Option<Arc<MachineModel>> {
-    match name.to_ascii_lowercase().as_str() {
-        "skl" | "skylake" => Some(skl_shared().clone()),
-        "zen" | "znver1" => Some(zen_shared().clone()),
-        "hsw" | "haswell" => Some(hsw_shared().clone()),
-        "tx2" | "thunderx2" => Some(tx2_shared().clone()),
-        "rv64" | "riscv" | "rv64gc" => Some(rv64_shared().clone()),
-        _ => None,
+    match registry::canonical_arch(name)?.as_str() {
+        "skl" => Some(skl_shared().clone()),
+        "zen" => Some(zen_shared().clone()),
+        "hsw" => Some(hsw_shared().clone()),
+        "tx2" => Some(tx2_shared().clone()),
+        "rv64" => Some(rv64_shared().clone()),
+        dynamic => registry::lookup(dynamic),
     }
 }
 

@@ -1,0 +1,306 @@
+//! Dynamic model registry: user `.mdb` models loaded beside the
+//! built-ins, with one canonical place for arch-name aliasing.
+//!
+//! Three properties drive the design (ISSUE-10, DESIGN.md §13):
+//!
+//! * **Lazy parse-on-first-use.** Registering a model stores its raw
+//!   `.mdb` text (plus a cheap scan of the `arch` directive for
+//!   aliasing); the text is parsed the first time something resolves
+//!   the name, and the parsed model is cached as an `Arc` forever
+//!   after (eviction-free — models are small and a serving process
+//!   must never re-parse on the hot path). A dozen imported
+//!   uops.info models cost a directory scan at startup, not a dozen
+//!   parses.
+//! * **Process-wide.** The registry is global, like the built-in
+//!   `OnceLock` caches: every `api::Engine` — including the fresh
+//!   engines `serve` builds after a worker panic — sees registered
+//!   models without per-shard plumbing. `serve --models-dir` +
+//!   the `reload_models` wire op re-scan into live shards for free.
+//! * **Canonical aliasing.** [`canonical_arch`] is the single
+//!   case-insensitive alias table (built-ins, curated zoo aliases,
+//!   and the `arch` short name of every registered model), so the
+//!   serve shard hint, the engine lookup and the CLI all agree on
+//!   what `SKYLAKE` or `CascadeLake` means — a hot imported arch
+//!   shards identically to a built-in one.
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, OnceLock, RwLock};
+
+use anyhow::{Context, Result};
+
+use super::MachineModel;
+
+/// Case-insensitive aliases for the built-in models (canonical CLI
+/// name last). Previously scattered across `by_name_shared`, the
+/// serve shard hint and the CLI; this table is now the only copy.
+const BUILTIN_ALIASES: &[(&str, &str)] = &[
+    ("skl", "skl"),
+    ("skylake", "skl"),
+    ("zen", "zen"),
+    ("znver1", "zen"),
+    ("hsw", "hsw"),
+    ("haswell", "hsw"),
+    ("tx2", "tx2"),
+    ("thunderx2", "tx2"),
+    ("rv64", "rv64"),
+    ("riscv", "rv64"),
+    ("rv64gc", "rv64"),
+];
+
+/// Curated aliases for zoo-imported models (see `zoo::overlay`): these
+/// resolve only while a model with the canonical name is actually
+/// registered, so an unimported `cascadelake` still reads as unknown.
+const CURATED_ALIASES: &[(&str, &str)] = &[
+    ("cascadelake", "clx"),
+    ("icelake", "icl"),
+    ("znver2", "zen2"),
+];
+
+enum Slot {
+    /// Registered but never resolved: raw `.mdb` text.
+    Unparsed(String),
+    /// Parsed on first use and cached for the process lifetime.
+    Parsed(Arc<MachineModel>),
+}
+
+#[derive(Default)]
+struct Registry {
+    /// Canonical (lowercased) name -> model slot.
+    models: HashMap<String, Slot>,
+    /// Lowercased alias -> canonical name, learned from each model's
+    /// `arch` directive at registration time.
+    aliases: HashMap<String, String>,
+}
+
+static REGISTRY: OnceLock<RwLock<Registry>> = OnceLock::new();
+/// Dynamic-model parses performed so far — at most one per registered
+/// model per process (the lazy-load analogue of `builtin_parse_count`,
+/// asserted by `benches/hotpath.rs`).
+static REGISTRY_PARSES: AtomicUsize = AtomicUsize::new(0);
+/// Completed `scan_models_dir` passes (the serve `reload_models`
+/// counter surfaces this through `stats`).
+static RELOADS: AtomicUsize = AtomicUsize::new(0);
+
+fn registry() -> &'static RwLock<Registry> {
+    REGISTRY.get_or_init(Default::default)
+}
+
+/// How many registered (non-built-in) model texts have been parsed.
+pub fn registry_parse_count() -> usize {
+    REGISTRY_PARSES.load(Ordering::Relaxed)
+}
+
+/// How many registry re-scans (`scan_models_dir`) have completed.
+pub fn reload_count() -> usize {
+    RELOADS.load(Ordering::Relaxed)
+}
+
+/// Resolve any spelling of an architecture name to its canonical
+/// lowercase form: built-in aliases first, then registered models and
+/// their learned aliases, then the curated zoo aliases (which only
+/// apply while their target is registered). `None` means unknown.
+pub fn canonical_arch(name: &str) -> Option<String> {
+    let lower = name.to_ascii_lowercase();
+    if let Some((_, canon)) = BUILTIN_ALIASES.iter().find(|(a, _)| *a == lower) {
+        return Some((*canon).to_string());
+    }
+    let reg = registry().read().unwrap_or_else(|e| e.into_inner());
+    if reg.models.contains_key(&lower) {
+        return Some(lower);
+    }
+    if let Some(canon) = reg.aliases.get(&lower) {
+        return Some(canon.clone());
+    }
+    if let Some((_, canon)) = CURATED_ALIASES.iter().find(|(a, _)| *a == lower) {
+        if reg.models.contains_key(*canon) {
+            return Some((*canon).to_string());
+        }
+    }
+    None
+}
+
+/// Names of every registered dynamic model (canonical, sorted).
+pub fn registry_names() -> Vec<String> {
+    let reg = registry().read().unwrap_or_else(|e| e.into_inner());
+    let mut names: Vec<String> = reg.models.keys().cloned().collect();
+    names.sort();
+    names
+}
+
+/// Cheap scan for the `arch <short> "..."` directive — used at
+/// registration to learn an alias without paying a full parse.
+fn arch_short_name(text: &str) -> Option<String> {
+    for raw in text.lines() {
+        let line = raw.split('#').next().unwrap_or("").trim();
+        if let Some(rest) = line.strip_prefix("arch ") {
+            let short = rest.split_whitespace().next()?;
+            return Some(short.to_ascii_lowercase());
+        }
+    }
+    None
+}
+
+/// Register (or replace) a dynamic model under `name`. The text is
+/// *not* parsed here — first lookup pays the one parse. The model's
+/// own `arch` short name becomes an alias when it differs from the
+/// registered name (and does not shadow a built-in).
+pub fn register_model_text(name: &str, text: &str) {
+    let key = name.to_ascii_lowercase();
+    let alias = arch_short_name(text);
+    let mut reg = registry().write().unwrap_or_else(|e| e.into_inner());
+    if let Some(short) = alias {
+        let shadows_builtin = BUILTIN_ALIASES.iter().any(|(a, _)| *a == short);
+        if short != key && !shadows_builtin {
+            reg.aliases.insert(short, key.clone());
+        }
+    }
+    reg.models.insert(key, Slot::Unparsed(text.to_string()));
+}
+
+/// Resolve a registered model by canonical name, parsing on first use.
+/// A model whose text fails to parse is dropped from the registry and
+/// reads as unknown (the eager `zoo` import path validates up front;
+/// this lazy path serves directory scans, which must tolerate one bad
+/// file without poisoning the rest).
+pub fn lookup(canonical: &str) -> Option<Arc<MachineModel>> {
+    {
+        let reg = registry().read().unwrap_or_else(|e| e.into_inner());
+        match reg.models.get(canonical) {
+            Some(Slot::Parsed(m)) => return Some(Arc::clone(m)),
+            Some(Slot::Unparsed(_)) => {}
+            None => return None,
+        }
+    }
+    let mut reg = registry().write().unwrap_or_else(|e| e.into_inner());
+    // Re-check under the write lock: another thread may have parsed
+    // (or replaced) the slot in between.
+    match reg.models.get(canonical) {
+        Some(Slot::Parsed(m)) => return Some(Arc::clone(m)),
+        Some(Slot::Unparsed(_)) => {}
+        None => return None,
+    }
+    let text = match reg.models.get(canonical) {
+        Some(Slot::Unparsed(t)) => t.clone(),
+        _ => unreachable!("checked above"),
+    };
+    REGISTRY_PARSES.fetch_add(1, Ordering::Relaxed);
+    match MachineModel::parse(&text) {
+        Ok(m) => {
+            let shared = Arc::new(m);
+            reg.models.insert(canonical.to_string(), Slot::Parsed(Arc::clone(&shared)));
+            Some(shared)
+        }
+        Err(_) => {
+            reg.models.remove(canonical);
+            None
+        }
+    }
+}
+
+/// Scan a directory for `*.mdb` files and register each under its file
+/// stem (lowercased), lazily. Files are taken in sorted order so
+/// repeated scans are deterministic. Returns the registered names;
+/// bumps the reload counter once per completed scan.
+pub fn scan_models_dir(dir: &Path) -> Result<Vec<String>> {
+    let mut paths: Vec<_> = std::fs::read_dir(dir)
+        .with_context(|| format!("models dir `{}`", dir.display()))?
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .filter(|p| p.extension().map(|x| x.eq_ignore_ascii_case("mdb")).unwrap_or(false))
+        .collect();
+    paths.sort();
+    let mut names = Vec::with_capacity(paths.len());
+    for p in paths {
+        let stem = match p.file_stem().and_then(|s| s.to_str()) {
+            Some(s) => s.to_ascii_lowercase(),
+            None => continue,
+        };
+        let text =
+            std::fs::read_to_string(&p).with_context(|| format!("read `{}`", p.display()))?;
+        register_model_text(&stem, &text);
+        names.push(stem);
+    }
+    RELOADS.fetch_add(1, Ordering::Relaxed);
+    Ok(names)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // The registry is process-global and the lib test binary runs
+    // threads in parallel, so every test here uses names no other
+    // test (or built-in) touches.
+
+    const MINI: &str = "arch regtesta \"Registry Test A\"\nports P0 LD\nloadports LD\n\
+                        storedataports P0\nstoreaguports LD\n\
+                        entry vaddpd-xmm_xmm_xmm lat=4 tp=0.5 uops=c@1:P0\n";
+
+    #[test]
+    fn register_is_lazy_and_lookup_parses_once() {
+        let before = registry_parse_count();
+        register_model_text("regtest-lazy", &MINI.replace("regtesta", "regtestlazy"));
+        assert_eq!(registry_parse_count(), before, "registration must not parse");
+        let a = lookup("regtest-lazy").expect("registered model resolves");
+        let after = registry_parse_count();
+        assert!(after > before);
+        let b = lookup("regtest-lazy").unwrap();
+        assert!(Arc::ptr_eq(&a, &b), "second lookup is the cached Arc");
+        assert_eq!(registry_parse_count(), after, "no re-parse on cached lookup");
+    }
+
+    #[test]
+    fn arch_directive_becomes_an_alias() {
+        register_model_text("regtest-aliased", MINI);
+        // `arch regtesta` differs from the registered key -> alias.
+        assert_eq!(canonical_arch("REGTESTA").as_deref(), Some("regtest-aliased"));
+        assert_eq!(canonical_arch("regtest-aliased").as_deref(), Some("regtest-aliased"));
+        let m = super::super::by_name_shared("RegTestA").expect("alias resolves to the model");
+        assert_eq!(m.name, "regtesta");
+    }
+
+    #[test]
+    fn builtin_aliases_are_canonicalized_here() {
+        assert_eq!(canonical_arch("SKYLAKE").as_deref(), Some("skl"));
+        assert_eq!(canonical_arch("znver1").as_deref(), Some("zen"));
+        assert_eq!(canonical_arch("Haswell").as_deref(), Some("hsw"));
+        assert_eq!(canonical_arch("THUNDERX2").as_deref(), Some("tx2"));
+        assert_eq!(canonical_arch("rv64gc").as_deref(), Some("rv64"));
+        assert_eq!(canonical_arch("m1max"), None);
+    }
+
+    #[test]
+    fn curated_aliases_require_a_registered_target() {
+        // `icelake` only resolves once an `icl` model is registered
+        // (and this test is the only one to register it).
+        assert_eq!(canonical_arch("regtest-nonexistent"), None);
+        register_model_text("icl", &MINI.replace("regtesta", "icl"));
+        assert_eq!(canonical_arch("IceLake").as_deref(), Some("icl"));
+    }
+
+    #[test]
+    fn malformed_registered_text_reads_as_unknown() {
+        register_model_text("regtest-bad", "arch regtestbad \"X\"\nbogus directive\n");
+        assert!(lookup("regtest-bad").is_none());
+        // And it is dropped, not retried forever.
+        assert_eq!(canonical_arch("regtest-bad"), None);
+    }
+
+    #[test]
+    fn scan_registers_mdb_files_by_stem() {
+        let dir = std::env::temp_dir().join(format!("osaca-regtest-scan-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("RegTest-Scan.mdb"), MINI.replace("regtesta", "regtestscan"))
+            .unwrap();
+        std::fs::write(dir.join("notes.txt"), "not a model").unwrap();
+        let reloads = reload_count();
+        let names = scan_models_dir(&dir).unwrap();
+        assert_eq!(names, vec!["regtest-scan".to_string()]);
+        assert_eq!(reload_count(), reloads + 1);
+        let m = super::super::by_name_shared("regtest-scan").expect("scanned model resolves");
+        assert_eq!(m.name, "regtestscan");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -44,7 +44,13 @@ use crate::report::render_occupancy;
 /// the `simulation` section carries `lsq_stall_cycles`, and the bound
 /// vocabulary gains `memory`. With the memory model off (the default)
 /// only the version digit changes from v3.
-pub const SCHEMA_VERSION: u32 = 4;
+///
+/// v5: the model zoo. The serve `stats` frame grew a `model_reloads`
+/// counter (completed `--models-dir` scans, including those triggered
+/// by the `reload_models` wire op), and `reload_models` joined the
+/// wire-op vocabulary. The report JSON/CSV key shape is unchanged
+/// from v4.
+pub const SCHEMA_VERSION: u32 = 5;
 
 /// The built-in output formats.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
@@ -544,6 +550,9 @@ pub struct StatsFrame {
     pub worker_restarts: u64,
     /// Frames rejected for exceeding the wire frame-size limit.
     pub oversized_frames: u64,
+    /// Completed dynamic-model directory scans (startup + every
+    /// `reload_models` wire op; process-wide).
+    pub model_reloads: u64,
     /// Memo entries currently resident.
     pub memo_len: u64,
     /// Approximate bytes held by memoized rendered reports.
@@ -561,6 +570,7 @@ impl StatsFrame {
              \"memo_hits\":{},\"memo_misses\":{},\"analyses\":{},\"errors\":{},\
              \"overloaded\":{},\"rate_limited\":{},\"shed\":{},\"deadline_expired\":{},\
              \"panics\":{},\"worker_restarts\":{},\"oversized_frames\":{},\
+             \"model_reloads\":{},\
              \"memo_len\":{},\"memo_bytes\":{},\"shedding\":{},\"queue_depths\":[",
             self.served,
             self.memo_hits,
@@ -574,6 +584,7 @@ impl StatsFrame {
             self.panics,
             self.worker_restarts,
             self.oversized_frames,
+            self.model_reloads,
             self.memo_len,
             self.memo_bytes,
             self.shedding
@@ -686,33 +697,34 @@ mod tests {
     #[test]
     fn wire_frames_are_versioned_and_escaped() {
         let ok = ok_frame(Format::Json, true, "{\"k\":1}");
-        assert!(ok.starts_with("{\"schema_version\":4,\"status\":\"ok\",\"memo_hit\":true,"));
+        assert!(ok.starts_with("{\"schema_version\":5,\"status\":\"ok\",\"memo_hit\":true,"));
         assert!(ok.ends_with(",\"report\":{\"k\":1}}"), "report must be the raw last key: {ok}");
         let ok_text = ok_frame(Format::Text, false, "line one\nline two");
         assert!(ok_text.ends_with(",\"report\":\"line one\\nline two\"}"));
 
         let e = error_frame("bad_request", "not a \"frame\"");
-        assert!(e.starts_with("{\"schema_version\":4,\"status\":\"error\",\"error\":{\"kind\":\"bad_request\""));
+        assert!(e.starts_with("{\"schema_version\":5,\"status\":\"error\",\"error\":{\"kind\":\"bad_request\""));
         assert!(e.contains("\\\"frame\\\""));
 
         assert_eq!(
             overloaded_frame(1, 64, false),
-            "{\"schema_version\":4,\"status\":\"overloaded\",\"shard\":1,\
+            "{\"schema_version\":5,\"status\":\"overloaded\",\"shard\":1,\
              \"queue_depth\":64,\"shedding\":false}"
         );
         assert_eq!(
             rate_limited_frame("rps", 250),
-            "{\"schema_version\":4,\"status\":\"rate_limited\",\"reason\":\"rps\",\
+            "{\"schema_version\":5,\"status\":\"rate_limited\",\"reason\":\"rps\",\
              \"retry_after_ms\":250}"
         );
-        assert_eq!(bye_frame(), "{\"schema_version\":4,\"status\":\"bye\"}");
+        assert_eq!(bye_frame(), "{\"schema_version\":5,\"status\":\"bye\"}");
 
         let s = StatsFrame { served: 2, memo_hits: 1, queue_depths: vec![0, 3], ..Default::default() };
         let rendered = s.render();
-        assert!(rendered.starts_with("{\"schema_version\":4,\"status\":\"stats\",\"served\":2,"));
+        assert!(rendered.starts_with("{\"schema_version\":5,\"status\":\"stats\",\"served\":2,"));
         assert!(rendered.contains("\"rate_limited\":0"));
         assert!(rendered.contains("\"deadline_expired\":0"));
         assert!(rendered.contains("\"worker_restarts\":0"));
+        assert!(rendered.contains("\"model_reloads\":0"));
         assert!(rendered.contains("\"memo_bytes\":0"));
         assert!(rendered.contains("\"shedding\":false"));
         assert!(rendered.ends_with("\"queue_depths\":[0,3]}"));

@@ -234,6 +234,102 @@ pub fn mem_sweep(
     Ok(rows)
 }
 
+/// One cell of the cross-model validation sweep: a workload fixture
+/// analyzed against one registered machine model. Error cells are
+/// first-class (a partial model like `hsw` lacks divide entries, and
+/// the sweep must say so deterministically rather than abort).
+#[derive(Debug, Clone)]
+pub struct ZooSweepRow {
+    pub workload: String,
+    pub model: String,
+    pub isa: &'static str,
+    /// Analytic prediction; `None` when the cell errored.
+    pub cy_per_asm_iter: Option<f32>,
+    /// Winning bound (`port_pressure`, `frontend`, ...); empty on error.
+    pub bound: String,
+    /// Structured error kind + message for failed cells.
+    pub error: Option<String>,
+}
+
+/// The cross-model validation sweep (`osaca zoo-sweep`): every
+/// embedded workload fixture × every registered ISA-matching model —
+/// the five built-ins plus everything `import-model`/`--models-dir`
+/// registered. Deterministic order (fixtures in declaration order,
+/// models sorted by name) so two runs render byte-identical
+/// scorecards; `ci.sh --zoo-smoke` gates on that.
+pub fn zoo_sweep(engine: &crate::api::Engine) -> Vec<ZooSweepRow> {
+    use crate::api::{Engine, Passes};
+    let mut models: Vec<String> =
+        mdb::builtin_names().iter().map(|s| s.to_string()).collect();
+    models.extend(mdb::registry_names());
+    models.sort();
+    models.dedup();
+    let mut rows = Vec::new();
+    for w in workloads::all_isa() {
+        for name in &models {
+            let machine = match engine.machine(name) {
+                Ok(m) => m,
+                Err(_) => continue, // racing unregister; not reachable in the CLI
+            };
+            if machine.isa != w.isa {
+                continue;
+            }
+            let req = Engine::request(&w.name())
+                .machine(machine)
+                .source(w.source)
+                .passes(Passes::THROUGHPUT)
+                .unroll(w.unroll);
+            let row = match engine.analyze(&req) {
+                Ok(report) => {
+                    let p = report.prediction();
+                    match p.winner() {
+                        Some(winner) => ZooSweepRow {
+                            workload: w.name(),
+                            model: name.clone(),
+                            isa: w.isa.name(),
+                            cy_per_asm_iter: Some(winner.cy_per_asm_iter),
+                            bound: winner.kind.name().to_string(),
+                            error: None,
+                        },
+                        None => ZooSweepRow {
+                            workload: w.name(),
+                            model: name.clone(),
+                            isa: w.isa.name(),
+                            cy_per_asm_iter: None,
+                            bound: String::new(),
+                            error: Some("internal: no model bound".to_string()),
+                        },
+                    }
+                }
+                Err(e) => ZooSweepRow {
+                    workload: w.name(),
+                    model: name.clone(),
+                    isa: w.isa.name(),
+                    cy_per_asm_iter: None,
+                    bound: String::new(),
+                    error: Some(format!("{}: {e}", e.kind_name())),
+                },
+            };
+            rows.push(row);
+        }
+    }
+    rows
+}
+
+pub fn render_zoo_sweep(rows: &[ZooSweepRow]) -> Vec<Vec<String>> {
+    rows.iter()
+        .map(|r| {
+            vec![
+                r.workload.clone(),
+                r.model.clone(),
+                r.isa.to_string(),
+                r.cy_per_asm_iter.map(|v| format!("{v:.2}")).unwrap_or_else(|| "-".into()),
+                if r.error.is_some() { "error".to_string() } else { r.bound.clone() },
+            ]
+        })
+        .collect()
+}
+
 pub fn render_mem_sweep(rows: &[MemSweepRow]) -> Vec<Vec<String>> {
     rows.iter()
         .map(|r| {
@@ -303,6 +399,34 @@ mod tests {
 
     fn quick_cfg() -> SimConfig {
         SimConfig { iterations: 300, warmup: 80 }
+    }
+
+    #[test]
+    fn zoo_sweep_covers_every_isa_matching_builtin_cell() {
+        let engine = crate::api::Engine::cpu_only();
+        let rows = zoo_sweep(&engine);
+        // Every x86 fixture meets all three x86 built-ins; foreign-ISA
+        // models never appear in x86 rows. (Containment, not equality:
+        // the registry is process-global and sibling tests register
+        // extra throwaway models.)
+        let triad_skl: Vec<&ZooSweepRow> =
+            rows.iter().filter(|r| r.workload == "triad-skl-O3").collect();
+        let models: Vec<&str> = triad_skl.iter().map(|r| r.model.as_str()).collect();
+        for builtin in ["hsw", "skl", "zen"] {
+            assert!(models.contains(&builtin), "{models:?}");
+        }
+        assert!(!models.contains(&"tx2") && !models.contains(&"rv64"), "{models:?}");
+        let skl_cell = triad_skl.iter().find(|r| r.model == "skl").unwrap();
+        assert_eq!(skl_cell.cy_per_asm_iter, Some(2.0), "{skl_cell:?}");
+        assert_eq!(skl_cell.bound, "port_pressure");
+        assert!(skl_cell.error.is_none());
+        // The foreign-ISA fixtures sweep against their own models.
+        assert!(rows.iter().any(|r| r.model == "tx2" && r.isa == "aarch64"));
+        assert!(rows.iter().any(|r| r.model == "rv64" && r.isa == "riscv"));
+        // Error cells are structured, not panics/aborts.
+        for r in &rows {
+            assert_eq!(r.error.is_some(), r.cy_per_asm_iter.is_none(), "{r:?}");
+        }
     }
 
     #[test]

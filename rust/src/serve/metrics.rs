@@ -58,6 +58,7 @@ impl ServeMetrics {
         shedding: bool,
         panics: u64,
         worker_restarts: u64,
+        model_reloads: u64,
     ) -> StatsFrame {
         StatsFrame {
             served: self.served.load(Ordering::Relaxed),
@@ -72,6 +73,7 @@ impl ServeMetrics {
             panics,
             worker_restarts,
             oversized_frames: self.oversized_frames.load(Ordering::Relaxed),
+            model_reloads,
             memo_len,
             memo_bytes,
             shedding,
@@ -95,7 +97,7 @@ mod tests {
         ServeMetrics::bump(&m.shed);
         ServeMetrics::bump(&m.deadline_expired);
         ServeMetrics::bump(&m.oversized_frames);
-        let f = m.frame(3, 4096, vec![0, 2], true, 1, 1);
+        let f = m.frame(3, 4096, vec![0, 2], true, 1, 1, 2);
         assert_eq!(f.served, 2);
         assert_eq!(f.memo_hits, 1);
         assert_eq!(f.memo_misses, 0);
@@ -106,6 +108,7 @@ mod tests {
         assert_eq!(f.panics, 1);
         assert_eq!(f.worker_restarts, 1);
         assert_eq!(f.oversized_frames, 1);
+        assert_eq!(f.model_reloads, 2);
         assert_eq!(f.memo_len, 3);
         assert_eq!(f.memo_bytes, 4096);
         assert!(f.shedding);
@@ -113,6 +116,7 @@ mod tests {
         let rendered = f.render();
         assert!(rendered.contains("\"served\":2"));
         assert!(rendered.contains("\"worker_restarts\":1"));
+        assert!(rendered.contains("\"model_reloads\":2"));
         assert!(rendered.contains("\"memo_bytes\":4096"));
         assert!(rendered.contains("\"shedding\":true"));
         assert!(rendered.contains("\"queue_depths\":[0,2]"));

@@ -77,6 +77,13 @@
 //!   then closes and joins the executor, whose workers drain whatever
 //!   was already queued before exiting. Nothing accepted is dropped on
 //!   the floor.
+//! * **Dynamic models.** `--models-dir` scans user `.mdb` files into
+//!   the process-wide model registry at bind time; the wire
+//!   `reload_models` op re-scans the same directory without a restart.
+//!   Because the registry is process-global, new and updated models
+//!   become visible to every shard (including panic-rebuilt engines)
+//!   immediately, and the `stats` frame's `model_reloads` counter
+//!   records completed scans.
 //! * **Introspection.** The wire `stats` op snapshots
 //!   [`metrics::ServeMetrics`] (served / memo hits / errors /
 //!   overloaded / rate_limited / shed / deadline_expired /
@@ -166,6 +173,10 @@ pub struct ServeConfig {
     /// [`faults::FaultPlan`]. Never enable in production
     /// configurations.
     pub chaos_seed: Option<u64>,
+    /// Directory of user `.mdb` models (`--models-dir`): scanned into
+    /// the process-wide dynamic registry at bind time and again on
+    /// every `reload_models` wire op. `None` disables the op.
+    pub models_dir: Option<String>,
 }
 
 impl Default for ServeConfig {
@@ -186,6 +197,7 @@ impl Default for ServeConfig {
             shed_low: 0,
             test_ops: false,
             chaos_seed: None,
+            models_dir: None,
         }
     }
 }
@@ -210,6 +222,7 @@ struct Shared {
     shedding: AtomicBool,
     chaos: Option<FaultPlan>,
     test_ops: bool,
+    models_dir: Option<String>,
     addr: SocketAddr,
 }
 
@@ -266,6 +279,14 @@ impl Server {
     /// Bind the listener and start the accept loop and the shard worker
     /// pool.
     pub fn bind(cfg: ServeConfig) -> io::Result<Server> {
+        // Startup scan: registered models are process-global, so every
+        // shard (including panic-rebuilt engines) sees them. A missing
+        // or unreadable directory is a configuration error worth
+        // failing loudly at bind time rather than per-request.
+        if let Some(dir) = &cfg.models_dir {
+            crate::mdb::scan_models_dir(std::path::Path::new(dir))
+                .map_err(|e| io::Error::new(io::ErrorKind::InvalidInput, format!("{e:#}")))?;
+        }
         let listener = TcpListener::bind(&cfg.addr)?;
         let addr = listener.local_addr()?;
         let n = cfg.shards.max(1);
@@ -310,6 +331,7 @@ impl Server {
             shedding: AtomicBool::new(false),
             chaos: cfg.chaos_seed.map(FaultPlan::new),
             test_ops: cfg.test_ops,
+            models_dir: cfg.models_dir.clone(),
             addr,
         });
         let accept = {
@@ -384,13 +406,18 @@ impl Drop for Server {
     }
 }
 
-/// Stable shard routing: FNV-1a over the lower-cased arch name. Every
-/// model family maps to one home worker, so its solver work batches
-/// together and its engine's model registry stays hot — idle workers
+/// Stable shard routing: FNV-1a over the *canonical* lower-cased arch
+/// name (the registry's alias table), so every spelling of one model
+/// family — `skl`, `SKYLAKE`, an imported `CascadeLake` — maps to the
+/// same home worker and its solver work batches together. Unknown
+/// names hash their lower-cased raw spelling; the analysis will answer
+/// `unknown_arch` anyway, the hint just has to be stable. Idle workers
 /// still steal across shards under imbalance.
 fn shard_index(arch: &str, shards: usize) -> usize {
+    let canon = crate::mdb::canonical_arch(arch);
+    let name = canon.as_deref().unwrap_or(arch);
     let mut h: u64 = 0xcbf2_9ce4_8422_2325;
-    for b in arch.bytes() {
+    for b in name.bytes() {
         h ^= b.to_ascii_lowercase() as u64;
         h = h.wrapping_mul(0x0000_0100_0000_01b3);
     }
@@ -481,9 +508,27 @@ fn handle_conn(shared: Arc<Shared>, mut stream: TcpStream) {
                         shared.shed_state(),
                         es.panics.load(Ordering::Relaxed),
                         es.worker_restarts.load(Ordering::Relaxed),
+                        crate::mdb::reload_count() as u64,
                     )
                     .render()
             }
+            Ok(WireRequest::ReloadModels) => match &shared.models_dir {
+                None => {
+                    ServeMetrics::bump(&shared.metrics.errors);
+                    error_frame("bad_request", "server was started without --models-dir")
+                }
+                Some(dir) => match crate::mdb::scan_models_dir(std::path::Path::new(dir)) {
+                    Ok(names) => ok_frame(
+                        Format::Text,
+                        false,
+                        &format!("reloaded {} model(s) from {dir}", names.len()),
+                    ),
+                    Err(e) => {
+                        ServeMetrics::bump(&shared.metrics.errors);
+                        error_frame("internal_error", &format!("model reload failed: {e:#}"))
+                    }
+                },
+            },
             Ok(WireRequest::Shutdown) => {
                 let _ = write_frame(&mut stream, &bye_frame());
                 shared.initiate_shutdown();
@@ -775,6 +820,15 @@ mod tests {
         for arches in [["skl", "SKL"], ["zen", "Zen"], ["rv64", "RV64"]] {
             assert_eq!(shard_index(arches[0], 4), shard_index(arches[1], 4));
         }
+        // Aliases canonicalize before hashing: every spelling of one
+        // model family shares a home shard (registry satellite).
+        for arches in [["skl", "Skylake"], ["zen", "znver1"], ["tx2", "ThunderX2"]] {
+            assert_eq!(
+                shard_index(arches[0], 4),
+                shard_index(arches[1], 4),
+                "{arches:?} should share a shard"
+            );
+        }
         // Different families spread (not all on one shard for the
         // built-ins we ship).
         let idx: Vec<usize> =
@@ -800,5 +854,6 @@ mod tests {
         assert_eq!(c.shed_low, 0, "0 = auto (quarter capacity)");
         assert!(!c.test_ops);
         assert!(c.chaos_seed.is_none());
+        assert!(c.models_dir.is_none(), "dynamic model loading is opt-in");
     }
 }

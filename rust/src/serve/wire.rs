@@ -10,6 +10,7 @@
 //!  "passes":["throughput","critpath"],"frontend_bound":false,
 //!  "unroll":4,"format":"json","deadline_ms":250}
 //! {"op":"stats"}
+//! {"op":"reload_models"}
 //! {"op":"shutdown"}
 //! {"op":"sleep","ms":250}        // test-ops builds only
 //! {"op":"panic"}                 // test-ops builds only
@@ -37,6 +38,11 @@ pub enum WireRequest {
         deadline_ms: Option<u64>,
     },
     Stats,
+    /// Re-scan the server's `--models-dir` into the process-wide
+    /// dynamic model registry (no-op without a configured directory).
+    /// Imported/updated `.mdb` files become visible to every shard —
+    /// the registry is process-global — without a restart.
+    ReloadModels,
     Shutdown,
     /// Test-ops only: occupy a shard worker for `ms` milliseconds so
     /// tests can saturate a queue deterministically.
@@ -85,6 +91,7 @@ pub fn parse_request(line: &str, test_ops: bool) -> Result<WireRequest, FrameErr
             Ok(WireRequest::Analyze { req, deadline_ms })
         }
         "stats" => Ok(WireRequest::Stats),
+        "reload_models" => Ok(WireRequest::ReloadModels),
         "shutdown" => Ok(WireRequest::Shutdown),
         "sleep" if test_ops => {
             let ms = v
@@ -208,6 +215,11 @@ mod tests {
     #[test]
     fn control_ops_parse() {
         assert!(matches!(parse_request("{\"op\":\"stats\"}", false), Ok(WireRequest::Stats)));
+        // reload_models is a real control op, not test-ops-gated.
+        assert!(matches!(
+            parse_request("{\"op\":\"reload_models\"}", false),
+            Ok(WireRequest::ReloadModels)
+        ));
         assert!(matches!(
             parse_request("{\"op\":\"shutdown\"}", false),
             Ok(WireRequest::Shutdown)

@@ -1,0 +1,530 @@
+//! Compile uops.info XML measurements + a curated overlay into a
+//! `MachineModel`, reusing the `.mdb` round-trip infrastructure.
+//!
+//! Data flow (DESIGN.md §13):
+//!
+//! ```text
+//! uops.info XML --(xml::Pull)--> per-arch records
+//!        + overlay (ports/roles/params/flags/caches)
+//!   --> FormEntry µ-op decompositions
+//!   --> MachineModel::serialize()  (the --learn stanza emitter)
+//!   --> MachineModel::parse()      (round-trip: emitted text is
+//!                                   guaranteed loadable)
+//! ```
+//!
+//! Operand signatures are rebuilt in the repo's AT&T convention: the
+//! XML lists operands in Intel order (destination first), so the
+//! importer reverses them, maps register widths to the `.mdb` width
+//! classes (128 -> `xmm`, 256 -> `ymm`), and generalizes GPR widths
+//! to the bare `r` class for non-VEX mnemonics so the analyzer's
+//! suffix normalization (`addl` -> `add-imm_r`) keeps working —
+//! VEX-prefixed mnemonics keep explicit `r32`/`r64` classes exactly
+//! like the hand-written models do.
+
+use crate::api::OsacaError;
+use crate::isa::InstructionForm;
+use crate::mdb::machine::MachineModel;
+use crate::mdb::{FormEntry, PortMask, Uop, UopKind};
+
+use super::overlay::{self, Overlay};
+use super::xml::{Event, Pull};
+
+/// One instruction's worth of measurement for the target arch.
+struct Record {
+    /// 1-based XML line of the `<instruction>` element (error context).
+    line: usize,
+    mnemonic: String,
+    sig: String,
+    has_mem_read: bool,
+    has_mem_write: bool,
+    ports: String,
+    tp: f32,
+    latency: f32,
+    div_cycles: f32,
+}
+
+/// A fully imported model: the compiled machine model plus the exact
+/// `.mdb` text it round-tripped through.
+pub struct ImportedModel {
+    pub model: MachineModel,
+    pub text: String,
+    /// Instruction forms imported for the target architecture.
+    pub entries: usize,
+}
+
+fn bad(line: impl Into<Option<usize>>, message: impl Into<String>) -> OsacaError {
+    OsacaError::BadModelImport { line: line.into(), message: message.into() }
+}
+
+/// Every `<architecture name=..>` spelling in the XML, sorted unique —
+/// what `import-model` offers when asked for an arch the dump lacks.
+pub fn arches_in(xml: &str) -> Result<Vec<String>, OsacaError> {
+    let mut pull = Pull::new(xml);
+    let mut names = Vec::new();
+    loop {
+        match pull.next_event().map_err(|e| bad(e.line, e.message))? {
+            Event::Open { name: "architecture", ref attrs, .. } => {
+                if let Some((_, v)) = attrs.iter().find(|(k, _)| *k == "name") {
+                    if !names.contains(v) {
+                        names.push(v.clone());
+                    }
+                }
+            }
+            Event::Eof => break,
+            _ => {}
+        }
+    }
+    names.sort();
+    Ok(names)
+}
+
+/// Import the measurements for `arch` from uops.info-format XML text,
+/// compile them against the curated overlay, and round-trip the result
+/// through the `.mdb` serializer/parser. Every failure is a structured
+/// [`OsacaError::BadModelImport`]; malformed XML never panics.
+pub fn import_model(xml: &str, arch: &str) -> Result<ImportedModel, OsacaError> {
+    let ov = overlay::overlay_for(arch).ok_or_else(|| {
+        bad(
+            None,
+            format!(
+                "no curated overlay for architecture `{arch}` (curated: {})",
+                overlay::curated_arches().join(", ")
+            ),
+        )
+    })?;
+    let records = collect_records(xml, ov)?;
+    if records.is_empty() {
+        return Err(bad(
+            None,
+            format!(
+                "no measurements for architecture `{arch}` in the XML (present: {})",
+                arches_in(xml)?.join(", ")
+            ),
+        ));
+    }
+    build_model(ov, &records)
+}
+
+/// Walk the XML once, keeping only instructions with a measurement
+/// for one of the overlay's architecture spellings.
+fn collect_records(xml: &str, ov: &Overlay) -> Result<Vec<Record>, OsacaError> {
+    let arch_matches = |name: &str| {
+        ov.arch.eq_ignore_ascii_case(name)
+            || ov.xml_names.iter().any(|n| n.eq_ignore_ascii_case(name))
+    };
+    let mut pull = Pull::new(xml);
+    let mut records: Vec<Record> = Vec::new();
+    // Current <instruction> context.
+    let mut cur: Option<Record> = None;
+    let mut sig_parts: Vec<String> = Vec::new();
+    let mut in_matching_arch = false;
+    let mut in_measurement = false;
+    let mut seen_measurement = false;
+    loop {
+        let line = pull.line();
+        let ev = pull.next_event().map_err(|e| bad(e.line, e.message))?;
+        match ev {
+            Event::Open { name: "instruction", ref attrs, self_closing } => {
+                if self_closing {
+                    continue; // no operands, no measurements: nothing to import
+                }
+                let asm = attrs
+                    .iter()
+                    .find(|(k, _)| *k == "asm")
+                    .map(|(_, v)| v.clone())
+                    .ok_or_else(|| bad(line, "<instruction> without an `asm` attribute"))?;
+                cur = Some(Record {
+                    line,
+                    mnemonic: asm.to_ascii_lowercase(),
+                    sig: String::new(),
+                    has_mem_read: false,
+                    has_mem_write: false,
+                    ports: String::new(),
+                    tp: 0.0,
+                    latency: 0.0,
+                    div_cycles: 0.0,
+                });
+                sig_parts.clear();
+                seen_measurement = false;
+            }
+            Event::Close { name: "instruction" } => {
+                if let Some(mut rec) = cur.take() {
+                    if seen_measurement {
+                        // Intel operand order -> AT&T (dest last).
+                        sig_parts.reverse();
+                        rec.sig = sig_parts.join("_");
+                        if rec.sig.is_empty() {
+                            return Err(bad(rec.line, format!(
+                                "instruction `{}` has no non-suppressed operands",
+                                rec.mnemonic
+                            )));
+                        }
+                        records.push(rec);
+                    }
+                }
+                in_matching_arch = false;
+                in_measurement = false;
+            }
+            Event::Open { name: "operand", ref attrs, .. } => {
+                let rec = match cur.as_mut() {
+                    Some(r) => r,
+                    None => continue,
+                };
+                let attr = |k: &str| attrs.iter().find(|(a, _)| *a == k).map(|(_, v)| v.as_str());
+                if attr("suppressed") == Some("1") {
+                    continue;
+                }
+                let ty = attr("type").unwrap_or("");
+                match ty {
+                    "flags" => {}
+                    "imm" => sig_parts.push("imm".to_string()),
+                    "mem" | "agen" => {
+                        sig_parts.push("mem".to_string());
+                        if attr("r") == Some("1") {
+                            rec.has_mem_read = true;
+                        }
+                        if attr("w") == Some("1") {
+                            rec.has_mem_write = true;
+                        }
+                    }
+                    "reg" => {
+                        let width: u32 = attr("width")
+                            .unwrap_or("64")
+                            .parse()
+                            .map_err(|_| bad(line, "bad operand width"))?;
+                        sig_parts.push(reg_class(&rec.mnemonic, width).to_string());
+                    }
+                    other => {
+                        return Err(bad(line, format!("unknown operand type `{other}`")));
+                    }
+                }
+            }
+            Event::Open { name: "architecture", ref attrs, self_closing } => {
+                let name =
+                    attrs.iter().find(|(k, _)| *k == "name").map(|(_, v)| v.as_str()).unwrap_or("");
+                in_matching_arch = cur.is_some() && !self_closing && arch_matches(name);
+            }
+            Event::Close { name: "architecture" } => {
+                in_matching_arch = false;
+                in_measurement = false;
+            }
+            Event::Open { name: "measurement", ref attrs, self_closing } => {
+                if !in_matching_arch {
+                    continue;
+                }
+                let rec = match cur.as_mut() {
+                    Some(r) => r,
+                    None => continue,
+                };
+                let attr = |k: &str| attrs.iter().find(|(a, _)| *a == k).map(|(_, v)| v.as_str());
+                rec.ports = attr("ports").unwrap_or("").to_string();
+                rec.tp = parse_f32(attr("TP"), line, "TP")?;
+                rec.div_cycles = parse_f32(attr("div_cycles"), line, "div_cycles")?;
+                seen_measurement = true;
+                in_measurement = !self_closing;
+            }
+            Event::Close { name: "measurement" } => in_measurement = false,
+            Event::Open { name: "latency", ref attrs, .. } => {
+                if !in_measurement {
+                    continue;
+                }
+                if let Some(rec) = cur.as_mut() {
+                    let cycles =
+                        attrs.iter().find(|(k, _)| *k == "cycles").map(|(_, v)| v.as_str());
+                    rec.latency = parse_f32(cycles, line, "latency cycles")?;
+                }
+            }
+            Event::Eof => break,
+            _ => {}
+        }
+    }
+    Ok(records)
+}
+
+fn parse_f32(v: Option<&str>, line: usize, what: &str) -> Result<f32, OsacaError> {
+    match v {
+        None | Some("") => Ok(0.0),
+        Some(s) => s.parse().map_err(|_| bad(line, format!("bad {what} value `{s}`"))),
+    }
+}
+
+/// Map a register operand to the `.mdb` width class. VEX mnemonics
+/// keep explicit GPR widths (`vcvtsi2sd-r32_xmm_xmm`); everything
+/// else generalizes to `r` so suffix normalization applies.
+fn reg_class(mnemonic: &str, width: u32) -> &'static str {
+    match width {
+        512 => "zmm",
+        256 => "ymm",
+        128 => "xmm",
+        64 if mnemonic.starts_with('v') => "r64",
+        32 if mnemonic.starts_with('v') => "r32",
+        _ => "r",
+    }
+}
+
+/// Resolve one port-usage token against the overlay's port list:
+/// an exact port name, or a prefix + one digit per port
+/// (`p0156` -> P0|P1|P5|P6, `FP01` -> FP0|FP1, `AGU012` -> all AGUs).
+fn port_token_mask(ports: &[&str], token: &str) -> Option<PortMask> {
+    let index_of =
+        |name: &str| ports.iter().position(|p| p.eq_ignore_ascii_case(name));
+    if let Some(i) = index_of(token) {
+        return Some(PortMask::single(i));
+    }
+    let first_digit = token.find(|c: char| c.is_ascii_digit())?;
+    let (prefix, digits) = token.split_at(first_digit);
+    if prefix.is_empty() || digits.is_empty() || !digits.chars().all(|c| c.is_ascii_digit()) {
+        return None;
+    }
+    let mut mask = PortMask::EMPTY;
+    for d in digits.chars() {
+        let i = index_of(&format!("{prefix}{d}"))?;
+        mask = mask.union(PortMask::single(i));
+    }
+    Some(mask)
+}
+
+fn role_mask(ports: &[&str], role: &[&str]) -> PortMask {
+    let mut mask = PortMask::EMPTY;
+    for name in role {
+        if let Some(i) = ports.iter().position(|p| p.eq_ignore_ascii_case(name)) {
+            mask = mask.union(PortMask::single(i));
+        }
+    }
+    mask
+}
+
+fn is_subset(a: PortMask, b: PortMask) -> bool {
+    !a.is_empty() && a.iter().all(|p| b.contains(p))
+}
+
+/// Compile the records into a `MachineModel` and round-trip it
+/// through the `.mdb` text format.
+fn build_model(ov: &Overlay, records: &[Record]) -> Result<ImportedModel, OsacaError> {
+    let load = role_mask(ov.ports, ov.load_ports);
+    let store_data = role_mask(ov.ports, ov.store_data_ports);
+    let store_agu = role_mask(ov.ports, ov.store_agu_ports);
+    let divider = role_mask(ov.ports, &[ov.divider_port]);
+    let mut model = MachineModel {
+        name: ov.arch.to_string(),
+        arch_name: ov.pretty.to_string(),
+        isa: ov.isa,
+        ports: ov.ports.iter().map(|p| p.to_string()).collect(),
+        frequency_ghz: ov.freq_ghz,
+        avx256_split: ov.flags.contains(&"avx256_split"),
+        hide_load_behind_store: ov.flags.contains(&"hide_load_behind_store"),
+        sim_zero_idiom_elim: ov.simflags.contains(&"zero_idiom_elim"),
+        sim_macro_fusion: ov.simflags.contains(&"macro_fusion"),
+        sim_move_elim: ov.simflags.contains(&"move_elim"),
+        sim_store_data_free: ov.simflags.contains(&"store_data_free"),
+        load_ports: load,
+        store_data_ports: store_data,
+        store_agu_ports: store_agu,
+        store_agu_simple_ports: role_mask(ov.ports, ov.store_agu_simple_ports),
+        params: ov.core_params(),
+        caches: ov.cache_levels(),
+        mem_latency_cy: ov.mem_latency_cy,
+        entries: Default::default(),
+        index: Default::default(),
+    };
+    let n = records.len();
+    for rec in records {
+        let uops = decode_uops(rec, ov, load, store_data, store_agu, divider)?;
+        let form = InstructionForm::parse(&format!("{}-{}", rec.mnemonic, rec.sig));
+        model.insert(FormEntry { form, latency: rec.latency, throughput: rec.tp, uops });
+    }
+    // Round-trip through the --learn stanza infrastructure: the text
+    // we hand out must load exactly like a hand-written model.
+    let text = model.serialize();
+    let model = MachineModel::parse(&text).map_err(|e| {
+        bad(None, format!("imported `{}` model failed the .mdb round-trip: {e:#}", ov.arch))
+    })?;
+    Ok(ImportedModel { model, text, entries: n })
+}
+
+/// Decode a uops.info port-usage string (`1*p015+1*p23`) into typed
+/// µ-ops. Roles are inferred from the overlay's port sets and the
+/// instruction's memory-operand direction: for a store, the first
+/// term on the store-data ports is the store-data µ-op and the next
+/// on the store-AGU ports the AGU µ-op; a term on the load ports of a
+/// mem-reading instruction is the load µ-op; everything else computes.
+/// A nonzero `div_cycles` appends the divider-pipe occupancy µ-op.
+fn decode_uops(
+    rec: &Record,
+    ov: &Overlay,
+    load: PortMask,
+    store_data: PortMask,
+    store_agu: PortMask,
+    divider: PortMask,
+) -> Result<Vec<Uop>, OsacaError> {
+    let mut uops = Vec::new();
+    let (mut st_done, mut agu_done, mut ld_done) = (false, false, false);
+    if rec.ports.is_empty() {
+        return Err(bad(
+            rec.line,
+            format!("instruction `{}-{}` has no `ports` usage", rec.mnemonic, rec.sig),
+        ));
+    }
+    for term in rec.ports.split('+') {
+        let term = term.trim();
+        let (count_s, token) = term.split_once('*').ok_or_else(|| {
+            bad(rec.line, format!("bad port-usage term `{term}` (want N*ports)"))
+        })?;
+        let count: u32 = count_s
+            .trim()
+            .parse()
+            .map_err(|_| bad(rec.line, format!("bad µ-op count in `{term}`")))?;
+        let mask = port_token_mask(ov.ports, token.trim()).ok_or_else(|| {
+            bad(
+                rec.line,
+                format!("unknown port token `{}` for {} (ports: {})", token, ov.arch, ov.ports.join(" ")),
+            )
+        })?;
+        for _ in 0..count {
+            let kind = if rec.has_mem_write && !st_done && is_subset(mask, store_data) {
+                st_done = true;
+                UopKind::StoreData
+            } else if rec.has_mem_write && !agu_done && is_subset(mask, store_agu) {
+                agu_done = true;
+                UopKind::StoreAgu
+            } else if rec.has_mem_read && !ld_done && is_subset(mask, load) {
+                ld_done = true;
+                UopKind::Load
+            } else {
+                UopKind::Compute
+            };
+            uops.push(Uop { kind, ports: mask, occupancy: 1.0 });
+        }
+    }
+    if rec.div_cycles > 0.0 {
+        uops.push(Uop { kind: UopKind::Divider, ports: divider, occupancy: rec.div_cycles });
+    }
+    Ok(uops)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const MINI_XML: &str = r#"<?xml version="1.0"?>
+<!-- trimmed uops.info-style dump: two arches, three instructions -->
+<root>
+  <extension name="AVX">
+    <instruction asm="VADDPD" string="VADDPD (XMM, XMM, XMM)">
+      <operand idx="1" type="reg" width="128"/>
+      <operand idx="2" type="reg" width="128"/>
+      <operand idx="3" type="reg" width="128"/>
+      <operand idx="4" type="flags" suppressed="1"/>
+      <architecture name="CLX">
+        <measurement ports="1*p01" TP="0.5" uops="1">
+          <latency cycles="4"/>
+        </measurement>
+      </architecture>
+      <architecture name="ZEN2">
+        <measurement ports="1*FP23" TP="0.5" uops="1">
+          <latency cycles="3"/>
+        </measurement>
+      </architecture>
+    </instruction>
+    <instruction asm="VMOVAPD" string="VMOVAPD (M256, YMM)">
+      <operand idx="1" type="mem" width="256" w="1"/>
+      <operand idx="2" type="reg" width="256"/>
+      <architecture name="CLX">
+        <measurement ports="1*p4+1*p23" TP="1" uops="2">
+          <latency cycles="1"/>
+        </measurement>
+      </architecture>
+    </instruction>
+    <instruction asm="VDIVSD" string="VDIVSD (XMM, XMM, XMM)">
+      <operand idx="1" type="reg" width="128"/>
+      <operand idx="2" type="reg" width="128"/>
+      <operand idx="3" type="reg" width="128"/>
+      <architecture name="CLX">
+        <measurement ports="1*p0" TP="4" uops="1" div_cycles="4">
+          <latency cycles="13"/>
+        </measurement>
+      </architecture>
+    </instruction>
+  </extension>
+</root>
+"#;
+
+    #[test]
+    fn mini_import_compiles_signatures_and_uops() {
+        let imp = import_model(MINI_XML, "clx").unwrap();
+        assert_eq!(imp.model.name, "clx");
+        assert_eq!(imp.entries, 3);
+        let add = &imp.model.entries[&InstructionForm::new("vaddpd", "xmm_xmm_xmm")];
+        assert_eq!(add.uops.len(), 1);
+        assert_eq!(add.uops[0].kind, UopKind::Compute);
+        assert_eq!(add.uops[0].ports.count(), 2); // P0|P1
+        assert_eq!(add.latency, 4.0);
+        // Store: Intel (M256, YMM) -> AT&T ymm_mem, st on P4 + agu on P2|P3.
+        let st = &imp.model.entries[&InstructionForm::new("vmovapd", "ymm_mem")];
+        assert_eq!(st.uops[0].kind, UopKind::StoreData);
+        assert_eq!(st.uops[1].kind, UopKind::StoreAgu);
+        // Divider occupancy rides the overlay's divider pseudo-port.
+        let div = &imp.model.entries[&InstructionForm::new("vdivsd", "xmm_xmm_xmm")];
+        assert_eq!(div.uops[1].kind, UopKind::Divider);
+        assert_eq!(div.uops[1].occupancy, 4.0);
+        // The emitted text is the round-tripped serialization.
+        assert!(imp.text.contains("arch clx \"Intel Cascade Lake\""));
+        assert!(imp.text.contains("entry vdivsd-xmm_xmm_xmm lat=13 tp=4 uops=c@1:P0,dv@4:0DV"));
+    }
+
+    #[test]
+    fn zen2_tokens_resolve_against_amd_port_names() {
+        let imp = import_model(MINI_XML, "zen2").unwrap();
+        assert_eq!(imp.entries, 1);
+        let add = &imp.model.entries[&InstructionForm::new("vaddpd", "xmm_xmm_xmm")];
+        let names: Vec<&str> =
+            add.uops[0].ports.iter().map(|i| imp.model.ports[i].as_str()).collect();
+        assert_eq!(names, vec!["FP2", "FP3"]);
+        assert_eq!(add.latency, 3.0);
+        assert!(!imp.model.avx256_split);
+    }
+
+    #[test]
+    fn unknown_arch_and_missing_measurements_are_structured() {
+        let err = import_model(MINI_XML, "m1max").unwrap_err();
+        assert_eq!(err.kind_name(), "bad_model_import");
+        assert!(err.to_string().contains("curated"), "{err}");
+        // icl is curated but absent from this dump.
+        let err = import_model(MINI_XML, "icl").unwrap_err();
+        assert_eq!(err.kind_name(), "bad_model_import");
+        assert!(err.to_string().contains("no measurements"), "{err}");
+        assert!(err.to_string().contains("CLX"), "{err}");
+    }
+
+    #[test]
+    fn malformed_xml_is_a_structured_error_with_a_line() {
+        let truncated = &MINI_XML[..MINI_XML.len() / 2];
+        let err = import_model(truncated, "clx").unwrap_err();
+        assert_eq!(err.kind_name(), "bad_model_import");
+        let bad_port = MINI_XML.replace("1*p01", "1*p99");
+        let err = import_model(&bad_port, "clx").unwrap_err();
+        assert!(err.to_string().contains("unknown port token"), "{err}");
+        let bad_term = MINI_XML.replace("1*p01", "frobnicate");
+        let err = import_model(&bad_term, "clx").unwrap_err();
+        assert!(err.to_string().contains("bad port-usage term"), "{err}");
+    }
+
+    #[test]
+    fn arches_listing_is_sorted_unique() {
+        assert_eq!(arches_in(MINI_XML).unwrap(), vec!["CLX".to_string(), "ZEN2".to_string()]);
+    }
+
+    #[test]
+    fn port_tokens_cover_intel_and_amd_styles() {
+        let intel = &["P0", "P1", "P2", "P3", "P4", "P5", "P6", "P7", "0DV"];
+        assert_eq!(port_token_mask(intel, "p0156").unwrap().count(), 4);
+        assert_eq!(port_token_mask(intel, "p23").unwrap().count(), 2);
+        assert_eq!(port_token_mask(intel, "0DV").unwrap().count(), 1);
+        assert!(port_token_mask(intel, "p9").is_none());
+        let amd = &["FP0", "FP1", "FP2", "FP3", "AGU0", "AGU1", "AGU2", "DV"];
+        assert_eq!(port_token_mask(amd, "FP01").unwrap().count(), 2);
+        assert_eq!(port_token_mask(amd, "AGU012").unwrap().count(), 3);
+        assert_eq!(port_token_mask(amd, "DV").unwrap().count(), 1);
+        assert!(port_token_mask(amd, "IX3").is_none());
+    }
+}

@@ -1,0 +1,43 @@
+//! Model zoo (DESIGN.md §13): grow the machine-model database from
+//! published measurement dumps instead of by hand.
+//!
+//! The paper's §II workflow builds each `.mdb` model from
+//! documentation and ibench micro-benchmarks — faithful, but one
+//! architecture at a time. uops.info publishes the same three facts
+//! (latency, reciprocal throughput, port usage) for every x86
+//! microarchitecture it measures, as one big XML database. This
+//! module turns such a dump into first-class models:
+//!
+//! * [`xml`] — a dependency-free streaming pull parser for the
+//!   uops.info XML subset (structured errors with line numbers,
+//!   never a panic).
+//! * [`overlay`] — curated per-µarch facts the XML does not carry:
+//!   port roles, core parameters, flags, caches, CLI aliases.
+//! * [`import`] — compiles XML measurements + overlay into a
+//!   [`crate::mdb::MachineModel`] and round-trips it through the
+//!   `.mdb` serializer so the emitted text is guaranteed loadable.
+//!
+//! Imported text registers with the dynamic model registry
+//! (`mdb::registry`), after which the new architecture resolves
+//! everywhere a built-in does: `analyze --arch clx`, the serve
+//! shards, `zoo-sweep`, and `corpus`. The CLI entry points are
+//! `osaca import-model <xml> --arch <name>` and `osaca zoo-sweep`.
+
+pub mod import;
+pub mod overlay;
+pub mod xml;
+
+pub use import::{arches_in, import_model, ImportedModel};
+pub use overlay::curated_arches;
+
+use crate::api::OsacaError;
+
+/// Import `arch` from XML text and register the result with the
+/// dynamic model registry under its canonical short name. Returns the
+/// canonical name (what `--arch` then accepts).
+pub fn import_and_register(xml: &str, arch: &str) -> Result<String, OsacaError> {
+    let imported = import_model(xml, arch)?;
+    let name = imported.model.name.clone();
+    crate::mdb::register_model_text(&name, &imported.text);
+    Ok(name)
+}

@@ -1,0 +1,223 @@
+//! Curated per-architecture overlays for the uops.info importer.
+//!
+//! uops.info measurements give latency, throughput and port *usage*
+//! ("1*p23"), but not the machine-level facts a `.mdb` model needs:
+//! which ports exist and what they do (load/store-data/store-AGU
+//! roles), core parameters (ROB, scheduler, widths, forwarding
+//! latencies), analyzer/simulator flags, the cache hierarchy, and the
+//! CLI aliases. An [`Overlay`] supplies exactly that — the same
+//! by-hand §II knowledge the built-in models encode, curated once per
+//! microarchitecture family instead of once per instruction.
+//!
+//! The three shipped overlays match the vendored test fixture
+//! (`rust/tests/fixtures/uops_trimmed.xml`) and the registry's
+//! curated alias table (`mdb::registry`):
+//!
+//! * `clx` — Cascade Lake, structurally the paper's Skylake core
+//!   (same port roles, sizes and caches), so imported predictions pin
+//!   against the skl golden numbers.
+//! * `icl` — Ice Lake: 10 execution ports with split store-data
+//!   (P4/P9) and dedicated store-AGU (P7/P8) pipes, a bigger window.
+//! * `zen2` — Zen 2: Zen's FP/ALU/AGU pipe split with a third AGU
+//!   and native 256-bit datapaths (no `avx256_split`).
+
+use crate::isa::Isa;
+use crate::mdb::machine::{CacheLevel, CoreParams};
+
+/// One cache level as overlay data: (name, size, line, latency, assoc).
+pub type OverlayCache = (&'static str, u64, u32, u32, u32);
+
+/// Everything the XML does not carry. Port-usage tokens in the XML
+/// resolve against `ports` (see `import::port_token_mask`); the
+/// `divider_port` receives the `div_cycles` occupancy µ-op.
+pub struct Overlay {
+    /// Canonical short name (registry key, `.mdb` `arch` directive).
+    pub arch: &'static str,
+    /// Human-readable name for the `arch` directive.
+    pub pretty: &'static str,
+    /// How the architecture is spelled in uops.info XML dumps
+    /// (matched case-insensitively against `<architecture name=..>`).
+    pub xml_names: &'static [&'static str],
+    pub isa: Isa,
+    pub freq_ghz: f64,
+    pub ports: &'static [&'static str],
+    pub load_ports: &'static [&'static str],
+    pub store_data_ports: &'static [&'static str],
+    pub store_agu_ports: &'static [&'static str],
+    pub store_agu_simple_ports: &'static [&'static str],
+    pub divider_port: &'static str,
+    /// Analyzer flags (`avx256_split`, `hide_load_behind_store`).
+    pub flags: &'static [&'static str],
+    /// Simulator flags (`zero_idiom_elim`, ...).
+    pub simflags: &'static [&'static str],
+    /// (rob, sched, rename_width, retire_width, load_latency,
+    /// store_forward_latency, sim_divider_scale).
+    pub params: (usize, usize, usize, usize, u32, u32, f32),
+    pub lsq_size: usize,
+    pub lfb: u32,
+    pub caches: &'static [OverlayCache],
+    pub mem_latency_cy: u32,
+}
+
+impl Overlay {
+    pub fn core_params(&self) -> CoreParams {
+        let (rob, sched, rename, retire, load_lat, stfwd, div_scale) = self.params;
+        CoreParams {
+            rob_size: rob,
+            scheduler_size: sched,
+            rename_width: rename,
+            retire_width: retire,
+            load_latency: load_lat,
+            store_forward_latency: stfwd,
+            sim_divider_scale: div_scale,
+            lsq_size: self.lsq_size,
+            lfb: self.lfb,
+        }
+    }
+
+    pub fn cache_levels(&self) -> Vec<CacheLevel> {
+        self.caches
+            .iter()
+            .map(|&(name, size, line, lat, assoc)| CacheLevel {
+                name: name.to_string(),
+                size_bytes: size,
+                line_bytes: line,
+                latency_cy: lat,
+                assoc,
+            })
+            .collect()
+    }
+}
+
+const CLX: Overlay = Overlay {
+    arch: "clx",
+    pretty: "Intel Cascade Lake",
+    xml_names: &["CLX", "CascadeLake"],
+    isa: Isa::X86,
+    freq_ghz: 1.8,
+    // Skylake-server core: same port roles as data/skl.mdb.
+    ports: &["P0", "P1", "P2", "P3", "P4", "P5", "P6", "P7", "0DV"],
+    load_ports: &["P2", "P3"],
+    store_data_ports: &["P4"],
+    store_agu_ports: &["P2", "P3"],
+    store_agu_simple_ports: &[],
+    divider_port: "0DV",
+    flags: &[],
+    simflags: &["zero_idiom_elim", "macro_fusion", "move_elim"],
+    params: (224, 97, 4, 4, 4, 4, 1.0),
+    lsq_size: 72,
+    lfb: 8,
+    caches: &[
+        ("l1", 32 << 10, 64, 4, 8),
+        ("l2", 1 << 20, 64, 12, 16),
+        ("l3", 8 << 20, 64, 44, 16),
+    ],
+    mem_latency_cy: 80,
+};
+
+const ICL: Overlay = Overlay {
+    arch: "icl",
+    pretty: "Intel Ice Lake",
+    xml_names: &["ICL", "IceLake"],
+    isa: Isa::X86,
+    freq_ghz: 1.8,
+    // Sunny Cove: store data moved off the load AGUs onto P4/P9 and
+    // store AGUs onto dedicated P7/P8 pipes; wider window.
+    ports: &["P0", "P1", "P2", "P3", "P4", "P5", "P6", "P7", "P8", "P9", "0DV"],
+    load_ports: &["P2", "P3"],
+    store_data_ports: &["P4", "P9"],
+    store_agu_ports: &["P7", "P8"],
+    store_agu_simple_ports: &[],
+    divider_port: "0DV",
+    flags: &[],
+    simflags: &["zero_idiom_elim", "macro_fusion", "move_elim"],
+    params: (352, 160, 5, 5, 5, 4, 1.0),
+    lsq_size: 128,
+    lfb: 12,
+    caches: &[
+        ("l1", 48 << 10, 64, 5, 12),
+        ("l2", 512 << 10, 64, 13, 8),
+        ("l3", 8 << 20, 64, 42, 16),
+    ],
+    mem_latency_cy: 85,
+};
+
+const ZEN2: Overlay = Overlay {
+    arch: "zen2",
+    pretty: "AMD Zen 2",
+    xml_names: &["ZEN2", "ZEN+2", "Zen2"],
+    isa: Isa::X86,
+    freq_ghz: 1.8,
+    // Zen pipe split (data/zen.mdb) with a third AGU and native
+    // 256-bit datapaths, so no avx256_split flag.
+    ports: &[
+        "FP0", "FP1", "FP2", "FP3", "ALU0", "ALU1", "ALU2", "ALU3", "AGU0", "AGU1", "AGU2",
+        "DV",
+    ],
+    load_ports: &["AGU0", "AGU1", "AGU2"],
+    store_data_ports: &["AGU0", "AGU1", "AGU2"],
+    store_agu_ports: &["AGU0", "AGU1", "AGU2"],
+    store_agu_simple_ports: &[],
+    divider_port: "DV",
+    flags: &[],
+    simflags: &["zero_idiom_elim", "macro_fusion", "move_elim"],
+    params: (224, 92, 5, 5, 4, 7, 1.25),
+    lsq_size: 92,
+    lfb: 12,
+    caches: &[
+        ("l1", 32 << 10, 64, 4, 8),
+        ("l2", 512 << 10, 64, 12, 8),
+        ("l3", 16 << 20, 64, 39, 16),
+    ],
+    mem_latency_cy: 90,
+};
+
+const OVERLAYS: &[&Overlay] = &[&CLX, &ICL, &ZEN2];
+
+/// The curated overlay for an architecture spelling (canonical short
+/// name or any of its uops.info XML spellings), case-insensitively.
+pub fn overlay_for(arch: &str) -> Option<&'static Overlay> {
+    OVERLAYS.iter().copied().find(|o| {
+        o.arch.eq_ignore_ascii_case(arch)
+            || o.xml_names.iter().any(|n| n.eq_ignore_ascii_case(arch))
+    })
+}
+
+/// Canonical names of every curated overlay (sorted, for messages).
+pub fn curated_arches() -> Vec<&'static str> {
+    let mut v: Vec<&'static str> = OVERLAYS.iter().map(|o| o.arch).collect();
+    v.sort_unstable();
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn overlays_resolve_by_short_name_and_xml_spelling() {
+        assert_eq!(overlay_for("clx").unwrap().arch, "clx");
+        assert_eq!(overlay_for("CascadeLake").unwrap().arch, "clx");
+        assert_eq!(overlay_for("ICL").unwrap().arch, "icl");
+        assert_eq!(overlay_for("Zen2").unwrap().arch, "zen2");
+        assert!(overlay_for("m1max").is_none());
+        assert_eq!(curated_arches(), vec!["clx", "icl", "zen2"]);
+    }
+
+    #[test]
+    fn overlay_port_roles_are_subsets_of_the_port_list() {
+        for o in [&CLX, &ICL, &ZEN2] {
+            for role in [
+                o.load_ports,
+                o.store_data_ports,
+                o.store_agu_ports,
+                o.store_agu_simple_ports,
+            ] {
+                for p in role {
+                    assert!(o.ports.contains(p), "{}: role port {p} not declared", o.arch);
+                }
+            }
+            assert!(o.ports.contains(&o.divider_port), "{}", o.arch);
+        }
+    }
+}

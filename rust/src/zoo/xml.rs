@@ -1,0 +1,296 @@
+//! Minimal streaming XML pull parser for the uops.info instruction
+//! database format — hand-rolled, zero dependencies, in the spirit of
+//! the ustar reader in `corpus::tar`.
+//!
+//! This is deliberately not a general XML parser: it understands
+//! exactly the subset the uops.info dumps use — elements with
+//! single- or double-quoted attributes, self-closing tags, comments,
+//! the `<?xml?>` declaration, a `<!DOCTYPE>` line, character data
+//! (skipped; the importer only reads structure and attributes) and
+//! the five predefined entities plus numeric character references in
+//! attribute values. Anything outside that subset is a structured
+//! error with a line number, never a panic (`tests/zoo_import.rs`
+//! fuzzes the malformed cases).
+
+/// One parse error with the 1-based source line it was found on.
+#[derive(Debug)]
+pub struct XmlError {
+    pub line: usize,
+    pub message: String,
+}
+
+impl std::fmt::Display for XmlError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "line {}: {}", self.line, self.message)
+    }
+}
+
+/// A pull event: element open (with attributes), element close, or
+/// end of input. Self-closing tags yield `Open { self_closing: true }`
+/// and no matching `Close`.
+#[derive(Debug)]
+pub enum Event<'a> {
+    Open { name: &'a str, attrs: Vec<(&'a str, String)>, self_closing: bool },
+    Close { name: &'a str },
+    Eof,
+}
+
+impl<'a> Event<'a> {
+    /// Attribute value by name, if present.
+    pub fn attr(&self, key: &str) -> Option<&str> {
+        match self {
+            Event::Open { attrs, .. } => {
+                attrs.iter().find(|(k, _)| *k == key).map(|(_, v)| v.as_str())
+            }
+            _ => None,
+        }
+    }
+}
+
+/// The pull parser: call [`Pull::next_event`] until `Event::Eof`.
+pub struct Pull<'a> {
+    src: &'a str,
+    pos: usize,
+}
+
+impl<'a> Pull<'a> {
+    pub fn new(src: &'a str) -> Pull<'a> {
+        Pull { src, pos: 0 }
+    }
+
+    /// 1-based line of the current position (for error context).
+    pub fn line(&self) -> usize {
+        self.src[..self.pos.min(self.src.len())].bytes().filter(|&b| b == b'\n').count() + 1
+    }
+
+    fn err(&self, message: impl Into<String>) -> XmlError {
+        XmlError { line: self.line(), message: message.into() }
+    }
+
+    fn rest(&self) -> &'a str {
+        &self.src[self.pos..]
+    }
+
+    /// Advance past `needle`, erroring (unterminated construct) if absent.
+    fn skip_past(&mut self, needle: &str, what: &str) -> Result<(), XmlError> {
+        match self.rest().find(needle) {
+            Some(i) => {
+                self.pos += i + needle.len();
+                Ok(())
+            }
+            None => Err(self.err(format!("unterminated {what}"))),
+        }
+    }
+
+    pub fn next_event(&mut self) -> Result<Event<'a>, XmlError> {
+        loop {
+            // Skip character data up to the next markup.
+            match self.rest().find('<') {
+                Some(i) => self.pos += i,
+                None => {
+                    let tail = self.rest().trim();
+                    if !tail.is_empty() {
+                        return Err(self.err("text after the last element"));
+                    }
+                    self.pos = self.src.len();
+                    return Ok(Event::Eof);
+                }
+            }
+            let rest = self.rest();
+            if rest.starts_with("<!--") {
+                self.skip_past("-->", "comment")?;
+                continue;
+            }
+            if rest.starts_with("<?") {
+                self.skip_past("?>", "processing instruction")?;
+                continue;
+            }
+            if rest.starts_with("<!") {
+                // DOCTYPE / CDATA-free subset: skip to the closing '>'.
+                self.skip_past(">", "declaration")?;
+                continue;
+            }
+            if let Some(tail) = rest.strip_prefix("</") {
+                let end = tail.find('>').ok_or_else(|| self.err("unterminated closing tag"))?;
+                let name = tail[..end].trim();
+                if name.is_empty() {
+                    return Err(self.err("closing tag with no name"));
+                }
+                self.pos += 2 + end + 1;
+                return Ok(Event::Close { name });
+            }
+            return self.parse_open();
+        }
+    }
+
+    fn parse_open(&mut self) -> Result<Event<'a>, XmlError> {
+        debug_assert!(self.rest().starts_with('<'));
+        let start = self.pos + 1;
+        let body = &self.src[start..];
+        let end = body.find('>').ok_or_else(|| self.err("unterminated tag"))?;
+        let raw = &body[..end];
+        let (raw, self_closing) = match raw.strip_suffix('/') {
+            Some(r) => (r, true),
+            None => (raw, false),
+        };
+        let name_end = raw
+            .find(|c: char| c.is_ascii_whitespace())
+            .unwrap_or(raw.len());
+        let name = &raw[..name_end];
+        if name.is_empty() || !name.chars().all(|c| c.is_ascii_alphanumeric() || c == '_' || c == '-' || c == ':') {
+            return Err(self.err(format!("bad element name `{name}`")));
+        }
+        let mut attrs = Vec::new();
+        let mut rest = raw[name_end..].trim_start();
+        while !rest.is_empty() {
+            let eq = rest
+                .find('=')
+                .ok_or_else(|| self.err(format!("attribute without value in <{name}>")))?;
+            let key = rest[..eq].trim();
+            if key.is_empty() {
+                return Err(self.err(format!("empty attribute name in <{name}>")));
+            }
+            let after = rest[eq + 1..].trim_start();
+            let quote = after
+                .chars()
+                .next()
+                .filter(|&q| q == '"' || q == '\'')
+                .ok_or_else(|| self.err(format!("unquoted value for `{key}` in <{name}>")))?;
+            let val_body = &after[1..];
+            let close = val_body
+                .find(quote)
+                .ok_or_else(|| self.err(format!("unterminated value for `{key}` in <{name}>")))?;
+            let value = decode_entities(&val_body[..close])
+                .map_err(|m| self.err(format!("in `{key}` of <{name}>: {m}")))?;
+            attrs.push((key, value));
+            rest = val_body[close + 1..].trim_start();
+        }
+        self.pos = start + end + 1;
+        Ok(Event::Open { name, attrs, self_closing })
+    }
+}
+
+/// Decode the five predefined entities and numeric character
+/// references in an attribute value.
+fn decode_entities(s: &str) -> Result<String, String> {
+    if !s.contains('&') {
+        return Ok(s.to_string());
+    }
+    let mut out = String::with_capacity(s.len());
+    let mut rest = s;
+    while let Some(i) = rest.find('&') {
+        out.push_str(&rest[..i]);
+        let tail = &rest[i + 1..];
+        let semi = tail.find(';').ok_or_else(|| format!("unterminated entity in `{s}`"))?;
+        let ent = &tail[..semi];
+        match ent {
+            "amp" => out.push('&'),
+            "lt" => out.push('<'),
+            "gt" => out.push('>'),
+            "quot" => out.push('"'),
+            "apos" => out.push('\''),
+            _ => {
+                let code = ent
+                    .strip_prefix("#x")
+                    .map(|h| u32::from_str_radix(h, 16))
+                    .or_else(|| ent.strip_prefix('#').map(|d| d.parse::<u32>()))
+                    .ok_or_else(|| format!("unknown entity `&{ent};`"))?
+                    .map_err(|_| format!("bad character reference `&{ent};`"))?;
+                out.push(char::from_u32(code).ok_or_else(|| format!("bad codepoint &{ent};"))?);
+            }
+        }
+        rest = &tail[semi + 1..];
+    }
+    out.push_str(rest);
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn events(src: &str) -> Vec<String> {
+        let mut p = Pull::new(src);
+        let mut out = Vec::new();
+        loop {
+            match p.next_event().unwrap() {
+                Event::Open { name, attrs, self_closing } => {
+                    let a: Vec<String> =
+                        attrs.iter().map(|(k, v)| format!("{k}={v}")).collect();
+                    out.push(format!(
+                        "open {name} [{}]{}",
+                        a.join(","),
+                        if self_closing { " /" } else { "" }
+                    ));
+                }
+                Event::Close { name } => out.push(format!("close {name}")),
+                Event::Eof => break,
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn pulls_elements_attributes_and_comments() {
+        let src = "<?xml version=\"1.0\"?>\n<!-- db -->\n<root>\n  \
+                   <instruction asm=\"VADDPD\" string='VADDPD (XMM)'>\n    \
+                   <operand type=\"reg\" width=\"128\"/>\n  </instruction>\n</root>\n";
+        assert_eq!(
+            events(src),
+            vec![
+                "open root []",
+                "open instruction [asm=VADDPD,string=VADDPD (XMM)]",
+                "open operand [type=reg,width=128] /",
+                "close instruction",
+                "close root",
+            ]
+        );
+    }
+
+    #[test]
+    fn entities_decode_in_attribute_values() {
+        let src = "<a v=\"1 &lt; 2 &amp;&amp; x &gt; 0 &quot;q&quot; &#65;&#x42;\"/>";
+        assert_eq!(events(src), vec!["open a [v=1 < 2 && x > 0 \"q\" AB] /"]);
+    }
+
+    #[test]
+    fn errors_carry_line_numbers_and_never_panic() {
+        for (src, needle) in [
+            ("<root>\n<unterminated\n", "unterminated tag"),
+            ("<root>\n<a b=c/>\n</root>", "unquoted value"),
+            ("<root>\n<a b=\"x/>\n", "unterminated value"),
+            ("<root>\n<a b=\"&bogus;\"/>\n</root>", "unknown entity"),
+            ("<!-- never closed", "unterminated comment"),
+            ("<a/>trailing text", "text after the last element"),
+            ("<root>\n</>\n", "closing tag with no name"),
+        ] {
+            let mut p = Pull::new(src);
+            let err = loop {
+                match p.next_event() {
+                    Ok(Event::Eof) => panic!("`{src}` parsed cleanly"),
+                    Ok(_) => continue,
+                    Err(e) => break e,
+                }
+            };
+            assert!(err.message.contains(needle), "`{src}` -> {err}");
+            assert!(err.line >= 1);
+        }
+    }
+
+    #[test]
+    fn error_lines_point_at_the_offending_construct() {
+        let mut p = Pull::new("<root>\n<ok/>\n<bad attr=novalue/>\n</root>");
+        let mut last = None;
+        loop {
+            match p.next_event() {
+                Ok(Event::Eof) => break,
+                Ok(_) => continue,
+                Err(e) => {
+                    last = Some(e);
+                    break;
+                }
+            }
+        }
+        assert_eq!(last.unwrap().line, 3);
+    }
+}

@@ -108,16 +108,16 @@ fn csv_golden_strided_triad_mem() {
     assert_eq!(got.trim_end(), want.trim_end());
 }
 
-/// The version-4 key set: v3 plus the opt-in memory model — a `memory`
-/// report section (`working_set` .. `ecm`), `lsq_stall_cycles` in the
-/// simulation section, and the `memory` bound kind. With the memory
-/// model off, only the version digit differs from v3 (the off-mode
-/// goldens above pin that). Changing the JSON shape requires bumping
+/// The version-5 key set: identical to v4 for the report emitters —
+/// the v5 bump covers the serve wire surface (the `stats` frame's
+/// `model_reloads` counter and the `reload_models` op), which
+/// `serve_session.rs` pins; the report JSON shape itself carried over
+/// unchanged. Changing the JSON shape requires bumping
 /// `SCHEMA_VERSION` *and* pinning the new set here — one without the
 /// other fails.
 #[test]
 fn schema_version_pins_json_shape() {
-    const V4_KEYS: &[&str] = &[
+    const V5_KEYS: &[&str] = &[
         "arch",
         "baseline",
         "bottleneck_port",
@@ -166,10 +166,10 @@ fn schema_version_pins_json_shape() {
         "unroll",
         "working_set",
     ];
-    // This test pins version 4. A schema bump invalidates it by
+    // This test pins version 5. A schema bump invalidates it by
     // construction: update SCHEMA_VERSION, this constant and the pinned
     // key list together.
-    assert_eq!(SCHEMA_VERSION, 4, "schema bumped: re-pin the key set for the new version");
+    assert_eq!(SCHEMA_VERSION, 5, "schema bumped: re-pin the key set for the new version");
     // A report with every section present (all passes + frontend bound
     // + the opt-in memory model) must emit exactly the pinned keys.
     let engine = Engine::cpu_only();
@@ -191,7 +191,7 @@ fn schema_version_pins_json_shape() {
     let mut keys = json_keys(&report.to_json());
     keys.sort();
     keys.dedup();
-    assert_eq!(keys, V4_KEYS, "JSON shape changed without a SCHEMA_VERSION bump");
+    assert_eq!(keys, V5_KEYS, "JSON shape changed without a SCHEMA_VERSION bump");
 }
 
 /// Every fixture × matching built-in model emits valid JSON and

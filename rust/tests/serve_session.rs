@@ -12,6 +12,9 @@
 //!   survives them.
 //! * A wire `shutdown` acknowledges with `bye` and the server drains
 //!   cleanly.
+//! * `--models-dir` models resolve at bind time, and the
+//!   `reload_models` op picks up `.mdb` files dropped in later without
+//!   a restart (counted by `model_reloads` in `stats`).
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
@@ -123,7 +126,7 @@ fn concurrent_clients_round_trip_golden_frames() {
                     let frame = c.round_trip(&request);
                     let v = parsed(&frame);
                     assert_eq!(v.get("status").and_then(JsonValue::as_str), Some("ok"));
-                    assert_eq!(v.get("schema_version").and_then(JsonValue::as_u64), Some(4));
+                    assert_eq!(v.get("schema_version").and_then(JsonValue::as_u64), Some(5));
                     // The memo works per fingerprint even under
                     // concurrency: each client's repeats hit.
                     let expect_hit = i > 0;
@@ -248,6 +251,58 @@ fn malformed_frames_error_and_the_connection_survives() {
     assert_eq!(stats.get("errors").and_then(JsonValue::as_u64), Some(2));
     server.shutdown();
     server.join();
+}
+
+#[test]
+fn reload_models_rescans_the_models_dir_into_live_shards() {
+    // One model imported from the vendored uops.info fixture is present
+    // at bind time; a second is dropped into the directory later and
+    // must become analyzable after a wire `reload_models` — no restart.
+    let dir = std::env::temp_dir().join(format!("osaca-serve-reload-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let xml = include_str!("fixtures/uops_trimmed.xml");
+    let clx = osaca::zoo::import_model(xml, "clx").expect("import clx");
+    std::fs::write(dir.join("clx.mdb"), &clx.text).unwrap();
+
+    let server = serve(ServeConfig {
+        models_dir: Some(dir.display().to_string()),
+        ..cpu_config()
+    });
+    let mut c = Client::connect(server.local_addr());
+    let w = workloads::find("triad", "skl", "-O3").unwrap();
+    let request = |arch: &str| {
+        format!(
+            "{{\"op\":\"analyze\",\"arch\":\"{arch}\",\"source\":{},\
+             \"passes\":[\"throughput\"],\"unroll\":{}}}",
+            json_string(w.source),
+            w.unroll
+        )
+    };
+
+    // The bind-time scan registered `clx`; `icl` does not exist yet.
+    assert_eq!(status(&c.round_trip(&request("clx"))), "ok");
+    let frame = c.round_trip(&request("icl"));
+    let v = parsed(&frame);
+    assert_eq!(v.get("status").and_then(JsonValue::as_str), Some("error"), "{frame}");
+    let kind = v.get("error").and_then(|e| e.get("kind")).and_then(JsonValue::as_str);
+    assert_eq!(kind, Some("unknown_arch"), "{frame}");
+
+    // Drop the second model in and reload over the wire.
+    let icl = osaca::zoo::import_model(xml, "icl").expect("import icl");
+    std::fs::write(dir.join("icl.mdb"), &icl.text).unwrap();
+    assert_eq!(status(&c.round_trip("{\"op\":\"reload_models\"}")), "ok");
+    assert_eq!(status(&c.round_trip(&request("icl"))), "ok");
+
+    // `stats` counts completed scans: bind-time + the wire reload (the
+    // counter is process-global, so other tests may add more).
+    let stats = parsed(&c.round_trip("{\"op\":\"stats\"}"));
+    let reloads = stats.get("model_reloads").and_then(JsonValue::as_u64).expect("model_reloads");
+    assert!(reloads >= 2, "expected at least bind + reload scans, got {reloads}");
+
+    server.shutdown();
+    server.join();
+    let _ = std::fs::remove_dir_all(&dir);
 }
 
 #[test]

@@ -1,0 +1,118 @@
+//! ISSUE-10: the model zoo end to end. The vendored uops.info-format
+//! fixture compiles into `.mdb` models that register with the dynamic
+//! registry, resolve under their curated aliases, and reproduce pinned
+//! throughput predictions on the paper's validation kernels; malformed
+//! inputs yield structured `bad_model_import` errors, never a panic.
+
+use osaca::api::{Engine, OsacaError, Passes};
+use osaca::mdb::{self, MachineModel};
+use osaca::workloads;
+use osaca::zoo;
+
+const XML: &str = include_str!("fixtures/uops_trimmed.xml");
+
+/// Analyze one embedded workload against `arch` and return the winning
+/// model bound (cycles per assembly iteration, bound kind).
+fn predict(engine: &Engine, arch: &str, family: &str, target: &str, flag: &str) -> (f32, String) {
+    let w = workloads::find(family, target, flag)
+        .unwrap_or_else(|| panic!("no workload {family}-{target}-{flag}"));
+    let report = engine
+        .analyze(
+            &Engine::request(&w.name())
+                .arch(arch)
+                .source(w.source)
+                .passes(Passes::THROUGHPUT)
+                .unroll(w.unroll),
+        )
+        .unwrap_or_else(|e| panic!("{} on {arch}: {e}", w.name()));
+    let p = report.prediction();
+    let winner = p.winner().expect("throughput pass produces a model bound");
+    (winner.cy_per_asm_iter, winner.kind.name().to_string())
+}
+
+#[test]
+fn imported_models_register_and_reproduce_pinned_predictions() {
+    // The fixture carries measurements for exactly the curated set.
+    assert_eq!(zoo::arches_in(XML).unwrap(), vec!["CLX", "ICL", "ZEN2"]);
+    for arch in zoo::curated_arches() {
+        let name = zoo::import_and_register(XML, arch).expect(arch);
+        assert_eq!(name, arch, "canonical short name is the curated key");
+    }
+    let engine = Engine::cpu_only();
+
+    // Cascade Lake mirrors the built-in skl port model, so the paper's
+    // Table-IV triad bound (2 cy: 6 load/store µ-ops over P2|P3) and
+    // the π divider bound (16 cy: 2 × vdivpd-ymm at 8 divider cycles)
+    // carry over exactly.
+    let (cy, bound) = predict(&engine, "clx", "triad", "skl", "-O3");
+    assert_eq!((cy, bound.as_str()), (2.0, "port_pressure"));
+    let (cy, bound) = predict(&engine, "clx", "pi", "any", "-O3");
+    assert_eq!((cy, bound.as_str()), (16.0, "divider"));
+
+    // Ice Lake moves stores onto dedicated pipes (p49 data, p78 AGU),
+    // leaving only the three 0.5-cy loads on P2|P3: 1.5 cy.
+    let (cy, bound) = predict(&engine, "icl", "triad", "skl", "-O3");
+    assert_eq!((cy, bound.as_str()), (1.5, "port_pressure"));
+
+    // Zen 2 funnels every memory µ-op through three AGU pipes: 2 loads
+    // + 1 folded load + a 2-µ-op store = 5 AGU µ-ops / 3 ports.
+    let (cy, bound) = predict(&engine, "zen2", "triad", "zen", "-O3");
+    assert!((cy - 5.0 / 3.0).abs() < 1e-3, "zen2 triad: {cy} ({bound})");
+}
+
+#[test]
+fn curated_aliases_resolve_once_the_model_is_registered() {
+    zoo::import_and_register(XML, "clx").expect("import clx");
+    assert_eq!(mdb::canonical_arch("CascadeLake").as_deref(), Some("clx"));
+    let engine = Engine::cpu_only();
+    let m = engine.machine("CASCADELAKE").expect("alias resolves through the registry");
+    assert_eq!(m.name, "clx");
+    assert_eq!(m.arch_name, "Intel Cascade Lake");
+}
+
+#[test]
+fn imported_text_round_trips_byte_identically() {
+    for arch in zoo::curated_arches() {
+        let imp = zoo::import_model(XML, arch).expect(arch);
+        assert!(imp.entries > 0, "{arch}: no entries compiled");
+        let reparsed = MachineModel::parse(&imp.text)
+            .unwrap_or_else(|e| panic!("{arch}: emitted text failed to parse: {e:#}"));
+        assert_eq!(
+            reparsed.serialize(),
+            imp.text,
+            "{arch}: serialize∘parse must be the identity on emitted text"
+        );
+    }
+}
+
+#[test]
+fn malformed_imports_are_structured_errors_never_panics() {
+    // Truncated mid-tag: a structured error, localized to an XML line.
+    let cut = &XML[..XML.len() / 2];
+    match zoo::import_model(cut, "clx") {
+        Err(OsacaError::BadModelImport { line, .. }) => {
+            assert!(line.is_some(), "truncation should carry a line number");
+        }
+        Err(other) => panic!("wrong error kind: {other}"),
+        Ok(_) => panic!("truncated XML imported cleanly"),
+    }
+
+    // An uncurated architecture lists what the overlay does know.
+    let err = zoo::import_model(XML, "skx").unwrap_err();
+    assert_eq!(err.kind_name(), "bad_model_import");
+    let msg = err.to_string();
+    assert!(msg.contains("clx") && msg.contains("zen2"), "{msg}");
+
+    // Parseable XML with no measurements for the arch is an import
+    // error too, not an empty model.
+    let empty = "<root><instruction asm=\"NOP\" string=\"NOP\">\
+                 <architecture name=\"CLX\"/></instruction></root>";
+    let err = zoo::import_model(empty, "clx").unwrap_err();
+    assert_eq!(err.kind_name(), "bad_model_import");
+
+    // Assorted broken inputs: always Err, never a panic.
+    for bad in ["<a", "<a attr=></a>", "<root><instruction></root>", "plain text"] {
+        let err = zoo::import_model(bad, "clx").unwrap_err();
+        assert_eq!(err.kind_name(), "bad_model_import", "input: {bad}");
+    }
+}

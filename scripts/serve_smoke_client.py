@@ -38,7 +38,7 @@ import socket
 import sys
 import time
 
-SCHEMA_VERSION = 4
+SCHEMA_VERSION = 5
 
 SKL_SOURCE = "workloads/triad/skl_o3.s"
 RV64_SOURCE = "workloads/triad/rv64_o2.s"
